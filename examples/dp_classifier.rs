@@ -1,0 +1,47 @@
+//! Compare all clipping schemes head-to-head on the CIFAR-10 analog —
+//! a miniature of Tables 1/2/11.
+//!
+//!     cargo run --release --example dp_classifier [-- --epsilon 3 --epochs 4]
+
+use anyhow::Result;
+
+use gwclip::coordinator::{Method, TrainOpts, Trainer};
+use gwclip::data::classif::MixtureImages;
+use gwclip::data::Dataset;
+use gwclip::runtime::Runtime;
+use gwclip::util::cli::Args;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &[])?;
+    let epsilon = args.get_f64("epsilon", 3.0)?;
+    let epochs = args.get_f64("epochs", 4.0)?;
+
+    let rt = Runtime::new(gwclip::artifact_dir())?;
+    let train = MixtureImages::with_spread(4096, 64, 10, 0xC1FA, 0, 0.55);
+    let eval = MixtureImages::with_spread(1024, 64, 10, 0xC1FA, 900, 0.55);
+
+    println!("{:<22} {:>9} {:>9}", "method", "loss", "acc %");
+    for method in [
+        Method::NonPrivate,
+        Method::FlatFixed,
+        Method::FlatAdaptive,
+        Method::PerLayerFixed,
+        Method::PerLayerAdaptive,
+    ] {
+        let opts = TrainOpts {
+            method,
+            epsilon,
+            epochs,
+            lr: 0.25,
+            target_q: 0.6,
+            quantile_r: 0.01,
+            ..Default::default()
+        };
+        let mut tr = Trainer::new(&rt, "resmlp", train.len(), opts)?;
+        tr.run(&train, 0)?;
+        let (loss, acc) = tr.evaluate(&eval)?;
+        println!("{:<22} {:>9.4} {:>9.1}", method.name(), loss, 100.0 * acc);
+    }
+    Ok(())
+}

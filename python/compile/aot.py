@@ -1,0 +1,340 @@
+"""AOT compile path: lower every entry point of every model config to HLO
+*text* and emit artifacts/manifest.json + init checkpoints.
+
+This is the only place python runs; after `make artifacts` the rust binary
+is self-contained. Interchange is HLO text, NOT serialized HloModuleProto:
+jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Conventions consumed by rust/src/runtime/manifest.rs:
+  * inputs  = [params in spec order] ++ extra inputs (manifest order)
+  * outputs = tuple, names listed in the manifest ("loss", "grad:<name>",
+    "norms", "dx", ...)
+  * checkpoints: "GWCK" | version u32 | json_len u32 | header json |
+    raw f32 little-endian payloads at header offsets.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile import steps
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32, I32 = "f32", "i32"
+
+
+# ---------------------------------------------------------------------------
+# model configurations (see DESIGN.md section 6 for the experiment mapping)
+# ---------------------------------------------------------------------------
+
+def configs() -> dict[str, dict]:
+    """name -> {cfg: ModelConfig, entries: [...], stages: [...]|None}.
+
+    Tiny configs route norm/clip through the real Pallas kernels
+    (use_pallas=True) to prove the L1 integration end-to-end; larger
+    perf-oriented configs use the numerically identical jnp oracles which
+    XLA fuses better on CPU (test_pallas_and_jnp_paths_agree pins equality).
+    """
+    all_dp = ["nonprivate", "perlayer", "flat", "ghost", "naive", "eval"]
+    no_naive = ["nonprivate", "perlayer", "flat", "ghost", "eval"]
+    out = {
+        # rust unit/integration tests — small and pallas-powered
+        "resmlp_tiny": dict(
+            cfg=M.ModelConfig(kind="resmlp", batch=8, features=16, width=32,
+                              blocks=2, n_classes=10, use_pallas=True),
+            entries=all_dp),
+        "lm_tiny": dict(
+            cfg=M.ModelConfig(kind="lm", batch=4, vocab=64, seq=16, d_model=32,
+                              n_heads=2, n_layers=2, d_ff=64, use_pallas=True),
+            entries=all_dp + ["logits"]),
+        # CIFAR-10 analog (WRN16-4 -> WideResMLP), Tables 1a/2/11a, Figs 2/3/5
+        "resmlp": dict(
+            cfg=M.ModelConfig(kind="resmlp", batch=256, features=64, width=256,
+                              blocks=4, n_classes=10, use_pallas=False),
+            entries=no_naive),
+        # GLUE/SST-2 analog (RoBERTa -> encoder classifier), Tables 1b/3/4/10/11b
+        "cls_small": dict(
+            cfg=M.ModelConfig(kind="classifier", batch=64, vocab=400, seq=32,
+                              d_model=64, n_heads=4, n_layers=3, d_ff=256,
+                              n_classes=4, use_pallas=False),
+            entries=no_naive),
+        # GPT-2 analog (E2E/DART table-to-text), Table 5, Figs 1/7/8
+        "lm_small": dict(
+            cfg=M.ModelConfig(kind="lm", batch=32, vocab=512, seq=32,
+                              d_model=128, n_heads=4, n_layers=4, d_ff=512,
+                              use_pallas=False),
+            entries=all_dp + ["logits"]),
+        # GPT-2-xl analog for Table 6 (single-device flat-clipped LoRA)
+        "lm_small_lora": dict(
+            cfg=M.ModelConfig(kind="lm", batch=32, vocab=512, seq=32,
+                              d_model=128, n_heads=4, n_layers=4, d_ff=512,
+                              lora_rank=4, train_base=False, use_pallas=False),
+            entries=["nonprivate", "flat", "perlayer", "eval", "logits"]),
+        # GPT-3 analog for Table 6: bigger LM partitioned over 4 devices,
+        # LoRA adapters only, per-device clipping (Algorithm 2)
+        "lm_mid_pipe_lora": dict(
+            cfg=M.ModelConfig(kind="lm", batch=8, vocab=512, seq=32,
+                              d_model=256, n_heads=8, n_layers=8, d_ff=1024,
+                              lora_rank=4, train_base=False, use_pallas=False),
+            entries=[], stages=[0, 2, 4, 6, 8]),
+        # full-model pipeline (pretraining the GPT-3 analog + section 4 bench)
+        "lm_mid_pipe": dict(
+            cfg=M.ModelConfig(kind="lm", batch=8, vocab=512, seq=32,
+                              d_model=256, n_heads=8, n_layers=8, d_ff=1024,
+                              use_pallas=False),
+            entries=["nonprivate", "eval", "logits"], stages=[0, 2, 4, 6, 8]),
+        # end-to-end driver (examples/e2e_train.rs): ~14M param LM
+        "lm_e2e": dict(
+            cfg=M.ModelConfig(kind="lm", batch=8, vocab=4096, seq=64,
+                              d_model=384, n_heads=6, n_layers=6, d_ff=1536,
+                              use_pallas=False),
+            entries=["nonprivate", "perlayer", "flat", "eval"]),
+    }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def dt(dtype):
+    return I32 if dtype in (jnp.int32, "i32") else F32
+
+
+def lower_entry(fn, arg_specs, out_dir, fname) -> str:
+    # keep_unused=True: the rust runtime feeds every manifest input, so the
+    # lowered module must keep parameters XLA would otherwise DCE (e.g.
+    # frozen biases in LoRA stages).
+    lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    return fname
+
+
+# ---------------------------------------------------------------------------
+# checkpoint writer
+# ---------------------------------------------------------------------------
+
+def write_checkpoint(path: str, names: list[str], arrays: list[np.ndarray]):
+    header, offset = [], 0
+    for n, a in zip(names, arrays):
+        a = np.asarray(a, np.float32)
+        header.append({"name": n, "shape": list(a.shape), "offset": offset})
+        offset += a.size * 4
+    hjson = json.dumps(header).encode()
+    with open(path, "wb") as f:
+        f.write(b"GWCK")
+        f.write(struct.pack("<II", 1, len(hjson)))
+        f.write(hjson)
+        for a in arrays:
+            f.write(np.asarray(a, np.float32).tobytes())
+
+
+# ---------------------------------------------------------------------------
+# per-config export
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg):
+    if cfg.kind == "resmlp":
+        return [spec((cfg.batch, cfg.features)), spec((cfg.batch,), jnp.int32)], \
+               [("x", (cfg.batch, cfg.features), F32), ("y", (cfg.batch,), I32)]
+    if cfg.kind == "classifier":
+        return [spec((cfg.batch, cfg.seq), jnp.int32), spec((cfg.batch,), jnp.int32)], \
+               [("x", (cfg.batch, cfg.seq), I32), ("y", (cfg.batch,), I32)]
+    return [spec((cfg.batch, cfg.seq), jnp.int32), spec((cfg.batch, cfg.seq), jnp.int32)], \
+           [("x", (cfg.batch, cfg.seq), I32), ("y", (cfg.batch, cfg.seq), I32)]
+
+
+def export_config(name: str, info: dict, out_dir: str) -> dict:
+    cfg = info["cfg"]
+    specs = M.param_specs(cfg)
+    groups = M.group_names(cfg)
+    gidx = {g: i for i, g in enumerate(groups)}
+    tr = [s for s in specs if s.trainable]
+    group_dims = [0] * len(groups)
+    for s in tr:
+        group_dims[gidx[s.group]] += int(np.prod(s.shape))
+
+    pspecs = [spec(s.shape) for s in specs]
+    bspecs, binfo = batch_specs(cfg)
+    b = cfg.batch
+    K = len(groups)
+    w_in = ("weights", (b,), F32)
+    thK_in = ("thresholds", (K,), F32)
+    th1_in = ("threshold", (), F32)
+
+    grad_outs = [(f"grad:{s.name}", list(s.shape), F32) for s in tr]
+    entries = {}
+
+    def emit(ename, fn, extra_specs, extra_info, outputs, params_specs=None):
+        fname = f"{name}__{ename}.hlo.txt"
+        lower_entry(fn, (params_specs or pspecs,) + tuple(extra_specs), out_dir, fname)
+        entries[ename] = {
+            "file": fname,
+            "extra_inputs": [{"name": n, "shape": list(sh), "dtype": d}
+                             for n, sh, d in extra_info],
+            "outputs": [{"name": n, "shape": list(sh), "dtype": d}
+                        for n, sh, d in outputs],
+        }
+        print(f"  {fname}")
+
+    for ename in info.get("entries", []):
+        if ename == "nonprivate":
+            emit("nonprivate", steps.make_nonprivate_step(cfg), bspecs, binfo,
+                 [("loss", [], F32)] + grad_outs)
+        elif ename == "perlayer":
+            emit("dp_perlayer", steps.make_dp_step_perlayer(cfg),
+                 bspecs + [spec((K,)), spec((b,))], binfo + [thK_in, w_in],
+                 [("loss", [], F32)] + grad_outs + [("norms", [b, K], F32)])
+        elif ename == "flat":
+            emit("dp_flat", steps.make_dp_step_flat(cfg),
+                 bspecs + [spec(()), spec((b,))], binfo + [th1_in, w_in],
+                 [("loss", [], F32)] + grad_outs + [("norms", [b], F32)])
+        elif ename == "ghost":
+            emit("dp_ghost", steps.make_dp_step_ghost(cfg),
+                 bspecs + [spec(()), spec((b,))], binfo + [th1_in, w_in],
+                 [("loss", [], F32)] + grad_outs + [("norms", [b], F32)])
+        elif ename == "naive":
+            emit("dp_naive", steps.make_dp_step_naive(cfg),
+                 bspecs + [spec(()), spec((b,))], binfo + [th1_in, w_in],
+                 [("loss", [], F32)] + grad_outs + [("norms", [b], F32)])
+        elif ename == "eval":
+            emit("eval", steps.make_eval_batch(cfg), bspecs + [spec((b,))],
+                 binfo + [w_in],
+                 [("loss_sum", [], F32), ("correct_sum", [], F32), ("weight_sum", [], F32)])
+        elif ename == "logits":
+            emit("logits", steps.make_forward_logits(cfg), bspecs[:1], binfo[:1],
+                 [("logits", [b, cfg.seq, cfg.vocab], F32)])
+
+    # ---- pipeline stages -------------------------------------------------
+    stages_meta = None
+    bounds = info.get("stages")
+    if bounds:
+        n_stages = len(bounds) - 1
+        stages_meta = {"boundaries": bounds, "stages": []}
+        d = cfg.d_model
+        t = cfg.seq
+        act = ("x", (b, t, d), F32)
+        dy = ("dy", (b, t, d), F32)
+        for st in range(n_stages):
+            sspecs = steps.stage_param_specs(cfg, bounds, st)
+            str_ = [s for s in sspecs if s.trainable]
+            sp = [spec(s.shape) for s in sspecs]
+            sgrads = [(f"grad:{s.name}", list(s.shape), F32) for s in str_]
+            first, last = st == 0, st == n_stages - 1
+            xin = binfo[0] if first else act
+            xin_spec = bspecs[0] if first else spec((b, t, d))
+            pre = f"stage{st}"
+            if not last:
+                emit(f"{pre}_fwd", steps.make_stage_fwd(cfg, bounds, st),
+                     [xin_spec], [xin], [("x_out", (b, t, d), F32)], sp)
+                emit(f"{pre}_bwd", steps.make_stage_bwd(cfg, bounds, st),
+                     [xin_spec, spec((b, t, d)), spec(()), spec((b,))],
+                     [xin, dy, th1_in, w_in],
+                     [("dx", [b, t, d], F32)] + sgrads
+                     + [("norms", [b], F32)], sp)
+                emit(f"{pre}_bwd_norm", steps.make_stage_bwd_norm(cfg, bounds, st),
+                     [xin_spec, spec((b, t, d))], [xin, dy],
+                     [("dx", [b, t, d], F32), ("norms", [b], F32)], sp)
+                emit(f"{pre}_regrad", steps.make_stage_regrad(cfg, bounds, st),
+                     [xin_spec, spec((b, t, d)), spec((b,))],
+                     [xin, dy, ("coeff", (b,), F32)], sgrads, sp)
+            else:
+                tgt = binfo[1]
+                tgt_spec = bspecs[1]
+                emit(f"{pre}_loss_bwd",
+                     steps.make_stage_loss_bwd(cfg, bounds, st, "perdevice"),
+                     [xin_spec, tgt_spec, spec(()), spec((b,))],
+                     [xin, tgt, th1_in, w_in],
+                     [("loss", [], F32), ("dx", [b, t, d], F32)] + sgrads
+                     + [("norms", [b], F32)], sp)
+                emit(f"{pre}_loss_norm",
+                     steps.make_stage_loss_bwd(cfg, bounds, st, "norm"),
+                     [xin_spec, tgt_spec], [xin, tgt],
+                     [("loss", [], F32), ("dx", [b, t, d], F32), ("norms", [b], F32)], sp)
+                emit(f"{pre}_loss_regrad",
+                     steps.make_stage_loss_bwd(cfg, bounds, st, "regrad"),
+                     [xin_spec, tgt_spec, spec((b,))],
+                     [xin, tgt, ("coeff", (b,), F32)], sgrads, sp)
+                emit(f"{pre}_eval", steps.make_stage_eval(cfg, bounds, st),
+                     [xin_spec, tgt_spec, spec((b,))], [xin, tgt, w_in],
+                     [("loss_sum", [], F32), ("weight_sum", [], F32)], sp)
+            stages_meta["stages"].append({
+                "params": [s.name for s in sspecs],
+                "trainable": [s.name for s in str_],
+                "d_stage": sum(int(np.prod(s.shape)) for s in str_),
+            })
+
+    # ---- init checkpoint --------------------------------------------------
+    ck = f"ckpt_{name}_init.bin"
+    params = M.init_params(cfg, seed=0)
+    write_checkpoint(os.path.join(out_dir, ck),
+                     [s.name for s in specs], [np.asarray(p) for p in params])
+
+    hyper = {k: v for k, v in vars(cfg).items()}
+    return {
+        "model": cfg.kind,
+        "hyper": hyper,
+        "batch": b,
+        "params": [{"name": s.name, "shape": list(s.shape), "group": s.group,
+                    "trainable": s.trainable,
+                    "size": int(np.prod(s.shape))} for s in specs],
+        "groups": groups,
+        "group_dims": group_dims,
+        "entries": entries,
+        "stages": stages_meta,
+        "init_checkpoint": ck,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated config names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"version": 1, "configs": {}}
+    only = set(args.only.split(",")) if args.only else None
+    for name, info in configs().items():
+        if only and name not in only:
+            continue
+        print(f"[aot] lowering config {name}")
+        manifest["configs"][name] = export_config(name, info, args.out_dir)
+    path = os.path.join(args.out_dir, "manifest.json")
+    # merge with any existing manifest when --only is used
+    if only and os.path.exists(path):
+        with open(path) as f:
+            old = json.load(f)
+        old["configs"].update(manifest["configs"])
+        manifest = old
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""L1 Pallas kernels: the paper's compute hot-spot.
+
+Per-layer clipping fused into backprop needs, at each linear layer and for
+each microbatch:
+
+  1. ghost_norm(a, delta)          -> per-example grad norms^2      [B]
+  2. clip_matmul(a, delta, coeff)  -> sum_i c_i a_i^T delta_i       [din,dout]
+
+plus embedding-table variants. These are written as Pallas kernels with
+`interpret=True` (the CPU PJRT plugin cannot execute Mosaic custom-calls;
+see /opt/xla-example/README.md) so they lower into the same HLO module as
+the surrounding L2 computation.
+
+TPU mapping (DESIGN.md section Hardware-Adaptation): the grid iterates over
+examples; each program keeps one example's A [T,din] and D [T,dout] tiles
+in VMEM, forms the [T,T] Gram matrices on the MXU, and reduces on-chip --
+the Grams never reach HBM. clip_matmul accumulates c_i * A_i^T D_i into an
+output block across the batch grid dimension, which is the fused-epilogue
+analog of the paper's CUDA implementation: the clip costs one scalar
+multiply per tile, no extra HBM pass over gradients.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# interpret=True is mandatory on this image (CPU PJRT); keep a single switch
+# so a real-TPU build flips one flag.
+INTERPRET = True
+
+
+# ---------------------------------------------------------------------------
+# ghost_norm
+# ---------------------------------------------------------------------------
+
+def _ghost_norm_kernel(a_ref, d_ref, o_ref):
+    """One grid step = one example: sum((A A^T) * (D D^T))."""
+    a = a_ref[0].astype(jnp.float32)      # [T, din]
+    d = d_ref[0].astype(jnp.float32)      # [T, dout]
+    gram_a = jnp.dot(a, a.T)              # [T, T] -- VMEM-resident
+    gram_d = jnp.dot(d, d.T)              # [T, T]
+    o_ref[0] = jnp.sum(gram_a * gram_d)
+
+
+def ghost_norm(a: jnp.ndarray, delta: jnp.ndarray) -> jnp.ndarray:
+    """Per-example squared Frobenius norm of the linear weight gradient.
+
+    a [B,T,din], delta [B,T,dout] -> [B] float32, no [B,din,dout] buffer.
+    """
+    b, t, din = a.shape
+    dout = delta.shape[-1]
+    return pl.pallas_call(
+        _ghost_norm_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, t, din), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, dout), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=INTERPRET,
+    )(a, delta)
+
+
+# ---------------------------------------------------------------------------
+# clip_matmul
+# ---------------------------------------------------------------------------
+
+def _clip_matmul_kernel(a_ref, d_ref, c_ref, o_ref):
+    """Grid (B,): accumulate c_i * A_i^T D_i into the single output block."""
+    i = pl.program_id(0)
+    a = a_ref[0].astype(jnp.float32)      # [T, din]
+    d = d_ref[0].astype(jnp.float32)      # [T, dout]
+    c = c_ref[0].astype(jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += c * jnp.dot(a.T, d)
+
+
+def clip_matmul(a: jnp.ndarray, delta: jnp.ndarray, coeff: jnp.ndarray) -> jnp.ndarray:
+    """Fused clip+reduce: sum_i coeff_i a_i^T delta_i -> [din, dout]."""
+    b, t, din = a.shape
+    dout = delta.shape[-1]
+    return pl.pallas_call(
+        _clip_matmul_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, t, din), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, dout), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        # every grid step maps to the same output block -> accumulate
+        out_specs=pl.BlockSpec((din, dout), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((din, dout), jnp.float32),
+        interpret=INTERPRET,
+    )(a, delta, coeff)
+
+
+# ---------------------------------------------------------------------------
+# embedding variants
+# ---------------------------------------------------------------------------
+
+def _embed_ghost_norm_kernel(ids_ref, d_ref, o_ref):
+    ids = ids_ref[0]                       # [T] int32
+    d = d_ref[0].astype(jnp.float32)       # [T, D]
+    same = (ids[:, None] == ids[None, :]).astype(jnp.float32)  # [T,T]
+    gram_d = jnp.dot(d, d.T)
+    o_ref[0] = jnp.sum(same * gram_d)
+
+
+def embed_ghost_norm(ids: jnp.ndarray, delta: jnp.ndarray) -> jnp.ndarray:
+    """Per-example squared norm of the embedding-table gradient.
+
+    ids [B,T] int32, delta [B,T,D] -> [B] float32. Token collisions within
+    an example are handled by the id-equality mask on the Gram matrix.
+    """
+    b, t = ids.shape
+    d = delta.shape[-1]
+    return pl.pallas_call(
+        _embed_ghost_norm_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, t, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=INTERPRET,
+    )(ids, delta)
+
+
+@functools.partial(jax.jit, static_argnames=("vocab",))
+def clip_scatter_embed(
+    ids: jnp.ndarray, delta: jnp.ndarray, coeff: jnp.ndarray, vocab: int
+) -> jnp.ndarray:
+    """Fused clip + scatter-add of embedding gradients -> [vocab, D].
+
+    Scatter is not a good fit for a Pallas grid on the CPU interpreter (the
+    per-row collision pattern is data-dependent); we keep it as a fused XLA
+    segment-sum, which XLA lowers to a single scatter. The clip multiply is
+    still fused in (no unclipped [vocab,D] intermediate per example).
+    """
+    b, t, d = delta.shape
+    w = (coeff[:, None, None] * delta.astype(jnp.float32)).reshape(b * t, d)
+    flat = ids.reshape(b * t)
+    return jnp.zeros((vocab, d), jnp.float32).at[flat].add(w)

@@ -1,0 +1,72 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the *specification*: every Pallas kernel in this package must
+match its `ref_*` counterpart to float32 tolerance (enforced by
+python/tests/test_kernels.py, including hypothesis shape/dtype sweeps).
+
+Notation (matches the paper, section 3.1 and Li et al. 2022b section 4):
+  a      [B, T, din]   layer input activations for a microbatch
+  delta  [B, T, dout]  gradient of the loss w.r.t. the layer outputs
+  g_i = a_i^T delta_i  per-example gradient of the linear weight [din, dout]
+
+The whole point of the ghost trick is that ||g_i||_F^2 and sum_i c_i g_i are
+computable without ever materializing the [B, din, dout] tensor.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_ghost_norm(a: jnp.ndarray, delta: jnp.ndarray) -> jnp.ndarray:
+    """Per-example squared Frobenius norm of the linear-layer gradient.
+
+    ||a_i^T delta_i||_F^2 = sum_{t,t'} (a_t . a_t') (d_t . d_t')
+                          = sum( (A A^T) * (D D^T) )   per example.
+
+    Returns [B] float32.
+    """
+    a = a.astype(jnp.float32)
+    delta = delta.astype(jnp.float32)
+    gram_a = jnp.einsum("bti,bsi->bts", a, a)
+    gram_d = jnp.einsum("bto,bso->bts", delta, delta)
+    return jnp.sum(gram_a * gram_d, axis=(1, 2))
+
+
+def ref_ghost_norm_direct(a: jnp.ndarray, delta: jnp.ndarray) -> jnp.ndarray:
+    """Same quantity by materializing per-example gradients (the thing the
+    ghost trick avoids). Used only as an independent cross-check."""
+    g = jnp.einsum("bti,bto->bio", a.astype(jnp.float32), delta.astype(jnp.float32))
+    return jnp.sum(g * g, axis=(1, 2))
+
+
+def ref_clip_matmul(a: jnp.ndarray, delta: jnp.ndarray, coeff: jnp.ndarray) -> jnp.ndarray:
+    """Fused clip + reduce: sum_i c_i a_i^T delta_i  ->  [din, dout].
+
+    `coeff` [B] are the per-example clip factors min(1, C_k/||g_k^(i)||).
+    """
+    a = a.astype(jnp.float32)
+    delta = delta.astype(jnp.float32)
+    return jnp.einsum("b,bti,bto->io", coeff.astype(jnp.float32), a, delta)
+
+
+def ref_embed_ghost_norm(ids: jnp.ndarray, delta: jnp.ndarray) -> jnp.ndarray:
+    """Per-example squared norm of an embedding-table gradient.
+
+    The per-example gradient scatters delta_t into row ids_t; rows collide
+    when the same token appears twice, so
+      ||g_i||^2 = sum_{t,t'} 1[ids_t == ids_t'] (d_t . d_t').
+    Returns [B] float32.
+    """
+    delta = delta.astype(jnp.float32)
+    same = (ids[:, :, None] == ids[:, None, :]).astype(jnp.float32)  # [B,T,T]
+    gram_d = jnp.einsum("bto,bso->bts", delta, delta)
+    return jnp.sum(same * gram_d, axis=(1, 2))
+
+
+def ref_clip_scatter_embed(
+    ids: jnp.ndarray, delta: jnp.ndarray, coeff: jnp.ndarray, vocab: int
+) -> jnp.ndarray:
+    """Fused clip + scatter-add for embedding gradients: [vocab, D]."""
+    delta = delta.astype(jnp.float32)
+    onehot = (ids[..., None] == jnp.arange(vocab)[None, None, :]).astype(jnp.float32)
+    return jnp.einsum("b,btv,btd->vd", coeff.astype(jnp.float32), onehot, delta)

@@ -1,0 +1,311 @@
+"""L2 building blocks: layers with *manual* forward/backward.
+
+Why manual backprop? The paper's efficiency contribution (section 3.1) is
+that per-layer clipping can be performed *in conjunction with*
+backpropagation: when the backward pass reaches layer k we already hold the
+layer inputs `a` and output gradients `delta`, which is all the ghost
+kernels need to (1) compute per-example gradient norms and (2) emit the
+clipped gradient sum -- without materializing per-example gradients and
+without a second backward pass. Autodiff hides that structure; writing the
+backward by hand exposes it, exactly like the custom CUDA autograd hooks in
+the paper's implementation.
+
+Every parameter gradient is captured as a `Rec` on a `Tape`:
+    kind = linear : (a [B,T,din], delta [B,T,dout])      grad [din,dout]
+    kind = bias   : (delta [B,T,dout])                   grad [dout]
+    kind = embed  : (ids [B,T], delta [B,T,D], vocab)    grad [vocab,D]
+    kind = direct : (g [B, *shape])                      grad [*shape]
+
+From a Rec we can produce, per example i:
+    norm_sq(rec)            -> [B]    ||g_i||^2 contribution
+    clipped_sum(rec, coeff) -> grad   sum_i coeff_i g_i
+
+`use_pallas=True` routes norm/clip through the L1 Pallas kernels
+(interpret=True); `False` uses the numerically identical pure-jnp oracles,
+which XLA fuses better on CPU -- perf-oriented configs use the latter, the
+integration-proof configs the former (see DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ghost, ref
+
+
+@dataclasses.dataclass
+class Rec:
+    kind: str
+    tensors: tuple
+    shape: tuple  # parameter shape
+
+
+class Tape:
+    """Collects one Rec per parameter tensor during the backward pass."""
+
+    def __init__(self, use_pallas: bool):
+        self.recs: dict[str, Rec] = {}
+        self.use_pallas = use_pallas
+
+    def linear(self, name: str, a, delta, w_shape):
+        self.recs[name] = Rec("linear", (a, delta), w_shape)
+
+    def bias(self, name: str, delta, b_shape):
+        self.recs[name] = Rec("bias", (delta,), b_shape)
+
+    def embed(self, name: str, ids, delta, vocab):
+        self.recs[name] = Rec("embed", (ids, delta, vocab), (vocab, delta.shape[-1]))
+
+    def direct(self, name: str, g):
+        self.recs[name] = Rec("direct", (g,), g.shape[1:])
+
+    # -- per-example squared norm of this tensor's gradient ----------------
+    def norm_sq(self, name: str) -> jnp.ndarray:
+        rec = self.recs[name]
+        if rec.kind == "linear":
+            a, delta = rec.tensors
+            fn = ghost.ghost_norm if self.use_pallas else ref.ref_ghost_norm
+            return fn(a, delta)
+        if rec.kind == "bias":
+            (delta,) = rec.tensors
+            s = jnp.sum(delta, axis=1)  # [B, dout]
+            return jnp.sum(s * s, axis=-1)
+        if rec.kind == "embed":
+            ids, delta, _ = rec.tensors
+            fn = ghost.embed_ghost_norm if self.use_pallas else ref.ref_embed_ghost_norm
+            return fn(ids, delta)
+        (g,) = rec.tensors
+        return jnp.sum(g * g, axis=tuple(range(1, g.ndim)))
+
+    # -- sum_i coeff_i g_i ---------------------------------------------------
+    def clipped_sum(self, name: str, coeff: jnp.ndarray) -> jnp.ndarray:
+        rec = self.recs[name]
+        if rec.kind == "linear":
+            a, delta = rec.tensors
+            fn = ghost.clip_matmul if self.use_pallas else ref.ref_clip_matmul
+            return fn(a, delta, coeff)
+        if rec.kind == "bias":
+            (delta,) = rec.tensors
+            return jnp.einsum("b,bto->o", coeff, delta)
+        if rec.kind == "embed":
+            ids, delta, vocab = rec.tensors
+            fn = ghost.clip_scatter_embed if self.use_pallas else ref.ref_clip_scatter_embed
+            return fn(ids, delta, coeff, vocab)
+        (g,) = rec.tensors
+        return jnp.tensordot(coeff, g, axes=(0, 0))
+
+    # -- plain summed gradient (non-private path, no clip machinery) --------
+    def sum_grad(self, name: str) -> jnp.ndarray:
+        rec = self.recs[name]
+        if rec.kind == "linear":
+            a, delta = rec.tensors
+            return jnp.einsum("bti,bto->io", a, delta)
+        if rec.kind == "bias":
+            (delta,) = rec.tensors
+            return jnp.sum(delta, axis=(0, 1))
+        if rec.kind == "embed":
+            ids, delta, vocab = rec.tensors
+            b, t, d = delta.shape
+            return jnp.zeros((vocab, d), jnp.float32).at[ids.reshape(-1)].add(
+                delta.reshape(b * t, d)
+            )
+        (g,) = rec.tensors
+        return jnp.sum(g, axis=0)
+
+
+# ===========================================================================
+# layer primitives (forward returns caches needed by the matching backward)
+# ===========================================================================
+
+def linear_fwd(x, w, b):
+    """x [B,T,din] @ w [din,dout] + b."""
+    return x @ w + b
+
+
+def linear_bwd(tape: Tape, prefix: str, dy, x, w, b):
+    """Record grads for w/b; return dx."""
+    tape.linear(prefix + ".w", x, dy, w.shape)
+    tape.bias(prefix + ".b", dy, b.shape)
+    return dy @ w.T
+
+
+def layernorm_fwd(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    xhat = (x - mu) * inv
+    return xhat * g + b, (xhat, inv)
+
+
+def layernorm_bwd(tape: Tape, prefix: str, dy, cache, g):
+    xhat, inv = cache
+    # per-example parameter grads are tiny vectors -> record directly
+    tape.direct(prefix + ".g", jnp.sum(dy * xhat, axis=1))  # [B, D]
+    tape.direct(prefix + ".b", jnp.sum(dy, axis=1))
+    dxhat = dy * g
+    d = xhat.shape[-1]
+    dx = inv * (
+        dxhat
+        - jnp.mean(dxhat, axis=-1, keepdims=True)
+        - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True)
+    )
+    return dx
+
+
+def gelu_fwd(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def gelu_bwd(dy, x):
+    # derivative of tanh-approx gelu
+    c = jnp.sqrt(2.0 / jnp.pi)
+    u = c * (x + 0.044715 * x ** 3)
+    t = jnp.tanh(u)
+    du = c * (1.0 + 3 * 0.044715 * x ** 2)
+    return dy * (0.5 * (1.0 + t) + 0.5 * x * (1.0 - t ** 2) * du)
+
+
+def relu_fwd(x):
+    return jnp.maximum(x, 0.0)
+
+
+def relu_bwd(dy, x):
+    return dy * (x > 0.0)
+
+
+def softmax_bwd(dy, p):
+    """Backward of p = softmax(s) along last axis."""
+    return p * (dy - jnp.sum(dy * p, axis=-1, keepdims=True))
+
+
+# ---------------------------------------------------------------------------
+# multi-head causal self-attention (manual)
+# ---------------------------------------------------------------------------
+
+def attention_fwd(h, wqkv, bqkv, wo, bo, n_heads: int, causal: bool,
+                  lora: dict | None = None):
+    """h [B,T,D]. Returns (out, cache).
+
+    If `lora` is given it holds {'qkv': (A,B,scale), 'o': (A,B,scale)} with
+    A [din,r], B [r,dout]; effective weight = W + scale * A @ B and only
+    A/B receive gradients (the frozen base is a constant on the tape).
+    """
+    b, t, d = h.shape
+    hd = d // n_heads
+    qkv = linear_fwd(h, wqkv, bqkv)
+    lqkv_cache = None
+    if lora is not None and "qkv" in lora:
+        la, lb, scale = lora["qkv"]
+        u = h @ la                     # [B,T,r]
+        qkv = qkv + scale * (u @ lb)
+        lqkv_cache = u
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(x):
+        return x.reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)  # [B,H,T,hd]
+
+    qh, kh, vh = heads(q), heads(k), heads(v)
+    scores = qh @ kh.transpose(0, 1, 3, 2) / jnp.sqrt(float(hd))
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        scores = jnp.where(mask[None, None], scores, -1e9)
+    p = jax.nn.softmax(scores, axis=-1)          # [B,H,T,T]
+    oh = p @ vh                                   # [B,H,T,hd]
+    o = oh.transpose(0, 2, 1, 3).reshape(b, t, d)
+    out = linear_fwd(o, wo, bo)
+    lo_cache = None
+    if lora is not None and "o" in lora:
+        la, lb, scale = lora["o"]
+        u = o @ la
+        out = out + scale * (u @ lb)
+        lo_cache = u
+    cache = (h, qkv, qh, kh, vh, p, o, lqkv_cache, lo_cache)
+    return out, cache
+
+
+def attention_bwd(tape: Tape, prefix: str, dy, cache, wqkv, bqkv, wo, bo,
+                  n_heads: int, lora: dict | None = None,
+                  train_base: bool = True):
+    h, qkv, qh, kh, vh, p, o, lqkv_cache, lo_cache = cache
+    b, t, d = h.shape
+    hd = d // n_heads
+
+    # --- output projection ---
+    if lora is not None and "o" in lora:
+        la, lb, scale = lora["o"]
+        # y = o@wo + bo + scale*(o@la)@lb
+        dv_lb = scale * dy                     # delta for lb with a = u
+        tape.linear(prefix + ".o.lora_b", lo_cache, dv_lb, lb.shape)
+        du = scale * (dy @ lb.T)               # [B,T,r]
+        tape.linear(prefix + ".o.lora_a", o, du, la.shape)
+        do = dy @ wo.T + du @ la.T
+        if train_base:
+            tape.linear(prefix + ".o.w", o, dy, wo.shape)
+            tape.bias(prefix + ".o.b", dy, bo.shape)
+    else:
+        if train_base:
+            do = linear_bwd(tape, prefix + ".o", dy, o, wo, bo)
+        else:
+            do = dy @ wo.T
+
+    doh = do.reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)   # [B,H,T,hd]
+    dp = doh @ vh.transpose(0, 1, 3, 2)                          # [B,H,T,T]
+    dvh = p.transpose(0, 1, 3, 2) @ doh
+    ds = softmax_bwd(dp, p) / jnp.sqrt(float(hd))
+    dqh = ds @ kh
+    dkh = ds.transpose(0, 1, 3, 2) @ qh
+
+    def unheads(x):
+        return x.transpose(0, 2, 1, 3).reshape(b, t, d)
+
+    dqkv = jnp.concatenate([unheads(dqh), unheads(dkh), unheads(dvh)], axis=-1)
+
+    if lora is not None and "qkv" in lora:
+        la, lb, scale = lora["qkv"]
+        tape.linear(prefix + ".qkv.lora_b", lqkv_cache, scale * dqkv, lb.shape)
+        du = scale * (dqkv @ lb.T)
+        tape.linear(prefix + ".qkv.lora_a", h, du, la.shape)
+        dh = dqkv @ wqkv.T + du @ la.T
+        if train_base:
+            tape.linear(prefix + ".qkv.w", h, dqkv, wqkv.shape)
+            tape.bias(prefix + ".qkv.b", dqkv, bqkv.shape)
+    else:
+        if train_base:
+            dh = linear_bwd(tape, prefix + ".qkv", dqkv, h, wqkv, bqkv)
+        else:
+            dh = dqkv @ wqkv.T
+    return dh
+
+
+# ---------------------------------------------------------------------------
+# losses (per-example, so per-example gradients stay separable)
+# ---------------------------------------------------------------------------
+
+def lm_loss_fwd(logits, targets):
+    """Mean-over-tokens cross entropy per example.
+
+    logits [B,T,V], targets [B,T] -> (loss_per_example [B], dlogits-of-l_i).
+    dlogits rows of example i are d l_i / d logits_i (unscaled by 1/B), so
+    the resulting tape deltas give *per-example* gradients of l_i.
+    """
+    b, t, v = logits.shape
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]  # [B,T]
+    loss_i = jnp.mean(nll, axis=-1)                                        # [B]
+    probs = jnp.exp(logp)
+    onehot = jax.nn.one_hot(targets, v, dtype=logits.dtype)
+    dlogits = (probs - onehot) / float(t)
+    return loss_i, dlogits
+
+
+def ce_loss_fwd(logits, labels):
+    """Classifier cross entropy. logits [B,C], labels [B]."""
+    c = logits.shape[-1]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss_i = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    dlogits = jnp.exp(logp) - jax.nn.one_hot(labels, c, dtype=logits.dtype)
+    correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    return loss_i, dlogits, correct

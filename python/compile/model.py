@@ -1,0 +1,407 @@
+"""L2 models: manual-backprop networks whose backward pass exposes the
+per-layer (a, delta) pairs that the paper's fused clipping consumes.
+
+Three model families, matching the paper's experiment suite under the
+DESIGN.md substitutions:
+
+  * TransformerLM        -- decoder-only LM (GPT-2/GPT-3 analog), LoRA
+                            option, partitionable into pipeline stages.
+  * TransformerClassifier-- encoder + mean-pool head (RoBERTa analog).
+  * ResMLP               -- residual MLP with layernorm (WRN16-4 analog).
+
+A model is a plain namespace of functions; parameters travel as a list of
+arrays in `param_specs` order (that order *is* the HLO parameter order the
+rust runtime feeds).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from compile import layers
+from compile.layers import Tape
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ModelConfig:
+    kind: str                      # "lm" | "classifier" | "resmlp"
+    batch: int
+    # transformer fields
+    vocab: int = 0
+    seq: int = 0
+    d_model: int = 0
+    n_heads: int = 0
+    n_layers: int = 0
+    d_ff: int = 0
+    n_classes: int = 0
+    # resmlp fields
+    features: int = 0
+    width: int = 0
+    blocks: int = 0
+    # lora
+    lora_rank: int = 0             # 0 = no lora
+    lora_scale: float = 2.0
+    train_base: bool = True        # False => only LoRA params trainable
+    # kernel routing
+    use_pallas: bool = False
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    name: str
+    shape: tuple
+    group: str
+    init: str          # "normal" | "zeros" | "ones" | "normal_small"
+    trainable: bool = True
+
+
+# ---------------------------------------------------------------------------
+# parameter specs / init
+# ---------------------------------------------------------------------------
+
+def _transformer_specs(cfg: ModelConfig) -> list[ParamSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    base = cfg.train_base
+    sp: list[ParamSpec] = [
+        ParamSpec("tok_emb", (cfg.vocab, d), "embed", "normal", base),
+        ParamSpec("pos_emb", (cfg.seq, d), "embed", "normal", base),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"block{i}"
+        sp += [
+            ParamSpec(f"{p}.ln1.g", (d,), f"{p}.ln1", "ones", base),
+            ParamSpec(f"{p}.ln1.b", (d,), f"{p}.ln1", "zeros", base),
+            ParamSpec(f"{p}.qkv.w", (d, 3 * d), f"{p}.attn", "normal", base),
+            ParamSpec(f"{p}.qkv.b", (3 * d,), f"{p}.attn", "zeros", base),
+            ParamSpec(f"{p}.o.w", (d, d), f"{p}.attn", "normal_small", base),
+            ParamSpec(f"{p}.o.b", (d,), f"{p}.attn", "zeros", base),
+        ]
+        if cfg.lora_rank > 0:
+            r = cfg.lora_rank
+            sp += [
+                ParamSpec(f"{p}.qkv.lora_a", (d, r), f"{p}.attn", "normal", True),
+                ParamSpec(f"{p}.qkv.lora_b", (r, 3 * d), f"{p}.attn", "zeros", True),
+                ParamSpec(f"{p}.o.lora_a", (d, r), f"{p}.attn", "normal", True),
+                ParamSpec(f"{p}.o.lora_b", (r, d), f"{p}.attn", "zeros", True),
+            ]
+        sp += [
+            ParamSpec(f"{p}.ln2.g", (d,), f"{p}.ln2", "ones", base),
+            ParamSpec(f"{p}.ln2.b", (d,), f"{p}.ln2", "zeros", base),
+            ParamSpec(f"{p}.mlp1.w", (d, f), f"{p}.mlp", "normal", base),
+            ParamSpec(f"{p}.mlp1.b", (f,), f"{p}.mlp", "zeros", base),
+            ParamSpec(f"{p}.mlp2.w", (f, d), f"{p}.mlp", "normal_small", base),
+            ParamSpec(f"{p}.mlp2.b", (d,), f"{p}.mlp", "zeros", base),
+        ]
+    sp += [
+        ParamSpec("ln_f.g", (d,), "ln_f", "ones", base),
+        ParamSpec("ln_f.b", (d,), "ln_f", "zeros", base),
+    ]
+    if cfg.kind == "lm":
+        # LoRA fine-tuning trains the output head alongside the adapters
+        # (standard practice; Hu et al. 2021 train task heads too).
+        head_tr = base or cfg.lora_rank > 0
+        sp += [
+            ParamSpec("head.w", (d, cfg.vocab), "head", "normal", head_tr),
+            ParamSpec("head.b", (cfg.vocab,), "head", "zeros", head_tr),
+        ]
+    else:
+        sp += [
+            ParamSpec("head.w", (d, cfg.n_classes), "head", "normal", True),
+            ParamSpec("head.b", (cfg.n_classes,), "head", "zeros", True),
+        ]
+    return sp
+
+
+def _resmlp_specs(cfg: ModelConfig) -> list[ParamSpec]:
+    w = cfg.width
+    sp = [
+        ParamSpec("input.w", (cfg.features, w), "input", "normal", True),
+        ParamSpec("input.b", (w,), "input", "zeros", True),
+    ]
+    for i in range(cfg.blocks):
+        p = f"block{i}"
+        sp += [
+            ParamSpec(f"{p}.ln.g", (w,), p, "ones", True),
+            ParamSpec(f"{p}.ln.b", (w,), p, "zeros", True),
+            ParamSpec(f"{p}.fc1.w", (w, w), p, "normal", True),
+            ParamSpec(f"{p}.fc1.b", (w,), p, "zeros", True),
+            ParamSpec(f"{p}.fc2.w", (w, w), p, "normal_small", True),
+            ParamSpec(f"{p}.fc2.b", (w,), p, "zeros", True),
+        ]
+    sp += [
+        ParamSpec("ln_f.g", (w,), "ln_f", "ones", True),
+        ParamSpec("ln_f.b", (w,), "ln_f", "zeros", True),
+        ParamSpec("head.w", (w, cfg.n_classes), "head", "normal", True),
+        ParamSpec("head.b", (cfg.n_classes,), "head", "zeros", True),
+    ]
+    return sp
+
+
+def param_specs(cfg: ModelConfig) -> list[ParamSpec]:
+    if cfg.kind == "resmlp":
+        return _resmlp_specs(cfg)
+    return _transformer_specs(cfg)
+
+
+def group_names(cfg: ModelConfig) -> list[str]:
+    out: list[str] = []
+    for s in param_specs(cfg):
+        if s.trainable and s.group not in out:
+            out.append(s.group)
+    return out
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> list[jnp.ndarray]:
+    specs = param_specs(cfg)
+    n_res = 2 * max(cfg.n_layers, cfg.blocks, 1)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(specs))
+    out = []
+    for k, s in zip(keys, specs):
+        if s.init == "ones":
+            out.append(jnp.ones(s.shape, jnp.float32))
+        elif s.init == "zeros":
+            out.append(jnp.zeros(s.shape, jnp.float32))
+        else:
+            std = 0.02 if s.init == "normal" else 0.02 / jnp.sqrt(float(n_res))
+            out.append(std * jax.random.normal(k, s.shape, jnp.float32))
+    return out
+
+
+def as_dict(cfg: ModelConfig, plist) -> dict:
+    return {s.name: p for s, p in zip(param_specs(cfg), plist)}
+
+
+# ---------------------------------------------------------------------------
+# transformer trunk: forward with caches + manual backward
+# ---------------------------------------------------------------------------
+
+def _lora_for(cfg: ModelConfig, p: dict, blk: str) -> Optional[dict]:
+    if cfg.lora_rank == 0:
+        return None
+    return {
+        "qkv": (p[f"{blk}.qkv.lora_a"], p[f"{blk}.qkv.lora_b"], cfg.lora_scale / cfg.lora_rank),
+        "o": (p[f"{blk}.o.lora_a"], p[f"{blk}.o.lora_b"], cfg.lora_scale / cfg.lora_rank),
+    }
+
+
+def _block_fwd(cfg, p, blk, x, causal):
+    a1, c_ln1 = layers.layernorm_fwd(x, p[f"{blk}.ln1.g"], p[f"{blk}.ln1.b"])
+    att, c_att = layers.attention_fwd(
+        a1, p[f"{blk}.qkv.w"], p[f"{blk}.qkv.b"], p[f"{blk}.o.w"], p[f"{blk}.o.b"],
+        cfg.n_heads, causal, _lora_for(cfg, p, blk),
+    )
+    x1 = x + att
+    a2, c_ln2 = layers.layernorm_fwd(x1, p[f"{blk}.ln2.g"], p[f"{blk}.ln2.b"])
+    h1 = layers.linear_fwd(a2, p[f"{blk}.mlp1.w"], p[f"{blk}.mlp1.b"])
+    h2 = layers.gelu_fwd(h1)
+    m = layers.linear_fwd(h2, p[f"{blk}.mlp2.w"], p[f"{blk}.mlp2.b"])
+    x2 = x1 + m
+    return x2, (c_ln1, c_att, a1, c_ln2, a2, h1, h2, x1)
+
+
+def _block_bwd(tape, cfg, p, blk, dy, cache):
+    c_ln1, c_att, a1, c_ln2, a2, h1, h2, x1 = cache
+    tb = cfg.train_base
+    # mlp branch
+    if tb:
+        dh2 = layers.linear_bwd(tape, f"{blk}.mlp2", dy, h2, p[f"{blk}.mlp2.w"], p[f"{blk}.mlp2.b"])
+    else:
+        dh2 = dy @ p[f"{blk}.mlp2.w"].T
+    dh1 = layers.gelu_bwd(dh2, h1)
+    if tb:
+        da2 = layers.linear_bwd(tape, f"{blk}.mlp1", dh1, a2, p[f"{blk}.mlp1.w"], p[f"{blk}.mlp1.b"])
+        dx1 = dy + layers.layernorm_bwd(tape, f"{blk}.ln2", da2, c_ln2, p[f"{blk}.ln2.g"])
+    else:
+        da2 = dh1 @ p[f"{blk}.mlp1.w"].T
+        dx1 = dy + _ln_bwd_nograd(da2, c_ln2, p[f"{blk}.ln2.g"])
+    da1 = layers.attention_bwd(
+        tape, blk, dx1, c_att, p[f"{blk}.qkv.w"], p[f"{blk}.qkv.b"],
+        p[f"{blk}.o.w"], p[f"{blk}.o.b"], cfg.n_heads,
+        _lora_for(cfg, p, blk), train_base=tb,
+    )
+    if tb:
+        dx = dx1 + layers.layernorm_bwd(tape, f"{blk}.ln1", da1, c_ln1, p[f"{blk}.ln1.g"])
+    else:
+        dx = dx1 + _ln_bwd_nograd(da1, c_ln1, p[f"{blk}.ln1.g"])
+    return dx
+
+
+def _ln_bwd_nograd(dy, cache, g):
+    xhat, inv = cache
+    dxhat = dy * g
+    return inv * (
+        dxhat
+        - jnp.mean(dxhat, axis=-1, keepdims=True)
+        - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True)
+    )
+
+
+def _trunk_fwd(cfg, p, tokens, causal, lo: int = 0, hi: Optional[int] = None,
+               embed: bool = True, x: Optional[jnp.ndarray] = None):
+    """Run blocks [lo, hi) (whole trunk by default). `embed` controls the
+    token/position embedding; pipeline stages > 0 take `x` directly."""
+    hi = cfg.n_layers if hi is None else hi
+    if embed:
+        t = tokens.shape[1]
+        x = p["tok_emb"][tokens] + p["pos_emb"][None, :t, :]
+    caches = []
+    for i in range(lo, hi):
+        x, c = _block_fwd(cfg, p, f"block{i}", x, causal)
+        caches.append(c)
+    return x, caches
+
+
+def _trunk_bwd(tape, cfg, p, tokens, dy, caches, lo: int, hi: int, embed: bool):
+    dx = dy
+    for i in reversed(range(lo, hi)):
+        dx = _block_bwd(tape, cfg, p, f"block{i}", dx, caches[i - lo])
+    if embed and cfg.train_base:
+        tape.embed("tok_emb", tokens, dx, cfg.vocab)
+        tape.direct("pos_emb", dx)  # per-example grad for pos rows is dx itself
+    return dx
+
+
+# ---------------------------------------------------------------------------
+# model heads: loss forward + full manual backward filling a Tape
+# ---------------------------------------------------------------------------
+
+def lm_forward_loss(cfg, plist, tokens, targets):
+    """Pure forward (autodiff-able): per-example LM loss [B]."""
+    p = as_dict(cfg, plist)
+    x, _ = _trunk_fwd(cfg, p, tokens, causal=True)
+    xf, _ = layers.layernorm_fwd(x, p["ln_f.g"], p["ln_f.b"])
+    logits = layers.linear_fwd(xf, p["head.w"], p["head.b"])
+    loss_i, _ = layers.lm_loss_fwd(logits, targets)
+    return loss_i
+
+
+def lm_backward(cfg, plist, tokens, targets) -> tuple[Tape, jnp.ndarray]:
+    """One fused forward+backward; returns tape of per-layer (a, delta)
+    records plus per-example losses. This is the paper's 'clipping in
+    conjunction with backpropagation' code path."""
+    p = as_dict(cfg, plist)
+    tape = Tape(cfg.use_pallas)
+    x, caches = _trunk_fwd(cfg, p, tokens, causal=True)
+    xf, c_lnf = layers.layernorm_fwd(x, p["ln_f.g"], p["ln_f.b"])
+    logits = layers.linear_fwd(xf, p["head.w"], p["head.b"])
+    loss_i, dlogits = layers.lm_loss_fwd(logits, targets)
+    head_tr = cfg.train_base or cfg.lora_rank > 0
+    if head_tr:
+        dxf = layers.linear_bwd(tape, "head", dlogits, xf, p["head.w"], p["head.b"])
+    else:
+        dxf = dlogits @ p["head.w"].T
+    if cfg.train_base:
+        dx = layers.layernorm_bwd(tape, "ln_f", dxf, c_lnf, p["ln_f.g"])
+    else:
+        dx = _ln_bwd_nograd(dxf, c_lnf, p["ln_f.g"])
+    _trunk_bwd(tape, cfg, p, tokens, dx, caches, 0, cfg.n_layers, embed=True)
+    return tape, loss_i
+
+
+def classifier_forward_logits(cfg, plist, tokens):
+    p = as_dict(cfg, plist)
+    x, _ = _trunk_fwd(cfg, p, tokens, causal=False)
+    xf, _ = layers.layernorm_fwd(x, p["ln_f.g"], p["ln_f.b"])
+    pool = jnp.mean(xf, axis=1, keepdims=True)               # [B,1,D]
+    return layers.linear_fwd(pool, p["head.w"], p["head.b"])[:, 0, :]
+
+
+def classifier_forward_loss(cfg, plist, tokens, labels):
+    logits = classifier_forward_logits(cfg, plist, tokens)
+    loss_i, _, _ = layers.ce_loss_fwd(logits, labels)
+    return loss_i
+
+
+def classifier_backward(cfg, plist, tokens, labels):
+    p = as_dict(cfg, plist)
+    tape = Tape(cfg.use_pallas)
+    x, caches = _trunk_fwd(cfg, p, tokens, causal=False)
+    xf, c_lnf = layers.layernorm_fwd(x, p["ln_f.g"], p["ln_f.b"])
+    pool = jnp.mean(xf, axis=1, keepdims=True)
+    logits = layers.linear_fwd(pool, p["head.w"], p["head.b"])[:, 0, :]
+    loss_i, dlogits, correct = layers.ce_loss_fwd(logits, labels)
+    dpool = layers.linear_bwd(tape, "head", dlogits[:, None, :], pool,
+                              p["head.w"], p["head.b"])       # [B,1,D]
+    t = x.shape[1]
+    dxf = jnp.broadcast_to(dpool / float(t), x.shape)
+    if cfg.train_base:
+        dx = layers.layernorm_bwd(tape, "ln_f", dxf, c_lnf, p["ln_f.g"])
+    else:
+        dx = _ln_bwd_nograd(dxf, c_lnf, p["ln_f.g"])
+    _trunk_bwd(tape, cfg, p, tokens, dx, caches, 0, cfg.n_layers, embed=True)
+    return tape, loss_i, correct
+
+
+def resmlp_forward_logits(cfg, plist, feats):
+    p = as_dict(cfg, plist)
+    h = layers.linear_fwd(feats[:, None, :], p["input.w"], p["input.b"])  # [B,1,W]
+    for i in range(cfg.blocks):
+        blk = f"block{i}"
+        a, _ = layers.layernorm_fwd(h, p[f"{blk}.ln.g"], p[f"{blk}.ln.b"])
+        u = layers.relu_fwd(layers.linear_fwd(a, p[f"{blk}.fc1.w"], p[f"{blk}.fc1.b"]))
+        h = h + layers.linear_fwd(u, p[f"{blk}.fc2.w"], p[f"{blk}.fc2.b"])
+    hf, _ = layers.layernorm_fwd(h, p["ln_f.g"], p["ln_f.b"])
+    return layers.linear_fwd(hf, p["head.w"], p["head.b"])[:, 0, :]
+
+
+def resmlp_forward_loss(cfg, plist, feats, labels):
+    logits = resmlp_forward_logits(cfg, plist, feats)
+    loss_i, _, _ = layers.ce_loss_fwd(logits, labels)
+    return loss_i
+
+
+def resmlp_backward(cfg, plist, feats, labels):
+    p = as_dict(cfg, plist)
+    tape = Tape(cfg.use_pallas)
+    h = layers.linear_fwd(feats[:, None, :], p["input.w"], p["input.b"])
+    hs, caches = [feats[:, None, :]], []
+    for i in range(cfg.blocks):
+        blk = f"block{i}"
+        a, c_ln = layers.layernorm_fwd(h, p[f"{blk}.ln.g"], p[f"{blk}.ln.b"])
+        pre = layers.linear_fwd(a, p[f"{blk}.fc1.w"], p[f"{blk}.fc1.b"])
+        u = layers.relu_fwd(pre)
+        h = h + layers.linear_fwd(u, p[f"{blk}.fc2.w"], p[f"{blk}.fc2.b"])
+        caches.append((c_ln, a, pre, u))
+    hf, c_lnf = layers.layernorm_fwd(h, p["ln_f.g"], p["ln_f.b"])
+    logits = layers.linear_fwd(hf, p["head.w"], p["head.b"])[:, 0, :]
+    loss_i, dlogits, correct = layers.ce_loss_fwd(logits, labels)
+
+    dhf = layers.linear_bwd(tape, "head", dlogits[:, None, :], hf,
+                            p["head.w"], p["head.b"])
+    dh = layers.layernorm_bwd(tape, "ln_f", dhf, c_lnf, p["ln_f.g"])
+    for i in reversed(range(cfg.blocks)):
+        blk = f"block{i}"
+        c_ln, a, pre, u = caches[i]
+        du = layers.linear_bwd(tape, f"{blk}.fc2", dh, u,
+                               p[f"{blk}.fc2.w"], p[f"{blk}.fc2.b"])
+        dpre = layers.relu_bwd(du, pre)
+        da = layers.linear_bwd(tape, f"{blk}.fc1", dpre, a,
+                               p[f"{blk}.fc1.w"], p[f"{blk}.fc1.b"])
+        dh = dh + layers.layernorm_bwd(tape, f"{blk}.ln", da, c_ln, p[f"{blk}.ln.g"])
+    layers.linear_bwd(tape, "input", dh, hs[0], p["input.w"], p["input.b"])
+    return tape, loss_i, correct
+
+
+# dispatch tables --------------------------------------------------------
+
+def backward_fn(cfg: ModelConfig):
+    if cfg.kind == "lm":
+        return lambda pl, a, b: lm_backward(cfg, pl, a, b) + (None,)
+    if cfg.kind == "classifier":
+        return lambda pl, a, b: classifier_backward(cfg, pl, a, b)
+    return lambda pl, a, b: resmlp_backward(cfg, pl, a, b)
+
+
+def forward_loss_fn(cfg: ModelConfig):
+    if cfg.kind == "lm":
+        return lambda pl, a, b: lm_forward_loss(cfg, pl, a, b)
+    if cfg.kind == "classifier":
+        return lambda pl, a, b: classifier_forward_loss(cfg, pl, a, b)
+    return lambda pl, a, b: resmlp_forward_loss(cfg, pl, a, b)

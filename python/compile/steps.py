@@ -1,0 +1,384 @@
+"""Entry-point builders: one function per clipping scheme, each closed over
+a ModelConfig and lowered to HLO by aot.py.
+
+The schemes and their cost structures (what Figure 1 measures):
+
+  nonprivate_step    one fwd+bwd, plain summed grads.
+  dp_step_perlayer   one fwd+bwd; at each layer, ghost norms -> per-group
+                     clip factor -> fused clipped sum. No per-example
+                     gradients, no second pass. (the paper's section 3.1)
+  dp_step_flat       one fwd+bwd caching (a, delta) for every layer; global
+                     norm -> single factor -> clipped sums. Memory: all
+                     (a, delta) pairs live until the norms are known.
+  dp_step_ghost      flat clipping via TWO backward passes (Li et al. 2022b):
+                     pass 1 ghost norms only, pass 2 autodiff of the
+                     coeff-weighted loss. Memory-light, compute-heavy.
+  dp_step_naive      Opacus-style: vmap(grad) materializes B per-example
+                     gradients, clips, sums. Memory-heavy baseline.
+
+All dp steps take `weights` [B] in {0,1} (Poisson-sample padding mask) and
+`thresholds` (per group [K], or scalar for flat), and return per-example
+norms so the rust coordinator can run quantile estimation (Algorithm 1
+lines 15-18) without extra round trips.
+
+Returned grads are SUMS over the batch (unnormalized); the coordinator
+adds noise and divides by the (expected) batch size, matching Algorithm 1
+line 14.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+
+
+def _group_index(cfg) -> tuple[list[str], dict[str, int]]:
+    groups = M.group_names(cfg)
+    gidx = {g: i for i, g in enumerate(groups)}
+    return groups, gidx
+
+
+def _trainable_specs(cfg):
+    return [s for s in M.param_specs(cfg) if s.trainable]
+
+
+def _tape_group_norms(cfg, tape) -> jnp.ndarray:
+    """Stack per-example per-group gradient norms -> [B, K] (not squared)."""
+    groups, gidx = _group_index(cfg)
+    acc = [None] * len(groups)
+    for s in _trainable_specs(cfg):
+        ns = tape.norm_sq(s.name)
+        k = gidx[s.group]
+        acc[k] = ns if acc[k] is None else acc[k] + ns
+    return jnp.sqrt(jnp.maximum(jnp.stack(acc, axis=1), 0.0))
+
+
+def _clip_coeff(norms: jnp.ndarray, thresh: jnp.ndarray) -> jnp.ndarray:
+    return jnp.minimum(1.0, thresh / jnp.maximum(norms, 1e-12))
+
+
+def _weighted_mean_loss(loss_i, weights):
+    return jnp.sum(loss_i * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+# ---------------------------------------------------------------------------
+
+def make_nonprivate_step(cfg):
+    bwd = M.backward_fn(cfg)
+
+    def step(params, x, y):
+        tape, loss_i, _ = bwd(params, x, y)
+        b = float(cfg.batch)
+        grads = [tape.sum_grad(s.name) / b for s in _trainable_specs(cfg)]
+        return (jnp.mean(loss_i), *grads)
+
+    return step
+
+
+def make_dp_step_perlayer(cfg):
+    """Algorithm 1 lines 7-12: group-wise clip fused into backprop."""
+    bwd = M.backward_fn(cfg)
+    groups, gidx = _group_index(cfg)
+
+    def step(params, x, y, thresholds, weights):
+        tape, loss_i, _ = bwd(params, x, y)
+        norms = _tape_group_norms(cfg, tape)                  # [B,K]
+        coeff = _clip_coeff(norms, thresholds[None, :]) * weights[:, None]
+        grads = [
+            tape.clipped_sum(s.name, coeff[:, gidx[s.group]])
+            for s in _trainable_specs(cfg)
+        ]
+        return (_weighted_mean_loss(loss_i, weights), *grads, norms)
+
+    return step
+
+
+def make_dp_step_flat(cfg):
+    """Flat clipping with ghost norms: one backward, (a, delta) cached for
+    every layer until the global norm is known."""
+    bwd = M.backward_fn(cfg)
+
+    def step(params, x, y, threshold, weights):
+        tape, loss_i, _ = bwd(params, x, y)
+        norms_k = _tape_group_norms(cfg, tape)
+        gnorm = jnp.sqrt(jnp.sum(norms_k * norms_k, axis=1))  # [B]
+        coeff = _clip_coeff(gnorm, threshold) * weights
+        grads = [tape.clipped_sum(s.name, coeff) for s in _trainable_specs(cfg)]
+        return (_weighted_mean_loss(loss_i, weights), *grads, gnorm)
+
+    return step
+
+
+def make_dp_step_ghost(cfg):
+    """Ghost clipping (Li et al. 2022b): norms pass + second backward of the
+    coefficient-weighted loss. Same output as dp_step_flat, 2x backward."""
+    bwd = M.backward_fn(cfg)
+    loss_fn = M.forward_loss_fn(cfg)
+    specs = M.param_specs(cfg)
+    t_idx = [i for i, s in enumerate(specs) if s.trainable]
+
+    def step(params, x, y, threshold, weights):
+        tape, loss_i, _ = bwd(params, x, y)
+        norms_k = _tape_group_norms(cfg, tape)
+        gnorm = jnp.sqrt(jnp.sum(norms_k * norms_k, axis=1))
+        coeff = _clip_coeff(gnorm, threshold) * weights
+
+        def weighted(plist):
+            return jnp.sum(loss_fn(plist, x, y) * coeff)
+
+        all_grads = jax.grad(weighted)(params)
+        grads = [all_grads[i] for i in t_idx]
+        return (_weighted_mean_loss(loss_i, weights), *grads, gnorm)
+
+    return step
+
+
+def make_dp_step_naive(cfg):
+    """Opacus-style flat clipping: materialize per-example gradients."""
+    loss_fn = M.forward_loss_fn(cfg)
+    specs = M.param_specs(cfg)
+    t_idx = [i for i, s in enumerate(specs) if s.trainable]
+
+    def step(params, x, y, threshold, weights):
+        def single(plist, xi, yi):
+            return loss_fn(plist, xi[None], yi[None])[0]
+
+        loss_i = loss_fn(params, x, y)
+        per_ex = jax.vmap(jax.grad(single), in_axes=(None, 0, 0))(params, x, y)
+        per_ex = [per_ex[i] for i in t_idx]                    # each [B, ...]
+        sq = sum(jnp.sum(g * g, axis=tuple(range(1, g.ndim))) for g in per_ex)
+        gnorm = jnp.sqrt(sq)
+        coeff = _clip_coeff(gnorm, threshold) * weights
+        grads = [jnp.tensordot(coeff, g, axes=(0, 0)) for g in per_ex]
+        return (_weighted_mean_loss(loss_i, weights), *grads, gnorm)
+
+    return step
+
+
+def make_eval_batch(cfg):
+    loss_fn = M.forward_loss_fn(cfg)
+
+    def step(params, x, y, weights):
+        loss_i = loss_fn(params, x, y)
+        if cfg.kind == "lm":
+            correct = jnp.zeros_like(loss_i)
+        elif cfg.kind == "classifier":
+            logits = M.classifier_forward_logits(cfg, params, x)
+            correct = (jnp.argmax(logits, -1) == y).astype(jnp.float32)
+        else:
+            logits = M.resmlp_forward_logits(cfg, params, x)
+            correct = (jnp.argmax(logits, -1) == y).astype(jnp.float32)
+        return (
+            jnp.sum(loss_i * weights),
+            jnp.sum(correct * weights),
+            jnp.sum(weights),
+        )
+
+    return step
+
+
+def make_forward_logits(cfg):
+    """Next-token logits for decoding (LM only): returns logits [B,T,V]."""
+    def step(params, x):
+        p = M.as_dict(cfg, params)
+        h, _ = M._trunk_fwd(cfg, p, x, causal=True)
+        import compile.layers as layers
+        hf, _ = layers.layernorm_fwd(h, p["ln_f.g"], p["ln_f.b"])
+        return (layers.linear_fwd(hf, p["head.w"], p["head.b"]),)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# pipeline-parallel stage entry points (per-device clipping, Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def stage_param_specs(cfg, boundaries: list[int], stage: int):
+    """Specs owned by `stage` when blocks are split at `boundaries`
+    (len = n_stages+1, boundaries[0]=0, boundaries[-1]=n_layers).
+    Stage 0 additionally owns the embeddings; the last owns ln_f + head."""
+    lo, hi = boundaries[stage], boundaries[stage + 1]
+    last = stage == len(boundaries) - 2
+    names = set()
+    if stage == 0:
+        names |= {"tok_emb", "pos_emb"}
+    for i in range(lo, hi):
+        names |= {s.name for s in M.param_specs(cfg) if s.name.startswith(f"block{i}.")}
+    if last:
+        names |= {"ln_f.g", "ln_f.b", "head.w", "head.b"}
+    return [s for s in M.param_specs(cfg) if s.name in names]
+
+
+def _stage_fwd(cfg, p, stage_specs, x_or_tokens, lo, hi, first, last, want_caches):
+    if first:
+        xx, caches = M._trunk_fwd(cfg, p, x_or_tokens, causal=True, lo=lo, hi=hi, embed=True)
+    else:
+        xx, caches = M._trunk_fwd(cfg, p, None, causal=True, lo=lo, hi=hi,
+                                  embed=False, x=x_or_tokens)
+    return xx, caches
+
+
+def make_stage_fwd(cfg, boundaries, stage):
+    lo, hi = boundaries[stage], boundaries[stage + 1]
+    first = stage == 0
+    specs = stage_param_specs(cfg, boundaries, stage)
+
+    def step(params, x):
+        p = {s.name: v for s, v in zip(specs, params)}
+        xx, _ = _stage_fwd(cfg, p, specs, x, lo, hi, first, False, False)
+        return (xx,)
+
+    return step
+
+
+def _stage_backward(cfg, p, specs, x, dy, lo, hi, first):
+    """Recompute fwd (pipeline rematerialization) then bwd; fill tape."""
+    from compile.layers import Tape
+    tape = Tape(cfg.use_pallas)
+    if first:
+        xx, caches = M._trunk_fwd(cfg, p, x, causal=True, lo=lo, hi=hi, embed=True)
+        dx = M._trunk_bwd(tape, cfg, p, x, dy, caches, lo, hi, embed=True)
+    else:
+        xx, caches = M._trunk_fwd(cfg, p, None, causal=True, lo=lo, hi=hi,
+                                  embed=False, x=x)
+        dx = M._trunk_bwd(tape, cfg, p, None, dy, caches, lo, hi, embed=False)
+    return tape, dx
+
+
+def _stage_norms(cfg, tape, specs) -> jnp.ndarray:
+    """Per-device clipping treats the WHOLE hosted piece as one group."""
+    tr = [s for s in specs if s.trainable]
+    sq = None
+    for s in tr:
+        ns = tape.norm_sq(s.name)
+        sq = ns if sq is None else sq + ns
+    return jnp.sqrt(jnp.maximum(sq, 0.0))
+
+
+def make_stage_bwd(cfg, boundaries, stage):
+    """Per-device clipping bwd: (dx, clipped sums for local piece, norms)."""
+    lo, hi = boundaries[stage], boundaries[stage + 1]
+    first = stage == 0
+    specs = stage_param_specs(cfg, boundaries, stage)
+    tr = [s for s in specs if s.trainable]
+
+    def step(params, x, dy, threshold, weights):
+        p = {s.name: v for s, v in zip(specs, params)}
+        tape, dx = _stage_backward(cfg, p, specs, x, dy, lo, hi, first)
+        norms = _stage_norms(cfg, tape, specs)
+        coeff = _clip_coeff(norms, threshold) * weights
+        grads = [tape.clipped_sum(s.name, coeff) for s in tr]
+        return (dx, *grads, norms)
+
+    return step
+
+
+def make_stage_bwd_norm(cfg, boundaries, stage):
+    """Flat-over-pipeline baseline pass 1: dx + local norms, NO grads."""
+    lo, hi = boundaries[stage], boundaries[stage + 1]
+    first = stage == 0
+    specs = stage_param_specs(cfg, boundaries, stage)
+
+    def step(params, x, dy):
+        p = {s.name: v for s, v in zip(specs, params)}
+        tape, dx = _stage_backward(cfg, p, specs, x, dy, lo, hi, first)
+        return (dx, _stage_norms(cfg, tape, specs))
+
+    return step
+
+
+def make_stage_regrad(cfg, boundaries, stage):
+    """Flat-over-pipeline baseline pass 2 (approach (iii), section 4):
+    rematerialize fwd+bwd, emit clipped sums for a now-known coeff."""
+    lo, hi = boundaries[stage], boundaries[stage + 1]
+    first = stage == 0
+    specs = stage_param_specs(cfg, boundaries, stage)
+    tr = [s for s in specs if s.trainable]
+
+    def step(params, x, dy, coeff):
+        p = {s.name: v for s, v in zip(specs, params)}
+        tape, _ = _stage_backward(cfg, p, specs, x, dy, lo, hi, first)
+        grads = [tape.clipped_sum(s.name, coeff) for s in tr]
+        return tuple(grads)
+
+    return step
+
+
+def make_stage_loss_bwd(cfg, boundaries, stage, mode: str):
+    """Last stage: loss head + bwd. mode in {'perdevice','norm','regrad'}."""
+    lo, hi = boundaries[stage], boundaries[stage + 1]
+    assert stage == len(boundaries) - 2
+    first = stage == 0
+    specs = stage_param_specs(cfg, boundaries, stage)
+    tr = [s for s in specs if s.trainable]
+
+    def run(params, x, targets):
+        import compile.layers as layers
+        from compile.layers import Tape
+        p = {s.name: v for s, v in zip(specs, params)}
+        tape = Tape(cfg.use_pallas)
+        if first:
+            h, caches = M._trunk_fwd(cfg, p, x, causal=True, lo=lo, hi=hi, embed=True)
+        else:
+            h, caches = M._trunk_fwd(cfg, p, None, causal=True, lo=lo, hi=hi,
+                                     embed=False, x=x)
+        hf, c_lnf = layers.layernorm_fwd(h, p["ln_f.g"], p["ln_f.b"])
+        logits = layers.linear_fwd(hf, p["head.w"], p["head.b"])
+        loss_i, dlogits = layers.lm_loss_fwd(logits, targets)
+        head_tr = cfg.train_base or cfg.lora_rank > 0
+        if head_tr:
+            dhf = layers.linear_bwd(tape, "head", dlogits, hf, p["head.w"], p["head.b"])
+        else:
+            dhf = dlogits @ p["head.w"].T
+        if cfg.train_base:
+            dh = layers.layernorm_bwd(tape, "ln_f", dhf, c_lnf, p["ln_f.g"])
+        else:
+            dh = M._ln_bwd_nograd(dhf, c_lnf, p["ln_f.g"])
+        if first:
+            dx = M._trunk_bwd(tape, cfg, p, x, dh, caches, lo, hi, embed=True)
+        else:
+            dx = M._trunk_bwd(tape, cfg, p, None, dh, caches, lo, hi, embed=False)
+        return tape, loss_i, dx
+
+    if mode == "perdevice":
+        def step(params, x, targets, threshold, weights):
+            tape, loss_i, dx = run(params, x, targets)
+            norms = _stage_norms(cfg, tape, specs)
+            coeff = _clip_coeff(norms, threshold) * weights
+            grads = [tape.clipped_sum(s.name, coeff) for s in tr]
+            return (_weighted_mean_loss(loss_i, weights), dx, *grads, norms)
+        return step
+    if mode == "norm":
+        def step(params, x, targets):
+            tape, loss_i, dx = run(params, x, targets)
+            return (jnp.mean(loss_i), dx, _stage_norms(cfg, tape, specs))
+        return step
+
+    def step(params, x, targets, coeff):
+        tape, _, _ = run(params, x, targets)
+        grads = [tape.clipped_sum(s.name, coeff) for s in tr]
+        return tuple(grads)
+    return step
+
+
+def make_stage_eval(cfg, boundaries, stage):
+    """Last stage eval: per-example loss summed with weights."""
+    lo, hi = boundaries[stage], boundaries[stage + 1]
+    first = stage == 0
+    specs = stage_param_specs(cfg, boundaries, stage)
+
+    def step(params, x, targets, weights):
+        import compile.layers as layers
+        p = {s.name: v for s, v in zip(specs, params)}
+        if first:
+            h, _ = M._trunk_fwd(cfg, p, x, causal=True, lo=lo, hi=hi, embed=True)
+        else:
+            h, _ = M._trunk_fwd(cfg, p, None, causal=True, lo=lo, hi=hi,
+                                embed=False, x=x)
+        hf, _ = layers.layernorm_fwd(h, p["ln_f.g"], p["ln_f.b"])
+        logits = layers.linear_fwd(hf, p["head.w"], p["head.b"])
+        loss_i, _ = layers.lm_loss_fwd(logits, targets)
+        return (jnp.sum(loss_i * weights), jnp.sum(weights))
+
+    return step

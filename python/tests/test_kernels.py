@@ -1,0 +1,156 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Every Pallas kernel must match its pure-jnp oracle. Hypothesis sweeps
+shapes and dtypes; fixed-seed cases pin down exact regressions.
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import ghost, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- ghost_norm
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("b,t,din,dout", [(4, 8, 16, 12), (1, 1, 1, 1), (3, 5, 7, 2)])
+def test_ghost_norm_matches_ref(b, t, din, dout, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(b * 100 + t))
+    a, d = rand(k1, (b, t, din), dtype), rand(k2, (b, t, dout), dtype)
+    got = ghost.ghost_norm(a, d)
+    want = ref.ref_ghost_norm(a, d)
+    np.testing.assert_allclose(got, want, **tol(dtype))
+
+
+def test_ghost_norm_equals_direct_materialization():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a, d = rand(k1, (6, 9, 11, ), jnp.float32).reshape(6, 9, 11), rand(k2, (6, 9, 5), jnp.float32)
+    np.testing.assert_allclose(
+        ref.ref_ghost_norm(a, d), ref.ref_ghost_norm_direct(a, d), rtol=1e-4
+    )
+    np.testing.assert_allclose(
+        ghost.ghost_norm(a, d), ref.ref_ghost_norm_direct(a, d), rtol=1e-4
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(1, 6), t=st.integers(1, 10), din=st.integers(1, 24),
+    dout=st.integers(1, 24), seed=st.integers(0, 2**16),
+)
+def test_ghost_norm_hypothesis(b, t, din, dout, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a, d = rand(k1, (b, t, din), jnp.float32), rand(k2, (b, t, dout), jnp.float32)
+    np.testing.assert_allclose(
+        ghost.ghost_norm(a, d), ref.ref_ghost_norm(a, d), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_ghost_norm_nonnegative():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    a, d = rand(k1, (8, 4, 6), jnp.float32), rand(k2, (8, 4, 3), jnp.float32)
+    assert (np.asarray(ghost.ghost_norm(a, d)) >= -1e-6).all()
+
+
+# -------------------------------------------------------------- clip_matmul
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("b,t,din,dout", [(4, 8, 16, 12), (1, 1, 1, 1), (5, 3, 2, 9)])
+def test_clip_matmul_matches_ref(b, t, din, dout, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(b + t), 3)
+    a, d = rand(k1, (b, t, din), dtype), rand(k2, (b, t, dout), dtype)
+    c = jax.random.uniform(k3, (b,), jnp.float32)
+    got = ghost.clip_matmul(a, d, c)
+    want = ref.ref_clip_matmul(a, d, c)
+    np.testing.assert_allclose(got, want, **tol(dtype))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(1, 6), t=st.integers(1, 10), din=st.integers(1, 16),
+    dout=st.integers(1, 16), seed=st.integers(0, 2**16),
+)
+def test_clip_matmul_hypothesis(b, t, din, dout, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a, d = rand(k1, (b, t, din), jnp.float32), rand(k2, (b, t, dout), jnp.float32)
+    c = jax.random.uniform(k3, (b,), jnp.float32)
+    np.testing.assert_allclose(
+        ghost.clip_matmul(a, d, c), ref.ref_clip_matmul(a, d, c), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_clip_matmul_zero_coeff_gives_zero():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    a, d = rand(k1, (4, 5, 6), jnp.float32), rand(k2, (4, 5, 3), jnp.float32)
+    out = ghost.clip_matmul(a, d, jnp.zeros((4,)))
+    np.testing.assert_allclose(out, np.zeros((6, 3)), atol=1e-7)
+
+
+def test_clip_matmul_unit_coeff_is_plain_gradient():
+    """coeff=1 must reproduce the standard summed gradient A^T D."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    a, d = rand(k1, (4, 5, 6), jnp.float32), rand(k2, (4, 5, 3), jnp.float32)
+    out = ghost.clip_matmul(a, d, jnp.ones((4,)))
+    want = jnp.einsum("bti,bto->io", a, d)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------------------------------- embedding ops
+@pytest.mark.parametrize("b,t,d,v", [(4, 8, 6, 16), (2, 3, 4, 5), (1, 12, 8, 4)])
+def test_embed_ghost_norm_matches_ref(b, t, d, v):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(b * t))
+    ids = jax.random.randint(k1, (b, t), 0, v).astype(jnp.int32)
+    delta = rand(k2, (b, t, d), jnp.float32)
+    got = ghost.embed_ghost_norm(ids, delta)
+    want = ref.ref_embed_ghost_norm(ids, delta)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_embed_ghost_norm_collisions_counted():
+    """Two occurrences of the same token must add their deltas, not their norms."""
+    ids = jnp.array([[3, 3]], jnp.int32)
+    delta = jnp.ones((1, 2, 4), jnp.float32)
+    # grad row 3 = [2,2,2,2] -> norm^2 = 16 (not 4+4)
+    np.testing.assert_allclose(ghost.embed_ghost_norm(ids, delta), [16.0], rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 4), t=st.integers(1, 8), d=st.integers(1, 8),
+       v=st.integers(2, 12), seed=st.integers(0, 2**16))
+def test_clip_scatter_embed_hypothesis(b, t, d, v, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    ids = jax.random.randint(k1, (b, t), 0, v).astype(jnp.int32)
+    delta = rand(k2, (b, t, d), jnp.float32)
+    c = jax.random.uniform(k3, (b,), jnp.float32)
+    got = ghost.clip_scatter_embed(ids, delta, c, v)
+    want = ref.ref_clip_scatter_embed(ids, delta, c, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------- end-to-end clip identity
+def test_clipped_gradient_norm_respects_threshold():
+    """After clipping with coeff = min(1, C/norm), every per-example
+    contribution has norm <= C. Exercises ghost_norm + clip_matmul jointly
+    (the invariant the DP guarantee rests on)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+    a, d = rand(k1, (6, 4, 8), jnp.float32), rand(k2, (6, 4, 3), jnp.float32)
+    c_thresh = 0.37
+    norms = jnp.sqrt(ghost.ghost_norm(a, d))
+    coeff = jnp.minimum(1.0, c_thresh / jnp.maximum(norms, 1e-12))
+    for i in range(6):
+        gi = ghost.clip_matmul(a[i:i + 1], d[i:i + 1], coeff[i:i + 1])
+        assert float(jnp.linalg.norm(gi)) <= c_thresh * (1 + 1e-4)

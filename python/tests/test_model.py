@@ -1,0 +1,277 @@
+"""L2 correctness: manual backprop vs autodiff, and clipping-scheme
+equivalences. These are the tests that license trusting the fused per-layer
+path: the tape's summed gradients must equal jax.grad of the mean loss, and
+flat == ghost == naive clipping must agree exactly (they compute the same
+mathematical object three different ways)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import steps
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def lm_cfg(**kw):
+    d = dict(kind="lm", batch=4, vocab=17, seq=6, d_model=8, n_heads=2,
+             n_layers=2, d_ff=16, use_pallas=False)
+    d.update(kw)
+    return M.ModelConfig(**d)
+
+
+def cls_cfg(**kw):
+    d = dict(kind="classifier", batch=4, vocab=13, seq=5, d_model=8,
+             n_heads=2, n_layers=2, d_ff=16, n_classes=3, use_pallas=False)
+    d.update(kw)
+    return M.ModelConfig(**d)
+
+
+def mlp_cfg(**kw):
+    d = dict(kind="resmlp", batch=5, features=7, width=12, blocks=2,
+             n_classes=4, use_pallas=False)
+    d.update(kw)
+    return M.ModelConfig(**d)
+
+
+def batch_for(cfg, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    if cfg.kind == "resmlp":
+        x = jax.random.normal(k1, (cfg.batch, cfg.features), jnp.float32)
+        y = jax.random.randint(k2, (cfg.batch,), 0, cfg.n_classes).astype(jnp.int32)
+    elif cfg.kind == "classifier":
+        x = jax.random.randint(k1, (cfg.batch, cfg.seq), 0, cfg.vocab).astype(jnp.int32)
+        y = jax.random.randint(k2, (cfg.batch,), 0, cfg.n_classes).astype(jnp.int32)
+    else:
+        x = jax.random.randint(k1, (cfg.batch, cfg.seq), 0, cfg.vocab).astype(jnp.int32)
+        y = jax.random.randint(k2, (cfg.batch, cfg.seq), 0, cfg.vocab).astype(jnp.int32)
+    return x, y
+
+
+CFGS = [lm_cfg, cls_cfg, mlp_cfg]
+
+
+# ------------------------------------------------------- tape vs autodiff
+@pytest.mark.parametrize("mk", CFGS)
+def test_manual_backward_matches_autodiff(mk):
+    cfg = mk()
+    params = M.init_params(cfg, seed=1)
+    # perturb so layernorm gains etc. are not at init symmetry
+    params = [p + 0.05 * jax.random.normal(jax.random.PRNGKey(i), p.shape)
+              for i, p in enumerate(params)]
+    x, y = batch_for(cfg)
+    loss_fn = M.forward_loss_fn(cfg)
+    want = jax.grad(lambda pl: jnp.mean(loss_fn(pl, x, y)))(params)
+
+    step = steps.make_nonprivate_step(cfg)
+    out = step(params, x, y)
+    got = out[1:]
+    specs = M.param_specs(cfg)
+    assert len(got) == len([s for s in specs if s.trainable])
+    for s, g, w in zip(specs, got, want):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=2e-3, atol=2e-5,
+            err_msg=f"grad mismatch for {s.name}")
+
+
+def test_lora_backward_matches_autodiff():
+    cfg = lm_cfg(lora_rank=2, train_base=False)
+    params = M.init_params(cfg, seed=2)
+    # make lora_b nonzero so the adapter path carries signal both ways
+    specs = M.param_specs(cfg)
+    params = [
+        p + 0.1 * jax.random.normal(jax.random.PRNGKey(i), p.shape)
+        if "lora_b" in s.name else p
+        for i, (s, p) in enumerate(zip(specs, params))
+    ]
+    x, y = batch_for(cfg)
+    loss_fn = M.forward_loss_fn(cfg)
+    all_grads = jax.grad(lambda pl: jnp.mean(loss_fn(pl, x, y)))(params)
+    t_idx = [i for i, s in enumerate(specs) if s.trainable]
+    # LoRA configs train the adapters + the LM head (Hu et al. 2021)
+    assert all("lora" in specs[i].name or specs[i].name.startswith("head")
+               for i in t_idx)
+
+    out = steps.make_nonprivate_step(cfg)(params, x, y)
+    for j, i in enumerate(t_idx):
+        np.testing.assert_allclose(
+            np.asarray(out[1 + j]), np.asarray(all_grads[i]),
+            rtol=2e-3, atol=2e-5, err_msg=specs[i].name)
+
+
+# --------------------------------------------- per-example norms are true
+@pytest.mark.parametrize("mk", CFGS)
+def test_group_norms_match_per_example_autodiff(mk):
+    cfg = mk()
+    params = M.init_params(cfg, seed=3)
+    params = [p + 0.05 * jax.random.normal(jax.random.PRNGKey(i + 9), p.shape)
+              for i, p in enumerate(params)]
+    x, y = batch_for(cfg, seed=5)
+    loss_fn = M.forward_loss_fn(cfg)
+
+    def single(pl, xi, yi):
+        return loss_fn(pl, xi[None], yi[None])[0]
+
+    per_ex = jax.vmap(jax.grad(single), in_axes=(None, 0, 0))(params, x, y)
+    specs = M.param_specs(cfg)
+    groups = M.group_names(cfg)
+    want = np.zeros((cfg.batch, len(groups)))
+    for s, g in zip(specs, per_ex):
+        k = groups.index(s.group)
+        want[:, k] += np.sum(np.asarray(g) ** 2, axis=tuple(range(1, g.ndim)))
+    want = np.sqrt(want)
+
+    step = steps.make_dp_step_perlayer(cfg)
+    out = step(params, x, y, jnp.full((len(groups),), 1e9), jnp.ones((cfg.batch,)))
+    norms = np.asarray(out[-1])
+    np.testing.assert_allclose(norms, want, rtol=2e-3, atol=1e-5)
+
+
+# -------------------------------------- flat == ghost == naive equivalence
+def test_flat_ghost_naive_agree():
+    cfg = cls_cfg()
+    params = M.init_params(cfg, seed=4)
+    params = [p + 0.05 * jax.random.normal(jax.random.PRNGKey(i + 3), p.shape)
+              for i, p in enumerate(params)]
+    x, y = batch_for(cfg, seed=7)
+    w = jnp.ones((cfg.batch,))
+    c = jnp.asarray(0.05)  # small so clipping actually bites
+    flat = steps.make_dp_step_flat(cfg)(params, x, y, c, w)
+    ghost_ = steps.make_dp_step_ghost(cfg)(params, x, y, c, w)
+    naive = steps.make_dp_step_naive(cfg)(params, x, y, c, w)
+    # norms agree
+    np.testing.assert_allclose(flat[-1], naive[-1], rtol=2e-3, atol=1e-6)
+    np.testing.assert_allclose(flat[-1], ghost_[-1], rtol=1e-5)
+    # some clipping occurred
+    assert float(jnp.max(flat[-1])) > float(c)
+    # grads agree pairwise
+    for a, b_, n in zip(flat[1:-1], ghost_[1:-1], naive[1:-1]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=3e-3, atol=3e-6)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(n), rtol=3e-3, atol=3e-6)
+
+
+def test_perlayer_with_huge_thresholds_equals_unclipped():
+    cfg = mlp_cfg()
+    params = M.init_params(cfg, seed=5)
+    x, y = batch_for(cfg, seed=8)
+    groups = M.group_names(cfg)
+    out = steps.make_dp_step_perlayer(cfg)(
+        params, x, y, jnp.full((len(groups),), 1e9), jnp.ones((cfg.batch,)))
+    plain = steps.make_nonprivate_step(cfg)(params, x, y)
+    for a, b_ in zip(out[1:-1], plain[1:]):
+        np.testing.assert_allclose(
+            np.asarray(a) / cfg.batch, np.asarray(b_), rtol=1e-4, atol=1e-6)
+
+
+def test_weights_zero_out_examples():
+    """weight=0 examples must contribute nothing (Poisson padding)."""
+    cfg = mlp_cfg()
+    params = M.init_params(cfg, seed=6)
+    x, y = batch_for(cfg, seed=9)
+    groups = M.group_names(cfg)
+    th = jnp.full((len(groups),), 0.1)
+    w_full = jnp.ones((cfg.batch,))
+    w_cut = w_full.at[-1].set(0.0)
+    step = steps.make_dp_step_perlayer(cfg)
+    out_cut = step(params, x, y, th, w_cut)
+
+    # reference: run with batch minus last example, pad with a copy of ex 0
+    x2 = jnp.concatenate([x[:-1], x[:1]], 0)
+    y2 = jnp.concatenate([y[:-1], y[:1]], 0)
+    out_ref = step(params, x2, y2, th, w_cut)
+    for a, b_ in zip(out_cut[1:-1], out_ref[1:-1]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-4, atol=1e-6)
+
+
+def test_clipped_update_norm_bounded():
+    """DP invariant: the total clipped sum has norm <= sum_k C_k * B'."""
+    cfg = cls_cfg()
+    params = M.init_params(cfg, seed=7)
+    x, y = batch_for(cfg, seed=11)
+    groups = M.group_names(cfg)
+    th = jnp.full((len(groups),), 0.02)
+    out = steps.make_dp_step_perlayer(cfg)(params, x, y, th, jnp.ones((cfg.batch,)))
+    specs = [s for s in M.param_specs(cfg) if s.trainable]
+    gidx = {g: i for i, g in enumerate(groups)}
+    per_group = np.zeros(len(groups))
+    for s, g in zip(specs, out[1:-1]):
+        per_group[gidx[s.group]] += float(jnp.sum(g * g))
+    for k in range(len(groups)):
+        assert np.sqrt(per_group[k]) <= cfg.batch * 0.02 * (1 + 1e-4)
+
+
+# --------------------------------------------------- pipeline stage algebra
+def test_pipeline_stages_compose_to_full_model():
+    cfg = lm_cfg(n_layers=4)
+    params = M.init_params(cfg, seed=8)
+    params = [p + 0.05 * jax.random.normal(jax.random.PRNGKey(i + 1), p.shape)
+              for i, p in enumerate(params)]
+    x, y = batch_for(cfg, seed=12)
+    bounds = [0, 2, 4]
+    s0 = steps.stage_param_specs(cfg, bounds, 0)
+    s1 = steps.stage_param_specs(cfg, bounds, 1)
+    pd = M.as_dict(cfg, params)
+    p0 = [pd[s.name] for s in s0]
+    p1 = [pd[s.name] for s in s1]
+
+    h = steps.make_stage_fwd(cfg, bounds, 0)(p0, x)[0]
+    w = jnp.ones((cfg.batch,))
+    loss, dx1, *rest = steps.make_stage_loss_bwd(cfg, bounds, 1, "perdevice")(
+        p1, h, y, jnp.asarray(1e9), w)
+    want = float(jnp.mean(M.lm_forward_loss(cfg, params, x, y)))
+    assert abs(float(loss) - want) < 1e-4
+
+    # chain bwd through stage 0 with huge threshold -> grads match nonprivate
+    out0 = steps.make_stage_bwd(cfg, bounds, 0)(p0, x, dx1, jnp.asarray(1e9), w)
+    grads0 = out0[1:-1]
+    plain = steps.make_nonprivate_step(cfg)(params, x, y)
+    specs = M.param_specs(cfg)
+    plain_by_name = {s.name: g for s, g in zip(specs, plain[1:])}
+    tr0 = [s for s in s0 if s.trainable]
+    for s, g in zip(tr0, grads0):
+        np.testing.assert_allclose(
+            np.asarray(g) / cfg.batch, np.asarray(plain_by_name[s.name]),
+            rtol=2e-3, atol=2e-5, err_msg=s.name)
+
+
+def test_pipeline_norm_regrad_match_perdevice():
+    cfg = lm_cfg(n_layers=2)
+    params = M.init_params(cfg, seed=9)
+    x, y = batch_for(cfg, seed=13)
+    bounds = [0, 1, 2]
+    pd = M.as_dict(cfg, params)
+    s0 = steps.stage_param_specs(cfg, bounds, 0)
+    s1 = steps.stage_param_specs(cfg, bounds, 1)
+    p0 = [pd[s.name] for s in s0]
+    p1 = [pd[s.name] for s in s1]
+    w = jnp.ones((cfg.batch,))
+    c = jnp.asarray(0.05)
+
+    h = steps.make_stage_fwd(cfg, bounds, 0)(p0, x)[0]
+    # per-device path
+    loss, dx, *gn = steps.make_stage_loss_bwd(cfg, bounds, 1, "perdevice")(p1, h, y, c, w)
+    grads_pd, norms_pd = gn[:-1], gn[-1]
+    # norm+regrad path
+    loss2, dx2, norms2 = steps.make_stage_loss_bwd(cfg, bounds, 1, "norm")(p1, h, y)
+    np.testing.assert_allclose(np.asarray(norms_pd), np.asarray(norms2), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx2), rtol=1e-5, atol=1e-7)
+    coeff = jnp.minimum(1.0, c / jnp.maximum(norms2, 1e-12)) * w
+    grads_rg = steps.make_stage_loss_bwd(cfg, bounds, 1, "regrad")(p1, h, y, coeff)
+    for a, b_ in zip(grads_pd, grads_rg):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-5, atol=1e-7)
+
+
+def test_pallas_and_jnp_paths_agree():
+    """The use_pallas flag must not change any number."""
+    cfg_a = mlp_cfg(use_pallas=True, batch=3, width=8, blocks=1)
+    cfg_b = mlp_cfg(use_pallas=False, batch=3, width=8, blocks=1)
+    params = M.init_params(cfg_a, seed=10)
+    x, y = batch_for(cfg_a, seed=14)
+    groups = M.group_names(cfg_a)
+    th = jnp.full((len(groups),), 0.5)
+    w = jnp.ones((3,))
+    out_a = steps.make_dp_step_perlayer(cfg_a)(params, x, y, th, w)
+    out_b = steps.make_dp_step_perlayer(cfg_b)(params, x, y, th, w)
+    for a, b_ in zip(out_a, out_b):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,65 @@
+//! Bench: L3 coordinator hot-path operations in isolation. The target
+//! (DESIGN.md §Perf) is that the coordinator contributes <5% of a training
+//! step; this bench itemizes its pieces.
+//!
+//!     cargo bench --bench coordinator_hotpath
+
+use gwclip::coordinator::accountant;
+use gwclip::coordinator::noise::{add_noise, Allocation, Rng};
+use gwclip::coordinator::optimizer::{Optimizer, OptimizerKind, Schedule};
+use gwclip::coordinator::quantile::QuantileEstimator;
+use gwclip::runtime::Tensor;
+use gwclip::util::bench::bench;
+
+fn main() {
+    // accountant: full sigma binary search (runs once per training job)
+    let r = bench("accountant/noise_multiplier(q=0.01,T=10k)", 1, 5, || {
+        std::hint::black_box(accountant::noise_multiplier(0.01, 10_000, 2.0, 1e-5));
+    });
+    println!("{}", r.report());
+
+    // noise generation for a 1M-param gradient (every step)
+    let mut buf = vec![0f32; 1_000_000];
+    let mut rng = Rng::seeded(0);
+    let r = bench("noise/add_noise 1M f32", 1, 10, || {
+        add_noise(&mut buf, 1.3, &mut rng);
+    });
+    println!("{}", r.report());
+
+    // allocation strategy computation, K=64 groups (every step)
+    let thr: Vec<f64> = (0..64).map(|i| 0.01 + i as f64 * 1e-3).collect();
+    let dims: Vec<u64> = (0..64).map(|i| 1000 + i * 37).collect();
+    let r = bench("noise/allocation stds K=64", 10, 1000, || {
+        std::hint::black_box(Allocation::Weighted.stds(1.3, &thr, &dims));
+    });
+    println!("{}", r.report());
+
+    // quantile update, K=64 (every step)
+    let mut q = QuantileEstimator::adaptive(thr.clone(), 0.6, 0.3, 10.0, 256.0);
+    let counts: Vec<f64> = (0..64).map(|i| (i % 256) as f64).collect();
+    let r = bench("quantile/update K=64", 10, 1000, || {
+        q.update(&counts, &mut rng);
+    });
+    println!("{}", r.report());
+
+    // optimizer: adam on 1M params (every step)
+    let mut p = Tensor::from_vec(&[1_000_000], vec![0.1; 1_000_000]).unwrap();
+    let g = Tensor::from_vec(&[1_000_000], vec![0.01; 1_000_000]).unwrap();
+    let mut opt = Optimizer::new(
+        OptimizerKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+        Schedule::constant(1e-3),
+        0.0,
+        std::slice::from_ref(&p),
+    );
+    let r = bench("optimizer/adam 1M params", 1, 10, || {
+        opt.apply(&mut [&mut p], std::slice::from_ref(&g));
+    });
+    println!("{}", r.report());
+
+    // literal marshalling: host -> PJRT literal for a 1M tensor (every call)
+    let t = Tensor::from_vec(&[1024, 977], vec![1.0; 1024 * 977]).unwrap();
+    let r = bench("runtime/to_literal 1M f32", 1, 10, || {
+        std::hint::black_box(t.to_literal().unwrap());
+    });
+    println!("{}", r.report());
+}

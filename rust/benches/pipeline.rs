@@ -1,0 +1,51 @@
+//! Bench: pipeline step latency, per-device clipping vs flat-sync
+//! (paper section 4). Reports measured host time and the simulated
+//! 4-device makespan from the GPipe schedule model.
+//!
+//!     cargo bench --bench pipeline
+
+use gwclip::data::lm::MarkovCorpus;
+use gwclip::data::Dataset;
+use gwclip::pipeline::{PipelineEngine, PipelineMode, PipelineOpts};
+use gwclip::runtime::Runtime;
+use gwclip::util::bench::bench;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(gwclip::artifact_dir())?;
+    let config = "lm_mid_pipe_lora";
+    let cfg = rt.manifest.config(config)?.clone();
+    let data = MarkovCorpus::new(1024, cfg.hyper.seq, cfg.hyper.vocab, 4, 0);
+
+    for n_micro in [2usize, 4, 8] {
+        println!("== J = {n_micro} microbatches ==");
+        let mut rows = Vec::new();
+        for mode in [PipelineMode::PerDevice, PipelineMode::FlatSync] {
+            let opts = PipelineOpts {
+                mode,
+                n_micro,
+                sigma: 0.5,
+                clip: 1e-2,
+                ..Default::default()
+            };
+            let mut eng = PipelineEngine::new(&rt, config, opts)?;
+            let mb = eng.minibatch();
+            let mut step_i = 0usize;
+            let mut sims = Vec::new();
+            let r = bench(&format!("pipeline/{}", mode.name()), 1, 4, || {
+                let idx: Vec<usize> =
+                    (0..mb).map(|i| (step_i * mb + i) % data.len()).collect();
+                let st = eng.step(&data, &idx).unwrap();
+                sims.push(st.sim_secs);
+                step_i += 1;
+            });
+            let sim = sims.iter().sum::<f64>() / sims.len() as f64;
+            println!("{}   sim 4-device makespan {:.3}s", r.report(), sim);
+            rows.push(sim);
+        }
+        println!(
+            "flat-sync / per-device simulated step-time ratio: {:.2}x\n",
+            rows[1] / rows[0]
+        );
+    }
+    Ok(())
+}

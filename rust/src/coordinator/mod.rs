@@ -1,0 +1,18 @@
+//! L3 coordinator: the paper's coordination contribution.
+//!
+//! * [`accountant`] — RDP privacy accounting + Proposition 3.1 budget split
+//! * [`quantile`]   — private quantile estimation (adaptive thresholds)
+//! * [`noise`]      — Gaussian mechanism + allocation strategies
+//! * [`optimizer`]  — DP-SGD / DP-Adam parameter updates
+//! * [`sampler`]    — Poisson subsampling
+//! * [`trainer`]    — Algorithm 1 end to end on one device
+
+pub mod accountant;
+pub mod noise;
+pub mod optimizer;
+pub mod quantile;
+pub mod sampler;
+pub mod trainer;
+
+pub use noise::Allocation;
+pub use trainer::{Method, StepStats, TrainOpts, Trainer};

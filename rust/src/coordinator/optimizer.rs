@@ -1,0 +1,196 @@
+//! First-order optimizers applied by the coordinator to the host-side
+//! parameter buffers after noising (Algorithm 1 line 14). The paper's
+//! experiments use DP-SGD (momentum) for vision and DP-Adam for language.
+
+use crate::runtime::Tensor;
+
+#[derive(Debug, Clone, Copy)]
+pub enum OptimizerKind {
+    Sgd { momentum: f64 },
+    Adam { beta1: f64, beta2: f64, eps: f64 },
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Schedule {
+    pub base_lr: f64,
+    pub warmup: u64,
+    pub total: u64,
+    pub decay: Decay,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decay {
+    Constant,
+    Linear,
+}
+
+impl Schedule {
+    pub fn constant(lr: f64) -> Self {
+        Schedule { base_lr: lr, warmup: 0, total: 1, decay: Decay::Constant }
+    }
+
+    pub fn linear(lr: f64, warmup: u64, total: u64) -> Self {
+        Schedule { base_lr: lr, warmup, total: total.max(1), decay: Decay::Linear }
+    }
+
+    pub fn lr_at(&self, step: u64) -> f64 {
+        let warm = if self.warmup > 0 && step < self.warmup {
+            (step + 1) as f64 / self.warmup as f64
+        } else {
+            1.0
+        };
+        let decay = match self.decay {
+            Decay::Constant => 1.0,
+            Decay::Linear => {
+                let p = (step.min(self.total)) as f64 / self.total as f64;
+                (1.0 - p).max(0.0)
+            }
+        };
+        self.base_lr * warm * decay
+    }
+}
+
+pub struct Optimizer {
+    pub kind: OptimizerKind,
+    pub schedule: Schedule,
+    pub weight_decay: f64,
+    step: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Optimizer {
+    pub fn new(kind: OptimizerKind, schedule: Schedule, weight_decay: f64, params: &[Tensor]) -> Self {
+        let m = params.iter().map(|p| vec![0f32; p.len()]).collect();
+        let v = match kind {
+            OptimizerKind::Adam { .. } => params.iter().map(|p| vec![0f32; p.len()]).collect(),
+            _ => Vec::new(),
+        };
+        Optimizer { kind, schedule, weight_decay, step: 0, m, v }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// Apply one update: params[i] -= lr * f(grads[i]). `grads` must align
+    /// with `params` (only trainable tensors are passed).
+    pub fn apply(&mut self, params: &mut [&mut Tensor], grads: &[Tensor]) {
+        assert_eq!(params.len(), grads.len());
+        let lr = self.schedule.lr_at(self.step);
+        self.step += 1;
+        match self.kind {
+            OptimizerKind::Sgd { momentum } => {
+                for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+                    let m = &mut self.m[i];
+                    for ((pj, gj), mj) in p.data.iter_mut().zip(&g.data).zip(m.iter_mut()) {
+                        let grad = *gj + (self.weight_decay as f32) * *pj;
+                        *mj = (momentum as f32) * *mj + grad;
+                        *pj -= (lr as f32) * *mj;
+                    }
+                }
+            }
+            OptimizerKind::Adam { beta1, beta2, eps } => {
+                let t = self.step as f64;
+                let bc1 = 1.0 - beta1.powf(t);
+                let bc2 = 1.0 - beta2.powf(t);
+                for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+                    let (ms, vs) = (&mut self.m[i], &mut self.v[i]);
+                    for (((pj, gj), mj), vj) in
+                        p.data.iter_mut().zip(&g.data).zip(ms.iter_mut()).zip(vs.iter_mut())
+                    {
+                        let grad = *gj + (self.weight_decay as f32) * *pj;
+                        *mj = (beta1 as f32) * *mj + (1.0 - beta1 as f32) * grad;
+                        *vj = (beta2 as f32) * *vj + (1.0 - beta2 as f32) * grad * grad;
+                        let mhat = *mj as f64 / bc1;
+                        let vhat = *vj as f64 / bc2;
+                        *pj -= (lr * mhat / (vhat.sqrt() + eps)) as f32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: Vec<f32>) -> Tensor {
+        Tensor::from_vec(&[v.len()], v).unwrap()
+    }
+
+    #[test]
+    fn sgd_moves_against_gradient() {
+        let mut p = t(vec![1.0, -1.0]);
+        let g = t(vec![0.5, -0.5]);
+        let mut opt = Optimizer::new(
+            OptimizerKind::Sgd { momentum: 0.0 },
+            Schedule::constant(0.1),
+            0.0,
+            std::slice::from_ref(&p),
+        );
+        opt.apply(&mut [&mut p], &[g]);
+        assert!((p.data[0] - 0.95).abs() < 1e-6);
+        assert!((p.data[1] + 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut p = t(vec![0.0]);
+        let g = t(vec![1.0]);
+        let mut opt = Optimizer::new(
+            OptimizerKind::Sgd { momentum: 0.9 },
+            Schedule::constant(1.0),
+            0.0,
+            std::slice::from_ref(&p),
+        );
+        opt.apply(&mut [&mut p], std::slice::from_ref(&g));
+        let after1 = p.data[0];
+        opt.apply(&mut [&mut p], std::slice::from_ref(&g));
+        let delta2 = p.data[0] - after1;
+        assert!((after1 + 1.0).abs() < 1e-6);
+        assert!((delta2 + 1.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_step_magnitude_is_lr_at_start() {
+        // with constant grads, the first adam step is ~lr in magnitude
+        let mut p = t(vec![0.0]);
+        let g = t(vec![3.7]);
+        let mut opt = Optimizer::new(
+            OptimizerKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+            Schedule::constant(0.01),
+            0.0,
+            std::slice::from_ref(&p),
+        );
+        opt.apply(&mut [&mut p], std::slice::from_ref(&g));
+        assert!((p.data[0] + 0.01).abs() < 1e-4, "{}", p.data[0]);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        // minimize (x-3)^2
+        let mut p = t(vec![0.0]);
+        let mut opt = Optimizer::new(
+            OptimizerKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+            Schedule::constant(0.1),
+            0.0,
+            std::slice::from_ref(&p),
+        );
+        for _ in 0..500 {
+            let g = t(vec![2.0 * (p.data[0] - 3.0)]);
+            opt.apply(&mut [&mut p], &[g]);
+        }
+        assert!((p.data[0] - 3.0).abs() < 0.05, "{}", p.data[0]);
+    }
+
+    #[test]
+    fn schedule_warmup_and_linear_decay() {
+        let s = Schedule::linear(1.0, 10, 100);
+        assert!(s.lr_at(0) < 0.2);
+        assert!((s.lr_at(9) - 0.91).abs() < 1e-9); // warmup done, decay = 1 - 9/100
+        assert!(s.lr_at(50) < s.lr_at(20));
+        assert!(s.lr_at(100) == 0.0);
+    }
+}

@@ -1,0 +1,128 @@
+//! Private quantile estimation for adaptive clipping thresholds
+//! (Andrew et al. 2019, geometric update; Algorithm 1 lines 15-18).
+//!
+//! Each group k maintains a threshold C_k. After every step the trainer
+//! reports b_k = #examples with ||g_k|| <= C_k; we privatize the fraction
+//! with Gaussian noise sigma_b and update
+//!     C_k <- C_k * exp(-eta * (b~_k - q_target)).
+
+use super::noise::Rng;
+
+#[derive(Debug, Clone)]
+pub struct QuantileEstimator {
+    pub thresholds: Vec<f64>,
+    pub target_q: f64,
+    pub eta: f64,
+    /// noise std (in counts) applied to each b_k release; 0 = non-private
+    /// (used only for the fixed-threshold ablations / tests).
+    pub sigma_b: f64,
+    /// expected batch size B used to normalize counts (Algorithm 1 line 16).
+    pub batch: f64,
+    adaptive: bool,
+}
+
+impl QuantileEstimator {
+    pub fn adaptive(
+        init: Vec<f64>,
+        target_q: f64,
+        eta: f64,
+        sigma_b: f64,
+        batch: f64,
+    ) -> Self {
+        QuantileEstimator { thresholds: init, target_q, eta, sigma_b, batch, adaptive: true }
+    }
+
+    /// Fixed thresholds: update() is a no-op (the paper's "fixed per-layer").
+    pub fn fixed(init: Vec<f64>) -> Self {
+        QuantileEstimator {
+            thresholds: init,
+            target_q: 0.0,
+            eta: 0.0,
+            sigma_b: 0.0,
+            batch: 1.0,
+            adaptive: false,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.thresholds.len()
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        self.adaptive
+    }
+
+    /// One update from clip counts b_k (privatized inside). Returns the
+    /// noisy fractions for diagnostics.
+    pub fn update(&mut self, clip_counts: &[f64], rng: &mut Rng) -> Vec<f64> {
+        assert_eq!(clip_counts.len(), self.thresholds.len());
+        if !self.adaptive {
+            return clip_counts.iter().map(|b| b / self.batch).collect();
+        }
+        let mut fracs = Vec::with_capacity(clip_counts.len());
+        for (c, &b) in self.thresholds.iter_mut().zip(clip_counts) {
+            let noisy = b + self.sigma_b * rng.gauss();
+            let frac = noisy / self.batch;
+            *c *= (-self.eta * (frac - self.target_q)).exp();
+            // keep thresholds sane under extreme noise
+            *c = c.clamp(1e-10, 1e10);
+            fracs.push(frac);
+        }
+        fracs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_never_moves() {
+        let mut q = QuantileEstimator::fixed(vec![1.0, 2.0]);
+        let mut rng = Rng::seeded(0);
+        q.update(&[0.0, 64.0], &mut rng);
+        assert_eq!(q.thresholds, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn adapts_toward_target_quantile() {
+        // norms drawn ~ U(0,1); target median -> threshold should approach
+        // the 0.5 quantile (0.5) from a bad init.
+        let mut q = QuantileEstimator::adaptive(vec![8.0], 0.5, 0.3, 0.0, 64.0);
+        let mut rng = Rng::seeded(1);
+        for _ in 0..400 {
+            let c = q.thresholds[0];
+            let below = (0..64).filter(|_| rng.uniform() <= c).count() as f64;
+            q.update(&[below], &mut rng);
+        }
+        assert!(
+            (q.thresholds[0] - 0.5).abs() < 0.15,
+            "threshold {} should be near the median 0.5",
+            q.thresholds[0]
+        );
+    }
+
+    #[test]
+    fn too_many_clipped_raises_threshold() {
+        let mut q = QuantileEstimator::adaptive(vec![1.0], 0.5, 0.3, 0.0, 10.0);
+        let mut rng = Rng::seeded(2);
+        // b = 0 examples under the threshold (all clipped) -> C must grow
+        q.update(&[0.0], &mut rng);
+        assert!(q.thresholds[0] > 1.0);
+        // everything under the threshold -> C must shrink
+        let before = q.thresholds[0];
+        q.update(&[10.0], &mut rng);
+        assert!(q.thresholds[0] < before);
+    }
+
+    #[test]
+    fn noise_is_applied_when_sigma_b_positive() {
+        let mut a = QuantileEstimator::adaptive(vec![1.0], 0.5, 0.3, 5.0, 10.0);
+        let mut b = QuantileEstimator::adaptive(vec![1.0], 0.5, 0.3, 5.0, 10.0);
+        let mut r1 = Rng::seeded(3);
+        let mut r2 = Rng::seeded(4);
+        a.update(&[5.0], &mut r1);
+        b.update(&[5.0], &mut r2);
+        assert_ne!(a.thresholds[0], b.thresholds[0]);
+    }
+}

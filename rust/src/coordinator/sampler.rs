@@ -1,0 +1,177 @@
+//! Minibatch samplers. DP-SGD's privacy analysis assumes Poisson
+//! subsampling: each example joins the batch independently with
+//! probability rho. The compiled executables have a static batch dimension
+//! B, so Poisson draws are padded (weight 0) or truncated to B; truncation
+//! is logged and kept rare by sizing B ~ 1.25 * rho * n.
+
+use super::noise::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// dataset indices, length <= capacity
+    pub indices: Vec<usize>,
+    /// 1.0 for real examples, 0.0 for padding, length == capacity
+    pub weights: Vec<f32>,
+    pub truncated: usize,
+}
+
+/// Poisson subsampler over a dataset of `n` examples.
+pub struct PoissonSampler {
+    pub n: usize,
+    pub rate: f64,
+    pub capacity: usize,
+}
+
+impl PoissonSampler {
+    pub fn new(n: usize, rate: f64, capacity: usize) -> Self {
+        assert!(n > 0 && rate > 0.0 && rate <= 1.0 && capacity > 0);
+        PoissonSampler { n, rate, capacity }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> Batch {
+        let mut idx = Vec::new();
+        for i in 0..self.n {
+            if rng.uniform() < self.rate {
+                idx.push(i);
+            }
+        }
+        let truncated = idx.len().saturating_sub(self.capacity);
+        if truncated > 0 {
+            // drop a uniform subset to stay unbiased-ish under truncation
+            rng.shuffle(&mut idx);
+            idx.truncate(self.capacity);
+        }
+        let mut weights = vec![0f32; self.capacity];
+        for w in weights.iter_mut().take(idx.len()) {
+            *w = 1.0;
+        }
+        Batch { indices: idx, weights, truncated }
+    }
+}
+
+/// Epoch-shuffled fixed-size batches (non-private training / eval).
+pub struct ShuffleSampler {
+    order: Vec<usize>,
+    pos: usize,
+    pub batch: usize,
+}
+
+impl ShuffleSampler {
+    pub fn new(n: usize, batch: usize, rng: &mut Rng) -> Self {
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        ShuffleSampler { order, pos: 0, batch }
+    }
+
+    /// Next batch; reshuffles at epoch end. Always returns `batch` indices
+    /// (wrapping), with weight 1 everywhere.
+    pub fn sample(&mut self, rng: &mut Rng) -> Batch {
+        let mut idx = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            if self.pos >= self.order.len() {
+                rng.shuffle(&mut self.order);
+                self.pos = 0;
+            }
+            idx.push(self.order[self.pos]);
+            self.pos += 1;
+        }
+        Batch { weights: vec![1.0; idx.len()], indices: idx, truncated: 0 }
+    }
+}
+
+/// Sequential batches for evaluation, final batch padded with weight 0.
+pub struct EvalIter {
+    n: usize,
+    pos: usize,
+    batch: usize,
+}
+
+impl EvalIter {
+    pub fn new(n: usize, batch: usize) -> Self {
+        EvalIter { n, pos: 0, batch }
+    }
+}
+
+impl Iterator for EvalIter {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        if self.pos >= self.n {
+            return None;
+        }
+        let mut idx = Vec::with_capacity(self.batch);
+        let mut weights = vec![0f32; self.batch];
+        for k in 0..self.batch {
+            if self.pos < self.n {
+                idx.push(self.pos);
+                weights[k] = 1.0;
+                self.pos += 1;
+            } else {
+                idx.push(0); // pad with example 0, weight 0
+            }
+        }
+        Some(Batch { indices: idx, weights, truncated: 0 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_batch_size() {
+        let s = PoissonSampler::new(1000, 0.05, 200);
+        let mut rng = Rng::seeded(1);
+        let mut total = 0usize;
+        for _ in 0..200 {
+            total += s.sample(&mut rng).indices.len();
+        }
+        let mean = total as f64 / 200.0;
+        assert!((mean - 50.0).abs() < 5.0, "mean {mean}");
+    }
+
+    #[test]
+    fn poisson_weights_match_indices() {
+        let s = PoissonSampler::new(100, 0.1, 32);
+        let mut rng = Rng::seeded(2);
+        let b = s.sample(&mut rng);
+        let live = b.weights.iter().filter(|&&w| w == 1.0).count();
+        assert_eq!(live, b.indices.len());
+        assert!(b.indices.len() <= 32);
+    }
+
+    #[test]
+    fn poisson_truncates_at_capacity() {
+        let s = PoissonSampler::new(100, 1.0, 10);
+        let mut rng = Rng::seeded(3);
+        let b = s.sample(&mut rng);
+        assert_eq!(b.indices.len(), 10);
+        assert_eq!(b.truncated, 90);
+    }
+
+    #[test]
+    fn shuffle_covers_everything_each_epoch() {
+        let mut rng = Rng::seeded(4);
+        let mut s = ShuffleSampler::new(10, 5, &mut rng);
+        let mut seen = vec![false; 10];
+        for _ in 0..2 {
+            for i in s.sample(&mut rng).indices {
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn eval_iter_covers_exactly_once_with_padding() {
+        let mut count = 0.0;
+        let mut batches = 0;
+        for b in EvalIter::new(10, 4) {
+            count += b.weights.iter().sum::<f32>();
+            batches += 1;
+            assert_eq!(b.indices.len(), 4);
+        }
+        assert_eq!(count, 10.0);
+        assert_eq!(batches, 3);
+    }
+}

@@ -1,0 +1,446 @@
+//! Single-device DP training loop — Algorithm 1 of the paper.
+//!
+//! The compiled L2 step executable performs the fused
+//! backprop+clip (lines 7-12); this module owns everything else: privacy
+//! accounting (line 2-4), Poisson sampling (line 6), noise allocation and
+//! the parameter update (lines 13-14), and private quantile estimation
+//! (lines 15-18).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::Dataset;
+use crate::runtime::{ConfigManifest, Exec, HostValue, Runtime, Tensor};
+
+use super::accountant::{self, PrivacyPlan};
+use super::noise::{add_noise, Allocation, Rng};
+use super::optimizer::{Optimizer, OptimizerKind, Schedule};
+use super::quantile::QuantileEstimator;
+use super::sampler::PoissonSampler;
+
+/// Which clipping scheme drives the step (paper sections 2-3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    NonPrivate,
+    FlatFixed,
+    FlatAdaptive,
+    PerLayerFixed,
+    PerLayerAdaptive,
+    /// flat via double-backward (efficiency baseline; same math as Flat*)
+    Ghost,
+    /// flat via materialized per-example grads (efficiency baseline)
+    Naive,
+}
+
+impl Method {
+    pub fn entry(&self) -> &'static str {
+        match self {
+            Method::NonPrivate => "nonprivate",
+            Method::FlatFixed | Method::FlatAdaptive => "dp_flat",
+            Method::PerLayerFixed | Method::PerLayerAdaptive => "dp_perlayer",
+            Method::Ghost => "dp_ghost",
+            Method::Naive => "dp_naive",
+        }
+    }
+
+    pub fn per_layer(&self) -> bool {
+        matches!(self, Method::PerLayerFixed | Method::PerLayerAdaptive)
+    }
+
+    pub fn adaptive(&self) -> bool {
+        matches!(self, Method::FlatAdaptive | Method::PerLayerAdaptive)
+    }
+
+    pub fn private(&self) -> bool {
+        !matches!(self, Method::NonPrivate)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::NonPrivate => "non-private",
+            Method::FlatFixed => "fixed flat",
+            Method::FlatAdaptive => "adaptive flat",
+            Method::PerLayerFixed => "fixed per-layer",
+            Method::PerLayerAdaptive => "adaptive per-layer",
+            Method::Ghost => "ghost",
+            Method::Naive => "naive flat",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainOpts {
+    pub method: Method,
+    pub epsilon: f64,
+    pub delta: f64,
+    pub epochs: f64,
+    /// expected (Poisson) batch size; must be <= the config's static B.
+    pub expected_batch: usize,
+    pub lr: f64,
+    pub optimizer: OptimizerKind,
+    pub weight_decay: f64,
+    pub lr_decay: bool,
+    /// initial *global-equivalent* clipping threshold C (per-layer methods
+    /// start each group at C/sqrt(K), the paper's A.1 convention).
+    pub clip_init: f64,
+    /// target gradient-norm quantile for adaptive methods
+    pub target_q: f64,
+    /// budget fraction for quantile estimation (paper: 0.01-0.1)
+    pub quantile_r: f64,
+    /// quantile learning rate eta (paper: 0.3)
+    pub quantile_eta: f64,
+    pub allocation: Allocation,
+    /// Appendix A.1 convention: after each adaptive update, rescale the
+    /// per-layer thresholds so their global-equivalent norm stays at
+    /// `clip_init` (C~_k = C * C_k / sqrt(sum C_k^2)). Keeps the *relative*
+    /// structure the quantiles learned while pinning total sensitivity, so
+    /// adaptive runs are comparable to flat runs at the same C.
+    pub rescale_global: bool,
+    pub seed: u64,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts {
+            method: Method::PerLayerAdaptive,
+            epsilon: 3.0,
+            delta: 1e-5,
+            epochs: 3.0,
+            expected_batch: 0,
+            lr: 0.5,
+            optimizer: OptimizerKind::Sgd { momentum: 0.0 },
+            weight_decay: 0.0,
+            lr_decay: false,
+            clip_init: 1.0,
+            target_q: 0.5,
+            quantile_r: 0.01,
+            quantile_eta: 0.3,
+            allocation: Allocation::Global,
+            rescale_global: true,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    pub step: u64,
+    pub loss: f64,
+    pub batch_size: usize,
+    /// fraction of examples whose norm was clipped, per group
+    pub clip_frac: Vec<f64>,
+    /// mean per-example norm per group (diagnostic, Figure 2/4)
+    pub mean_norms: Vec<f64>,
+}
+
+pub struct Trainer<'r> {
+    pub runtime: &'r Runtime,
+    pub config_name: String,
+    pub cfg: ConfigManifest,
+    pub opts: TrainOpts,
+    pub plan: Option<PrivacyPlan>,
+    pub params: Vec<Tensor>,
+    exec: Arc<Exec>,
+    eval_exec: Arc<Exec>,
+    pub quantiles: QuantileEstimator,
+    optimizer: Optimizer,
+    sampler: PoissonSampler,
+    rng: Rng,
+    expected_batch: f64,
+    trainable_idx: Vec<usize>,
+    group_of_trainable: Vec<usize>,
+    pub total_steps: u64,
+    pub step_count: u64,
+    /// when set, per-step [B,K] norms are appended here (Figure 2/4 dumps)
+    pub collect_norms: Option<Vec<Vec<f32>>>,
+}
+
+impl<'r> Trainer<'r> {
+    pub fn new(
+        runtime: &'r Runtime,
+        config_name: &str,
+        n_data: usize,
+        opts: TrainOpts,
+    ) -> Result<Self> {
+        let cfg = runtime.manifest.config(config_name)?.clone();
+        let b_static = cfg.batch;
+        let expected_batch = if opts.expected_batch == 0 {
+            ((b_static as f64) * 0.8).round() as usize
+        } else {
+            opts.expected_batch
+        };
+        if expected_batch > b_static {
+            return Err(anyhow!(
+                "expected batch {} exceeds compiled batch {}",
+                expected_batch,
+                b_static
+            ));
+        }
+        let rate = (expected_batch as f64 / n_data as f64).min(1.0);
+        let total_steps = ((opts.epochs * n_data as f64) / expected_batch as f64).ceil() as u64;
+        let k = if opts.method.per_layer() { cfg.groups.len() } else { 1 };
+
+        let plan = if opts.method.private() {
+            let r = if opts.method.adaptive() { opts.quantile_r } else { 0.0 };
+            Some(accountant::plan(opts.epsilon, opts.delta, rate, total_steps.max(1), r, k))
+        } else {
+            None
+        };
+
+        // thresholds: per-layer starts at C/sqrt(K) per group (A.1)
+        let init = if opts.method.per_layer() {
+            vec![opts.clip_init / (cfg.groups.len() as f64).sqrt(); cfg.groups.len()]
+        } else {
+            vec![opts.clip_init]
+        };
+        let quantiles = if opts.method.adaptive() {
+            QuantileEstimator::adaptive(
+                init,
+                opts.target_q,
+                opts.quantile_eta,
+                plan.map(|p| p.sigma_quantile).unwrap_or(0.0),
+                expected_batch as f64,
+            )
+        } else {
+            QuantileEstimator::fixed(init)
+        };
+
+        let exec = runtime.load(config_name, opts.method.entry())?;
+        let eval_exec = runtime.load(config_name, "eval")?;
+        let params = runtime.init_params(config_name)?;
+
+        let schedule = if opts.lr_decay {
+            Schedule::linear(opts.lr, total_steps / 20, total_steps)
+        } else {
+            Schedule::constant(opts.lr)
+        };
+        let trainable_idx: Vec<usize> = cfg
+            .params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.trainable)
+            .map(|(i, _)| i)
+            .collect();
+        let gidx = cfg.group_index();
+        let group_of_trainable: Vec<usize> = cfg
+            .params
+            .iter()
+            .filter(|p| p.trainable)
+            .map(|p| gidx[p.group.as_str()])
+            .collect();
+        let tr_params: Vec<Tensor> =
+            trainable_idx.iter().map(|&i| params[i].clone()).collect();
+        let optimizer = Optimizer::new(opts.optimizer, schedule, opts.weight_decay, &tr_params);
+
+        Ok(Trainer {
+            runtime,
+            config_name: config_name.to_string(),
+            opts: opts.clone(),
+            plan,
+            params,
+            exec,
+            eval_exec,
+            quantiles,
+            optimizer,
+            sampler: PoissonSampler::new(n_data, rate, b_static),
+            rng: Rng::seeded(opts.seed),
+            expected_batch: expected_batch as f64,
+            trainable_idx,
+            group_of_trainable,
+            total_steps,
+            step_count: 0,
+            collect_norms: None,
+            cfg,
+        })
+    }
+
+    /// Replace parameters (e.g. load a pretrained checkpoint for the
+    /// fine-tuning experiments).
+    pub fn set_params(&mut self, params: Vec<Tensor>) -> Result<()> {
+        if params.len() != self.params.len() {
+            return Err(anyhow!("param count mismatch"));
+        }
+        self.params = params;
+        Ok(())
+    }
+
+    pub fn groups(&self) -> &[String] {
+        &self.cfg.groups
+    }
+
+    /// Effective noise stds per group at the current thresholds.
+    pub fn noise_stds(&self) -> Vec<f64> {
+        match (&self.plan, self.opts.method.per_layer()) {
+            (Some(p), true) => {
+                self.opts.allocation.stds(p.sigma_grad, &self.quantiles.thresholds, &self.cfg.group_dims)
+            }
+            (Some(p), false) => vec![p.sigma_grad * self.quantiles.thresholds[0]],
+            (None, _) => vec![0.0],
+        }
+    }
+
+    /// One Algorithm-1 iteration over a fresh Poisson batch.
+    pub fn step(&mut self, data: &dyn Dataset) -> Result<StepStats> {
+        let batch = self.sampler.sample(&mut self.rng);
+        let mut indices = batch.indices.clone();
+        // pad to capacity with index 0 (weight 0)
+        while indices.len() < self.sampler.capacity {
+            indices.push(0);
+        }
+        let mb = data.batch(&indices);
+        let (x, y) = mb.inputs();
+        let live = batch.weights.iter().filter(|&&w| w > 0.0).count();
+
+        let extras: Vec<HostValue> = match self.opts.method {
+            Method::NonPrivate => vec![x, y],
+            m if m.per_layer() => vec![
+                x,
+                y,
+                HostValue::F32(Tensor::from_vec(
+                    &[self.quantiles.k()],
+                    self.quantiles.thresholds.iter().map(|&c| c as f32).collect(),
+                )?),
+                HostValue::F32(Tensor::from_vec(&[batch.weights.len()], batch.weights.clone())?),
+            ],
+            _ => vec![
+                x,
+                y,
+                HostValue::F32(Tensor::scalar(self.quantiles.thresholds[0] as f32)),
+                HostValue::F32(Tensor::from_vec(&[batch.weights.len()], batch.weights.clone())?),
+            ],
+        };
+
+        let outs = self.exec.call(&self.params, &extras)?;
+        let loss = outs[0].data[0] as f64;
+        let n_tr = self.trainable_idx.len();
+        let mut grads: Vec<Tensor> = outs[1..1 + n_tr].to_vec();
+
+        let k = self.quantiles.k();
+        let mut clip_counts = vec![0f64; k];
+        let mut mean_norms = vec![0f64; k];
+        if self.opts.method.private() {
+            // norms output: [B,K] (per-layer) or [B] (flat-family)
+            let norms = &outs[1 + n_tr];
+            let b = batch.weights.len();
+            for i in 0..b {
+                if batch.weights[i] == 0.0 {
+                    continue;
+                }
+                for g in 0..k {
+                    let v = norms.data[i * k + g] as f64;
+                    mean_norms[g] += v;
+                    if v <= self.quantiles.thresholds[g] {
+                        clip_counts[g] += 1.0;
+                    }
+                }
+            }
+            for m in mean_norms.iter_mut() {
+                *m /= (live.max(1)) as f64;
+            }
+            if let Some(c) = &mut self.collect_norms {
+                c.push(norms.data.clone());
+            }
+
+            // line 13: draw and add noise
+            let stds = self.noise_stds();
+            for (t, &g) in grads.iter_mut().zip(&self.group_of_trainable) {
+                let std = if self.opts.method.per_layer() { stds[g] } else { stds[0] };
+                add_noise(&mut t.data, std, &mut self.rng);
+            }
+            // line 14: normalize by expected batch
+            let inv = 1.0 / self.expected_batch;
+            for t in grads.iter_mut() {
+                for v in t.data.iter_mut() {
+                    *v *= inv as f32;
+                }
+            }
+        }
+
+        // parameter update
+        {
+            let mut refs: Vec<&mut Tensor> = Vec::with_capacity(n_tr);
+            // split borrow: collect raw pointers safely via split_at_mut dance
+            let params = &mut self.params;
+            let mut taken: Vec<*mut Tensor> = Vec::with_capacity(n_tr);
+            for &i in &self.trainable_idx {
+                taken.push(&mut params[i] as *mut Tensor);
+            }
+            unsafe {
+                for p in taken {
+                    refs.push(&mut *p);
+                }
+            }
+            self.optimizer.apply(&mut refs, &grads);
+        }
+
+        // lines 15-18: private quantile update
+        if self.opts.method.adaptive() {
+            self.quantiles.update(&clip_counts, &mut self.rng);
+            if self.opts.rescale_global && self.opts.method.per_layer() {
+                // Appendix A.1: pin the global-equivalent threshold at C
+                let s2: f64 = self.quantiles.thresholds.iter().map(|c| c * c).sum();
+                let scale = self.opts.clip_init / s2.sqrt().max(1e-12);
+                for c in self.quantiles.thresholds.iter_mut() {
+                    *c *= scale;
+                }
+            }
+        }
+
+        self.step_count += 1;
+        let clip_frac = clip_counts
+            .iter()
+            .map(|&c| 1.0 - c / (live.max(1) as f64))
+            .collect();
+        Ok(StepStats {
+            step: self.step_count,
+            loss,
+            batch_size: live,
+            clip_frac,
+            mean_norms,
+        })
+    }
+
+    /// Full-dataset evaluation: (mean loss, accuracy).
+    pub fn evaluate(&self, data: &dyn Dataset) -> Result<(f64, f64)> {
+        let b = self.cfg.batch;
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        let mut weight = 0f64;
+        for batch in super::sampler::EvalIter::new(data.len(), b) {
+            let mb = data.batch(&batch.indices);
+            let (x, y) = mb.inputs();
+            let extras = vec![
+                x,
+                y,
+                HostValue::F32(Tensor::from_vec(&[b], batch.weights.clone())?),
+            ];
+            let outs = self.eval_exec.call(&self.params, &extras)?;
+            loss_sum += outs[0].data[0] as f64;
+            correct += outs[1].data[0] as f64;
+            weight += outs[2].data[0] as f64;
+        }
+        Ok((loss_sum / weight.max(1.0), correct / weight.max(1.0)))
+    }
+
+    /// Train for the planned number of steps; returns per-step stats.
+    pub fn run(&mut self, data: &dyn Dataset, log_every: u64) -> Result<Vec<StepStats>> {
+        let mut hist = Vec::with_capacity(self.total_steps as usize);
+        for s in 0..self.total_steps {
+            let st = self.step(data)?;
+            if log_every > 0 && s % log_every == 0 {
+                eprintln!(
+                    "[{}] step {}/{} loss {:.4} |B|={} clip~{:.2}",
+                    self.opts.method.name(),
+                    s,
+                    self.total_steps,
+                    st.loss,
+                    st.batch_size,
+                    st.clip_frac.first().copied().unwrap_or(0.0),
+                );
+            }
+            hist.push(st);
+        }
+        Ok(hist)
+    }
+}

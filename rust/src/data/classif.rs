@@ -1,0 +1,252 @@
+//! Synthetic classification substrates.
+//!
+//! * [`MixtureImages`] — CIFAR-10 analog for the WideResMLP: 10 Gaussian
+//!   clusters in feature space pushed through a fixed random nonlinearity,
+//!   2% label noise. From-scratch training exhibits the same
+//!   gradient-norm-distribution shift the paper plots in Figure 2.
+//! * [`SentimentCorpus`] — SST-2/GLUE analog for the encoder classifier:
+//!   the label is the majority sentiment of class-indicative tokens mixed
+//!   with neutral filler; task variants change class count / length /
+//!   indicative-token rate (MNLI/QQP/QNLI analogs, Table 3).
+
+use crate::coordinator::noise::Rng;
+use crate::runtime::{IntTensor, Tensor};
+
+use super::{Dataset, ModelBatch};
+
+pub struct MixtureImages {
+    pub x: Vec<Vec<f32>>, // [n][features]
+    pub y: Vec<i32>,
+    pub features: usize,
+    pub classes: usize,
+}
+
+impl MixtureImages {
+    /// `task_seed` fixes the class structure (cluster means); `sample_seed`
+    /// draws the examples. Train/test splits share the task seed.
+    pub fn with_seeds(n: usize, features: usize, classes: usize, task_seed: u64, sample_seed: u64) -> Self {
+        Self::with_spread(n, features, classes, task_seed, sample_seed, 1.2)
+    }
+
+    /// `spread` scales class-mean separation: smaller = harder task (more
+    /// class overlap, lower accuracy ceiling) — used by the Table 1/2
+    /// harnesses so clipping-scheme differences are visible above the
+    /// ceiling.
+    pub fn with_spread(n: usize, features: usize, classes: usize, task_seed: u64,
+                       sample_seed: u64, spread: f32) -> Self {
+        let mut task_rng = Rng::seeded(task_seed);
+        // class means on a scaled simplex + per-class random direction
+        let means: Vec<Vec<f32>> = (0..classes)
+            .map(|_| (0..features).map(|_| spread * task_rng.gauss() as f32).collect())
+            .collect();
+        let mut rng = Rng::seeded(sample_seed.wrapping_add(0x9E37));
+        let mut x = Vec::with_capacity(n);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = rng.gen_range(classes);
+            let mut v: Vec<f32> = (0..features)
+                .map(|j| means[c][j] + rng.gauss() as f32)
+                .collect();
+            // fixed nonlinearity so the task is not linearly separable
+            for j in 0..features {
+                let a = v[j];
+                let b = v[(j + 1) % features];
+                v[j] = a + 0.3 * (a * b).tanh();
+            }
+            let label = if rng.uniform() < 0.02 { rng.gen_range(classes) } else { c };
+            x.push(v);
+            y.push(label as i32);
+        }
+        MixtureImages { x, y, features, classes }
+    }
+
+    /// Single-seed constructor: task structure from seed 0xC1FA, samples
+    /// from `sample_seed` — all instances are views of the same task.
+    pub fn new(n: usize, features: usize, classes: usize, sample_seed: u64) -> Self {
+        Self::with_seeds(n, features, classes, 0xC1FA, sample_seed)
+    }
+}
+
+impl Dataset for MixtureImages {
+    fn len(&self) -> usize {
+        self.x.len()
+    }
+
+    fn batch(&self, indices: &[usize]) -> ModelBatch {
+        let b = indices.len();
+        let mut xs = Vec::with_capacity(b * self.features);
+        let mut ys = Vec::with_capacity(b);
+        for &i in indices {
+            xs.extend_from_slice(&self.x[i]);
+            ys.push(self.y[i]);
+        }
+        ModelBatch::Feat {
+            x: Tensor::from_vec(&[b, self.features], xs).unwrap(),
+            y: IntTensor::from_vec(&[b], ys).unwrap(),
+        }
+    }
+}
+
+/// Task flavors for the GLUE-analog suite (Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TextTask {
+    Sst2,
+    Qnli,
+    Qqp,
+    MnliLike,
+}
+
+impl TextTask {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TextTask::Sst2 => "SST-2",
+            TextTask::Qnli => "QNLI",
+            TextTask::Qqp => "QQP",
+            TextTask::MnliLike => "MNLI",
+        }
+    }
+
+    fn classes(&self) -> usize {
+        match self {
+            TextTask::MnliLike => 3,
+            _ => 2,
+        }
+    }
+
+    fn indicative_rate(&self) -> f64 {
+        match self {
+            TextTask::Sst2 => 0.30,
+            TextTask::Qnli => 0.22,
+            TextTask::Qqp => 0.18,
+            TextTask::MnliLike => 0.25,
+        }
+    }
+}
+
+pub struct SentimentCorpus {
+    pub tokens: Vec<Vec<i32>>,
+    pub labels: Vec<i32>,
+    pub seq: usize,
+    pub vocab: usize,
+    pub classes: usize,
+}
+
+impl SentimentCorpus {
+    pub fn new(task: TextTask, n: usize, seq: usize, vocab: usize, seed: u64) -> Self {
+        let classes = task.classes();
+        let mut rng = Rng::seeded(seed);
+        // vocab split: class c owns tokens with tok % (classes+1) == c;
+        // remainder (== classes) is neutral filler.
+        let rate = task.indicative_rate();
+        let mut tokens = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = rng.gen_range(classes);
+            let mut s = Vec::with_capacity(seq);
+            for _ in 0..seq {
+                if rng.uniform() < rate {
+                    // indicative token of the true class (sometimes a decoy)
+                    let cls = if rng.uniform() < 0.85 { c } else { rng.gen_range(classes) };
+                    let mut t = rng.gen_range(vocab);
+                    t = t - (t % (classes + 1)) + cls;
+                    s.push((t % vocab) as i32);
+                } else {
+                    let mut t = rng.gen_range(vocab);
+                    t = t - (t % (classes + 1)) + classes; // neutral
+                    s.push((t % vocab) as i32);
+                }
+            }
+            tokens.push(s);
+            labels.push(c as i32);
+        }
+        SentimentCorpus { tokens, labels, seq, vocab, classes }
+    }
+}
+
+impl Dataset for SentimentCorpus {
+    fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    fn batch(&self, indices: &[usize]) -> ModelBatch {
+        let b = indices.len();
+        let mut xs = Vec::with_capacity(b * self.seq);
+        let mut ys = Vec::with_capacity(b);
+        for &i in indices {
+            xs.extend_from_slice(&self.tokens[i]);
+            ys.push(self.labels[i]);
+        }
+        ModelBatch::Cls {
+            x: IntTensor::from_vec(&[b, self.seq], xs).unwrap(),
+            y: IntTensor::from_vec(&[b], ys).unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixture_is_deterministic_and_bounded() {
+        let a = MixtureImages::new(50, 16, 10, 9);
+        let b = MixtureImages::new(50, 16, 10, 9);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.x[3], b.x[3]);
+        assert!(a.y.iter().all(|&l| (0..10).contains(&(l as usize))));
+    }
+
+    #[test]
+    fn mixture_classes_are_separated() {
+        // nearest-class-mean classifier must beat chance comfortably
+        let d = MixtureImages::new(500, 16, 4, 11);
+        let mut means = vec![vec![0f64; 16]; 4];
+        let mut counts = vec![0f64; 4];
+        for (v, &l) in d.x.iter().zip(&d.y) {
+            counts[l as usize] += 1.0;
+            for j in 0..16 {
+                means[l as usize][j] += v[j] as f64;
+            }
+        }
+        for c in 0..4 {
+            for j in 0..16 {
+                means[c][j] /= counts[c].max(1.0);
+            }
+        }
+        let mut correct = 0;
+        for (v, &l) in d.x.iter().zip(&d.y) {
+            let best = (0..4)
+                .min_by(|&a, &b| {
+                    let da: f64 = (0..16).map(|j| (v[j] as f64 - means[a][j]).powi(2)).sum();
+                    let db: f64 = (0..16).map(|j| (v[j] as f64 - means[b][j]).powi(2)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best as i32 == l {
+                correct += 1;
+            }
+        }
+        assert!(correct > 350, "nearest-mean acc {correct}/500");
+    }
+
+    #[test]
+    fn sentiment_labels_recoverable_by_counting() {
+        let d = SentimentCorpus::new(TextTask::Sst2, 300, 32, 400, 5);
+        let mut correct = 0;
+        for (s, &l) in d.tokens.iter().zip(&d.labels) {
+            let c0 = s.iter().filter(|&&t| t % 3 == 0).count();
+            let c1 = s.iter().filter(|&&t| t % 3 == 1).count();
+            if (c1 > c0) as i32 == l {
+                correct += 1;
+            }
+        }
+        assert!(correct > 240, "counting acc {correct}/300");
+    }
+
+    #[test]
+    fn mnli_has_three_classes() {
+        let d = SentimentCorpus::new(TextTask::MnliLike, 100, 16, 400, 6);
+        assert_eq!(d.classes, 3);
+        assert!(d.labels.iter().any(|&l| l == 2));
+    }
+}

@@ -1,0 +1,40 @@
+//! Synthetic data substrates replacing the paper's gated datasets
+//! (CIFAR-10, GLUE, E2E/DART, SAMSum) — see DESIGN.md section 3 for the
+//! substitution rationale. Each generator is seeded and deterministic.
+
+pub mod classif;
+pub mod lm;
+
+use crate::runtime::{IntTensor, Tensor};
+
+/// A batch of model inputs assembled from dataset indices.
+#[derive(Debug, Clone)]
+pub enum ModelBatch {
+    /// LM: tokens [B,T], targets [B,T]
+    Lm { x: IntTensor, y: IntTensor },
+    /// token classifier: tokens [B,T], labels [B]
+    Cls { x: IntTensor, y: IntTensor },
+    /// feature classifier: x [B,P], labels [B]
+    Feat { x: Tensor, y: IntTensor },
+}
+
+impl ModelBatch {
+    pub fn inputs(&self) -> (crate::runtime::HostValue, crate::runtime::HostValue) {
+        use crate::runtime::HostValue as H;
+        match self {
+            ModelBatch::Lm { x, y } => (H::I32(x.clone()), H::I32(y.clone())),
+            ModelBatch::Cls { x, y } => (H::I32(x.clone()), H::I32(y.clone())),
+            ModelBatch::Feat { x, y } => (H::F32(x.clone()), H::I32(y.clone())),
+        }
+    }
+}
+
+/// Common dataset interface consumed by the trainer.
+pub trait Dataset: Send + Sync {
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Assemble a batch for `indices` (len == static batch B of the config).
+    fn batch(&self, indices: &[usize]) -> ModelBatch;
+}

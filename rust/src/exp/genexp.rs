@@ -1,0 +1,133 @@
+//! Generation experiments: Table 5 (E2E/DART analog with the GPT-2-analog
+//! LM) and greedy decoding + BLEU/ROUGE-L scoring shared with Table 6.
+
+use anyhow::Result;
+
+use crate::coordinator::{Method, Trainer};
+use crate::data::Dataset;
+use crate::data::lm::TableToTextCorpus;
+use crate::metrics::bleu::{corpus_bleu, rouge_l};
+use crate::metrics::{fmt_f, MdTable};
+use crate::runtime::{Exec, HostValue, IntTensor, Runtime, Tensor};
+
+use super::harness::Scale;
+use super::tables::text_opts;
+
+/// Greedy-decode continuations with a full-sequence `logits` entry.
+/// `prefixes` are ragged; each is completed to `seq` tokens. Returns the
+/// generated suffixes (excluding the prefix).
+pub fn greedy_decode(
+    exec: &Exec,
+    params: &[Tensor],
+    prefixes: &[Vec<i32>],
+    batch: usize,
+    seq: usize,
+) -> Result<Vec<Vec<i32>>> {
+    let mut out = Vec::with_capacity(prefixes.len());
+    for chunk in prefixes.chunks(batch) {
+        // working buffer [batch, seq]
+        let mut toks = vec![0i32; batch * seq];
+        let mut cur: Vec<usize> = Vec::with_capacity(chunk.len());
+        for (i, p) in chunk.iter().enumerate() {
+            let l = p.len().min(seq);
+            toks[i * seq..i * seq + l].copy_from_slice(&p[..l]);
+            cur.push(l);
+        }
+        let max_cur = seq;
+        while cur.iter().any(|&c| c < max_cur) {
+            let x = IntTensor::from_vec(&[batch, seq], toks.clone())?;
+            let outs = exec.call(params, &[HostValue::I32(x)])?;
+            let logits = &outs[0]; // [B, T, V]
+            let v = logits.shape[2];
+            for (i, c) in cur.iter_mut().enumerate() {
+                if *c >= max_cur || i >= chunk.len() {
+                    continue;
+                }
+                let off = (i * seq + (*c - 1)) * v;
+                let row = &logits.data[off..off + v];
+                let mut best = 0usize;
+                for (j, &val) in row.iter().enumerate() {
+                    if val > row[best] {
+                        best = j;
+                    }
+                }
+                toks[i * seq + *c] = best as i32;
+                *c += 1;
+            }
+        }
+        for (i, p) in chunk.iter().enumerate() {
+            out.push(toks[i * seq + p.len()..(i + 1) * seq].to_vec());
+        }
+    }
+    Ok(out)
+}
+
+/// Decode + score a fine-tuned LM on the table-to-text eval set.
+fn score_generation(
+    rt: &Runtime,
+    config: &str,
+    params: &[Tensor],
+    eval: &TableToTextCorpus,
+    n_eval: usize,
+) -> Result<(f64, f64)> {
+    let cfg = rt.manifest.config(config)?;
+    let exec = rt.load(config, "logits")?;
+    let prefixes: Vec<Vec<i32>> = (0..n_eval).map(|i| eval.prefix(i).to_vec()).collect();
+    let hyps = greedy_decode(&exec, params, &prefixes, cfg.batch, cfg.hyper.seq)?;
+    let refs: Vec<Vec<i32>> = (0..n_eval)
+        .map(|i| {
+            let r = eval.reference_suffix(i);
+            r[..r.len().min(cfg.hyper.seq - eval.prefix_len)].to_vec()
+        })
+        .collect();
+    Ok((100.0 * corpus_bleu(&hyps, &refs, 4), 100.0 * rouge_l(&hyps, &refs)))
+}
+
+/// Table 5: adaptive per-layer vs flat on the E2E/DART analog (full
+/// fine-tuning of the GPT-2-analog LM), BLEU / ROUGE-L / NLL.
+pub fn table5(rt: &Runtime, scale: Scale) -> Result<()> {
+    let config = "lm_small";
+    let cfg = rt.manifest.config(config)?.clone();
+    let n = scale.data / 2;
+    let train = TableToTextCorpus::new(n, cfg.hyper.seq, cfg.hyper.vocab, 3, 0);
+    let eval = TableToTextCorpus::new(160, cfg.hyper.seq, cfg.hyper.vocab, 3, 999);
+    let n_eval = 64.min(eval.len());
+
+    let mut t = MdTable::new(&["DP guarantee", "Method", "eval NLL", "BLEU", "ROUGE-L"]);
+    let runs: Vec<(String, Method, f64)> = vec![
+        ("eps = 3".into(), Method::PerLayerAdaptive, 3.0),
+        ("eps = 3".into(), Method::FlatFixed, 3.0),
+        ("eps = 8".into(), Method::PerLayerAdaptive, 8.0),
+        ("eps = 8".into(), Method::FlatFixed, 8.0),
+        ("non-private".into(), Method::NonPrivate, 0.0),
+    ];
+    let pre = super::pipexp::pretrain_base(rt, config, 2.0)?;
+    for (label, method, eps) in runs {
+        let mut opts = text_opts(method, eps.max(1.0), scale.epochs, 0);
+        opts.lr = 2e-3;
+        opts.clip_init = 0.1;
+        opts.target_q = 0.5;
+        if method == Method::NonPrivate {
+            opts.lr = 1e-3;
+        }
+        let mut tr = Trainer::new(rt, config, train.len(), opts)?;
+        tr.set_params(crate::runtime::params_from_map(&cfg, &pre)?)?;
+        tr.run(&train, 0)?;
+        let (nll, _) = tr.evaluate(&eval)?;
+        let (bleu, rl) = score_generation(rt, config, &tr.params, &eval, n_eval)?;
+        t.row(&[
+            label.clone(),
+            method.name().to_string(),
+            fmt_f(nll, 3),
+            fmt_f(bleu, 1),
+            fmt_f(rl, 1),
+        ]);
+        eprintln!("[table5] {label} {} nll {:.3} bleu {:.1} rouge {:.1}", method.name(), nll, bleu, rl);
+    }
+    t.save(
+        "results/table5.md",
+        "Table 5: E2E/DART analog — adaptive per-layer matches flat clipping at equal epochs",
+    )?;
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Shared helpers for the table/figure runners.
+
+use anyhow::Result;
+
+use crate::coordinator::{Method, TrainOpts, Trainer};
+use crate::data::Dataset;
+use crate::runtime::Runtime;
+
+/// Scale knob: default configs are CPU-budget sized; `--paper-scale`
+/// raises epochs / dataset sizes toward the paper's.
+#[derive(Debug, Clone, Copy)]
+pub struct Scale {
+    pub data: usize,
+    pub epochs: f64,
+    pub seeds: usize,
+}
+
+impl Scale {
+    pub fn quick() -> Self {
+        Scale { data: 2048, epochs: 3.0, seeds: 1 }
+    }
+
+    pub fn paper() -> Self {
+        Scale { data: 8192, epochs: 10.0, seeds: 3 }
+    }
+}
+
+/// Train with `opts` on `data`, return (final train-ema loss, eval acc).
+pub fn train_eval(
+    rt: &Runtime,
+    config: &str,
+    data: &dyn Dataset,
+    eval_data: &dyn Dataset,
+    opts: TrainOpts,
+) -> Result<(f64, f64)> {
+    let mut tr = Trainer::new(rt, config, data.len(), opts)?;
+    let hist = tr.run(data, 0)?;
+    let tail = hist.iter().rev().take(20).map(|s| s.loss).sum::<f64>()
+        / hist.len().min(20).max(1) as f64;
+    let (_, acc) = tr.evaluate(eval_data)?;
+    Ok((tail, acc))
+}
+
+/// Mean and std over seeds of a per-seed experiment.
+pub fn over_seeds<F: FnMut(u64) -> Result<f64>>(seeds: usize, mut f: F) -> Result<(f64, f64)> {
+    let mut vals = Vec::with_capacity(seeds);
+    for s in 0..seeds {
+        vals.push(f(s as u64)?);
+    }
+    let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+    let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / vals.len() as f64;
+    Ok((mean, var.sqrt()))
+}
+
+/// Convenience: default TrainOpts for a method at a given epsilon.
+pub fn opts_for(method: Method, epsilon: f64, epochs: f64, seed: u64) -> TrainOpts {
+    TrainOpts { method, epsilon, epochs, seed, ..Default::default() }
+}

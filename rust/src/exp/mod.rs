@@ -1,0 +1,52 @@
+//! Experiment harness: one runner per paper table/figure (DESIGN.md §6).
+//! `gwclip exp <name>` writes results/<name>.md (+ CSV series where the
+//! paper plots curves).
+
+pub mod figures;
+pub mod genexp;
+pub mod harness;
+pub mod pipexp;
+pub mod tables;
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+
+use harness::Scale;
+
+/// Dispatch an experiment by name ("table1".."table11", "fig1".."fig7",
+/// "pipeline-overhead", "accountant", or "all").
+pub fn run(rt: &Runtime, which: &str, paper_scale: bool) -> Result<()> {
+    let scale = if paper_scale { Scale::paper() } else { Scale::quick() };
+    std::fs::create_dir_all("results")?;
+    match which {
+        "table1" => tables::table1(rt, scale),
+        "table2" => tables::table2(rt, scale),
+        "table3" => tables::table3(rt, scale),
+        "table4" => tables::table4(rt, scale),
+        "table5" => genexp::table5(rt, scale),
+        "table6" => pipexp::table6(rt, scale),
+        "table10" => tables::table10(rt, scale),
+        "table11" => tables::table11(rt, scale),
+        "fig1" => figures::fig1(rt, scale),
+        "fig2" => figures::fig2(rt, scale),
+        "fig3" => figures::fig3(rt, scale),
+        "fig5" => figures::fig5(rt, scale),
+        "fig6" => figures::fig6(rt, scale),
+        "fig7" => figures::fig7(rt, scale),
+        "pipeline-overhead" => pipexp::pipeline_overhead(rt, scale),
+        "accountant" => pipexp::accountant_table(rt, scale),
+        "all" => {
+            for name in [
+                "accountant", "fig1", "pipeline-overhead", "table1", "table2",
+                "fig3", "fig2", "table6", "table5", "table11", "table3",
+                "table4", "table10", "fig5", "fig6", "fig7",
+            ] {
+                eprintln!("==== exp {name} ====");
+                run(rt, name, paper_scale)?;
+            }
+            Ok(())
+        }
+        _ => anyhow::bail!("unknown experiment '{which}' (see gwclip --help)"),
+    }
+}

@@ -1,0 +1,271 @@
+//! Pipeline experiments: Table 6 (GPT-3-analog DP-LoRA fine-tuning with
+//! per-device clipping) and the section-4 scheduling-overhead comparison.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::coordinator::accountant;
+use crate::coordinator::{Method, Trainer};
+use crate::data::lm::{DialogSumCorpus, MarkovCorpus};
+use crate::data::Dataset;
+use crate::metrics::bleu::{corpus_bleu, rouge_l};
+use crate::metrics::{fmt_f, MdTable};
+use crate::pipeline::{merge_lora, PipelineEngine, PipelineMode, PipelineOpts};
+use crate::runtime::{checkpoint, HostValue, IntTensor, Runtime, Tensor};
+
+use super::harness::Scale;
+use super::tables::text_opts;
+
+/// Pretrain the GPT-3-analog base LM non-privately (single device, full
+/// model) and cache the checkpoint under results/. Returns the param map.
+pub fn pretrain_base(
+    rt: &Runtime,
+    config: &str,
+    steps_budget: f64,
+) -> Result<HashMap<String, Tensor>> {
+    let path = format!("results/pretrained_{config}.bin");
+    if let Ok(map) = checkpoint::read(&path) {
+        eprintln!("[pretrain] reusing {path}");
+        return Ok(map);
+    }
+    let cfg = rt.manifest.config(config)?.clone();
+    let data = MarkovCorpus::new(2048, cfg.hyper.seq, cfg.hyper.vocab, 4, 7);
+    let mut opts = text_opts(Method::NonPrivate, 0.0, steps_budget, 0);
+    opts.lr = 2e-3;
+    opts.expected_batch = cfg.batch;
+    let mut tr = Trainer::new(rt, config, data.len(), opts)?;
+    tr.run(&data, 25)?;
+    let map: HashMap<String, Tensor> = cfg
+        .params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| (p.name.clone(), tr.params[i].clone()))
+        .collect();
+    std::fs::create_dir_all("results")?;
+    let mut items: Vec<(String, &Tensor)> = map.iter().map(|(k, v)| (k.clone(), v)).collect();
+    items.sort_by(|a, b| a.0.cmp(&b.0));
+    checkpoint::write(&path, &items)?;
+    Ok(map)
+}
+
+fn decode_score(
+    rt: &Runtime,
+    base_config: &str,
+    params_map: &HashMap<String, Tensor>,
+    eval: &DialogSumCorpus,
+    n_eval: usize,
+) -> Result<(f64, f64)> {
+    let cfg = rt.manifest.config(base_config)?;
+    let ordered = crate::runtime::params_from_map(cfg, params_map)?;
+    let exec = rt.load(base_config, "logits")?;
+    let prefixes: Vec<Vec<i32>> = (0..n_eval).map(|i| eval.prefix(i).to_vec()).collect();
+    let hyps =
+        super::genexp::greedy_decode(&exec, &ordered, &prefixes, cfg.batch, cfg.hyper.seq)?;
+    let refs: Vec<Vec<i32>> = (0..n_eval)
+        .map(|i| {
+            let r = eval.reference_summary(i);
+            r[..r.len().min(cfg.hyper.seq - eval.prefix(i).len())].to_vec()
+        })
+        .collect();
+    Ok((100.0 * corpus_bleu(&hyps, &refs, 2), 100.0 * rouge_l(&hyps, &refs)))
+}
+
+/// Table 6: SAMSum-analog dialog summarization. Rows:
+///   - GPT-2 analog (lm_small_lora), single device, flat-clipped DP LoRA
+///   - GPT-3 analog (lm_mid_pipe_lora), 4-device pipeline, per-device
+///     clipping DP LoRA (Algorithm 2)
+///   - 0-shot (pretrained base, no fine-tuning)
+/// at eps in {0.25, 1, 4} + non-private.
+pub fn table6(rt: &Runtime, scale: Scale) -> Result<()> {
+    let mut t = MdTable::new(&["Model + method", "eps", "BLEU-2", "ROUGE-L", "eval NLL"]);
+    let n = scale.data / 2;
+    let epss = [0.25, 1.0, 4.0, f64::INFINITY];
+
+    // ---- GPT-2 analog: single-device flat-clipped LoRA -------------------
+    {
+        let config = "lm_small_lora";
+        let base = "lm_small";
+        let cfg = rt.manifest.config(config)?.clone();
+        let pre = pretrain_base(rt, base, 2.0)?;
+        let train = DialogSumCorpus::new(n, cfg.hyper.seq, cfg.hyper.vocab, 1);
+        let eval = DialogSumCorpus::new(96, cfg.hyper.seq, cfg.hyper.vocab, 991);
+        for &eps in &epss {
+            let method = if eps.is_finite() { Method::FlatFixed } else { Method::NonPrivate };
+            let mut opts = text_opts(method, eps.min(1e6), scale.epochs, 0);
+            opts.lr = 5e-3;
+            opts.clip_init = 1e-2;
+            let mut tr = Trainer::new(rt, config, train.len(), opts)?;
+            // load pretrained base weights under the LoRA param layout
+            let specs = rt.manifest.config(config)?.params.clone();
+            let mut params = tr.params.clone();
+            for (i, s) in specs.iter().enumerate() {
+                if let Some(w) = pre.get(&s.name) {
+                    params[i] = w.clone();
+                }
+            }
+            tr.set_params(params)?;
+            tr.run(&train, 0)?;
+            let (nll, _) = tr.evaluate(&eval)?;
+            // merge lora into base and decode
+            let mut merged = pre.clone();
+            let tuned: HashMap<String, Tensor> = specs
+                .iter()
+                .enumerate()
+                .map(|(i, s)| (s.name.clone(), tr.params[i].clone()))
+                .collect();
+            merge_lora(&mut merged, &tuned, cfg.hyper.lora_rank, cfg.hyper.lora_scale)?;
+            let (bleu, rl) = decode_score(rt, base, &merged, &eval, 48)?;
+            let label = if eps.is_finite() { format!("{eps}") } else { "non-private".into() };
+            t.row(&[
+                "GPT-2 analog LoRA (flat clipping)".into(),
+                label.clone(),
+                fmt_f(bleu, 1),
+                fmt_f(rl, 1),
+                fmt_f(nll, 3),
+            ]);
+            eprintln!("[table6] gpt2-analog eps={label} bleu {bleu:.1} rouge {rl:.1} nll {nll:.3}");
+        }
+        // 0-shot row (pretrained, no fine-tune)
+        let (bleu, rl) = decode_score(rt, base, &pre, &eval, 48)?;
+        t.row(&["GPT-2 analog 0-shot".into(), "-".into(), fmt_f(bleu, 1), fmt_f(rl, 1), "-".into()]);
+    }
+
+    // ---- GPT-3 analog: pipeline per-device-clipped LoRA -------------------
+    {
+        let config = "lm_mid_pipe_lora";
+        let base = "lm_mid_pipe";
+        let cfg = rt.manifest.config(config)?.clone();
+        let pre = pretrain_base(rt, base, 2.0)?;
+        let train = DialogSumCorpus::new(n, cfg.hyper.seq, cfg.hyper.vocab, 2);
+        let eval = DialogSumCorpus::new(96, cfg.hyper.seq, cfg.hyper.vocab, 992);
+        for &eps in &epss {
+            let n_micro = 4usize;
+            let minibatch = cfg.batch * n_micro;
+            let steps = ((scale.epochs * n as f64) / minibatch as f64).ceil() as usize;
+            let sigma = if eps.is_finite() {
+                accountant::noise_multiplier(minibatch as f64 / n as f64, steps as u64, eps, 1e-5)
+            } else {
+                0.0
+            };
+            let opts = PipelineOpts {
+                mode: if eps.is_finite() { PipelineMode::PerDevice } else { PipelineMode::NonPrivate },
+                n_micro,
+                clip: 1e-2,
+                sigma,
+                lr: 5e-3,
+                adaptive: false,
+                ..Default::default()
+            };
+            let mut eng = PipelineEngine::new(rt, config, opts)?;
+            eng.load_params(&pre)?;
+            let mut rng = crate::coordinator::noise::Rng::seeded(11);
+            for _ in 0..steps {
+                let idx: Vec<usize> = (0..minibatch).map(|_| rng.gen_range(train.len())).collect();
+                eng.step(&train, &idx)?;
+            }
+            let nll = eng.evaluate(&eval)?;
+            let mut merged = pre.clone();
+            merge_lora(&mut merged, &eng.dump_params(), cfg.hyper.lora_rank, cfg.hyper.lora_scale)?;
+            let (bleu, rl) = decode_score(rt, base, &merged, &eval, 48)?;
+            let label = if eps.is_finite() { format!("{eps}") } else { "non-private".into() };
+            t.row(&[
+                "GPT-3 analog LoRA (per-device clipping, 4-way pipeline)".into(),
+                label.clone(),
+                fmt_f(bleu, 1),
+                fmt_f(rl, 1),
+                fmt_f(nll, 3),
+            ]);
+            eprintln!("[table6] gpt3-analog eps={label} bleu {bleu:.1} rouge {rl:.1} nll {nll:.3}");
+        }
+        let (bleu, rl) = decode_score(rt, base, &pre, &eval, 48)?;
+        t.row(&["GPT-3 analog 0-shot".into(), "-".into(), fmt_f(bleu, 1), fmt_f(rl, 1), "-".into()]);
+    }
+
+    t.save(
+        "results/table6.md",
+        "Table 6: SAMSum analog — DP LoRA via per-device clipping scales to the pipeline-parallel model",
+    )?;
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// Section 4 overhead: per-device clipping vs flat-sync over the pipeline.
+pub fn pipeline_overhead(rt: &Runtime, scale: Scale) -> Result<()> {
+    let config = "lm_mid_pipe_lora";
+    let cfg = rt.manifest.config(config)?.clone();
+    let data = MarkovCorpus::new(1024, cfg.hyper.seq, cfg.hyper.vocab, 4, 3);
+    let steps = if scale.seeds > 1 { 6 } else { 3 };
+    let mut t = MdTable::new(&[
+        "Mode", "sim step (s)", "host step (s)", "syncs/step", "exec calls/step", "rel. sim time",
+    ]);
+    let mut base_sim = 0.0;
+    for mode in [PipelineMode::PerDevice, PipelineMode::FlatSync] {
+        let opts = PipelineOpts { mode, n_micro: 4, sigma: 0.5, clip: 1e-2, ..Default::default() };
+        let mut eng = PipelineEngine::new(rt, config, opts)?;
+        let mb = eng.minibatch();
+        // warmup
+        let idx: Vec<usize> = (0..mb).collect();
+        eng.step(&data, &idx)?;
+        let (mut sim, mut host, mut syncs, mut calls) = (0.0, 0.0, 0usize, 0usize);
+        for s in 0..steps {
+            let idx: Vec<usize> = (0..mb).map(|i| (s * mb + i) % data.len()).collect();
+            let st = eng.step(&data, &idx)?;
+            sim += st.sim_secs;
+            host += st.host_secs;
+            syncs += st.syncs;
+            calls += st.calls;
+        }
+        let sim_avg = sim / steps as f64;
+        if mode == PipelineMode::PerDevice {
+            base_sim = sim_avg;
+        }
+        t.row(&[
+            mode.name().to_string(),
+            fmt_f(sim_avg, 3),
+            fmt_f(host / steps as f64, 3),
+            fmt_f(syncs as f64 / steps as f64, 1),
+            fmt_f(calls as f64 / steps as f64, 0),
+            format!("{:.2}x", sim_avg / base_sim),
+        ]);
+        eprintln!("[pipe] {} sim {:.3}s host {:.3}s", mode.name(), sim_avg, host / steps as f64);
+    }
+    t.save(
+        "results/pipeline_overhead.md",
+        "Section 4: per-device clipping avoids the flat-clipping sync + rematerialization overhead",
+    )?;
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// Accountant supplementary: sigma values + Prop 3.1 splits for the main
+/// experiment settings.
+pub fn accountant_table(_rt: &Runtime, _scale: Scale) -> Result<()> {
+    let mut t = MdTable::new(&["setting", "q", "T", "eps", "sigma", "r", "sigma_grad", "sigma_b"]);
+    for (name, q, steps, eps, r, k) in [
+        ("CIFAR analog (resmlp)", 0.05, 120u64, 3.0, 0.01, 15usize),
+        ("CIFAR analog (resmlp)", 0.05, 120, 8.0, 0.01, 15),
+        ("SST-2 analog (cls_small)", 0.025, 240, 3.0, 0.1, 17),
+        ("SST-2 analog (cls_small)", 0.025, 240, 8.0, 0.1, 17),
+        ("E2E analog (lm_small)", 0.025, 240, 3.0, 0.01, 19),
+        ("SAMSum analog pipeline", 0.03, 100, 1.0, 0.0, 4),
+    ] {
+        let plan = accountant::plan(eps, 1e-5, q, steps, r, k);
+        t.row(&[
+            name.to_string(),
+            format!("{q}"),
+            format!("{steps}"),
+            format!("{eps}"),
+            fmt_f(plan.sigma_base, 3),
+            format!("{r}"),
+            fmt_f(plan.sigma_grad, 3),
+            fmt_f(plan.sigma_quantile, 2),
+        ]);
+    }
+    t.save("results/accountant.md", "Privacy accountant: noise multipliers and Prop 3.1 budget splits")?;
+    println!("{}", t.render());
+    Ok(())
+}
+
+#[allow(unused)]
+fn unused_types(_: IntTensor, _: HostValue, _: &dyn Dataset) {}

@@ -1,0 +1,49 @@
+//! # gwclip — Group-wise Clipping for Differentially Private Deep Learning
+//!
+//! Production-quality reproduction of *"Exploring the Limits of
+//! Differentially Private Deep Learning with Group-wise Clipping"*
+//! (ICLR 2023) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L1** Pallas kernels (`python/compile/kernels`): ghost-norm and fused
+//!   clip+reduce — the compute hot-spot, AOT-lowered, never run from python
+//!   at train time.
+//! * **L2** JAX models (`python/compile`): manual-backprop transformer /
+//!   residual-MLP with per-layer clipping fused into the backward pass,
+//!   exported once to `artifacts/*.hlo.txt`.
+//! * **L3** this crate: PJRT runtime, privacy accountant, adaptive quantile
+//!   state, noise allocation, DP optimizers, Poisson sampling, the
+//!   pipeline-parallel engine with per-device clipping, data substrates,
+//!   and the experiment harness regenerating every table and figure.
+//!
+//! Quick start (after `make artifacts`):
+//! ```no_run
+//! use gwclip::coordinator::{Method, TrainOpts, Trainer};
+//! use gwclip::data::classif::MixtureImages;
+//! use gwclip::runtime::Runtime;
+//!
+//! let rt = Runtime::new("artifacts").unwrap();
+//! let data = MixtureImages::new(4096, 64, 10, 0);
+//! let opts = TrainOpts { method: Method::PerLayerAdaptive, epsilon: 3.0, ..Default::default() };
+//! let mut t = Trainer::new(&rt, "resmlp", 4096, opts).unwrap();
+//! t.run(&data, 10).unwrap();
+//! let (loss, acc) = t.evaluate(&data).unwrap();
+//! println!("loss {loss:.3} acc {acc:.3}");
+//! ```
+
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod metrics;
+pub mod pipeline;
+pub mod runtime;
+pub mod util;
+
+/// Default artifact directory (relative to the repo root).
+pub const ARTIFACT_DIR: &str = "artifacts";
+
+/// Resolve the artifact dir: $GWCLIP_ARTIFACTS or ./artifacts.
+pub fn artifact_dir() -> std::path::PathBuf {
+    std::env::var("GWCLIP_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from(ARTIFACT_DIR))
+}

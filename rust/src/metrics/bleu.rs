@@ -1,0 +1,128 @@
+//! Corpus BLEU-4 over token-id sequences (for the Table 5/6 generation
+//! analogs). Standard Papineni et al. definition with brevity penalty and
+//! flat n-gram weights.
+
+use std::collections::HashMap;
+
+fn ngram_counts(seq: &[i32], n: usize) -> HashMap<&[i32], usize> {
+    let mut m: HashMap<&[i32], usize> = HashMap::new();
+    if seq.len() >= n {
+        for w in seq.windows(n) {
+            *m.entry(w).or_default() += 1;
+        }
+    }
+    m
+}
+
+/// Corpus BLEU with max n-gram order `max_n` (use 4 for BLEU-4).
+pub fn corpus_bleu(hyps: &[Vec<i32>], refs: &[Vec<i32>], max_n: usize) -> f64 {
+    assert_eq!(hyps.len(), refs.len());
+    assert!(max_n >= 1);
+    let mut hyp_len = 0usize;
+    let mut ref_len = 0usize;
+    let mut matches = vec![0usize; max_n];
+    let mut totals = vec![0usize; max_n];
+    for (h, r) in hyps.iter().zip(refs) {
+        hyp_len += h.len();
+        ref_len += r.len();
+        for n in 1..=max_n {
+            let hc = ngram_counts(h, n);
+            let rc = ngram_counts(r, n);
+            for (g, c) in &hc {
+                totals[n - 1] += c;
+                if let Some(rcount) = rc.get(g) {
+                    matches[n - 1] += (*c).min(*rcount);
+                }
+            }
+        }
+    }
+    let mut logp = 0.0;
+    for n in 0..max_n {
+        if totals[n] == 0 || matches[n] == 0 {
+            return 0.0;
+        }
+        logp += (matches[n] as f64 / totals[n] as f64).ln();
+    }
+    logp /= max_n as f64;
+    let bp = if hyp_len >= ref_len || hyp_len == 0 {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len as f64).exp()
+    };
+    bp * logp.exp()
+}
+
+/// ROUGE-L F1 (longest common subsequence) over token ids, averaged over
+/// the corpus — the Table 5/6 companion metric.
+pub fn rouge_l(hyps: &[Vec<i32>], refs: &[Vec<i32>]) -> f64 {
+    assert_eq!(hyps.len(), refs.len());
+    let mut total = 0.0;
+    for (h, r) in hyps.iter().zip(refs) {
+        if h.is_empty() || r.is_empty() {
+            continue;
+        }
+        let l = lcs(h, r) as f64;
+        let p = l / h.len() as f64;
+        let rec = l / r.len() as f64;
+        if p + rec > 0.0 {
+            total += 2.0 * p * rec / (p + rec);
+        }
+    }
+    total / hyps.len().max(1) as f64
+}
+
+fn lcs(a: &[i32], b: &[i32]) -> usize {
+    let mut prev = vec![0usize; b.len() + 1];
+    let mut cur = vec![0usize; b.len() + 1];
+    for &x in a {
+        for (j, &y) in b.iter().enumerate() {
+            cur[j + 1] = if x == y { prev[j] + 1 } else { cur[j].max(prev[j + 1]) };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_match_is_one() {
+        let s = vec![vec![1, 2, 3, 4, 5, 6]];
+        assert!((corpus_bleu(&s, &s, 4) - 1.0).abs() < 1e-12);
+        assert!((rouge_l(&s, &s) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_is_zero() {
+        let h = vec![vec![1, 2, 3, 4]];
+        let r = vec![vec![5, 6, 7, 8]];
+        assert_eq!(corpus_bleu(&h, &r, 4), 0.0);
+        assert_eq!(rouge_l(&h, &r), 0.0);
+    }
+
+    #[test]
+    fn partial_overlap_between_zero_and_one() {
+        let h = vec![vec![1, 2, 3, 4, 9, 9]];
+        let r = vec![vec![1, 2, 3, 4, 5, 6]];
+        let b = corpus_bleu(&h, &r, 4);
+        assert!(b > 0.0 && b < 1.0, "bleu {b}");
+        let rl = rouge_l(&h, &r);
+        assert!(rl > 0.5 && rl < 1.0, "rouge {rl}");
+    }
+
+    #[test]
+    fn brevity_penalty_punishes_short_hyps() {
+        let r = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        let full = corpus_bleu(&r.clone(), &r, 2);
+        let short = corpus_bleu(&[r[0][..4].to_vec()].to_vec(), &r, 2);
+        assert!(short < full);
+    }
+
+    #[test]
+    fn lcs_basic() {
+        assert_eq!(lcs(&[1, 3, 5, 7], &[1, 5, 7, 9]), 3);
+        assert_eq!(lcs(&[], &[1]), 0);
+    }
+}

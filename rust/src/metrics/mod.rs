@@ -1,0 +1,146 @@
+//! Metrics, reporting, and the analytic memory model used for Figure 1.
+
+pub mod bleu;
+pub mod memmodel;
+
+use std::fmt::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+/// Exponential-moving-average loss meter + history.
+#[derive(Debug, Clone, Default)]
+pub struct LossMeter {
+    pub history: Vec<(u64, f64)>,
+    ema: Option<f64>,
+}
+
+impl LossMeter {
+    pub fn push(&mut self, step: u64, loss: f64) {
+        let e = match self.ema {
+            None => loss,
+            Some(prev) => 0.95 * prev + 0.05 * loss,
+        };
+        self.ema = Some(e);
+        self.history.push((step, loss));
+    }
+
+    pub fn ema(&self) -> f64 {
+        self.ema.unwrap_or(f64::NAN)
+    }
+
+    pub fn last(&self) -> f64 {
+        self.history.last().map(|x| x.1).unwrap_or(f64::NAN)
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let mut s = String::from("step,loss\n");
+        for (st, l) in &self.history {
+            writeln!(s, "{st},{l}")?;
+        }
+        std::fs::write(path, s)?;
+        Ok(())
+    }
+}
+
+/// Wall-clock throughput meter (examples/sec, steps/sec).
+pub struct Throughput {
+    start: Instant,
+    pub steps: u64,
+    pub examples: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { start: Instant::now(), steps: 0, examples: 0 }
+    }
+
+    pub fn tick(&mut self, examples: u64) {
+        self.steps += 1;
+        self.examples += examples;
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn steps_per_sec(&self) -> f64 {
+        self.steps as f64 / self.elapsed().max(1e-9)
+    }
+
+    pub fn examples_per_sec(&self) -> f64 {
+        self.examples as f64 / self.elapsed().max(1e-9)
+    }
+}
+
+/// Minimal markdown table builder for results/*.md.
+pub struct MdTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl MdTable {
+    pub fn new(header: &[&str]) -> Self {
+        MdTable { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        writeln!(s, "| {} |", self.header.join(" | ")).unwrap();
+        writeln!(s, "|{}|", self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|"))
+            .unwrap();
+        for r in &self.rows {
+            writeln!(s, "| {} |", r.join(" | ")).unwrap();
+        }
+        s
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>, title: &str) -> anyhow::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, format!("# {title}\n\n{}", self.render()))?;
+        Ok(())
+    }
+}
+
+pub fn fmt_f(v: f64, prec: usize) -> String {
+    if v.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{v:.prec$}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_meter_ema_smooths() {
+        let mut m = LossMeter::default();
+        m.push(0, 10.0);
+        m.push(1, 0.0);
+        assert!((m.ema() - 9.5).abs() < 1e-9);
+        assert_eq!(m.last(), 0.0);
+    }
+
+    #[test]
+    fn md_table_renders() {
+        let mut t = MdTable::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("| a | b |"));
+        assert!(r.contains("| 1 | 2 |"));
+    }
+}

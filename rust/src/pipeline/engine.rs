@@ -1,0 +1,632 @@
+//! Private pipeline-parallel training engine (section 4, Algorithm 2).
+//!
+//! The model is partitioned into S stages ("devices"); each device owns its
+//! parameter shard, its compiled stage executables, and its optimizer
+//! state. Two DP training modes:
+//!
+//! * **Per-device clipping** (the paper's contribution): each device clips
+//!   its local per-example gradient piece against its own threshold C_k and
+//!   noises it with the equal-budget allocation — no cross-device
+//!   communication beyond the usual activations (Algorithm 2).
+//! * **Flat-sync baseline** (approach (iii) of section 4): backward pass 1
+//!   computes local per-example norms only; a barrier all-gathers norms so
+//!   the leader can form global clip factors; pass 2 *rematerializes*
+//!   forward+backward on every device to emit the clipped sums.
+//!
+//! Every executable call is timed and fed to the GPipe makespan model
+//! (schedule.rs), so each step reports both measured host time and the
+//! simulated S-device step latency.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::noise::{add_noise, per_device_std, Rng};
+use crate::coordinator::optimizer::{Optimizer, OptimizerKind, Schedule};
+use crate::coordinator::quantile::QuantileEstimator;
+use crate::data::{Dataset, ModelBatch};
+use crate::runtime::{checkpoint, Exec, HostValue, Runtime, Tensor};
+
+use super::schedule::{makespan, Op, Phase};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// Algorithm 2: local clip + local equal-budget noise, zero extra comms
+    PerDevice,
+    /// flat clipping over the pipeline: norm all-gather + remat regrad
+    FlatSync,
+    /// no clipping, no noise (pretraining / utility ceiling)
+    NonPrivate,
+}
+
+impl PipelineMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PipelineMode::PerDevice => "per-device clipping",
+            PipelineMode::FlatSync => "flat clipping (sync + remat)",
+            PipelineMode::NonPrivate => "non-private",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PipelineOpts {
+    pub mode: PipelineMode,
+    /// microbatches per minibatch (J in Algorithm 2)
+    pub n_micro: usize,
+    /// per-device threshold init (PerDevice) or global threshold (FlatSync)
+    pub clip: f64,
+    /// gradient noise multiplier (from the accountant)
+    pub sigma: f64,
+    pub lr: f64,
+    pub optimizer: OptimizerKind,
+    pub seed: u64,
+    /// simulated all-gather latency charged per sync barrier (seconds)
+    pub sync_latency: f64,
+    /// adapt per-device thresholds with the quantile estimator
+    pub adaptive: bool,
+    pub target_q: f64,
+    pub quantile_eta: f64,
+}
+
+impl Default for PipelineOpts {
+    fn default() -> Self {
+        PipelineOpts {
+            mode: PipelineMode::PerDevice,
+            n_micro: 4,
+            clip: 1.0,
+            sigma: 0.0,
+            lr: 1e-3,
+            optimizer: OptimizerKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+            seed: 0,
+            sync_latency: 0.002,
+            adaptive: false,
+            target_q: 0.85,
+            quantile_eta: 0.3,
+        }
+    }
+}
+
+struct StageDevice {
+    params: Vec<Tensor>,
+    param_names: Vec<String>,
+    trainable_pos: Vec<usize>,
+    optimizer: Optimizer,
+    /// gradient accumulator, one per trainable tensor
+    accum: Vec<Tensor>,
+    fwd: Option<Arc<Exec>>,
+    bwd: Option<Arc<Exec>>,
+    bwd_norm: Option<Arc<Exec>>,
+    regrad: Option<Arc<Exec>>,
+    loss_bwd: Option<Arc<Exec>>,
+    loss_norm: Option<Arc<Exec>>,
+    loss_regrad: Option<Arc<Exec>>,
+    eval: Option<Arc<Exec>>,
+}
+
+/// Per-step report.
+#[derive(Debug, Clone)]
+pub struct PipeStepStats {
+    pub loss: f64,
+    /// measured host seconds for the whole step
+    pub host_secs: f64,
+    /// simulated S-device makespan (schedule model)
+    pub sim_secs: f64,
+    /// number of synchronization barriers this step required
+    pub syncs: usize,
+    /// executable invocations (fwd+bwd+regrad)
+    pub calls: usize,
+}
+
+pub struct PipelineEngine<'r> {
+    pub runtime: &'r Runtime,
+    pub config_name: String,
+    pub opts: PipelineOpts,
+    pub n_stages: usize,
+    micro_batch: usize,
+    devices: Vec<StageDevice>,
+    pub thresholds: Vec<f64>,
+    quantiles: Vec<QuantileEstimator>,
+    pending_counts: Vec<f64>,
+    rng: Rng,
+    pub steps_done: u64,
+}
+
+impl<'r> PipelineEngine<'r> {
+    pub fn new(runtime: &'r Runtime, config_name: &str, opts: PipelineOpts) -> Result<Self> {
+        let cfg = runtime.manifest.config(config_name)?.clone();
+        let stages = cfg
+            .stages
+            .clone()
+            .ok_or_else(|| anyhow!("config {config_name} has no pipeline stages"))?;
+        let n_stages = stages.stages.len();
+        let ck = checkpoint::read(runtime.manifest.hlo_path(&cfg.init_checkpoint))?;
+
+        let mut devices = Vec::with_capacity(n_stages);
+        for (s, sinfo) in stages.stages.iter().enumerate() {
+            let last = s == n_stages - 1;
+            let params: Vec<Tensor> = sinfo
+                .params
+                .iter()
+                .map(|n| ck.get(n).cloned().ok_or_else(|| anyhow!("checkpoint missing {n}")))
+                .collect::<Result<_>>()?;
+            let trainable_pos: Vec<usize> = sinfo
+                .params
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| sinfo.trainable.contains(n))
+                .map(|(i, _)| i)
+                .collect();
+            let tr: Vec<Tensor> = trainable_pos.iter().map(|&i| params[i].clone()).collect();
+            let accum = tr.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+            let load = |e: String| runtime.load(config_name, &e).ok();
+            let pre = format!("stage{s}");
+            devices.push(StageDevice {
+                optimizer: Optimizer::new(opts.optimizer, Schedule::constant(opts.lr), 0.0, &tr),
+                params,
+                param_names: sinfo.params.clone(),
+                trainable_pos,
+                accum,
+                fwd: if last { None } else { load(format!("{pre}_fwd")) },
+                bwd: if last { None } else { load(format!("{pre}_bwd")) },
+                bwd_norm: if last { None } else { load(format!("{pre}_bwd_norm")) },
+                regrad: if last { None } else { load(format!("{pre}_regrad")) },
+                loss_bwd: if last { load(format!("{pre}_loss_bwd")) } else { None },
+                loss_norm: if last { load(format!("{pre}_loss_norm")) } else { None },
+                loss_regrad: if last { load(format!("{pre}_loss_regrad")) } else { None },
+                eval: if last { load(format!("{pre}_eval")) } else { None },
+            });
+        }
+        let thresholds = vec![opts.clip; n_stages];
+        let quantiles = (0..n_stages)
+            .map(|_| {
+                if opts.adaptive {
+                    QuantileEstimator::adaptive(
+                        vec![opts.clip],
+                        opts.target_q,
+                        opts.quantile_eta,
+                        0.0,
+                        (cfg.batch * opts.n_micro) as f64,
+                    )
+                } else {
+                    QuantileEstimator::fixed(vec![opts.clip])
+                }
+            })
+            .collect();
+        Ok(PipelineEngine {
+            runtime,
+            config_name: config_name.to_string(),
+            n_stages,
+            micro_batch: cfg.batch,
+            devices,
+            thresholds,
+            quantiles,
+            pending_counts: vec![0.0; n_stages],
+            rng: Rng::seeded(opts.seed),
+            steps_done: 0,
+            opts,
+        })
+    }
+
+    pub fn micro_batch(&self) -> usize {
+        self.micro_batch
+    }
+
+    /// minibatch size = microbatch * J
+    pub fn minibatch(&self) -> usize {
+        self.micro_batch * self.opts.n_micro
+    }
+
+    /// Load stage parameters from a full-model checkpoint map (e.g. a
+    /// non-privately pretrained model for the fine-tuning experiments).
+    /// Missing names keep their init values (LoRA adapters).
+    pub fn load_params(&mut self, map: &HashMap<String, Tensor>) -> Result<()> {
+        for d in &mut self.devices {
+            for (i, n) in d.param_names.iter().enumerate() {
+                if let Some(t) = map.get(n) {
+                    if t.shape != d.params[i].shape {
+                        return Err(anyhow!("shape mismatch for {n}"));
+                    }
+                    d.params[i] = t.clone();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Dump all stage parameters into one map (checkpointing / LoRA merge).
+    pub fn dump_params(&self) -> HashMap<String, Tensor> {
+        let mut m = HashMap::new();
+        for d in &self.devices {
+            for (n, t) in d.param_names.iter().zip(&d.params) {
+                m.insert(n.clone(), t.clone());
+            }
+        }
+        m
+    }
+
+    fn weights_all_one(&self) -> Tensor {
+        Tensor::from_vec(&[self.micro_batch], vec![1.0; self.micro_batch]).unwrap()
+    }
+
+    fn stage_x_in(
+        &self,
+        st: usize,
+        m: usize,
+        tokens: &[(HostValue, HostValue)],
+        acts: &[Vec<Option<Tensor>>],
+    ) -> HostValue {
+        if st == 0 {
+            tokens[m].0.clone()
+        } else {
+            HostValue::F32(acts[st][m].clone().unwrap())
+        }
+    }
+
+    /// One DP pipeline step over `minibatch()` examples from `data`.
+    pub fn step(&mut self, data: &dyn Dataset, indices: &[usize]) -> Result<PipeStepStats> {
+        assert_eq!(indices.len(), self.minibatch());
+        let j = self.opts.n_micro;
+        let s = self.n_stages;
+        let host_t0 = Instant::now();
+        let mut durations: HashMap<Op, f64> = HashMap::new();
+        let mut calls = 0usize;
+
+        let micro: Vec<ModelBatch> = (0..j)
+            .map(|m| data.batch(&indices[m * self.micro_batch..(m + 1) * self.micro_batch]))
+            .collect();
+        let tokens: Vec<(HostValue, HostValue)> = micro.iter().map(|m| m.inputs()).collect();
+
+        // -------- forward wavefront: acts[s][m] = input act of stage s ----
+        let mut acts: Vec<Vec<Option<Tensor>>> = vec![vec![None; j]; s];
+        for m in 0..j {
+            for st in 0..s - 1 {
+                let x_in = self.stage_x_in(st, m, &tokens, &acts);
+                let d = &self.devices[st];
+                let t0 = Instant::now();
+                let out = d.fwd.as_ref().unwrap().call(&d.params, &[x_in])?;
+                durations.insert(
+                    Op { stage: st, micro: m, phase: Phase::Fwd },
+                    t0.elapsed().as_secs_f64(),
+                );
+                calls += 1;
+                acts[st + 1][m] = Some(out.into_iter().next().unwrap());
+            }
+        }
+
+        let w1 = self.weights_all_one();
+        let mut loss_total = 0f64;
+        let mut syncs = 1usize; // end-of-step optimizer barrier
+
+        match self.opts.mode {
+            PipelineMode::PerDevice | PipelineMode::NonPrivate => {
+                let nonpriv = self.opts.mode == PipelineMode::NonPrivate;
+                for m in 0..j {
+                    // last stage: fused loss+bwd, clipping local piece
+                    let c_last = if nonpriv { 1e9 } else { self.thresholds[s - 1] };
+                    let x_in = self.stage_x_in(s - 1, m, &tokens, &acts);
+                    let dlast = &self.devices[s - 1];
+                    let exec = dlast.loss_bwd.as_ref().unwrap().clone();
+                    let t0 = Instant::now();
+                    let outs = exec.call(
+                        &dlast.params,
+                        &[
+                            x_in,
+                            tokens[m].1.clone(),
+                            HostValue::F32(Tensor::scalar(c_last as f32)),
+                            HostValue::F32(w1.clone()),
+                        ],
+                    )?;
+                    durations.insert(
+                        Op { stage: s - 1, micro: m, phase: Phase::Bwd },
+                        t0.elapsed().as_secs_f64(),
+                    );
+                    calls += 1;
+                    loss_total += outs[0].data[0] as f64;
+                    let mut dy = outs[1].clone();
+                    let n_tr = self.devices[s - 1].trainable_pos.len();
+                    let norms = outs[2 + n_tr].clone();
+                    self.accumulate(s - 1, &outs[2..2 + n_tr]);
+                    self.record_clip_counts(s - 1, &norms);
+
+                    for st in (0..s - 1).rev() {
+                        let c = if nonpriv { 1e9 } else { self.thresholds[st] };
+                        let x_in = self.stage_x_in(st, m, &tokens, &acts);
+                        let d = &self.devices[st];
+                        let exec = d.bwd.as_ref().unwrap().clone();
+                        let t0 = Instant::now();
+                        let outs = exec.call(
+                            &d.params,
+                            &[
+                                x_in,
+                                HostValue::F32(dy),
+                                HostValue::F32(Tensor::scalar(c as f32)),
+                                HostValue::F32(w1.clone()),
+                            ],
+                        )?;
+                        durations.insert(
+                            Op { stage: st, micro: m, phase: Phase::Bwd },
+                            t0.elapsed().as_secs_f64(),
+                        );
+                        calls += 1;
+                        dy = outs[0].clone();
+                        let n_tr = self.devices[st].trainable_pos.len();
+                        let norms = outs[1 + n_tr].clone();
+                        self.accumulate(st, &outs[1..1 + n_tr]);
+                        self.record_clip_counts(st, &norms);
+                    }
+                }
+            }
+            PipelineMode::FlatSync => {
+                // pass 1: local norms only; cache the dy each stage consumed
+                let mut dy_in: Vec<Vec<Option<Tensor>>> = vec![vec![None; j]; s];
+                let mut local_norms: Vec<Vec<Vec<f32>>> =
+                    (0..s).map(|_| vec![Vec::new(); j]).collect();
+                for m in 0..j {
+                    let x_in = self.stage_x_in(s - 1, m, &tokens, &acts);
+                    let dlast = &self.devices[s - 1];
+                    let exec = dlast.loss_norm.as_ref().unwrap().clone();
+                    let t0 = Instant::now();
+                    let outs = exec.call(&dlast.params, &[x_in, tokens[m].1.clone()])?;
+                    durations.insert(
+                        Op { stage: s - 1, micro: m, phase: Phase::Bwd },
+                        t0.elapsed().as_secs_f64(),
+                    );
+                    calls += 1;
+                    loss_total += outs[0].data[0] as f64;
+                    let mut dy = outs[1].clone();
+                    local_norms[s - 1][m] = outs[2].data.clone();
+
+                    for st in (0..s - 1).rev() {
+                        dy_in[st][m] = Some(dy.clone());
+                        let x_in = self.stage_x_in(st, m, &tokens, &acts);
+                        let d = &self.devices[st];
+                        let exec = d.bwd_norm.as_ref().unwrap().clone();
+                        let t0 = Instant::now();
+                        let outs = exec.call(&d.params, &[x_in, HostValue::F32(dy)])?;
+                        durations.insert(
+                            Op { stage: st, micro: m, phase: Phase::Bwd },
+                            t0.elapsed().as_secs_f64(),
+                        );
+                        calls += 1;
+                        dy = outs[0].clone();
+                        local_norms[st][m] = outs[1].data.clone();
+                    }
+                }
+
+                // barrier: all-gather per-example norms, form global coeffs
+                syncs += 1;
+                let b = self.micro_batch;
+                let mut coeffs: Vec<Tensor> = Vec::with_capacity(j);
+                for m in 0..j {
+                    let mut c = Vec::with_capacity(b);
+                    for i in 0..b {
+                        let sq: f64 = (0..s)
+                            .map(|st| {
+                                let v = local_norms[st][m][i] as f64;
+                                v * v
+                            })
+                            .sum();
+                        c.push(((self.opts.clip / sq.sqrt().max(1e-12)).min(1.0)) as f32);
+                    }
+                    coeffs.push(Tensor::from_vec(&[b], c)?);
+                }
+
+                // pass 2: rematerialize + clipped sums
+                for m in 0..j {
+                    for st in 0..s {
+                        let last = st == s - 1;
+                        let x_in = self.stage_x_in(st, m, &tokens, &acts);
+                        let d = &self.devices[st];
+                        let t0 = Instant::now();
+                        let outs = if last {
+                            d.loss_regrad.as_ref().unwrap().call(
+                                &d.params,
+                                &[x_in, tokens[m].1.clone(), HostValue::F32(coeffs[m].clone())],
+                            )?
+                        } else {
+                            d.regrad.as_ref().unwrap().call(
+                                &d.params,
+                                &[
+                                    x_in,
+                                    HostValue::F32(dy_in[st][m].clone().unwrap()),
+                                    HostValue::F32(coeffs[m].clone()),
+                                ],
+                            )?
+                        };
+                        durations.insert(
+                            Op { stage: st, micro: m, phase: Phase::Regrad },
+                            t0.elapsed().as_secs_f64(),
+                        );
+                        calls += 1;
+                        self.accumulate(st, &outs);
+                    }
+                }
+            }
+        }
+
+        // -------- noise + local updates (no cross-device traffic) ---------
+        let expected = self.minibatch() as f64;
+        let sigma = self.opts.sigma;
+        for st in 0..s {
+            let std = match self.opts.mode {
+                PipelineMode::NonPrivate => 0.0,
+                PipelineMode::PerDevice => per_device_std(sigma, self.thresholds[st], s),
+                PipelineMode::FlatSync => sigma * self.opts.clip,
+            };
+            let d = &mut self.devices[st];
+            let mut grads = Vec::with_capacity(d.accum.len());
+            for a in d.accum.iter_mut() {
+                let mut g = std::mem::replace(a, Tensor::zeros(&a.shape));
+                add_noise(&mut g.data, std, &mut self.rng);
+                for v in g.data.iter_mut() {
+                    *v /= expected as f32;
+                }
+                grads.push(g);
+            }
+            let mut refs: Vec<&mut Tensor> = Vec::new();
+            let params = &mut d.params;
+            let mut ptrs: Vec<*mut Tensor> = Vec::new();
+            for &i in &d.trainable_pos {
+                ptrs.push(&mut params[i] as *mut Tensor);
+            }
+            unsafe {
+                for p in ptrs {
+                    refs.push(&mut *p);
+                }
+            }
+            d.optimizer.apply(&mut refs, &grads);
+        }
+
+        // adaptive per-device thresholds (extension of Algorithm 2)
+        if self.opts.adaptive && self.opts.mode == PipelineMode::PerDevice {
+            for st in 0..s {
+                let counts = self.pending_counts[st];
+                self.quantiles[st].update(&[counts], &mut self.rng);
+                self.thresholds[st] = self.quantiles[st].thresholds[0];
+            }
+        }
+        for c in self.pending_counts.iter_mut() {
+            *c = 0.0;
+        }
+
+        self.steps_done += 1;
+        let with_regrad = self.opts.mode == PipelineMode::FlatSync;
+        let sim = makespan(
+            s,
+            j,
+            &|op| durations.get(op).copied().unwrap_or(0.0),
+            with_regrad,
+            self.opts.sync_latency,
+        );
+        Ok(PipeStepStats {
+            loss: loss_total / j as f64,
+            host_secs: host_t0.elapsed().as_secs_f64(),
+            sim_secs: sim,
+            syncs: if with_regrad { syncs } else { 1 },
+            calls,
+        })
+    }
+
+    fn accumulate(&mut self, stage: usize, grads: &[Tensor]) {
+        let d = &mut self.devices[stage];
+        for (a, g) in d.accum.iter_mut().zip(grads) {
+            for (av, gv) in a.data.iter_mut().zip(&g.data) {
+                *av += *gv;
+            }
+        }
+    }
+
+    fn record_clip_counts(&mut self, stage: usize, norms: &Tensor) {
+        let c = norms
+            .data
+            .iter()
+            .filter(|&&n| (n as f64) <= self.thresholds[stage])
+            .count() as f64;
+        self.pending_counts[stage] += c;
+    }
+
+    /// Mean eval loss over `data` through the pipeline.
+    pub fn evaluate(&self, data: &dyn Dataset) -> Result<f64> {
+        let b = self.micro_batch;
+        let s = self.n_stages;
+        let mut loss_sum = 0f64;
+        let mut weight = 0f64;
+        for batch in crate::coordinator::sampler::EvalIter::new(data.len(), b) {
+            let mb = data.batch(&batch.indices);
+            let (x, y) = mb.inputs();
+            let mut cur = x;
+            for st in 0..s - 1 {
+                let d = &self.devices[st];
+                let out = d.fwd.as_ref().unwrap().call(&d.params, &[cur])?;
+                cur = HostValue::F32(out.into_iter().next().unwrap());
+            }
+            let dlast = &self.devices[s - 1];
+            let outs = dlast.eval.as_ref().unwrap().call(
+                &dlast.params,
+                &[cur, y, HostValue::F32(Tensor::from_vec(&[b], batch.weights.clone())?)],
+            )?;
+            loss_sum += outs[0].data[0] as f64;
+            weight += outs[1].data[0] as f64;
+        }
+        Ok(loss_sum / weight.max(1.0))
+    }
+
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let map = self.dump_params();
+        let mut items: Vec<(String, &Tensor)> = map.iter().map(|(k, v)| (k.clone(), v)).collect();
+        items.sort_by(|a, b| a.0.cmp(&b.0));
+        checkpoint::write(path, &items)
+    }
+}
+
+/// Merge LoRA adapters into base weights: W_eff = W + (scale/r) * A @ B.
+/// Used to decode from a LoRA-fine-tuned pipeline with the full-model
+/// `logits` entry of the base config.
+pub fn merge_lora(
+    base: &mut HashMap<String, Tensor>,
+    lora: &HashMap<String, Tensor>,
+    rank: usize,
+    scale: f64,
+) -> Result<usize> {
+    let alpha = (scale / rank as f64) as f32;
+    let mut merged = 0;
+    let keys: Vec<String> = lora
+        .keys()
+        .filter(|k| k.ends_with(".lora_a"))
+        .cloned()
+        .collect();
+    for ka in keys {
+        let stem = ka.trim_end_matches(".lora_a");
+        let kb = format!("{stem}.lora_b");
+        let kw = format!("{stem}.w");
+        let a = &lora[&ka];
+        let b = lora
+            .get(&kb)
+            .ok_or_else(|| anyhow!("missing {kb}"))?;
+        let w = base
+            .get_mut(&kw)
+            .ok_or_else(|| anyhow!("missing base weight {kw}"))?;
+        let (d_in, r) = (a.shape[0], a.shape[1]);
+        let d_out = b.shape[1];
+        if w.shape != vec![d_in, d_out] || b.shape[0] != r {
+            return Err(anyhow!("lora shape mismatch at {stem}"));
+        }
+        for i in 0..d_in {
+            for k in 0..r {
+                let av = a.data[i * r + k] * alpha;
+                if av == 0.0 {
+                    continue;
+                }
+                for o in 0..d_out {
+                    w.data[i * d_out + o] += av * b.data[k * d_out + o];
+                }
+            }
+        }
+        merged += 1;
+    }
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_lora_rank1_by_hand() {
+        let mut base = HashMap::new();
+        base.insert(
+            "l.w".to_string(),
+            Tensor::from_vec(&[2, 2], vec![1., 0., 0., 1.]).unwrap(),
+        );
+        let mut lora = HashMap::new();
+        lora.insert("l.lora_a".to_string(), Tensor::from_vec(&[2, 1], vec![1., 2.]).unwrap());
+        lora.insert("l.lora_b".to_string(), Tensor::from_vec(&[1, 2], vec![3., 4.]).unwrap());
+        let n = merge_lora(&mut base, &lora, 1, 1.0).unwrap();
+        assert_eq!(n, 1);
+        // W + A@B = [[1+3, 4],[6, 1+8]]
+        assert_eq!(base["l.w"].data, vec![4., 4., 6., 9.]);
+    }
+}

@@ -1,0 +1,6 @@
+//! Pipeline parallelism with per-device clipping (paper section 4).
+
+pub mod engine;
+pub mod schedule;
+
+pub use engine::{merge_lora, PipeStepStats, PipelineEngine, PipelineMode, PipelineOpts};

@@ -1,0 +1,173 @@
+//! GPipe-style pipeline schedule (Huang et al. 2019) and its makespan
+//! model.
+//!
+//! The paper's section-4 argument is about *schedule structure*: flat
+//! clipping inserts synchronization barriers and a rematerialization pass
+//! into the pipeline, per-device clipping does not. We execute ops
+//! sequentially on the host (the PJRT CPU client already uses all cores
+//! for a single executable, so real thread-parallel stages would just
+//! contend), but time each op and replay the dependency DAG to compute the
+//! makespan a real S-device pipeline would see. Both the measured total
+//! and the simulated makespan are reported.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// forward of stage s, microbatch j
+    Fwd,
+    /// backward (any flavor) of stage s, microbatch j
+    Bwd,
+    /// rematerialization/regrad pass (flat-sync baseline only)
+    Regrad,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Op {
+    pub stage: usize,
+    pub micro: usize,
+    pub phase: Phase,
+}
+
+/// Sequential execution order for a GPipe step over `s` stages and `j`
+/// microbatches: all forwards (wavefront), then all backwards (reverse
+/// wavefront). The last stage's Fwd is fused with its Bwd (loss_bwd).
+pub fn gpipe_order(s: usize, j: usize, with_regrad: bool) -> Vec<Op> {
+    let mut ops = Vec::new();
+    for m in 0..j {
+        for st in 0..s.saturating_sub(1) {
+            ops.push(Op { stage: st, micro: m, phase: Phase::Fwd });
+        }
+    }
+    for m in 0..j {
+        for st in (0..s).rev() {
+            ops.push(Op { stage: st, micro: m, phase: Phase::Bwd });
+        }
+    }
+    if with_regrad {
+        for m in 0..j {
+            for st in 0..s {
+                ops.push(Op { stage: st, micro: m, phase: Phase::Regrad });
+            }
+        }
+    }
+    ops
+}
+
+/// Dependencies of an op under GPipe rules.
+fn deps(op: &Op, s: usize) -> Vec<Op> {
+    let mut d = Vec::new();
+    match op.phase {
+        Phase::Fwd => {
+            if op.stage > 0 {
+                d.push(Op { stage: op.stage - 1, micro: op.micro, phase: Phase::Fwd });
+            }
+        }
+        Phase::Bwd => {
+            if op.stage == s - 1 {
+                // loss_bwd needs the incoming activation
+                if s > 1 {
+                    d.push(Op { stage: s - 2, micro: op.micro, phase: Phase::Fwd });
+                }
+            } else {
+                d.push(Op { stage: op.stage + 1, micro: op.micro, phase: Phase::Bwd });
+            }
+        }
+        Phase::Regrad => {
+            // regrad waits on the global norm barrier: handled separately
+        }
+    }
+    d
+}
+
+/// Simulated makespan of a step given per-op durations (seconds).
+/// `barrier_before_regrad`: all Bwd ops must finish before any Regrad
+/// starts (the flat-clipping all-gather of per-example norms), plus a
+/// per-sync latency charge.
+pub fn makespan(
+    s: usize,
+    j: usize,
+    durations: &dyn Fn(&Op) -> f64,
+    with_regrad: bool,
+    sync_latency: f64,
+) -> f64 {
+    use std::collections::HashMap;
+    let ops = gpipe_order(s, j, with_regrad);
+    let mut finish: HashMap<Op, f64> = HashMap::new();
+    let mut device_free = vec![0f64; s];
+    let mut bwd_done = 0f64;
+    // ops is already a valid topological order
+    for op in &ops {
+        if op.phase == Phase::Regrad {
+            continue;
+        }
+        let mut start: f64 = device_free[op.stage];
+        for dep in deps(op, s) {
+            if let Some(&f) = finish.get(&dep) {
+                start = start.max(f);
+            }
+        }
+        let end = start + durations(op);
+        finish.insert(*op, end);
+        device_free[op.stage] = end;
+        if op.phase == Phase::Bwd {
+            bwd_done = bwd_done.max(end);
+        }
+    }
+    if with_regrad {
+        // barrier: leader gathers norms from every device
+        let barrier = bwd_done + sync_latency;
+        for d in device_free.iter_mut() {
+            *d = d.max(barrier);
+        }
+        for op in &ops {
+            if op.phase != Phase::Regrad {
+                continue;
+            }
+            let start = device_free[op.stage];
+            let end = start + durations(op);
+            device_free[op.stage] = end;
+        }
+    }
+    device_free.iter().cloned().fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn order_contains_all_ops() {
+        let ops = gpipe_order(3, 4, false);
+        // fwd: (3-1)*4, bwd: 3*4
+        assert_eq!(ops.len(), 2 * 4 + 3 * 4);
+        let ops_r = gpipe_order(3, 4, true);
+        assert_eq!(ops_r.len(), ops.len() + 12);
+    }
+
+    #[test]
+    fn pipeline_overlaps_microbatches() {
+        // with unit op costs, a pipelined step is much shorter than
+        // serial execution of all ops
+        let dur = |_: &Op| 1.0;
+        let m = makespan(4, 8, &dur, false, 0.0);
+        let serial = (3 * 8 + 4 * 8) as f64;
+        assert!(m < 0.6 * serial, "makespan {m} vs serial {serial}");
+        // and no shorter than the critical path: J bwd ops on one device
+        assert!(m >= 8.0);
+    }
+
+    #[test]
+    fn regrad_strictly_slower() {
+        let dur = |_: &Op| 1.0;
+        let a = makespan(4, 4, &dur, false, 0.0);
+        let b = makespan(4, 4, &dur, true, 0.5);
+        assert!(b > a + 4.0 - 1e-9, "regrad {b} vs perdevice {a}");
+    }
+
+    #[test]
+    fn single_stage_degenerates_to_serial() {
+        let dur = |_: &Op| 2.0;
+        // one stage: J fused loss_bwd ops only
+        let m = makespan(1, 5, &dur, false, 0.0);
+        assert!((m - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,129 @@
+//! GWCK checkpoint format, shared with python/compile/aot.py:
+//!   b"GWCK" | u32 version | u32 json_len | header json | raw f32 LE data
+//! header = [{name, shape, offset}] with offsets into the payload region.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::tensor::Tensor;
+use crate::util::json::Json;
+
+#[derive(Debug)]
+struct Entry {
+    name: String,
+    shape: Vec<usize>,
+    offset: u64,
+}
+
+/// Read a checkpoint into name -> Tensor.
+pub fn read(path: impl AsRef<Path>) -> Result<HashMap<String, Tensor>> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening checkpoint {}", path.as_ref().display()))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"GWCK" {
+        return Err(anyhow!("bad checkpoint magic {:?}", magic));
+    }
+    let mut hdr = [0u8; 8];
+    f.read_exact(&mut hdr)?;
+    let version = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+    if version != 1 {
+        return Err(anyhow!("unsupported checkpoint version {version}"));
+    }
+    let json_len = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+    let mut jbuf = vec![0u8; json_len];
+    f.read_exact(&mut jbuf)?;
+    let j = Json::parse(std::str::from_utf8(&jbuf)?)?;
+    let entries: Vec<Entry> = j
+        .arr()?
+        .iter()
+        .map(|e| {
+            Ok(Entry {
+                name: e.get("name")?.str()?.to_string(),
+                shape: e.get("shape")?.usizes()?,
+                offset: e.get("offset")?.u64()?,
+            })
+        })
+        .collect::<Result<_>>()?;
+    let mut payload = Vec::new();
+    f.read_to_end(&mut payload)?;
+
+    let mut out = HashMap::new();
+    for e in entries {
+        let n: usize = e.shape.iter().product();
+        let start = e.offset as usize;
+        let end = start + n * 4;
+        if end > payload.len() {
+            return Err(anyhow!("checkpoint truncated at tensor {}", e.name));
+        }
+        let mut data = vec![0f32; n];
+        for (i, ch) in payload[start..end].chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes(ch.try_into().unwrap());
+        }
+        out.insert(e.name, Tensor { shape: e.shape, data });
+    }
+    Ok(out)
+}
+
+/// Write tensors in the given order.
+pub fn write(path: impl AsRef<Path>, tensors: &[(String, &Tensor)]) -> Result<()> {
+    let mut entries = Vec::new();
+    let mut offset = 0u64;
+    for (name, t) in tensors {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(name.clone()));
+        m.insert(
+            "shape".to_string(),
+            Json::Arr(t.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+        );
+        m.insert("offset".to_string(), Json::Num(offset as f64));
+        entries.push(Json::Obj(m));
+        offset += (t.data.len() * 4) as u64;
+    }
+    let json = Json::Arr(entries).render().into_bytes();
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating checkpoint {}", path.as_ref().display()))?;
+    f.write_all(b"GWCK")?;
+    f.write_all(&1u32.to_le_bytes())?;
+    f.write_all(&(json.len() as u32).to_le_bytes())?;
+    f.write_all(&json)?;
+    for (_, t) in tensors {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+        };
+        f.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("gwck_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ck.bin");
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::from_vec(&[3], vec![-1., 0., 9.5]).unwrap();
+        write(&p, &[("a".into(), &a), ("b".into(), &b)]).unwrap();
+        let m = read(&p).unwrap();
+        assert_eq!(m["a"], a);
+        assert_eq!(m["b"], b);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("gwck_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(read(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

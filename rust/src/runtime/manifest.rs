@@ -1,0 +1,238 @@
+//! Parse artifacts/manifest.json — the contract between the AOT compile
+//! path (python/compile/aot.py) and the rust runtime. Parsed with the
+//! in-tree JSON module (no serde offline).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    pub configs: HashMap<String, ConfigManifest>,
+    pub root: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct ConfigManifest {
+    pub model: String,
+    pub hyper: Hyper,
+    pub batch: usize,
+    pub params: Vec<ParamInfo>,
+    pub groups: Vec<String>,
+    pub group_dims: Vec<u64>,
+    pub entries: HashMap<String, EntryInfo>,
+    pub stages: Option<StagesInfo>,
+    pub init_checkpoint: String,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Hyper {
+    pub vocab: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub n_classes: usize,
+    pub features: usize,
+    pub width: usize,
+    pub blocks: usize,
+    pub lora_rank: usize,
+    pub lora_scale: f64,
+    pub use_pallas: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub group: String,
+    pub trainable: bool,
+    pub size: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct EntryInfo {
+    pub file: String,
+    pub extra_inputs: Vec<IoInfo>,
+    pub outputs: Vec<IoInfo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct IoInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+#[derive(Debug, Clone)]
+pub struct StagesInfo {
+    pub boundaries: Vec<usize>,
+    pub stages: Vec<StageInfo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct StageInfo {
+    pub params: Vec<String>,
+    pub trainable: Vec<String>,
+    pub d_stage: u64,
+}
+
+fn io_info(j: &Json) -> Result<IoInfo> {
+    Ok(IoInfo {
+        name: j.get("name")?.str()?.to_string(),
+        shape: j.get("shape")?.usizes()?,
+        dtype: j.get("dtype")?.str()?.to_string(),
+    })
+}
+
+fn opt_usize(j: &Json, key: &str) -> usize {
+    j.opt(key).and_then(|v| v.usize().ok()).unwrap_or(0)
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let mut configs = HashMap::new();
+        for (name, c) in j.get("configs")?.obj()? {
+            configs.insert(name.clone(), Self::parse_config(c).with_context(|| name.clone())?);
+        }
+        Ok(Manifest {
+            version: j.get("version")?.u64()?,
+            configs,
+            root: dir.to_path_buf(),
+        })
+    }
+
+    fn parse_config(c: &Json) -> Result<ConfigManifest> {
+        let h = c.get("hyper")?;
+        let hyper = Hyper {
+            vocab: opt_usize(h, "vocab"),
+            seq: opt_usize(h, "seq"),
+            d_model: opt_usize(h, "d_model"),
+            n_heads: opt_usize(h, "n_heads"),
+            n_layers: opt_usize(h, "n_layers"),
+            d_ff: opt_usize(h, "d_ff"),
+            n_classes: opt_usize(h, "n_classes"),
+            features: opt_usize(h, "features"),
+            width: opt_usize(h, "width"),
+            blocks: opt_usize(h, "blocks"),
+            lora_rank: opt_usize(h, "lora_rank"),
+            lora_scale: h.opt("lora_scale").and_then(|v| v.f64().ok()).unwrap_or(2.0),
+            use_pallas: h.opt("use_pallas").and_then(|v| v.bool().ok()).unwrap_or(false),
+        };
+        let params = c
+            .get("params")?
+            .arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamInfo {
+                    name: p.get("name")?.str()?.to_string(),
+                    shape: p.get("shape")?.usizes()?,
+                    group: p.get("group")?.str()?.to_string(),
+                    trainable: p.get("trainable")?.bool()?,
+                    size: p.get("size")?.u64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut entries = HashMap::new();
+        for (ename, e) in c.get("entries")?.obj()? {
+            entries.insert(
+                ename.clone(),
+                EntryInfo {
+                    file: e.get("file")?.str()?.to_string(),
+                    extra_inputs: e
+                        .get("extra_inputs")?
+                        .arr()?
+                        .iter()
+                        .map(io_info)
+                        .collect::<Result<_>>()?,
+                    outputs: e
+                        .get("outputs")?
+                        .arr()?
+                        .iter()
+                        .map(io_info)
+                        .collect::<Result<_>>()?,
+                },
+            );
+        }
+        let stages = match c.opt("stages") {
+            None => None,
+            Some(s) => Some(StagesInfo {
+                boundaries: s.get("boundaries")?.usizes()?,
+                stages: s
+                    .get("stages")?
+                    .arr()?
+                    .iter()
+                    .map(|st| {
+                        Ok(StageInfo {
+                            params: st.get("params")?.strings()?,
+                            trainable: st.get("trainable")?.strings()?,
+                            d_stage: st.get("d_stage")?.u64()?,
+                        })
+                    })
+                    .collect::<Result<_>>()?,
+            }),
+        };
+        Ok(ConfigManifest {
+            model: c.get("model")?.str()?.to_string(),
+            hyper,
+            batch: c.get("batch")?.usize()?,
+            params,
+            groups: c.get("groups")?.strings()?,
+            group_dims: c
+                .get("group_dims")?
+                .arr()?
+                .iter()
+                .map(|v| v.u64())
+                .collect::<Result<_>>()?,
+            entries,
+            stages,
+            init_checkpoint: c.get("init_checkpoint")?.str()?.to_string(),
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigManifest> {
+        self.configs.get(name).ok_or_else(|| {
+            let mut v: Vec<_> = self.configs.keys().collect();
+            v.sort();
+            anyhow!("config '{}' not in manifest (have: {:?})", name, v)
+        })
+    }
+
+    pub fn hlo_path(&self, file: &str) -> PathBuf {
+        self.root.join(file)
+    }
+}
+
+impl ConfigManifest {
+    pub fn entry(&self, name: &str) -> Result<&EntryInfo> {
+        self.entries.get(name).ok_or_else(|| {
+            let mut v: Vec<_> = self.entries.keys().collect();
+            v.sort();
+            anyhow!("entry '{}' not exported for this config (have: {:?})", name, v)
+        })
+    }
+
+    pub fn trainable(&self) -> Vec<&ParamInfo> {
+        self.params.iter().filter(|p| p.trainable).collect()
+    }
+
+    /// Index of each group name.
+    pub fn group_index(&self) -> HashMap<&str, usize> {
+        self.groups.iter().enumerate().map(|(i, g)| (g.as_str(), i)).collect()
+    }
+
+    /// Total trainable parameter count.
+    pub fn n_trainable(&self) -> u64 {
+        self.group_dims.iter().sum()
+    }
+}

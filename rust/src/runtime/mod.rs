@@ -1,0 +1,147 @@
+//! L3 runtime: load AOT artifacts (HLO text) and execute them on the PJRT
+//! CPU client. This is the only module that touches the `xla` crate; the
+//! rest of the coordinator works with host [`Tensor`]s.
+//!
+//! Pattern follows /opt/xla-example/src/bin/load_hlo.rs: HLO *text* ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`.
+
+pub mod checkpoint;
+pub mod manifest;
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+use xla::Literal;
+
+pub use manifest::{ConfigManifest, EntryInfo, Manifest};
+pub use tensor::{HostValue, IntTensor, Tensor};
+
+/// A compiled entry point plus its manifest IO description.
+pub struct Exec {
+    pub info: EntryInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Exec {
+    /// Execute with pre-marshalled literals; returns the decomposed tuple.
+    pub fn call_literals(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        let result = self.exe.execute::<Literal>(args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with params + extra inputs; returns outputs as host values.
+    pub fn call(&self, params: &[Tensor], extras: &[HostValue]) -> Result<Vec<Tensor>> {
+        if extras.len() != self.info.extra_inputs.len() {
+            return Err(anyhow!(
+                "entry {} wants {} extra inputs, got {}",
+                self.info.file,
+                self.info.extra_inputs.len(),
+                extras.len()
+            ));
+        }
+        let mut args = Vec::with_capacity(params.len() + extras.len());
+        for p in params {
+            args.push(p.to_literal()?);
+        }
+        for e in extras {
+            args.push(e.to_literal()?);
+        }
+        let outs = self.call_literals(&args)?;
+        if outs.len() != self.info.outputs.len() {
+            return Err(anyhow!(
+                "entry {} returned {} outputs, manifest says {}",
+                self.info.file,
+                outs.len(),
+                self.info.outputs.len()
+            ));
+        }
+        let mut res = Vec::with_capacity(outs.len());
+        for (lit, io) in outs.iter().zip(&self.info.outputs) {
+            res.push(Tensor::from_literal(lit, &io.shape)?);
+        }
+        Ok(res)
+    }
+
+    /// Position of a named output.
+    pub fn out_index(&self, name: &str) -> Result<usize> {
+        self.info
+            .outputs
+            .iter()
+            .position(|o| o.name == name)
+            .ok_or_else(|| anyhow!("no output '{}' in {}", name, self.info.file))
+    }
+}
+
+/// PJRT client + compiled-executable cache, manifest-driven.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<Exec>>>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { manifest, client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Load (and cache) a compiled entry point for `config`.
+    pub fn load(&self, config: &str, entry: &str) -> Result<Arc<Exec>> {
+        let key = format!("{config}/{entry}");
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let cfg = self.manifest.config(config)?;
+        let info = cfg.entry(entry)?.clone();
+        let path = self.manifest.hlo_path(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("loading HLO {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", info.file))?;
+        let exec = Arc::new(Exec { info, exe });
+        self.cache.lock().unwrap().insert(key, exec.clone());
+        Ok(exec)
+    }
+
+    /// Load the init checkpoint for a config, in manifest param order.
+    pub fn init_params(&self, config: &str) -> Result<Vec<Tensor>> {
+        let cfg = self.manifest.config(config)?;
+        let path = self.manifest.hlo_path(&cfg.init_checkpoint);
+        let map = checkpoint::read(&path)?;
+        params_from_map(cfg, &map)
+    }
+}
+
+/// Order a name->Tensor map by a config's param specs.
+pub fn params_from_map(
+    cfg: &ConfigManifest,
+    map: &HashMap<String, Tensor>,
+) -> Result<Vec<Tensor>> {
+    cfg.params
+        .iter()
+        .map(|p| {
+            let t = map
+                .get(&p.name)
+                .ok_or_else(|| anyhow!("checkpoint missing tensor {}", p.name))?;
+            if t.shape != p.shape {
+                return Err(anyhow!(
+                    "tensor {} shape {:?} != manifest {:?}",
+                    p.name,
+                    t.shape,
+                    p.shape
+                ));
+            }
+            Ok(t.clone())
+        })
+        .collect()
+}

@@ -1,0 +1,135 @@
+//! Host-side tensors and conversion to/from PJRT literals.
+//!
+//! The coordinator owns all mutable state (parameters, optimizer moments) as
+//! flat f32 buffers; literals are created right before each executable call.
+
+use anyhow::{anyhow, Result};
+use xla::{ElementType, Literal};
+
+/// A dense f32 tensor on the host.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(anyhow!("shape {:?} wants {} elems, got {}", shape, n, data.len()));
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
+        };
+        Ok(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &self.shape,
+            bytes,
+        )?)
+    }
+
+    pub fn from_literal(lit: &Literal, shape: &[usize]) -> Result<Self> {
+        let data: Vec<f32> = lit.to_vec()?;
+        Tensor::from_vec(shape, data)
+    }
+}
+
+/// A dense i32 tensor on the host (tokens, labels).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        IntTensor { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(anyhow!("shape {:?} wants {} elems, got {}", shape, n, data.len()));
+        }
+        Ok(IntTensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
+        };
+        Ok(Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &self.shape,
+            bytes,
+        )?)
+    }
+}
+
+/// Either dtype, as the manifest's extra-input list is heterogeneous.
+#[derive(Clone, Debug)]
+pub enum HostValue {
+    F32(Tensor),
+    I32(IntTensor),
+}
+
+impl HostValue {
+    pub fn to_literal(&self) -> Result<Literal> {
+        match self {
+            HostValue::F32(t) => t.to_literal(),
+            HostValue::I32(t) => t.to_literal(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip_through_literal() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit, &[2, 3]).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0]).is_err());
+        assert!(IntTensor::from_vec(&[3], vec![1, 2]).is_err());
+    }
+
+    #[test]
+    fn norm_is_euclidean() {
+        let t = Tensor::from_vec(&[2], vec![3.0, 4.0]).unwrap();
+        assert!((t.norm() - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,59 @@
+//! Micro-bench harness (criterion is unavailable offline): warmup +
+//! timed iterations with mean/std/min reporting.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.4} ms/iter (±{:.4}, min {:.4}, n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.std_s * 1e3,
+            self.min_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Run `f` for `warmup` + `iters` iterations and time each.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / iters as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / iters as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    BenchResult { name: name.to_string(), iters, mean_s: mean, std_s: var.sqrt(), min_s: min }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn bench_times_something() {
+        let r = super::bench("spin", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.mean_s > 0.0 && r.min_s <= r.mean_s);
+        assert!(r.report().contains("spin"));
+    }
+}

@@ -1,0 +1,96 @@
+//! Tiny `--flag value` argument parser (no clap in this environment).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv[1..]; `switch_names` take no value (e.g. --paper-scale).
+    pub fn parse(argv: &[String], switch_names: &[&str]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if switch_names.contains(&name) {
+                    a.switches.push(name.to_string());
+                    i += 1;
+                } else {
+                    let val = argv
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                    a.flags.insert(name.to_string(), val.clone());
+                    i += 2;
+                }
+            } else {
+                a.positional.push(tok.clone());
+                i += 1;
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn get(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad number '{v}'")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_positional_switches() {
+        let a = Args::parse(
+            &sv(&["train", "--epsilon", "3.0", "--paper-scale", "--seed", "7"]),
+            &["paper-scale"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get_f64("epsilon", 0.0).unwrap(), 3.0);
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+        assert!(a.has("paper-scale"));
+        assert_eq!(a.get("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["--epsilon"]), &[]).is_err());
+    }
+}

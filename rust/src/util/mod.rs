@@ -1,0 +1,6 @@
+//! Dependency-free utilities: JSON, RNG, CLI flags, micro-bench timing.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,286 @@
+//! Integration tests over the real AOT artifacts (tiny configs): load,
+//! execute, train, checkpoint, pipeline. Requires `make artifacts`.
+//!
+//! These run the FULL stack — PJRT compilation of HLO lowered from the
+//! manual-backprop JAX models whose clip path is the Pallas kernels
+//! (tiny configs use use_pallas=True).
+
+use gwclip::coordinator::accountant;
+use gwclip::coordinator::{Method, TrainOpts, Trainer};
+use gwclip::data::classif::MixtureImages;
+use gwclip::data::lm::MarkovCorpus;
+use gwclip::data::Dataset;
+use gwclip::pipeline::{PipelineEngine, PipelineMode, PipelineOpts};
+use gwclip::runtime::{HostValue, Runtime, Tensor};
+
+// The xla PJRT client is !Send/!Sync, so a shared static is impossible;
+// each test leaks one Runtime instead (cheap: tiny configs, process exits
+// after the test run anyway).
+fn rt() -> &'static Runtime {
+    let dir = std::env::var("GWCLIP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    Box::leak(Box::new(Runtime::new(dir).expect("run `make artifacts` before cargo test")))
+}
+
+fn tiny_mixture(n: usize, seed: u64) -> MixtureImages {
+    MixtureImages::new(n, 16, 10, seed)
+}
+
+#[test]
+fn manifest_lists_tiny_configs() {
+    let m = &rt().manifest;
+    for c in ["resmlp_tiny", "lm_tiny", "resmlp", "lm_small", "lm_mid_pipe_lora"] {
+        assert!(m.config(c).is_ok(), "missing config {c}");
+    }
+    let cfg = m.config("resmlp_tiny").unwrap();
+    assert_eq!(cfg.groups.len(), cfg.group_dims.len());
+    assert!(cfg.hyper.use_pallas, "tiny configs must exercise the Pallas kernels");
+}
+
+#[test]
+fn eval_counts_weights_correctly() {
+    let data = tiny_mixture(20, 3);
+    let tr = Trainer::new(rt(), "resmlp_tiny", 20, TrainOpts::default()).unwrap();
+    let (loss, acc) = tr.evaluate(&data).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn nonprivate_training_learns_tiny_task() {
+    let data = tiny_mixture(256, 1);
+    let opts = TrainOpts {
+        method: Method::NonPrivate,
+        epochs: 6.0,
+        lr: 0.1,
+        ..Default::default()
+    };
+    let mut tr = Trainer::new(rt(), "resmlp_tiny", data.len(), opts).unwrap();
+    let (loss0, _) = tr.evaluate(&data).unwrap();
+    tr.run(&data, 0).unwrap();
+    let (loss1, acc) = tr.evaluate(&data).unwrap();
+    assert!(loss1 < 0.6 * loss0, "loss {loss0} -> {loss1} did not improve");
+    assert!(acc > 0.5, "train acc {acc}");
+}
+
+#[test]
+fn dp_perlayer_improves_and_respects_plan() {
+    // the B=256 config: at a real batch size DP training must make progress
+    let data = MixtureImages::new(2048, 64, 10, 2);
+    let opts = TrainOpts {
+        method: Method::PerLayerAdaptive,
+        epsilon: 8.0,
+        epochs: 3.0,
+        lr: 0.2,
+        target_q: 0.6,
+        ..Default::default()
+    };
+    let mut tr = Trainer::new(rt(), "resmlp", data.len(), opts).unwrap();
+    let plan = tr.plan.unwrap();
+    assert!(plan.sigma_grad >= plan.sigma_base);
+    let (loss0, _) = tr.evaluate(&data).unwrap();
+    let hist = tr.run(&data, 0).unwrap();
+    let (loss1, _) = tr.evaluate(&data).unwrap();
+    assert!(loss1 < loss0, "DP training should still reduce loss: {loss0} -> {loss1}");
+    // clip fractions are meaningful (in [0,1]) and thresholds adapted
+    for st in &hist {
+        for f in &st.clip_frac {
+            assert!((0.0..=1.0 + 1e-9).contains(f));
+        }
+    }
+    let c = &tr.quantiles.thresholds;
+    assert!(c.iter().all(|&x| x > 0.0));
+}
+
+#[test]
+fn flat_and_ghost_agree_without_noise() {
+    // eps huge -> sigma ~ tiny; same seed -> near-identical trajectories
+    let data = tiny_mixture(128, 4);
+    let mut losses = Vec::new();
+    for method in [Method::FlatFixed, Method::Ghost, Method::Naive] {
+        let opts = TrainOpts {
+            method,
+            epsilon: 1e6,
+            epochs: 2.0,
+            lr: 0.05,
+            clip_init: 0.5,
+            seed: 9,
+            ..Default::default()
+        };
+        let mut tr = Trainer::new(rt(), "resmlp_tiny", data.len(), opts).unwrap();
+        tr.run(&data, 0).unwrap();
+        let (loss, _) = tr.evaluate(&data).unwrap();
+        losses.push(loss);
+    }
+    // same clipping math, same sampling seed => same result up to fp noise
+    assert!((losses[0] - losses[1]).abs() < 1e-3, "flat {} vs ghost {}", losses[0], losses[1]);
+    assert!((losses[0] - losses[2]).abs() < 1e-3, "flat {} vs naive {}", losses[0], losses[2]);
+}
+
+#[test]
+fn lm_training_reduces_nll() {
+    let cfg = rt().manifest.config("lm_tiny").unwrap().clone();
+    let data = MarkovCorpus::new(256, cfg.hyper.seq, cfg.hyper.vocab, 4, 0);
+    let opts = TrainOpts {
+        method: Method::PerLayerAdaptive,
+        epsilon: 1e6, // tiny B=4 config: test the machinery, not utility-under-noise
+        epochs: 6.0,
+        lr: 3e-3,
+        optimizer: gwclip::coordinator::optimizer::OptimizerKind::Adam {
+            beta1: 0.9,
+            beta2: 0.98,
+            eps: 1e-6,
+        },
+        clip_init: 0.1,
+        ..Default::default()
+    };
+    let mut tr = Trainer::new(rt(), "lm_tiny", data.len(), opts).unwrap();
+    let (nll0, _) = tr.evaluate(&data).unwrap();
+    tr.run(&data, 0).unwrap();
+    let (nll1, _) = tr.evaluate(&data).unwrap();
+    assert!(nll1 < nll0, "NLL {nll0} -> {nll1}");
+}
+
+#[test]
+fn logits_entry_shapes() {
+    let cfg = rt().manifest.config("lm_tiny").unwrap().clone();
+    let exec = rt().load("lm_tiny", "logits").unwrap();
+    let params = rt().init_params("lm_tiny").unwrap();
+    let toks = gwclip::runtime::IntTensor::zeros(&[cfg.batch, cfg.hyper.seq]);
+    let outs = exec.call(&params, &[HostValue::I32(toks)]).unwrap();
+    assert_eq!(outs[0].shape, vec![cfg.batch, cfg.hyper.seq, cfg.hyper.vocab]);
+}
+
+#[test]
+fn checkpoint_roundtrip_through_runtime() {
+    let params = rt().init_params("resmlp_tiny").unwrap();
+    let cfg = rt().manifest.config("resmlp_tiny").unwrap();
+    let dir = std::env::temp_dir().join(format!("gw_int_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ck.bin");
+    let named: Vec<(String, &Tensor)> = cfg
+        .params
+        .iter()
+        .zip(&params)
+        .map(|(p, t)| (p.name.clone(), t))
+        .collect();
+    gwclip::runtime::checkpoint::write(&path, &named).unwrap();
+    let map = gwclip::runtime::checkpoint::read(&path).unwrap();
+    let back = gwclip::runtime::params_from_map(cfg, &map).unwrap();
+    assert_eq!(params.len(), back.len());
+    for (a, b) in params.iter().zip(&back) {
+        assert_eq!(a, b);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn accountant_noise_scales_sanely_with_epsilon() {
+    let s1 = accountant::noise_multiplier(0.02, 200, 1.0, 1e-5);
+    let s8 = accountant::noise_multiplier(0.02, 200, 8.0, 1e-5);
+    assert!(s1 > s8, "smaller eps must need more noise: {s1} vs {s8}");
+}
+
+// ---------------------------------------------------------------- pipeline
+
+#[test]
+fn pipeline_per_device_and_flat_sync_run_and_agree_on_loss() {
+    let cfg = rt().manifest.config("lm_mid_pipe_lora").unwrap().clone();
+    let data = MarkovCorpus::new(128, cfg.hyper.seq, cfg.hyper.vocab, 4, 5);
+    let mut losses = Vec::new();
+    for mode in [PipelineMode::PerDevice, PipelineMode::FlatSync] {
+        let opts = PipelineOpts {
+            mode,
+            n_micro: 2,
+            sigma: 0.0,
+            clip: 1e9, // effectively unclipped -> identical math
+            lr: 1e-3,
+            ..Default::default()
+        };
+        let mut eng = PipelineEngine::new(rt(), "lm_mid_pipe_lora", opts).unwrap();
+        let mb = eng.minibatch();
+        let idx: Vec<usize> = (0..mb).collect();
+        let st = eng.step(&data, &idx).unwrap();
+        assert!(st.loss.is_finite());
+        assert!(st.sim_secs > 0.0 && st.sim_secs <= st.host_secs * 1.5);
+        losses.push(st.loss);
+        if mode == PipelineMode::FlatSync {
+            assert!(st.syncs >= 2, "flat-sync must add a norm barrier");
+        }
+    }
+    assert!(
+        (losses[0] - losses[1]).abs() < 1e-4,
+        "same minibatch, same params: losses {losses:?}"
+    );
+}
+
+#[test]
+fn pipeline_flat_sync_costs_more_calls() {
+    let cfg = rt().manifest.config("lm_mid_pipe_lora").unwrap().clone();
+    let data = MarkovCorpus::new(64, cfg.hyper.seq, cfg.hyper.vocab, 4, 6);
+    let mut calls = Vec::new();
+    for mode in [PipelineMode::PerDevice, PipelineMode::FlatSync] {
+        let opts = PipelineOpts { mode, n_micro: 2, sigma: 0.1, clip: 1e-2, ..Default::default() };
+        let mut eng = PipelineEngine::new(rt(), "lm_mid_pipe_lora", opts).unwrap();
+        let mb = eng.minibatch();
+        let idx: Vec<usize> = (0..mb).collect();
+        calls.push(eng.step(&data, &idx).unwrap().calls);
+    }
+    // flat-sync rematerializes: one extra fwd+bwd per (stage, microbatch)
+    assert!(calls[1] > calls[0], "flat-sync calls {} <= per-device {}", calls[1], calls[0]);
+}
+
+#[test]
+fn pipeline_training_reduces_loss_nonprivate() {
+    let cfg = rt().manifest.config("lm_mid_pipe_lora").unwrap().clone();
+    let data = MarkovCorpus::new(256, cfg.hyper.seq, cfg.hyper.vocab, 4, 7);
+    let opts = PipelineOpts {
+        mode: PipelineMode::NonPrivate,
+        n_micro: 2,
+        lr: 5e-3,
+        ..Default::default()
+    };
+    let mut eng = PipelineEngine::new(rt(), "lm_mid_pipe_lora", opts).unwrap();
+    let before = eng.evaluate(&data).unwrap();
+    let mb = eng.minibatch();
+    for s in 0..8usize {
+        let idx: Vec<usize> = (0..mb).map(|i| (s * mb + i) % data.len()).collect();
+        eng.step(&data, &idx).unwrap();
+    }
+    let after = eng.evaluate(&data).unwrap();
+    assert!(after < before, "pipeline LoRA training must reduce NLL: {before} -> {after}");
+}
+
+#[test]
+fn property_clipped_norms_bounded_many_seeds() {
+    // hand-rolled property test (proptest unavailable offline): for random
+    // thresholds and data, every per-example per-group norm reported while
+    // training stays consistent with its clip bit accounting.
+    let data = tiny_mixture(64, 8);
+    for seed in 0..5u64 {
+        let opts = TrainOpts {
+            method: Method::PerLayerFixed,
+            epsilon: 8.0,
+            epochs: 0.5,
+            lr: 0.01,
+            clip_init: 0.1 + 0.2 * seed as f64,
+            seed,
+            ..Default::default()
+        };
+        let mut tr = Trainer::new(rt(), "resmlp_tiny", data.len(), opts).unwrap();
+        let mut tr_norms = Trainer::new(
+            rt(),
+            "resmlp_tiny",
+            data.len(),
+            TrainOpts { seed, ..tr.opts.clone() },
+        )
+        .unwrap();
+        tr_norms.collect_norms = Some(Vec::new());
+        let a = tr.step(&data).unwrap();
+        let b = tr_norms.step(&data).unwrap();
+        // determinism across identical trainers
+        assert_eq!(a.batch_size, b.batch_size);
+        assert!((a.loss - b.loss).abs() < 1e-6);
+        let norms = &tr_norms.collect_norms.as_ref().unwrap()[0];
+        assert!(norms.iter().all(|&n| n.is_finite() && n >= 0.0));
+    }
+}

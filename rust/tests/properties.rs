@@ -1,0 +1,273 @@
+//! Property-style tests over the pure L3 substrates (no artifacts needed).
+//! proptest is unavailable offline, so properties are checked over many
+//! seeded-random cases drawn from the in-tree RNG — same spirit, explicit
+//! generators.
+
+use gwclip::coordinator::accountant;
+use gwclip::coordinator::noise::{Allocation, Rng};
+use gwclip::coordinator::quantile::QuantileEstimator;
+use gwclip::coordinator::sampler::PoissonSampler;
+use gwclip::metrics::bleu::{corpus_bleu, rouge_l};
+use gwclip::pipeline::schedule::{gpipe_order, makespan, Op, Phase};
+use gwclip::util::json::Json;
+use gwclip::util::rng::Xoshiro;
+
+// ------------------------------------------------------------- accountant
+
+#[test]
+fn prop_epsilon_monotone_in_sigma_and_steps() {
+    let mut r = Xoshiro::seeded(1);
+    for _ in 0..50 {
+        let q = 0.001 + 0.2 * r.uniform();
+        let steps = 10 + r.below(5000) as u64;
+        let sigma = 0.5 + 3.0 * r.uniform();
+        let e = accountant::epsilon_for(q, sigma, steps, 1e-5).0;
+        let e_more_noise = accountant::epsilon_for(q, sigma * 1.3, steps, 1e-5).0;
+        let e_more_steps = accountant::epsilon_for(q, sigma, steps * 2, 1e-5).0;
+        assert!(e_more_noise < e, "q={q} steps={steps} sigma={sigma}");
+        assert!(e_more_steps > e, "q={q} steps={steps} sigma={sigma}");
+    }
+}
+
+#[test]
+fn prop_noise_multiplier_inverts_epsilon() {
+    let mut r = Xoshiro::seeded(2);
+    for _ in 0..20 {
+        let q = 0.005 + 0.1 * r.uniform();
+        let steps = 50 + r.below(2000) as u64;
+        let eps = 0.5 + 7.5 * r.uniform();
+        let sigma = accountant::noise_multiplier(q, steps, eps, 1e-5);
+        let achieved = accountant::epsilon_for(q, sigma, steps, 1e-5).0;
+        assert!(achieved <= eps * 1.001, "achieved {achieved} target {eps}");
+    }
+}
+
+#[test]
+fn prop_prop31_split_always_increases_grad_noise() {
+    let mut r = Xoshiro::seeded(3);
+    for _ in 0..50 {
+        let sigma = 0.5 + 3.0 * r.uniform();
+        let k = 1 + r.below(64);
+        let frac = 0.001 + 0.4 * r.uniform();
+        let sb = accountant::sigma_b_for_fraction(sigma, frac, k);
+        let sn = accountant::sigma_new(sigma, sb, k);
+        assert!(sn > sigma);
+        assert!((sn - sigma / (1.0 - frac).sqrt()).abs() < 1e-9);
+    }
+}
+
+// ------------------------------------------------------------- allocation
+
+#[test]
+fn prop_allocations_coincide_for_uniform_thresholds() {
+    // when all C_k equal, global and equal-budget add identical noise
+    let mut r = Xoshiro::seeded(4);
+    for _ in 0..20 {
+        let k = 1 + r.below(32);
+        let c = 0.01 + r.uniform();
+        let thr = vec![c; k];
+        let dims: Vec<u64> = (0..k).map(|_| 1 + r.below(10_000) as u64).collect();
+        let g = Allocation::Global.stds(1.0, &thr, &dims);
+        let e = Allocation::EqualBudget.stds(1.0, &thr, &dims);
+        for (a, b) in g.iter().zip(&e) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}
+
+#[test]
+fn prop_total_noise_scales_quadratically_with_sigma() {
+    let thr = [0.3, 0.7, 1.1];
+    let dims = [100u64, 20, 300];
+    for alloc in [Allocation::Global, Allocation::EqualBudget, Allocation::Weighted] {
+        let v1 = alloc.total_noise_sq(1.0, &thr, &dims);
+        let v2 = alloc.total_noise_sq(2.0, &thr, &dims);
+        assert!((v2 / v1 - 4.0).abs() < 1e-9);
+    }
+}
+
+// --------------------------------------------------------------- quantile
+
+#[test]
+fn prop_quantile_tracks_arbitrary_distributions() {
+    // for several (distribution, target-q) pairs the estimator converges
+    // to a threshold under which ~q of the mass falls
+    let mut rng = Rng::seeded(5);
+    for (case, target) in [(0usize, 0.3f64), (1, 0.5), (2, 0.8)] {
+        let mut q = QuantileEstimator::adaptive(vec![5.0], target, 0.3, 0.0, 128.0);
+        for _ in 0..600 {
+            let c = q.thresholds[0];
+            let below = (0..128)
+                .filter(|_| {
+                    let x = match case {
+                        0 => rng.uniform() * 2.0,                 // U(0,2)
+                        1 => rng.gauss().abs(),                   // half-normal
+                        _ => (rng.uniform() * 3.0).powi(2),       // skewed
+                    };
+                    x <= c
+                })
+                .count() as f64;
+            q.update(&[below], &mut rng);
+        }
+        // empirical check: fraction below final threshold ~ target
+        let c = q.thresholds[0];
+        let n = 20_000;
+        let below = (0..n)
+            .filter(|_| {
+                let x = match case {
+                    0 => rng.uniform() * 2.0,
+                    1 => rng.gauss().abs(),
+                    _ => (rng.uniform() * 3.0).powi(2),
+                };
+                x <= c
+            })
+            .count() as f64
+            / n as f64;
+        assert!(
+            (below - target).abs() < 0.1,
+            "case {case}: fraction {below} vs target {target} (C={c})"
+        );
+    }
+}
+
+// ---------------------------------------------------------------- sampler
+
+#[test]
+fn prop_poisson_inclusion_is_unbiased_per_example() {
+    let n = 200;
+    let s = PoissonSampler::new(n, 0.1, 64);
+    let mut rng = Rng::seeded(6);
+    let mut counts = vec![0u32; n];
+    let rounds = 2000;
+    for _ in 0..rounds {
+        for i in s.sample(&mut rng).indices {
+            counts[i] += 1;
+        }
+    }
+    for (i, &c) in counts.iter().enumerate() {
+        let p = c as f64 / rounds as f64;
+        assert!((p - 0.1).abs() < 0.03, "example {i} inclusion {p}");
+    }
+}
+
+// --------------------------------------------------------------- schedule
+
+#[test]
+fn prop_makespan_monotone_in_durations() {
+    let mut r = Xoshiro::seeded(7);
+    for _ in 0..20 {
+        let s = 2 + r.below(5);
+        let j = 1 + r.below(8);
+        let base: Vec<f64> = (0..1000).map(|_| 0.01 + r.uniform()).collect();
+        let d1 = {
+            let base = base.clone();
+            move |op: &Op| base[(op.stage * 131 + op.micro * 17) % 1000]
+        };
+        let d2 = {
+            let base = base.clone();
+            move |op: &Op| 1.5 * base[(op.stage * 131 + op.micro * 17) % 1000]
+        };
+        let m1 = makespan(s, j, &d1, false, 0.0);
+        let m2 = makespan(s, j, &d2, false, 0.0);
+        assert!(m2 > m1, "scaling all ops up must not shrink the makespan");
+        // regrad variant always costs at least as much
+        let mr = makespan(s, j, &d1, true, 0.001);
+        assert!(mr > m1);
+    }
+}
+
+#[test]
+fn prop_makespan_at_least_critical_stage() {
+    // the busiest single device's total work lower-bounds the makespan
+    let mut r = Xoshiro::seeded(8);
+    for _ in 0..20 {
+        let s = 2 + r.below(4);
+        let j = 1 + r.below(6);
+        let dur = |op: &Op| 0.05 + ((op.stage + op.micro) % 3) as f64 * 0.02;
+        let m = makespan(s, j, &dur, false, 0.0);
+        for st in 0..s {
+            let mut work = 0.0;
+            for op in gpipe_order(s, j, false) {
+                if op.stage == st && op.phase != Phase::Regrad {
+                    work += dur(&op);
+                }
+            }
+            assert!(m >= work - 1e-9, "stage {st} work {work} > makespan {m}");
+        }
+    }
+}
+
+// -------------------------------------------------------------------- json
+
+#[test]
+fn prop_json_roundtrips_random_documents() {
+    let mut r = Xoshiro::seeded(9);
+    for case in 0..40 {
+        let doc = random_json(&mut r, 0);
+        let text = doc.render();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(doc, back, "case {case}");
+    }
+}
+
+fn random_json(r: &mut Xoshiro, depth: usize) -> Json {
+    match if depth > 2 { r.below(4) } else { r.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(r.uniform() < 0.5),
+        2 => Json::Num((r.uniform() * 2000.0 - 1000.0).round()),
+        3 => Json::Str(format!("s{}-\"q\"\n\\x", r.below(100))),
+        4 => Json::Arr((0..r.below(5)).map(|_| random_json(r, depth + 1)).collect()),
+        _ => {
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..r.below(5) {
+                m.insert(format!("k{i}"), random_json(r, depth + 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+// -------------------------------------------------------------------- bleu
+
+#[test]
+fn prop_bleu_rouge_bounded_and_identity() {
+    let mut r = Xoshiro::seeded(10);
+    for _ in 0..30 {
+        let len = 4 + r.below(20);
+        let a: Vec<i32> = (0..len).map(|_| r.below(50) as i32).collect();
+        let b: Vec<i32> = (0..len).map(|_| r.below(50) as i32).collect();
+        let hyps = vec![a.clone()];
+        let refs = vec![b];
+        let bl = corpus_bleu(&hyps, &refs, 4);
+        let rl = rouge_l(&hyps, &refs);
+        assert!((0.0..=1.0).contains(&bl));
+        assert!((0.0..=1.0).contains(&rl));
+        let self_refs = vec![a];
+        assert!((corpus_bleu(&hyps, &self_refs, 4) - 1.0).abs() < 1e-12);
+        assert!((rouge_l(&hyps, &self_refs) - 1.0).abs() < 1e-12);
+    }
+}
+
+// ------------------------------------------------------------ noise+gauss
+
+#[test]
+fn prop_polar_gauss_tail_behaviour() {
+    // beyond moments: tail fractions match the normal CDF
+    let mut rng = Rng::seeded(11);
+    let n = 400_000;
+    let mut over1 = 0u32;
+    let mut over2 = 0u32;
+    for _ in 0..n {
+        let g = rng.gauss().abs();
+        if g > 1.0 {
+            over1 += 1;
+        }
+        if g > 2.0 {
+            over2 += 1;
+        }
+    }
+    let p1 = over1 as f64 / n as f64; // expect 2*(1-Phi(1)) = 0.3173
+    let p2 = over2 as f64 / n as f64; // expect 0.0455
+    assert!((p1 - 0.3173).abs() < 0.01, "P(|g|>1) = {p1}");
+    assert!((p2 - 0.0455).abs() < 0.005, "P(|g|>2) = {p2}");
+}
