@@ -1,14 +1,14 @@
 //! Compare all clipping schemes head-to-head on the CIFAR-10 analog —
-//! a miniature of Tables 1/2/11.
+//! a miniature of Tables 1/2/11, one `ClipPolicy` per row.
 //!
 //!     cargo run --release --example dp_classifier [-- --epsilon 3 --epochs 4]
 
 use anyhow::Result;
 
-use gwclip::coordinator::{Method, TrainOpts, Trainer};
 use gwclip::data::classif::MixtureImages;
 use gwclip::data::Dataset;
 use gwclip::runtime::Runtime;
+use gwclip::session::{ClipMode, ClipPolicy, GroupBy, OptimSpec, PrivacySpec, Session};
 use gwclip::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -21,27 +21,23 @@ fn main() -> Result<()> {
     let train = MixtureImages::with_spread(4096, 64, 10, 0xC1FA, 0, 0.55);
     let eval = MixtureImages::with_spread(1024, 64, 10, 0xC1FA, 900, 0.55);
 
-    println!("{:<22} {:>9} {:>9}", "method", "loss", "acc %");
-    for method in [
-        Method::NonPrivate,
-        Method::FlatFixed,
-        Method::FlatAdaptive,
-        Method::PerLayerFixed,
-        Method::PerLayerAdaptive,
+    println!("{:<22} {:>9} {:>9}", "policy", "loss", "acc %");
+    for (label, group_by, mode) in [
+        ("non-private", GroupBy::Flat, ClipMode::NonPrivate),
+        ("flat fixed", GroupBy::Flat, ClipMode::Fixed),
+        ("flat adaptive", GroupBy::Flat, ClipMode::Adaptive),
+        ("per-layer fixed", GroupBy::PerLayer, ClipMode::Fixed),
+        ("per-layer adaptive", GroupBy::PerLayer, ClipMode::Adaptive),
     ] {
-        let opts = TrainOpts {
-            method,
-            epsilon,
-            epochs,
-            lr: 0.25,
-            target_q: 0.6,
-            quantile_r: 0.01,
-            ..Default::default()
-        };
-        let mut tr = Trainer::new(&rt, "resmlp", train.len(), opts)?;
-        tr.run(&train, 0)?;
-        let (loss, acc) = tr.evaluate(&eval)?;
-        println!("{:<22} {:>9.4} {:>9.1}", method.name(), loss, 100.0 * acc);
+        let mut sess = Session::builder(&rt, "resmlp")
+            .privacy(PrivacySpec { epsilon, delta: 1e-5, quantile_r: 0.01 })
+            .clip(ClipPolicy { target_q: 0.6, ..ClipPolicy::new(group_by, mode) })
+            .optim(OptimSpec::sgd(0.25))
+            .epochs(epochs)
+            .build(train.len())?;
+        sess.run(&train, 0)?;
+        let (loss, acc) = sess.evaluate(&eval)?;
+        println!("{label:<22} {loss:>9.4} {:>9.1}", 100.0 * acc);
     }
     Ok(())
 }

@@ -12,11 +12,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use gwclip::coordinator::optimizer::OptimizerKind;
-use gwclip::coordinator::{Method, TrainOpts, Trainer};
 use gwclip::data::lm::MarkovCorpus;
 use gwclip::metrics::LossMeter;
 use gwclip::runtime::Runtime;
+use gwclip::session::{ClipMode, ClipPolicy, GroupBy, OptimSpec, PrivacySpec, Session};
 use gwclip::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -44,36 +43,34 @@ fn main() -> Result<()> {
     // epochs chosen so total_steps == requested steps
     let expected_batch = cfg.batch * 4 / 5;
     let epochs = steps as f64 * expected_batch as f64 / train.seqs.len() as f64;
-    let opts = TrainOpts {
-        method: Method::PerLayerAdaptive,
-        epsilon,
-        epochs,
-        expected_batch,
-        lr: 1e-3,
-        optimizer: OptimizerKind::Adam { beta1: 0.9, beta2: 0.98, eps: 1e-6 },
-        clip_init: 0.1,
-        target_q: 0.5,
-        quantile_r: 0.01,
-        ..Default::default()
-    };
-    let mut tr = Trainer::new(&rt, config, train.seqs.len(), opts)?;
-    let plan = tr.plan.unwrap();
+    let mut sess = Session::builder(&rt, config)
+        .privacy(PrivacySpec { epsilon, delta: 1e-5, quantile_r: 0.01 })
+        .clip(ClipPolicy {
+            clip_init: 0.1,
+            target_q: 0.5,
+            ..ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive)
+        })
+        .optim(OptimSpec::adam(1e-3))
+        .epochs(epochs)
+        .expected_batch(expected_batch)
+        .build(train.seqs.len())?;
+    let plan = sess.plan().unwrap();
     println!(
         "privacy: eps={epsilon} delta=1e-5, q={:.4}, T={} -> sigma_grad={:.3}",
-        plan.q, tr.total_steps, plan.sigma_grad
+        plan.q, sess.total_steps, plan.sigma_grad
     );
 
     let mut meter = LossMeter::default();
     let t0 = Instant::now();
-    let (e0, _) = tr.evaluate(&eval)?;
+    let (e0, _) = sess.evaluate(&eval)?;
     println!("eval NLL before training: {e0:.4} (uniform = ln V = {:.4})", (cfg.hyper.vocab as f64).ln());
-    for s in 0..tr.total_steps {
-        let st = tr.step(&train)?;
+    for s in 0..sess.total_steps {
+        let st = sess.step(&train)?;
         meter.push(s, st.loss);
-        if s % 25 == 0 || s == tr.total_steps - 1 {
+        if s % 25 == 0 || s == sess.total_steps - 1 {
             println!(
                 "step {s:>4}/{} loss {:.4} (ema {:.4}) elapsed {:.0}s",
-                tr.total_steps,
+                sess.total_steps,
                 st.loss,
                 meter.ema(),
                 t0.elapsed().as_secs_f64()
@@ -81,15 +78,15 @@ fn main() -> Result<()> {
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    let (e1, _) = tr.evaluate(&eval)?;
+    let (e1, _) = sess.evaluate(&eval)?;
 
     std::fs::create_dir_all("results")?;
     meter.write_csv("results/e2e_loss.csv")?;
 
     println!("\n===== E2E SUMMARY =====");
     println!("params:            {n_params}");
-    println!("steps:             {}", tr.total_steps);
-    println!("wall time:         {wall:.1}s ({:.2} s/step)", wall / tr.total_steps as f64);
+    println!("steps:             {}", sess.total_steps);
+    println!("wall time:         {wall:.1}s ({:.2} s/step)", wall / sess.total_steps as f64);
     println!("train loss:        {:.4} -> {:.4}", meter.history[0].1, meter.ema());
     println!("eval NLL:          {e0:.4} -> {e1:.4}");
     println!("privacy:           (eps={epsilon}, delta=1e-5), sigma_grad={:.3}", plan.sigma_grad);

@@ -6,13 +6,12 @@
 
 use anyhow::Result;
 
-use gwclip::coordinator::optimizer::OptimizerKind;
-use gwclip::coordinator::{Method, TrainOpts, Trainer};
 use gwclip::data::lm::TableToTextCorpus;
 use gwclip::data::Dataset;
 use gwclip::exp::genexp::greedy_decode;
 use gwclip::metrics::bleu::{corpus_bleu, rouge_l};
 use gwclip::runtime::Runtime;
+use gwclip::session::{ClipMode, ClipPolicy, GroupBy, OptimSpec, PrivacySpec, Session};
 use gwclip::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -26,26 +25,24 @@ fn main() -> Result<()> {
     let train = TableToTextCorpus::new(1024, cfg.hyper.seq, cfg.hyper.vocab, 3, 0);
     let eval = TableToTextCorpus::new(96, cfg.hyper.seq, cfg.hyper.vocab, 3, 999);
 
-    let opts = TrainOpts {
-        method: Method::PerLayerAdaptive,
-        epsilon,
-        epochs,
-        lr: 2e-3,
-        optimizer: OptimizerKind::Adam { beta1: 0.9, beta2: 0.98, eps: 1e-6 },
-        clip_init: 0.1,
-        target_q: 0.5,
-        quantile_r: 0.01,
-        ..Default::default()
-    };
-    let mut tr = Trainer::new(&rt, "lm_small", train.len(), opts)?;
-    tr.run(&train, 10)?;
-    let (nll, _) = tr.evaluate(&eval)?;
+    let mut sess = Session::builder(&rt, "lm_small")
+        .privacy(PrivacySpec { epsilon, delta: 1e-5, quantile_r: 0.01 })
+        .clip(ClipPolicy {
+            clip_init: 0.1,
+            target_q: 0.5,
+            ..ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive)
+        })
+        .optim(OptimSpec::adam(2e-3))
+        .epochs(epochs)
+        .build(train.len())?;
+    sess.run(&train, 10)?;
+    let (nll, _) = sess.evaluate(&eval)?;
 
     // decode a few eval prefixes
     let exec = rt.load("lm_small", "logits")?;
     let n = 32;
     let prefixes: Vec<Vec<i32>> = (0..n).map(|i| eval.prefix(i).to_vec()).collect();
-    let hyps = greedy_decode(&exec, &tr.params, &prefixes, cfg.batch, cfg.hyper.seq)?;
+    let hyps = greedy_decode(&exec, sess.params()?, &prefixes, cfg.batch, cfg.hyper.seq)?;
     let refs: Vec<Vec<i32>> = (0..n)
         .map(|i| {
             let r = eval.reference_suffix(i);

@@ -5,65 +5,57 @@
 //!
 //! Partitions the 8-layer LM over 4 simulated devices, trains only the
 //! LoRA adapters under DP, and prints per-step schedule costs so the
-//! per-device vs flat-sync overhead (paper section 4) is visible.
+//! per-device vs flat-sync overhead (paper section 4) is visible. Sigma is
+//! accountant-derived from (--epsilon, --delta) — the same session path as
+//! `gwclip run --spec`.
 
 use anyhow::Result;
 
-use gwclip::coordinator::accountant;
 use gwclip::data::lm::DialogSumCorpus;
 use gwclip::data::Dataset;
-use gwclip::pipeline::{PipelineEngine, PipelineMode, PipelineOpts};
+use gwclip::pipeline::PipelineMode;
 use gwclip::runtime::Runtime;
+use gwclip::session::{ClipPolicy, OptimSpec, PrivacySpec, Session};
 use gwclip::util::cli::Args;
-use gwclip::util::rng::Xoshiro;
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv, &[])?;
     let steps = args.get_usize("steps", 20)?;
-    let mode = match args.get("mode", "per-device").as_str() {
-        "per-device" => PipelineMode::PerDevice,
-        "flat-sync" => PipelineMode::FlatSync,
-        "non-private" => PipelineMode::NonPrivate,
-        m => anyhow::bail!("unknown mode {m}"),
-    };
+    let mode: PipelineMode = args.get("mode", "per-device").parse()?;
 
     let rt = Runtime::new(gwclip::artifact_dir())?;
     let config = "lm_mid_pipe_lora";
     let cfg = rt.manifest.config(config)?.clone();
     let data = DialogSumCorpus::new(1024, cfg.hyper.seq, cfg.hyper.vocab, 2);
 
-    let n_micro = 4;
-    let minibatch = cfg.batch * n_micro;
     let epsilon = args.get_f64("epsilon", 1.0)?;
-    let sigma = accountant::noise_multiplier(
-        minibatch as f64 / data.len() as f64,
-        steps as u64,
-        epsilon,
-        1e-5,
-    );
+    let mut sess = Session::builder(&rt, config)
+        .privacy(PrivacySpec { epsilon, delta: 1e-5, quantile_r: 0.0 })
+        .clip(ClipPolicy { clip_init: 1e-2, ..ClipPolicy::from_pipeline_mode(mode, false) })
+        .optim(OptimSpec::adam(5e-3))
+        .n_micro(4)
+        .steps(steps)
+        .build(data.len())?;
+
+    let plan = sess.plan();
     println!(
-        "pipeline: {} stages x {} microbatches of {} | eps={epsilon} -> sigma {:.3} | mode {}",
+        "pipeline: {} stages x 4 microbatches of {} | eps={epsilon} -> sigma {:.3} | mode {}",
         cfg.stages.as_ref().unwrap().stages.len(),
-        n_micro,
         cfg.batch,
-        sigma,
+        plan.map(|p| p.sigma_grad).unwrap_or(0.0),
         mode.name()
     );
 
-    let opts = PipelineOpts { mode, n_micro, clip: 1e-2, sigma, lr: 5e-3, ..Default::default() };
-    let mut eng = PipelineEngine::new(&rt, config, opts)?;
-    let mut rng = Xoshiro::seeded(0);
     for s in 0..steps {
-        let idx: Vec<usize> = (0..minibatch).map(|_| rng.below(data.len())).collect();
-        let st = eng.step(&data, &idx)?;
+        let st = sess.step(&data)?;
         println!(
             "step {s:>3}: loss {:.4} | simulated 4-device step {:.3}s | syncs {} | calls {}",
             st.loss, st.sim_secs, st.syncs, st.calls
         );
     }
-    let nll = eng.evaluate(&data)?;
+    let (nll, _) = sess.evaluate(&data)?;
     println!("\ntrain-set NLL after {steps} steps: {nll:.4}");
-    println!("per-device thresholds: {:?}", eng.thresholds);
+    println!("per-device thresholds: {:?}", sess.thresholds());
     Ok(())
 }

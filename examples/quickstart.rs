@@ -3,50 +3,45 @@
 //!
 //!     make artifacts && cargo run --release --example quickstart
 //!
-//! Walks the whole stack: loads an AOT-compiled HLO artifact (whose
-//! backward pass embeds the fused ghost-clipping kernels), plans the
-//! privacy budget with the RDP accountant, trains with Algorithm 1, and
-//! reports the final privacy guarantee and accuracy.
+//! Walks the whole stack through the session API: loads an AOT-compiled
+//! HLO artifact (whose backward pass embeds the fused ghost-clipping
+//! kernels), plans the privacy budget with the RDP accountant, trains with
+//! Algorithm 1, and reports the final privacy guarantee and accuracy.
 
 use anyhow::Result;
 
-use gwclip::coordinator::{Method, TrainOpts, Trainer};
-use gwclip::data::classif::MixtureImages;
-use gwclip::data::Dataset;
 use gwclip::runtime::Runtime;
+use gwclip::session::{ClipMode, ClipPolicy, DataSpec, GroupBy, OptimSpec, PrivacySpec, Session};
 
 fn main() -> Result<()> {
     let rt = Runtime::new(gwclip::artifact_dir())?;
 
-    // synthetic 10-class task (CIFAR-10 stand-in; see DESIGN.md §3)
-    let train = MixtureImages::new(4096, 64, 10, 0);
-    let eval = MixtureImages::new(1024, 64, 10, 900);
+    // one declarative spec: privacy target, clip policy, optimizer, data
+    // (synthetic 10-class task — CIFAR-10 stand-in; see DESIGN.md §3)
+    let (mut sess, train, eval) = Session::builder(&rt, "resmlp")
+        .privacy(PrivacySpec { epsilon: 3.0, delta: 1e-5, quantile_r: 0.01 })
+        .clip(ClipPolicy {
+            target_q: 0.6,
+            ..ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive)
+        })
+        .optim(OptimSpec::sgd(0.25))
+        .data(DataSpec { task: "mixture".into(), n_data: 4096, seed: 0 })
+        .epochs(3.0)
+        .build_with_data()?;
 
-    let opts = TrainOpts {
-        method: Method::PerLayerAdaptive,
-        epsilon: 3.0,
-        delta: 1e-5,
-        epochs: 3.0,
-        lr: 0.25,
-        target_q: 0.6,
-        quantile_r: 0.01,
-        ..Default::default()
-    };
-    let mut trainer = Trainer::new(&rt, "resmlp", train.len(), opts)?;
-
-    let plan = trainer.plan.expect("private method has a plan");
+    let plan = sess.plan().expect("private run has a plan");
     println!(
         "privacy plan: (eps={}, delta={}) over {} steps -> sigma={:.3} \
          (grad {:.3} after Prop 3.1 split, quantile sigma_b={:.1})",
-        plan.epsilon, plan.delta, trainer.total_steps,
+        plan.epsilon, plan.delta, sess.total_steps,
         plan.sigma_base, plan.sigma_grad, plan.sigma_quantile
     );
 
-    trainer.run(&train, 10)?;
+    sess.run(&*train, 10)?;
 
-    let (loss, acc) = trainer.evaluate(&eval)?;
+    let (loss, acc) = sess.evaluate(&*eval)?;
     println!("\nfinal adaptive thresholds (first 5 groups):");
-    for (g, c) in trainer.groups().iter().zip(&trainer.quantiles.thresholds).take(5) {
+    for (g, c) in sess.group_labels().iter().zip(sess.thresholds()).take(5) {
         println!("  {g:<12} C = {c:.4}");
     }
     println!("\neval: loss {loss:.4}, accuracy {:.1}% at eps=3", 100.0 * acc);

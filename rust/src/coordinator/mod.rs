@@ -5,7 +5,9 @@
 //! * [`noise`]      — Gaussian mechanism + allocation strategies
 //! * [`optimizer`]  — DP-SGD / DP-Adam parameter updates
 //! * [`sampler`]    — Poisson subsampling
-//! * [`trainer`]    — Algorithm 1 end to end on one device
+//! * [`trainer`]    — Algorithm 1 end to end on one device (the
+//!   single-device backend of [`crate::session`]; accounting, thresholds,
+//!   noise and RNG live in the shared `session::DpCore`)
 
 pub mod accountant;
 pub mod noise;

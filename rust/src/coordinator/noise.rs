@@ -71,6 +71,15 @@ pub enum Allocation {
 }
 
 impl Allocation {
+    /// Canonical token accepted back by [`Allocation::parse`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            Allocation::Global => "global",
+            Allocation::EqualBudget => "equal",
+            Allocation::Weighted => "weighted",
+        }
+    }
+
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s {
             "global" => Ok(Allocation::Global),

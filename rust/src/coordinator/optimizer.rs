@@ -4,7 +4,7 @@
 
 use crate::runtime::Tensor;
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum OptimizerKind {
     Sgd { momentum: f64 },
     Adam { beta1: f64, beta2: f64, eps: f64 },

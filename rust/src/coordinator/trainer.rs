@@ -1,25 +1,35 @@
-//! Single-device DP training loop — Algorithm 1 of the paper.
+//! Single-device DP training backend — Algorithm 1 of the paper.
 //!
 //! The compiled L2 step executable performs the fused
-//! backprop+clip (lines 7-12); this module owns everything else: privacy
-//! accounting (line 2-4), Poisson sampling (line 6), noise allocation and
-//! the parameter update (lines 13-14), and private quantile estimation
-//! (lines 15-18).
+//! backprop+clip (lines 7-12); this module owns everything else: Poisson
+//! sampling (line 6), the parameter update (lines 13-14), and feeding
+//! gradients/clip-counts through the shared [`DpCore`], which holds the
+//! privacy plan (lines 2-4), noise allocation (line 13) and private
+//! quantile state (lines 15-18).
+//!
+//! Construction goes through [`crate::session::SessionBuilder`]; the
+//! direct [`Trainer::new`] constructor remains as a thin shim over the
+//! session wiring for one release (deprecated — prefer the session API).
 
+use std::str::FromStr;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::data::Dataset;
 use crate::runtime::{ConfigManifest, Exec, HostValue, Runtime, Tensor};
+use crate::session::core::{CoreCfg, DpCore};
+use crate::session::spec::ClipPolicy;
 
-use super::accountant::{self, PrivacyPlan};
-use super::noise::{add_noise, Allocation, Rng};
+use super::accountant::PrivacyPlan;
+use super::noise::{add_noise, Allocation};
 use super::optimizer::{Optimizer, OptimizerKind, Schedule};
-use super::quantile::QuantileEstimator;
 use super::sampler::PoissonSampler;
 
-/// Which clipping scheme drives the step (paper sections 2-3).
+/// Which clipping scheme drives the step (paper sections 2-3). This is the
+/// single-device *backend* view; the API-surface equivalent is
+/// [`crate::session::ClipPolicy`], which maps onto it via
+/// `ClipPolicy::method()`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Method {
     NonPrivate,
@@ -67,8 +77,59 @@ impl Method {
             Method::Naive => "naive flat",
         }
     }
+
+    /// Canonical CLI token; guaranteed to parse back via [`FromStr`].
+    pub fn token(&self) -> &'static str {
+        match self {
+            Method::NonPrivate => "non-private",
+            Method::FlatFixed => "flat",
+            Method::FlatAdaptive => "adaptive-flat",
+            Method::PerLayerFixed => "per-layer",
+            Method::PerLayerAdaptive => "adaptive-per-layer",
+            Method::Ghost => "ghost",
+            Method::Naive => "naive",
+        }
+    }
+
+    /// All variants, for exhaustive CLI help / tests.
+    pub fn all() -> [Method; 7] {
+        [
+            Method::NonPrivate,
+            Method::FlatFixed,
+            Method::FlatAdaptive,
+            Method::PerLayerFixed,
+            Method::PerLayerAdaptive,
+            Method::Ghost,
+            Method::Naive,
+        ]
+    }
 }
 
+impl FromStr for Method {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "non-private" | "nonprivate" => Method::NonPrivate,
+            "flat" | "fixed-flat" => Method::FlatFixed,
+            "adaptive-flat" => Method::FlatAdaptive,
+            "per-layer" | "fixed-per-layer" => Method::PerLayerFixed,
+            "adaptive-per-layer" => Method::PerLayerAdaptive,
+            "ghost" => Method::Ghost,
+            "naive" => Method::Naive,
+            _ => {
+                return Err(anyhow!(
+                    "unknown method '{s}' (non-private|flat|adaptive-flat|per-layer|\
+                     adaptive-per-layer|ghost|naive)"
+                ))
+            }
+        })
+    }
+}
+
+/// Legacy single-device option bundle. Retained as the backend's internal
+/// parameter struct and as a shim constructor input; new code should
+/// declare a [`crate::session::RunSpec`] instead.
 #[derive(Debug, Clone)]
 pub struct TrainOpts {
     pub method: Method,
@@ -123,6 +184,58 @@ impl Default for TrainOpts {
     }
 }
 
+impl TrainOpts {
+    /// The session-spec view of these options (shim direction).
+    pub fn privacy_spec(&self) -> crate::session::PrivacySpec {
+        crate::session::PrivacySpec {
+            epsilon: self.epsilon,
+            delta: self.delta,
+            quantile_r: self.quantile_r,
+        }
+    }
+
+    /// The unified clip policy these options encode (shim direction).
+    pub fn clip_policy(&self) -> ClipPolicy {
+        ClipPolicy {
+            clip_init: self.clip_init,
+            target_q: self.target_q,
+            quantile_eta: self.quantile_eta,
+            allocation: self.allocation,
+            rescale_global: self.rescale_global,
+            ..ClipPolicy::from_method(self.method)
+        }
+    }
+}
+
+/// Derived schedule shared between the shim and the session builder:
+/// (expected batch, Poisson rate, total steps).
+pub fn derive_schedule(
+    cfg: &ConfigManifest,
+    n_data: usize,
+    epochs: f64,
+    expected_batch: usize,
+) -> Result<(usize, f64, u64)> {
+    if n_data == 0 {
+        return Err(anyhow!("dataset is empty"));
+    }
+    let b_static = cfg.batch;
+    let expected = if expected_batch == 0 {
+        ((b_static as f64) * 0.8).round() as usize
+    } else {
+        expected_batch
+    };
+    if expected > b_static {
+        return Err(anyhow!(
+            "expected batch {} exceeds compiled batch {}",
+            expected,
+            b_static
+        ));
+    }
+    let rate = (expected as f64 / n_data as f64).min(1.0);
+    let total_steps = ((epochs * n_data as f64) / expected as f64).ceil() as u64;
+    Ok((expected, rate, total_steps))
+}
+
 #[derive(Debug, Clone)]
 pub struct StepStats {
     pub step: u64,
@@ -139,14 +252,13 @@ pub struct Trainer<'r> {
     pub config_name: String,
     pub cfg: ConfigManifest,
     pub opts: TrainOpts,
-    pub plan: Option<PrivacyPlan>,
+    /// shared DP state: plan, thresholds, noise allocation, RNG
+    pub core: DpCore,
     pub params: Vec<Tensor>,
     exec: Arc<Exec>,
     eval_exec: Arc<Exec>,
-    pub quantiles: QuantileEstimator,
     optimizer: Optimizer,
     sampler: PoissonSampler,
-    rng: Rng,
     expected_batch: f64,
     trainable_idx: Vec<usize>,
     group_of_trainable: Vec<usize>,
@@ -157,6 +269,10 @@ pub struct Trainer<'r> {
 }
 
 impl<'r> Trainer<'r> {
+    /// Deprecated shim: build the [`DpCore`] from legacy [`TrainOpts`] and
+    /// delegate to [`Trainer::with_core`]. Prefer
+    /// `session::SessionBuilder` — it derives the same core from a
+    /// declarative spec and also handles the pipeline backend.
     pub fn new(
         runtime: &'r Runtime,
         config_name: &str,
@@ -164,47 +280,51 @@ impl<'r> Trainer<'r> {
         opts: TrainOpts,
     ) -> Result<Self> {
         let cfg = runtime.manifest.config(config_name)?.clone();
-        let b_static = cfg.batch;
-        let expected_batch = if opts.expected_batch == 0 {
-            ((b_static as f64) * 0.8).round() as usize
+        let (expected, rate, total_steps) =
+            derive_schedule(&cfg, n_data, opts.epochs, opts.expected_batch)?;
+        let clip = opts.clip_policy();
+        let privacy = opts.privacy_spec();
+        let k = clip.n_groups(cfg.groups.len(), 1);
+        let group_dims = if k == cfg.groups.len() {
+            cfg.group_dims.clone()
         } else {
-            opts.expected_batch
+            vec![cfg.n_trainable().max(1); k]
         };
-        if expected_batch > b_static {
+        let core = DpCore::from_accountant(CoreCfg {
+            privacy: &privacy,
+            clip: &clip,
+            sample_rate: rate,
+            steps: total_steps.max(1),
+            k,
+            group_dims,
+            expected_batch: expected as f64,
+            seed: opts.seed,
+        })?;
+        Trainer::with_core(runtime, config_name, n_data, opts, core)
+    }
+
+    /// Primary constructor: backend wiring only. All DP state (plan,
+    /// thresholds, noise, RNG) arrives in `core`.
+    pub fn with_core(
+        runtime: &'r Runtime,
+        config_name: &str,
+        n_data: usize,
+        opts: TrainOpts,
+        core: DpCore,
+    ) -> Result<Self> {
+        let cfg = runtime.manifest.config(config_name)?.clone();
+        let (expected_batch, rate, total_steps) =
+            derive_schedule(&cfg, n_data, opts.epochs, opts.expected_batch)?;
+        let b_static = cfg.batch;
+        let expect_k = if opts.method.per_layer() { cfg.groups.len() } else { 1 };
+        if core.k() != expect_k {
             return Err(anyhow!(
-                "expected batch {} exceeds compiled batch {}",
-                expected_batch,
-                b_static
+                "DpCore has {} groups but method {} needs {}",
+                core.k(),
+                opts.method.name(),
+                expect_k
             ));
         }
-        let rate = (expected_batch as f64 / n_data as f64).min(1.0);
-        let total_steps = ((opts.epochs * n_data as f64) / expected_batch as f64).ceil() as u64;
-        let k = if opts.method.per_layer() { cfg.groups.len() } else { 1 };
-
-        let plan = if opts.method.private() {
-            let r = if opts.method.adaptive() { opts.quantile_r } else { 0.0 };
-            Some(accountant::plan(opts.epsilon, opts.delta, rate, total_steps.max(1), r, k))
-        } else {
-            None
-        };
-
-        // thresholds: per-layer starts at C/sqrt(K) per group (A.1)
-        let init = if opts.method.per_layer() {
-            vec![opts.clip_init / (cfg.groups.len() as f64).sqrt(); cfg.groups.len()]
-        } else {
-            vec![opts.clip_init]
-        };
-        let quantiles = if opts.method.adaptive() {
-            QuantileEstimator::adaptive(
-                init,
-                opts.target_q,
-                opts.quantile_eta,
-                plan.map(|p| p.sigma_quantile).unwrap_or(0.0),
-                expected_batch as f64,
-            )
-        } else {
-            QuantileEstimator::fixed(init)
-        };
 
         let exec = runtime.load(config_name, opts.method.entry())?;
         let eval_exec = runtime.load(config_name, "eval")?;
@@ -236,15 +356,13 @@ impl<'r> Trainer<'r> {
         Ok(Trainer {
             runtime,
             config_name: config_name.to_string(),
-            opts: opts.clone(),
-            plan,
+            opts,
+            core,
             params,
             exec,
             eval_exec,
-            quantiles,
             optimizer,
             sampler: PoissonSampler::new(n_data, rate, b_static),
-            rng: Rng::seeded(opts.seed),
             expected_batch: expected_batch as f64,
             trainable_idx,
             group_of_trainable,
@@ -253,6 +371,16 @@ impl<'r> Trainer<'r> {
             collect_norms: None,
             cfg,
         })
+    }
+
+    /// The accountant's plan (None for non-private runs).
+    pub fn plan(&self) -> Option<PrivacyPlan> {
+        self.core.plan
+    }
+
+    /// Current per-group clipping thresholds.
+    pub fn thresholds(&self) -> &[f64] {
+        self.core.thresholds()
     }
 
     /// Replace parameters (e.g. load a pretrained checkpoint for the
@@ -271,18 +399,12 @@ impl<'r> Trainer<'r> {
 
     /// Effective noise stds per group at the current thresholds.
     pub fn noise_stds(&self) -> Vec<f64> {
-        match (&self.plan, self.opts.method.per_layer()) {
-            (Some(p), true) => {
-                self.opts.allocation.stds(p.sigma_grad, &self.quantiles.thresholds, &self.cfg.group_dims)
-            }
-            (Some(p), false) => vec![p.sigma_grad * self.quantiles.thresholds[0]],
-            (None, _) => vec![0.0],
-        }
+        self.core.noise_stds()
     }
 
     /// One Algorithm-1 iteration over a fresh Poisson batch.
     pub fn step(&mut self, data: &dyn Dataset) -> Result<StepStats> {
-        let batch = self.sampler.sample(&mut self.rng);
+        let batch = self.sampler.sample(&mut self.core.rng);
         let mut indices = batch.indices.clone();
         // pad to capacity with index 0 (weight 0)
         while indices.len() < self.sampler.capacity {
@@ -298,15 +420,15 @@ impl<'r> Trainer<'r> {
                 x,
                 y,
                 HostValue::F32(Tensor::from_vec(
-                    &[self.quantiles.k()],
-                    self.quantiles.thresholds.iter().map(|&c| c as f32).collect(),
+                    &[self.core.k()],
+                    self.core.thresholds().iter().map(|&c| c as f32).collect(),
                 )?),
                 HostValue::F32(Tensor::from_vec(&[batch.weights.len()], batch.weights.clone())?),
             ],
             _ => vec![
                 x,
                 y,
-                HostValue::F32(Tensor::scalar(self.quantiles.thresholds[0] as f32)),
+                HostValue::F32(Tensor::scalar(self.core.thresholds()[0] as f32)),
                 HostValue::F32(Tensor::from_vec(&[batch.weights.len()], batch.weights.clone())?),
             ],
         };
@@ -316,7 +438,7 @@ impl<'r> Trainer<'r> {
         let n_tr = self.trainable_idx.len();
         let mut grads: Vec<Tensor> = outs[1..1 + n_tr].to_vec();
 
-        let k = self.quantiles.k();
+        let k = self.core.k();
         let mut clip_counts = vec![0f64; k];
         let mut mean_norms = vec![0f64; k];
         if self.opts.method.private() {
@@ -330,7 +452,7 @@ impl<'r> Trainer<'r> {
                 for g in 0..k {
                     let v = norms.data[i * k + g] as f64;
                     mean_norms[g] += v;
-                    if v <= self.quantiles.thresholds[g] {
+                    if v <= self.core.thresholds()[g] {
                         clip_counts[g] += 1.0;
                     }
                 }
@@ -343,10 +465,10 @@ impl<'r> Trainer<'r> {
             }
 
             // line 13: draw and add noise
-            let stds = self.noise_stds();
+            let stds = self.core.noise_stds();
             for (t, &g) in grads.iter_mut().zip(&self.group_of_trainable) {
                 let std = if self.opts.method.per_layer() { stds[g] } else { stds[0] };
-                add_noise(&mut t.data, std, &mut self.rng);
+                add_noise(&mut t.data, std, &mut self.core.rng);
             }
             // line 14: normalize by expected batch
             let inv = 1.0 / self.expected_batch;
@@ -374,17 +496,9 @@ impl<'r> Trainer<'r> {
             self.optimizer.apply(&mut refs, &grads);
         }
 
-        // lines 15-18: private quantile update
+        // lines 15-18: private quantile update (+ A.1 rescale in the core)
         if self.opts.method.adaptive() {
-            self.quantiles.update(&clip_counts, &mut self.rng);
-            if self.opts.rescale_global && self.opts.method.per_layer() {
-                // Appendix A.1: pin the global-equivalent threshold at C
-                let s2: f64 = self.quantiles.thresholds.iter().map(|c| c * c).sum();
-                let scale = self.opts.clip_init / s2.sqrt().max(1e-12);
-                for c in self.quantiles.thresholds.iter_mut() {
-                    *c *= scale;
-                }
-            }
+            self.core.update_thresholds(&clip_counts);
         }
 
         self.step_count += 1;
@@ -442,5 +556,45 @@ impl<'r> Trainer<'r> {
             hist.push(st);
         }
         Ok(hist)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_tokens_roundtrip() {
+        for m in Method::all() {
+            assert_eq!(m.token().parse::<Method>().unwrap(), m, "token {}", m.token());
+        }
+    }
+
+    #[test]
+    fn method_aliases_parse() {
+        for (alias, want) in [
+            ("non-private", Method::NonPrivate),
+            ("nonprivate", Method::NonPrivate),
+            ("flat", Method::FlatFixed),
+            ("fixed-flat", Method::FlatFixed),
+            ("adaptive-flat", Method::FlatAdaptive),
+            ("per-layer", Method::PerLayerFixed),
+            ("fixed-per-layer", Method::PerLayerFixed),
+            ("adaptive-per-layer", Method::PerLayerAdaptive),
+            ("ghost", Method::Ghost),
+            ("naive", Method::Naive),
+        ] {
+            assert_eq!(alias.parse::<Method>().unwrap(), want, "alias {alias}");
+        }
+        assert!("per-device".parse::<Method>().is_err());
+        assert!("".parse::<Method>().is_err());
+    }
+
+    #[test]
+    fn trainopts_policy_shim_matches_method() {
+        for m in Method::all() {
+            let opts = TrainOpts { method: m, ..Default::default() };
+            assert_eq!(opts.clip_policy().method().unwrap(), m);
+        }
     }
 }

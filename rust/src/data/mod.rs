@@ -38,3 +38,76 @@ pub trait Dataset: Send + Sync {
     /// Assemble a batch for `indices` (len == static batch B of the config).
     fn batch(&self, indices: &[usize]) -> ModelBatch;
 }
+
+/// Build the (train, eval) dataset pair a [`DataSpec`] describes for a
+/// manifest config — the one construction path shared by the CLI, the
+/// session API and the experiment harness (previously copy-pasted).
+///
+/// `task = "auto"` picks the substrate from the config's model family;
+/// explicit tasks select a specific generator. The eval split is a fresh
+/// draw of n/4 examples at `seed + 1000` (the convention every harness
+/// already used).
+pub fn build_for_config(
+    cfg: &crate::runtime::ConfigManifest,
+    spec: &crate::session::DataSpec,
+) -> anyhow::Result<(Box<dyn Dataset>, Box<dyn Dataset>)> {
+    use self::classif::{MixtureImages, SentimentCorpus, TextTask};
+    use self::lm::{DialogSumCorpus, MarkovCorpus, TableToTextCorpus};
+
+    let n = spec.n_data;
+    let n_eval = (n / 4).max(1);
+    let seed = spec.seed;
+    let eval_seed = seed + 1000;
+    let h = &cfg.hyper;
+    let task = if spec.task == "auto" {
+        match cfg.model.as_str() {
+            "resmlp" => "mixture",
+            "lm" => "markov",
+            "classifier" => "sst2",
+            other => anyhow::bail!(
+                "no default data substrate for model family '{other}'; set data.task explicitly"
+            ),
+        }
+    } else {
+        spec.task.as_str()
+    };
+    let text_task = |t: TextTask| -> (Box<dyn Dataset>, Box<dyn Dataset>) {
+        (
+            Box::new(SentimentCorpus::new(t, n, h.seq, h.vocab, seed)),
+            Box::new(SentimentCorpus::new(t, n_eval, h.seq, h.vocab, eval_seed)),
+        )
+    };
+    Ok(match task {
+        "mixture" => (
+            Box::new(MixtureImages::new(n, h.features, h.n_classes, seed)),
+            Box::new(MixtureImages::new(n_eval, h.features, h.n_classes, eval_seed)),
+        ),
+        // the CIFAR-10 analog of the tables: harder spread, fixed task seed
+        "cifar" => (
+            Box::new(MixtureImages::with_spread(n, h.features, h.n_classes, 0xC1FA, seed, 0.55)),
+            Box::new(MixtureImages::with_spread(
+                n_eval, h.features, h.n_classes, 0xC1FA, eval_seed, 0.55,
+            )),
+        ),
+        "sst2" => text_task(TextTask::Sst2),
+        "qnli" => text_task(TextTask::Qnli),
+        "qqp" => text_task(TextTask::Qqp),
+        "mnli" => text_task(TextTask::MnliLike),
+        "markov" => (
+            Box::new(MarkovCorpus::new(n, h.seq, h.vocab, 4, seed)),
+            Box::new(MarkovCorpus::new(n_eval, h.seq, h.vocab, 4, eval_seed)),
+        ),
+        "table2text" => (
+            Box::new(TableToTextCorpus::new(n, h.seq, h.vocab, 3, seed)),
+            Box::new(TableToTextCorpus::new(n_eval, h.seq, h.vocab, 3, eval_seed)),
+        ),
+        "dialogsum" => (
+            Box::new(DialogSumCorpus::new(n, h.seq, h.vocab, seed)),
+            Box::new(DialogSumCorpus::new(n_eval, h.seq, h.vocab, eval_seed)),
+        ),
+        other => anyhow::bail!(
+            "unknown data task '{other}' \
+             (auto|mixture|cifar|sst2|qnli|qqp|mnli|markov|table2text|dialogsum)"
+        ),
+    })
+}

@@ -1,21 +1,21 @@
 //! Figure harnesses: Figures 1/9 (efficiency), 2/4 (norm shift), 3
 //! (adaptive rescues fixed), 5 (quantile sweep), 6 (budget-r sweep),
-//! 7/8 (metric vs wall time). Each writes results/<name>.md (+ CSV series).
+//! 7/8 (metric vs wall time). Each writes results/<name>.md (+ CSV
+//! series). All runs construct through the session API.
 
 use std::fmt::Write as _;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::{Method, Trainer};
+use crate::coordinator::trainer::Method;
 use crate::data::lm::MarkovCorpus;
-use crate::data::Dataset;
 use crate::metrics::memmodel::{Scheme, WorkloadDims};
 use crate::metrics::{fmt_f, MdTable};
 use crate::runtime::Runtime;
 
-use super::harness::Scale;
-use super::tables::{cifar_like, sst2_like, text_opts, trainer_with_init, vision_opts};
+use super::harness::{session_for, Scale};
+use super::tables::{cifar_like, session_with_init, sst2_like, text_spec, vision_spec};
 
 fn sst2_box() -> Box<dyn Fn(usize, u64) -> Box<dyn crate::data::Dataset>> {
     Box::new(|n, s| Box::new(sst2_like(n, s)) as Box<dyn crate::data::Dataset>)
@@ -49,14 +49,15 @@ pub fn fig1(rt: &Runtime, scale: Scale) -> Result<()> {
         (Method::Ghost, Scheme::Ghost),
         (Method::Naive, Scheme::NaiveFlat),
     ] {
-        let mut opts = text_opts(method, 8.0, 1.0, 0);
-        opts.expected_batch = cfg.batch * 4 / 5;
-        let mut tr = Trainer::new(rt, config, data.len(), opts)?;
+        let mut spec = text_spec(method, 8.0, 1.0, 0);
+        spec.config = config.to_string();
+        spec.expected_batch = cfg.batch * 4 / 5;
+        let mut sess = session_for(rt, spec, data.len())?;
         // warmup (compile+cache)
-        tr.step(&data)?;
+        sess.step(&data)?;
         let t0 = Instant::now();
         for _ in 0..steps {
-            tr.step(&data)?;
+            sess.step(&data)?;
         }
         let rate = steps as f64 / t0.elapsed().as_secs_f64();
         if method == Method::NonPrivate {
@@ -84,19 +85,20 @@ pub fn fig1(rt: &Runtime, scale: Scale) -> Result<()> {
 /// training. Dumps norms[B,K] snapshots at several epochs to CSV.
 pub fn fig2(rt: &Runtime, scale: Scale) -> Result<()> {
     let data = cifar_like(scale.data, 0);
-    let mut opts = vision_opts(Method::PerLayerAdaptive, 8.0, scale.epochs.max(4.0), 0);
-    opts.quantile_r = 0.01;
-    let mut tr = Trainer::new(rt, "resmlp", data.len(), opts)?;
-    tr.collect_norms = Some(Vec::new());
-    let total = tr.total_steps;
-    let k = tr.groups().len();
+    let mut spec = vision_spec(Method::PerLayerAdaptive, 8.0, scale.epochs.max(4.0), 0);
+    spec.privacy.quantile_r = 0.01;
+    let mut sess = session_for(rt, spec, data.len())?;
+    sess.collect_norms(true)?;
+    let total = sess.total_steps;
+    let groups = sess.group_labels();
+    let k = groups.len();
     let snaps = [0u64, total / 4, total / 2, 3 * total / 4, total - 1];
     let mut csv = String::from("step,group,mean_norm,p50,p90\n");
     for s in 0..total {
-        let stats = tr.step(&data)?;
+        sess.step(&data)?;
         if snaps.contains(&s) {
             // summarize the latest [B,K] matrix per group
-            let mat = tr.collect_norms.as_ref().unwrap().last().unwrap().clone();
+            let mat = sess.collected_norms().unwrap().last().unwrap().clone();
             let b = mat.len() / k;
             for g in 0..k {
                 let mut col: Vec<f32> = (0..b).map(|i| mat[i * k + g]).collect();
@@ -105,19 +107,20 @@ pub fn fig2(rt: &Runtime, scale: Scale) -> Result<()> {
                 writeln!(
                     csv,
                     "{s},{},{mean:.6},{:.6},{:.6}",
-                    tr.groups()[g],
+                    groups[g],
                     col[b / 2],
                     col[(b * 9 / 10).min(b - 1)]
                 )?;
             }
         }
         // keep memory bounded
-        if let Some(c) = &mut tr.collect_norms {
-            if c.len() > 2 {
-                c.remove(0);
+        if let Some(tr) = sess.trainer_mut() {
+            if let Some(c) = &mut tr.collect_norms {
+                if c.len() > 2 {
+                    c.remove(0);
+                }
             }
         }
-        let _ = stats;
     }
     std::fs::create_dir_all("results")?;
     std::fs::write("results/fig2_norms.csv", &csv)?;
@@ -144,18 +147,18 @@ pub fn fig3(rt: &Runtime, scale: Scale) -> Result<()> {
         Method::PerLayerFixed,
         Method::PerLayerAdaptive,
     ] {
-        let opts = vision_opts(method, 3.0, scale.epochs.max(4.0), 0);
-        let mut tr = Trainer::new(rt, "resmlp", data.len(), opts)?;
-        let total = tr.total_steps;
+        let spec = vision_spec(method, 3.0, scale.epochs.max(4.0), 0);
+        let mut sess = session_for(rt, spec, data.len())?;
+        let total = sess.total_steps;
         let evals = 8u64;
         for s in 0..total {
-            tr.step(&data)?;
+            sess.step(&data)?;
             if s % (total / evals).max(1) == 0 || s == total - 1 {
-                let (_, acc) = tr.evaluate(&eval)?;
+                let (_, acc) = sess.evaluate(&eval)?;
                 writeln!(csv, "{},{s},{acc:.4}", method.name())?;
             }
         }
-        let (_, acc) = tr.evaluate(&eval)?;
+        let (_, acc) = sess.evaluate(&eval)?;
         t.row(&[method.name().to_string(), fmt_f(100.0 * acc, 1)]);
         eprintln!("[fig3] {} -> {:.1}", method.name(), 100.0 * acc);
     }
@@ -173,23 +176,23 @@ pub fn fig5(rt: &Runtime, scale: Scale) -> Result<()> {
     let data = cifar_like(scale.data, 0);
     let eval = cifar_like(scale.data / 4, 777);
     for q in qs_vision {
-        let mut opts = vision_opts(Method::PerLayerAdaptive, 3.0, scale.epochs, 0);
-        opts.target_q = q;
-        let mut tr = Trainer::new(rt, "resmlp", data.len(), opts)?;
-        tr.run(&data, 0)?;
-        let (_, acc) = tr.evaluate(&eval)?;
+        let mut spec = vision_spec(Method::PerLayerAdaptive, 3.0, scale.epochs, 0);
+        spec.clip.target_q = q;
+        let mut sess = session_for(rt, spec, data.len())?;
+        sess.run(&data, 0)?;
+        let (_, acc) = sess.evaluate(&eval)?;
         t.row(&["CIFAR analog".into(), format!("{q}"), fmt_f(100.0 * acc, 1)]);
         eprintln!("[fig5] cifar q={q} -> {:.1}", 100.0 * acc);
     }
     let dtext = sst2_like(scale.data, 0);
     let etext = sst2_like(scale.data / 4, 777);
     for q in [0.05, 0.4, 0.6, 0.85, 0.95] {
-        let mut opts = text_opts(Method::PerLayerAdaptive, 3.0, scale.epochs, 0);
-        opts.target_q = q;
+        let mut spec = text_spec(Method::PerLayerAdaptive, 3.0, scale.epochs, 0);
+        spec.clip.target_q = q;
         let mk = sst2_box();
-        let mut tr = trainer_with_init(rt, "cls_small", dtext.len(), opts, Some(("sst2", &*mk)))?;
-        tr.run(&dtext, 0)?;
-        let (_, acc) = tr.evaluate(&etext)?;
+        let mut sess = session_with_init(rt, spec, dtext.len(), Some(("sst2", &*mk)))?;
+        sess.run(&dtext, 0)?;
+        let (_, acc) = sess.evaluate(&etext)?;
         t.row(&["SST-2 analog".into(), format!("{q}"), fmt_f(100.0 * acc, 1)]);
         eprintln!("[fig5] sst2 q={q} -> {:.1}", 100.0 * acc);
     }
@@ -207,16 +210,16 @@ pub fn fig6(rt: &Runtime, scale: Scale) -> Result<()> {
         let mut cells = vec![format!("{r}")];
         let mut ratio = 0.0;
         for eps in [3.0, 8.0] {
-            let mut opts = text_opts(Method::PerLayerAdaptive, eps, scale.epochs, 0);
-            opts.quantile_r = r;
+            let mut spec = text_spec(Method::PerLayerAdaptive, eps, scale.epochs, 0);
+            spec.privacy.quantile_r = r;
             let mk = sst2_box();
-            let mut tr = trainer_with_init(rt, "cls_small", data.len(), opts, Some(("sst2", &*mk)))?;
+            let mut sess = session_with_init(rt, spec, data.len(), Some(("sst2", &*mk)))?;
             if eps == 3.0 {
-                let p = tr.plan.unwrap();
+                let p = sess.plan().unwrap();
                 ratio = p.sigma_grad / p.sigma_base;
             }
-            tr.run(&data, 0)?;
-            let (_, acc) = tr.evaluate(&eval)?;
+            sess.run(&data, 0)?;
+            let (_, acc) = sess.evaluate(&eval)?;
             cells.push(fmt_f(100.0 * acc, 1));
             eprintln!("[fig6] r={r} eps={eps} -> {:.1}", 100.0 * acc);
         }
@@ -239,23 +242,23 @@ pub fn fig7(rt: &Runtime, scale: Scale) -> Result<()> {
     let mut t = MdTable::new(&["Method", "wall time (s)", "final eval NLL"]);
     let pre = super::pipexp::pretrain_base(rt, "lm_small", 2.0)?;
     for method in [Method::PerLayerAdaptive, Method::FlatFixed, Method::Ghost] {
-        let mut opts = text_opts(method, 8.0, scale.epochs, 0);
-        opts.lr = 2e-3;
-        opts.clip_init = 0.1;
-        let mut tr = Trainer::new(rt, "lm_small", data.len(), opts)?;
-        let cfgm = rt.manifest.config("lm_small")?;
-        tr.set_params(crate::runtime::params_from_map(cfgm, &pre)?)?;
-        let total = tr.total_steps;
+        let mut spec = text_spec(method, 8.0, scale.epochs, 0);
+        spec.config = "lm_small".to_string();
+        spec.optim.lr = 2e-3;
+        spec.clip.clip_init = 0.1;
+        let mut sess = session_for(rt, spec, data.len())?;
+        sess.load_param_map(&pre)?;
+        let total = sess.total_steps;
         let t0 = Instant::now();
         for s in 0..total {
-            tr.step(&data)?;
+            sess.step(&data)?;
             if s % (total / 6).max(1) == 0 || s == total - 1 {
-                let (nll, _) = tr.evaluate(&eval)?;
+                let (nll, _) = sess.evaluate(&eval)?;
                 writeln!(csv, "{},{:.2},{nll:.4}", method.name(), t0.elapsed().as_secs_f64())?;
             }
         }
         let wall = t0.elapsed().as_secs_f64();
-        let (nll, _) = tr.evaluate(&eval)?;
+        let (nll, _) = sess.evaluate(&eval)?;
         t.row(&[method.name().to_string(), fmt_f(wall, 1), fmt_f(nll, 4)]);
         eprintln!("[fig7] {} wall {:.1}s nll {:.4}", method.name(), wall, nll);
     }

@@ -3,15 +3,14 @@
 
 use anyhow::Result;
 
-use crate::coordinator::{Method, Trainer};
-use crate::data::Dataset;
+use crate::coordinator::trainer::Method;
 use crate::data::lm::TableToTextCorpus;
 use crate::metrics::bleu::{corpus_bleu, rouge_l};
 use crate::metrics::{fmt_f, MdTable};
 use crate::runtime::{Exec, HostValue, IntTensor, Runtime, Tensor};
 
-use super::harness::Scale;
-use super::tables::text_opts;
+use super::harness::{session_for, Scale};
+use super::tables::text_spec;
 
 /// Greedy-decode continuations with a full-sequence `logits` entry.
 /// `prefixes` are ragged; each is completed to `seq` tokens. Returns the
@@ -103,18 +102,19 @@ pub fn table5(rt: &Runtime, scale: Scale) -> Result<()> {
     ];
     let pre = super::pipexp::pretrain_base(rt, config, 2.0)?;
     for (label, method, eps) in runs {
-        let mut opts = text_opts(method, eps.max(1.0), scale.epochs, 0);
-        opts.lr = 2e-3;
-        opts.clip_init = 0.1;
-        opts.target_q = 0.5;
+        let mut spec = text_spec(method, eps.max(1.0), scale.epochs, 0);
+        spec.config = config.to_string();
+        spec.optim.lr = 2e-3;
+        spec.clip.clip_init = 0.1;
+        spec.clip.target_q = 0.5;
         if method == Method::NonPrivate {
-            opts.lr = 1e-3;
+            spec.optim.lr = 1e-3;
         }
-        let mut tr = Trainer::new(rt, config, train.len(), opts)?;
-        tr.set_params(crate::runtime::params_from_map(&cfg, &pre)?)?;
-        tr.run(&train, 0)?;
-        let (nll, _) = tr.evaluate(&eval)?;
-        let (bleu, rl) = score_generation(rt, config, &tr.params, &eval, n_eval)?;
+        let mut sess = session_for(rt, spec, train.len())?;
+        sess.load_param_map(&pre)?;
+        sess.run(&train, 0)?;
+        let (nll, _) = sess.evaluate(&eval)?;
+        let (bleu, rl) = score_generation(rt, config, sess.params()?, &eval, n_eval)?;
         t.row(&[
             label.clone(),
             method.name().to_string(),

@@ -1,10 +1,11 @@
-//! Shared helpers for the table/figure runners.
+//! Shared helpers for the table/figure runners — all built on the session
+//! API so every experiment constructs (and collects `StepEvent`s) through
+//! the same path as the CLI.
 
 use anyhow::Result;
 
-use crate::coordinator::{Method, TrainOpts, Trainer};
-use crate::data::Dataset;
 use crate::runtime::Runtime;
+use crate::session::{RunSpec, Session, SessionBuilder};
 
 /// Scale knob: default configs are CPU-budget sized; `--paper-scale`
 /// raises epochs / dataset sizes toward the paper's.
@@ -25,20 +26,9 @@ impl Scale {
     }
 }
 
-/// Train with `opts` on `data`, return (final train-ema loss, eval acc).
-pub fn train_eval(
-    rt: &Runtime,
-    config: &str,
-    data: &dyn Dataset,
-    eval_data: &dyn Dataset,
-    opts: TrainOpts,
-) -> Result<(f64, f64)> {
-    let mut tr = Trainer::new(rt, config, data.len(), opts)?;
-    let hist = tr.run(data, 0)?;
-    let tail = hist.iter().rev().take(20).map(|s| s.loss).sum::<f64>()
-        / hist.len().min(20).max(1) as f64;
-    let (_, acc) = tr.evaluate(eval_data)?;
-    Ok((tail, acc))
+/// Build a session for `spec` against a caller-owned dataset size.
+pub fn session_for<'r>(rt: &'r Runtime, spec: RunSpec, n_data: usize) -> Result<Session<'r>> {
+    SessionBuilder::from_spec(rt, spec).build(n_data)
 }
 
 /// Mean and std over seeds of a per-seed experiment.
@@ -50,9 +40,4 @@ pub fn over_seeds<F: FnMut(u64) -> Result<f64>>(seeds: usize, mut f: F) -> Resul
     let mean = vals.iter().sum::<f64>() / vals.len() as f64;
     let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / vals.len() as f64;
     Ok((mean, var.sqrt()))
-}
-
-/// Convenience: default TrainOpts for a method at a given epsilon.
-pub fn opts_for(method: Method, epsilon: f64, epochs: f64, seed: u64) -> TrainOpts {
-    TrainOpts { method, epsilon, epochs, seed, ..Default::default() }
 }

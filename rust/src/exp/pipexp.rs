@@ -1,28 +1,30 @@
 //! Pipeline experiments: Table 6 (GPT-3-analog DP-LoRA fine-tuning with
 //! per-device clipping) and the section-4 scheduling-overhead comparison.
+//! Both backends are driven through the session API; pipeline sigma comes
+//! from the accountant (never hand-picked).
 
 use std::collections::HashMap;
 
 use anyhow::Result;
 
 use crate::coordinator::accountant;
-use crate::coordinator::{Method, Trainer};
+use crate::coordinator::trainer::Method;
 use crate::data::lm::{DialogSumCorpus, MarkovCorpus};
-use crate::data::Dataset;
 use crate::metrics::bleu::{corpus_bleu, rouge_l};
 use crate::metrics::{fmt_f, MdTable};
-use crate::pipeline::{merge_lora, PipelineEngine, PipelineMode, PipelineOpts};
-use crate::runtime::{checkpoint, HostValue, IntTensor, Runtime, Tensor};
+use crate::pipeline::{merge_lora, PipelineMode};
+use crate::runtime::{checkpoint, Runtime, Tensor};
+use crate::session::{ClipMode, ClipPolicy, GroupBy, OptimSpec, PrivacySpec};
 
-use super::harness::Scale;
-use super::tables::text_opts;
+use super::harness::{session_for, Scale};
+use super::tables::text_spec;
 
 /// Pretrain the GPT-3-analog base LM non-privately (single device, full
 /// model) and cache the checkpoint under results/. Returns the param map.
 pub fn pretrain_base(
     rt: &Runtime,
     config: &str,
-    steps_budget: f64,
+    epochs_budget: f64,
 ) -> Result<HashMap<String, Tensor>> {
     let path = format!("results/pretrained_{config}.bin");
     if let Ok(map) = checkpoint::read(&path) {
@@ -31,17 +33,13 @@ pub fn pretrain_base(
     }
     let cfg = rt.manifest.config(config)?.clone();
     let data = MarkovCorpus::new(2048, cfg.hyper.seq, cfg.hyper.vocab, 4, 7);
-    let mut opts = text_opts(Method::NonPrivate, 0.0, steps_budget, 0);
-    opts.lr = 2e-3;
-    opts.expected_batch = cfg.batch;
-    let mut tr = Trainer::new(rt, config, data.len(), opts)?;
-    tr.run(&data, 25)?;
-    let map: HashMap<String, Tensor> = cfg
-        .params
-        .iter()
-        .enumerate()
-        .map(|(i, p)| (p.name.clone(), tr.params[i].clone()))
-        .collect();
+    let mut spec = text_spec(Method::NonPrivate, 0.0, epochs_budget, 0);
+    spec.config = config.to_string();
+    spec.optim.lr = 2e-3;
+    spec.expected_batch = cfg.batch;
+    let mut sess = session_for(rt, spec, data.len())?;
+    sess.run(&data, 25)?;
+    let map = sess.param_map();
     std::fs::create_dir_all("results")?;
     let mut items: Vec<(String, &Tensor)> = map.iter().map(|(k, v)| (k.clone(), v)).collect();
     items.sort_by(|a, b| a.0.cmp(&b.0));
@@ -71,6 +69,34 @@ fn decode_score(
     Ok((100.0 * corpus_bleu(&hyps, &refs, 2), 100.0 * rouge_l(&hyps, &refs)))
 }
 
+/// Per-device clipping spec for the pipeline configs: DP-Adam LoRA
+/// fine-tuning at threshold `clip`, sigma accountant-derived.
+fn pipe_spec(config: &str, eps: f64, clip: f64, steps: usize, seed: u64) -> crate::session::RunSpec {
+    let mut spec = crate::session::RunSpec::for_config(config);
+    spec.clip = ClipPolicy {
+        clip_init: clip,
+        ..ClipPolicy::new(
+            if eps.is_finite() { GroupBy::PerDevice } else { GroupBy::Flat },
+            if eps.is_finite() { ClipMode::Fixed } else { ClipMode::NonPrivate },
+        )
+    };
+    spec.privacy = PrivacySpec { epsilon: eps.min(1e6).max(1e-9), delta: 1e-5, quantile_r: 0.0 };
+    spec.optim = OptimSpec {
+        kind: crate::coordinator::optimizer::OptimizerKind::Adam {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+        },
+        lr: 5e-3,
+        weight_decay: 0.0,
+        lr_decay: false,
+    };
+    spec.pipe.n_micro = 4;
+    spec.pipe.steps = steps;
+    spec.seed = seed;
+    spec
+}
+
 /// Table 6: SAMSum-analog dialog summarization. Rows:
 ///   - GPT-2 analog (lm_small_lora), single device, flat-clipped DP LoRA
 ///   - GPT-3 analog (lm_mid_pipe_lora), 4-device pipeline, per-device
@@ -92,29 +118,19 @@ pub fn table6(rt: &Runtime, scale: Scale) -> Result<()> {
         let eval = DialogSumCorpus::new(96, cfg.hyper.seq, cfg.hyper.vocab, 991);
         for &eps in &epss {
             let method = if eps.is_finite() { Method::FlatFixed } else { Method::NonPrivate };
-            let mut opts = text_opts(method, eps.min(1e6), scale.epochs, 0);
-            opts.lr = 5e-3;
-            opts.clip_init = 1e-2;
-            let mut tr = Trainer::new(rt, config, train.len(), opts)?;
+            let mut spec = text_spec(method, eps.min(1e6), scale.epochs, 0);
+            spec.config = config.to_string();
+            spec.optim.lr = 5e-3;
+            spec.clip.clip_init = 1e-2;
+            let mut sess = session_for(rt, spec, train.len())?;
             // load pretrained base weights under the LoRA param layout
-            let specs = rt.manifest.config(config)?.params.clone();
-            let mut params = tr.params.clone();
-            for (i, s) in specs.iter().enumerate() {
-                if let Some(w) = pre.get(&s.name) {
-                    params[i] = w.clone();
-                }
-            }
-            tr.set_params(params)?;
-            tr.run(&train, 0)?;
-            let (nll, _) = tr.evaluate(&eval)?;
+            // (names absent from the map — the adapters — keep their init)
+            sess.load_param_map(&pre)?;
+            sess.run(&train, 0)?;
+            let (nll, _) = sess.evaluate(&eval)?;
             // merge lora into base and decode
             let mut merged = pre.clone();
-            let tuned: HashMap<String, Tensor> = specs
-                .iter()
-                .enumerate()
-                .map(|(i, s)| (s.name.clone(), tr.params[i].clone()))
-                .collect();
-            merge_lora(&mut merged, &tuned, cfg.hyper.lora_rank, cfg.hyper.lora_scale)?;
+            merge_lora(&mut merged, &sess.param_map(), cfg.hyper.lora_rank, cfg.hyper.lora_scale)?;
             let (bleu, rl) = decode_score(rt, base, &merged, &eval, 48)?;
             let label = if eps.is_finite() { format!("{eps}") } else { "non-private".into() };
             t.row(&[
@@ -143,30 +159,12 @@ pub fn table6(rt: &Runtime, scale: Scale) -> Result<()> {
             let n_micro = 4usize;
             let minibatch = cfg.batch * n_micro;
             let steps = ((scale.epochs * n as f64) / minibatch as f64).ceil() as usize;
-            let sigma = if eps.is_finite() {
-                accountant::noise_multiplier(minibatch as f64 / n as f64, steps as u64, eps, 1e-5)
-            } else {
-                0.0
-            };
-            let opts = PipelineOpts {
-                mode: if eps.is_finite() { PipelineMode::PerDevice } else { PipelineMode::NonPrivate },
-                n_micro,
-                clip: 1e-2,
-                sigma,
-                lr: 5e-3,
-                adaptive: false,
-                ..Default::default()
-            };
-            let mut eng = PipelineEngine::new(rt, config, opts)?;
-            eng.load_params(&pre)?;
-            let mut rng = crate::coordinator::noise::Rng::seeded(11);
-            for _ in 0..steps {
-                let idx: Vec<usize> = (0..minibatch).map(|_| rng.gen_range(train.len())).collect();
-                eng.step(&train, &idx)?;
-            }
-            let nll = eng.evaluate(&eval)?;
+            let mut sess = session_for(rt, pipe_spec(config, eps, 1e-2, steps.max(1), 11), train.len())?;
+            sess.load_param_map(&pre)?;
+            sess.run(&train, 0)?;
+            let (nll, _) = sess.evaluate(&eval)?;
             let mut merged = pre.clone();
-            merge_lora(&mut merged, &eng.dump_params(), cfg.hyper.lora_rank, cfg.hyper.lora_scale)?;
+            merge_lora(&mut merged, &sess.param_map(), cfg.hyper.lora_rank, cfg.hyper.lora_scale)?;
             let (bleu, rl) = decode_score(rt, base, &merged, &eval, 48)?;
             let label = if eps.is_finite() { format!("{eps}") } else { "non-private".into() };
             t.row(&[
@@ -201,16 +199,18 @@ pub fn pipeline_overhead(rt: &Runtime, scale: Scale) -> Result<()> {
     ]);
     let mut base_sim = 0.0;
     for mode in [PipelineMode::PerDevice, PipelineMode::FlatSync] {
-        let opts = PipelineOpts { mode, n_micro: 4, sigma: 0.5, clip: 1e-2, ..Default::default() };
-        let mut eng = PipelineEngine::new(rt, config, opts)?;
-        let mb = eng.minibatch();
+        // timing comparison: both modes at eps=1 over the same schedule
+        let mut spec = pipe_spec(config, 1.0, 1e-2, steps + 1, 0);
+        spec.clip = ClipPolicy {
+            clip_init: 1e-2,
+            ..ClipPolicy::from_pipeline_mode(mode, false)
+        };
+        let mut sess = session_for(rt, spec, data.len())?;
         // warmup
-        let idx: Vec<usize> = (0..mb).collect();
-        eng.step(&data, &idx)?;
+        sess.step(&data)?;
         let (mut sim, mut host, mut syncs, mut calls) = (0.0, 0.0, 0usize, 0usize);
-        for s in 0..steps {
-            let idx: Vec<usize> = (0..mb).map(|i| (s * mb + i) % data.len()).collect();
-            let st = eng.step(&data, &idx)?;
+        for _ in 0..steps {
+            let st = sess.step(&data)?;
             sim += st.sim_secs;
             host += st.host_secs;
             syncs += st.syncs;
@@ -266,6 +266,3 @@ pub fn accountant_table(_rt: &Runtime, _scale: Scale) -> Result<()> {
     println!("{}", t.render());
     Ok(())
 }
-
-#[allow(unused)]
-fn unused_types(_: IntTensor, _: HostValue, _: &dyn Dataset) {}

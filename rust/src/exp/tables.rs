@@ -1,18 +1,19 @@
 //! Accuracy-table harnesses: Tables 1, 2, 3, 4, 10, 11 of the paper.
 //! Each writes results/<name>.md with the same rows the paper reports.
-
-use std::collections::HashMap;
+//! All runs go through the session API (one construction path with the
+//! CLI; `StepEvent` streams; accountant-derived noise).
 
 use anyhow::Result;
 
-use crate::coordinator::optimizer::OptimizerKind;
-use crate::coordinator::{Allocation, Method, TrainOpts, Trainer};
+use crate::coordinator::noise::Allocation;
+use crate::coordinator::trainer::Method;
 use crate::data::classif::{MixtureImages, SentimentCorpus, TextTask};
 use crate::data::Dataset;
 use crate::metrics::{fmt_f, MdTable};
 use crate::runtime::{checkpoint, Runtime, Tensor};
+use crate::session::{ClipPolicy, OptimSpec, PrivacySpec, RunSpec, Session};
 
-use super::harness::Scale;
+use super::harness::{session_for, Scale};
 
 /// Non-privately pretrain `config` on a held-out shard of the task (the
 /// public-data analog of the paper's pretrained RoBERTa) and cache the
@@ -33,36 +34,38 @@ pub fn pretrained_params(
         }
     }
     let data = mk_data(4096, 7777);
-    let mut opts = text_opts(Method::NonPrivate, 0.0, 4.0, 7);
-    opts.lr = 1e-3;
-    let mut tr = Trainer::new(rt, config, data.len(), opts)?;
-    tr.run(&*data, 0)?;
+    let mut spec = text_spec(Method::NonPrivate, 0.0, 4.0, 7);
+    spec.config = config.to_string();
+    spec.optim.lr = 1e-3;
+    let mut sess = session_for(rt, spec, data.len())?;
+    sess.run(&*data, 0)?;
     std::fs::create_dir_all("results")?;
+    let params = sess.params()?.to_vec();
     let named: Vec<(String, &Tensor)> = cfg
         .params
         .iter()
-        .zip(&tr.params)
+        .zip(&params)
         .map(|(pi, t)| (pi.name.clone(), t))
         .collect();
     checkpoint::write(&path, &named)?;
     eprintln!("[pretrain] cached {path}");
-    Ok(tr.params.clone())
+    Ok(params)
 }
 
-/// Build a trainer, fine-tuning from the cached pretrained checkpoint when
+/// Build a session, fine-tuning from the cached pretrained checkpoint when
 /// `pretrain` labels one.
-pub fn trainer_with_init<'r>(
+pub fn session_with_init<'r>(
     rt: &'r Runtime,
-    config: &str,
+    spec: RunSpec,
     n_data: usize,
-    opts: TrainOpts,
     pretrain: Option<(&str, &dyn Fn(usize, u64) -> Box<dyn Dataset>)>,
-) -> Result<Trainer<'r>> {
-    let mut tr = Trainer::new(rt, config, n_data, opts)?;
+) -> Result<Session<'r>> {
+    let config = spec.config.clone();
+    let mut sess = session_for(rt, spec, n_data)?;
     if let Some((label, mk)) = pretrain {
-        tr.set_params(pretrained_params(rt, config, label, mk)?)?;
+        sess.set_params(pretrained_params(rt, &config, label, mk)?)?;
     }
-    Ok(tr)
+    Ok(sess)
 }
 
 /// The CIFAR-10 analog task (harder spread so clipping bias is visible).
@@ -74,33 +77,36 @@ pub fn sst2_like(n: usize, seed: u64) -> SentimentCorpus {
     SentimentCorpus::new(TextTask::Sst2, n, 32, 400, seed)
 }
 
-pub fn vision_opts(method: Method, epsilon: f64, epochs: f64, seed: u64) -> TrainOpts {
-    TrainOpts {
-        method,
-        epsilon,
-        epochs,
-        seed,
-        lr: 0.25,
+/// The paper's vision hyperparameters (DP-SGD, C=1, q-target 0.6) as a
+/// run spec for the `resmlp` family.
+pub fn vision_spec(method: Method, epsilon: f64, epochs: f64, seed: u64) -> RunSpec {
+    let mut spec = RunSpec::for_config("resmlp");
+    spec.clip = ClipPolicy {
         clip_init: 1.0,
         target_q: 0.6,
-        quantile_r: 0.01,
-        ..Default::default()
-    }
+        ..ClipPolicy::from_method(method)
+    };
+    spec.privacy = PrivacySpec { epsilon: epsilon.max(1e-9), delta: 1e-5, quantile_r: 0.01 };
+    spec.optim = OptimSpec::sgd(0.25);
+    spec.epochs = epochs;
+    spec.seed = seed;
+    spec
 }
 
-pub fn text_opts(method: Method, epsilon: f64, epochs: f64, seed: u64) -> TrainOpts {
-    TrainOpts {
-        method,
-        epsilon,
-        epochs,
-        seed,
-        lr: 1e-3,
-        optimizer: OptimizerKind::Adam { beta1: 0.9, beta2: 0.98, eps: 1e-6 },
+/// The paper's text hyperparameters (DP-Adam, C=0.1, q-target 0.85) as a
+/// run spec for the classifier/LM families.
+pub fn text_spec(method: Method, epsilon: f64, epochs: f64, seed: u64) -> RunSpec {
+    let mut spec = RunSpec::for_config("cls_small");
+    spec.clip = ClipPolicy {
         clip_init: 0.1,
         target_q: 0.85,
-        quantile_r: 0.1,
-        ..Default::default()
-    }
+        ..ClipPolicy::from_method(method)
+    };
+    spec.privacy = PrivacySpec { epsilon: epsilon.max(1e-9), delta: 1e-5, quantile_r: 0.1 };
+    spec.optim = OptimSpec::adam(1e-3);
+    spec.epochs = epochs;
+    spec.seed = seed;
+    spec
 }
 
 pub struct Acc {
@@ -109,8 +115,8 @@ pub struct Acc {
     pub train_acc: f64,
 }
 
-/// Train `method` on `task` ("cifar" or an SST-2-style TextTask) and
-/// report eval accuracy over seeds.
+/// Train `method` on `config` and report eval accuracy over seeds.
+#[allow(clippy::too_many_arguments)]
 pub fn run_acc(
     rt: &Runtime,
     config: &str,
@@ -118,7 +124,7 @@ pub fn run_acc(
     epsilon: f64,
     epochs: f64,
     scale: Scale,
-    mk_opts: fn(Method, f64, f64, u64) -> TrainOpts,
+    mk_spec: fn(Method, f64, f64, u64) -> RunSpec,
     mk_data: &dyn Fn(usize, u64) -> Box<dyn Dataset>,
     pretrain: Option<&str>,
 ) -> Result<Acc> {
@@ -127,12 +133,13 @@ pub fn run_acc(
     for seed in 0..scale.seeds as u64 {
         let train = mk_data(scale.data, seed);
         let eval = mk_data(scale.data / 4, seed + 500);
-        let opts = mk_opts(method, epsilon, epochs, seed);
-        let mut tr = trainer_with_init(rt, config, train.len(), opts,
-            pretrain.map(|l| (l, mk_data)))?;
-        tr.run(&*train, 0)?;
-        let (_, acc) = tr.evaluate(&*eval)?;
-        let (_, tacc) = tr.evaluate(&*train)?;
+        let mut spec = mk_spec(method, epsilon, epochs, seed);
+        spec.config = config.to_string();
+        let mut sess =
+            session_with_init(rt, spec, train.len(), pretrain.map(|l| (l, mk_data)))?;
+        sess.run(&*train, 0)?;
+        let (_, acc) = sess.evaluate(&*eval)?;
+        let (_, tacc) = sess.evaluate(&*train)?;
         vals.push(acc);
         train_acc += tacc;
     }
@@ -153,15 +160,15 @@ fn sst2_data() -> Box<dyn Fn(usize, u64) -> Box<dyn Dataset>> {
 /// Table 1: fixed per-layer underperforms fixed flat (both tasks).
 pub fn table1(rt: &Runtime, scale: Scale) -> Result<()> {
     let mut t = MdTable::new(&["Task", "Method", "eps=3", "eps=8"]);
-    let setups: Vec<(&str, &str, fn(Method, f64, f64, u64) -> TrainOpts, Box<dyn Fn(usize, u64) -> Box<dyn Dataset>>, Option<&str>)> = vec![
-        ("CIFAR-10 analog (WideResMLP)", "resmlp", vision_opts, cifar_data(scale), None),
-        ("SST-2 analog (encoder)", "cls_small", text_opts, sst2_data(), Some("sst2")),
+    let setups: Vec<(&str, &str, fn(Method, f64, f64, u64) -> RunSpec, Box<dyn Fn(usize, u64) -> Box<dyn Dataset>>, Option<&str>)> = vec![
+        ("CIFAR-10 analog (WideResMLP)", "resmlp", vision_spec, cifar_data(scale), None),
+        ("SST-2 analog (encoder)", "cls_small", text_spec, sst2_data(), Some("sst2")),
     ];
-    for (task, config, opts_fn, data, pre) in setups {
+    for (task, config, spec_fn, data, pre) in setups {
         for method in [Method::PerLayerFixed, Method::FlatFixed] {
             let mut cells = vec![task.to_string(), method.name().to_string()];
             for eps in [3.0, 8.0] {
-                let a = run_acc(rt, config, method, eps, scale.epochs, scale, opts_fn, &*data, pre)?;
+                let a = run_acc(rt, config, method, eps, scale.epochs, scale, spec_fn, &*data, pre)?;
                 cells.push(format!("{} ({})", fmt_f(a.mean, 1), fmt_f(a.std, 2)));
             }
             t.row(&cells);
@@ -183,7 +190,7 @@ pub fn table2(rt: &Runtime, scale: Scale) -> Result<()> {
     for method in [Method::FlatFixed, Method::PerLayerAdaptive] {
         let mut cells = vec![method.name().to_string()];
         for eps in [1.0, 3.0, 5.0, 8.0] {
-            let a = run_acc(rt, "resmlp", method, eps, scale.epochs, scale, vision_opts, &*data, None)?;
+            let a = run_acc(rt, "resmlp", method, eps, scale.epochs, scale, vision_spec, &*data, None)?;
             cells.push(fmt_f(a.train_acc, 1));
             cells.push(fmt_f(a.mean, 1));
             eprintln!("[table2] {} eps={eps} -> {:.1}", method.name(), a.mean);
@@ -206,7 +213,7 @@ pub fn table3(rt: &Runtime, scale: Scale) -> Result<()> {
                 let data: Box<dyn Fn(usize, u64) -> Box<dyn Dataset>> = Box::new(move |n, s| {
                     Box::new(SentimentCorpus::new(task, n, 32, 400, s)) as Box<dyn Dataset>
                 });
-                let a = run_acc(rt, "cls_small", method, eps, scale.epochs, scale, text_opts, &*data, Some(task.name()))?;
+                let a = run_acc(rt, "cls_small", method, eps, scale.epochs, scale, text_spec, &*data, Some(task.name()))?;
                 cells.push(fmt_f(a.mean, 1));
                 eprintln!("[table3] {} {} eps={eps} -> {:.1}", method.name(), task.name(), a.mean);
             }
@@ -231,7 +238,7 @@ pub fn table4(rt: &Runtime, scale: Scale) -> Result<()> {
         for method in [Method::FlatFixed, Method::PerLayerAdaptive] {
             let mut cells = vec![format!("{eps}"), method.name().to_string()];
             for &e in &epoch_grid {
-                let a = run_acc(rt, "cls_small", method, eps, e, scale, text_opts, &*data, Some("sst2"))?;
+                let a = run_acc(rt, "cls_small", method, eps, e, scale, text_spec, &*data, Some("sst2"))?;
                 cells.push(format!("{} ({})", fmt_f(a.mean, 1), fmt_f(a.std, 2)));
                 eprintln!("[table4] eps={eps} {} E={e} -> {:.1}", method.name(), a.mean);
             }
@@ -260,24 +267,18 @@ pub fn table10(rt: &Runtime, scale: Scale) -> Result<()> {
     ] {
         let mut cells = vec![name.to_string()];
         for eps in [3.0, 8.0] {
-            let mk = move |m: Method, e: f64, ep: f64, s: u64| {
-                let mut o = text_opts(m, e, ep, s);
-                o.allocation = alloc;
-                o
-            };
-            // can't use fn pointer for closure; inline run instead
             let mut vals = Vec::new();
             let mut tacc_sum = 0.0;
             for seed in 0..scale.seeds as u64 {
                 let train = data(scale.data, seed);
                 let eval = data(scale.data / 4, seed + 500);
-                let mut tr = trainer_with_init(
-                    rt, "cls_small", train.len(),
-                    mk(Method::PerLayerAdaptive, eps, scale.epochs, seed),
-                    Some(("sst2", &*data)))?;
-                tr.run(&*train, 0)?;
-                let (_, acc) = tr.evaluate(&*eval)?;
-                let (_, tacc) = tr.evaluate(&*train)?;
+                let mut spec = text_spec(Method::PerLayerAdaptive, eps, scale.epochs, seed);
+                spec.clip.allocation = alloc;
+                let mut sess =
+                    session_with_init(rt, spec, train.len(), Some(("sst2", &*data)))?;
+                sess.run(&*train, 0)?;
+                let (_, acc) = sess.evaluate(&*eval)?;
+                let (_, tacc) = sess.evaluate(&*train)?;
                 vals.push(acc);
                 tacc_sum += tacc;
             }
@@ -296,11 +297,11 @@ pub fn table10(rt: &Runtime, scale: Scale) -> Result<()> {
 /// Table 11: adaptivity ablation — fixed/adaptive x flat/per-layer.
 pub fn table11(rt: &Runtime, scale: Scale) -> Result<()> {
     let mut t = MdTable::new(&["Task", "Method", "eps=3", "eps=8"]);
-    let setups: Vec<(&str, &str, fn(Method, f64, f64, u64) -> TrainOpts, Box<dyn Fn(usize, u64) -> Box<dyn Dataset>>, Option<&str>)> = vec![
-        ("CIFAR analog", "resmlp", vision_opts, cifar_data(scale), None),
-        ("SST-2 analog", "cls_small", text_opts, sst2_data(), Some("sst2")),
+    let setups: Vec<(&str, &str, fn(Method, f64, f64, u64) -> RunSpec, Box<dyn Fn(usize, u64) -> Box<dyn Dataset>>, Option<&str>)> = vec![
+        ("CIFAR analog", "resmlp", vision_spec, cifar_data(scale), None),
+        ("SST-2 analog", "cls_small", text_spec, sst2_data(), Some("sst2")),
     ];
-    for (task, config, opts_fn, data, pre) in setups {
+    for (task, config, spec_fn, data, pre) in setups {
         for method in [
             Method::FlatFixed,
             Method::FlatAdaptive,
@@ -309,7 +310,7 @@ pub fn table11(rt: &Runtime, scale: Scale) -> Result<()> {
         ] {
             let mut cells = vec![task.to_string(), method.name().to_string()];
             for eps in [3.0, 8.0] {
-                let a = run_acc(rt, config, method, eps, scale.epochs, scale, opts_fn, &*data, pre)?;
+                let a = run_acc(rt, config, method, eps, scale.epochs, scale, spec_fn, &*data, pre)?;
                 cells.push(format!("{} ({})", fmt_f(a.mean, 1), fmt_f(a.std, 2)));
                 eprintln!("[table11] {task} {} eps={eps} -> {:.1}", method.name(), a.mean);
             }

@@ -10,25 +10,41 @@
 //! * **L2** JAX models (`python/compile`): manual-backprop transformer /
 //!   residual-MLP with per-layer clipping fused into the backward pass,
 //!   exported once to `artifacts/*.hlo.txt`.
-//! * **L3** this crate: PJRT runtime, privacy accountant, adaptive quantile
-//!   state, noise allocation, DP optimizers, Poisson sampling, the
-//!   pipeline-parallel engine with per-device clipping, data substrates,
-//!   and the experiment harness regenerating every table and figure.
+//! * **L3** this crate: PJRT runtime, privacy accountant, the unified
+//!   [`session`] API over the single-device and pipeline-parallel
+//!   backends, adaptive quantile state, noise allocation, DP optimizers,
+//!   Poisson sampling, data substrates, and the experiment harness
+//!   regenerating every table and figure.
 //!
-//! Quick start (after `make artifacts`):
+//! ## Quick start (after `make artifacts`)
+//!
+//! Every training scenario — flat / per-layer / per-device clipping,
+//! fixed or adaptive thresholds, one device or a pipeline — is one
+//! [`session::RunSpec`] away. The builder selects the backend from the
+//! manifest (configs with pipeline stages run on the pipeline engine) and
+//! derives all noise from the accountant:
+//!
 //! ```no_run
-//! use gwclip::coordinator::{Method, TrainOpts, Trainer};
-//! use gwclip::data::classif::MixtureImages;
 //! use gwclip::runtime::Runtime;
+//! use gwclip::session::{ClipMode, ClipPolicy, GroupBy, PrivacySpec, Session};
 //!
 //! let rt = Runtime::new("artifacts").unwrap();
-//! let data = MixtureImages::new(4096, 64, 10, 0);
-//! let opts = TrainOpts { method: Method::PerLayerAdaptive, epsilon: 3.0, ..Default::default() };
-//! let mut t = Trainer::new(&rt, "resmlp", 4096, opts).unwrap();
-//! t.run(&data, 10).unwrap();
-//! let (loss, acc) = t.evaluate(&data).unwrap();
+//! let (mut sess, train, eval) = Session::builder(&rt, "resmlp")
+//!     .privacy(PrivacySpec::new(3.0, 1e-5))
+//!     .clip(ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive))
+//!     .epochs(3.0)
+//!     .build_with_data()
+//!     .unwrap();
+//! println!("{}", sess.describe());
+//! sess.run(&*train, 10).unwrap();
+//! let (loss, acc) = sess.evaluate(&*eval).unwrap();
 //! println!("loss {loss:.3} acc {acc:.3}");
 //! ```
+//!
+//! Runs are also declarable as TOML/JSON spec files executed by
+//! `gwclip run --spec run.toml` (see `docs/SESSION_API.md`). The legacy
+//! `Trainer::new` / `PipelineEngine::new` constructors remain as thin
+//! deprecated shims over the same shared [`session::DpCore`].
 
 pub mod coordinator;
 pub mod data;
@@ -36,6 +52,7 @@ pub mod exp;
 pub mod metrics;
 pub mod pipeline;
 pub mod runtime;
+pub mod session;
 pub mod util;
 
 /// Default artifact directory (relative to the repo root).

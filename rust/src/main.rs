@@ -1,46 +1,40 @@
 //! gwclip CLI — leader entrypoint.
 //!
-//! Subcommands map one-to-one onto the paper's tables and figures
-//! (DESIGN.md section 6); `train` and `pipeline` expose the library for
-//! ad-hoc runs.
+//! `run` executes any scenario from a declarative TOML/JSON spec file;
+//! `train` and `pipeline` are flag-driven shorthands over the same
+//! session API (both backends, accountant-derived noise everywhere).
+//! `exp` subcommands map one-to-one onto the paper's tables and figures
+//! (DESIGN.md section 6).
 
 use anyhow::{bail, Result};
 
-use gwclip::coordinator::{Allocation, Method, TrainOpts, Trainer};
-use gwclip::data::classif::MixtureImages;
-use gwclip::data::lm::MarkovCorpus;
-use gwclip::data::Dataset;
-use gwclip::pipeline::{PipelineEngine, PipelineMode, PipelineOpts};
+use gwclip::coordinator::noise::Allocation;
+use gwclip::coordinator::trainer::Method;
+use gwclip::pipeline::PipelineMode;
 use gwclip::runtime::Runtime;
+use gwclip::session::{
+    ClipPolicy, DataSpec, OptimSpec, PrivacySpec, RunSpec, Session, SessionBuilder,
+};
 use gwclip::util::cli::Args;
 
 const USAGE: &str = "\
 gwclip — group-wise clipping for DP deep learning (ICLR 2023 reproduction)
 
 USAGE:
+  gwclip run      --spec run.toml|run.json   (one declarative file, either
+                  backend; see docs/SESSION_API.md) [--print-spec]
   gwclip train    [--config resmlp] [--method adaptive-per-layer] [--epsilon 3]
-                  [--epochs 3] [--lr 0.5] [--n-data 4096] [--seed 0]
-                  [--allocation global|equal|weighted]
+                  [--delta 1e-5] [--epochs 3] [--lr 0.5] [--n-data 4096]
+                  [--seed 0] [--allocation global|equal|weighted]
+                  [--clip 1] [--quantile 0.5] [--opt sgd|momentum|adam]
   gwclip pipeline [--config lm_mid_pipe_lora] [--mode per-device|flat-sync|non-private]
-                  [--steps 10] [--n-micro 4]
+                  [--epsilon 1] [--delta 1e-5] [--steps 10] [--n-micro 4]
+                  [--clip 0.01] [--lr 5e-3] [--n-data 2048] [--seed 0]
   gwclip exp <which>   table1|table2|table3|table4|table5|table6|table10|table11|
                        fig1|fig2|fig3|fig5|fig6|fig7|pipeline-overhead|accountant|all
                        [--paper-scale]
   common: [--artifacts DIR]
 ";
-
-fn parse_method(s: &str) -> Result<Method> {
-    Ok(match s {
-        "non-private" | "nonprivate" => Method::NonPrivate,
-        "flat" | "fixed-flat" => Method::FlatFixed,
-        "adaptive-flat" => Method::FlatAdaptive,
-        "per-layer" | "fixed-per-layer" => Method::PerLayerFixed,
-        "adaptive-per-layer" => Method::PerLayerAdaptive,
-        "ghost" => Method::Ghost,
-        "naive" => Method::Naive,
-        _ => bail!("unknown method '{s}'"),
-    })
-}
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -48,7 +42,7 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     }
-    let args = Args::parse(&argv, &["paper-scale"])?;
+    let args = Args::parse(&argv, &["paper-scale", "print-spec"])?;
     let dir = args
         .flags
         .get("artifacts")
@@ -57,6 +51,7 @@ fn main() -> Result<()> {
     let rt = Runtime::new(&dir)?;
 
     match args.positional.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&rt, &args),
         Some("train") => cmd_train(&rt, &args),
         Some("pipeline") => cmd_pipeline(&rt, &args),
         Some("exp") => {
@@ -73,95 +68,118 @@ fn main() -> Result<()> {
     }
 }
 
-fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
-    let config = args.get("config", "resmlp");
-    let method = parse_method(&args.get("method", "adaptive-per-layer"))?;
-    let seed = args.get_u64("seed", 0)?;
-    let n_data = args.get_usize("n-data", 4096)?;
-    let optimizer = match args.get("opt", "sgd").as_str() {
-        "sgd" => gwclip::coordinator::optimizer::OptimizerKind::Sgd { momentum: 0.0 },
-        "momentum" => gwclip::coordinator::optimizer::OptimizerKind::Sgd { momentum: 0.9 },
-        "adam" => gwclip::coordinator::optimizer::OptimizerKind::Adam {
-            beta1: 0.9, beta2: 0.98, eps: 1e-6,
-        },
-        o => bail!("unknown optimizer {o}"),
-    };
-    let opts = TrainOpts {
-        method,
-        epsilon: args.get_f64("epsilon", 3.0)?,
-        epochs: args.get_f64("epochs", 3.0)?,
-        lr: args.get_f64("lr", 0.5)?,
-        seed,
-        optimizer,
-        clip_init: args.get_f64("clip", 1.0)?,
-        target_q: args.get_f64("quantile", 0.5)?,
-        allocation: Allocation::parse(&args.get("allocation", "global"))?,
-        ..Default::default()
-    };
-    let cfgm = rt.manifest.config(&config)?;
-    let (train, eval): (Box<dyn Dataset>, Box<dyn Dataset>) = match cfgm.model.as_str() {
-        "resmlp" => (
-            Box::new(MixtureImages::new(n_data, cfgm.hyper.features, cfgm.hyper.n_classes, seed)),
-            Box::new(MixtureImages::new(
-                n_data / 4,
-                cfgm.hyper.features,
-                cfgm.hyper.n_classes,
-                seed + 1000,
-            )),
-        ),
-        "lm" => (
-            Box::new(MarkovCorpus::new(n_data, cfgm.hyper.seq, cfgm.hyper.vocab, 4, seed)),
-            Box::new(MarkovCorpus::new(n_data / 4, cfgm.hyper.seq, cfgm.hyper.vocab, 4, seed + 1000)),
-        ),
-        "classifier" => {
-            use gwclip::data::classif::{SentimentCorpus, TextTask};
-            (
-                Box::new(SentimentCorpus::new(TextTask::Sst2, n_data, cfgm.hyper.seq, cfgm.hyper.vocab, seed)),
-                Box::new(SentimentCorpus::new(TextTask::Sst2, n_data / 4, cfgm.hyper.seq, cfgm.hyper.vocab, seed + 1000)),
-            )
-        }
-        other => bail!("train subcommand supports resmlp/lm/classifier configs, not {other}"),
-    };
-    let mut tr = Trainer::new(rt, &config, train.len(), opts)?;
-    if let Some(p) = tr.plan {
-        eprintln!(
-            "privacy plan: sigma={:.3} sigma_grad={:.3} sigma_b={:.3} (r={}) steps={}",
-            p.sigma_base, p.sigma_grad, p.sigma_quantile, p.quantile_fraction, tr.total_steps
-        );
+/// Execute a session described by a TOML/JSON spec file — the single
+/// declarative entry point for every clipping scenario on both backends.
+fn cmd_run(rt: &Runtime, args: &Args) -> Result<()> {
+    let path = args
+        .flags
+        .get("spec")
+        .ok_or_else(|| anyhow::anyhow!("run needs --spec <file>; see docs/SESSION_API.md"))?;
+    let spec = RunSpec::from_path(path)?;
+    if args.has("print-spec") {
+        println!("{}", spec.render_json());
     }
-    tr.run(&*train, 10)?;
-    let (loss, acc) = tr.evaluate(&*eval)?;
-    println!("final: eval loss {loss:.4} acc {acc:.4}");
+    run_session(SessionBuilder::from_spec(rt, spec))
+}
+
+fn run_session(builder: SessionBuilder) -> Result<()> {
+    let (mut sess, train, eval) = builder.build_with_data()?;
+    eprintln!("{}", sess.describe());
+    sess.run(&*train, 10)?;
+    let (loss, acc) = sess.evaluate(&*eval)?;
+    if acc.is_nan() {
+        println!("final: eval loss {loss:.4}");
+    } else {
+        println!("final: eval loss {loss:.4} acc {acc:.4}");
+    }
+    let labels = sess.group_labels();
+    if sess.thresholds().len() > 1 {
+        eprint!("thresholds:");
+        for (g, c) in labels.iter().zip(sess.thresholds()).take(8) {
+            eprint!(" {g}={c:.4}");
+        }
+        eprintln!();
+    }
     Ok(())
 }
 
+/// Flag-driven single-device (or pipeline, if the config has stages) run.
+fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
+    let config = args.get("config", "resmlp");
+    let method: Method = args.get("method", "adaptive-per-layer").parse()?;
+    let seed = args.get_u64("seed", 0)?;
+    let optim = match args.get("opt", "sgd").as_str() {
+        "sgd" => OptimSpec::sgd(args.get_f64("lr", 0.5)?),
+        "momentum" => OptimSpec::momentum(args.get_f64("lr", 0.5)?, 0.9),
+        "adam" => OptimSpec::adam(args.get_f64("lr", 0.5)?),
+        o => bail!("unknown optimizer {o}"),
+    };
+    let clip = ClipPolicy {
+        clip_init: args.get_f64("clip", 1.0)?,
+        target_q: args.get_f64("quantile", 0.5)?,
+        allocation: Allocation::parse(&args.get("allocation", "global"))?,
+        ..ClipPolicy::from_method(method)
+    };
+    let privacy = PrivacySpec {
+        epsilon: args.get_f64("epsilon", 3.0)?,
+        delta: args.get_f64("delta", 1e-5)?,
+        quantile_r: args.get_f64("quantile-r", 0.01)?,
+    };
+    let data = DataSpec {
+        task: args.get("task", "auto"),
+        n_data: args.get_usize("n-data", 4096)?,
+        seed,
+    };
+    run_session(
+        Session::builder(rt, &config)
+            .privacy(privacy)
+            .clip(clip)
+            .optim(optim)
+            .data(data)
+            .epochs(args.get_f64("epochs", 3.0)?)
+            .seed(seed),
+    )
+}
+
+/// Flag-driven pipeline run. Sigma is always accountant-derived from
+/// (--epsilon, --delta) over the requested steps — the old hardcoded
+/// `sigma: 0.5` privacy hole is gone.
 fn cmd_pipeline(rt: &Runtime, args: &Args) -> Result<()> {
     let config = args.get("config", "lm_mid_pipe_lora");
-    let mode = match args.get("mode", "per-device").as_str() {
-        "per-device" => PipelineMode::PerDevice,
-        "flat-sync" => PipelineMode::FlatSync,
-        "non-private" => PipelineMode::NonPrivate,
-        m => bail!("mode '{m}': per-device|flat-sync|non-private"),
+    let mode: PipelineMode = args.get("mode", "per-device").parse()?;
+    let seed = args.get_u64("seed", 0)?;
+    let clip = ClipPolicy {
+        clip_init: args.get_f64("clip", 1e-2)?,
+        ..ClipPolicy::from_pipeline_mode(mode, false)
     };
-    let steps = args.get_usize("steps", 10)?;
-    let opts = PipelineOpts {
-        mode,
-        n_micro: args.get_usize("n-micro", 4)?,
-        sigma: 0.5,
-        clip: 1e-2,
-        ..Default::default()
+    let privacy = PrivacySpec {
+        epsilon: args.get_f64("epsilon", 1.0)?,
+        delta: args.get_f64("delta", 1e-5)?,
+        quantile_r: 0.0,
     };
-    let cfgm = rt.manifest.config(&config)?;
-    let data = MarkovCorpus::new(2048, cfgm.hyper.seq, cfgm.hyper.vocab, 4, 0);
-    let mut eng = PipelineEngine::new(rt, &config, opts)?;
-    let mb = eng.minibatch();
-    for s in 0..steps {
-        let idx: Vec<usize> = (0..mb).map(|i| (s * mb + i) % data.len()).collect();
-        let st = eng.step(&data, &idx)?;
-        println!(
-            "step {s}: loss {:.4} host {:.2}s sim {:.3}s syncs {} calls {}",
-            st.loss, st.host_secs, st.sim_secs, st.syncs, st.calls
-        );
-    }
-    Ok(())
+    let data = DataSpec {
+        task: args.get("task", "auto"),
+        n_data: args.get_usize("n-data", 2048)?,
+        seed,
+    };
+    run_session(
+        Session::builder(rt, &config)
+            .privacy(privacy)
+            .clip(clip)
+            .optim(OptimSpec {
+                kind: gwclip::coordinator::optimizer::OptimizerKind::Adam {
+                    beta1: 0.9,
+                    beta2: 0.999,
+                    eps: 1e-8,
+                },
+                lr: args.get_f64("lr", 5e-3)?,
+                weight_decay: 0.0,
+                lr_decay: false,
+            })
+            .data(data)
+            .epochs(args.get_f64("epochs", 1.0)?)
+            .n_micro(args.get_usize("n-micro", 4)?)
+            .steps(args.get_usize("steps", 10)?)
+            .seed(seed),
+    )
 }

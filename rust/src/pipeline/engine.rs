@@ -1,4 +1,4 @@
-//! Private pipeline-parallel training engine (section 4, Algorithm 2).
+//! Private pipeline-parallel training backend (section 4, Algorithm 2).
 //!
 //! The model is partitioned into S stages ("devices"); each device owns its
 //! parameter shard, its compiled stage executables, and its optimizer
@@ -13,21 +13,28 @@
 //!   the leader can form global clip factors; pass 2 *rematerializes*
 //!   forward+backward on every device to emit the clipped sums.
 //!
+//! All DP state — thresholds, noise multiplier, quantile estimators, RNG —
+//! lives in the shared [`DpCore`] (one estimator with S thresholds for
+//! per-device clipping), built by `session::SessionBuilder` from the
+//! accountant. The direct [`PipelineEngine::new`] constructor remains as a
+//! deprecated raw-sigma shim for one release.
+//!
 //! Every executable call is timed and fed to the GPipe makespan model
 //! (schedule.rs), so each step reports both measured host time and the
 //! simulated S-device step latency.
 
 use std::collections::HashMap;
+use std::str::FromStr;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::noise::{add_noise, per_device_std, Rng};
+use crate::coordinator::noise::{add_noise, Allocation};
 use crate::coordinator::optimizer::{Optimizer, OptimizerKind, Schedule};
-use crate::coordinator::quantile::QuantileEstimator;
 use crate::data::{Dataset, ModelBatch};
 use crate::runtime::{checkpoint, Exec, HostValue, Runtime, Tensor};
+use crate::session::core::DpCore;
 
 use super::schedule::{makespan, Op, Phase};
 
@@ -49,8 +56,42 @@ impl PipelineMode {
             PipelineMode::NonPrivate => "non-private",
         }
     }
+
+    /// Canonical CLI token; guaranteed to parse back via [`FromStr`].
+    pub fn token(&self) -> &'static str {
+        match self {
+            PipelineMode::PerDevice => "per-device",
+            PipelineMode::FlatSync => "flat-sync",
+            PipelineMode::NonPrivate => "non-private",
+        }
+    }
+
+    pub fn all() -> [PipelineMode; 3] {
+        [PipelineMode::PerDevice, PipelineMode::FlatSync, PipelineMode::NonPrivate]
+    }
 }
 
+impl FromStr for PipelineMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "per-device" | "perdevice" | "per_device" => PipelineMode::PerDevice,
+            "flat-sync" | "flatsync" | "flat" => PipelineMode::FlatSync,
+            "non-private" | "nonprivate" => PipelineMode::NonPrivate,
+            _ => {
+                return Err(anyhow!(
+                    "unknown pipeline mode '{s}' (per-device|flat-sync|non-private)"
+                ))
+            }
+        })
+    }
+}
+
+/// Legacy pipeline option bundle (raw sigma, no accountant). Retained as
+/// the backend's internal parameter struct and as a shim constructor
+/// input; new code should declare a [`crate::session::RunSpec`] so sigma
+/// is accountant-derived.
 #[derive(Debug, Clone)]
 pub struct PipelineOpts {
     pub mode: PipelineMode,
@@ -127,21 +168,66 @@ pub struct PipelineEngine<'r> {
     pub n_stages: usize,
     micro_batch: usize,
     devices: Vec<StageDevice>,
-    pub thresholds: Vec<f64>,
-    quantiles: Vec<QuantileEstimator>,
+    /// shared DP state: thresholds (one per device for PerDevice, one
+    /// global for FlatSync), noise multiplier, quantile state, RNG
+    pub core: DpCore,
     pending_counts: Vec<f64>,
-    rng: Rng,
     pub steps_done: u64,
 }
 
 impl<'r> PipelineEngine<'r> {
+    /// Deprecated shim: build the [`DpCore`] from the legacy raw-sigma
+    /// [`PipelineOpts`] and delegate to [`PipelineEngine::with_core`].
+    /// Prefer `session::SessionBuilder`, which derives sigma from the
+    /// accountant instead of trusting a hand-picked value.
     pub fn new(runtime: &'r Runtime, config_name: &str, opts: PipelineOpts) -> Result<Self> {
+        let cfg = runtime.manifest.config(config_name)?.clone();
+        let stages = cfg
+            .stages
+            .as_ref()
+            .ok_or_else(|| anyhow!("config {config_name} has no pipeline stages"))?;
+        let n_stages = stages.stages.len();
+        let k = if opts.mode == PipelineMode::PerDevice { n_stages } else { 1 };
+        let core = DpCore::with_raw_sigma(
+            if opts.mode == PipelineMode::NonPrivate { 0.0 } else { opts.sigma },
+            vec![opts.clip; k],
+            opts.adaptive && opts.mode == PipelineMode::PerDevice,
+            opts.target_q,
+            opts.quantile_eta,
+            (cfg.batch * opts.n_micro) as f64,
+            Allocation::EqualBudget,
+            opts.seed,
+        );
+        PipelineEngine::with_core(runtime, config_name, opts, core)
+    }
+
+    /// Primary constructor: backend wiring only. All DP state arrives in
+    /// `core` (K = stage count for per-device clipping, 1 otherwise).
+    pub fn with_core(
+        runtime: &'r Runtime,
+        config_name: &str,
+        opts: PipelineOpts,
+        core: DpCore,
+    ) -> Result<Self> {
+        if opts.n_micro == 0 {
+            return Err(anyhow!("pipeline needs n_micro > 0"));
+        }
         let cfg = runtime.manifest.config(config_name)?.clone();
         let stages = cfg
             .stages
             .clone()
             .ok_or_else(|| anyhow!("config {config_name} has no pipeline stages"))?;
         let n_stages = stages.stages.len();
+        let expect_k = if opts.mode == PipelineMode::PerDevice { n_stages } else { 1 };
+        if core.k() != expect_k {
+            return Err(anyhow!(
+                "DpCore has {} thresholds but {} over {} stages needs {}",
+                core.k(),
+                opts.mode.name(),
+                n_stages,
+                expect_k
+            ));
+        }
         let ck = checkpoint::read(runtime.manifest.hlo_path(&cfg.init_checkpoint))?;
 
         let mut devices = Vec::with_capacity(n_stages);
@@ -179,32 +265,14 @@ impl<'r> PipelineEngine<'r> {
                 eval: if last { load(format!("{pre}_eval")) } else { None },
             });
         }
-        let thresholds = vec![opts.clip; n_stages];
-        let quantiles = (0..n_stages)
-            .map(|_| {
-                if opts.adaptive {
-                    QuantileEstimator::adaptive(
-                        vec![opts.clip],
-                        opts.target_q,
-                        opts.quantile_eta,
-                        0.0,
-                        (cfg.batch * opts.n_micro) as f64,
-                    )
-                } else {
-                    QuantileEstimator::fixed(vec![opts.clip])
-                }
-            })
-            .collect();
         Ok(PipelineEngine {
             runtime,
             config_name: config_name.to_string(),
             n_stages,
             micro_batch: cfg.batch,
             devices,
-            thresholds,
-            quantiles,
+            core,
             pending_counts: vec![0.0; n_stages],
-            rng: Rng::seeded(opts.seed),
             steps_done: 0,
             opts,
         })
@@ -217,6 +285,20 @@ impl<'r> PipelineEngine<'r> {
     /// minibatch size = microbatch * J
     pub fn minibatch(&self) -> usize {
         self.micro_batch * self.opts.n_micro
+    }
+
+    /// Current clipping thresholds (one per device for PerDevice, one
+    /// global otherwise).
+    pub fn thresholds(&self) -> &[f64] {
+        self.core.thresholds()
+    }
+
+    /// Threshold stage `st` clips against this step.
+    fn threshold(&self, st: usize) -> f64 {
+        match self.opts.mode {
+            PipelineMode::PerDevice => self.core.thresholds()[st],
+            _ => self.core.thresholds()[0],
+        }
     }
 
     /// Load stage parameters from a full-model checkpoint map (e.g. a
@@ -305,7 +387,7 @@ impl<'r> PipelineEngine<'r> {
                 let nonpriv = self.opts.mode == PipelineMode::NonPrivate;
                 for m in 0..j {
                     // last stage: fused loss+bwd, clipping local piece
-                    let c_last = if nonpriv { 1e9 } else { self.thresholds[s - 1] };
+                    let c_last = if nonpriv { 1e9 } else { self.threshold(s - 1) };
                     let x_in = self.stage_x_in(s - 1, m, &tokens, &acts);
                     let dlast = &self.devices[s - 1];
                     let exec = dlast.loss_bwd.as_ref().unwrap().clone();
@@ -332,7 +414,7 @@ impl<'r> PipelineEngine<'r> {
                     self.record_clip_counts(s - 1, &norms);
 
                     for st in (0..s - 1).rev() {
-                        let c = if nonpriv { 1e9 } else { self.thresholds[st] };
+                        let c = if nonpriv { 1e9 } else { self.threshold(st) };
                         let x_in = self.stage_x_in(st, m, &tokens, &acts);
                         let d = &self.devices[st];
                         let exec = d.bwd.as_ref().unwrap().clone();
@@ -399,6 +481,7 @@ impl<'r> PipelineEngine<'r> {
                 // barrier: all-gather per-example norms, form global coeffs
                 syncs += 1;
                 let b = self.micro_batch;
+                let c_global = self.threshold(0);
                 let mut coeffs: Vec<Tensor> = Vec::with_capacity(j);
                 for m in 0..j {
                     let mut c = Vec::with_capacity(b);
@@ -409,7 +492,7 @@ impl<'r> PipelineEngine<'r> {
                                 v * v
                             })
                             .sum();
-                        c.push(((self.opts.clip / sq.sqrt().max(1e-12)).min(1.0)) as f32);
+                        c.push(((c_global / sq.sqrt().max(1e-12)).min(1.0)) as f32);
                     }
                     coeffs.push(Tensor::from_vec(&[b], c)?);
                 }
@@ -448,19 +531,21 @@ impl<'r> PipelineEngine<'r> {
         }
 
         // -------- noise + local updates (no cross-device traffic) ---------
+        // Per-device noise std comes from the core's equal-budget
+        // allocation: sigma * sqrt(S) * C_st, Algorithm 2 line 6.
         let expected = self.minibatch() as f64;
-        let sigma = self.opts.sigma;
+        let stds = self.core.noise_stds();
         for st in 0..s {
             let std = match self.opts.mode {
                 PipelineMode::NonPrivate => 0.0,
-                PipelineMode::PerDevice => per_device_std(sigma, self.thresholds[st], s),
-                PipelineMode::FlatSync => sigma * self.opts.clip,
+                PipelineMode::PerDevice => stds[st],
+                PipelineMode::FlatSync => stds[0],
             };
             let d = &mut self.devices[st];
             let mut grads = Vec::with_capacity(d.accum.len());
             for a in d.accum.iter_mut() {
                 let mut g = std::mem::replace(a, Tensor::zeros(&a.shape));
-                add_noise(&mut g.data, std, &mut self.rng);
+                add_noise(&mut g.data, std, &mut self.core.rng);
                 for v in g.data.iter_mut() {
                     *v /= expected as f32;
                 }
@@ -480,13 +565,11 @@ impl<'r> PipelineEngine<'r> {
             d.optimizer.apply(&mut refs, &grads);
         }
 
-        // adaptive per-device thresholds (extension of Algorithm 2)
-        if self.opts.adaptive && self.opts.mode == PipelineMode::PerDevice {
-            for st in 0..s {
-                let counts = self.pending_counts[st];
-                self.quantiles[st].update(&[counts], &mut self.rng);
-                self.thresholds[st] = self.quantiles[st].thresholds[0];
-            }
+        // adaptive per-device thresholds (extension of Algorithm 2): one
+        // vector update over all S device groups through the shared core
+        if self.core.is_adaptive() && self.opts.mode == PipelineMode::PerDevice {
+            let counts = self.pending_counts.clone();
+            self.core.update_thresholds(&counts);
         }
         for c in self.pending_counts.iter_mut() {
             *c = 0.0;
@@ -520,11 +603,8 @@ impl<'r> PipelineEngine<'r> {
     }
 
     fn record_clip_counts(&mut self, stage: usize, norms: &Tensor) {
-        let c = norms
-            .data
-            .iter()
-            .filter(|&&n| (n as f64) <= self.thresholds[stage])
-            .count() as f64;
+        let thr = self.threshold(stage);
+        let c = norms.data.iter().filter(|&&n| (n as f64) <= thr).count() as f64;
         self.pending_counts[stage] += c;
     }
 
@@ -628,5 +708,23 @@ mod tests {
         assert_eq!(n, 1);
         // W + A@B = [[1+3, 4],[6, 1+8]]
         assert_eq!(base["l.w"].data, vec![4., 4., 6., 9.]);
+    }
+
+    #[test]
+    fn pipeline_mode_tokens_roundtrip() {
+        for m in PipelineMode::all() {
+            assert_eq!(m.token().parse::<PipelineMode>().unwrap(), m);
+        }
+        for (alias, want) in [
+            ("per-device", PipelineMode::PerDevice),
+            ("perdevice", PipelineMode::PerDevice),
+            ("flat-sync", PipelineMode::FlatSync),
+            ("flat", PipelineMode::FlatSync),
+            ("non-private", PipelineMode::NonPrivate),
+            ("nonprivate", PipelineMode::NonPrivate),
+        ] {
+            assert_eq!(alias.parse::<PipelineMode>().unwrap(), want, "alias {alias}");
+        }
+        assert!("per-layer".parse::<PipelineMode>().is_err());
     }
 }

@@ -1,0 +1,296 @@
+//! `DpCore` — the one DP state machine shared by every backend.
+//!
+//! Before the session refactor, `Trainer::new` and `PipelineEngine::new`
+//! each wired their own `QuantileEstimator`, privacy plan, noise stds and
+//! RNG (and the pipeline path skipped the accountant entirely). Both
+//! backends now *receive* a `DpCore` built in exactly one place from the
+//! declarative specs; a backend's job reduces to running executables and
+//! feeding gradients/clip-counts through the core.
+//!
+//! The core owns, per Algorithm 1/2:
+//! * the accountant-derived [`PrivacyPlan`] (line 2 + Prop 3.1 split),
+//! * the per-group thresholds via [`QuantileEstimator`] (lines 15-18),
+//! * the noise [`Allocation`] and per-group stds (line 13),
+//! * the single deterministic [`Rng`] every stochastic choice draws from
+//!   (Poisson sampling, gradient noise, quantile-release noise), which is
+//!   what makes seed-for-seed parity across entry points possible.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::accountant::{self, PrivacyPlan};
+use crate::coordinator::noise::{Allocation, Rng};
+use crate::coordinator::quantile::QuantileEstimator;
+
+use super::spec::{ClipPolicy, PrivacySpec};
+
+/// Inputs for the accountant-driven construction path.
+#[derive(Debug, Clone)]
+pub struct CoreCfg<'a> {
+    pub privacy: &'a PrivacySpec,
+    pub clip: &'a ClipPolicy,
+    /// Poisson sampling rate rho = E[B] / n
+    pub sample_rate: f64,
+    /// planned number of optimizer steps T
+    pub steps: u64,
+    /// number of clipping groups K (layers, devices, or 1)
+    pub k: usize,
+    /// per-group trainable dims (for the Weighted allocation); len == k
+    pub group_dims: Vec<u64>,
+    /// expected batch size B (normalizes quantile counts)
+    pub expected_batch: f64,
+    pub seed: u64,
+}
+
+pub struct DpCore {
+    /// accountant output; `None` when non-private or legacy raw-sigma
+    pub plan: Option<PrivacyPlan>,
+    /// gradient noise multiplier actually applied (0 = no noise)
+    pub sigma_grad: f64,
+    pub quantiles: QuantileEstimator,
+    pub allocation: Allocation,
+    pub group_dims: Vec<u64>,
+    /// global-equivalent threshold C (for the A.1 rescale)
+    pub clip_init: f64,
+    pub rescale_global: bool,
+    pub rng: Rng,
+}
+
+impl DpCore {
+    /// Build a core from specs, deriving sigma from the accountant.
+    /// This is the only construction path the session builder uses; the
+    /// legacy opts structs funnel through it as shims.
+    pub fn from_accountant(cfg: CoreCfg) -> Result<Self> {
+        cfg.clip.validate()?;
+        let k = cfg.k.max(1);
+        if cfg.group_dims.len() != k {
+            bail!("DpCore: group_dims len {} != k {}", cfg.group_dims.len(), k);
+        }
+        let init = cfg.clip.init_thresholds(k);
+        let adaptive = cfg.clip.is_adaptive();
+        let (plan, sigma_grad) = if cfg.clip.is_private() {
+            cfg.privacy.validate()?;
+            if !(cfg.sample_rate > 0.0 && cfg.sample_rate <= 1.0) {
+                bail!("DpCore: sampling rate {} outside (0, 1]", cfg.sample_rate);
+            }
+            if cfg.steps == 0 {
+                bail!("DpCore: a private run needs steps > 0");
+            }
+            let r = if adaptive { cfg.privacy.quantile_r } else { 0.0 };
+            let p = accountant::plan(
+                cfg.privacy.epsilon,
+                cfg.privacy.delta,
+                cfg.sample_rate,
+                cfg.steps,
+                r,
+                k,
+            );
+            let sigma = p.sigma_grad;
+            (Some(p), sigma)
+        } else {
+            (None, 0.0)
+        };
+        let quantiles = if adaptive && cfg.clip.is_private() {
+            QuantileEstimator::adaptive(
+                init,
+                cfg.clip.target_q,
+                cfg.clip.quantile_eta,
+                plan.map(|p| p.sigma_quantile).unwrap_or(0.0),
+                cfg.expected_batch,
+            )
+        } else {
+            QuantileEstimator::fixed(init)
+        };
+        Ok(DpCore {
+            plan,
+            sigma_grad,
+            quantiles,
+            allocation: cfg.clip.allocation,
+            group_dims: cfg.group_dims,
+            clip_init: cfg.clip.clip_init,
+            rescale_global: cfg.clip.rescale_global && k > 1,
+            rng: Rng::seeded(cfg.seed),
+        })
+    }
+
+    /// Legacy construction from a raw noise multiplier (the deprecated
+    /// `PipelineOpts { sigma, .. }` path). No plan is recorded: callers on
+    /// this path supplied sigma themselves and own its privacy analysis.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_raw_sigma(
+        sigma: f64,
+        init_thresholds: Vec<f64>,
+        adaptive: bool,
+        target_q: f64,
+        quantile_eta: f64,
+        expected_batch: f64,
+        allocation: Allocation,
+        seed: u64,
+    ) -> Self {
+        let clip_init = init_thresholds.first().copied().unwrap_or(1.0);
+        let k = init_thresholds.len().max(1);
+        let quantiles = if adaptive {
+            QuantileEstimator::adaptive(init_thresholds, target_q, quantile_eta, 0.0, expected_batch)
+        } else {
+            QuantileEstimator::fixed(init_thresholds)
+        };
+        DpCore {
+            plan: None,
+            sigma_grad: sigma,
+            quantiles,
+            allocation,
+            group_dims: vec![1; k],
+            clip_init,
+            rescale_global: false,
+            rng: Rng::seeded(seed),
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.quantiles.k()
+    }
+
+    pub fn thresholds(&self) -> &[f64] {
+        &self.quantiles.thresholds
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        self.quantiles.is_adaptive()
+    }
+
+    /// Effective per-group noise stds at the current thresholds
+    /// (Algorithm 1 line 13 / Algorithm 2 line 6). For K=1 every
+    /// allocation degenerates to `sigma * C`; for the equal-budget
+    /// allocation group k's std is `sigma * sqrt(K) * C_k`, the
+    /// communication-free per-device formula.
+    pub fn noise_stds(&self) -> Vec<f64> {
+        if self.sigma_grad == 0.0 {
+            return vec![0.0; self.k()];
+        }
+        self.allocation.stds(self.sigma_grad, &self.quantiles.thresholds, &self.group_dims)
+    }
+
+    /// Private quantile update from per-group clip counts (Algorithm 1
+    /// lines 15-18), followed by the Appendix A.1 global rescale when the
+    /// policy asks for it. Returns the noisy fractions for diagnostics.
+    pub fn update_thresholds(&mut self, clip_counts: &[f64]) -> Vec<f64> {
+        let fracs = self.quantiles.update(clip_counts, &mut self.rng);
+        if self.rescale_global && self.quantiles.is_adaptive() {
+            let s2: f64 = self.quantiles.thresholds.iter().map(|c| c * c).sum();
+            let scale = self.clip_init / s2.sqrt().max(1e-12);
+            for c in self.quantiles.thresholds.iter_mut() {
+                *c *= scale;
+            }
+        }
+        fracs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::noise::per_device_std;
+    use crate::session::spec::{ClipMode, GroupBy};
+
+    fn privacy() -> PrivacySpec {
+        PrivacySpec { epsilon: 3.0, delta: 1e-5, quantile_r: 0.01 }
+    }
+
+    fn core_for(clip: ClipPolicy, k: usize) -> DpCore {
+        DpCore::from_accountant(CoreCfg {
+            privacy: &privacy(),
+            clip: &clip,
+            sample_rate: 0.05,
+            steps: 100,
+            k,
+            group_dims: vec![10; k.max(1)],
+            expected_batch: 64.0,
+            seed: 0,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn per_device_core_matches_algorithm2_noise() {
+        let clip = ClipPolicy { clip_init: 0.01, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed) };
+        let core = core_for(clip, 4);
+        let stds = core.noise_stds();
+        for (st, &c) in core.thresholds().iter().enumerate() {
+            let want = per_device_std(core.sigma_grad, c, 4);
+            assert!((stds[st] - want).abs() < 1e-12, "stage {st}: {} vs {want}", stds[st]);
+        }
+    }
+
+    #[test]
+    fn flat_core_noise_is_sigma_times_c() {
+        let clip = ClipPolicy { clip_init: 0.5, ..ClipPolicy::new(GroupBy::Flat, ClipMode::Fixed) };
+        let core = core_for(clip, 1);
+        let stds = core.noise_stds();
+        assert_eq!(stds.len(), 1);
+        assert!((stds[0] - core.sigma_grad * 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nonprivate_core_is_silent() {
+        let core = core_for(ClipPolicy::non_private(), 1);
+        assert!(core.plan.is_none());
+        assert_eq!(core.noise_stds(), vec![0.0]);
+        assert!(!core.is_adaptive());
+    }
+
+    #[test]
+    fn adaptive_core_gets_prop31_split() {
+        let clip = ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive);
+        let core = core_for(clip, 8);
+        let p = core.plan.unwrap();
+        assert!(p.sigma_grad > p.sigma_base, "Prop 3.1 must tax the gradient budget");
+        assert!(p.sigma_quantile > 0.0);
+        assert!(core.is_adaptive());
+        assert_eq!(core.k(), 8);
+    }
+
+    #[test]
+    fn fixed_mode_spends_nothing_on_quantiles() {
+        let clip = ClipPolicy::new(GroupBy::PerLayer, ClipMode::Fixed);
+        let core = core_for(clip, 8);
+        let p = core.plan.unwrap();
+        assert_eq!(p.sigma_grad, p.sigma_base);
+        assert_eq!(p.sigma_quantile, 0.0);
+    }
+
+    #[test]
+    fn rejects_bad_rates_and_steps() {
+        let clip = ClipPolicy::new(GroupBy::Flat, ClipMode::Fixed);
+        let bad_rate = DpCore::from_accountant(CoreCfg {
+            privacy: &privacy(),
+            clip: &clip,
+            sample_rate: 0.0,
+            steps: 100,
+            k: 1,
+            group_dims: vec![1],
+            expected_batch: 64.0,
+            seed: 0,
+        });
+        assert!(bad_rate.is_err());
+        let bad_steps = DpCore::from_accountant(CoreCfg {
+            privacy: &privacy(),
+            clip: &clip,
+            sample_rate: 0.1,
+            steps: 0,
+            k: 1,
+            group_dims: vec![1],
+            expected_batch: 64.0,
+            seed: 0,
+        });
+        assert!(bad_steps.is_err());
+    }
+
+    #[test]
+    fn global_rescale_pins_threshold_norm() {
+        let clip = ClipPolicy { clip_init: 1.0, ..ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive) };
+        let mut core = core_for(clip, 4);
+        // all-clipped counts force the thresholds up, then rescale pins C
+        core.update_thresholds(&[0.0, 16.0, 32.0, 64.0]);
+        let s2: f64 = core.thresholds().iter().map(|c| c * c).sum();
+        assert!((s2.sqrt() - 1.0).abs() < 1e-9, "global-equivalent norm {}", s2.sqrt());
+    }
+}

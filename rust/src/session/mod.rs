@@ -1,0 +1,559 @@
+//! The session API — single entry point for every training scenario.
+//!
+//! The paper's framing is that flat, per-layer and per-device clipping are
+//! instances of one abstraction (group-wise clipping); this module makes
+//! the crate's API match: one declarative [`RunSpec`] (privacy target,
+//! [`ClipPolicy`], optimizer, data), one [`SessionBuilder`], and one
+//! [`Session`] that selects the backend from the manifest — configs with
+//! pipeline stages train on the [`PipelineEngine`], everything else on the
+//! single-device [`Trainer`]. Both backends share one [`DpCore`] (plan,
+//! thresholds, noise, RNG) and emit one [`StepEvent`] stream.
+//!
+//! ```no_run
+//! use gwclip::runtime::Runtime;
+//! use gwclip::session::{ClipMode, ClipPolicy, GroupBy, PrivacySpec, Session};
+//!
+//! let rt = Runtime::new("artifacts").unwrap();
+//! let (mut sess, train, eval) = Session::builder(&rt, "resmlp")
+//!     .privacy(PrivacySpec::new(3.0, 1e-5))
+//!     .clip(ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive))
+//!     .epochs(3.0)
+//!     .build_with_data()
+//!     .unwrap();
+//! sess.run(&*train, 10).unwrap();
+//! let (loss, acc) = sess.evaluate(&*eval).unwrap();
+//! println!("loss {loss:.3} acc {acc:.3}");
+//! ```
+//!
+//! Specs serialize to TOML/JSON (`gwclip run --spec run.toml`); see
+//! `docs/SESSION_API.md`.
+
+pub mod core;
+pub mod spec;
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::accountant::PrivacyPlan;
+use crate::coordinator::trainer::{derive_schedule, StepStats, TrainOpts, Trainer};
+use crate::data::Dataset;
+use crate::pipeline::{PipeStepStats, PipelineEngine, PipelineMode, PipelineOpts};
+use crate::runtime::{Runtime, Tensor};
+
+pub use self::core::{CoreCfg, DpCore};
+pub use self::spec::{
+    ClipMode, ClipPolicy, DataSpec, FlatImpl, GroupBy, OptimSpec, PipeSpec, PrivacySpec, RunSpec,
+};
+
+// -------------------------------------------------------------- step event
+
+/// One training step, reported identically by both backends so the CLI and
+/// the experiment harness print/collect through a single path.
+#[derive(Debug, Clone)]
+pub struct StepEvent {
+    pub step: u64,
+    pub loss: f64,
+    /// live examples this step (Poisson draw / pipeline minibatch)
+    pub batch_size: usize,
+    /// fraction of examples clipped, per group (empty for pipeline runs)
+    pub clip_frac: Vec<f64>,
+    /// mean per-example norm per group (empty for pipeline runs)
+    pub mean_norms: Vec<f64>,
+    /// measured host seconds (0 for the single-device backend)
+    pub host_secs: f64,
+    /// simulated S-device makespan (0 for the single-device backend)
+    pub sim_secs: f64,
+    /// sync barriers this step (0 for the single-device backend)
+    pub syncs: usize,
+    /// executable invocations (0 for the single-device backend)
+    pub calls: usize,
+}
+
+impl StepEvent {
+    pub fn from_single(s: StepStats) -> Self {
+        StepEvent {
+            step: s.step,
+            loss: s.loss,
+            batch_size: s.batch_size,
+            clip_frac: s.clip_frac,
+            mean_norms: s.mean_norms,
+            host_secs: 0.0,
+            sim_secs: 0.0,
+            syncs: 0,
+            calls: 0,
+        }
+    }
+
+    pub fn from_pipeline(step: u64, batch_size: usize, s: PipeStepStats) -> Self {
+        StepEvent {
+            step,
+            loss: s.loss,
+            batch_size,
+            clip_frac: Vec::new(),
+            mean_norms: Vec::new(),
+            host_secs: s.host_secs,
+            sim_secs: s.sim_secs,
+            syncs: s.syncs,
+            calls: s.calls,
+        }
+    }
+
+    /// One-line human-readable progress report.
+    pub fn log_line(&self, total_steps: u64, label: &str) -> String {
+        if self.calls > 0 {
+            format!(
+                "[{label}] step {}/{} loss {:.4} host {:.2}s sim {:.3}s syncs {} calls {}",
+                self.step, total_steps, self.loss, self.host_secs, self.sim_secs, self.syncs,
+                self.calls
+            )
+        } else {
+            format!(
+                "[{label}] step {}/{} loss {:.4} |B|={} clip~{:.2}",
+                self.step,
+                total_steps,
+                self.loss,
+                self.batch_size,
+                self.clip_frac.first().copied().unwrap_or(0.0)
+            )
+        }
+    }
+}
+
+// ----------------------------------------------------------------- backend
+
+/// The executor a session selected from the manifest.
+pub enum Backend<'r> {
+    Single(Trainer<'r>),
+    Pipeline(PipelineEngine<'r>),
+}
+
+impl Backend<'_> {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Single(_) => "single-device",
+            Backend::Pipeline(_) => "pipeline",
+        }
+    }
+}
+
+// ----------------------------------------------------------------- builder
+
+/// Fluent construction of a [`Session`] from a [`RunSpec`].
+pub struct SessionBuilder<'r> {
+    runtime: &'r Runtime,
+    spec: RunSpec,
+}
+
+impl<'r> SessionBuilder<'r> {
+    pub fn new(runtime: &'r Runtime, config: &str) -> Self {
+        SessionBuilder { runtime, spec: RunSpec::for_config(config) }
+    }
+
+    pub fn from_spec(runtime: &'r Runtime, spec: RunSpec) -> Self {
+        SessionBuilder { runtime, spec }
+    }
+
+    pub fn spec(&self) -> &RunSpec {
+        &self.spec
+    }
+
+    pub fn privacy(mut self, p: PrivacySpec) -> Self {
+        self.spec.privacy = p;
+        self
+    }
+
+    pub fn clip(mut self, c: ClipPolicy) -> Self {
+        self.spec.clip = c;
+        self
+    }
+
+    pub fn optim(mut self, o: OptimSpec) -> Self {
+        self.spec.optim = o;
+        self
+    }
+
+    pub fn data(mut self, d: DataSpec) -> Self {
+        self.spec.data = d;
+        self
+    }
+
+    pub fn epochs(mut self, epochs: f64) -> Self {
+        self.spec.epochs = epochs;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.spec.seed = seed;
+        self
+    }
+
+    pub fn expected_batch(mut self, b: usize) -> Self {
+        self.spec.expected_batch = b;
+        self
+    }
+
+    pub fn n_micro(mut self, j: usize) -> Self {
+        self.spec.pipe.n_micro = j;
+        self
+    }
+
+    /// Explicit pipeline step count (overrides the epochs-derived count).
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.spec.pipe.steps = steps;
+        self
+    }
+
+    /// Build against a caller-supplied dataset of `n_data` examples (the
+    /// sampling rate and step count depend on it).
+    pub fn build(self, n_data: usize) -> Result<Session<'r>> {
+        let SessionBuilder { runtime, spec } = self;
+        spec.validate().context("invalid run spec")?;
+        let cfg = runtime.manifest.config(&spec.config)?.clone();
+        if n_data == 0 {
+            bail!("session needs a non-empty dataset");
+        }
+
+        if let Some(stages) = &cfg.stages {
+            // ---------------- pipeline backend (manifest has stages) -----
+            let mode = spec
+                .clip
+                .pipeline_mode()
+                .with_context(|| format!("config '{}' trains on the pipeline backend", spec.config))?;
+            let n_stages = stages.stages.len();
+            let minibatch = cfg.batch * spec.pipe.n_micro;
+            let steps = if spec.pipe.steps > 0 {
+                spec.pipe.steps as u64
+            } else {
+                ((spec.epochs * n_data as f64) / minibatch as f64).ceil() as u64
+            };
+            if steps == 0 {
+                bail!("pipeline schedule is empty: raise epochs or set pipeline.steps");
+            }
+            // The pipeline consumes deterministic round-robin minibatches
+            // (Session::step), not Poisson draws, so subsampling
+            // amplification does NOT apply. Account at q = 1 over the
+            // number of releases each example participates in: a
+            // conservative, valid Gaussian-composition bound. (Poisson
+            // pipeline sampling — and with it the amplified accountant the
+            // single-device backend enjoys — is a ROADMAP item.)
+            let participations = ((steps as f64 * minibatch as f64) / n_data as f64)
+                .ceil()
+                .max(1.0) as u64;
+            let k = if mode == PipelineMode::PerDevice { n_stages } else { 1 };
+            let group_dims = if mode == PipelineMode::PerDevice {
+                stages.stages.iter().map(|s| s.d_stage.max(1)).collect()
+            } else {
+                vec![cfg.n_trainable().max(1)]
+            };
+            let core = DpCore::from_accountant(CoreCfg {
+                privacy: &spec.privacy,
+                clip: &spec.clip,
+                sample_rate: 1.0,
+                steps: participations,
+                k,
+                group_dims,
+                expected_batch: minibatch as f64,
+                seed: spec.seed,
+            })?;
+            let opts = PipelineOpts {
+                mode,
+                n_micro: spec.pipe.n_micro,
+                clip: spec.clip.clip_init,
+                // informational echo of the accountant-derived multiplier;
+                // the engine reads noise from the core, never from here
+                sigma: core.sigma_grad,
+                lr: spec.optim.lr,
+                optimizer: spec.optim.kind,
+                seed: spec.seed,
+                sync_latency: spec.pipe.sync_latency,
+                adaptive: spec.clip.is_adaptive(),
+                target_q: spec.clip.target_q,
+                quantile_eta: spec.clip.quantile_eta,
+            };
+            let engine = PipelineEngine::with_core(runtime, &spec.config, opts, core)?;
+            Ok(Session {
+                backend: Backend::Pipeline(engine),
+                total_steps: steps,
+                pipe_cursor: 0,
+                spec,
+            })
+        } else {
+            // ---------------- single-device backend -----------------------
+            if !(spec.epochs > 0.0) {
+                bail!("single-device runs need epochs > 0");
+            }
+            let method = spec
+                .clip
+                .method()
+                .with_context(|| format!("config '{}' trains on the single-device backend", spec.config))?;
+            let (expected, rate, steps) =
+                derive_schedule(&cfg, n_data, spec.epochs, spec.expected_batch)?;
+            let k = spec.clip.n_groups(cfg.groups.len(), 1);
+            let group_dims = if k == cfg.groups.len() {
+                cfg.group_dims.clone()
+            } else {
+                vec![cfg.n_trainable().max(1); k]
+            };
+            let core = DpCore::from_accountant(CoreCfg {
+                privacy: &spec.privacy,
+                clip: &spec.clip,
+                sample_rate: rate,
+                steps: steps.max(1),
+                k,
+                group_dims,
+                expected_batch: expected as f64,
+                seed: spec.seed,
+            })?;
+            let opts = TrainOpts {
+                method,
+                epsilon: spec.privacy.epsilon,
+                delta: spec.privacy.delta,
+                epochs: spec.epochs,
+                expected_batch: spec.expected_batch,
+                lr: spec.optim.lr,
+                optimizer: spec.optim.kind,
+                weight_decay: spec.optim.weight_decay,
+                lr_decay: spec.optim.lr_decay,
+                clip_init: spec.clip.clip_init,
+                target_q: spec.clip.target_q,
+                quantile_r: spec.privacy.quantile_r,
+                quantile_eta: spec.clip.quantile_eta,
+                allocation: spec.clip.allocation,
+                rescale_global: spec.clip.rescale_global,
+                seed: spec.seed,
+            };
+            let trainer = Trainer::with_core(runtime, &spec.config, n_data, opts, core)?;
+            let total_steps = trainer.total_steps;
+            Ok(Session {
+                backend: Backend::Single(trainer),
+                total_steps,
+                pipe_cursor: 0,
+                spec,
+            })
+        }
+    }
+
+    /// Build a session plus the (train, eval) datasets its [`DataSpec`]
+    /// describes — the CLI path.
+    #[allow(clippy::type_complexity)]
+    pub fn build_with_data(self) -> Result<(Session<'r>, Box<dyn Dataset>, Box<dyn Dataset>)> {
+        let cfg = self.runtime.manifest.config(&self.spec.config)?.clone();
+        let (train, eval) = crate::data::build_for_config(&cfg, &self.spec.data)?;
+        let session = self.build(train.len())?;
+        Ok((session, train, eval))
+    }
+}
+
+// ----------------------------------------------------------------- session
+
+/// A configured training run: one backend, one shared [`DpCore`], one
+/// event stream.
+pub struct Session<'r> {
+    pub spec: RunSpec,
+    pub backend: Backend<'r>,
+    pub total_steps: u64,
+    /// round-robin data cursor for pipeline minibatches
+    pipe_cursor: usize,
+}
+
+impl<'r> Session<'r> {
+    pub fn builder(runtime: &'r Runtime, config: &str) -> SessionBuilder<'r> {
+        SessionBuilder::new(runtime, config)
+    }
+
+    /// Shared DP state (plan, thresholds, noise, RNG).
+    pub fn core(&self) -> &DpCore {
+        match &self.backend {
+            Backend::Single(t) => &t.core,
+            Backend::Pipeline(e) => &e.core,
+        }
+    }
+
+    /// The accountant's plan (None only for non-private runs).
+    pub fn plan(&self) -> Option<PrivacyPlan> {
+        self.core().plan
+    }
+
+    /// Current per-group clipping thresholds.
+    pub fn thresholds(&self) -> &[f64] {
+        self.core().thresholds()
+    }
+
+    /// Group labels matching [`Session::thresholds`] (layer groups or
+    /// `stage{i}` device labels).
+    pub fn group_labels(&self) -> Vec<String> {
+        match &self.backend {
+            Backend::Single(t) => t.groups().to_vec(),
+            Backend::Pipeline(e) => (0..e.core.k()).map(|i| format!("stage{i}")).collect(),
+        }
+    }
+
+    pub fn trainer(&self) -> Option<&Trainer<'r>> {
+        match &self.backend {
+            Backend::Single(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn trainer_mut(&mut self) -> Option<&mut Trainer<'r>> {
+        match &mut self.backend {
+            Backend::Single(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn engine(&self) -> Option<&PipelineEngine<'r>> {
+        match &self.backend {
+            Backend::Pipeline(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    pub fn engine_mut(&mut self) -> Option<&mut PipelineEngine<'r>> {
+        match &mut self.backend {
+            Backend::Pipeline(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    /// Single-device parameters in manifest order (decoding / checkpoints).
+    pub fn params(&self) -> Result<&[Tensor]> {
+        match &self.backend {
+            Backend::Single(t) => Ok(&t.params),
+            Backend::Pipeline(_) => Err(anyhow!(
+                "pipeline sessions shard parameters per stage; use param_map()"
+            )),
+        }
+    }
+
+    /// Replace single-device parameters (pretrained checkpoints).
+    pub fn set_params(&mut self, params: Vec<Tensor>) -> Result<()> {
+        match &mut self.backend {
+            Backend::Single(t) => t.set_params(params),
+            Backend::Pipeline(_) => Err(anyhow!(
+                "pipeline sessions load parameters by name; use load_param_map()"
+            )),
+        }
+    }
+
+    /// All parameters as a name -> tensor map, on either backend.
+    pub fn param_map(&self) -> HashMap<String, Tensor> {
+        match &self.backend {
+            Backend::Single(t) => t
+                .cfg
+                .params
+                .iter()
+                .zip(&t.params)
+                .map(|(p, v)| (p.name.clone(), v.clone()))
+                .collect(),
+            Backend::Pipeline(e) => e.dump_params(),
+        }
+    }
+
+    /// Load parameters by name from a checkpoint map; names absent from
+    /// the map keep their init values (LoRA adapters), on either backend.
+    pub fn load_param_map(&mut self, map: &HashMap<String, Tensor>) -> Result<()> {
+        match &mut self.backend {
+            Backend::Single(t) => {
+                let mut params = t.params.clone();
+                for (i, p) in t.cfg.params.iter().enumerate() {
+                    if let Some(v) = map.get(&p.name) {
+                        if v.shape != p.shape {
+                            return Err(anyhow!("shape mismatch for {}", p.name));
+                        }
+                        params[i] = v.clone();
+                    }
+                }
+                t.set_params(params)
+            }
+            Backend::Pipeline(e) => e.load_params(map),
+        }
+    }
+
+    /// Toggle per-step [B,K] norm collection (Figure 2/4 dumps;
+    /// single-device backend only — the pipeline never materializes
+    /// cross-device norm matrices).
+    pub fn collect_norms(&mut self, on: bool) -> Result<()> {
+        match &mut self.backend {
+            Backend::Single(t) => {
+                t.collect_norms = if on { Some(Vec::new()) } else { None };
+                Ok(())
+            }
+            Backend::Pipeline(_) => Err(anyhow!("norm collection is single-device only")),
+        }
+    }
+
+    pub fn collected_norms(&self) -> Option<&Vec<Vec<f32>>> {
+        self.trainer().and_then(|t| t.collect_norms.as_ref())
+    }
+
+    /// One training step. The single-device backend draws its own Poisson
+    /// batch; the pipeline consumes the next round-robin minibatch.
+    pub fn step(&mut self, data: &dyn Dataset) -> Result<StepEvent> {
+        match &mut self.backend {
+            Backend::Single(t) => Ok(StepEvent::from_single(t.step(data)?)),
+            Backend::Pipeline(e) => {
+                let mb = e.minibatch();
+                let base = self.pipe_cursor * mb;
+                let idx: Vec<usize> = (0..mb).map(|i| (base + i) % data.len()).collect();
+                self.pipe_cursor += 1;
+                let st = e.step(data, &idx)?;
+                Ok(StepEvent::from_pipeline(e.steps_done, mb, st))
+            }
+        }
+    }
+
+    /// Train for the planned number of steps; returns the event stream.
+    pub fn run(&mut self, data: &dyn Dataset, log_every: u64) -> Result<Vec<StepEvent>> {
+        let label = match &self.backend {
+            Backend::Single(t) => t.opts.method.name(),
+            Backend::Pipeline(e) => e.opts.mode.name(),
+        };
+        let total = self.total_steps;
+        let mut events = Vec::with_capacity(total as usize);
+        for s in 0..total {
+            let ev = self.step(data)?;
+            if log_every > 0 && (s % log_every == 0 || s + 1 == total) {
+                eprintln!("{}", ev.log_line(total, label));
+            }
+            events.push(ev);
+        }
+        Ok(events)
+    }
+
+    /// (mean eval loss, accuracy). The pipeline backend has no accuracy
+    /// head; it reports NaN accuracy.
+    pub fn evaluate(&self, data: &dyn Dataset) -> Result<(f64, f64)> {
+        match &self.backend {
+            Backend::Single(t) => t.evaluate(data),
+            Backend::Pipeline(e) => Ok((e.evaluate(data)?, f64::NAN)),
+        }
+    }
+
+    /// Human-readable one-line description of the run's privacy wiring.
+    pub fn describe(&self) -> String {
+        let be = self.backend.name();
+        match self.plan() {
+            Some(p) => format!(
+                "{be} | {} x {} | (eps={}, delta={}) over {} steps -> sigma={:.3} \
+                 (grad {:.3}, quantile {:.2}, r={})",
+                self.spec.clip.group_by.token(),
+                self.spec.clip.mode.token(),
+                p.epsilon,
+                p.delta,
+                self.total_steps,
+                p.sigma_base,
+                p.sigma_grad,
+                p.sigma_quantile,
+                p.quantile_fraction,
+            ),
+            None => format!(
+                "{be} | {} x {} | non-private ({} steps)",
+                self.spec.clip.group_by.token(),
+                self.spec.clip.mode.token(),
+                self.total_steps
+            ),
+        }
+    }
+}

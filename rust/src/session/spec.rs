@@ -1,0 +1,871 @@
+//! Declarative run specifications for the session API.
+//!
+//! Every training scenario in the crate — flat / per-layer / per-device
+//! clipping, fixed or adaptive thresholds, single-device or
+//! pipeline-parallel — is described by one [`RunSpec`]:
+//!
+//! * [`PrivacySpec`] — the (epsilon, delta) target plus the Prop-3.1
+//!   budget fraction. Noise is always accountant-derived; raw sigma never
+//!   appears in a spec.
+//! * [`ClipPolicy`] — the paper's group-wise clipping taxonomy as a
+//!   product [`GroupBy`] x [`ClipMode`], replacing the disjoint
+//!   `Method` / `PipelineMode` enums at the API surface.
+//! * [`OptimSpec`] — optimizer, learning rate, decay.
+//! * [`DataSpec`] — which synthetic substrate to build and how large.
+//!
+//! Specs (de)serialize through the in-tree JSON value ([`Json`]) — the
+//! same no-serde-offline policy as the manifest — and load from TOML or
+//! JSON files (`RunSpec::from_path`).
+
+use std::path::Path;
+use std::str::FromStr;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::noise::Allocation;
+use crate::coordinator::optimizer::OptimizerKind;
+use crate::coordinator::trainer::Method;
+use crate::pipeline::PipelineMode;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------- privacy
+
+/// Accountant-facing privacy target. `sigma` is always derived from this
+/// via `accountant::plan` — specs never carry a raw noise multiplier.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrivacySpec {
+    pub epsilon: f64,
+    pub delta: f64,
+    /// Prop 3.1 budget fraction spent on private quantile estimation
+    /// (only consumed by adaptive policies; paper uses 0.0001-0.1).
+    pub quantile_r: f64,
+}
+
+impl Default for PrivacySpec {
+    fn default() -> Self {
+        PrivacySpec { epsilon: 3.0, delta: 1e-5, quantile_r: 0.01 }
+    }
+}
+
+impl PrivacySpec {
+    pub fn new(epsilon: f64, delta: f64) -> Self {
+        PrivacySpec { epsilon, delta, ..Default::default() }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(self.epsilon > 0.0) {
+            bail!("privacy.epsilon must be > 0, got {}", self.epsilon);
+        }
+        if !(self.delta > 0.0 && self.delta < 1.0) {
+            bail!("privacy.delta must be in (0, 1), got {}", self.delta);
+        }
+        if !(0.0..1.0).contains(&self.quantile_r) {
+            bail!("privacy.quantile_r must be in [0, 1), got {}", self.quantile_r);
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("epsilon".into(), Json::Num(self.epsilon));
+        m.insert("delta".into(), Json::Num(self.delta));
+        m.insert("quantile_r".into(), Json::Num(self.quantile_r));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = PrivacySpec::default();
+        Ok(PrivacySpec {
+            epsilon: opt_f64(j, "epsilon", d.epsilon)?,
+            delta: opt_f64(j, "delta", d.delta)?,
+            quantile_r: opt_f64(j, "quantile_r", d.quantile_r)?,
+        })
+    }
+}
+
+// ------------------------------------------------------------ clip policy
+
+/// How per-example gradients are grouped before clipping (paper sections
+/// 2-4): one global group, one group per layer, or one group per pipeline
+/// device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupBy {
+    Flat,
+    PerLayer,
+    PerDevice,
+}
+
+impl GroupBy {
+    pub fn token(&self) -> &'static str {
+        match self {
+            GroupBy::Flat => "flat",
+            GroupBy::PerLayer => "per-layer",
+            GroupBy::PerDevice => "per-device",
+        }
+    }
+}
+
+impl FromStr for GroupBy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "flat" | "global" => GroupBy::Flat,
+            "per-layer" | "perlayer" | "per_layer" => GroupBy::PerLayer,
+            "per-device" | "perdevice" | "per_device" => GroupBy::PerDevice,
+            _ => bail!("unknown group_by '{s}' (flat|per-layer|per-device)"),
+        })
+    }
+}
+
+/// Whether thresholds stay fixed, track a private quantile, or clipping
+/// (and noise) is disabled entirely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClipMode {
+    NonPrivate,
+    Fixed,
+    Adaptive,
+}
+
+impl ClipMode {
+    pub fn token(&self) -> &'static str {
+        match self {
+            ClipMode::NonPrivate => "non-private",
+            ClipMode::Fixed => "fixed",
+            ClipMode::Adaptive => "adaptive",
+        }
+    }
+}
+
+impl FromStr for ClipMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "non-private" | "nonprivate" | "none" => ClipMode::NonPrivate,
+            "fixed" => ClipMode::Fixed,
+            "adaptive" => ClipMode::Adaptive,
+            _ => bail!("unknown clip mode '{s}' (non-private|fixed|adaptive)"),
+        })
+    }
+}
+
+/// Kernel used for flat clipping on the single-device backend: the fused
+/// ghost-norm path (default) or the efficiency baselines of Figure 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlatImpl {
+    Fused,
+    Ghost,
+    Naive,
+}
+
+impl FlatImpl {
+    pub fn token(&self) -> &'static str {
+        match self {
+            FlatImpl::Fused => "fused",
+            FlatImpl::Ghost => "ghost",
+            FlatImpl::Naive => "naive",
+        }
+    }
+}
+
+impl FromStr for FlatImpl {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fused" => FlatImpl::Fused,
+            "ghost" => FlatImpl::Ghost,
+            "naive" => FlatImpl::Naive,
+            _ => bail!("unknown flat impl '{s}' (fused|ghost|naive)"),
+        })
+    }
+}
+
+/// The unified clipping policy: `GroupBy x ClipMode` plus thresholds and
+/// noise-allocation knobs. Both backends are configured from this one
+/// struct; the legacy `Method` / `PipelineMode` enums are derived views.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClipPolicy {
+    pub group_by: GroupBy,
+    pub mode: ClipMode,
+    /// global-equivalent initial threshold C (per-layer groups start at
+    /// C/sqrt(K); per-device thresholds start at C per device).
+    pub clip_init: f64,
+    /// target gradient-norm quantile for adaptive modes
+    pub target_q: f64,
+    /// quantile learning rate eta
+    pub quantile_eta: f64,
+    pub allocation: Allocation,
+    /// Appendix A.1: rescale adaptive per-layer thresholds so their
+    /// global-equivalent norm stays at `clip_init`.
+    pub rescale_global: bool,
+    /// flat-clipping efficiency baseline selector (single-device only)
+    pub flat_impl: FlatImpl,
+}
+
+impl Default for ClipPolicy {
+    fn default() -> Self {
+        ClipPolicy {
+            group_by: GroupBy::PerLayer,
+            mode: ClipMode::Adaptive,
+            clip_init: 1.0,
+            target_q: 0.5,
+            quantile_eta: 0.3,
+            allocation: Allocation::Global,
+            rescale_global: true,
+            flat_impl: FlatImpl::Fused,
+        }
+    }
+}
+
+impl ClipPolicy {
+    pub fn new(group_by: GroupBy, mode: ClipMode) -> Self {
+        let rescale_global = group_by == GroupBy::PerLayer;
+        let allocation = match group_by {
+            GroupBy::PerDevice => Allocation::EqualBudget,
+            _ => Allocation::Global,
+        };
+        ClipPolicy { group_by, mode, rescale_global, allocation, ..Default::default() }
+    }
+
+    pub fn non_private() -> Self {
+        ClipPolicy::new(GroupBy::Flat, ClipMode::NonPrivate)
+    }
+
+    pub fn is_private(&self) -> bool {
+        self.mode != ClipMode::NonPrivate
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        self.mode == ClipMode::Adaptive
+    }
+
+    /// Initial per-group thresholds for `k` groups (A.1 conventions).
+    pub fn init_thresholds(&self, k: usize) -> Vec<f64> {
+        match self.group_by {
+            GroupBy::Flat => vec![self.clip_init],
+            GroupBy::PerLayer => vec![self.clip_init / (k.max(1) as f64).sqrt(); k.max(1)],
+            GroupBy::PerDevice => vec![self.clip_init; k.max(1)],
+        }
+    }
+
+    /// Number of clipping groups given the model's layer-group count and
+    /// the pipeline stage count.
+    pub fn n_groups(&self, n_layer_groups: usize, n_stages: usize) -> usize {
+        match self.group_by {
+            GroupBy::Flat => 1,
+            GroupBy::PerLayer => n_layer_groups.max(1),
+            GroupBy::PerDevice => n_stages.max(1),
+        }
+    }
+
+    /// Legacy single-device `Method` implementing this policy.
+    pub fn method(&self) -> Result<Method> {
+        Ok(match (self.mode, self.group_by) {
+            (ClipMode::NonPrivate, _) => Method::NonPrivate,
+            (_, GroupBy::PerDevice) => {
+                bail!("per-device clipping needs a pipeline config (manifest with stages)")
+            }
+            (ClipMode::Fixed, GroupBy::Flat) => match self.flat_impl {
+                FlatImpl::Fused => Method::FlatFixed,
+                FlatImpl::Ghost => Method::Ghost,
+                FlatImpl::Naive => Method::Naive,
+            },
+            (ClipMode::Adaptive, GroupBy::Flat) => {
+                if self.flat_impl != FlatImpl::Fused {
+                    bail!("adaptive flat clipping supports only the fused impl");
+                }
+                Method::FlatAdaptive
+            }
+            (ClipMode::Fixed, GroupBy::PerLayer) => Method::PerLayerFixed,
+            (ClipMode::Adaptive, GroupBy::PerLayer) => Method::PerLayerAdaptive,
+        })
+    }
+
+    /// Legacy pipeline mode implementing this policy.
+    pub fn pipeline_mode(&self) -> Result<PipelineMode> {
+        Ok(match (self.mode, self.group_by) {
+            (ClipMode::NonPrivate, _) => PipelineMode::NonPrivate,
+            (_, GroupBy::PerDevice) => PipelineMode::PerDevice,
+            (ClipMode::Fixed, GroupBy::Flat) => PipelineMode::FlatSync,
+            (ClipMode::Adaptive, GroupBy::Flat) => {
+                bail!("adaptive flat clipping is not implemented for the pipeline backend")
+            }
+            (_, GroupBy::PerLayer) => {
+                bail!("per-layer clipping is not implemented for the pipeline backend")
+            }
+        })
+    }
+
+    /// Inverse view: the policy equivalent to a legacy `Method`.
+    pub fn from_method(m: Method) -> Self {
+        let (group_by, mode, flat_impl) = match m {
+            Method::NonPrivate => (GroupBy::Flat, ClipMode::NonPrivate, FlatImpl::Fused),
+            Method::FlatFixed => (GroupBy::Flat, ClipMode::Fixed, FlatImpl::Fused),
+            Method::FlatAdaptive => (GroupBy::Flat, ClipMode::Adaptive, FlatImpl::Fused),
+            Method::PerLayerFixed => (GroupBy::PerLayer, ClipMode::Fixed, FlatImpl::Fused),
+            Method::PerLayerAdaptive => (GroupBy::PerLayer, ClipMode::Adaptive, FlatImpl::Fused),
+            Method::Ghost => (GroupBy::Flat, ClipMode::Fixed, FlatImpl::Ghost),
+            Method::Naive => (GroupBy::Flat, ClipMode::Fixed, FlatImpl::Naive),
+        };
+        ClipPolicy {
+            flat_impl,
+            // keep the legacy TrainOpts default: rescale applies to
+            // per-layer adaptive only, but the flag itself defaults on
+            rescale_global: true,
+            ..ClipPolicy::new(group_by, mode)
+        }
+    }
+
+    /// Inverse view: the policy equivalent to a legacy `PipelineMode`.
+    pub fn from_pipeline_mode(m: PipelineMode, adaptive: bool) -> Self {
+        let mode = if adaptive { ClipMode::Adaptive } else { ClipMode::Fixed };
+        match m {
+            PipelineMode::PerDevice => ClipPolicy::new(GroupBy::PerDevice, mode),
+            PipelineMode::FlatSync => ClipPolicy::new(GroupBy::Flat, ClipMode::Fixed),
+            PipelineMode::NonPrivate => ClipPolicy::non_private(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(self.clip_init > 0.0 && self.clip_init.is_finite()) {
+            bail!("clip.clip_init must be a positive finite number, got {}", self.clip_init);
+        }
+        if self.is_adaptive() {
+            if !(self.target_q > 0.0 && self.target_q < 1.0) {
+                bail!("clip.target_q must be in (0, 1), got {}", self.target_q);
+            }
+            if !(self.quantile_eta > 0.0) {
+                bail!("clip.quantile_eta must be > 0, got {}", self.quantile_eta);
+            }
+        }
+        if self.flat_impl != FlatImpl::Fused && self.group_by != GroupBy::Flat {
+            bail!("clip.flat_impl={} requires group_by=flat", self.flat_impl.token());
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("group_by".into(), Json::Str(self.group_by.token().into()));
+        m.insert("mode".into(), Json::Str(self.mode.token().into()));
+        m.insert("clip_init".into(), Json::Num(self.clip_init));
+        m.insert("target_q".into(), Json::Num(self.target_q));
+        m.insert("quantile_eta".into(), Json::Num(self.quantile_eta));
+        m.insert("allocation".into(), Json::Str(self.allocation.name().into()));
+        m.insert("rescale_global".into(), Json::Bool(self.rescale_global));
+        m.insert("flat_impl".into(), Json::Str(self.flat_impl.token().into()));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let group_by: GroupBy = opt_str(j, "group_by", "per-layer")?.parse()?;
+        let mode: ClipMode = opt_str(j, "mode", "adaptive")?.parse()?;
+        let base = ClipPolicy::new(group_by, mode);
+        Ok(ClipPolicy {
+            clip_init: opt_f64(j, "clip_init", base.clip_init)?,
+            target_q: opt_f64(j, "target_q", base.target_q)?,
+            quantile_eta: opt_f64(j, "quantile_eta", base.quantile_eta)?,
+            allocation: match j.opt("allocation") {
+                Some(v) => Allocation::parse(v.str()?)?,
+                None => base.allocation,
+            },
+            rescale_global: opt_bool(j, "rescale_global", base.rescale_global)?,
+            flat_impl: opt_str(j, "flat_impl", "fused")?.parse()?,
+            group_by,
+            mode,
+        })
+    }
+}
+
+// -------------------------------------------------------------- optimizer
+
+/// Optimizer + schedule selection shared by both backends.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OptimSpec {
+    pub kind: OptimizerKind,
+    pub lr: f64,
+    pub weight_decay: f64,
+    pub lr_decay: bool,
+}
+
+impl Default for OptimSpec {
+    fn default() -> Self {
+        OptimSpec {
+            kind: OptimizerKind::Sgd { momentum: 0.0 },
+            lr: 0.5,
+            weight_decay: 0.0,
+            lr_decay: false,
+        }
+    }
+}
+
+impl OptimSpec {
+    pub fn sgd(lr: f64) -> Self {
+        OptimSpec { lr, ..Default::default() }
+    }
+
+    pub fn momentum(lr: f64, momentum: f64) -> Self {
+        OptimSpec { kind: OptimizerKind::Sgd { momentum }, lr, ..Default::default() }
+    }
+
+    /// The paper's DP-Adam setting for language tasks.
+    pub fn adam(lr: f64) -> Self {
+        OptimSpec {
+            kind: OptimizerKind::Adam { beta1: 0.9, beta2: 0.98, eps: 1e-6 },
+            lr,
+            ..Default::default()
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(self.lr > 0.0 && self.lr.is_finite()) {
+            bail!("optim.lr must be a positive finite number, got {}", self.lr);
+        }
+        if self.weight_decay < 0.0 {
+            bail!("optim.weight_decay must be >= 0, got {}", self.weight_decay);
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        match self.kind {
+            OptimizerKind::Sgd { momentum } => {
+                m.insert("kind".into(), Json::Str("sgd".into()));
+                m.insert("momentum".into(), Json::Num(momentum));
+            }
+            OptimizerKind::Adam { beta1, beta2, eps } => {
+                m.insert("kind".into(), Json::Str("adam".into()));
+                m.insert("beta1".into(), Json::Num(beta1));
+                m.insert("beta2".into(), Json::Num(beta2));
+                m.insert("eps".into(), Json::Num(eps));
+            }
+        }
+        m.insert("lr".into(), Json::Num(self.lr));
+        m.insert("weight_decay".into(), Json::Num(self.weight_decay));
+        m.insert("lr_decay".into(), Json::Bool(self.lr_decay));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = OptimSpec::default();
+        let kind = match opt_str(j, "kind", "sgd")?.as_str() {
+            "sgd" => OptimizerKind::Sgd { momentum: opt_f64(j, "momentum", 0.0)? },
+            "momentum" => OptimizerKind::Sgd { momentum: opt_f64(j, "momentum", 0.9)? },
+            "adam" => OptimizerKind::Adam {
+                beta1: opt_f64(j, "beta1", 0.9)?,
+                beta2: opt_f64(j, "beta2", 0.98)?,
+                eps: opt_f64(j, "eps", 1e-6)?,
+            },
+            o => bail!("unknown optimizer kind '{o}' (sgd|momentum|adam)"),
+        };
+        Ok(OptimSpec {
+            kind,
+            lr: opt_f64(j, "lr", d.lr)?,
+            weight_decay: opt_f64(j, "weight_decay", d.weight_decay)?,
+            lr_decay: opt_bool(j, "lr_decay", d.lr_decay)?,
+        })
+    }
+}
+
+// ------------------------------------------------------------------- data
+
+/// Which synthetic substrate to build for a run (`data::build_for_config`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataSpec {
+    /// "auto" picks from the config's model family; explicit names:
+    /// mixture|cifar|sst2|qnli|qqp|mnli|markov|table2text|dialogsum
+    pub task: String,
+    pub n_data: usize,
+    pub seed: u64,
+}
+
+impl Default for DataSpec {
+    fn default() -> Self {
+        DataSpec { task: "auto".into(), n_data: 4096, seed: 0 }
+    }
+}
+
+impl DataSpec {
+    pub fn validate(&self) -> Result<()> {
+        if self.n_data == 0 {
+            bail!("data.n_data must be > 0");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("task".into(), Json::Str(self.task.clone()));
+        m.insert("n_data".into(), Json::Num(self.n_data as f64));
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = DataSpec::default();
+        Ok(DataSpec {
+            task: opt_str(j, "task", &d.task)?,
+            n_data: opt_usize(j, "n_data", d.n_data)?,
+            seed: match j.opt("seed") {
+                Some(v) => v.u64()?,
+                None => d.seed,
+            },
+        })
+    }
+}
+
+// --------------------------------------------------------------- pipeline
+
+/// Pipeline-backend knobs (ignored by the single-device backend).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PipeSpec {
+    /// microbatches per minibatch (J in Algorithm 2)
+    pub n_micro: usize,
+    /// explicit step count; 0 = derive from epochs and dataset size
+    pub steps: usize,
+    /// simulated all-gather latency charged per sync barrier (seconds)
+    pub sync_latency: f64,
+}
+
+impl Default for PipeSpec {
+    fn default() -> Self {
+        PipeSpec { n_micro: 4, steps: 0, sync_latency: 0.002 }
+    }
+}
+
+impl PipeSpec {
+    pub fn validate(&self) -> Result<()> {
+        if self.n_micro == 0 {
+            bail!("pipeline.n_micro must be > 0");
+        }
+        if self.sync_latency < 0.0 {
+            bail!("pipeline.sync_latency must be >= 0");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("n_micro".into(), Json::Num(self.n_micro as f64));
+        m.insert("steps".into(), Json::Num(self.steps as f64));
+        m.insert("sync_latency".into(), Json::Num(self.sync_latency));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = PipeSpec::default();
+        Ok(PipeSpec {
+            n_micro: opt_usize(j, "n_micro", d.n_micro)?,
+            steps: opt_usize(j, "steps", d.steps)?,
+            sync_latency: opt_f64(j, "sync_latency", d.sync_latency)?,
+        })
+    }
+}
+
+// --------------------------------------------------------------- run spec
+
+/// Everything needed to execute one training run, on either backend.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSpec {
+    /// manifest config name; backend = pipeline iff the config has stages
+    pub config: String,
+    pub epochs: f64,
+    /// expected (Poisson) batch size; 0 = 0.8 x compiled batch
+    pub expected_batch: usize,
+    pub seed: u64,
+    pub privacy: PrivacySpec,
+    pub clip: ClipPolicy,
+    pub optim: OptimSpec,
+    pub data: DataSpec,
+    pub pipe: PipeSpec,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        RunSpec {
+            config: "resmlp".into(),
+            epochs: 3.0,
+            expected_batch: 0,
+            seed: 0,
+            privacy: PrivacySpec::default(),
+            clip: ClipPolicy::default(),
+            optim: OptimSpec::default(),
+            data: DataSpec::default(),
+            pipe: PipeSpec::default(),
+        }
+    }
+}
+
+impl RunSpec {
+    pub fn for_config(config: &str) -> Self {
+        RunSpec { config: config.to_string(), ..Default::default() }
+    }
+
+    /// Builder-time validation of every nonsensical-spec class (satellite
+    /// of the session redesign): bad privacy targets, quantile targets
+    /// outside (0,1), empty schedules, zero microbatches.
+    pub fn validate(&self) -> Result<()> {
+        if self.config.is_empty() {
+            bail!("spec.config must name a manifest config");
+        }
+        if !(self.epochs > 0.0) && self.pipe.steps == 0 {
+            bail!("spec.epochs must be > 0 (or pipeline.steps set explicitly)");
+        }
+        if self.clip.is_private() {
+            self.privacy.validate().context("invalid [privacy] section")?;
+        }
+        self.clip.validate().context("invalid [clip] section")?;
+        self.optim.validate().context("invalid [optim] section")?;
+        self.data.validate().context("invalid [data] section")?;
+        self.pipe.validate().context("invalid [pipeline] section")?;
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("config".into(), Json::Str(self.config.clone()));
+        m.insert("epochs".into(), Json::Num(self.epochs));
+        m.insert("expected_batch".into(), Json::Num(self.expected_batch as f64));
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        m.insert("privacy".into(), self.privacy.to_json());
+        m.insert("clip".into(), self.clip.to_json());
+        m.insert("optim".into(), self.optim.to_json());
+        m.insert("data".into(), self.data.to_json());
+        m.insert("pipeline".into(), self.pipe.to_json());
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = RunSpec::default();
+        Ok(RunSpec {
+            config: j.get("config").context("spec needs a `config` key")?.str()?.to_string(),
+            epochs: opt_f64(j, "epochs", d.epochs)?,
+            expected_batch: opt_usize(j, "expected_batch", d.expected_batch)?,
+            seed: match j.opt("seed") {
+                Some(v) => v.u64()?,
+                None => d.seed,
+            },
+            privacy: section(j, "privacy", PrivacySpec::from_json, d.privacy)?,
+            clip: section(j, "clip", ClipPolicy::from_json, d.clip)?,
+            optim: section(j, "optim", OptimSpec::from_json, d.optim)?,
+            data: section(j, "data", DataSpec::from_json, d.data)?,
+            pipe: section(j, "pipeline", PipeSpec::from_json, d.pipe)?,
+        })
+    }
+
+    /// Parse a spec from TOML or JSON text (sniffed from the first
+    /// non-whitespace byte).
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = if text.trim_start().starts_with('{') {
+            Json::parse(text).context("parsing spec as JSON")?
+        } else {
+            crate::util::toml::parse(text).context("parsing spec as TOML")?
+        };
+        let spec = RunSpec::from_json(&j)?;
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn from_path(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading spec file {}", path.display()))?;
+        RunSpec::parse(&text).with_context(|| format!("in spec file {}", path.display()))
+    }
+
+    pub fn render_json(&self) -> String {
+        self.to_json().render()
+    }
+}
+
+// ---------------------------------------------------------------- helpers
+
+fn opt_f64(j: &Json, key: &str, default: f64) -> Result<f64> {
+    match j.opt(key) {
+        Some(v) => v.f64().with_context(|| format!("key `{key}`")),
+        None => Ok(default),
+    }
+}
+
+fn opt_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
+    match j.opt(key) {
+        Some(v) => v.usize().with_context(|| format!("key `{key}`")),
+        None => Ok(default),
+    }
+}
+
+fn opt_bool(j: &Json, key: &str, default: bool) -> Result<bool> {
+    match j.opt(key) {
+        Some(v) => v.bool().with_context(|| format!("key `{key}`")),
+        None => Ok(default),
+    }
+}
+
+fn opt_str(j: &Json, key: &str, default: &str) -> Result<String> {
+    match j.opt(key) {
+        Some(v) => Ok(v.str().with_context(|| format!("key `{key}`"))?.to_string()),
+        None => Ok(default.to_string()),
+    }
+}
+
+fn section<T>(j: &Json, key: &str, parse: fn(&Json) -> Result<T>, default: T) -> Result<T> {
+    match j.opt(key) {
+        Some(v) => parse(v).with_context(|| format!("in [{key}] section")),
+        None => Ok(default),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_method_mapping_is_total_over_legacy_methods() {
+        for m in [
+            Method::NonPrivate,
+            Method::FlatFixed,
+            Method::FlatAdaptive,
+            Method::PerLayerFixed,
+            Method::PerLayerAdaptive,
+            Method::Ghost,
+            Method::Naive,
+        ] {
+            let p = ClipPolicy::from_method(m);
+            assert_eq!(p.method().unwrap(), m, "round-trip through ClipPolicy");
+        }
+    }
+
+    #[test]
+    fn policy_pipeline_mapping() {
+        let p = ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed);
+        assert_eq!(p.pipeline_mode().unwrap(), PipelineMode::PerDevice);
+        assert!(p.method().is_err(), "per-device has no single-device method");
+        let f = ClipPolicy::new(GroupBy::Flat, ClipMode::Fixed);
+        assert_eq!(f.pipeline_mode().unwrap(), PipelineMode::FlatSync);
+        let n = ClipPolicy::non_private();
+        assert_eq!(n.pipeline_mode().unwrap(), PipelineMode::NonPrivate);
+        assert_eq!(n.method().unwrap(), Method::NonPrivate);
+        assert!(ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive).pipeline_mode().is_err());
+    }
+
+    #[test]
+    fn init_thresholds_follow_a1_conventions() {
+        let p = ClipPolicy { clip_init: 2.0, ..ClipPolicy::new(GroupBy::PerLayer, ClipMode::Fixed) };
+        let t = p.init_thresholds(4);
+        assert_eq!(t.len(), 4);
+        assert!((t[0] - 1.0).abs() < 1e-12, "C/sqrt(K) = 2/2");
+        let d = ClipPolicy { clip_init: 2.0, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed) };
+        assert_eq!(d.init_thresholds(4), vec![2.0; 4]);
+        let f = ClipPolicy { clip_init: 2.0, ..ClipPolicy::new(GroupBy::Flat, ClipMode::Fixed) };
+        assert_eq!(f.init_thresholds(4), vec![2.0]);
+    }
+
+    #[test]
+    fn runspec_json_roundtrip() {
+        let mut spec = RunSpec::for_config("lm_small");
+        spec.epochs = 2.5;
+        spec.seed = 9;
+        spec.privacy = PrivacySpec { epsilon: 8.0, delta: 1e-6, quantile_r: 0.1 };
+        spec.clip = ClipPolicy {
+            clip_init: 0.1,
+            target_q: 0.85,
+            ..ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive)
+        };
+        spec.optim = OptimSpec::adam(1e-3);
+        spec.data = DataSpec { task: "table2text".into(), n_data: 512, seed: 3 };
+        spec.pipe = PipeSpec { n_micro: 2, steps: 7, sync_latency: 0.001 };
+        let back = RunSpec::from_json(&Json::parse(&spec.render_json()).unwrap()).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn runspec_parses_toml() {
+        let doc = r#"
+config = "lm_mid_pipe_lora"
+epochs = 1.0
+seed = 4
+
+[privacy]
+epsilon = 1.0
+delta = 1e-5
+
+[clip]
+group_by = "per-device"
+mode = "fixed"
+clip_init = 0.01
+
+[optim]
+kind = "adam"
+lr = 5e-3
+
+[data]
+task = "dialogsum"
+n_data = 1024
+
+[pipeline]
+n_micro = 4
+steps = 20
+"#;
+        let spec = RunSpec::parse(doc).unwrap();
+        assert_eq!(spec.config, "lm_mid_pipe_lora");
+        assert_eq!(spec.clip.group_by, GroupBy::PerDevice);
+        assert_eq!(spec.clip.pipeline_mode().unwrap(), PipelineMode::PerDevice);
+        assert_eq!(spec.pipe.steps, 20);
+        assert_eq!(spec.data.task, "dialogsum");
+        assert!(matches!(spec.optim.kind, OptimizerKind::Adam { .. }));
+        // TOML and JSON deserialize through the same path
+        let json_back = RunSpec::parse(&spec.render_json()).unwrap();
+        assert_eq!(spec, json_back);
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let ok = RunSpec::for_config("resmlp");
+        ok.validate().unwrap();
+        let mut s = ok.clone();
+        s.privacy.epsilon = 0.0;
+        assert!(s.validate().is_err(), "epsilon <= 0");
+        let mut s = ok.clone();
+        s.privacy.epsilon = -3.0;
+        assert!(s.validate().is_err(), "negative epsilon");
+        let mut s = ok.clone();
+        s.privacy.delta = 1.0;
+        assert!(s.validate().is_err(), "delta >= 1");
+        let mut s = ok.clone();
+        s.clip.target_q = 1.5;
+        assert!(s.validate().is_err(), "target_q outside (0,1)");
+        let mut s = ok.clone();
+        s.clip.target_q = 0.0;
+        assert!(s.validate().is_err(), "target_q == 0");
+        let mut s = ok.clone();
+        s.pipe.n_micro = 0;
+        assert!(s.validate().is_err(), "n_micro == 0");
+        let mut s = ok.clone();
+        s.epochs = 0.0;
+        assert!(s.validate().is_err(), "no schedule");
+        let mut s = ok.clone();
+        s.data.n_data = 0;
+        assert!(s.validate().is_err(), "empty dataset");
+        // non-private specs don't need a meaningful privacy section
+        let mut s = ok.clone();
+        s.clip = ClipPolicy::non_private();
+        s.privacy.epsilon = -1.0;
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn token_parsers_roundtrip() {
+        for g in [GroupBy::Flat, GroupBy::PerLayer, GroupBy::PerDevice] {
+            assert_eq!(g.token().parse::<GroupBy>().unwrap(), g);
+        }
+        for c in [ClipMode::NonPrivate, ClipMode::Fixed, ClipMode::Adaptive] {
+            assert_eq!(c.token().parse::<ClipMode>().unwrap(), c);
+        }
+        for f in [FlatImpl::Fused, FlatImpl::Ghost, FlatImpl::Naive] {
+            assert_eq!(f.token().parse::<FlatImpl>().unwrap(), f);
+        }
+    }
+}

@@ -1,6 +1,8 @@
-//! Dependency-free utilities: JSON, RNG, CLI flags, micro-bench timing.
+//! Dependency-free utilities: JSON, TOML, RNG, CLI flags, micro-bench
+//! timing.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod rng;
+pub mod toml;

@@ -1,0 +1,230 @@
+//! Minimal TOML-subset parser for run-spec files (no `toml` crate in this
+//! environment — same rationale as [`super::json`]). Parses the subset a
+//! hand-written `run.toml` uses and lowers it into the in-tree [`Json`]
+//! value so spec deserialization has exactly one code path:
+//!
+//! * `[table]` and `[nested.table]` headers
+//! * `key = value` with string / number / bool / inline `[a, b]` arrays
+//! * `#` comments, blank lines
+//!
+//! Not supported (rejected loudly, never silently misread): multi-line
+//! strings, dates, inline tables, arrays-of-tables (`[[x]]`).
+
+use anyhow::{anyhow, bail, Result};
+
+use super::json::Json;
+
+/// Parse TOML text into a [`Json::Obj`] tree.
+pub fn parse(text: &str) -> Result<Json> {
+    let mut root = std::collections::BTreeMap::new();
+    // path of the table currently being filled; empty = root
+    let mut current: Vec<String> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |m: &str| anyhow!("toml line {}: {m}: `{}`", lineno + 1, raw.trim());
+        if let Some(head) = line.strip_prefix('[') {
+            if head.starts_with('[') {
+                return Err(err("arrays of tables ([[..]]) are not supported"));
+            }
+            let head = head
+                .strip_suffix(']')
+                .ok_or_else(|| err("unterminated table header"))?;
+            current = head
+                .split('.')
+                .map(|s| {
+                    let s = s.trim();
+                    if s.is_empty() {
+                        Err(err("empty table-name segment"))
+                    } else {
+                        Ok(s.to_string())
+                    }
+                })
+                .collect::<Result<_>>()?;
+            // materialize the table so empty sections still round-trip
+            insert_at(&mut root, &current, None, Json::Obj(Default::default()), false)
+                .map_err(|e| err(&e.to_string()))?;
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| err("expected `key = value`"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err("empty key"));
+        }
+        let val = value(line[eq + 1..].trim()).map_err(|e| err(&e.to_string()))?;
+        insert_at(&mut root, &current, Some(key), val, true)
+            .map_err(|e| err(&e.to_string()))?;
+    }
+    Ok(Json::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Descend to `path` (creating tables), then insert `key` (or nothing when
+/// just materializing a header). `strict` rejects overwriting a key.
+fn insert_at(
+    root: &mut std::collections::BTreeMap<String, Json>,
+    path: &[String],
+    key: Option<&str>,
+    val: Json,
+    strict: bool,
+) -> Result<()> {
+    let mut cur = root;
+    for seg in path {
+        let entry = cur
+            .entry(seg.clone())
+            .or_insert_with(|| Json::Obj(Default::default()));
+        cur = match entry {
+            Json::Obj(m) => m,
+            _ => bail!("`{seg}` is both a value and a table"),
+        };
+    }
+    if let Some(k) = key {
+        if strict && cur.contains_key(k) {
+            bail!("duplicate key `{k}`");
+        }
+        cur.insert(k.to_string(), val);
+    }
+    Ok(())
+}
+
+fn value(s: &str) -> Result<Json> {
+    if let Some(q) = s.strip_prefix('"') {
+        let body = q.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        if body.contains('"') {
+            bail!("embedded quotes are not supported");
+        }
+        return Ok(Json::Str(body.replace("\\n", "\n").replace("\\t", "\t")));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or_else(|| anyhow!("unterminated array"))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Json::Arr(Vec::new()));
+        }
+        return Ok(Json::Arr(
+            split_top(inner)?.iter().map(|e| value(e.trim())).collect::<Result<_>>()?,
+        ));
+    }
+    match s {
+        "true" => return Ok(Json::Bool(true)),
+        "false" => return Ok(Json::Bool(false)),
+        _ => {}
+    }
+    // TOML allows numeric underscores and `inf`
+    let cleaned = s.replace('_', "");
+    match cleaned.as_str() {
+        "inf" | "+inf" => return Ok(Json::Num(f64::INFINITY)),
+        _ => {}
+    }
+    cleaned
+        .parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| anyhow!("cannot parse value `{s}`"))
+}
+
+/// Split an inline-array body on top-level commas (quotes respected).
+fn split_top(s: &str) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    let mut depth = 0usize;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.checked_sub(1).ok_or_else(|| anyhow!("unbalanced ]"))?;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if in_str {
+        bail!("unterminated string in array");
+    }
+    out.push(cur);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_spec_shaped_document() {
+        let doc = r#"
+# a run spec
+config = "resmlp"
+epochs = 3.5
+seed = 7
+
+[privacy]
+epsilon = 3.0
+delta = 1e-5
+
+[clip]
+group_by = "per-layer"
+adaptive = true
+thresholds = [0.1, 0.2]
+"#;
+        let j = parse(doc).unwrap();
+        assert_eq!(j.get("config").unwrap().str().unwrap(), "resmlp");
+        assert_eq!(j.get("epochs").unwrap().f64().unwrap(), 3.5);
+        assert_eq!(j.get("seed").unwrap().u64().unwrap(), 7);
+        let p = j.get("privacy").unwrap();
+        assert_eq!(p.get("epsilon").unwrap().f64().unwrap(), 3.0);
+        assert_eq!(p.get("delta").unwrap().f64().unwrap(), 1e-5);
+        let c = j.get("clip").unwrap();
+        assert!(c.get("adaptive").unwrap().bool().unwrap());
+        assert_eq!(c.get("thresholds").unwrap().arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn nested_tables_and_comments() {
+        let j = parse("[a.b]\nx = 1 # trailing\ns = \"ha#sh\"\n").unwrap();
+        let b = j.get("a").unwrap().get("b").unwrap();
+        assert_eq!(b.get("x").unwrap().usize().unwrap(), 1);
+        assert_eq!(b.get("s").unwrap().str().unwrap(), "ha#sh");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("just words").is_err());
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("[[array.of.tables]]").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("k = \"open").is_err());
+        assert!(parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn numbers_with_underscores_and_bools() {
+        let j = parse("big = 1_000_000\nflag = false\nneg = -2.5e-3").unwrap();
+        assert_eq!(j.get("big").unwrap().u64().unwrap(), 1_000_000);
+        assert!(!j.get("flag").unwrap().bool().unwrap());
+        assert_eq!(j.get("neg").unwrap().f64().unwrap(), -2.5e-3);
+    }
+}

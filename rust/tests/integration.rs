@@ -75,7 +75,7 @@ fn dp_perlayer_improves_and_respects_plan() {
         ..Default::default()
     };
     let mut tr = Trainer::new(rt(), "resmlp", data.len(), opts).unwrap();
-    let plan = tr.plan.unwrap();
+    let plan = tr.plan().unwrap();
     assert!(plan.sigma_grad >= plan.sigma_base);
     let (loss0, _) = tr.evaluate(&data).unwrap();
     let hist = tr.run(&data, 0).unwrap();
@@ -87,7 +87,7 @@ fn dp_perlayer_improves_and_respects_plan() {
             assert!((0.0..=1.0 + 1e-9).contains(f));
         }
     }
-    let c = &tr.quantiles.thresholds;
+    let c = tr.thresholds();
     assert!(c.iter().all(|&x| x > 0.0));
 }
 
@@ -248,6 +248,121 @@ fn pipeline_training_reduces_loss_nonprivate() {
     }
     let after = eng.evaluate(&data).unwrap();
     assert!(after < before, "pipeline LoRA training must reduce NLL: {before} -> {after}");
+}
+
+// ----------------------------------------------------------------- session
+
+#[test]
+fn session_selects_backend_from_manifest() {
+    use gwclip::session::{ClipMode, ClipPolicy, GroupBy, Session};
+    // resmlp_tiny has no stages -> single-device backend
+    let s = Session::builder(rt(), "resmlp_tiny")
+        .clip(ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive))
+        .epochs(0.5)
+        .build(64)
+        .unwrap();
+    assert!(s.trainer().is_some() && s.engine().is_none());
+    // lm_mid_pipe_lora has stages -> pipeline backend
+    let s = Session::builder(rt(), "lm_mid_pipe_lora")
+        .clip(ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed))
+        .steps(2)
+        .build(64)
+        .unwrap();
+    assert!(s.engine().is_some() && s.trainer().is_none());
+    assert_eq!(s.thresholds().len(), s.engine().unwrap().n_stages);
+    // per-device policy on a stage-less config must be rejected
+    assert!(Session::builder(rt(), "resmlp_tiny")
+        .clip(ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed))
+        .epochs(0.5)
+        .build(64)
+        .is_err());
+}
+
+#[test]
+fn session_pipeline_sigma_is_accountant_derived() {
+    use gwclip::session::{ClipMode, ClipPolicy, GroupBy, PrivacySpec, Session};
+    let s = Session::builder(rt(), "lm_mid_pipe_lora")
+        .privacy(PrivacySpec::new(1.0, 1e-5))
+        .clip(ClipPolicy { clip_init: 1e-2, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed) })
+        .n_micro(2)
+        .steps(5)
+        .build(256)
+        .unwrap();
+    let plan = s.plan().expect("private pipeline run must carry a plan");
+    let mb = s.engine().unwrap().minibatch();
+    // deterministic round-robin batches -> no subsampling amplification:
+    // q=1 composition over each example's participation count
+    let participations = ((5.0 * mb as f64) / 256.0).ceil().max(1.0) as u64;
+    let want = accountant::noise_multiplier(1.0, participations, 1.0, 1e-5);
+    assert!((plan.sigma_grad - want).abs() < 1e-9, "{} vs {want}", plan.sigma_grad);
+    assert_eq!(plan.q, 1.0, "pipeline accounting must not claim amplification");
+}
+
+#[test]
+fn session_reproduces_legacy_trainer_seed_for_seed() {
+    use gwclip::session::{ClipPolicy, PrivacySpec, Session};
+    let data = tiny_mixture(128, 12);
+    let opts = TrainOpts {
+        method: Method::PerLayerAdaptive,
+        epsilon: 8.0,
+        epochs: 1.0,
+        lr: 0.1,
+        clip_init: 0.5,
+        target_q: 0.6,
+        seed: 21,
+        ..Default::default()
+    };
+    // legacy path (shim over the shared DpCore)
+    let mut tr = Trainer::new(rt(), "resmlp_tiny", data.len(), opts.clone()).unwrap();
+    let legacy = tr.run(&data, 0).unwrap();
+    // session path from the equivalent declarative spec
+    let mut sess = Session::builder(rt(), "resmlp_tiny")
+        .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+        .clip(ClipPolicy { clip_init: 0.5, target_q: 0.6, ..opts.clip_policy() })
+        .optim(gwclip::session::OptimSpec::sgd(0.1))
+        .epochs(1.0)
+        .seed(21)
+        .build(data.len())
+        .unwrap();
+    let events = sess.run(&data, 0).unwrap();
+    assert_eq!(legacy.len(), events.len());
+    for (a, b) in legacy.iter().zip(&events) {
+        assert_eq!(a.batch_size, b.batch_size, "same Poisson draws");
+        assert!((a.loss - b.loss).abs() < 1e-9, "loss {} vs {}", a.loss, b.loss);
+    }
+    let (l0, a0) = tr.evaluate(&data).unwrap();
+    let (l1, a1) = sess.evaluate(&data).unwrap();
+    assert!((l0 - l1).abs() < 1e-9 && (a0 - a1).abs() < 1e-9);
+}
+
+#[test]
+fn session_runs_from_spec_file() {
+    use gwclip::session::{RunSpec, SessionBuilder};
+    let toml = r#"
+config = "resmlp_tiny"
+epochs = 0.5
+seed = 3
+
+[privacy]
+epsilon = 8.0
+
+[clip]
+group_by = "per-layer"
+mode = "adaptive"
+target_q = 0.6
+
+[data]
+task = "mixture"
+n_data = 64
+"#;
+    let spec = RunSpec::parse(toml).unwrap();
+    let (mut sess, train, eval) =
+        SessionBuilder::from_spec(rt(), spec).build_with_data().unwrap();
+    let events = sess.run(&*train, 0).unwrap();
+    assert!(!events.is_empty());
+    assert!(events.iter().all(|e| e.loss.is_finite()));
+    let (loss, _) = sess.evaluate(&*eval).unwrap();
+    assert!(loss.is_finite());
 }
 
 #[test]

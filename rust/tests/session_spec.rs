@@ -1,0 +1,172 @@
+//! Artifact-free tests of the session spec layer: serde round-trips
+//! through the in-tree JSON/TOML paths, builder-time validation, and the
+//! FromStr surfaces that replaced the CLI's ad-hoc parsers.
+
+use gwclip::coordinator::noise::Allocation;
+use gwclip::coordinator::trainer::Method;
+use gwclip::pipeline::PipelineMode;
+use gwclip::session::{
+    ClipMode, ClipPolicy, DataSpec, GroupBy, OptimSpec, PipeSpec, PrivacySpec, RunSpec,
+};
+use gwclip::util::json::Json;
+
+fn roundtrip(spec: &RunSpec) -> RunSpec {
+    RunSpec::from_json(&Json::parse(&spec.render_json()).unwrap()).unwrap()
+}
+
+#[test]
+fn privacy_spec_roundtrips() {
+    for p in [
+        PrivacySpec::default(),
+        PrivacySpec { epsilon: 0.25, delta: 1e-6, quantile_r: 0.0 },
+        PrivacySpec { epsilon: 100.0, delta: 1e-3, quantile_r: 0.5 },
+    ] {
+        let back = PrivacySpec::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+    }
+}
+
+#[test]
+fn clip_policy_roundtrips_every_cell_of_the_taxonomy() {
+    for group_by in [GroupBy::Flat, GroupBy::PerLayer, GroupBy::PerDevice] {
+        for mode in [ClipMode::NonPrivate, ClipMode::Fixed, ClipMode::Adaptive] {
+            for alloc in [Allocation::Global, Allocation::EqualBudget, Allocation::Weighted] {
+                let p = ClipPolicy {
+                    clip_init: 0.25,
+                    target_q: 0.7,
+                    quantile_eta: 0.2,
+                    allocation: alloc,
+                    ..ClipPolicy::new(group_by, mode)
+                };
+                let back = ClipPolicy::from_json(&p.to_json()).unwrap();
+                assert_eq!(p, back, "{group_by:?} x {mode:?} x {alloc:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn optim_spec_roundtrips_both_kinds() {
+    for o in [
+        OptimSpec::sgd(0.5),
+        OptimSpec::momentum(0.25, 0.9),
+        OptimSpec::adam(1e-3),
+        OptimSpec { weight_decay: 0.01, lr_decay: true, ..OptimSpec::adam(2e-3) },
+    ] {
+        let back = OptimSpec::from_json(&o.to_json()).unwrap();
+        assert_eq!(o, back);
+    }
+}
+
+#[test]
+fn full_runspec_roundtrips_json_and_toml() {
+    let mut spec = RunSpec::for_config("lm_mid_pipe_lora");
+    spec.epochs = 1.5;
+    spec.seed = 11;
+    spec.privacy = PrivacySpec { epsilon: 4.0, delta: 1e-5, quantile_r: 0.0 };
+    spec.clip = ClipPolicy { clip_init: 1e-2, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed) };
+    spec.optim = OptimSpec::adam(5e-3);
+    spec.data = DataSpec { task: "dialogsum".into(), n_data: 1024, seed: 2 };
+    spec.pipe = PipeSpec { n_micro: 4, steps: 20, sync_latency: 0.002 };
+    assert_eq!(spec, roundtrip(&spec));
+
+    // the docs/SESSION_API.md TOML example parses to the same spec shape
+    let toml = r#"
+config = "lm_mid_pipe_lora"
+epochs = 1.5
+seed = 11
+
+[privacy]
+epsilon = 4.0
+delta = 1e-5
+quantile_r = 0.0
+
+[clip]
+group_by = "per-device"
+mode = "fixed"
+clip_init = 0.01
+
+[optim]
+kind = "adam"
+lr = 5e-3
+
+[data]
+task = "dialogsum"
+n_data = 1024
+seed = 2
+
+[pipeline]
+n_micro = 4
+steps = 20
+"#;
+    let parsed = RunSpec::parse(toml).unwrap();
+    assert_eq!(parsed, spec);
+}
+
+#[test]
+fn builder_rejects_each_nonsense_class() {
+    let ok = RunSpec::for_config("resmlp");
+    assert!(ok.validate().is_ok());
+    for (label, mutate) in [
+        ("epsilon <= 0", Box::new(|s: &mut RunSpec| s.privacy.epsilon = 0.0) as Box<dyn Fn(&mut RunSpec)>),
+        ("delta >= 1", Box::new(|s: &mut RunSpec| s.privacy.delta = 1.0)),
+        ("delta <= 0", Box::new(|s: &mut RunSpec| s.privacy.delta = 0.0)),
+        ("quantile_r >= 1", Box::new(|s: &mut RunSpec| s.privacy.quantile_r = 1.0)),
+        ("target_q >= 1", Box::new(|s: &mut RunSpec| s.clip.target_q = 1.0)),
+        ("target_q <= 0", Box::new(|s: &mut RunSpec| s.clip.target_q = -0.1)),
+        ("clip_init <= 0", Box::new(|s: &mut RunSpec| s.clip.clip_init = 0.0)),
+        ("n_micro == 0", Box::new(|s: &mut RunSpec| s.pipe.n_micro = 0)),
+        ("n_data == 0", Box::new(|s: &mut RunSpec| s.data.n_data = 0)),
+        ("lr <= 0", Box::new(|s: &mut RunSpec| s.optim.lr = 0.0)),
+        ("empty schedule", Box::new(|s: &mut RunSpec| s.epochs = 0.0)),
+    ] {
+        let mut bad = ok.clone();
+        mutate(&mut bad);
+        assert!(bad.validate().is_err(), "must reject: {label}");
+    }
+}
+
+#[test]
+fn method_and_mode_fromstr_cover_all_cli_aliases() {
+    for m in Method::all() {
+        assert_eq!(m.token().parse::<Method>().unwrap(), m);
+    }
+    for m in PipelineMode::all() {
+        assert_eq!(m.token().parse::<PipelineMode>().unwrap(), m);
+    }
+    // the exact alias set the old main.rs parse_method accepted
+    for (alias, want) in [
+        ("non-private", Method::NonPrivate),
+        ("nonprivate", Method::NonPrivate),
+        ("flat", Method::FlatFixed),
+        ("fixed-flat", Method::FlatFixed),
+        ("adaptive-flat", Method::FlatAdaptive),
+        ("per-layer", Method::PerLayerFixed),
+        ("fixed-per-layer", Method::PerLayerFixed),
+        ("adaptive-per-layer", Method::PerLayerAdaptive),
+        ("ghost", Method::Ghost),
+        ("naive", Method::Naive),
+    ] {
+        assert_eq!(alias.parse::<Method>().unwrap(), want);
+    }
+    assert!("blat".parse::<Method>().is_err());
+    assert!("flat-async".parse::<PipelineMode>().is_err());
+}
+
+#[test]
+fn clip_policy_unifies_method_and_pipeline_mode() {
+    // single-device mapping is a bijection over legacy methods
+    for m in Method::all() {
+        assert_eq!(ClipPolicy::from_method(m).method().unwrap(), m);
+    }
+    // pipeline mapping covers all legacy modes
+    for (mode, adaptive) in [
+        (PipelineMode::PerDevice, false),
+        (PipelineMode::PerDevice, true),
+        (PipelineMode::FlatSync, false),
+        (PipelineMode::NonPrivate, false),
+    ] {
+        let p = ClipPolicy::from_pipeline_mode(mode, adaptive);
+        assert_eq!(p.pipeline_mode().unwrap(), mode);
+    }
+}
