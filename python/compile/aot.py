@@ -57,6 +57,14 @@ def configs() -> dict[str, dict]:
             cfg=M.ModelConfig(kind="lm", batch=4, vocab=64, seq=16, d_model=32,
                               n_heads=2, n_layers=2, d_ff=64, use_pallas=True),
             entries=all_dp + ["logits"]),
+        # single-stage pipeline twin of lm_tiny (same ModelConfig, hence
+        # identical init checkpoint): backs the backend-parity integration
+        # test — per-device clipping over one stage must reproduce the
+        # single-device flat run's privacy plan and Poisson draws
+        "lm_tiny_pipe": dict(
+            cfg=M.ModelConfig(kind="lm", batch=4, vocab=64, seq=16, d_model=32,
+                              n_heads=2, n_layers=2, d_ff=64, use_pallas=True),
+            entries=[], stages=[0, 2]),
         # CIFAR-10 analog (WRN16-4 -> WideResMLP), Tables 1a/2/11a, Figs 2/3/5
         "resmlp": dict(
             cfg=M.ModelConfig(kind="resmlp", batch=256, features=64, width=256,

@@ -11,6 +11,13 @@
 //!                C(alpha,k) (1-q)^{alpha-k} q^k exp(k(k-1)/(2 sigma^2))
 //!
 //! converted via epsilon = min_alpha [ T * RDP(alpha) + log(1/delta)/(alpha-1) ].
+//!
+//! Both backends account through this one path: the single-device trainer
+//! and (since the Poisson-pipeline rework) the pipeline backend at
+//! q = E[B]/n, with the legacy round-robin pipeline composing on the
+//! q = 1 branch. Both branches are pinned against an independent
+//! reference implementation of the TF-Privacy/Opacus integer-order
+//! accountant by `tests/accountant_golden.rs`.
 
 const ORDERS: std::ops::RangeInclusive<u32> = 2..=512;
 

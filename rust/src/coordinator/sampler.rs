@@ -2,17 +2,27 @@
 //! subsampling: each example joins the batch independently with
 //! probability rho. The compiled executables have a static batch dimension
 //! B, so Poisson draws are padded (weight 0) or truncated to B; truncation
-//! is logged and kept rare by sizing B ~ 1.25 * rho * n.
+//! is recorded on the batch (and surfaced on `StepEvent`) and kept rare by
+//! sizing B ~ 1.25 * rho * n.
 
 use super::noise::Rng;
 
 #[derive(Debug, Clone)]
 pub struct Batch {
-    /// dataset indices, length <= capacity
+    /// dataset indices; length <= capacity ([`PoissonSampler::sample`]) or
+    /// exactly capacity ([`PoissonSampler::sample_padded`])
     pub indices: Vec<usize>,
     /// 1.0 for real examples, 0.0 for padding, length == capacity
     pub weights: Vec<f32>,
+    /// examples the draw included but the static capacity dropped
     pub truncated: usize,
+}
+
+impl Batch {
+    /// Number of live (weight 1) examples.
+    pub fn live(&self) -> usize {
+        self.weights.iter().filter(|&&w| w > 0.0).count()
+    }
 }
 
 /// Poisson subsampler over a dataset of `n` examples.
@@ -46,6 +56,19 @@ impl PoissonSampler {
             *w = 1.0;
         }
         Batch { indices: idx, weights, truncated }
+    }
+
+    /// Like [`PoissonSampler::sample`], but with `indices` padded to
+    /// exactly `capacity` entries so fixed-batch executables can consume
+    /// the draw directly: padding slots carry dataset index 0 and weight
+    /// 0.0. Invariant: `weights[i] == 0.0` iff slot `i` is padding (live
+    /// examples occupy the prefix).
+    pub fn sample_padded(&self, rng: &mut Rng) -> Batch {
+        let mut b = self.sample(rng);
+        while b.indices.len() < self.capacity {
+            b.indices.push(0);
+        }
+        b
     }
 }
 
@@ -147,6 +170,44 @@ mod tests {
         let b = s.sample(&mut rng);
         assert_eq!(b.indices.len(), 10);
         assert_eq!(b.truncated, 90);
+    }
+
+    #[test]
+    fn poisson_truncation_never_inflates_weights() {
+        // at rate 1 every draw overflows a small capacity: the batch must
+        // report the overflow, weights must stay 0/1, and the live count
+        // must equal the capacity — truncation never manufactures weight
+        for cap in [1usize, 7, 10] {
+            let s = PoissonSampler::new(100, 1.0, cap);
+            let mut rng = Rng::seeded(13);
+            for _ in 0..20 {
+                let b = s.sample_padded(&mut rng);
+                assert_eq!(b.truncated, 100 - cap);
+                assert_eq!(b.indices.len(), cap);
+                assert!(b.weights.iter().all(|&w| w == 0.0 || w == 1.0));
+                assert_eq!(b.live(), cap);
+                assert!(b.weights.iter().sum::<f32>() as usize <= cap);
+            }
+        }
+    }
+
+    #[test]
+    fn padded_batches_have_full_capacity_and_consistent_mask() {
+        let s = PoissonSampler::new(500, 0.05, 64);
+        let mut rng = Rng::seeded(14);
+        for _ in 0..50 {
+            let b = s.sample_padded(&mut rng);
+            assert_eq!(b.indices.len(), 64);
+            assert_eq!(b.weights.len(), 64);
+            let live = b.live();
+            // live prefix, padded suffix: weight 0 <=> padding slot
+            for (i, &w) in b.weights.iter().enumerate() {
+                assert_eq!(w > 0.0, i < live, "slot {i} live {live}");
+                if w == 0.0 {
+                    assert_eq!(b.indices[i], 0, "padding carries index 0");
+                }
+            }
+        }
     }
 
     #[test]

@@ -245,6 +245,8 @@ pub struct StepStats {
     pub clip_frac: Vec<f64>,
     /// mean per-example norm per group (diagnostic, Figure 2/4)
     pub mean_norms: Vec<f64>,
+    /// examples the Poisson draw included but the static capacity dropped
+    pub truncated: usize,
 }
 
 pub struct Trainer<'r> {
@@ -402,17 +404,13 @@ impl<'r> Trainer<'r> {
         self.core.noise_stds()
     }
 
-    /// One Algorithm-1 iteration over a fresh Poisson batch.
+    /// One Algorithm-1 iteration over a fresh Poisson batch (padded to the
+    /// static capacity with index-0, weight-0 slots).
     pub fn step(&mut self, data: &dyn Dataset) -> Result<StepStats> {
-        let batch = self.sampler.sample(&mut self.core.rng);
-        let mut indices = batch.indices.clone();
-        // pad to capacity with index 0 (weight 0)
-        while indices.len() < self.sampler.capacity {
-            indices.push(0);
-        }
-        let mb = data.batch(&indices);
+        let batch = self.sampler.sample_padded(&mut self.core.rng);
+        let mb = data.batch(&batch.indices);
         let (x, y) = mb.inputs();
-        let live = batch.weights.iter().filter(|&&w| w > 0.0).count();
+        let live = batch.live();
 
         let extras: Vec<HostValue> = match self.opts.method {
             Method::NonPrivate => vec![x, y],
@@ -512,6 +510,7 @@ impl<'r> Trainer<'r> {
             batch_size: live,
             clip_frac,
             mean_norms,
+            truncated: batch.truncated,
         })
     }
 

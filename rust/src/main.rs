@@ -13,7 +13,7 @@ use gwclip::coordinator::trainer::Method;
 use gwclip::pipeline::PipelineMode;
 use gwclip::runtime::Runtime;
 use gwclip::session::{
-    ClipPolicy, DataSpec, OptimSpec, PrivacySpec, RunSpec, Session, SessionBuilder,
+    ClipPolicy, DataSpec, OptimSpec, PrivacySpec, RunSpec, Sampling, Session, SessionBuilder,
 };
 use gwclip::util::cli::Args;
 
@@ -30,6 +30,7 @@ USAGE:
   gwclip pipeline [--config lm_mid_pipe_lora] [--mode per-device|flat-sync|non-private]
                   [--epsilon 1] [--delta 1e-5] [--steps 10] [--n-micro 4]
                   [--clip 0.01] [--lr 5e-3] [--n-data 2048] [--seed 0]
+                  [--sampling poisson|round_robin]   (poisson = amplified accountant)
   gwclip exp <which>   table1|table2|table3|table4|table5|table6|table10|table11|
                        fig1|fig2|fig3|fig5|fig6|fig7|pipeline-overhead|accountant|all
                        [--paper-scale]
@@ -143,10 +144,15 @@ fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
 
 /// Flag-driven pipeline run. Sigma is always accountant-derived from
 /// (--epsilon, --delta) over the requested steps — the old hardcoded
-/// `sigma: 0.5` privacy hole is gone.
+/// `sigma: 0.5` privacy hole is gone. With the default Poisson sampling
+/// the accountant claims subsampling amplification at q = E[B]/n (E[B] =
+/// 0.8x the minibatch by default); `--sampling round_robin` restores the
+/// legacy deterministic minibatches (and their conservative q = 1
+/// composition).
 fn cmd_pipeline(rt: &Runtime, args: &Args) -> Result<()> {
     let config = args.get("config", "lm_mid_pipe_lora");
     let mode: PipelineMode = args.get("mode", "per-device").parse()?;
+    let sampling: Sampling = args.get("sampling", "poisson").parse()?;
     let seed = args.get_u64("seed", 0)?;
     let clip = ClipPolicy {
         clip_init: args.get_f64("clip", 1e-2)?,
@@ -180,6 +186,7 @@ fn cmd_pipeline(rt: &Runtime, args: &Args) -> Result<()> {
             .epochs(args.get_f64("epochs", 1.0)?)
             .n_micro(args.get_usize("n-micro", 4)?)
             .steps(args.get_usize("steps", 10)?)
+            .sampling(sampling)
             .seed(seed),
     )
 }

@@ -19,6 +19,13 @@
 //! accountant. The direct [`PipelineEngine::new`] constructor remains as a
 //! deprecated raw-sigma shim for one release.
 //!
+//! Steps consume fixed-capacity minibatches with a per-example 0/1 weight
+//! mask ([`PipelineEngine::step_weighted`]): Poisson draws padded below
+//! the static minibatch carry weight-0 slots that every stage executable
+//! multiplies into its clip coefficients, so padded examples contribute
+//! zero gradient to every clip group — this is what lets the session
+//! account the pipeline with subsampling amplification.
+//!
 //! Every executable call is timed and fed to the GPipe makespan model
 //! (schedule.rs), so each step reports both measured host time and the
 //! simulated S-device step latency.
@@ -97,6 +104,9 @@ pub struct PipelineOpts {
     pub mode: PipelineMode,
     /// microbatches per minibatch (J in Algorithm 2)
     pub n_micro: usize,
+    /// expected live batch E[B] normalizing the summed gradients (Poisson
+    /// sampling leaves some slots padded); 0 = the full static minibatch
+    pub expected_batch: usize,
     /// per-device threshold init (PerDevice) or global threshold (FlatSync)
     pub clip: f64,
     /// gradient noise multiplier (from the accountant)
@@ -117,6 +127,7 @@ impl Default for PipelineOpts {
         PipelineOpts {
             mode: PipelineMode::PerDevice,
             n_micro: 4,
+            expected_batch: 0,
             clip: 1.0,
             sigma: 0.0,
             lr: 1e-3,
@@ -188,13 +199,18 @@ impl<'r> PipelineEngine<'r> {
             .ok_or_else(|| anyhow!("config {config_name} has no pipeline stages"))?;
         let n_stages = stages.stages.len();
         let k = if opts.mode == PipelineMode::PerDevice { n_stages } else { 1 };
+        let expected = if opts.expected_batch > 0 {
+            opts.expected_batch
+        } else {
+            cfg.batch * opts.n_micro
+        };
         let core = DpCore::with_raw_sigma(
             if opts.mode == PipelineMode::NonPrivate { 0.0 } else { opts.sigma },
             vec![opts.clip; k],
             opts.adaptive && opts.mode == PipelineMode::PerDevice,
             opts.target_q,
             opts.quantile_eta,
-            (cfg.batch * opts.n_micro) as f64,
+            expected as f64,
             Allocation::EqualBudget,
             opts.seed,
         );
@@ -329,10 +345,6 @@ impl<'r> PipelineEngine<'r> {
         m
     }
 
-    fn weights_all_one(&self) -> Tensor {
-        Tensor::from_vec(&[self.micro_batch], vec![1.0; self.micro_batch]).unwrap()
-    }
-
     fn stage_x_in(
         &self,
         st: usize,
@@ -347,19 +359,41 @@ impl<'r> PipelineEngine<'r> {
         }
     }
 
-    /// One DP pipeline step over `minibatch()` examples from `data`.
+    /// One DP pipeline step over `minibatch()` examples from `data`, all
+    /// with weight 1 (every slot live).
     pub fn step(&mut self, data: &dyn Dataset, indices: &[usize]) -> Result<PipeStepStats> {
+        let weights = vec![1.0f32; indices.len()];
+        self.step_weighted(data, indices, &weights)
+    }
+
+    /// One DP pipeline step over a fixed-capacity minibatch with a
+    /// per-example 0/1 weight mask (Poisson padding): weight-0 slots
+    /// contribute zero gradient to every per-device clip group — the stage
+    /// executables multiply each example's clip coefficient by its weight —
+    /// and are excluded from the loss and the adaptive clip counts, so a
+    /// padded batch trains exactly like its live subset.
+    pub fn step_weighted(
+        &mut self,
+        data: &dyn Dataset,
+        indices: &[usize],
+        weights: &[f32],
+    ) -> Result<PipeStepStats> {
         assert_eq!(indices.len(), self.minibatch());
+        assert_eq!(weights.len(), self.minibatch());
         let j = self.opts.n_micro;
         let s = self.n_stages;
+        let b = self.micro_batch;
         let host_t0 = Instant::now();
         let mut durations: HashMap<Op, f64> = HashMap::new();
         let mut calls = 0usize;
 
-        let micro: Vec<ModelBatch> = (0..j)
-            .map(|m| data.batch(&indices[m * self.micro_batch..(m + 1) * self.micro_batch]))
-            .collect();
+        let micro: Vec<ModelBatch> =
+            (0..j).map(|m| data.batch(&indices[m * b..(m + 1) * b])).collect();
         let tokens: Vec<(HostValue, HostValue)> = micro.iter().map(|m| m.inputs()).collect();
+        // per-microbatch weight tensors fed to every backward executable
+        let micro_w: Vec<Tensor> = (0..j)
+            .map(|m| Tensor::from_vec(&[b], weights[m * b..(m + 1) * b].to_vec()))
+            .collect::<Result<_>>()?;
 
         // -------- forward wavefront: acts[s][m] = input act of stage s ----
         let mut acts: Vec<Vec<Option<Tensor>>> = vec![vec![None; j]; s];
@@ -378,8 +412,13 @@ impl<'r> PipelineEngine<'r> {
             }
         }
 
-        let w1 = self.weights_all_one();
         let mut loss_total = 0f64;
+        // per-device/non-private: global weighted mean across ALL live
+        // examples (sum_m loss_m * livecount_m / sum_m livecount_m), so
+        // unevenly padded microbatches weigh examples equally — matching
+        // the single-device backend's definition
+        let mut loss_wsum = 0f64;
+        let mut weight_sum = 0f64;
         let mut syncs = 1usize; // end-of-step optimizer barrier
 
         match self.opts.mode {
@@ -398,7 +437,7 @@ impl<'r> PipelineEngine<'r> {
                             x_in,
                             tokens[m].1.clone(),
                             HostValue::F32(Tensor::scalar(c_last as f32)),
-                            HostValue::F32(w1.clone()),
+                            HostValue::F32(micro_w[m].clone()),
                         ],
                     )?;
                     durations.insert(
@@ -406,12 +445,17 @@ impl<'r> PipelineEngine<'r> {
                         t0.elapsed().as_secs_f64(),
                     );
                     calls += 1;
-                    loss_total += outs[0].data[0] as f64;
+                    // the executable reports the weighted MEAN over this
+                    // microbatch; recover the weighted sum via the live
+                    // weight mass so the step loss is a global mean
+                    let w_m: f64 = weights[m * b..(m + 1) * b].iter().map(|&w| w as f64).sum();
+                    loss_wsum += outs[0].data[0] as f64 * w_m;
+                    weight_sum += w_m;
                     let mut dy = outs[1].clone();
                     let n_tr = self.devices[s - 1].trainable_pos.len();
                     let norms = outs[2 + n_tr].clone();
                     self.accumulate(s - 1, &outs[2..2 + n_tr]);
-                    self.record_clip_counts(s - 1, &norms);
+                    self.record_clip_counts(s - 1, &norms, &weights[m * b..(m + 1) * b]);
 
                     for st in (0..s - 1).rev() {
                         let c = if nonpriv { 1e9 } else { self.threshold(st) };
@@ -425,7 +469,7 @@ impl<'r> PipelineEngine<'r> {
                                 x_in,
                                 HostValue::F32(dy),
                                 HostValue::F32(Tensor::scalar(c as f32)),
-                                HostValue::F32(w1.clone()),
+                                HostValue::F32(micro_w[m].clone()),
                             ],
                         )?;
                         durations.insert(
@@ -437,7 +481,7 @@ impl<'r> PipelineEngine<'r> {
                         let n_tr = self.devices[st].trainable_pos.len();
                         let norms = outs[1 + n_tr].clone();
                         self.accumulate(st, &outs[1..1 + n_tr]);
-                        self.record_clip_counts(st, &norms);
+                        self.record_clip_counts(st, &norms, &weights[m * b..(m + 1) * b]);
                     }
                 }
             }
@@ -457,6 +501,10 @@ impl<'r> PipelineEngine<'r> {
                         t0.elapsed().as_secs_f64(),
                     );
                     calls += 1;
+                    // pass-1 loss is the executable's unweighted mean (the
+                    // norm pass takes no weights); with padded batches the
+                    // reported loss is a diagnostic approximation, while
+                    // the gradients below are exactly masked via coeffs
                     loss_total += outs[0].data[0] as f64;
                     let mut dy = outs[1].clone();
                     local_norms[s - 1][m] = outs[2].data.clone();
@@ -479,8 +527,9 @@ impl<'r> PipelineEngine<'r> {
                 }
 
                 // barrier: all-gather per-example norms, form global coeffs
+                // (each coeff carries the example's 0/1 weight so padded
+                // slots emit zero gradient from the regrad pass)
                 syncs += 1;
-                let b = self.micro_batch;
                 let c_global = self.threshold(0);
                 let mut coeffs: Vec<Tensor> = Vec::with_capacity(j);
                 for m in 0..j {
@@ -492,7 +541,8 @@ impl<'r> PipelineEngine<'r> {
                                 v * v
                             })
                             .sum();
-                        c.push(((c_global / sq.sqrt().max(1e-12)).min(1.0)) as f32);
+                        let w = weights[m * b + i] as f64;
+                        c.push((w * (c_global / sq.sqrt().max(1e-12)).min(1.0)) as f32);
                     }
                     coeffs.push(Tensor::from_vec(&[b], c)?);
                 }
@@ -532,8 +582,14 @@ impl<'r> PipelineEngine<'r> {
 
         // -------- noise + local updates (no cross-device traffic) ---------
         // Per-device noise std comes from the core's equal-budget
-        // allocation: sigma * sqrt(S) * C_st, Algorithm 2 line 6.
-        let expected = self.minibatch() as f64;
+        // allocation: sigma * sqrt(S) * C_st, Algorithm 2 line 6. Summed
+        // gradients are normalized by the EXPECTED live batch (Algorithm 1
+        // line 14), not the realized draw.
+        let expected = if self.opts.expected_batch > 0 {
+            self.opts.expected_batch as f64
+        } else {
+            self.minibatch() as f64
+        };
         let stds = self.core.noise_stds();
         for st in 0..s {
             let std = match self.opts.mode {
@@ -584,8 +640,14 @@ impl<'r> PipelineEngine<'r> {
             with_regrad,
             self.opts.sync_latency,
         );
+        let loss = if with_regrad {
+            // flat-sync pass 1 reports unweighted per-micro means only
+            loss_total / j as f64
+        } else {
+            loss_wsum / weight_sum.max(1.0)
+        };
         Ok(PipeStepStats {
-            loss: loss_total / j as f64,
+            loss,
             host_secs: host_t0.elapsed().as_secs_f64(),
             sim_secs: sim,
             syncs: if with_regrad { syncs } else { 1 },
@@ -602,9 +664,17 @@ impl<'r> PipelineEngine<'r> {
         }
     }
 
-    fn record_clip_counts(&mut self, stage: usize, norms: &Tensor) {
+    /// Count live (weight > 0) examples under the stage threshold; padded
+    /// slots carry real norms for masked content and must not leak into
+    /// the private quantile statistic.
+    fn record_clip_counts(&mut self, stage: usize, norms: &Tensor, weights: &[f32]) {
         let thr = self.threshold(stage);
-        let c = norms.data.iter().filter(|&&n| (n as f64) <= thr).count() as f64;
+        let c = norms
+            .data
+            .iter()
+            .zip(weights)
+            .filter(|&(&n, &w)| w > 0.0 && (n as f64) <= thr)
+            .count() as f64;
         self.pending_counts[stage] += c;
     }
 

@@ -76,6 +76,14 @@ impl DpCore {
                 bail!("DpCore: a private run needs steps > 0");
             }
             let r = if adaptive { cfg.privacy.quantile_r } else { 0.0 };
+            // defense in depth behind RunSpec::validate: a private adaptive
+            // core with r = 0 would release exact clip counts each step
+            if adaptive && !(r > 0.0) {
+                bail!(
+                    "adaptive clipping needs privacy.quantile_r > 0 so the per-step \
+                     clip-count releases are noised (Prop 3.1); got {r}"
+                );
+            }
             let p = accountant::plan(
                 cfg.privacy.epsilon,
                 cfg.privacy.delta,

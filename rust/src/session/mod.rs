@@ -36,6 +36,7 @@ use std::collections::HashMap;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::accountant::PrivacyPlan;
+use crate::coordinator::sampler::PoissonSampler;
 use crate::coordinator::trainer::{derive_schedule, StepStats, TrainOpts, Trainer};
 use crate::data::Dataset;
 use crate::pipeline::{PipeStepStats, PipelineEngine, PipelineMode, PipelineOpts};
@@ -44,6 +45,7 @@ use crate::runtime::{Runtime, Tensor};
 pub use self::core::{CoreCfg, DpCore};
 pub use self::spec::{
     ClipMode, ClipPolicy, DataSpec, FlatImpl, GroupBy, OptimSpec, PipeSpec, PrivacySpec, RunSpec,
+    Sampling,
 };
 
 // -------------------------------------------------------------- step event
@@ -68,6 +70,10 @@ pub struct StepEvent {
     pub syncs: usize,
     /// executable invocations (0 for the single-device backend)
     pub calls: usize,
+    /// examples the Poisson draw included but the static batch capacity
+    /// dropped (0 for round-robin pipeline steps; rare when capacity is
+    /// sized ~1.25x the expected batch)
+    pub truncated: usize,
 }
 
 impl StepEvent {
@@ -82,10 +88,11 @@ impl StepEvent {
             sim_secs: 0.0,
             syncs: 0,
             calls: 0,
+            truncated: s.truncated,
         }
     }
 
-    pub fn from_pipeline(step: u64, batch_size: usize, s: PipeStepStats) -> Self {
+    pub fn from_pipeline(step: u64, batch_size: usize, truncated: usize, s: PipeStepStats) -> Self {
         StepEvent {
             step,
             loss: s.loss,
@@ -96,6 +103,7 @@ impl StepEvent {
             sim_secs: s.sim_secs,
             syncs: s.syncs,
             calls: s.calls,
+            truncated,
         }
     }
 
@@ -198,6 +206,12 @@ impl<'r> SessionBuilder<'r> {
         self
     }
 
+    /// Pipeline minibatch sampling strategy (default [`Sampling::Poisson`]).
+    pub fn sampling(mut self, s: Sampling) -> Self {
+        self.spec.pipe.sampling = s;
+        self
+    }
+
     /// Explicit pipeline step count (overrides the epochs-derived count).
     pub fn steps(mut self, steps: usize) -> Self {
         self.spec.pipe.steps = steps;
@@ -222,24 +236,58 @@ impl<'r> SessionBuilder<'r> {
                 .with_context(|| format!("config '{}' trains on the pipeline backend", spec.config))?;
             let n_stages = stages.stages.len();
             let minibatch = cfg.batch * spec.pipe.n_micro;
+            // Expected live batch E[B] per step. Poisson draws target the
+            // single-device headroom convention — E[B] = 0.8 x the static
+            // minibatch (overridable via spec.expected_batch) so the
+            // capacity rarely binds and truncation stays rare; round-robin
+            // minibatches are always full.
+            let expected = match spec.pipe.sampling {
+                Sampling::Poisson => {
+                    let e = if spec.expected_batch > 0 {
+                        spec.expected_batch
+                    } else {
+                        ((minibatch as f64) * 0.8).round().max(1.0) as usize
+                    };
+                    if e > minibatch {
+                        bail!(
+                            "expected batch {} exceeds static pipeline minibatch {}",
+                            e,
+                            minibatch
+                        );
+                    }
+                    e
+                }
+                Sampling::RoundRobin => minibatch,
+            };
             let steps = if spec.pipe.steps > 0 {
                 spec.pipe.steps as u64
             } else {
-                ((spec.epochs * n_data as f64) / minibatch as f64).ceil() as u64
+                ((spec.epochs * n_data as f64) / expected as f64).ceil() as u64
             };
             if steps == 0 {
                 bail!("pipeline schedule is empty: raise epochs or set pipeline.steps");
             }
-            // The pipeline consumes deterministic round-robin minibatches
-            // (Session::step), not Poisson draws, so subsampling
-            // amplification does NOT apply. Account at q = 1 over the
-            // number of releases each example participates in: a
-            // conservative, valid Gaussian-composition bound. (Poisson
-            // pipeline sampling — and with it the amplified accountant the
-            // single-device backend enjoys — is a ROADMAP item.)
-            let participations = ((steps as f64 * minibatch as f64) / n_data as f64)
-                .ceil()
-                .max(1.0) as u64;
+            // The sampling strategy decides how the accountant composes:
+            // * Poisson (default): the session draws genuine Poisson
+            //   batches from the shared core RNG, padded to the static
+            //   minibatch with weight-0 slots the stage executables mask
+            //   out — so subsampling amplification applies at rate
+            //   q = E[B] / n over `steps` releases, exactly like the
+            //   single-device backend.
+            // * RoundRobin: the legacy deterministic cursor. No
+            //   amplification can be claimed; account at q = 1 over the
+            //   number of releases each example participates in — a
+            //   conservative, valid Gaussian-composition bound kept as a
+            //   reproducibility escape hatch.
+            let (sample_rate, acct_steps) = match spec.pipe.sampling {
+                Sampling::Poisson => ((expected as f64 / n_data as f64).min(1.0), steps),
+                Sampling::RoundRobin => {
+                    let participations = ((steps as f64 * minibatch as f64) / n_data as f64)
+                        .ceil()
+                        .max(1.0) as u64;
+                    (1.0, participations)
+                }
+            };
             let k = if mode == PipelineMode::PerDevice { n_stages } else { 1 };
             let group_dims = if mode == PipelineMode::PerDevice {
                 stages.stages.iter().map(|s| s.d_stage.max(1)).collect()
@@ -249,16 +297,17 @@ impl<'r> SessionBuilder<'r> {
             let core = DpCore::from_accountant(CoreCfg {
                 privacy: &spec.privacy,
                 clip: &spec.clip,
-                sample_rate: 1.0,
-                steps: participations,
+                sample_rate,
+                steps: acct_steps,
                 k,
                 group_dims,
-                expected_batch: minibatch as f64,
+                expected_batch: expected as f64,
                 seed: spec.seed,
             })?;
             let opts = PipelineOpts {
                 mode,
                 n_micro: spec.pipe.n_micro,
+                expected_batch: expected,
                 clip: spec.clip.clip_init,
                 // informational echo of the accountant-derived multiplier;
                 // the engine reads noise from the core, never from here
@@ -272,10 +321,17 @@ impl<'r> SessionBuilder<'r> {
                 quantile_eta: spec.clip.quantile_eta,
             };
             let engine = PipelineEngine::with_core(runtime, &spec.config, opts, core)?;
+            // Poisson runs draw padded minibatches from this sampler (via
+            // the engine core's RNG); round-robin keeps the legacy cursor.
+            let pipe_sampler = match spec.pipe.sampling {
+                Sampling::Poisson => Some(PoissonSampler::new(n_data, sample_rate, minibatch)),
+                Sampling::RoundRobin => None,
+            };
             Ok(Session {
                 backend: Backend::Pipeline(engine),
                 total_steps: steps,
                 pipe_cursor: 0,
+                pipe_sampler,
                 spec,
             })
         } else {
@@ -329,6 +385,7 @@ impl<'r> SessionBuilder<'r> {
                 backend: Backend::Single(trainer),
                 total_steps,
                 pipe_cursor: 0,
+                pipe_sampler: None,
                 spec,
             })
         }
@@ -353,8 +410,11 @@ pub struct Session<'r> {
     pub spec: RunSpec,
     pub backend: Backend<'r>,
     pub total_steps: u64,
-    /// round-robin data cursor for pipeline minibatches
+    /// round-robin data cursor (pipeline runs with `sampling = round_robin`)
     pipe_cursor: usize,
+    /// Poisson draw source for pipeline runs (`sampling = poisson`); the
+    /// draws consume the engine core's RNG, mirroring the trainer
+    pipe_sampler: Option<PoissonSampler>,
 }
 
 impl<'r> Session<'r> {
@@ -489,17 +549,26 @@ impl<'r> Session<'r> {
     }
 
     /// One training step. The single-device backend draws its own Poisson
-    /// batch; the pipeline consumes the next round-robin minibatch.
+    /// batch; the pipeline draws a padded Poisson batch from the shared
+    /// core RNG (or, with `sampling = round_robin`, consumes the next
+    /// deterministic minibatch).
     pub fn step(&mut self, data: &dyn Dataset) -> Result<StepEvent> {
         match &mut self.backend {
             Backend::Single(t) => Ok(StepEvent::from_single(t.step(data)?)),
             Backend::Pipeline(e) => {
                 let mb = e.minibatch();
-                let base = self.pipe_cursor * mb;
-                let idx: Vec<usize> = (0..mb).map(|i| (base + i) % data.len()).collect();
-                self.pipe_cursor += 1;
-                let st = e.step(data, &idx)?;
-                Ok(StepEvent::from_pipeline(e.steps_done, mb, st))
+                if let Some(sampler) = &self.pipe_sampler {
+                    let batch = sampler.sample_padded(&mut e.core.rng);
+                    let live = batch.live();
+                    let st = e.step_weighted(data, &batch.indices, &batch.weights)?;
+                    Ok(StepEvent::from_pipeline(e.steps_done, live, batch.truncated, st))
+                } else {
+                    let base = self.pipe_cursor * mb;
+                    let idx: Vec<usize> = (0..mb).map(|i| (base + i) % data.len()).collect();
+                    self.pipe_cursor += 1;
+                    let st = e.step(data, &idx)?;
+                    Ok(StepEvent::from_pipeline(e.steps_done, mb, 0, st))
+                }
             }
         }
     }
@@ -535,14 +604,18 @@ impl<'r> Session<'r> {
     pub fn describe(&self) -> String {
         let be = self.backend.name();
         match self.plan() {
+            // (q, steps) are the plan's composition parameters — for a
+            // round-robin pipeline, plan.steps is the per-example
+            // participation count, not the run's total step count
             Some(p) => format!(
-                "{be} | {} x {} | (eps={}, delta={}) over {} steps -> sigma={:.3} \
+                "{be} | {} x {} | (eps={}, delta={}) q={:.4} over {} releases -> sigma={:.3} \
                  (grad {:.3}, quantile {:.2}, r={})",
                 self.spec.clip.group_by.token(),
                 self.spec.clip.mode.token(),
                 p.epsilon,
                 p.delta,
-                self.total_steps,
+                p.q,
+                p.steps,
                 p.sigma_base,
                 p.sigma_grad,
                 p.sigma_quantile,

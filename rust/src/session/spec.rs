@@ -37,7 +37,9 @@ pub struct PrivacySpec {
     pub epsilon: f64,
     pub delta: f64,
     /// Prop 3.1 budget fraction spent on private quantile estimation
-    /// (only consumed by adaptive policies; paper uses 0.0001-0.1).
+    /// (only consumed by adaptive policies, which require it to be > 0 —
+    /// otherwise the clip-count releases would be unnoised; paper uses
+    /// 0.0001-0.1).
     pub quantile_r: f64,
 }
 
@@ -319,6 +321,9 @@ impl ClipPolicy {
     }
 
     /// Inverse view: the policy equivalent to a legacy `PipelineMode`.
+    /// `adaptive` only applies to `PerDevice`; the flat-sync baseline and
+    /// non-private mode have no adaptive variant, so the flag is ignored
+    /// there (matching `pipeline_mode()`, which rejects adaptive flat).
     pub fn from_pipeline_mode(m: PipelineMode, adaptive: bool) -> Self {
         let mode = if adaptive { ClipMode::Adaptive } else { ClipMode::Fixed };
         match m {
@@ -519,6 +524,50 @@ impl DataSpec {
 
 // --------------------------------------------------------------- pipeline
 
+/// How the pipeline backend draws its minibatches — and therefore how the
+/// accountant composes its releases.
+///
+/// * `Poisson` (default): genuine Poisson draws padded to the static
+///   minibatch with weight-0 slots the stage executables mask out; the
+///   accountant applies subsampling amplification at rate `q = E[B] / n`,
+///   where the expected batch E[B] defaults to 0.8x the static minibatch
+///   (the same headroom convention as the single-device backend, keeping
+///   capacity-bound truncation — the standard fixed-capacity
+///   approximation of the Poisson mechanism, surfaced via
+///   `StepEvent::truncated` — rare), exactly like the single-device
+///   backend.
+/// * `RoundRobin`: the legacy deterministic cursor. No amplification can
+///   be claimed, so the accountant composes at q = 1 over the number of
+///   releases each example participates in — conservative but valid, kept
+///   as a reproducibility escape hatch for pre-Poisson results.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sampling {
+    Poisson,
+    RoundRobin,
+}
+
+impl Sampling {
+    /// Canonical spec/CLI token; guaranteed to parse back via [`FromStr`].
+    pub fn token(&self) -> &'static str {
+        match self {
+            Sampling::Poisson => "poisson",
+            Sampling::RoundRobin => "round_robin",
+        }
+    }
+}
+
+impl FromStr for Sampling {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "poisson" => Sampling::Poisson,
+            "round_robin" | "round-robin" | "roundrobin" => Sampling::RoundRobin,
+            _ => bail!("unknown sampling '{s}' (poisson|round_robin)"),
+        })
+    }
+}
+
 /// Pipeline-backend knobs (ignored by the single-device backend).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PipeSpec {
@@ -528,11 +577,13 @@ pub struct PipeSpec {
     pub steps: usize,
     /// simulated all-gather latency charged per sync barrier (seconds)
     pub sync_latency: f64,
+    /// minibatch sampling strategy (drives the accountant's q)
+    pub sampling: Sampling,
 }
 
 impl Default for PipeSpec {
     fn default() -> Self {
-        PipeSpec { n_micro: 4, steps: 0, sync_latency: 0.002 }
+        PipeSpec { n_micro: 4, steps: 0, sync_latency: 0.002, sampling: Sampling::Poisson }
     }
 }
 
@@ -552,6 +603,7 @@ impl PipeSpec {
         m.insert("n_micro".into(), Json::Num(self.n_micro as f64));
         m.insert("steps".into(), Json::Num(self.steps as f64));
         m.insert("sync_latency".into(), Json::Num(self.sync_latency));
+        m.insert("sampling".into(), Json::Str(self.sampling.token().into()));
         Json::Obj(m)
     }
 
@@ -561,6 +613,7 @@ impl PipeSpec {
             n_micro: opt_usize(j, "n_micro", d.n_micro)?,
             steps: opt_usize(j, "steps", d.steps)?,
             sync_latency: opt_f64(j, "sync_latency", d.sync_latency)?,
+            sampling: opt_str(j, "sampling", d.sampling.token())?.parse()?,
         })
     }
 }
@@ -573,7 +626,9 @@ pub struct RunSpec {
     /// manifest config name; backend = pipeline iff the config has stages
     pub config: String,
     pub epochs: f64,
-    /// expected (Poisson) batch size; 0 = 0.8 x compiled batch
+    /// expected (Poisson) batch size E[B]; 0 = 0.8 x the compiled batch
+    /// (single-device: the config's static B; pipeline: the static
+    /// minibatch `B x n_micro`)
     pub expected_batch: usize,
     pub seed: u64,
     pub privacy: PrivacySpec,
@@ -616,6 +671,16 @@ impl RunSpec {
         }
         if self.clip.is_private() {
             self.privacy.validate().context("invalid [privacy] section")?;
+            // adaptive clipping releases per-group clip counts every step;
+            // without a Prop-3.1 budget slice those releases are unnoised
+            // and the claimed (eps, delta) no longer covers them
+            if self.clip.is_adaptive() && !(self.privacy.quantile_r > 0.0) {
+                bail!(
+                    "clip.mode = adaptive needs privacy.quantile_r > 0 (the Prop 3.1 \
+                     budget fraction noising the quantile releases); got {}",
+                    self.privacy.quantile_r
+                );
+            }
         }
         self.clip.validate().context("invalid [clip] section")?;
         self.optim.validate().context("invalid [optim] section")?;
@@ -776,7 +841,8 @@ mod tests {
         };
         spec.optim = OptimSpec::adam(1e-3);
         spec.data = DataSpec { task: "table2text".into(), n_data: 512, seed: 3 };
-        spec.pipe = PipeSpec { n_micro: 2, steps: 7, sync_latency: 0.001 };
+        spec.pipe =
+            PipeSpec { n_micro: 2, steps: 7, sync_latency: 0.001, sampling: Sampling::RoundRobin };
         let back = RunSpec::from_json(&Json::parse(&spec.render_json()).unwrap()).unwrap();
         assert_eq!(spec, back);
     }
@@ -808,12 +874,14 @@ n_data = 1024
 [pipeline]
 n_micro = 4
 steps = 20
+sampling = "round_robin"
 "#;
         let spec = RunSpec::parse(doc).unwrap();
         assert_eq!(spec.config, "lm_mid_pipe_lora");
         assert_eq!(spec.clip.group_by, GroupBy::PerDevice);
         assert_eq!(spec.clip.pipeline_mode().unwrap(), PipelineMode::PerDevice);
         assert_eq!(spec.pipe.steps, 20);
+        assert_eq!(spec.pipe.sampling, Sampling::RoundRobin);
         assert_eq!(spec.data.task, "dialogsum");
         assert!(matches!(spec.optim.kind, OptimizerKind::Adam { .. }));
         // TOML and JSON deserialize through the same path
@@ -849,6 +917,15 @@ steps = 20
         let mut s = ok.clone();
         s.data.n_data = 0;
         assert!(s.validate().is_err(), "empty dataset");
+        // the default policy is adaptive: unnoised quantile releases are out
+        let mut s = ok.clone();
+        s.privacy.quantile_r = 0.0;
+        assert!(s.validate().is_err(), "adaptive with quantile_r == 0");
+        // ...but fixed clipping legitimately spends nothing on quantiles
+        let mut s = ok.clone();
+        s.clip = ClipPolicy::new(GroupBy::PerLayer, ClipMode::Fixed);
+        s.privacy.quantile_r = 0.0;
+        s.validate().unwrap();
         // non-private specs don't need a meaningful privacy section
         let mut s = ok.clone();
         s.clip = ClipPolicy::non_private();
@@ -867,5 +944,24 @@ steps = 20
         for f in [FlatImpl::Fused, FlatImpl::Ghost, FlatImpl::Naive] {
             assert_eq!(f.token().parse::<FlatImpl>().unwrap(), f);
         }
+        for s in [Sampling::Poisson, Sampling::RoundRobin] {
+            assert_eq!(s.token().parse::<Sampling>().unwrap(), s);
+        }
+        for (alias, want) in [
+            ("round-robin", Sampling::RoundRobin),
+            ("roundrobin", Sampling::RoundRobin),
+        ] {
+            assert_eq!(alias.parse::<Sampling>().unwrap(), want, "alias {alias}");
+        }
+        assert!("bernoulli".parse::<Sampling>().is_err());
+    }
+
+    #[test]
+    fn pipe_spec_defaults_to_poisson_sampling() {
+        // an omitted [pipeline] section (and an omitted sampling key) must
+        // land on the amplified Poisson path, not the legacy cursor
+        assert_eq!(PipeSpec::default().sampling, Sampling::Poisson);
+        let spec = RunSpec::parse("config = \"lm_mid_pipe_lora\"\nepochs = 1.0\n").unwrap();
+        assert_eq!(spec.pipe.sampling, Sampling::Poisson);
     }
 }

@@ -1,0 +1,107 @@
+//! Golden-value tests for the RDP accountant, cross-checked against an
+//! independent reference implementation of the integer-order subsampled-
+//! Gaussian moments accountant (the same formula TF-Privacy's
+//! `compute_rdp`/`get_privacy_spent` and Opacus's `_compute_log_a_int`
+//! implement, evaluated with lgamma-based log-binomials over orders
+//! 2..=512 and the classic conversion
+//! `eps = T * RDP(alpha) + log(1/delta)/(alpha - 1)`).
+//!
+//! The fixtures pin both accountant branches: the amplified q < 1 branch
+//! (log-sum-exp over the binomial expansion) and the q = 1 plain-Gaussian
+//! branch `RDP(alpha) = alpha / (2 sigma^2)`. A drift in either branch —
+//! a sign slip in the log-binomial recurrence, a changed order grid, a
+//! changed conversion — moves these epsilons far beyond the tolerance.
+
+use gwclip::coordinator::accountant::{epsilon_for, noise_multiplier, rdp_subsampled_gaussian};
+
+/// (q, sigma, steps, delta, epsilon_reference)
+///
+/// Reference epsilons computed with the independent Python implementation
+/// documented above (lgamma log-binomials, orders 2..=512); the classic
+/// TF-Privacy MNIST tutorial setting (q = 256/60000, sigma = 1.1,
+/// T = 14062, delta = 1e-5) reproduces its published eps ~ 3.0 under the
+/// same reference, anchoring the fixtures to the public accountants.
+const GOLDEN: &[(f64, f64, u64, f64, f64)] = &[
+    // ---- amplified branch (Poisson subsampling, q < 1) ----
+    (0.01, 1.1, 10_000, 1e-5, 6.279_811_029_6),
+    (0.01, 2.0, 10_000, 1e-5, 2.735_445_432_7),
+    (0.05, 0.8, 1_000, 1e-5, 20.895_603_109_7),
+    (0.02, 1.0, 2_000, 1e-6, 7.597_311_117_2),
+    (0.1, 4.0, 5_000, 1e-5, 10.362_119_071_3),
+    (0.001, 0.6, 50_000, 1e-5, 5.908_291_948_1),
+    // ---- q = 1 branch (plain Gaussian composition, no amplification) ----
+    (1.0, 5.0, 100, 1e-5, 11.756_462_732_5),
+    (1.0, 10.0, 500, 1e-5, 13.256_462_732_5),
+    (1.0, 1.0, 1, 1e-5, 5.302_585_093_0),
+];
+
+#[test]
+fn epsilon_matches_reference_accountant() {
+    for &(q, sigma, steps, delta, want) in GOLDEN {
+        let (got, alpha) = epsilon_for(q, sigma, steps, delta);
+        let rel = (got - want).abs() / want;
+        assert!(
+            rel < 1e-6,
+            "(q={q}, sigma={sigma}, T={steps}, delta={delta}): \
+             eps {got} vs reference {want} (alpha*={alpha}, rel err {rel:.2e})"
+        );
+    }
+}
+
+#[test]
+fn tf_privacy_tutorial_setting_reproduces_published_epsilon() {
+    // MNIST tutorial: n=60000, B=256, sigma=1.1, 60 epochs, delta=1e-5.
+    // TF-Privacy's compute_dp_sgd_privacy reports eps ~ 3.0 here.
+    let q = 256.0 / 60_000.0;
+    let steps = (60u64 * 60_000) / 256; // 14062 optimizer steps
+    let (eps, _) = epsilon_for(q, 1.1, steps, 1e-5);
+    assert!((eps - 3.0).abs() < 0.05, "eps {eps} strayed from the published ~3.0");
+}
+
+#[test]
+fn q1_branch_is_exactly_plain_gaussian() {
+    // the q = 1 short-circuit must agree with the analytic Gaussian RDP
+    for alpha in [2u32, 8, 64, 512] {
+        for sigma in [0.5, 1.0, 4.0] {
+            let got = rdp_subsampled_gaussian(1.0, sigma, alpha);
+            let want = alpha as f64 / (2.0 * sigma * sigma);
+            assert!((got - want).abs() < 1e-12, "alpha={alpha} sigma={sigma}");
+        }
+    }
+    // eps at q=1, sigma=1, T=1: min over alpha of alpha/2 + ln(1e5)/(alpha-1),
+    // attained at alpha=6 -> 3 + ln(1e5)/5
+    let want = 3.0 + (1e5f64).ln() / 5.0;
+    let (eps, alpha) = epsilon_for(1.0, 1.0, 1, 1e-5);
+    assert!((eps - want).abs() < 1e-12, "eps {eps} vs {want}");
+    assert_eq!(alpha, 6);
+}
+
+#[test]
+fn noise_multiplier_inverts_golden_epsilons() {
+    // the sigma search must land on a multiplier achieving each golden
+    // epsilon tightly, on both branches
+    for &(q, _sigma, steps, delta, eps) in GOLDEN {
+        let sigma = noise_multiplier(q, steps, eps, delta);
+        let achieved = epsilon_for(q, sigma, steps, delta).0;
+        assert!(achieved <= eps * 1.000_1, "q={q}: achieved {achieved} > target {eps}");
+        let slack = epsilon_for(q, sigma * 0.97, steps, delta).0;
+        assert!(slack > eps, "q={q}: sigma {sigma} not tight ({slack} <= {eps})");
+    }
+}
+
+#[test]
+fn amplification_strictly_beats_q1_composition_for_pipeline_schedules() {
+    // the tentpole guarantee: a Poisson pipeline schedule (q = mb/n over T
+    // steps) needs strictly less noise than the round-robin bound (q = 1
+    // over the ~T*q participations each example makes)
+    for &(mb, n, steps) in &[(32usize, 1024usize, 100u64), (64, 2048, 400), (8, 256, 50)] {
+        let q = mb as f64 / n as f64;
+        let participations = ((steps as f64 * q).ceil()).max(1.0) as u64;
+        let amplified = noise_multiplier(q, steps, 1.0, 1e-5);
+        let composed = noise_multiplier(1.0, participations, 1.0, 1e-5);
+        assert!(
+            amplified < composed,
+            "mb={mb} n={n}: amplified sigma {amplified} >= q=1 sigma {composed}"
+        );
+    }
+}

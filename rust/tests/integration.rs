@@ -28,7 +28,7 @@ fn tiny_mixture(n: usize, seed: u64) -> MixtureImages {
 #[test]
 fn manifest_lists_tiny_configs() {
     let m = &rt().manifest;
-    for c in ["resmlp_tiny", "lm_tiny", "resmlp", "lm_small", "lm_mid_pipe_lora"] {
+    for c in ["resmlp_tiny", "lm_tiny", "lm_tiny_pipe", "resmlp", "lm_small", "lm_mid_pipe_lora"] {
         assert!(m.config(c).is_ok(), "missing config {c}");
     }
     let cfg = m.config("resmlp_tiny").unwrap();
@@ -280,22 +280,160 @@ fn session_selects_backend_from_manifest() {
 
 #[test]
 fn session_pipeline_sigma_is_accountant_derived() {
-    use gwclip::session::{ClipMode, ClipPolicy, GroupBy, PrivacySpec, Session};
-    let s = Session::builder(rt(), "lm_mid_pipe_lora")
+    use gwclip::session::{ClipMode, ClipPolicy, GroupBy, PrivacySpec, Sampling, Session};
+    let build = |sampling: Sampling| {
+        Session::builder(rt(), "lm_mid_pipe_lora")
+            .privacy(PrivacySpec::new(1.0, 1e-5))
+            .clip(ClipPolicy {
+                clip_init: 1e-2,
+                ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed)
+            })
+            .n_micro(2)
+            .steps(5)
+            .sampling(sampling)
+            .build(256)
+            .unwrap()
+    };
+
+    // default Poisson sampling: subsampling amplification at q = E[B]/n,
+    // with E[B] = 0.8x the static minibatch (the headroom convention that
+    // keeps capacity-bound truncation rare, as on the single-device path)
+    let s = build(Sampling::Poisson);
+    let plan = s.plan().expect("private pipeline run must carry a plan");
+    let mb = s.engine().unwrap().minibatch();
+    let expected = ((mb as f64) * 0.8).round();
+    let q = expected / 256.0;
+    let want = accountant::noise_multiplier(q, 5, 1.0, 1e-5);
+    assert!((plan.sigma_grad - want).abs() < 1e-9, "{} vs {want}", plan.sigma_grad);
+    assert!((plan.q - q).abs() < 1e-12, "poisson accounting must use q = E[B]/n");
+
+    // round_robin escape hatch: the legacy q=1 participation composition
+    let s1 = build(Sampling::RoundRobin);
+    let plan1 = s1.plan().unwrap();
+    let participations = ((5.0 * mb as f64) / 256.0).ceil().max(1.0) as u64;
+    let want1 = accountant::noise_multiplier(1.0, participations, 1.0, 1e-5);
+    assert!((plan1.sigma_grad - want1).abs() < 1e-9, "{} vs {want1}", plan1.sigma_grad);
+    assert_eq!(plan1.q, 1.0, "round-robin accounting must not claim amplification");
+
+    // acceptance: amplification realized — strictly less noise required
+    assert!(
+        plan.sigma_base < plan1.sigma_base,
+        "poisson sigma {} must beat q=1 sigma {}",
+        plan.sigma_base,
+        plan1.sigma_base
+    );
+
+    // an expected batch above the static minibatch cannot be served
+    assert!(Session::builder(rt(), "lm_mid_pipe_lora")
         .privacy(PrivacySpec::new(1.0, 1e-5))
         .clip(ClipPolicy { clip_init: 1e-2, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed) })
         .n_micro(2)
         .steps(5)
+        .expected_batch(mb + 1)
         .build(256)
+        .is_err());
+}
+
+#[test]
+fn session_pipeline_poisson_steps_vary_batch_and_mask_padding() {
+    use gwclip::session::{ClipMode, ClipPolicy, GroupBy, PrivacySpec, Session};
+    let cfg = rt().manifest.config("lm_mid_pipe_lora").unwrap().clone();
+    let data = MarkovCorpus::new(512, cfg.hyper.seq, cfg.hyper.vocab, 4, 8);
+    let mut sess = Session::builder(rt(), "lm_mid_pipe_lora")
+        .privacy(PrivacySpec::new(2.0, 1e-5))
+        .clip(ClipPolicy { clip_init: 1e-2, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed) })
+        .n_micro(2)
+        .steps(12)
+        .seed(5)
+        .build(data.len())
         .unwrap();
-    let plan = s.plan().expect("private pipeline run must carry a plan");
-    let mb = s.engine().unwrap().minibatch();
-    // deterministic round-robin batches -> no subsampling amplification:
-    // q=1 composition over each example's participation count
-    let participations = ((5.0 * mb as f64) / 256.0).ceil().max(1.0) as u64;
-    let want = accountant::noise_multiplier(1.0, participations, 1.0, 1e-5);
-    assert!((plan.sigma_grad - want).abs() < 1e-9, "{} vs {want}", plan.sigma_grad);
-    assert_eq!(plan.q, 1.0, "pipeline accounting must not claim amplification");
+    let mb = sess.engine().unwrap().minibatch();
+    let events = sess.run(&data, 0).unwrap();
+    assert_eq!(events.len(), 12);
+    // Poisson draws: live batch sizes fluctuate around E[B] = 0.8*mb and
+    // never exceed the static capacity
+    assert!(events.iter().all(|e| e.batch_size <= mb));
+    let distinct: std::collections::HashSet<usize> =
+        events.iter().map(|e| e.batch_size).collect();
+    assert!(distinct.len() > 1, "12 Poisson draws should not all have equal size");
+    let expected = (mb as f64) * 0.8;
+    let mean = events.iter().map(|e| e.batch_size).sum::<usize>() as f64 / 12.0;
+    assert!((mean - expected).abs() < 0.5 * expected, "mean live {mean} vs E[B] {expected}");
+    assert!(events.iter().all(|e| e.loss.is_finite()));
+    // capacity-bound draws: a truncated step always fills the minibatch
+    for e in &events {
+        if e.truncated > 0 {
+            assert_eq!(e.batch_size, mb, "truncation must leave a full live batch");
+        }
+    }
+}
+
+#[test]
+fn backend_parity_single_device_vs_single_stage_pipeline() {
+    // lm_tiny_pipe is the single-stage pipeline twin of lm_tiny: same
+    // ModelConfig, hence the identical init checkpoint. Built from the
+    // same (epsilon, delta, C, lr, seed) run shape, both backends must now
+    // derive the SAME amplified privacy plan (q = 4/64 over 8 steps), draw
+    // the same Poisson batches from the shared core RNG, and hold the same
+    // (fixed) threshold trajectory.
+    use gwclip::session::{ClipMode, ClipPolicy, GroupBy, OptimSpec, PrivacySpec, Session};
+    let cfg = rt().manifest.config("lm_tiny").unwrap().clone();
+    let data = MarkovCorpus::new(64, cfg.hyper.seq, cfg.hyper.vocab, 4, 3);
+
+    let mut single = Session::builder(rt(), "lm_tiny")
+        .privacy(PrivacySpec { epsilon: 2.0, delta: 1e-5, quantile_r: 0.0 })
+        .clip(ClipPolicy { clip_init: 0.05, ..ClipPolicy::new(GroupBy::Flat, ClipMode::Fixed) })
+        .optim(OptimSpec::sgd(0.01))
+        .epochs(0.5)
+        .expected_batch(cfg.batch)
+        .seed(33)
+        .build(data.len())
+        .unwrap();
+    let mut pipe = Session::builder(rt(), "lm_tiny_pipe")
+        .privacy(PrivacySpec { epsilon: 2.0, delta: 1e-5, quantile_r: 0.0 })
+        .clip(ClipPolicy { clip_init: 0.05, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed) })
+        .optim(OptimSpec::sgd(0.01))
+        .epochs(0.5)
+        .n_micro(1)
+        // pin E[B] = B on both backends so the draws (and truncation
+        // pattern) coincide exactly — a mechanism-parity setting, not the
+        // headroom default a production run would use
+        .expected_batch(cfg.batch)
+        .seed(33)
+        .build(data.len())
+        .unwrap();
+    assert!(single.trainer().is_some() && pipe.engine().is_some());
+    assert_eq!(single.total_steps, pipe.total_steps, "same derived schedule");
+
+    // same accountant output: q, composition length, sigma, and therefore
+    // the same achieved epsilon
+    let (ps, pp) = (single.plan().unwrap(), pipe.plan().unwrap());
+    assert_eq!(ps.q, pp.q, "both backends must claim the same amplification");
+    assert!(ps.q < 1.0, "parity must exercise the amplified branch");
+    assert_eq!(ps.steps, pp.steps);
+    assert!((ps.sigma_base - pp.sigma_base).abs() < 1e-12);
+    assert!((ps.sigma_grad - pp.sigma_grad).abs() < 1e-12);
+    let es = accountant::epsilon_for(ps.q, ps.sigma_grad, ps.steps, ps.delta).0;
+    let ep = accountant::epsilon_for(pp.q, pp.sigma_grad, pp.steps, pp.delta).0;
+    assert!((es - ep).abs() < 1e-12, "achieved epsilon {es} vs {ep}");
+
+    // seed-for-seed run parity: identical Poisson draws (shared core RNG
+    // discipline), identical fixed-threshold trajectories, matching losses
+    for step in 0..single.total_steps {
+        let a = single.step(&data).unwrap();
+        let b = pipe.step(&data).unwrap();
+        assert_eq!(a.batch_size, b.batch_size, "step {step}: same Poisson draw");
+        assert_eq!(a.truncated, b.truncated, "step {step}");
+        assert_eq!(single.thresholds(), pipe.thresholds(), "step {step}");
+        // same math through different compiled executables (fused single
+        // step vs staged loss_bwd): identical up to f32 reduction order
+        assert!(
+            (a.loss - b.loss).abs() < 1e-3 * (1.0 + a.loss.abs()),
+            "step {step}: loss {} vs {}",
+            a.loss,
+            b.loss
+        );
+    }
 }
 
 #[test]

@@ -6,7 +6,7 @@ use gwclip::coordinator::noise::Allocation;
 use gwclip::coordinator::trainer::Method;
 use gwclip::pipeline::PipelineMode;
 use gwclip::session::{
-    ClipMode, ClipPolicy, DataSpec, GroupBy, OptimSpec, PipeSpec, PrivacySpec, RunSpec,
+    ClipMode, ClipPolicy, DataSpec, GroupBy, OptimSpec, PipeSpec, PrivacySpec, RunSpec, Sampling,
 };
 use gwclip::util::json::Json;
 
@@ -67,7 +67,8 @@ fn full_runspec_roundtrips_json_and_toml() {
     spec.clip = ClipPolicy { clip_init: 1e-2, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed) };
     spec.optim = OptimSpec::adam(5e-3);
     spec.data = DataSpec { task: "dialogsum".into(), n_data: 1024, seed: 2 };
-    spec.pipe = PipeSpec { n_micro: 4, steps: 20, sync_latency: 0.002 };
+    spec.pipe =
+        PipeSpec { n_micro: 4, steps: 20, sync_latency: 0.002, sampling: Sampling::Poisson };
     assert_eq!(spec, roundtrip(&spec));
 
     // the docs/SESSION_API.md TOML example parses to the same spec shape
@@ -112,6 +113,9 @@ fn builder_rejects_each_nonsense_class() {
         ("delta >= 1", Box::new(|s: &mut RunSpec| s.privacy.delta = 1.0)),
         ("delta <= 0", Box::new(|s: &mut RunSpec| s.privacy.delta = 0.0)),
         ("quantile_r >= 1", Box::new(|s: &mut RunSpec| s.privacy.quantile_r = 1.0)),
+        // the default policy is adaptive: r = 0 would release exact
+        // clip counts each step with no quantile noise
+        ("adaptive with quantile_r == 0", Box::new(|s: &mut RunSpec| s.privacy.quantile_r = 0.0)),
         ("target_q >= 1", Box::new(|s: &mut RunSpec| s.clip.target_q = 1.0)),
         ("target_q <= 0", Box::new(|s: &mut RunSpec| s.clip.target_q = -0.1)),
         ("clip_init <= 0", Box::new(|s: &mut RunSpec| s.clip.clip_init = 0.0)),
@@ -124,6 +128,25 @@ fn builder_rejects_each_nonsense_class() {
         mutate(&mut bad);
         assert!(bad.validate().is_err(), "must reject: {label}");
     }
+}
+
+#[test]
+fn sampling_knob_parses_and_rejects_unknown_tokens() {
+    for (token, want) in [
+        ("poisson", Sampling::Poisson),
+        ("round_robin", Sampling::RoundRobin),
+        ("round-robin", Sampling::RoundRobin),
+    ] {
+        let doc = format!(
+            "config = \"lm_mid_pipe_lora\"\nepochs = 1.0\n\n[pipeline]\nsampling = \"{token}\"\n"
+        );
+        assert_eq!(RunSpec::parse(&doc).unwrap().pipe.sampling, want, "token {token}");
+    }
+    let bad = "config = \"lm_mid_pipe_lora\"\nepochs = 1.0\n\n[pipeline]\nsampling = \"bernoulli\"\n";
+    assert!(RunSpec::parse(bad).is_err(), "unknown sampling token must be rejected");
+    // omitted -> amplified Poisson default
+    let spec = RunSpec::parse("config = \"lm_mid_pipe_lora\"\nepochs = 1.0\n").unwrap();
+    assert_eq!(spec.pipe.sampling, Sampling::Poisson);
 }
 
 #[test]
