@@ -1,51 +1,62 @@
 //! Bench: pipeline step latency, per-device clipping vs flat-sync
 //! (paper section 4). Reports measured host time and the simulated
-//! 4-device makespan from the GPipe schedule model.
+//! 4-device makespan from the GPipe schedule model; writes
+//! BENCH_pipeline.json.
 //!
 //!     cargo bench --bench pipeline
 
 use gwclip::data::lm::MarkovCorpus;
 use gwclip::data::Dataset;
-use gwclip::pipeline::{PipelineEngine, PipelineMode, PipelineOpts};
 use gwclip::runtime::Runtime;
-use gwclip::util::bench::bench;
+use gwclip::session::{
+    ClipMode, ClipPolicy, GroupBy, OptimSpec, PrivacySpec, Sampling, Session,
+};
+use gwclip::util::bench::{bench, write_json, BenchResult};
 
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::new(gwclip::artifact_dir())?;
     let config = "lm_mid_pipe_lora";
     let cfg = rt.manifest.config(config)?.clone();
     let data = MarkovCorpus::new(1024, cfg.hyper.seq, cfg.hyper.vocab, 4, 0);
+    let mut rows = Vec::new();
 
     for n_micro in [2usize, 4, 8] {
         println!("== J = {n_micro} microbatches ==");
-        let mut rows = Vec::new();
-        for mode in [PipelineMode::PerDevice, PipelineMode::FlatSync] {
-            let opts = PipelineOpts {
-                mode,
-                n_micro,
-                sigma: 0.5,
-                clip: 1e-2,
-                ..Default::default()
+        let mut sims = Vec::new();
+        for group_by in [GroupBy::PerDevice, GroupBy::Flat] {
+            let mut sess = Session::builder(&rt, config)
+                .privacy(PrivacySpec { epsilon: 1.0, delta: 1e-5, quantile_r: 0.0 })
+                .clip(ClipPolicy {
+                    clip_init: 1e-2,
+                    ..ClipPolicy::new(group_by, ClipMode::Fixed)
+                })
+                .optim(OptimSpec::adam(1e-3))
+                .n_micro(n_micro)
+                .steps(1000) // plenty of scheduled steps for the bench loop
+                .sampling(Sampling::RoundRobin)
+                .build(data.len())?;
+            let label = match group_by {
+                GroupBy::PerDevice => "per-device clipping",
+                _ => "flat clipping (sync + remat)",
             };
-            let mut eng = PipelineEngine::new(&rt, config, opts)?;
-            let mb = eng.minibatch();
-            let mut step_i = 0usize;
-            let mut sims = Vec::new();
-            let r = bench(&format!("pipeline/{}", mode.name()), 1, 4, || {
-                let idx: Vec<usize> =
-                    (0..mb).map(|i| (step_i * mb + i) % data.len()).collect();
-                let st = eng.step(&data, &idx).unwrap();
-                sims.push(st.sim_secs);
-                step_i += 1;
+            let mut sim_acc = Vec::new();
+            let r = bench(&format!("pipeline/J{n_micro}/{label}"), 1, 4, || {
+                let st = sess.step(&data).unwrap();
+                sim_acc.push(st.sim_secs);
             });
-            let sim = sims.iter().sum::<f64>() / sims.len() as f64;
+            let sim = sim_acc.iter().sum::<f64>() / sim_acc.len() as f64;
             println!("{}   sim 4-device makespan {:.3}s", r.report(), sim);
-            rows.push(sim);
+            rows.push(r);
+            rows.push(BenchResult::scalar(&format!("pipeline/J{n_micro}/{label}/sim"), sim));
+            sims.push(sim);
         }
         println!(
             "flat-sync / per-device simulated step-time ratio: {:.2}x\n",
-            rows[1] / rows[0]
+            sims[1] / sims[0]
         );
     }
+
+    let path = write_json("pipeline", &rows)?;
+    println!("wrote {}", path.display());
     Ok(())
 }

@@ -1,0 +1,73 @@
+//! Bench: sharded data-parallel step latency as the worker count scales.
+//! Each step reports BOTH the overlapped-reduction and the barrier
+//! simulated makespans, so one run yields the full comparison; the
+//! acceptance claim — overlapped tree-reduction beats barrier reduction
+//! at N >= 4 workers — is checked and printed per row. Writes
+//! BENCH_shard.json.
+//!
+//!     cargo bench --bench shard
+
+use gwclip::data::classif::MixtureImages;
+use gwclip::data::Dataset;
+use gwclip::runtime::Runtime;
+use gwclip::session::{
+    ClipMode, ClipPolicy, GroupBy, OptimSpec, PrivacySpec, Session, ShardSpec,
+};
+use gwclip::util::bench::{bench, write_json, BenchResult};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(gwclip::artifact_dir())?;
+    let data = MixtureImages::new(4096, 64, 10, 0);
+    let mut rows = Vec::new();
+    let mut failed = false;
+
+    println!("== sharded data-parallel: per-device clipping on resmlp, fanout 2 ==");
+    for workers in [1usize, 2, 4, 8] {
+        let mut sess = Session::builder(&rt, "resmlp")
+            .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.0 })
+            .clip(ClipPolicy {
+                clip_init: 1.0,
+                ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed)
+            })
+            .optim(OptimSpec::sgd(0.25))
+            .epochs(100.0) // plenty of scheduled steps for the bench loop
+            .shard(ShardSpec::with_workers(workers))
+            .build(data.len())?;
+        let (mut ov, mut ba, mut n) = (0.0, 0.0, 0usize);
+        let r = bench(&format!("shard/N{workers}/step"), 1, 4, || {
+            let st = sess.shard_engine_mut().unwrap().step(&data).unwrap();
+            ov += st.sim_overlap_secs;
+            ba += st.sim_barrier_secs;
+            n += 1;
+        });
+        let (ov, ba) = (ov / n as f64, ba / n as f64);
+        let verdict = if workers >= 4 {
+            if ov < ba {
+                "PASS: overlap beats barrier"
+            } else {
+                failed = true;
+                "FAIL: overlap did not beat barrier"
+            }
+        } else {
+            "-"
+        };
+        println!(
+            "{}   sim overlap {:.4}s barrier {:.4}s ({:.0}% hidden)  {}",
+            r.report(),
+            ov,
+            ba,
+            100.0 * (1.0 - if ba > 0.0 { ov / ba } else { 1.0 }),
+            verdict
+        );
+        rows.push(r);
+        rows.push(BenchResult::scalar(&format!("shard/N{workers}/sim-overlap"), ov));
+        rows.push(BenchResult::scalar(&format!("shard/N{workers}/sim-barrier"), ba));
+    }
+
+    let path = write_json("shard", &rows)?;
+    println!("wrote {}", path.display());
+    if failed {
+        anyhow::bail!("overlapped reduction must beat barrier reduction at N >= 4 workers");
+    }
+    Ok(())
+}

@@ -1,17 +1,21 @@
 //! Bench: per-update step time of every clipping scheme (Figure 1 / 9 /
 //! Appendix G wall-time panel). criterion is unavailable offline, so this
-//! uses the in-tree harness (warmup + timed iterations, mean/std/min).
+//! uses the in-tree harness (warmup + timed iterations, mean/std/min) and
+//! writes the machine-readable trajectory to BENCH_throughput.json.
 //!
 //!     cargo bench --bench throughput
 
-use gwclip::coordinator::optimizer::OptimizerKind;
-use gwclip::coordinator::{Method, TrainOpts, Trainer};
+use gwclip::coordinator::trainer::Method;
 use gwclip::data::lm::MarkovCorpus;
+use gwclip::data::Dataset;
 use gwclip::runtime::Runtime;
-use gwclip::util::bench::bench;
+use gwclip::session::{ClipPolicy, OptimSpec, PrivacySpec, Session};
+use gwclip::util::bench::{bench, write_json};
 
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::new(gwclip::artifact_dir())?;
+    let mut rows = Vec::new();
+
     println!("== throughput: one DP step per scheme, lm_small (GPT-2 analog config) ==");
     let cfg = rt.manifest.config("lm_small")?.clone();
     let data = MarkovCorpus::new(256, cfg.hyper.seq, cfg.hyper.vocab, 4, 0);
@@ -23,37 +27,43 @@ fn main() -> anyhow::Result<()> {
         Method::Ghost,
         Method::Naive,
     ] {
-        let opts = TrainOpts {
-            method,
-            epsilon: 8.0,
-            epochs: 100.0, // plenty of steps available
-            lr: 1e-4,
-            optimizer: OptimizerKind::Adam { beta1: 0.9, beta2: 0.98, eps: 1e-6 },
-            ..Default::default()
-        };
-        let mut tr = Trainer::new(&rt, "lm_small", data.seqs.len(), opts)?;
-        let r = bench(&format!("step/{}", method.name()), 2, 8, || {
-            tr.step(&data).unwrap();
+        let mut sess = Session::builder(&rt, "lm_small")
+            .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+            .clip(ClipPolicy::from_method(method))
+            .optim(OptimSpec::adam(1e-4))
+            .epochs(100.0) // plenty of steps available
+            .build(data.len())?;
+        let r = bench(&format!("lm_small/step/{}", method.name()), 2, 8, || {
+            sess.step(&data).unwrap();
         });
         if method == Method::NonPrivate {
             base = r.mean_s;
         }
         println!("{}   ({:.2}x non-private)", r.report(), r.mean_s / base);
+        rows.push(r);
     }
 
     println!("\n== same comparison on the CIFAR-analog (resmlp) config ==");
     let data = gwclip::data::classif::MixtureImages::new(2048, 64, 10, 0);
     let mut base = 0.0;
     for method in [Method::NonPrivate, Method::PerLayerAdaptive, Method::FlatFixed, Method::Ghost] {
-        let opts = TrainOpts { method, epsilon: 8.0, epochs: 100.0, lr: 0.1, ..Default::default() };
-        let mut tr = Trainer::new(&rt, "resmlp", 2048, opts)?;
-        let r = bench(&format!("step/{}", method.name()), 2, 10, || {
-            tr.step(&data).unwrap();
+        let mut sess = Session::builder(&rt, "resmlp")
+            .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+            .clip(ClipPolicy::from_method(method))
+            .optim(OptimSpec::sgd(0.1))
+            .epochs(100.0)
+            .build(data.len())?;
+        let r = bench(&format!("resmlp/step/{}", method.name()), 2, 10, || {
+            sess.step(&data).unwrap();
         });
         if method == Method::NonPrivate {
             base = r.mean_s;
         }
         println!("{}   ({:.2}x non-private)", r.report(), r.mean_s / base);
+        rows.push(r);
     }
+
+    let path = write_json("throughput", &rows)?;
+    println!("\nwrote {}", path.display());
     Ok(())
 }

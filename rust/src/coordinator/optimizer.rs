@@ -110,6 +110,25 @@ impl Optimizer {
             }
         }
     }
+
+    /// Apply one update to the trainable subset of a full-model parameter
+    /// vector: `idx` (strictly increasing manifest positions) selects the
+    /// tensors `grads` aligns with. This is the one split-borrow used by
+    /// every backend (single-device, pipeline stages, sharded replicas) —
+    /// a safe cursor walk, so no backend carries its own pointer dance.
+    pub fn apply_indexed(&mut self, params: &mut [Tensor], idx: &[usize], grads: &[Tensor]) {
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "indices must be increasing");
+        let mut refs: Vec<&mut Tensor> = Vec::with_capacity(idx.len());
+        let mut next = idx.iter().peekable();
+        for (i, p) in params.iter_mut().enumerate() {
+            if next.peek() == Some(&&i) {
+                refs.push(p);
+                next.next();
+            }
+        }
+        assert_eq!(refs.len(), idx.len(), "trainable index out of range");
+        self.apply(&mut refs, grads);
+    }
 }
 
 #[cfg(test)]
@@ -118,6 +137,24 @@ mod tests {
 
     fn t(v: Vec<f32>) -> Tensor {
         Tensor::from_vec(&[v.len()], v).unwrap()
+    }
+
+    #[test]
+    fn apply_indexed_touches_only_selected_tensors() {
+        let mut params = vec![t(vec![1.0]), t(vec![2.0]), t(vec![3.0])];
+        let tr = [0usize, 2];
+        let grads = vec![t(vec![1.0]), t(vec![1.0])];
+        let init: Vec<Tensor> = tr.iter().map(|&i| params[i].clone()).collect();
+        let mut opt = Optimizer::new(
+            OptimizerKind::Sgd { momentum: 0.0 },
+            Schedule::constant(0.1),
+            0.0,
+            &init,
+        );
+        opt.apply_indexed(&mut params, &tr, &grads);
+        assert!((params[0].data[0] - 0.9).abs() < 1e-6);
+        assert_eq!(params[1].data[0], 2.0, "non-trainable tensor untouched");
+        assert!((params[2].data[0] - 2.9).abs() < 1e-6);
     }
 
     #[test]

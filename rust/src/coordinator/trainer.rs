@@ -7,9 +7,10 @@
 //! privacy plan (lines 2-4), noise allocation (line 13) and private
 //! quantile state (lines 15-18).
 //!
-//! Construction goes through [`crate::session::SessionBuilder`]; the
-//! direct [`Trainer::new`] constructor remains as a thin shim over the
-//! session wiring for one release (deprecated — prefer the session API).
+//! Construction goes through [`crate::session::SessionBuilder`] only: the
+//! legacy `Trainer::new` raw-opts shim is retired, and
+//! [`Trainer::with_core`] is crate-private so every run's DP state is
+//! derived from a declarative spec in exactly one place.
 
 use std::str::FromStr;
 use std::sync::Arc;
@@ -18,7 +19,7 @@ use anyhow::{anyhow, Result};
 
 use crate::data::Dataset;
 use crate::runtime::{ConfigManifest, Exec, HostValue, Runtime, Tensor};
-use crate::session::core::{CoreCfg, DpCore};
+use crate::session::core::DpCore;
 use crate::session::spec::ClipPolicy;
 
 use super::accountant::PrivacyPlan;
@@ -127,9 +128,10 @@ impl FromStr for Method {
     }
 }
 
-/// Legacy single-device option bundle. Retained as the backend's internal
-/// parameter struct and as a shim constructor input; new code should
-/// declare a [`crate::session::RunSpec`] instead.
+/// Single-device backend parameter bundle. This is no longer a public
+/// construction surface — no public constructor consumes it since the
+/// `Trainer::new` shim was retired; the session builder fills it from a
+/// declarative [`crate::session::RunSpec`].
 #[derive(Debug, Clone)]
 pub struct TrainOpts {
     pub method: Method,
@@ -207,33 +209,122 @@ impl TrainOpts {
     }
 }
 
-/// Derived schedule shared between the shim and the session builder:
-/// (expected batch, Poisson rate, total steps).
+/// Derived schedule for one full-model replica: (expected batch, Poisson
+/// rate, total steps). The 1-worker view of [`derive_schedule_n`].
 pub fn derive_schedule(
     cfg: &ConfigManifest,
     n_data: usize,
     epochs: f64,
     expected_batch: usize,
 ) -> Result<(usize, f64, u64)> {
+    derive_schedule_n(cfg, n_data, epochs, expected_batch, 1)
+}
+
+/// The one schedule formula every replica-holding backend derives from:
+/// per-worker E[B] defaults to the 0.8x-headroom convention round(0.8 x
+/// batch) (an explicit global E[B] is split evenly), the global expected
+/// batch is N x that, and `(rate, steps)` follow as `min(E[B]/n, 1)` and
+/// `ceil(epochs x n / E[B])`. Single-device (N = 1) and sharded backends
+/// both call this, so the amplified accounting inputs — and therefore the
+/// 1-worker parity contract — cannot silently diverge.
+pub(crate) fn derive_schedule_n(
+    cfg: &ConfigManifest,
+    n_data: usize,
+    epochs: f64,
+    expected_batch: usize,
+    workers: usize,
+) -> Result<(usize, f64, u64)> {
     if n_data == 0 {
         return Err(anyhow!("dataset is empty"));
     }
+    if workers == 0 {
+        return Err(anyhow!("schedule needs workers > 0"));
+    }
     let b_static = cfg.batch;
-    let expected = if expected_batch == 0 {
+    let per_worker = if expected_batch == 0 {
         ((b_static as f64) * 0.8).round() as usize
     } else {
-        expected_batch
+        // defense in depth behind RunSpec::validate's divisibility check
+        if expected_batch % workers != 0 {
+            return Err(anyhow!(
+                "expected batch {expected_batch} is not divisible across {workers} workers"
+            ));
+        }
+        expected_batch / workers
     };
-    if expected > b_static {
+    if per_worker > b_static {
         return Err(anyhow!(
             "expected batch {} exceeds compiled batch {}",
-            expected,
-            b_static
+            per_worker * workers,
+            b_static * workers
         ));
     }
+    let expected = per_worker * workers;
     let rate = (expected as f64 / n_data as f64).min(1.0);
     let total_steps = ((epochs * n_data as f64) / expected as f64).ceil() as u64;
     Ok((expected, rate, total_steps))
+}
+
+/// Shared full-replica backend wiring: (trainable manifest indices,
+/// layer-group index per trainable tensor, LR schedule). Used by the
+/// single-device trainer and each sharded worker so the trainable-filter
+/// semantics and the warmup fraction can never silently diverge between
+/// backends (the 1-worker parity test pins them equal).
+pub(crate) fn replica_wiring(
+    cfg: &ConfigManifest,
+    lr: f64,
+    lr_decay: bool,
+    total_steps: u64,
+) -> (Vec<usize>, Vec<usize>, Schedule) {
+    let trainable_idx: Vec<usize> = cfg
+        .params
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.trainable)
+        .map(|(i, _)| i)
+        .collect();
+    let gidx = cfg.group_index();
+    let group_of_trainable: Vec<usize> = cfg
+        .params
+        .iter()
+        .filter(|p| p.trainable)
+        .map(|p| gidx[p.group.as_str()])
+        .collect();
+    let schedule = if lr_decay {
+        Schedule::linear(lr, total_steps / 20, total_steps)
+    } else {
+        Schedule::constant(lr)
+    };
+    (trainable_idx, group_of_trainable, schedule)
+}
+
+/// Full-dataset evaluation through an `eval` entry (mean loss, accuracy),
+/// shared by every backend that holds a full model replica (single-device
+/// trainer, sharded workers): sequential padded batches, weighted sums
+/// from the executable's (loss, correct, weight) outputs.
+pub(crate) fn evaluate_full(
+    eval_exec: &Exec,
+    params: &[Tensor],
+    batch: usize,
+    data: &dyn Dataset,
+) -> Result<(f64, f64)> {
+    let mut loss_sum = 0f64;
+    let mut correct = 0f64;
+    let mut weight = 0f64;
+    for b in super::sampler::EvalIter::new(data.len(), batch) {
+        let mb = data.batch(&b.indices);
+        let (x, y) = mb.inputs();
+        let extras = vec![
+            x,
+            y,
+            HostValue::F32(Tensor::from_vec(&[batch], b.weights.clone())?),
+        ];
+        let outs = eval_exec.call(params, &extras)?;
+        loss_sum += outs[0].data[0] as f64;
+        correct += outs[1].data[0] as f64;
+        weight += outs[2].data[0] as f64;
+    }
+    Ok((loss_sum / weight.max(1.0), correct / weight.max(1.0)))
 }
 
 #[derive(Debug, Clone)]
@@ -271,43 +362,10 @@ pub struct Trainer<'r> {
 }
 
 impl<'r> Trainer<'r> {
-    /// Deprecated shim: build the [`DpCore`] from legacy [`TrainOpts`] and
-    /// delegate to [`Trainer::with_core`]. Prefer
-    /// `session::SessionBuilder` — it derives the same core from a
-    /// declarative spec and also handles the pipeline backend.
-    pub fn new(
-        runtime: &'r Runtime,
-        config_name: &str,
-        n_data: usize,
-        opts: TrainOpts,
-    ) -> Result<Self> {
-        let cfg = runtime.manifest.config(config_name)?.clone();
-        let (expected, rate, total_steps) =
-            derive_schedule(&cfg, n_data, opts.epochs, opts.expected_batch)?;
-        let clip = opts.clip_policy();
-        let privacy = opts.privacy_spec();
-        let k = clip.n_groups(cfg.groups.len(), 1);
-        let group_dims = if k == cfg.groups.len() {
-            cfg.group_dims.clone()
-        } else {
-            vec![cfg.n_trainable().max(1); k]
-        };
-        let core = DpCore::from_accountant(CoreCfg {
-            privacy: &privacy,
-            clip: &clip,
-            sample_rate: rate,
-            steps: total_steps.max(1),
-            k,
-            group_dims,
-            expected_batch: expected as f64,
-            seed: opts.seed,
-        })?;
-        Trainer::with_core(runtime, config_name, n_data, opts, core)
-    }
-
-    /// Primary constructor: backend wiring only. All DP state (plan,
-    /// thresholds, noise, RNG) arrives in `core`.
-    pub fn with_core(
+    /// Crate-private constructor: backend wiring only. All DP state (plan,
+    /// thresholds, noise, RNG) arrives in `core`, built by
+    /// `session::SessionBuilder` from the accountant.
+    pub(crate) fn with_core(
         runtime: &'r Runtime,
         config_name: &str,
         n_data: usize,
@@ -332,25 +390,8 @@ impl<'r> Trainer<'r> {
         let eval_exec = runtime.load(config_name, "eval")?;
         let params = runtime.init_params(config_name)?;
 
-        let schedule = if opts.lr_decay {
-            Schedule::linear(opts.lr, total_steps / 20, total_steps)
-        } else {
-            Schedule::constant(opts.lr)
-        };
-        let trainable_idx: Vec<usize> = cfg
-            .params
-            .iter()
-            .enumerate()
-            .filter(|(_, p)| p.trainable)
-            .map(|(i, _)| i)
-            .collect();
-        let gidx = cfg.group_index();
-        let group_of_trainable: Vec<usize> = cfg
-            .params
-            .iter()
-            .filter(|p| p.trainable)
-            .map(|p| gidx[p.group.as_str()])
-            .collect();
+        let (trainable_idx, group_of_trainable, schedule) =
+            replica_wiring(&cfg, opts.lr, opts.lr_decay, total_steps);
         let tr_params: Vec<Tensor> =
             trainable_idx.iter().map(|&i| params[i].clone()).collect();
         let optimizer = Optimizer::new(opts.optimizer, schedule, opts.weight_decay, &tr_params);
@@ -477,22 +518,8 @@ impl<'r> Trainer<'r> {
             }
         }
 
-        // parameter update
-        {
-            let mut refs: Vec<&mut Tensor> = Vec::with_capacity(n_tr);
-            // split borrow: collect raw pointers safely via split_at_mut dance
-            let params = &mut self.params;
-            let mut taken: Vec<*mut Tensor> = Vec::with_capacity(n_tr);
-            for &i in &self.trainable_idx {
-                taken.push(&mut params[i] as *mut Tensor);
-            }
-            unsafe {
-                for p in taken {
-                    refs.push(&mut *p);
-                }
-            }
-            self.optimizer.apply(&mut refs, &grads);
-        }
+        // parameter update on the trainable subset
+        self.optimizer.apply_indexed(&mut self.params, &self.trainable_idx, &grads);
 
         // lines 15-18: private quantile update (+ A.1 rescale in the core)
         if self.opts.method.adaptive() {
@@ -516,24 +543,7 @@ impl<'r> Trainer<'r> {
 
     /// Full-dataset evaluation: (mean loss, accuracy).
     pub fn evaluate(&self, data: &dyn Dataset) -> Result<(f64, f64)> {
-        let b = self.cfg.batch;
-        let mut loss_sum = 0f64;
-        let mut correct = 0f64;
-        let mut weight = 0f64;
-        for batch in super::sampler::EvalIter::new(data.len(), b) {
-            let mb = data.batch(&batch.indices);
-            let (x, y) = mb.inputs();
-            let extras = vec![
-                x,
-                y,
-                HostValue::F32(Tensor::from_vec(&[b], batch.weights.clone())?),
-            ];
-            let outs = self.eval_exec.call(&self.params, &extras)?;
-            loss_sum += outs[0].data[0] as f64;
-            correct += outs[1].data[0] as f64;
-            weight += outs[2].data[0] as f64;
-        }
-        Ok((loss_sum / weight.max(1.0), correct / weight.max(1.0)))
+        evaluate_full(&self.eval_exec, &self.params, self.cfg.batch, data)
     }
 
     /// Train for the planned number of steps; returns per-step stats.

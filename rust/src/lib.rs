@@ -11,10 +11,10 @@
 //!   residual-MLP with per-layer clipping fused into the backward pass,
 //!   exported once to `artifacts/*.hlo.txt`.
 //! * **L3** this crate: PJRT runtime, privacy accountant, the unified
-//!   [`session`] API over the single-device and pipeline-parallel
-//!   backends, adaptive quantile state, noise allocation, DP optimizers,
-//!   Poisson sampling, data substrates, and the experiment harness
-//!   regenerating every table and figure.
+//!   [`session`] API over the single-device, pipeline-parallel and
+//!   sharded data-parallel backends, adaptive quantile state, noise
+//!   allocation, DP optimizers, Poisson sampling, data substrates, and
+//!   the experiment harness regenerating every table and figure.
 //!
 //! ## Quick start (after `make artifacts`)
 //!
@@ -42,9 +42,12 @@
 //! ```
 //!
 //! Runs are also declarable as TOML/JSON spec files executed by
-//! `gwclip run --spec run.toml` (see `docs/SESSION_API.md`). The legacy
-//! `Trainer::new` / `PipelineEngine::new` constructors remain as thin
-//! deprecated shims over the same shared [`session::DpCore`].
+//! `gwclip run --spec run.toml` (see `docs/SESSION_API.md`). The session
+//! builder is the *only* construction surface: the legacy `Trainer::new` /
+//! `PipelineEngine::new` raw-sigma shims are retired, and all three
+//! backends — single-device, pipeline-parallel, and the sharded
+//! data-parallel [`shard::ShardEngine`] — receive their DP state through
+//! the same shared [`session::DpCore`].
 
 pub mod coordinator;
 pub mod data;
@@ -53,6 +56,7 @@ pub mod metrics;
 pub mod pipeline;
 pub mod runtime;
 pub mod session;
+pub mod shard;
 pub mod util;
 
 /// Default artifact directory (relative to the repo root).

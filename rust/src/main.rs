@@ -13,7 +13,8 @@ use gwclip::coordinator::trainer::Method;
 use gwclip::pipeline::PipelineMode;
 use gwclip::runtime::Runtime;
 use gwclip::session::{
-    ClipPolicy, DataSpec, OptimSpec, PrivacySpec, RunSpec, Sampling, Session, SessionBuilder,
+    ClipMode, ClipPolicy, DataSpec, GroupBy, OptimSpec, PrivacySpec, RunSpec, Sampling, Session,
+    SessionBuilder, ShardGrouping,
 };
 use gwclip::util::cli::Args;
 
@@ -21,7 +22,7 @@ const USAGE: &str = "\
 gwclip — group-wise clipping for DP deep learning (ICLR 2023 reproduction)
 
 USAGE:
-  gwclip run      --spec run.toml|run.json   (one declarative file, either
+  gwclip run      --spec run.toml|run.json   (one declarative file, any
                   backend; see docs/SESSION_API.md) [--print-spec]
   gwclip train    [--config resmlp] [--method adaptive-per-layer] [--epsilon 3]
                   [--delta 1e-5] [--epochs 3] [--lr 0.5] [--n-data 4096]
@@ -31,9 +32,15 @@ USAGE:
                   [--epsilon 1] [--delta 1e-5] [--steps 10] [--n-micro 4]
                   [--clip 0.01] [--lr 5e-3] [--n-data 2048] [--seed 0]
                   [--sampling poisson|round_robin]   (poisson = amplified accountant)
+  gwclip shard    [--spec run.toml] [--config resmlp] [--workers 4] [--fanout 2]
+                  [--no-overlap] [--grouping auto|flat|per-device]
+                  [--mode fixed|adaptive|non-private] [--epsilon 3] [--delta 1e-5]
+                  [--epochs 1] [--lr 0.25] [--clip 1] [--n-data 4096] [--seed 0]
+                  (sharded data-parallel backend: per-device clipping across N
+                  replicas, overlapped tree-reduction; flags override the spec)
   gwclip exp <which>   table1|table2|table3|table4|table5|table6|table10|table11|
-                       fig1|fig2|fig3|fig5|fig6|fig7|pipeline-overhead|accountant|all
-                       [--paper-scale]
+                       fig1|fig2|fig3|fig5|fig6|fig7|pipeline-overhead|accountant|
+                       shard-scaling|all   [--paper-scale]
   common: [--artifacts DIR]
 ";
 
@@ -43,7 +50,7 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     }
-    let args = Args::parse(&argv, &["paper-scale", "print-spec"])?;
+    let args = Args::parse(&argv, &["paper-scale", "print-spec", "no-overlap"])?;
     let dir = args
         .flags
         .get("artifacts")
@@ -55,6 +62,7 @@ fn main() -> Result<()> {
         Some("run") => cmd_run(&rt, &args),
         Some("train") => cmd_train(&rt, &args),
         Some("pipeline") => cmd_pipeline(&rt, &args),
+        Some("shard") => cmd_shard(&rt, &args),
         Some("exp") => {
             let which = args
                 .positional
@@ -140,6 +148,102 @@ fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
             .epochs(args.get_f64("epochs", 3.0)?)
             .seed(seed),
     )
+}
+
+/// Sharded data-parallel run: N full replicas, per-device (or flat)
+/// clipping, local noise shares, overlapped tree-reduction. Starts from a
+/// `--spec` file when given (injecting a default `[shard]` section if the
+/// file lacks one) and applies flag overrides on top; otherwise builds the
+/// spec from flags alone. Sigma is always accountant-derived; the
+/// accountant sees one release per step at q = E[B]/n regardless of the
+/// worker count.
+fn cmd_shard(rt: &Runtime, args: &Args) -> Result<()> {
+    let mut spec = match args.flags.get("spec") {
+        Some(path) => {
+            // every documented flag overrides the spec file; absent flags
+            // keep the spec's values
+            let mut s = RunSpec::from_path(path)?;
+            if let Some(c) = args.flags.get("config") {
+                s.config = c.clone();
+            }
+            if let Some(m) = args.flags.get("mode") {
+                s.clip.mode = m.parse()?;
+            }
+            s.privacy.epsilon = args.get_f64("epsilon", s.privacy.epsilon)?;
+            s.privacy.delta = args.get_f64("delta", s.privacy.delta)?;
+            s.privacy.quantile_r = args.get_f64("quantile-r", s.privacy.quantile_r)?;
+            s.clip.clip_init = args.get_f64("clip", s.clip.clip_init)?;
+            s.clip.target_q = args.get_f64("quantile", s.clip.target_q)?;
+            s.optim.lr = args.get_f64("lr", s.optim.lr)?;
+            s.epochs = args.get_f64("epochs", s.epochs)?;
+            s.data.n_data = args.get_usize("n-data", s.data.n_data)?;
+            s.seed = args.get_u64("seed", s.seed)?;
+            s
+        }
+        None => {
+            let seed = args.get_u64("seed", 0)?;
+            let mode: ClipMode = args.get("mode", "fixed").parse()?;
+            let group_by = if mode == ClipMode::NonPrivate {
+                GroupBy::Flat
+            } else {
+                match args.get("grouping", "auto").parse::<ShardGrouping>()? {
+                    ShardGrouping::Flat => GroupBy::Flat,
+                    // auto defaults the flag-driven path to the paper's
+                    // per-device scheme (one threshold per worker)
+                    ShardGrouping::Auto | ShardGrouping::PerDevice => GroupBy::PerDevice,
+                }
+            };
+            let mut s = RunSpec::for_config(&args.get("config", "resmlp"));
+            s.clip = ClipPolicy {
+                clip_init: args.get_f64("clip", 1.0)?,
+                target_q: args.get_f64("quantile", 0.5)?,
+                ..ClipPolicy::new(group_by, mode)
+            };
+            s.privacy = PrivacySpec {
+                epsilon: args.get_f64("epsilon", 3.0)?,
+                delta: args.get_f64("delta", 1e-5)?,
+                quantile_r: args.get_f64(
+                    "quantile-r",
+                    if mode == ClipMode::Adaptive { 0.01 } else { 0.0 },
+                )?,
+            };
+            s.optim = OptimSpec::sgd(args.get_f64("lr", 0.25)?);
+            s.data = DataSpec {
+                task: args.get("task", "auto"),
+                n_data: args.get_usize("n-data", 4096)?,
+                seed,
+            };
+            s.epochs = args.get_f64("epochs", 1.0)?;
+            s.seed = seed;
+            s
+        }
+    };
+    let mut sh = spec.shard.unwrap_or_default();
+    sh.workers = args.get_usize("workers", sh.workers)?;
+    sh.fanout = args.get_usize("fanout", sh.fanout)?;
+    if args.has("no-overlap") {
+        sh.overlap = false;
+    }
+    if let Some(g) = args.flags.get("grouping") {
+        let g: ShardGrouping = g.parse()?;
+        sh.grouping = g;
+        // make the override usable on any spec: an explicit grouping also
+        // re-aligns the clip policy it must agree with (no-op when the
+        // flags already built them aligned, or for non-private runs)
+        if spec.clip.mode != ClipMode::NonPrivate {
+            match g {
+                ShardGrouping::Flat => spec.clip.group_by = GroupBy::Flat,
+                ShardGrouping::PerDevice => spec.clip.group_by = GroupBy::PerDevice,
+                ShardGrouping::Auto => {}
+            }
+        }
+    }
+    spec.shard = Some(sh);
+    spec.validate()?;
+    if args.has("print-spec") {
+        println!("{}", spec.render_json());
+    }
+    run_session(SessionBuilder::from_spec(rt, spec))
 }
 
 /// Flag-driven pipeline run. Sigma is always accountant-derived from

@@ -16,8 +16,8 @@
 //! All DP state — thresholds, noise multiplier, quantile estimators, RNG —
 //! lives in the shared [`DpCore`] (one estimator with S thresholds for
 //! per-device clipping), built by `session::SessionBuilder` from the
-//! accountant. The direct [`PipelineEngine::new`] constructor remains as a
-//! deprecated raw-sigma shim for one release.
+//! accountant. The legacy raw-sigma `PipelineEngine::new` shim is retired;
+//! construction is crate-private and sigma is always accountant-derived.
 //!
 //! Steps consume fixed-capacity minibatches with a per-example 0/1 weight
 //! mask ([`PipelineEngine::step_weighted`]): Poisson draws padded below
@@ -37,7 +37,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::noise::{add_noise, Allocation};
+use crate::coordinator::noise::add_noise;
 use crate::coordinator::optimizer::{Optimizer, OptimizerKind, Schedule};
 use crate::data::{Dataset, ModelBatch};
 use crate::runtime::{checkpoint, Exec, HostValue, Runtime, Tensor};
@@ -95,10 +95,11 @@ impl FromStr for PipelineMode {
     }
 }
 
-/// Legacy pipeline option bundle (raw sigma, no accountant). Retained as
-/// the backend's internal parameter struct and as a shim constructor
-/// input; new code should declare a [`crate::session::RunSpec`] so sigma
-/// is accountant-derived.
+/// Pipeline backend parameter bundle. No longer a public construction
+/// surface — the raw-sigma `PipelineEngine::new` shim is retired and the
+/// session builder fills this from a declarative
+/// [`crate::session::RunSpec`], with `sigma` an informational echo of the
+/// accountant's multiplier (the engine reads noise from the core).
 #[derive(Debug, Clone)]
 pub struct PipelineOpts {
     pub mode: PipelineMode,
@@ -187,39 +188,10 @@ pub struct PipelineEngine<'r> {
 }
 
 impl<'r> PipelineEngine<'r> {
-    /// Deprecated shim: build the [`DpCore`] from the legacy raw-sigma
-    /// [`PipelineOpts`] and delegate to [`PipelineEngine::with_core`].
-    /// Prefer `session::SessionBuilder`, which derives sigma from the
-    /// accountant instead of trusting a hand-picked value.
-    pub fn new(runtime: &'r Runtime, config_name: &str, opts: PipelineOpts) -> Result<Self> {
-        let cfg = runtime.manifest.config(config_name)?.clone();
-        let stages = cfg
-            .stages
-            .as_ref()
-            .ok_or_else(|| anyhow!("config {config_name} has no pipeline stages"))?;
-        let n_stages = stages.stages.len();
-        let k = if opts.mode == PipelineMode::PerDevice { n_stages } else { 1 };
-        let expected = if opts.expected_batch > 0 {
-            opts.expected_batch
-        } else {
-            cfg.batch * opts.n_micro
-        };
-        let core = DpCore::with_raw_sigma(
-            if opts.mode == PipelineMode::NonPrivate { 0.0 } else { opts.sigma },
-            vec![opts.clip; k],
-            opts.adaptive && opts.mode == PipelineMode::PerDevice,
-            opts.target_q,
-            opts.quantile_eta,
-            expected as f64,
-            Allocation::EqualBudget,
-            opts.seed,
-        );
-        PipelineEngine::with_core(runtime, config_name, opts, core)
-    }
-
-    /// Primary constructor: backend wiring only. All DP state arrives in
-    /// `core` (K = stage count for per-device clipping, 1 otherwise).
-    pub fn with_core(
+    /// Crate-private constructor: backend wiring only. All DP state
+    /// arrives in `core` (K = stage count for per-device clipping, 1
+    /// otherwise), built by `session::SessionBuilder` from the accountant.
+    pub(crate) fn with_core(
         runtime: &'r Runtime,
         config_name: &str,
         opts: PipelineOpts,
@@ -607,18 +579,7 @@ impl<'r> PipelineEngine<'r> {
                 }
                 grads.push(g);
             }
-            let mut refs: Vec<&mut Tensor> = Vec::new();
-            let params = &mut d.params;
-            let mut ptrs: Vec<*mut Tensor> = Vec::new();
-            for &i in &d.trainable_pos {
-                ptrs.push(&mut params[i] as *mut Tensor);
-            }
-            unsafe {
-                for p in ptrs {
-                    refs.push(&mut *p);
-                }
-            }
-            d.optimizer.apply(&mut refs, &grads);
+            d.optimizer.apply_indexed(&mut d.params, &d.trainable_pos, &grads);
         }
 
         // adaptive per-device thresholds (extension of Algorithm 2): one

@@ -120,6 +120,23 @@ impl Runtime {
         let map = checkpoint::read(&path)?;
         params_from_map(cfg, &map)
     }
+
+    /// Replica checkpoint fan-out for the sharded data-parallel backend:
+    /// read the init checkpoint once and hand out `n` bit-identical
+    /// full-model parameter sets (one per simulated worker). Cloning on
+    /// the host models the broadcast a real cluster performs at startup.
+    pub fn init_replicas(&self, config: &str, n: usize) -> Result<Vec<Vec<Tensor>>> {
+        if n == 0 {
+            return Err(anyhow!("init_replicas needs n > 0"));
+        }
+        let base = self.init_params(config)?;
+        let mut replicas = Vec::with_capacity(n);
+        for _ in 1..n {
+            replicas.push(base.clone());
+        }
+        replicas.push(base);
+        Ok(replicas)
+    }
 }
 
 /// Order a name->Tensor map by a config's param specs.

@@ -42,7 +42,7 @@ pub struct CoreCfg<'a> {
 }
 
 pub struct DpCore {
-    /// accountant output; `None` when non-private or legacy raw-sigma
+    /// accountant output; `None` when non-private
     pub plan: Option<PrivacyPlan>,
     /// gradient noise multiplier actually applied (0 = no noise)
     pub sigma_grad: f64,
@@ -56,9 +56,10 @@ pub struct DpCore {
 }
 
 impl DpCore {
-    /// Build a core from specs, deriving sigma from the accountant.
-    /// This is the only construction path the session builder uses; the
-    /// legacy opts structs funnel through it as shims.
+    /// Build a core from specs, deriving sigma from the accountant. This
+    /// is the only construction path — the legacy raw-sigma shim
+    /// (`with_raw_sigma`) is retired with `Trainer::new` /
+    /// `PipelineEngine::new`.
     pub fn from_accountant(cfg: CoreCfg) -> Result<Self> {
         cfg.clip.validate()?;
         let k = cfg.k.max(1);
@@ -118,39 +119,6 @@ impl DpCore {
             rescale_global: cfg.clip.rescale_global && k > 1,
             rng: Rng::seeded(cfg.seed),
         })
-    }
-
-    /// Legacy construction from a raw noise multiplier (the deprecated
-    /// `PipelineOpts { sigma, .. }` path). No plan is recorded: callers on
-    /// this path supplied sigma themselves and own its privacy analysis.
-    #[allow(clippy::too_many_arguments)]
-    pub fn with_raw_sigma(
-        sigma: f64,
-        init_thresholds: Vec<f64>,
-        adaptive: bool,
-        target_q: f64,
-        quantile_eta: f64,
-        expected_batch: f64,
-        allocation: Allocation,
-        seed: u64,
-    ) -> Self {
-        let clip_init = init_thresholds.first().copied().unwrap_or(1.0);
-        let k = init_thresholds.len().max(1);
-        let quantiles = if adaptive {
-            QuantileEstimator::adaptive(init_thresholds, target_q, quantile_eta, 0.0, expected_batch)
-        } else {
-            QuantileEstimator::fixed(init_thresholds)
-        };
-        DpCore {
-            plan: None,
-            sigma_grad: sigma,
-            quantiles,
-            allocation,
-            group_dims: vec![1; k],
-            clip_init,
-            rescale_global: false,
-            rng: Rng::seeded(seed),
-        }
     }
 
     pub fn k(&self) -> usize {

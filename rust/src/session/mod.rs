@@ -4,9 +4,11 @@
 //! instances of one abstraction (group-wise clipping); this module makes
 //! the crate's API match: one declarative [`RunSpec`] (privacy target,
 //! [`ClipPolicy`], optimizer, data), one [`SessionBuilder`], and one
-//! [`Session`] that selects the backend from the manifest — configs with
-//! pipeline stages train on the [`PipelineEngine`], everything else on the
-//! single-device [`Trainer`]. Both backends share one [`DpCore`] (plan,
+//! [`Session`] that selects the backend from the manifest + spec —
+//! configs with pipeline stages train on the [`PipelineEngine`], specs
+//! with a `[shard]` section on the data-parallel
+//! [`ShardEngine`](crate::shard::ShardEngine), everything else on the
+//! single-device [`Trainer`]. All backends share one [`DpCore`] (plan,
 //! thresholds, noise, RNG) and emit one [`StepEvent`] stream.
 //!
 //! ```no_run
@@ -41,11 +43,13 @@ use crate::coordinator::trainer::{derive_schedule, StepStats, TrainOpts, Trainer
 use crate::data::Dataset;
 use crate::pipeline::{PipeStepStats, PipelineEngine, PipelineMode, PipelineOpts};
 use crate::runtime::{Runtime, Tensor};
+use crate::shard::engine::ShardWiring;
+use crate::shard::{ShardEngine, ShardStepStats, WorkerGrouping};
 
 pub use self::core::{CoreCfg, DpCore};
 pub use self::spec::{
     ClipMode, ClipPolicy, DataSpec, FlatImpl, GroupBy, OptimSpec, PipeSpec, PrivacySpec, RunSpec,
-    Sampling,
+    Sampling, ShardGrouping, ShardSpec,
 };
 
 // -------------------------------------------------------------- step event
@@ -107,6 +111,21 @@ impl StepEvent {
         }
     }
 
+    pub fn from_shard(s: ShardStepStats) -> Self {
+        StepEvent {
+            step: s.step,
+            loss: s.loss,
+            batch_size: s.batch_size,
+            clip_frac: s.clip_frac,
+            mean_norms: s.mean_norms,
+            host_secs: s.host_secs,
+            sim_secs: s.sim_secs,
+            syncs: s.syncs,
+            calls: s.calls,
+            truncated: s.truncated,
+        }
+    }
+
     /// One-line human-readable progress report.
     pub fn log_line(&self, total_steps: u64, label: &str) -> String {
         if self.calls > 0 {
@@ -130,10 +149,13 @@ impl StepEvent {
 
 // ----------------------------------------------------------------- backend
 
-/// The executor a session selected from the manifest.
+/// The executor a session selected from the manifest + spec: pipeline for
+/// staged configs, sharded when the spec carries a `[shard]` section,
+/// single-device otherwise.
 pub enum Backend<'r> {
     Single(Trainer<'r>),
     Pipeline(PipelineEngine<'r>),
+    Sharded(ShardEngine<'r>),
 }
 
 impl Backend<'_> {
@@ -141,6 +163,7 @@ impl Backend<'_> {
         match self {
             Backend::Single(_) => "single-device",
             Backend::Pipeline(_) => "pipeline",
+            Backend::Sharded(_) => "sharded",
         }
     }
 }
@@ -212,6 +235,12 @@ impl<'r> SessionBuilder<'r> {
         self
     }
 
+    /// Select the sharded data-parallel backend (stage-less configs only).
+    pub fn shard(mut self, sh: ShardSpec) -> Self {
+        self.spec.shard = Some(sh);
+        self
+    }
+
     /// Explicit pipeline step count (overrides the epochs-derived count).
     pub fn steps(mut self, steps: usize) -> Self {
         self.spec.pipe.steps = steps;
@@ -230,6 +259,13 @@ impl<'r> SessionBuilder<'r> {
 
         if let Some(stages) = &cfg.stages {
             // ---------------- pipeline backend (manifest has stages) -----
+            if spec.shard.is_some() {
+                bail!(
+                    "config '{}' has pipeline stages; the sharded backend replicates a \
+                     stage-less model — drop the [shard] section or pick a stage-less config",
+                    spec.config
+                );
+            }
             let mode = spec
                 .clip
                 .pipeline_mode()
@@ -334,6 +370,114 @@ impl<'r> SessionBuilder<'r> {
                 pipe_sampler,
                 spec,
             })
+        } else if let Some(sh) = spec.shard {
+            // ---------------- sharded data-parallel backend ---------------
+            if !(spec.epochs > 0.0) {
+                bail!("sharded runs need epochs > 0");
+            }
+            // resolve the threshold-group topology; spec validation already
+            // rejected explicit grouping/clip mismatches. Non-private runs
+            // have no thresholds, so the topology degenerates to flat.
+            let grouping = if !spec.clip.is_private() {
+                WorkerGrouping::Flat
+            } else {
+                match (sh.grouping, spec.clip.group_by) {
+                    (ShardGrouping::Flat, _) => WorkerGrouping::Flat,
+                    (ShardGrouping::PerDevice, _) => WorkerGrouping::PerDevice,
+                    (ShardGrouping::Auto, GroupBy::Flat) => WorkerGrouping::Flat,
+                    (ShardGrouping::Auto, GroupBy::PerDevice) => WorkerGrouping::PerDevice,
+                    (ShardGrouping::Auto, GroupBy::PerLayer) => WorkerGrouping::PerLayer,
+                }
+            };
+            // One schedule formula for every replica-holding backend
+            // (trainer::derive_schedule_n): per-worker E[B] keeps the
+            // single-device 0.8x headroom default, the global E[B] is
+            // N x that — so a 1-worker sharded run derives the identical
+            // schedule (and plan) as the single-device backend.
+            let (expected, rate, total_steps) = crate::coordinator::trainer::derive_schedule_n(
+                &cfg,
+                n_data,
+                spec.epochs,
+                spec.expected_batch,
+                sh.workers,
+            )?;
+            let (k, group_dims) = match grouping {
+                WorkerGrouping::Flat => (1, vec![cfg.n_trainable().max(1)]),
+                WorkerGrouping::PerLayer => (cfg.groups.len().max(1), cfg.group_dims.clone()),
+                WorkerGrouping::PerDevice => {
+                    (sh.workers, vec![cfg.n_trainable().max(1); sh.workers])
+                }
+            };
+            // One accountant release per step at q = E[B]/n regardless of
+            // the worker count: the workers jointly hold ONE Poisson draw,
+            // and their local noise shares merge to the core's per-group
+            // stds exactly (see shard::engine). For per-device grouping
+            // the sensitivity of the merged update is the per-device bound
+            // summed in quadrature, sqrt(sum_k C_k^2), which is what the
+            // equal-budget allocation calibrates against.
+            // The quantile estimator normalizes each group's clip counts
+            // by that group's expected example count: worker-owned groups
+            // (per-device) each see only their slice, E[B]/N; flat and
+            // per-layer groups see the whole draw.
+            let quantile_batch = match grouping {
+                WorkerGrouping::PerDevice => expected as f64 / sh.workers as f64,
+                _ => expected as f64,
+            };
+            let core = DpCore::from_accountant(CoreCfg {
+                privacy: &spec.privacy,
+                clip: &spec.clip,
+                sample_rate: rate,
+                steps: total_steps.max(1),
+                k,
+                group_dims,
+                expected_batch: quantile_batch,
+                seed: spec.seed,
+            })?;
+            // Per-worker step executable: flat and per-layer groupings go
+            // through the single-device Method mapping so flat_impl
+            // (fused/ghost/naive) is honored — and adaptive x ghost is
+            // rejected — exactly as on the single-device backend; the
+            // worker-grouped per-device scheme clips each worker's full
+            // gradient flat against its own C_w via the fused flat entry.
+            let entry = if !spec.clip.is_private() {
+                "nonprivate"
+            } else {
+                match grouping {
+                    WorkerGrouping::PerDevice => "dp_flat",
+                    _ => spec
+                        .clip
+                        .method()
+                        .with_context(|| {
+                            format!("config '{}' trains on the sharded backend", spec.config)
+                        })?
+                        .entry(),
+                }
+            };
+            let wiring = ShardWiring {
+                workers: sh.workers,
+                fanout: sh.fanout,
+                overlap: sh.overlap,
+                link_latency: sh.link_latency,
+                grouping,
+                entry,
+                private: spec.clip.is_private(),
+                rate,
+                expected_batch: expected,
+                total_steps,
+                n_data,
+                optimizer: spec.optim.kind,
+                lr: spec.optim.lr,
+                weight_decay: spec.optim.weight_decay,
+                lr_decay: spec.optim.lr_decay,
+            };
+            let engine = ShardEngine::with_core(runtime, &spec.config, wiring, core)?;
+            Ok(Session {
+                backend: Backend::Sharded(engine),
+                total_steps,
+                pipe_cursor: 0,
+                pipe_sampler: None,
+                spec,
+            })
         } else {
             // ---------------- single-device backend -----------------------
             if !(spec.epochs > 0.0) {
@@ -427,6 +571,7 @@ impl<'r> Session<'r> {
         match &self.backend {
             Backend::Single(t) => &t.core,
             Backend::Pipeline(e) => &e.core,
+            Backend::Sharded(e) => &e.core,
         }
     }
 
@@ -440,12 +585,13 @@ impl<'r> Session<'r> {
         self.core().thresholds()
     }
 
-    /// Group labels matching [`Session::thresholds`] (layer groups or
-    /// `stage{i}` device labels).
+    /// Group labels matching [`Session::thresholds`] (layer groups,
+    /// `stage{i}` device labels, or `worker{i}` replica labels).
     pub fn group_labels(&self) -> Vec<String> {
         match &self.backend {
             Backend::Single(t) => t.groups().to_vec(),
             Backend::Pipeline(e) => (0..e.core.k()).map(|i| format!("stage{i}")).collect(),
+            Backend::Sharded(e) => e.group_labels(),
         }
     }
 
@@ -477,27 +623,46 @@ impl<'r> Session<'r> {
         }
     }
 
-    /// Single-device parameters in manifest order (decoding / checkpoints).
+    pub fn shard_engine(&self) -> Option<&ShardEngine<'r>> {
+        match &self.backend {
+            Backend::Sharded(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    pub fn shard_engine_mut(&mut self) -> Option<&mut ShardEngine<'r>> {
+        match &mut self.backend {
+            Backend::Sharded(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    /// Full-model parameters in manifest order (decoding / checkpoints).
+    /// Sharded sessions return worker 0's replica — all replicas are kept
+    /// bit-identical by the merged update.
     pub fn params(&self) -> Result<&[Tensor]> {
         match &self.backend {
             Backend::Single(t) => Ok(&t.params),
+            Backend::Sharded(e) => Ok(e.params()),
             Backend::Pipeline(_) => Err(anyhow!(
                 "pipeline sessions shard parameters per stage; use param_map()"
             )),
         }
     }
 
-    /// Replace single-device parameters (pretrained checkpoints).
+    /// Replace full-model parameters (pretrained checkpoints). Sharded
+    /// sessions fan the set out to every replica.
     pub fn set_params(&mut self, params: Vec<Tensor>) -> Result<()> {
         match &mut self.backend {
             Backend::Single(t) => t.set_params(params),
+            Backend::Sharded(e) => e.set_params_all(params),
             Backend::Pipeline(_) => Err(anyhow!(
                 "pipeline sessions load parameters by name; use load_param_map()"
             )),
         }
     }
 
-    /// All parameters as a name -> tensor map, on either backend.
+    /// All parameters as a name -> tensor map, on any backend.
     pub fn param_map(&self) -> HashMap<String, Tensor> {
         match &self.backend {
             Backend::Single(t) => t
@@ -508,11 +673,18 @@ impl<'r> Session<'r> {
                 .map(|(p, v)| (p.name.clone(), v.clone()))
                 .collect(),
             Backend::Pipeline(e) => e.dump_params(),
+            Backend::Sharded(e) => e
+                .cfg
+                .params
+                .iter()
+                .zip(e.params())
+                .map(|(p, v)| (p.name.clone(), v.clone()))
+                .collect(),
         }
     }
 
     /// Load parameters by name from a checkpoint map; names absent from
-    /// the map keep their init values (LoRA adapters), on either backend.
+    /// the map keep their init values (LoRA adapters), on any backend.
     pub fn load_param_map(&mut self, map: &HashMap<String, Tensor>) -> Result<()> {
         match &mut self.backend {
             Backend::Single(t) => {
@@ -528,6 +700,7 @@ impl<'r> Session<'r> {
                 t.set_params(params)
             }
             Backend::Pipeline(e) => e.load_params(map),
+            Backend::Sharded(e) => e.load_param_map(map),
         }
     }
 
@@ -540,7 +713,7 @@ impl<'r> Session<'r> {
                 t.collect_norms = if on { Some(Vec::new()) } else { None };
                 Ok(())
             }
-            Backend::Pipeline(_) => Err(anyhow!("norm collection is single-device only")),
+            _ => Err(anyhow!("norm collection is single-device only")),
         }
     }
 
@@ -555,6 +728,7 @@ impl<'r> Session<'r> {
     pub fn step(&mut self, data: &dyn Dataset) -> Result<StepEvent> {
         match &mut self.backend {
             Backend::Single(t) => Ok(StepEvent::from_single(t.step(data)?)),
+            Backend::Sharded(e) => Ok(StepEvent::from_shard(e.step(data)?)),
             Backend::Pipeline(e) => {
                 let mb = e.minibatch();
                 if let Some(sampler) = &self.pipe_sampler {
@@ -578,6 +752,11 @@ impl<'r> Session<'r> {
         let label = match &self.backend {
             Backend::Single(t) => t.opts.method.name(),
             Backend::Pipeline(e) => e.opts.mode.name(),
+            Backend::Sharded(e) => match e.grouping() {
+                WorkerGrouping::Flat => "sharded flat",
+                WorkerGrouping::PerLayer => "sharded per-layer",
+                WorkerGrouping::PerDevice => "sharded per-device",
+            },
         };
         let total = self.total_steps;
         let mut events = Vec::with_capacity(total as usize);
@@ -597,13 +776,16 @@ impl<'r> Session<'r> {
         match &self.backend {
             Backend::Single(t) => t.evaluate(data),
             Backend::Pipeline(e) => Ok((e.evaluate(data)?, f64::NAN)),
+            Backend::Sharded(e) => e.evaluate(data),
         }
     }
 
     /// Human-readable one-line description of the run's privacy wiring.
+    /// Sharded sessions append their topology: worker count, reduction
+    /// fanout, grouping and the per-group thresholds.
     pub fn describe(&self) -> String {
         let be = self.backend.name();
-        match self.plan() {
+        let base = match self.plan() {
             // (q, steps) are the plan's composition parameters — for a
             // round-robin pipeline, plan.steps is the per-example
             // participation count, not the run's total step count
@@ -627,6 +809,10 @@ impl<'r> Session<'r> {
                 self.spec.clip.mode.token(),
                 self.total_steps
             ),
+        };
+        match &self.backend {
+            Backend::Sharded(e) => format!("{base} | {}", e.describe_topology()),
+            _ => base,
         }
     }
 }

@@ -618,6 +618,115 @@ impl PipeSpec {
     }
 }
 
+// ------------------------------------------------------------------ shard
+
+/// How the sharded backend maps clipping-threshold groups onto workers.
+///
+/// * `Auto` (default): mirror `clip.group_by` — `per-device` gives every
+///   worker its own threshold (the paper's scheme over replicas), `flat` a
+///   single shared threshold, `per-layer` shared per-layer thresholds.
+/// * `Flat` / `PerDevice`: explicit pins; a private spec whose
+///   `clip.group_by` disagrees is rejected at validation time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardGrouping {
+    Auto,
+    Flat,
+    PerDevice,
+}
+
+impl ShardGrouping {
+    /// Canonical spec/CLI token; guaranteed to parse back via [`FromStr`].
+    pub fn token(&self) -> &'static str {
+        match self {
+            ShardGrouping::Auto => "auto",
+            ShardGrouping::Flat => "flat",
+            ShardGrouping::PerDevice => "per-device",
+        }
+    }
+}
+
+impl FromStr for ShardGrouping {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "auto" => ShardGrouping::Auto,
+            "flat" | "global" => ShardGrouping::Flat,
+            "per-device" | "perdevice" | "per_device" | "per-worker" => ShardGrouping::PerDevice,
+            _ => bail!("unknown shard grouping '{s}' (auto|flat|per-device)"),
+        })
+    }
+}
+
+/// Sharded data-parallel backend knobs. Presence of a `[shard]` section
+/// (or `SessionBuilder::shard`) selects `Backend::Sharded` for stage-less
+/// configs; pipeline configs reject it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardSpec {
+    /// simulated data-parallel workers N (each a full model replica)
+    pub workers: usize,
+    /// tree-reduction fanout (>= 2)
+    pub fanout: usize,
+    /// overlap reduction rounds with backprop (false = barrier baseline)
+    pub overlap: bool,
+    /// threshold-group topology (see [`ShardGrouping`])
+    pub grouping: ShardGrouping,
+    /// per-reduction-round link latency charged by the makespan model (s)
+    pub link_latency: f64,
+}
+
+impl Default for ShardSpec {
+    fn default() -> Self {
+        ShardSpec {
+            workers: 4,
+            fanout: 2,
+            overlap: true,
+            grouping: ShardGrouping::Auto,
+            link_latency: 5e-4,
+        }
+    }
+}
+
+impl ShardSpec {
+    pub fn with_workers(workers: usize) -> Self {
+        ShardSpec { workers, ..Default::default() }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("shard.workers must be > 0 (one replica per data-parallel worker)");
+        }
+        if self.fanout < 2 {
+            bail!("shard.fanout must be >= 2, got {}", self.fanout);
+        }
+        if !(self.link_latency >= 0.0) {
+            bail!("shard.link_latency must be >= 0, got {}", self.link_latency);
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("workers".into(), Json::Num(self.workers as f64));
+        m.insert("fanout".into(), Json::Num(self.fanout as f64));
+        m.insert("overlap".into(), Json::Bool(self.overlap));
+        m.insert("grouping".into(), Json::Str(self.grouping.token().into()));
+        m.insert("link_latency".into(), Json::Num(self.link_latency));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = ShardSpec::default();
+        Ok(ShardSpec {
+            workers: opt_usize(j, "workers", d.workers)?,
+            fanout: opt_usize(j, "fanout", d.fanout)?,
+            overlap: opt_bool(j, "overlap", d.overlap)?,
+            grouping: opt_str(j, "grouping", d.grouping.token())?.parse()?,
+            link_latency: opt_f64(j, "link_latency", d.link_latency)?,
+        })
+    }
+}
+
 // --------------------------------------------------------------- run spec
 
 /// Everything needed to execute one training run, on either backend.
@@ -636,6 +745,10 @@ pub struct RunSpec {
     pub optim: OptimSpec,
     pub data: DataSpec,
     pub pipe: PipeSpec,
+    /// `Some` selects the sharded data-parallel backend (stage-less
+    /// configs only); `None` keeps the manifest-driven single/pipeline
+    /// choice
+    pub shard: Option<ShardSpec>,
 }
 
 impl Default for RunSpec {
@@ -650,6 +763,7 @@ impl Default for RunSpec {
             optim: OptimSpec::default(),
             data: DataSpec::default(),
             pipe: PipeSpec::default(),
+            shard: None,
         }
     }
 }
@@ -686,6 +800,51 @@ impl RunSpec {
         self.optim.validate().context("invalid [optim] section")?;
         self.data.validate().context("invalid [data] section")?;
         self.pipe.validate().context("invalid [pipeline] section")?;
+        if let Some(sh) = &self.shard {
+            sh.validate().context("invalid [shard] section")?;
+            // the sharded backend always draws one global Poisson batch
+            // and derives its step count from epochs; silently ignoring
+            // the pipeline knobs that change the sampler or the schedule
+            // would hand the user a different privacy analysis than the
+            // spec reads as requesting
+            if self.pipe.sampling != Sampling::Poisson {
+                bail!(
+                    "[shard] runs always Poisson-sample (one global draw, amplified \
+                     accounting); pipeline.sampling = \"{}\" would have no effect — remove it",
+                    self.pipe.sampling.token()
+                );
+            }
+            if self.pipe.steps > 0 {
+                bail!(
+                    "[shard] runs derive their step count from epochs; pipeline.steps \
+                     is pipeline-only"
+                );
+            }
+            // an explicit E[B] must deal evenly across the workers, or the
+            // disjoint Poisson slices cannot target it
+            if self.expected_batch > 0 && self.expected_batch % sh.workers != 0 {
+                bail!(
+                    "expected_batch {} is not divisible across shard.workers {}",
+                    self.expected_batch,
+                    sh.workers
+                );
+            }
+            // explicit grouping pins must agree with the clip policy; the
+            // per-layer taxonomy cell is reachable only through `auto`
+            if self.clip.is_private() {
+                match (sh.grouping, self.clip.group_by) {
+                    (ShardGrouping::Auto, _) => {}
+                    (ShardGrouping::Flat, GroupBy::Flat) => {}
+                    (ShardGrouping::PerDevice, GroupBy::PerDevice) => {}
+                    (g, c) => bail!(
+                        "shard.grouping = {} conflicts with clip.group_by = {} \
+                         (use grouping = \"auto\" or align the two)",
+                        g.token(),
+                        c.token()
+                    ),
+                }
+            }
+        }
         Ok(())
     }
 
@@ -700,6 +859,9 @@ impl RunSpec {
         m.insert("optim".into(), self.optim.to_json());
         m.insert("data".into(), self.data.to_json());
         m.insert("pipeline".into(), self.pipe.to_json());
+        if let Some(sh) = &self.shard {
+            m.insert("shard".into(), sh.to_json());
+        }
         Json::Obj(m)
     }
 
@@ -718,6 +880,12 @@ impl RunSpec {
             optim: section(j, "optim", OptimSpec::from_json, d.optim)?,
             data: section(j, "data", DataSpec::from_json, d.data)?,
             pipe: section(j, "pipeline", PipeSpec::from_json, d.pipe)?,
+            shard: match j.opt("shard") {
+                Some(v) => {
+                    Some(ShardSpec::from_json(v).context("in [shard] section")?)
+                }
+                None => None,
+            },
         })
     }
 

@@ -1,0 +1,541 @@
+//! `ShardEngine` — N data-parallel workers, each a full model replica over
+//! a disjoint slice of one global Poisson draw, clipping per-device and
+//! noising locally before an overlapped tree-reduction merges the deltas.
+//!
+//! Execution is sequential on the host (the PJRT CPU client already uses
+//! every core per executable call), but each worker's executable call is
+//! timed and fed to [`ReduceModel`], which replays what an N-worker
+//! cluster would see: per-layer backward completion times against tree
+//! all-reduce rounds, overlapped or behind a barrier.
+//!
+//! RNG discipline (the parity contract with the single-device backend):
+//! per step the shared [`DpCore`] RNG is consumed in exactly this order —
+//! (1) one global Poisson draw, (2) per-trainable-tensor gradient noise in
+//! worker-major order, (3) the private quantile release. With one worker
+//! this is the [`Trainer`](crate::coordinator::Trainer) sequence verbatim.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::noise::add_noise;
+use crate::coordinator::optimizer::{Optimizer, OptimizerKind};
+use crate::data::Dataset;
+use crate::runtime::{ConfigManifest, Exec, HostValue, Runtime, Tensor};
+use crate::session::core::DpCore;
+
+use super::reduce::{tree_reduce, ReduceModel};
+use super::sampler::ShardSampler;
+
+/// How clipping-threshold groups map onto the worker topology (resolved
+/// from `ShardSpec.grouping` x `ClipPolicy.group_by` by the session
+/// builder).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerGrouping {
+    /// one global threshold shared by every worker (K = 1)
+    Flat,
+    /// per-layer groups shared across workers (K = layer groups)
+    PerLayer,
+    /// the paper's per-device scheme: worker k owns threshold C_k and
+    /// clips its local per-example gradients against it (K = workers)
+    PerDevice,
+}
+
+impl WorkerGrouping {
+    pub fn token(&self) -> &'static str {
+        match self {
+            WorkerGrouping::Flat => "flat",
+            WorkerGrouping::PerLayer => "per-layer",
+            WorkerGrouping::PerDevice => "per-device",
+        }
+    }
+}
+
+/// Backend wiring computed by the session builder (crate-internal: the
+/// sharded backend has no public constructor surface, unlike the retired
+/// `Trainer::new` / `PipelineEngine::new` shims).
+pub(crate) struct ShardWiring {
+    pub workers: usize,
+    pub fanout: usize,
+    pub overlap: bool,
+    pub link_latency: f64,
+    pub grouping: WorkerGrouping,
+    /// step-executable entry name, resolved by the builder from the clip
+    /// policy ("nonprivate" / "dp_flat" / "dp_ghost" / "dp_naive" /
+    /// "dp_perlayer")
+    pub entry: &'static str,
+    pub private: bool,
+    /// Poisson rate of the one global draw, q = E[B]/n
+    pub rate: f64,
+    /// global expected live batch E[B] (normalizes the merged update)
+    pub expected_batch: usize,
+    pub total_steps: u64,
+    pub n_data: usize,
+    pub optimizer: OptimizerKind,
+    pub lr: f64,
+    pub weight_decay: f64,
+    pub lr_decay: bool,
+}
+
+struct Replica {
+    params: Vec<Tensor>,
+    optimizer: Optimizer,
+}
+
+/// Per-step report of the sharded backend.
+#[derive(Debug, Clone)]
+pub struct ShardStepStats {
+    pub step: u64,
+    pub loss: f64,
+    /// live examples across all workers this step
+    pub batch_size: usize,
+    /// fraction clipped per threshold group
+    pub clip_frac: Vec<f64>,
+    /// mean per-example norm per threshold group
+    pub mean_norms: Vec<f64>,
+    /// examples the global draw included but total capacity dropped
+    pub truncated: usize,
+    /// measured host seconds for the whole step
+    pub host_secs: f64,
+    /// simulated N-worker step latency under the configured reduction
+    pub sim_secs: f64,
+    /// simulated latency with the reduction overlapped into backprop
+    pub sim_overlap_secs: f64,
+    /// simulated latency with a reduce-after-backward barrier
+    pub sim_barrier_secs: f64,
+    /// depth of the reduction tree, ceil(log_fanout(workers)) — the
+    /// rounds EACH layer's all-reduce traverses (layers pipeline through
+    /// the same tree, so this is the latency-relevant count, not the
+    /// total message count, which is ~depth x trainable tensors)
+    pub syncs: usize,
+    /// executable invocations (one per worker)
+    pub calls: usize,
+}
+
+pub struct ShardEngine<'r> {
+    pub runtime: &'r Runtime,
+    pub config_name: String,
+    pub cfg: ConfigManifest,
+    /// shared DP state: plan, thresholds, noise allocation, RNG
+    pub core: DpCore,
+    pub workers: usize,
+    pub fanout: usize,
+    pub overlap: bool,
+    pub total_steps: u64,
+    pub step_count: u64,
+    grouping: WorkerGrouping,
+    private: bool,
+    exec: Arc<Exec>,
+    eval_exec: Arc<Exec>,
+    replicas: Vec<Replica>,
+    sampler: ShardSampler,
+    expected_batch: f64,
+    trainable_idx: Vec<usize>,
+    group_of_trainable: Vec<usize>,
+    reduce_model: ReduceModel,
+}
+
+impl<'r> ShardEngine<'r> {
+    /// Crate-private constructor: all DP state arrives in `core` (K must
+    /// match the resolved grouping), all schedule/topology decisions in
+    /// `wiring`. Only `session::SessionBuilder` builds these.
+    pub(crate) fn with_core(
+        runtime: &'r Runtime,
+        config_name: &str,
+        w: ShardWiring,
+        core: DpCore,
+    ) -> Result<Self> {
+        let cfg = runtime.manifest.config(config_name)?.clone();
+        if cfg.stages.is_some() {
+            return Err(anyhow!(
+                "config {config_name} has pipeline stages; the sharded backend replicates \
+                 a stage-less model"
+            ));
+        }
+        if w.workers == 0 {
+            return Err(anyhow!("sharded backend needs workers > 0"));
+        }
+        let expect_k = match w.grouping {
+            WorkerGrouping::Flat => 1,
+            WorkerGrouping::PerLayer => cfg.groups.len().max(1),
+            WorkerGrouping::PerDevice => w.workers,
+        };
+        if w.private && core.k() != expect_k {
+            return Err(anyhow!(
+                "DpCore has {} threshold groups but {} grouping over {} workers needs {}",
+                core.k(),
+                w.grouping.token(),
+                w.workers,
+                expect_k
+            ));
+        }
+        let exec = runtime.load(config_name, w.entry)?;
+        let eval_exec = runtime.load(config_name, "eval")?;
+
+        let (trainable_idx, group_of_trainable, schedule) =
+            crate::coordinator::trainer::replica_wiring(&cfg, w.lr, w.lr_decay, w.total_steps);
+        // one checkpoint read fanned out to N bit-identical replicas; each
+        // replica carries its own optimizer state (kept identical by the
+        // merged update) to model real data-parallel redundancy
+        let replicas: Vec<Replica> = runtime
+            .init_replicas(config_name, w.workers)?
+            .into_iter()
+            .map(|params| {
+                let tr: Vec<Tensor> = trainable_idx.iter().map(|&i| params[i].clone()).collect();
+                Replica {
+                    optimizer: Optimizer::new(w.optimizer, schedule, w.weight_decay, &tr),
+                    params,
+                }
+            })
+            .collect();
+
+        Ok(ShardEngine {
+            runtime,
+            config_name: config_name.to_string(),
+            core,
+            workers: w.workers,
+            fanout: w.fanout,
+            overlap: w.overlap,
+            total_steps: w.total_steps,
+            step_count: 0,
+            grouping: w.grouping,
+            private: w.private,
+            exec,
+            eval_exec,
+            replicas,
+            sampler: ShardSampler::new(w.n_data, w.rate, w.workers, cfg.batch),
+            expected_batch: w.expected_batch as f64,
+            trainable_idx,
+            group_of_trainable,
+            reduce_model: ReduceModel::new(w.workers, w.fanout, w.link_latency),
+            cfg,
+        })
+    }
+
+    pub fn grouping(&self) -> WorkerGrouping {
+        self.grouping
+    }
+
+    /// Global static capacity: workers x the per-worker compiled batch.
+    pub fn capacity(&self) -> usize {
+        self.workers * self.cfg.batch
+    }
+
+    /// Current per-group clipping thresholds (one per worker for
+    /// per-device grouping).
+    pub fn thresholds(&self) -> &[f64] {
+        self.core.thresholds()
+    }
+
+    /// Threshold-group labels matching [`ShardEngine::thresholds`].
+    pub fn group_labels(&self) -> Vec<String> {
+        match self.grouping {
+            WorkerGrouping::Flat => vec!["flat".to_string()],
+            WorkerGrouping::PerLayer => self.cfg.groups.clone(),
+            WorkerGrouping::PerDevice => {
+                (0..self.workers).map(|w| format!("worker{w}")).collect()
+            }
+        }
+    }
+
+    /// Worker-0's full-model parameters in manifest order (all replicas
+    /// stay bit-identical; see [`ShardEngine::replicas_in_sync`]).
+    pub fn params(&self) -> &[Tensor] {
+        &self.replicas[0].params
+    }
+
+    /// Broadcast a full parameter set to every replica (checkpoint
+    /// fan-out).
+    pub fn set_params_all(&mut self, params: Vec<Tensor>) -> Result<()> {
+        if params.len() != self.cfg.params.len() {
+            return Err(anyhow!("param count mismatch"));
+        }
+        for r in self.replicas.iter_mut() {
+            r.params = params.clone();
+        }
+        Ok(())
+    }
+
+    /// Load parameters by name; names absent from the map keep their init
+    /// values. The result is fanned out to every replica.
+    pub fn load_param_map(
+        &mut self,
+        map: &std::collections::HashMap<String, Tensor>,
+    ) -> Result<()> {
+        let mut params = self.replicas[0].params.clone();
+        for (i, p) in self.cfg.params.iter().enumerate() {
+            if let Some(v) = map.get(&p.name) {
+                if v.shape != p.shape {
+                    return Err(anyhow!("shape mismatch for {}", p.name));
+                }
+                params[i] = v.clone();
+            }
+        }
+        self.set_params_all(params)
+    }
+
+    /// True when every replica's parameters are bitwise equal to
+    /// worker 0's — the invariant the merged update maintains.
+    pub fn replicas_in_sync(&self) -> bool {
+        let r0 = &self.replicas[0].params;
+        self.replicas.iter().skip(1).all(|r| {
+            r.params
+                .iter()
+                .zip(r0)
+                .all(|(a, b)| a.shape == b.shape && a.data == b.data)
+        })
+    }
+
+    /// Topology line for `Session::describe` / the CLI: worker count,
+    /// reduction fanout, overlap flag and the per-group thresholds.
+    pub fn describe_topology(&self) -> String {
+        let c: Vec<String> =
+            self.core.thresholds().iter().map(|c| format!("{c:.4}")).collect();
+        format!(
+            "workers={} fanout={} reduction={} grouping={} thresholds=[{}]",
+            self.workers,
+            self.fanout,
+            if self.overlap { "overlapped" } else { "barrier" },
+            self.grouping.token(),
+            c.join(", ")
+        )
+    }
+
+    /// Threshold worker `w` clips against.
+    fn worker_threshold(&self, w: usize) -> f64 {
+        match self.grouping {
+            WorkerGrouping::PerDevice => self.core.thresholds()[w],
+            _ => self.core.thresholds()[0],
+        }
+    }
+
+    /// One sharded DP step: global Poisson draw -> per-worker fused
+    /// backprop+clip -> local noise shares -> tree-reduction -> one merged
+    /// update broadcast to every replica -> private quantile release.
+    pub fn step(&mut self, data: &dyn Dataset) -> Result<ShardStepStats> {
+        let host_t0 = Instant::now();
+        let batch = self.sampler.sample(&mut self.core.rng);
+        let live_global = batch.live;
+        let k = self.core.k();
+        let n_tr = self.trainable_idx.len();
+        let noise_share = 1.0 / (self.workers as f64).sqrt();
+        let stds = if self.private { self.core.noise_stds() } else { vec![0.0; k] };
+
+        let mut clip_counts = vec![0f64; k];
+        let mut mean_norms = vec![0f64; k];
+        let mut worker_lives = vec![0usize; self.workers];
+        let mut worker_grads: Vec<Vec<Tensor>> = Vec::with_capacity(self.workers);
+        let mut loss_wsum = 0f64;
+        let mut loss_plain = 0f64;
+        let mut bwd_secs = vec![0f64; self.workers];
+
+        for w in 0..self.workers {
+            let slice = &batch.slices[w];
+            let live_w = slice.live();
+            worker_lives[w] = live_w;
+            let mb = data.batch(&slice.indices);
+            let (x, y) = mb.inputs();
+            let extras: Vec<HostValue> = if !self.private {
+                vec![x, y]
+            } else if self.grouping == WorkerGrouping::PerLayer {
+                vec![
+                    x,
+                    y,
+                    HostValue::F32(Tensor::from_vec(
+                        &[k],
+                        self.core.thresholds().iter().map(|&c| c as f32).collect(),
+                    )?),
+                    HostValue::F32(Tensor::from_vec(
+                        &[slice.weights.len()],
+                        slice.weights.clone(),
+                    )?),
+                ]
+            } else {
+                vec![
+                    x,
+                    y,
+                    HostValue::F32(Tensor::scalar(self.worker_threshold(w) as f32)),
+                    HostValue::F32(Tensor::from_vec(
+                        &[slice.weights.len()],
+                        slice.weights.clone(),
+                    )?),
+                ]
+            };
+            let t0 = Instant::now();
+            let outs = self.exec.call(&self.replicas[w].params, &extras)?;
+            bwd_secs[w] = t0.elapsed().as_secs_f64();
+            let loss_w = outs[0].data[0] as f64;
+            // private entries report a weighted mean over this worker's
+            // live examples; recover the global mean via the live counts.
+            // A worker whose slice drew empty reports a 0/0 loss — skip it.
+            if live_w > 0 {
+                loss_wsum += loss_w * live_w as f64;
+            }
+            loss_plain += loss_w;
+
+            let mut grads: Vec<Tensor> = outs[1..1 + n_tr].to_vec();
+            if !self.private && self.workers > 1 {
+                // the nonprivate entry has no weight mask and emits a mean
+                // over its full static batch; weight each worker's mean by
+                // its live count so a sparsely-drawn (or empty) slice —
+                // whose mean is dominated by index-0 pad slots, as on the
+                // single-device backend — doesn't get an equal 1/N share
+                // of the merged update
+                let scale = live_w as f32;
+                for t in grads.iter_mut() {
+                    for v in t.data.iter_mut() {
+                        *v *= scale;
+                    }
+                }
+            }
+            if self.private {
+                // norms output: [B,K] for per-layer, [B] otherwise
+                let norms = &outs[1 + n_tr];
+                let k_exec = if self.grouping == WorkerGrouping::PerLayer { k } else { 1 };
+                for i in 0..slice.weights.len() {
+                    if slice.weights[i] == 0.0 {
+                        continue;
+                    }
+                    for g in 0..k_exec {
+                        let target = match self.grouping {
+                            WorkerGrouping::PerLayer => g,
+                            WorkerGrouping::Flat => 0,
+                            WorkerGrouping::PerDevice => w,
+                        };
+                        let v = norms.data[i * k_exec + g] as f64;
+                        mean_norms[target] += v;
+                        if v <= self.core.thresholds()[target] {
+                            clip_counts[target] += 1.0;
+                        }
+                    }
+                }
+                // local noise share: std_g / sqrt(N) per worker, so the
+                // merged sum carries exactly the accountant's std_g
+                // (variances add across the N independent shares)
+                for (t, &g) in grads.iter_mut().zip(&self.group_of_trainable) {
+                    let gi = match self.grouping {
+                        WorkerGrouping::PerLayer => g,
+                        WorkerGrouping::Flat => 0,
+                        WorkerGrouping::PerDevice => w,
+                    };
+                    add_noise(&mut t.data, stds[gi] * noise_share, &mut self.core.rng);
+                }
+            }
+            worker_grads.push(grads);
+        }
+
+        // normalize the mean-norm diagnostics by the examples that fed
+        // each group (per-device groups see only their worker's slice)
+        match self.grouping {
+            WorkerGrouping::PerDevice => {
+                for (g, m) in mean_norms.iter_mut().enumerate() {
+                    *m /= worker_lives[g].max(1) as f64;
+                }
+            }
+            _ => {
+                for m in mean_norms.iter_mut() {
+                    *m /= live_global.max(1) as f64;
+                }
+            }
+        }
+
+        // -------- overlapped tree-reduction of the worker deltas ---------
+        let mut merged = tree_reduce(worker_grads, self.fanout);
+        if self.private {
+            // Algorithm 1 line 14: normalize the merged sum by E[B]
+            let inv = (1.0 / self.expected_batch) as f32;
+            for t in merged.iter_mut() {
+                for v in t.data.iter_mut() {
+                    *v *= inv;
+                }
+            }
+        } else if self.workers > 1 {
+            // complete the live-weighted mean of the per-worker means
+            // (the 1-worker case needs no rescale at all — the worker's
+            // mean IS the global mean, kept bitwise untouched for parity)
+            let inv = 1.0 / (live_global.max(1) as f32);
+            for t in merged.iter_mut() {
+                for v in t.data.iter_mut() {
+                    *v *= inv;
+                }
+            }
+        }
+
+        // one merged update applied to every replica (identical optimizer
+        // states + identical grads keep the replicas bit-identical)
+        for r in self.replicas.iter_mut() {
+            r.optimizer.apply_indexed(&mut r.params, &self.trainable_idx, &merged);
+        }
+
+        // private quantile release over all threshold groups at once
+        if self.private && self.core.is_adaptive() {
+            self.core.update_thresholds(&clip_counts);
+        }
+
+        // -------- simulated N-worker latency (overlap vs barrier) --------
+        // A real cluster runs the replicas concurrently, so the modeled
+        // compute time is one representative worker (host measurements are
+        // near-identical across replicas); its backward is split across
+        // trainable tensors proportional to size, reductions queue behind
+        // it in backprop (reverse) order.
+        let rep_bwd = bwd_secs.iter().sum::<f64>() / self.workers as f64;
+        let total_dim: f64 = self
+            .trainable_idx
+            .iter()
+            .map(|&i| self.cfg.params[i].size as f64)
+            .sum::<f64>()
+            .max(1.0);
+        let mut bwd_layers = Vec::with_capacity(n_tr);
+        let mut red_layers = Vec::with_capacity(n_tr);
+        for &i in self.trainable_idx.iter().rev() {
+            let d = self.cfg.params[i].size as f64;
+            bwd_layers.push(rep_bwd * d / total_dim);
+            red_layers.push(self.reduce_model.layer_cost(4.0 * d));
+        }
+        let sim_overlap = self.reduce_model.overlap_makespan(&bwd_layers, &red_layers);
+        let sim_barrier = self.reduce_model.barrier_makespan(&bwd_layers, &red_layers);
+
+        self.step_count += 1;
+        let clip_frac: Vec<f64> = match self.grouping {
+            WorkerGrouping::PerDevice => clip_counts
+                .iter()
+                .enumerate()
+                .map(|(w, &c)| 1.0 - c / (worker_lives[w].max(1) as f64))
+                .collect(),
+            _ => clip_counts
+                .iter()
+                .map(|&c| 1.0 - c / (live_global.max(1) as f64))
+                .collect(),
+        };
+        let loss = if self.private {
+            loss_wsum / (live_global.max(1) as f64)
+        } else {
+            loss_plain / self.workers as f64
+        };
+        Ok(ShardStepStats {
+            step: self.step_count,
+            loss,
+            batch_size: live_global,
+            clip_frac,
+            mean_norms,
+            truncated: batch.truncated,
+            host_secs: host_t0.elapsed().as_secs_f64(),
+            sim_secs: if self.overlap { sim_overlap } else { sim_barrier },
+            sim_overlap_secs: sim_overlap,
+            sim_barrier_secs: sim_barrier,
+            syncs: self.reduce_model.rounds(),
+            calls: self.workers,
+        })
+    }
+
+    /// Full-dataset evaluation on worker 0's replica: (mean loss, acc).
+    pub fn evaluate(&self, data: &dyn Dataset) -> Result<(f64, f64)> {
+        crate::coordinator::trainer::evaluate_full(
+            &self.eval_exec,
+            &self.replicas[0].params,
+            self.cfg.batch,
+            data,
+        )
+    }
+}

@@ -1,0 +1,44 @@
+//! Sharded data-parallel DP training backend — the paper's per-device
+//! clipping scheme instantiated over N model *replicas* instead of N
+//! pipeline stages.
+//!
+//! Each simulated worker owns a full copy of the model and a **disjoint
+//! slice of one global Poisson draw**: the session samples once at rate
+//! `q = E[B]/n`, deals the live examples round-robin across workers, and
+//! pads every slice to the compiled static batch. Worker `w` then
+//!
+//! 1. runs the same fused backprop+clip executable as the single-device
+//!    backend on its slice, clipping each local per-example gradient
+//!    against its threshold group (worker-owned `C_w` for per-device
+//!    grouping, shared `C` / per-layer `C_g` otherwise),
+//! 2. adds its **share** of the Gaussian noise locally — std
+//!    `sigma_g / sqrt(N)` per group, so the merged sum carries exactly the
+//!    noise the accountant calibrated (variances add across workers),
+//! 3. feeds its summed gradient into an **overlapped tree-reduction**:
+//!    layer L's reduction rounds proceed while layer L-1 is still
+//!    back-propagating (the paper's clip-in-conjunction-with-backprop
+//!    overlap, transplanted to the all-reduce), modeled by
+//!    [`reduce::ReduceModel`] next to a barrier baseline.
+//!
+//! Because every example lands on exactly one worker and worker `w` clips
+//! it to `C_w`, one example moves the merged update by at most `C_w <=
+//! sqrt(sum_k C_k^2)` — the per-device bound summed in quadrature across
+//! threshold groups (see `docs/SESSION_API.md`). The shared [`DpCore`]
+//! therefore sees **one release per step at `q = E[B]/n`**, independent of
+//! the worker count, and a 1-worker sharded run is seed-for-seed identical
+//! to the single-device backend (same RNG discipline: one Poisson draw,
+//! then per-tensor noise, then the quantile release).
+//!
+//! Construction goes through `session::SessionBuilder` only (add a
+//! `[shard]` section to the spec, or `.shard(ShardSpec::..)`); there is no
+//! raw-sigma entry point.
+//!
+//! [`DpCore`]: crate::session::DpCore
+
+pub mod engine;
+pub mod reduce;
+pub mod sampler;
+
+pub use engine::{ShardEngine, ShardStepStats, WorkerGrouping};
+pub use reduce::{quadrature_bound, tree_reduce, tree_rounds, ReduceModel};
+pub use sampler::{ShardBatch, ShardSampler, WorkerSlice};

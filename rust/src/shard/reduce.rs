@@ -1,0 +1,212 @@
+//! Tree-reduction of worker gradient deltas + the overlapped-vs-barrier
+//! latency model.
+//!
+//! The numeric merge is a fanout-f tree: deterministic grouping of
+//! consecutive participants per round, so results are reproducible for a
+//! given worker count and fanout (and the 1-worker tree is the identity).
+//!
+//! The latency model mirrors `pipeline::schedule`: we execute workers
+//! sequentially on the host (the PJRT CPU client already saturates the
+//! cores) but replay the dependency structure a real N-worker cluster
+//! would see. Backward produces layer gradients in reverse layer order;
+//! each layer's all-reduce needs `rounds = ceil(log_fanout N)` tree rounds
+//! of `link_latency + bytes/bandwidth` each. **Overlapped** reduction
+//! starts a layer's rounds the moment its gradient is ready, while earlier
+//! layers are still back-propagating — the paper's
+//! clip-in-conjunction-with-backprop overlap applied to communication.
+//! **Barrier** reduction waits for the whole backward pass, then reduces
+//! every layer — the naive data-parallel baseline.
+
+use crate::runtime::Tensor;
+
+/// Rounds a fanout-`f` reduction tree needs over `workers` participants.
+/// One worker needs none; fanout is clamped to >= 2.
+pub fn tree_rounds(workers: usize, fanout: usize) -> usize {
+    let f = fanout.max(2);
+    let mut rounds = 0usize;
+    let mut n = workers.max(1);
+    while n > 1 {
+        n = n.div_ceil(f);
+        rounds += 1;
+    }
+    rounds
+}
+
+/// The quadrature sensitivity bound for per-device threshold groups: one
+/// example lives on exactly one worker and is clipped to that worker's
+/// C_k, so its influence on the merged update is at most
+/// `max_k C_k <= sqrt(sum_k C_k^2)` — the bound the noise is calibrated
+/// against (docs/SESSION_API.md, "Sharded backend").
+pub fn quadrature_bound(thresholds: &[f64]) -> f64 {
+    thresholds.iter().map(|c| c * c).sum::<f64>().sqrt()
+}
+
+/// Merge per-worker gradient sets with a fanout-`f` tree: each round sums
+/// groups of `f` consecutive participants into the group's first slot.
+/// A single participant passes through untouched (bitwise), which the
+/// 1-worker parity test relies on.
+pub fn tree_reduce(mut parts: Vec<Vec<Tensor>>, fanout: usize) -> Vec<Tensor> {
+    assert!(!parts.is_empty());
+    let f = fanout.max(2);
+    while parts.len() > 1 {
+        let mut next: Vec<Vec<Tensor>> = Vec::with_capacity(parts.len().div_ceil(f));
+        let mut it = parts.into_iter();
+        loop {
+            let Some(mut acc) = it.next() else { break };
+            for _ in 1..f {
+                let Some(other) = it.next() else { break };
+                for (a, o) in acc.iter_mut().zip(&other) {
+                    for (av, ov) in a.data.iter_mut().zip(&o.data) {
+                        *av += *ov;
+                    }
+                }
+            }
+            next.push(acc);
+        }
+        parts = next;
+    }
+    parts.pop().unwrap()
+}
+
+/// Latency model of the reduction phase.
+#[derive(Debug, Clone, Copy)]
+pub struct ReduceModel {
+    pub workers: usize,
+    pub fanout: usize,
+    /// per-round link latency (alpha term), seconds
+    pub link_latency: f64,
+    /// modeled interconnect bandwidth (beta term), bytes/second
+    pub bytes_per_sec: f64,
+}
+
+impl ReduceModel {
+    pub fn new(workers: usize, fanout: usize, link_latency: f64) -> Self {
+        // 16 GB/s: a deliberately modest PCIe-class figure so the bytes
+        // term is visible next to the latency term even on small models
+        ReduceModel { workers, fanout, link_latency, bytes_per_sec: 16e9 }
+    }
+
+    pub fn rounds(&self) -> usize {
+        tree_rounds(self.workers, self.fanout)
+    }
+
+    /// Wall time to all-reduce one layer of `bytes` gradient bytes.
+    pub fn layer_cost(&self, bytes: f64) -> f64 {
+        self.rounds() as f64 * (self.link_latency + bytes / self.bytes_per_sec)
+    }
+
+    /// Makespan with the reduction overlapped into backprop: layer `l`'s
+    /// rounds start as soon as its gradient is ready (layers arrive in
+    /// backprop order), sharing one FIFO network resource.
+    pub fn overlap_makespan(&self, bwd: &[f64], red: &[f64]) -> f64 {
+        assert_eq!(bwd.len(), red.len());
+        let mut compute_t = 0.0f64;
+        let mut net_free = 0.0f64;
+        for (b, r) in bwd.iter().zip(red) {
+            compute_t += b;
+            net_free = net_free.max(compute_t) + r;
+        }
+        net_free.max(compute_t)
+    }
+
+    /// Makespan with a barrier: the whole backward pass, then every
+    /// layer's reduction back-to-back.
+    pub fn barrier_makespan(&self, bwd: &[f64], red: &[f64]) -> f64 {
+        assert_eq!(bwd.len(), red.len());
+        bwd.iter().sum::<f64>() + red.iter().sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounds_match_log_fanout() {
+        assert_eq!(tree_rounds(1, 2), 0);
+        assert_eq!(tree_rounds(2, 2), 1);
+        assert_eq!(tree_rounds(4, 2), 2);
+        assert_eq!(tree_rounds(8, 2), 3);
+        assert_eq!(tree_rounds(5, 2), 3);
+        assert_eq!(tree_rounds(8, 4), 2);
+        assert_eq!(tree_rounds(16, 4), 2);
+        assert_eq!(tree_rounds(17, 4), 3);
+    }
+
+    #[test]
+    fn tree_reduce_matches_flat_sum() {
+        let mk = |seed: u64| {
+            let mut v = Vec::new();
+            let mut x = seed;
+            for len in [5usize, 3] {
+                let data: Vec<f32> = (0..len)
+                    .map(|_| {
+                        x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                        ((x >> 33) as f32 / 2e9) - 1.0
+                    })
+                    .collect();
+                v.push(Tensor::from_vec(&[len], data).unwrap());
+            }
+            v
+        };
+        for workers in [1usize, 2, 3, 4, 7, 8] {
+            for fanout in [2usize, 3, 4] {
+                let parts: Vec<Vec<Tensor>> = (0..workers).map(|w| mk(w as u64 + 1)).collect();
+                let flat: Vec<Vec<f64>> = (0..2)
+                    .map(|t| {
+                        (0..parts[0][t].data.len())
+                            .map(|i| parts.iter().map(|p| p[t].data[i] as f64).sum())
+                            .collect()
+                    })
+                    .collect();
+                let merged = tree_reduce(parts, fanout);
+                for (t, m) in merged.iter().enumerate() {
+                    for (i, &v) in m.data.iter().enumerate() {
+                        assert!(
+                            (v as f64 - flat[t][i]).abs() < 1e-4,
+                            "workers={workers} fanout={fanout} t={t} i={i}: {v} vs {}",
+                            flat[t][i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_participant_is_bitwise_identity() {
+        let t = Tensor::from_vec(&[3], vec![0.1, -0.2, 0.3]).unwrap();
+        let merged = tree_reduce(vec![vec![t.clone()]], 2);
+        assert_eq!(merged[0].data, t.data);
+    }
+
+    #[test]
+    fn overlap_beats_barrier_with_multiple_layers() {
+        for workers in [2usize, 4, 8] {
+            let m = ReduceModel::new(workers, 2, 1e-3);
+            let bwd = [0.004, 0.003, 0.005, 0.002];
+            let red: Vec<f64> = [4096.0, 1024.0, 8192.0, 512.0]
+                .iter()
+                .map(|&b| m.layer_cost(b))
+                .collect();
+            let o = m.overlap_makespan(&bwd, &red);
+            let b = m.barrier_makespan(&bwd, &red);
+            assert!(o < b, "workers={workers}: overlap {o} !< barrier {b}");
+            // and never better than either critical path alone
+            assert!(o >= bwd.iter().sum::<f64>());
+            assert!(o >= red.iter().sum::<f64>());
+        }
+    }
+
+    #[test]
+    fn one_worker_reduction_is_free() {
+        let m = ReduceModel::new(1, 2, 1e-3);
+        assert_eq!(m.rounds(), 0);
+        let bwd = [0.01, 0.02];
+        let red = [m.layer_cost(1e6), m.layer_cost(2e6)];
+        assert_eq!(red, [0.0, 0.0]);
+        let total: f64 = bwd.iter().sum();
+        assert!((m.overlap_makespan(&bwd, &red) - total).abs() < 1e-15);
+        assert!((m.barrier_makespan(&bwd, &red) - total).abs() < 1e-15);
+    }
+}

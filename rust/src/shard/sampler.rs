@@ -1,0 +1,168 @@
+//! Global-Poisson-draw sharding: one subsampled batch per step, dealt into
+//! disjoint per-worker slices.
+//!
+//! DP accounting sees the *union* of the slices — a single Poisson release
+//! at rate `q = E[B]/n` — so the draw must happen once, globally, before
+//! any worker-local decision. Dealing is round-robin over the live draw
+//! order; each slice is padded to the worker's static batch with index-0,
+//! weight-0 slots exactly like [`PoissonSampler::sample_padded`], so the
+//! compiled executables consume slices directly.
+//!
+//! With one worker this degenerates — by construction, not by accident —
+//! to the single-device sampler: the inner [`PoissonSampler`] has the same
+//! capacity and consumes the shared RNG identically, which is what makes
+//! the 1-worker sharded backend seed-for-seed equal to the single-device
+//! backend.
+
+use crate::coordinator::noise::Rng;
+use crate::coordinator::sampler::PoissonSampler;
+
+/// One worker's view of a step: fixed-capacity padded indices + 0/1 mask.
+#[derive(Debug, Clone)]
+pub struct WorkerSlice {
+    /// dataset indices, length == the worker's static batch (padded with 0)
+    pub indices: Vec<usize>,
+    /// 1.0 for live examples, 0.0 for padding; live slots form a prefix
+    pub weights: Vec<f32>,
+}
+
+impl WorkerSlice {
+    /// Number of live (weight 1) examples on this worker.
+    pub fn live(&self) -> usize {
+        self.weights.iter().filter(|&&w| w > 0.0).count()
+    }
+}
+
+/// A dealt global Poisson draw.
+#[derive(Debug, Clone)]
+pub struct ShardBatch {
+    /// one slice per worker, each padded to the per-worker capacity
+    pub slices: Vec<WorkerSlice>,
+    /// total live examples across all workers
+    pub live: usize,
+    /// examples the global draw included but total capacity dropped
+    pub truncated: usize,
+}
+
+/// Poisson subsampler over `n` examples, dealt across `workers` slices of
+/// `per_worker` capacity each.
+pub struct ShardSampler {
+    inner: PoissonSampler,
+    pub workers: usize,
+    pub per_worker: usize,
+}
+
+impl ShardSampler {
+    pub fn new(n: usize, rate: f64, workers: usize, per_worker: usize) -> Self {
+        assert!(workers > 0 && per_worker > 0);
+        ShardSampler {
+            inner: PoissonSampler::new(n, rate, workers * per_worker),
+            workers,
+            per_worker,
+        }
+    }
+
+    /// Draw one global Poisson batch and deal it round-robin: live example
+    /// `j` lands on worker `j % workers`. Round-robin can never overflow a
+    /// slice (`live <= workers * per_worker` implies `ceil(live/workers)
+    /// <= per_worker`), so per-worker capacity binds only through the
+    /// global truncation already recorded by the inner sampler.
+    pub fn sample(&self, rng: &mut Rng) -> ShardBatch {
+        let base = self.inner.sample(rng);
+        let live = base.indices.len();
+        let mut slices: Vec<WorkerSlice> = (0..self.workers)
+            .map(|_| WorkerSlice {
+                indices: Vec::with_capacity(self.per_worker),
+                weights: Vec::with_capacity(self.per_worker),
+            })
+            .collect();
+        for (j, &idx) in base.indices.iter().enumerate() {
+            let s = &mut slices[j % self.workers];
+            s.indices.push(idx);
+            s.weights.push(1.0);
+        }
+        for s in slices.iter_mut() {
+            debug_assert!(s.indices.len() <= self.per_worker);
+            s.indices.resize(self.per_worker, 0);
+            s.weights.resize(self.per_worker, 0.0);
+        }
+        ShardBatch { slices, live, truncated: base.truncated }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_worker_matches_single_device_sampler_seed_for_seed() {
+        // same (n, rate, capacity): the dealt slice must be byte-identical
+        // to sample_padded AND leave the RNG in the same state
+        let (n, rate, cap) = (500usize, 0.06, 64usize);
+        let mut r1 = Rng::seeded(42);
+        let mut r2 = Rng::seeded(42);
+        let shard = ShardSampler::new(n, rate, 1, cap);
+        let single = PoissonSampler::new(n, rate, cap);
+        for _ in 0..50 {
+            let a = shard.sample(&mut r1);
+            let b = single.sample_padded(&mut r2);
+            assert_eq!(a.slices[0].indices, b.indices);
+            assert_eq!(a.slices[0].weights, b.weights);
+            assert_eq!(a.truncated, b.truncated);
+            assert_eq!(a.live, b.live());
+        }
+        // RNG streams still aligned after many draws
+        assert_eq!(r1.uniform(), r2.uniform());
+    }
+
+    #[test]
+    fn deal_is_disjoint_and_complete() {
+        let s = ShardSampler::new(1000, 0.2, 4, 64);
+        let mut rng = Rng::seeded(7);
+        for _ in 0..20 {
+            let b = s.sample(&mut rng);
+            let mut seen = std::collections::HashSet::new();
+            let mut total_live = 0usize;
+            for slice in &b.slices {
+                assert_eq!(slice.indices.len(), 64);
+                assert_eq!(slice.weights.len(), 64);
+                let live = slice.live();
+                total_live += live;
+                for (i, &w) in slice.weights.iter().enumerate() {
+                    // live prefix, padded suffix
+                    assert_eq!(w > 0.0, i < live);
+                    if w > 0.0 {
+                        assert!(seen.insert(slice.indices[i]), "example dealt twice");
+                    } else {
+                        assert_eq!(slice.indices[i], 0);
+                    }
+                }
+            }
+            assert_eq!(total_live, b.live);
+        }
+    }
+
+    #[test]
+    fn deal_balances_within_one() {
+        let s = ShardSampler::new(2000, 0.1, 4, 64);
+        let mut rng = Rng::seeded(9);
+        let b = s.sample(&mut rng);
+        let lives: Vec<usize> = b.slices.iter().map(|s| s.live()).collect();
+        let (min, max) = (lives.iter().min().unwrap(), lives.iter().max().unwrap());
+        assert!(max - min <= 1, "round-robin deal must balance: {lives:?}");
+    }
+
+    #[test]
+    fn truncation_fills_every_slice() {
+        // rate 1 over n >> capacity: every slice must be exactly full and
+        // the overflow recorded once, globally
+        let s = ShardSampler::new(100, 1.0, 2, 10);
+        let mut rng = Rng::seeded(3);
+        let b = s.sample(&mut rng);
+        assert_eq!(b.truncated, 80);
+        assert_eq!(b.live, 20);
+        for slice in &b.slices {
+            assert_eq!(slice.live(), 10);
+        }
+    }
+}

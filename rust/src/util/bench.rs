@@ -1,7 +1,13 @@
 //! Micro-bench harness (criterion is unavailable offline): warmup +
-//! timed iterations with mean/std/min reporting.
+//! timed iterations with mean/std/min reporting, plus a machine-readable
+//! `BENCH_<name>.json` emitter so the repo accumulates a perf trajectory
+//! across commits (every `cargo bench` run overwrites its file; diff them
+//! in review).
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -23,6 +29,68 @@ impl BenchResult {
             self.iters
         )
     }
+
+    /// A labeled scalar (e.g. a simulated makespan) coerced into the
+    /// result shape so it rides along in the same JSON trajectory file.
+    pub fn scalar(name: &str, value_s: f64) -> Self {
+        BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            mean_s: value_s,
+            std_s: 0.0,
+            min_s: value_s,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("iters".into(), Json::Num(self.iters as f64));
+        m.insert("mean_s".into(), Json::Num(self.mean_s));
+        m.insert("std_s".into(), Json::Num(self.std_s));
+        m.insert("min_s".into(), Json::Num(self.min_s));
+        Json::Obj(m)
+    }
+}
+
+/// Resolve where `BENCH_<suite>.json` files land: `$GWCLIP_BENCH_DIR`, or
+/// the repository root (one directory above the crate), falling back to
+/// the current directory.
+pub fn bench_json_path(suite: &str) -> PathBuf {
+    let file = format!("BENCH_{suite}.json");
+    if let Ok(dir) = std::env::var("GWCLIP_BENCH_DIR") {
+        return Path::new(&dir).join(file);
+    }
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    if repo_root.is_dir() {
+        repo_root.join(file)
+    } else {
+        PathBuf::from(file)
+    }
+}
+
+/// Write a suite's results as `BENCH_<suite>.json` at the default
+/// location (see [`bench_json_path`]). Returns the path written so the
+/// bench can print it.
+pub fn write_json(suite: &str, results: &[BenchResult]) -> std::io::Result<PathBuf> {
+    write_json_to(bench_json_path(suite), suite, results)
+}
+
+/// Write a suite's results to an explicit path (units: seconds).
+pub fn write_json_to(
+    path: impl AsRef<Path>,
+    suite: &str,
+    results: &[BenchResult],
+) -> std::io::Result<PathBuf> {
+    let mut top = std::collections::BTreeMap::new();
+    top.insert("suite".to_string(), Json::Str(suite.to_string()));
+    top.insert("unit".to_string(), Json::Str("seconds".to_string()));
+    top.insert(
+        "results".to_string(),
+        Json::Arr(results.iter().map(|r| r.to_json()).collect()),
+    );
+    std::fs::write(&path, Json::Obj(top).render())?;
+    Ok(path.as_ref().to_path_buf())
 }
 
 /// Run `f` for `warmup` + `iters` iterations and time each.
@@ -44,6 +112,30 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
+    #[test]
+    fn json_output_parses_back() {
+        let dir = std::env::temp_dir().join(format!("gw_bench_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let rows = vec![
+            BenchResult { name: "a/b".into(), iters: 4, mean_s: 0.5, std_s: 0.1, min_s: 0.4 },
+            BenchResult::scalar("sim/overlap", 0.25),
+        ];
+        // explicit path: no process-global env mutation in tests
+        let path = write_json_to(dir.join("BENCH_testsuite.json"), "testsuite", &rows).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(j.get("suite").unwrap().str().unwrap(), "testsuite");
+        assert_eq!(j.get("unit").unwrap().str().unwrap(), "seconds");
+        let rs = j.get("results").unwrap().arr().unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].get("name").unwrap().str().unwrap(), "a/b");
+        assert_eq!(rs[0].get("mean_s").unwrap().f64().unwrap(), 0.5);
+        assert_eq!(rs[1].get("iters").unwrap().usize().unwrap(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
     #[test]
     fn bench_times_something() {
         let r = super::bench("spin", 1, 5, || {

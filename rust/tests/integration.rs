@@ -1,17 +1,23 @@
 //! Integration tests over the real AOT artifacts (tiny configs): load,
-//! execute, train, checkpoint, pipeline. Requires `make artifacts`.
+//! execute, train, checkpoint, pipeline, sharded data-parallel. Requires
+//! `make artifacts`.
 //!
 //! These run the FULL stack — PJRT compilation of HLO lowered from the
 //! manual-backprop JAX models whose clip path is the Pallas kernels
-//! (tiny configs use use_pallas=True).
+//! (tiny configs use use_pallas=True). Every session is built through the
+//! `gwclip::session` API — the retired `Trainer::new` /
+//! `PipelineEngine::new` shims no longer exist.
 
 use gwclip::coordinator::accountant;
-use gwclip::coordinator::{Method, TrainOpts, Trainer};
+use gwclip::coordinator::trainer::Method;
 use gwclip::data::classif::MixtureImages;
 use gwclip::data::lm::MarkovCorpus;
 use gwclip::data::Dataset;
-use gwclip::pipeline::{PipelineEngine, PipelineMode, PipelineOpts};
 use gwclip::runtime::{HostValue, Runtime, Tensor};
+use gwclip::session::{
+    ClipMode, ClipPolicy, GroupBy, OptimSpec, PrivacySpec, RunSpec, Sampling, Session,
+    SessionBuilder, ShardSpec,
+};
 
 // The xla PJRT client is !Send/!Sync, so a shared static is impossible;
 // each test leaks one Runtime instead (cheap: tiny configs, process exits
@@ -39,8 +45,8 @@ fn manifest_lists_tiny_configs() {
 #[test]
 fn eval_counts_weights_correctly() {
     let data = tiny_mixture(20, 3);
-    let tr = Trainer::new(rt(), "resmlp_tiny", 20, TrainOpts::default()).unwrap();
-    let (loss, acc) = tr.evaluate(&data).unwrap();
+    let sess = Session::builder(rt(), "resmlp_tiny").build(20).unwrap();
+    let (loss, acc) = sess.evaluate(&data).unwrap();
     assert!(loss.is_finite() && loss > 0.0);
     assert!((0.0..=1.0).contains(&acc));
 }
@@ -48,16 +54,15 @@ fn eval_counts_weights_correctly() {
 #[test]
 fn nonprivate_training_learns_tiny_task() {
     let data = tiny_mixture(256, 1);
-    let opts = TrainOpts {
-        method: Method::NonPrivate,
-        epochs: 6.0,
-        lr: 0.1,
-        ..Default::default()
-    };
-    let mut tr = Trainer::new(rt(), "resmlp_tiny", data.len(), opts).unwrap();
-    let (loss0, _) = tr.evaluate(&data).unwrap();
-    tr.run(&data, 0).unwrap();
-    let (loss1, acc) = tr.evaluate(&data).unwrap();
+    let mut sess = Session::builder(rt(), "resmlp_tiny")
+        .clip(ClipPolicy::non_private())
+        .optim(OptimSpec::sgd(0.1))
+        .epochs(6.0)
+        .build(data.len())
+        .unwrap();
+    let (loss0, _) = sess.evaluate(&data).unwrap();
+    sess.run(&data, 0).unwrap();
+    let (loss1, acc) = sess.evaluate(&data).unwrap();
     assert!(loss1 < 0.6 * loss0, "loss {loss0} -> {loss1} did not improve");
     assert!(acc > 0.5, "train acc {acc}");
 }
@@ -66,28 +71,29 @@ fn nonprivate_training_learns_tiny_task() {
 fn dp_perlayer_improves_and_respects_plan() {
     // the B=256 config: at a real batch size DP training must make progress
     let data = MixtureImages::new(2048, 64, 10, 2);
-    let opts = TrainOpts {
-        method: Method::PerLayerAdaptive,
-        epsilon: 8.0,
-        epochs: 3.0,
-        lr: 0.2,
-        target_q: 0.6,
-        ..Default::default()
-    };
-    let mut tr = Trainer::new(rt(), "resmlp", data.len(), opts).unwrap();
-    let plan = tr.plan().unwrap();
+    let mut sess = Session::builder(rt(), "resmlp")
+        .privacy(PrivacySpec::new(8.0, 1e-5))
+        .clip(ClipPolicy {
+            target_q: 0.6,
+            ..ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive)
+        })
+        .optim(OptimSpec::sgd(0.2))
+        .epochs(3.0)
+        .build(data.len())
+        .unwrap();
+    let plan = sess.plan().unwrap();
     assert!(plan.sigma_grad >= plan.sigma_base);
-    let (loss0, _) = tr.evaluate(&data).unwrap();
-    let hist = tr.run(&data, 0).unwrap();
-    let (loss1, _) = tr.evaluate(&data).unwrap();
+    let (loss0, _) = sess.evaluate(&data).unwrap();
+    let hist = sess.run(&data, 0).unwrap();
+    let (loss1, _) = sess.evaluate(&data).unwrap();
     assert!(loss1 < loss0, "DP training should still reduce loss: {loss0} -> {loss1}");
     // clip fractions are meaningful (in [0,1]) and thresholds adapted
-    for st in &hist {
-        for f in &st.clip_frac {
+    for ev in &hist {
+        for f in &ev.clip_frac {
             assert!((0.0..=1.0 + 1e-9).contains(f));
         }
     }
-    let c = tr.thresholds();
+    let c = sess.thresholds();
     assert!(c.iter().all(|&x| x > 0.0));
 }
 
@@ -97,18 +103,16 @@ fn flat_and_ghost_agree_without_noise() {
     let data = tiny_mixture(128, 4);
     let mut losses = Vec::new();
     for method in [Method::FlatFixed, Method::Ghost, Method::Naive] {
-        let opts = TrainOpts {
-            method,
-            epsilon: 1e6,
-            epochs: 2.0,
-            lr: 0.05,
-            clip_init: 0.5,
-            seed: 9,
-            ..Default::default()
-        };
-        let mut tr = Trainer::new(rt(), "resmlp_tiny", data.len(), opts).unwrap();
-        tr.run(&data, 0).unwrap();
-        let (loss, _) = tr.evaluate(&data).unwrap();
+        let mut sess = Session::builder(rt(), "resmlp_tiny")
+            .privacy(PrivacySpec { epsilon: 1e6, delta: 1e-5, quantile_r: 0.01 })
+            .clip(ClipPolicy { clip_init: 0.5, ..ClipPolicy::from_method(method) })
+            .optim(OptimSpec::sgd(0.05))
+            .epochs(2.0)
+            .seed(9)
+            .build(data.len())
+            .unwrap();
+        sess.run(&data, 0).unwrap();
+        let (loss, _) = sess.evaluate(&data).unwrap();
         losses.push(loss);
     }
     // same clipping math, same sampling seed => same result up to fp noise
@@ -120,23 +124,20 @@ fn flat_and_ghost_agree_without_noise() {
 fn lm_training_reduces_nll() {
     let cfg = rt().manifest.config("lm_tiny").unwrap().clone();
     let data = MarkovCorpus::new(256, cfg.hyper.seq, cfg.hyper.vocab, 4, 0);
-    let opts = TrainOpts {
-        method: Method::PerLayerAdaptive,
-        epsilon: 1e6, // tiny B=4 config: test the machinery, not utility-under-noise
-        epochs: 6.0,
-        lr: 3e-3,
-        optimizer: gwclip::coordinator::optimizer::OptimizerKind::Adam {
-            beta1: 0.9,
-            beta2: 0.98,
-            eps: 1e-6,
-        },
-        clip_init: 0.1,
-        ..Default::default()
-    };
-    let mut tr = Trainer::new(rt(), "lm_tiny", data.len(), opts).unwrap();
-    let (nll0, _) = tr.evaluate(&data).unwrap();
-    tr.run(&data, 0).unwrap();
-    let (nll1, _) = tr.evaluate(&data).unwrap();
+    let mut sess = Session::builder(rt(), "lm_tiny")
+        // tiny B=4 config: test the machinery, not utility-under-noise
+        .privacy(PrivacySpec { epsilon: 1e6, delta: 1e-5, quantile_r: 0.01 })
+        .clip(ClipPolicy {
+            clip_init: 0.1,
+            ..ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive)
+        })
+        .optim(OptimSpec::adam(3e-3))
+        .epochs(6.0)
+        .build(data.len())
+        .unwrap();
+    let (nll0, _) = sess.evaluate(&data).unwrap();
+    sess.run(&data, 0).unwrap();
+    let (nll1, _) = sess.evaluate(&data).unwrap();
     assert!(nll1 < nll0, "NLL {nll0} -> {nll1}");
 }
 
@@ -174,6 +175,16 @@ fn checkpoint_roundtrip_through_runtime() {
 }
 
 #[test]
+fn replica_fan_out_is_bit_identical() {
+    let reps = rt().init_replicas("resmlp_tiny", 3).unwrap();
+    assert_eq!(reps.len(), 3);
+    for r in &reps[1..] {
+        assert_eq!(r, &reps[0]);
+    }
+    assert!(rt().init_replicas("resmlp_tiny", 0).is_err());
+}
+
+#[test]
 fn accountant_noise_scales_sanely_with_epsilon() {
     let s1 = accountant::noise_multiplier(0.02, 200, 1.0, 1e-5);
     let s8 = accountant::noise_multiplier(0.02, 200, 8.0, 1e-5);
@@ -182,29 +193,38 @@ fn accountant_noise_scales_sanely_with_epsilon() {
 
 // ---------------------------------------------------------------- pipeline
 
+/// Session-built pipeline spec for the mode-comparison tests: fixed
+/// per-device or flat-sync clipping, accountant-derived sigma, and the
+/// round-robin cursor so both modes consume the same deterministic
+/// minibatch.
+fn pipe_session(group_by: GroupBy, steps: usize, n_data: usize) -> Session<'static> {
+    Session::builder(rt(), "lm_mid_pipe_lora")
+        .privacy(PrivacySpec { epsilon: 2.0, delta: 1e-5, quantile_r: 0.0 })
+        .clip(ClipPolicy { clip_init: 1e-2, ..ClipPolicy::new(group_by, ClipMode::Fixed) })
+        .optim(OptimSpec::adam(1e-3))
+        .n_micro(2)
+        .steps(steps)
+        .sampling(Sampling::RoundRobin)
+        .build(n_data)
+        .unwrap()
+}
+
 #[test]
 fn pipeline_per_device_and_flat_sync_run_and_agree_on_loss() {
     let cfg = rt().manifest.config("lm_mid_pipe_lora").unwrap().clone();
     let data = MarkovCorpus::new(128, cfg.hyper.seq, cfg.hyper.vocab, 4, 5);
     let mut losses = Vec::new();
-    for mode in [PipelineMode::PerDevice, PipelineMode::FlatSync] {
-        let opts = PipelineOpts {
-            mode,
-            n_micro: 2,
-            sigma: 0.0,
-            clip: 1e9, // effectively unclipped -> identical math
-            lr: 1e-3,
-            ..Default::default()
-        };
-        let mut eng = PipelineEngine::new(rt(), "lm_mid_pipe_lora", opts).unwrap();
-        let mb = eng.minibatch();
-        let idx: Vec<usize> = (0..mb).collect();
-        let st = eng.step(&data, &idx).unwrap();
-        assert!(st.loss.is_finite());
-        assert!(st.sim_secs > 0.0 && st.sim_secs <= st.host_secs * 1.5);
-        losses.push(st.loss);
-        if mode == PipelineMode::FlatSync {
-            assert!(st.syncs >= 2, "flat-sync must add a norm barrier");
+    for group_by in [GroupBy::PerDevice, GroupBy::Flat] {
+        let mut sess = pipe_session(group_by, 4, data.len());
+        // the step loss is computed before the (mode-specific) noise and
+        // update touch the parameters, so the first steps of both modes
+        // must agree on the same deterministic minibatch
+        let ev = sess.step(&data).unwrap();
+        assert!(ev.loss.is_finite());
+        assert!(ev.sim_secs > 0.0 && ev.sim_secs <= ev.host_secs * 1.5);
+        losses.push(ev.loss);
+        if group_by == GroupBy::Flat {
+            assert!(ev.syncs >= 2, "flat-sync must add a norm barrier");
         }
     }
     assert!(
@@ -218,12 +238,9 @@ fn pipeline_flat_sync_costs_more_calls() {
     let cfg = rt().manifest.config("lm_mid_pipe_lora").unwrap().clone();
     let data = MarkovCorpus::new(64, cfg.hyper.seq, cfg.hyper.vocab, 4, 6);
     let mut calls = Vec::new();
-    for mode in [PipelineMode::PerDevice, PipelineMode::FlatSync] {
-        let opts = PipelineOpts { mode, n_micro: 2, sigma: 0.1, clip: 1e-2, ..Default::default() };
-        let mut eng = PipelineEngine::new(rt(), "lm_mid_pipe_lora", opts).unwrap();
-        let mb = eng.minibatch();
-        let idx: Vec<usize> = (0..mb).collect();
-        calls.push(eng.step(&data, &idx).unwrap().calls);
+    for group_by in [GroupBy::PerDevice, GroupBy::Flat] {
+        let mut sess = pipe_session(group_by, 1, data.len());
+        calls.push(sess.step(&data).unwrap().calls);
     }
     // flat-sync rematerializes: one extra fwd+bwd per (stage, microbatch)
     assert!(calls[1] > calls[0], "flat-sync calls {} <= per-device {}", calls[1], calls[0]);
@@ -233,20 +250,17 @@ fn pipeline_flat_sync_costs_more_calls() {
 fn pipeline_training_reduces_loss_nonprivate() {
     let cfg = rt().manifest.config("lm_mid_pipe_lora").unwrap().clone();
     let data = MarkovCorpus::new(256, cfg.hyper.seq, cfg.hyper.vocab, 4, 7);
-    let opts = PipelineOpts {
-        mode: PipelineMode::NonPrivate,
-        n_micro: 2,
-        lr: 5e-3,
-        ..Default::default()
-    };
-    let mut eng = PipelineEngine::new(rt(), "lm_mid_pipe_lora", opts).unwrap();
-    let before = eng.evaluate(&data).unwrap();
-    let mb = eng.minibatch();
-    for s in 0..8usize {
-        let idx: Vec<usize> = (0..mb).map(|i| (s * mb + i) % data.len()).collect();
-        eng.step(&data, &idx).unwrap();
-    }
-    let after = eng.evaluate(&data).unwrap();
+    let mut sess = Session::builder(rt(), "lm_mid_pipe_lora")
+        .clip(ClipPolicy::non_private())
+        .optim(OptimSpec::adam(5e-3))
+        .n_micro(2)
+        .steps(8)
+        .sampling(Sampling::RoundRobin)
+        .build(data.len())
+        .unwrap();
+    let (before, _) = sess.evaluate(&data).unwrap();
+    sess.run(&data, 0).unwrap();
+    let (after, _) = sess.evaluate(&data).unwrap();
     assert!(after < before, "pipeline LoRA training must reduce NLL: {before} -> {after}");
 }
 
@@ -254,14 +268,13 @@ fn pipeline_training_reduces_loss_nonprivate() {
 
 #[test]
 fn session_selects_backend_from_manifest() {
-    use gwclip::session::{ClipMode, ClipPolicy, GroupBy, Session};
     // resmlp_tiny has no stages -> single-device backend
     let s = Session::builder(rt(), "resmlp_tiny")
         .clip(ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive))
         .epochs(0.5)
         .build(64)
         .unwrap();
-    assert!(s.trainer().is_some() && s.engine().is_none());
+    assert!(s.trainer().is_some() && s.engine().is_none() && s.shard_engine().is_none());
     // lm_mid_pipe_lora has stages -> pipeline backend
     let s = Session::builder(rt(), "lm_mid_pipe_lora")
         .clip(ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed))
@@ -270,7 +283,22 @@ fn session_selects_backend_from_manifest() {
         .unwrap();
     assert!(s.engine().is_some() && s.trainer().is_none());
     assert_eq!(s.thresholds().len(), s.engine().unwrap().n_stages);
-    // per-device policy on a stage-less config must be rejected
+    // a [shard] section on a stage-less config -> sharded backend
+    let s = Session::builder(rt(), "resmlp_tiny")
+        .clip(ClipPolicy::new(GroupBy::Flat, ClipMode::Fixed))
+        .epochs(0.5)
+        .shard(ShardSpec::with_workers(2))
+        .build(64)
+        .unwrap();
+    assert!(s.shard_engine().is_some() && s.trainer().is_none());
+    // ...but a [shard] section on a pipeline config must be rejected
+    assert!(Session::builder(rt(), "lm_mid_pipe_lora")
+        .clip(ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed))
+        .steps(2)
+        .shard(ShardSpec::with_workers(2))
+        .build(64)
+        .is_err());
+    // per-device policy on a stage-less config without [shard] is rejected
     assert!(Session::builder(rt(), "resmlp_tiny")
         .clip(ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed))
         .epochs(0.5)
@@ -280,7 +308,6 @@ fn session_selects_backend_from_manifest() {
 
 #[test]
 fn session_pipeline_sigma_is_accountant_derived() {
-    use gwclip::session::{ClipMode, ClipPolicy, GroupBy, PrivacySpec, Sampling, Session};
     let build = |sampling: Sampling| {
         Session::builder(rt(), "lm_mid_pipe_lora")
             .privacy(PrivacySpec::new(1.0, 1e-5))
@@ -336,7 +363,6 @@ fn session_pipeline_sigma_is_accountant_derived() {
 
 #[test]
 fn session_pipeline_poisson_steps_vary_batch_and_mask_padding() {
-    use gwclip::session::{ClipMode, ClipPolicy, GroupBy, PrivacySpec, Session};
     let cfg = rt().manifest.config("lm_mid_pipe_lora").unwrap().clone();
     let data = MarkovCorpus::new(512, cfg.hyper.seq, cfg.hyper.vocab, 4, 8);
     let mut sess = Session::builder(rt(), "lm_mid_pipe_lora")
@@ -376,7 +402,6 @@ fn backend_parity_single_device_vs_single_stage_pipeline() {
     // derive the SAME amplified privacy plan (q = 4/64 over 8 steps), draw
     // the same Poisson batches from the shared core RNG, and hold the same
     // (fixed) threshold trajectory.
-    use gwclip::session::{ClipMode, ClipPolicy, GroupBy, OptimSpec, PrivacySpec, Session};
     let cfg = rt().manifest.config("lm_tiny").unwrap().clone();
     let data = MarkovCorpus::new(64, cfg.hyper.seq, cfg.hyper.vocab, 4, 3);
 
@@ -437,45 +462,199 @@ fn backend_parity_single_device_vs_single_stage_pipeline() {
 }
 
 #[test]
-fn session_reproduces_legacy_trainer_seed_for_seed() {
-    use gwclip::session::{ClipPolicy, PrivacySpec, Session};
-    let data = tiny_mixture(128, 12);
-    let opts = TrainOpts {
-        method: Method::PerLayerAdaptive,
-        epsilon: 8.0,
-        epochs: 1.0,
-        lr: 0.1,
-        clip_init: 0.5,
-        target_q: 0.6,
-        seed: 21,
-        ..Default::default()
+fn backend_parity_single_device_vs_sharded_one_worker() {
+    // The sharded backend's parity contract: with ONE worker it must be
+    // the single-device backend, seed for seed — same derived schedule,
+    // same amplified plan, same Poisson draws from the shared core RNG,
+    // the same adaptive threshold trajectory (bitwise: identical RNG
+    // consumption order), and bit-identical parameters, because a
+    // 1-participant tree reduction is the identity and the noise share
+    // std/sqrt(1) is the full std.
+    let data = tiny_mixture(256, 3);
+    let build = |shard: bool| {
+        let mut b = Session::builder(rt(), "resmlp_tiny")
+            .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+            .clip(ClipPolicy {
+                clip_init: 0.5,
+                target_q: 0.6,
+                ..ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive)
+            })
+            .optim(OptimSpec::sgd(0.1))
+            .epochs(1.0)
+            .seed(21);
+        if shard {
+            b = b.shard(ShardSpec::with_workers(1));
+        }
+        b.build(data.len()).unwrap()
     };
-    // legacy path (shim over the shared DpCore)
-    let mut tr = Trainer::new(rt(), "resmlp_tiny", data.len(), opts.clone()).unwrap();
-    let legacy = tr.run(&data, 0).unwrap();
-    // session path from the equivalent declarative spec
-    let mut sess = Session::builder(rt(), "resmlp_tiny")
-        .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
-        .clip(ClipPolicy { clip_init: 0.5, target_q: 0.6, ..opts.clip_policy() })
-        .optim(gwclip::session::OptimSpec::sgd(0.1))
-        .epochs(1.0)
-        .seed(21)
-        .build(data.len())
-        .unwrap();
-    let events = sess.run(&data, 0).unwrap();
-    assert_eq!(legacy.len(), events.len());
-    for (a, b) in legacy.iter().zip(&events) {
-        assert_eq!(a.batch_size, b.batch_size, "same Poisson draws");
-        assert!((a.loss - b.loss).abs() < 1e-9, "loss {} vs {}", a.loss, b.loss);
+    let mut single = build(false);
+    let mut sharded = build(true);
+    assert!(single.trainer().is_some());
+    assert!(sharded.shard_engine().is_some());
+    assert_eq!(single.total_steps, sharded.total_steps, "same derived schedule");
+
+    let (ps, pq) = (single.plan().unwrap(), sharded.plan().unwrap());
+    assert_eq!(ps.q, pq.q, "1-worker sharding must not change the accountant's q");
+    assert_eq!(ps.steps, pq.steps);
+    assert_eq!(ps.sigma_grad, pq.sigma_grad, "identical plan, bit for bit");
+    assert_eq!(ps.sigma_quantile, pq.sigma_quantile);
+
+    for step in 0..single.total_steps {
+        let a = single.step(&data).unwrap();
+        let b = sharded.step(&data).unwrap();
+        assert_eq!(a.batch_size, b.batch_size, "step {step}: same Poisson draw");
+        assert_eq!(a.truncated, b.truncated, "step {step}");
+        // adaptive per-layer thresholds: the same clip counts and the same
+        // quantile-noise draws must give the SAME trajectory, exactly
+        assert_eq!(single.thresholds(), sharded.thresholds(), "step {step}");
+        assert!((a.loss - b.loss).abs() < 1e-9, "step {step}: loss {} vs {}", a.loss, b.loss);
+        assert_eq!(a.clip_frac, b.clip_frac, "step {step}");
     }
-    let (l0, a0) = tr.evaluate(&data).unwrap();
-    let (l1, a1) = sess.evaluate(&data).unwrap();
+    // bit-identical parameters after the full run
+    let pa = single.params().unwrap();
+    let pb = sharded.params().unwrap();
+    assert_eq!(pa.len(), pb.len());
+    for (x, y) in pa.iter().zip(pb) {
+        assert_eq!(x.data, y.data, "parameters diverged");
+    }
+    let (l0, a0) = single.evaluate(&data).unwrap();
+    let (l1, a1) = sharded.evaluate(&data).unwrap();
     assert!((l0 - l1).abs() < 1e-9 && (a0 - a1).abs() < 1e-9);
 }
 
 #[test]
+fn sharded_multi_worker_trains_and_stays_in_sync() {
+    let data = tiny_mixture(512, 6);
+    let mut sess = Session::builder(rt(), "resmlp_tiny")
+        .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+        .clip(ClipPolicy {
+            clip_init: 1.0,
+            ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive)
+        })
+        .optim(OptimSpec::sgd(0.1))
+        .epochs(1.0)
+        .seed(4)
+        .shard(ShardSpec { workers: 4, fanout: 2, ..Default::default() })
+        .build(data.len())
+        .unwrap();
+    // satellite: describe() must surface the topology + thresholds
+    let d = sess.describe();
+    assert!(d.contains("sharded"), "{d}");
+    assert!(d.contains("workers=4"), "{d}");
+    assert!(d.contains("fanout=2"), "{d}");
+    assert!(d.contains("thresholds=["), "{d}");
+    assert_eq!(
+        sess.group_labels(),
+        vec!["worker0", "worker1", "worker2", "worker3"],
+        "per-device grouping: one threshold group per worker"
+    );
+    assert_eq!(sess.thresholds().len(), 4);
+
+    let events = sess.run(&data, 0).unwrap();
+    assert!(!events.is_empty());
+    for ev in &events {
+        assert!(ev.loss.is_finite());
+        assert_eq!(ev.calls, 4, "one executable call per worker");
+        for f in &ev.clip_frac {
+            assert!((0.0..=1.0 + 1e-9).contains(f));
+        }
+    }
+    let e = sess.shard_engine().unwrap();
+    assert!(e.replicas_in_sync(), "replicas must stay bit-identical");
+    assert!(sess.thresholds().iter().all(|&c| c > 0.0));
+    let (loss, acc) = sess.evaluate(&data).unwrap();
+    assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn sharded_backend_runs_from_spec_file() {
+    // acceptance: `gwclip run --spec docs/specs/sharded_per_device.toml`
+    // end to end (the CLI drives exactly this path)
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/specs/sharded_per_device.toml");
+    let spec = RunSpec::from_path(path).unwrap();
+    assert!(spec.shard.is_some(), "the example spec must carry a [shard] section");
+    let (mut sess, train, eval) =
+        SessionBuilder::from_spec(rt(), spec).build_with_data().unwrap();
+    let d = sess.describe();
+    assert!(d.contains("sharded") && d.contains("workers=4") && d.contains("fanout=2"), "{d}");
+    let ev = sess.step(&*train).unwrap();
+    assert!(ev.loss.is_finite());
+    assert_eq!(ev.calls, 4);
+    assert!(sess.shard_engine().unwrap().replicas_in_sync());
+    let (loss, _) = sess.evaluate(&*eval).unwrap();
+    assert!(loss.is_finite());
+}
+
+#[test]
+fn sharded_overlap_beats_barrier_in_simulation() {
+    // the scheduling claim on real executables: with N >= 4 workers the
+    // overlapped tree-reduction's simulated step latency beats the
+    // barrier baseline on every step (both are reported per step)
+    let data = tiny_mixture(256, 8);
+    let mut sess = Session::builder(rt(), "resmlp_tiny")
+        .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.0 })
+        .clip(ClipPolicy { clip_init: 1.0, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed) })
+        .optim(OptimSpec::sgd(0.1))
+        .epochs(0.5)
+        .seed(2)
+        .shard(ShardSpec::with_workers(4))
+        .build(data.len())
+        .unwrap();
+    for _ in 0..2 {
+        let e = sess.shard_engine_mut().unwrap();
+        let st = e.step(&data).unwrap();
+        assert!(st.sim_overlap_secs > 0.0 && st.sim_barrier_secs > 0.0);
+        assert!(
+            st.sim_overlap_secs < st.sim_barrier_secs,
+            "overlap {} must beat barrier {}",
+            st.sim_overlap_secs,
+            st.sim_barrier_secs
+        );
+        assert_eq!(st.syncs, 2, "4 workers, fanout 2 -> 2 tree rounds");
+    }
+}
+
+#[test]
+fn session_runs_are_deterministic_seed_for_seed() {
+    // with the legacy constructors retired, the reproducibility contract
+    // lives entirely in the session API: identical specs give identical
+    // event streams; a different seed diverges
+    let data = tiny_mixture(128, 12);
+    let build = |seed: u64| {
+        Session::builder(rt(), "resmlp_tiny")
+            .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+            .clip(ClipPolicy {
+                clip_init: 0.5,
+                target_q: 0.6,
+                ..ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive)
+            })
+            .optim(OptimSpec::sgd(0.1))
+            .epochs(1.0)
+            .seed(seed)
+            .build(data.len())
+            .unwrap()
+    };
+    let mut s1 = build(21);
+    let mut s2 = build(21);
+    let e1 = s1.run(&data, 0).unwrap();
+    let e2 = s2.run(&data, 0).unwrap();
+    assert_eq!(e1.len(), e2.len());
+    for (a, b) in e1.iter().zip(&e2) {
+        assert_eq!(a.batch_size, b.batch_size, "same Poisson draws");
+        assert!((a.loss - b.loss).abs() < 1e-9, "loss {} vs {}", a.loss, b.loss);
+    }
+    let (l1, a1) = s1.evaluate(&data).unwrap();
+    let (l2, a2) = s2.evaluate(&data).unwrap();
+    assert!((l1 - l2).abs() < 1e-9 && (a1 - a2).abs() < 1e-9);
+    // a different seed must actually change the run
+    let mut s3 = build(22);
+    let e3 = s3.run(&data, 0).unwrap();
+    let same = e1.iter().zip(&e3).all(|(a, b)| (a.loss - b.loss).abs() < 1e-12);
+    assert!(!same, "different seeds must diverge");
+}
+
+#[test]
 fn session_runs_from_spec_file() {
-    use gwclip::session::{RunSpec, SessionBuilder};
     let toml = r#"
 config = "resmlp_tiny"
 epochs = 0.5
@@ -510,30 +689,28 @@ fn property_clipped_norms_bounded_many_seeds() {
     // training stays consistent with its clip bit accounting.
     let data = tiny_mixture(64, 8);
     for seed in 0..5u64 {
-        let opts = TrainOpts {
-            method: Method::PerLayerFixed,
-            epsilon: 8.0,
-            epochs: 0.5,
-            lr: 0.01,
-            clip_init: 0.1 + 0.2 * seed as f64,
-            seed,
-            ..Default::default()
+        let build = || {
+            Session::builder(rt(), "resmlp_tiny")
+                .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+                .clip(ClipPolicy {
+                    clip_init: 0.1 + 0.2 * seed as f64,
+                    ..ClipPolicy::new(GroupBy::PerLayer, ClipMode::Fixed)
+                })
+                .optim(OptimSpec::sgd(0.01))
+                .epochs(0.5)
+                .seed(seed)
+                .build(data.len())
+                .unwrap()
         };
-        let mut tr = Trainer::new(rt(), "resmlp_tiny", data.len(), opts).unwrap();
-        let mut tr_norms = Trainer::new(
-            rt(),
-            "resmlp_tiny",
-            data.len(),
-            TrainOpts { seed, ..tr.opts.clone() },
-        )
-        .unwrap();
-        tr_norms.collect_norms = Some(Vec::new());
-        let a = tr.step(&data).unwrap();
-        let b = tr_norms.step(&data).unwrap();
-        // determinism across identical trainers
+        let mut plain = build();
+        let mut collecting = build();
+        collecting.collect_norms(true).unwrap();
+        let a = plain.step(&data).unwrap();
+        let b = collecting.step(&data).unwrap();
+        // determinism across identical sessions
         assert_eq!(a.batch_size, b.batch_size);
         assert!((a.loss - b.loss).abs() < 1e-6);
-        let norms = &tr_norms.collect_norms.as_ref().unwrap()[0];
+        let norms = &collecting.collected_norms().unwrap()[0];
         assert!(norms.iter().all(|&n| n.is_finite() && n >= 0.0));
     }
 }

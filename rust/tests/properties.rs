@@ -352,8 +352,8 @@ fn prop_bleu_rouge_bounded_and_identity() {
 #[test]
 fn prop_masked_pipeline_step_ignores_pad_content() {
     use gwclip::data::lm::MarkovCorpus;
-    use gwclip::pipeline::{PipelineEngine, PipelineMode, PipelineOpts};
     use gwclip::runtime::Runtime;
+    use gwclip::session::{ClipMode, ClipPolicy, GroupBy, OptimSpec, PrivacySpec, Session};
 
     let dir = std::env::var("GWCLIP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let rt = match Runtime::new(&dir) {
@@ -367,17 +367,27 @@ fn prop_masked_pipeline_step_ignores_pad_content() {
     let data = MarkovCorpus::new(64, cfg.hyper.seq, cfg.hyper.vocab, 4, 9);
 
     for seed in 0..3u64 {
-        let opts = || PipelineOpts {
-            mode: PipelineMode::PerDevice,
-            n_micro: 2,
-            clip: 1e-2,
-            sigma: 0.1,
-            lr: 1e-3,
-            seed,
-            ..Default::default()
+        // two identically-built sessions (accountant-derived sigma); the
+        // engines are then driven directly through step_weighted to pin
+        // the pad-content invariance of a masked step
+        let build = || {
+            Session::builder(&rt, "lm_mid_pipe_lora")
+                .privacy(PrivacySpec { epsilon: 2.0, delta: 1e-5, quantile_r: 0.0 })
+                .clip(ClipPolicy {
+                    clip_init: 1e-2,
+                    ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed)
+                })
+                .optim(OptimSpec::adam(1e-3))
+                .n_micro(2)
+                .steps(4)
+                .seed(seed)
+                .build(data.len())
+                .unwrap()
         };
-        let mut a = PipelineEngine::new(&rt, "lm_mid_pipe_lora", opts()).unwrap();
-        let mut b = PipelineEngine::new(&rt, "lm_mid_pipe_lora", opts()).unwrap();
+        let mut sa = build();
+        let mut sb = build();
+        let a = sa.engine_mut().unwrap();
+        let b = sb.engine_mut().unwrap();
         let mb = a.minibatch();
         let live = mb - 1 - (seed as usize % (mb - 1)); // at least one pad slot
         let mut weights = vec![0f32; mb];
@@ -392,9 +402,9 @@ fn prop_masked_pipeline_step_ignores_pad_content() {
         for i in live..mb {
             idx_junk.push((13 * i + 5) % data.len());
         }
-        let sa = a.step_weighted(&data, &idx_canon, &weights).unwrap();
-        let sb = b.step_weighted(&data, &idx_junk, &weights).unwrap();
-        assert!((sa.loss - sb.loss).abs() < 1e-9, "seed {seed}: loss {} vs {}", sa.loss, sb.loss);
+        let ra = a.step_weighted(&data, &idx_canon, &weights).unwrap();
+        let rb = b.step_weighted(&data, &idx_junk, &weights).unwrap();
+        assert!((ra.loss - rb.loss).abs() < 1e-9, "seed {seed}: loss {} vs {}", ra.loss, rb.loss);
         let pa = a.dump_params();
         let pb = b.dump_params();
         assert_eq!(pa.len(), pb.len());
@@ -402,6 +412,178 @@ fn prop_masked_pipeline_step_ignores_pad_content() {
             let tb = &pb[name];
             assert_eq!(ta.shape, tb.shape, "seed {seed}: {name}");
             assert_eq!(ta.data, tb.data, "seed {seed}: {name} diverged under pad content");
+        }
+    }
+}
+
+// ------------------------------------------------- sharded data-parallel
+
+/// The sharded backend's sampler contract: with one worker it is the
+/// single-device Poisson sampler, bit for bit, including the RNG stream —
+/// the foundation of the 1-worker backend-parity test in
+/// tests/integration.rs.
+#[test]
+fn prop_shard_sampler_one_worker_equals_single_device_sampler() {
+    use gwclip::shard::ShardSampler;
+    let mut r = Xoshiro::seeded(31);
+    for _ in 0..20 {
+        let n = 50 + r.below(1000);
+        let cap = 8 + r.below(64);
+        let rate = (0.01 + 0.3 * r.uniform()).min(1.0);
+        let seed = r.below(1_000_000) as u64;
+        let mut r1 = Rng::seeded(seed);
+        let mut r2 = Rng::seeded(seed);
+        let shard = ShardSampler::new(n, rate, 1, cap);
+        let single = PoissonSampler::new(n, rate, cap);
+        for _ in 0..5 {
+            let a = shard.sample(&mut r1);
+            let b = single.sample_padded(&mut r2);
+            assert_eq!(a.slices[0].indices, b.indices, "n={n} cap={cap} rate={rate}");
+            assert_eq!(a.slices[0].weights, b.weights);
+            assert_eq!(a.truncated, b.truncated);
+        }
+        assert_eq!(r1.uniform(), r2.uniform(), "RNG streams diverged");
+    }
+}
+
+/// Dealing a global Poisson draw across N workers partitions it: slices
+/// are disjoint, cover every drawn example, and never exceed capacity.
+#[test]
+fn prop_shard_deal_partitions_the_draw() {
+    use gwclip::shard::ShardSampler;
+    let mut r = Xoshiro::seeded(32);
+    for _ in 0..20 {
+        let workers = 1 + r.below(8);
+        let cap = 4 + r.below(32);
+        let n = 200 + r.below(800);
+        let rate = (0.02 + 0.4 * r.uniform()).min(1.0);
+        let s = ShardSampler::new(n, rate, workers, cap);
+        let mut rng = Rng::seeded(r.below(1_000_000) as u64);
+        let b = s.sample(&mut rng);
+        let mut seen = std::collections::HashSet::new();
+        let mut live = 0usize;
+        for slice in &b.slices {
+            assert_eq!(slice.indices.len(), cap);
+            let l = slice.live();
+            live += l;
+            assert!(l <= cap);
+            for i in 0..l {
+                assert!(seen.insert(slice.indices[i]), "duplicate example across workers");
+            }
+        }
+        assert_eq!(live, b.live);
+        assert!(live <= workers * cap, "live {live} exceeds global capacity");
+    }
+}
+
+/// The acceptance property of the sharded per-device scheme: every
+/// example lives on exactly one worker and is clipped to that worker's
+/// threshold, so removing any single example moves the merged update by
+/// at most C_w — which the quadrature sum sqrt(sum_k C_k^2) dominates.
+/// That quadrature bound is exactly the sensitivity the merged noise is
+/// calibrated against: per-worker shares std_k/sqrt(N) with the
+/// equal-budget allocation sum (in variance) to sigma * sqrt(sum C_k^2).
+#[test]
+fn prop_sharded_merged_clip_bound_is_quadrature_sum() {
+    use gwclip::shard::{quadrature_bound, tree_reduce};
+    let mut r = Xoshiro::seeded(33);
+    for case in 0..25 {
+        let workers = 2 + r.below(6);
+        let dim = 4 + r.below(12);
+        let per_worker = 1 + r.below(6);
+        let thresholds: Vec<f64> = (0..workers).map(|_| 0.1 + 2.0 * r.uniform()).collect();
+        let qb = quadrature_bound(&thresholds);
+        assert!(qb >= thresholds.iter().cloned().fold(0.0, f64::max) - 1e-12);
+
+        // per-worker clipped per-example gradients
+        let mut clipped: Vec<Vec<Vec<f64>>> = Vec::new(); // [worker][example][dim]
+        for w in 0..workers {
+            let mut exs = Vec::new();
+            for _ in 0..per_worker {
+                let g: Vec<f64> = (0..dim).map(|_| 4.0 * r.uniform() - 2.0).collect();
+                let norm = g.iter().map(|x| x * x).sum::<f64>().sqrt();
+                let scale = (thresholds[w] / norm.max(1e-12)).min(1.0);
+                exs.push(g.iter().map(|x| x * scale).collect());
+            }
+            clipped.push(exs);
+        }
+        // merged update = sum over workers of their clipped sums; removing
+        // example (w, e) changes it by exactly that example's clipped
+        // gradient, whose norm is <= C_w <= quadrature bound
+        for (w, exs) in clipped.iter().enumerate() {
+            for ex in exs {
+                let delta = ex.iter().map(|x| x * x).sum::<f64>().sqrt();
+                assert!(
+                    delta <= thresholds[w] + 1e-9,
+                    "case {case}: example on worker {w} moved the merge by {delta} > C_w {}",
+                    thresholds[w]
+                );
+                assert!(delta <= qb + 1e-9);
+            }
+        }
+
+        // the tree merge is a faithful sum (fanout-independent)
+        let parts: Vec<Vec<gwclip::runtime::Tensor>> = clipped
+            .iter()
+            .map(|exs| {
+                let mut sum = vec![0f32; dim];
+                for ex in exs {
+                    for (s, x) in sum.iter_mut().zip(ex) {
+                        *s += *x as f32;
+                    }
+                }
+                vec![gwclip::runtime::Tensor::from_vec(&[dim], sum).unwrap()]
+            })
+            .collect();
+        let flat: Vec<f64> = (0..dim)
+            .map(|i| parts.iter().map(|p| p[0].data[i] as f64).sum())
+            .collect();
+        for fanout in [2usize, 3] {
+            let merged = tree_reduce(parts.clone(), fanout);
+            for (i, &v) in merged[0].data.iter().enumerate() {
+                assert!((v as f64 - flat[i]).abs() < 1e-4, "fanout {fanout}");
+            }
+        }
+
+        // noise calibration: equal-budget per-group stds, each worker
+        // adding its 1/sqrt(N) share, merge (variances add) to exactly
+        // sigma * quadrature_bound per coordinate
+        let sigma = 0.3 + 2.0 * r.uniform();
+        let dims = vec![10u64; workers];
+        let stds = Allocation::EqualBudget.stds(sigma, &thresholds, &dims);
+        let share = 1.0 / (workers as f64).sqrt();
+        let merged_var: f64 = stds.iter().map(|s| (s * share) * (s * share)).sum();
+        let want = sigma * qb;
+        assert!(
+            (merged_var.sqrt() - want).abs() < 1e-9 * want.max(1.0),
+            "case {case}: merged noise std {} vs sigma*quadrature {want}",
+            merged_var.sqrt()
+        );
+    }
+}
+
+/// Overlapped tree-reduction dominates the barrier baseline: never slower,
+/// and strictly faster whenever there are >= 2 layers of work to hide.
+#[test]
+fn prop_shard_overlap_never_loses_to_barrier() {
+    use gwclip::shard::ReduceModel;
+    let mut r = Xoshiro::seeded(34);
+    for _ in 0..50 {
+        let workers = 1 + r.below(16);
+        let fanout = 2 + r.below(3);
+        let layers = 1 + r.below(12);
+        let m = ReduceModel::new(workers, fanout, 1e-4 + 1e-3 * r.uniform());
+        let bwd: Vec<f64> = (0..layers).map(|_| 1e-4 + 5e-3 * r.uniform()).collect();
+        let red: Vec<f64> = (0..layers)
+            .map(|_| m.layer_cost(1e3 + 1e7 * r.uniform()))
+            .collect();
+        let o = m.overlap_makespan(&bwd, &red);
+        let b = m.barrier_makespan(&bwd, &red);
+        assert!(o <= b + 1e-15, "overlap {o} > barrier {b}");
+        assert!(o >= bwd.iter().sum::<f64>() - 1e-15, "faster than compute alone");
+        assert!(o >= red.iter().sum::<f64>() - 1e-15, "faster than the network alone");
+        if workers > 1 && layers >= 2 {
+            assert!(o < b, "workers={workers} layers={layers}: overlap must strictly win");
         }
     }
 }

@@ -7,6 +7,7 @@ use gwclip::coordinator::trainer::Method;
 use gwclip::pipeline::PipelineMode;
 use gwclip::session::{
     ClipMode, ClipPolicy, DataSpec, GroupBy, OptimSpec, PipeSpec, PrivacySpec, RunSpec, Sampling,
+    ShardGrouping, ShardSpec,
 };
 use gwclip::util::json::Json;
 
@@ -147,6 +148,131 @@ fn sampling_knob_parses_and_rejects_unknown_tokens() {
     // omitted -> amplified Poisson default
     let spec = RunSpec::parse("config = \"lm_mid_pipe_lora\"\nepochs = 1.0\n").unwrap();
     assert_eq!(spec.pipe.sampling, Sampling::Poisson);
+}
+
+#[test]
+fn shard_spec_roundtrips_json_and_toml() {
+    // JSON: a spec without [shard] stays shard-less through a round-trip
+    let plain = RunSpec::for_config("resmlp");
+    assert_eq!(roundtrip(&plain).shard, None);
+
+    // JSON: every grouping token survives a round-trip
+    for grouping in [ShardGrouping::Auto, ShardGrouping::Flat, ShardGrouping::PerDevice] {
+        let mut spec = RunSpec::for_config("resmlp");
+        spec.clip = ClipPolicy::new(GroupBy::Flat, ClipMode::Fixed);
+        spec.shard = Some(ShardSpec {
+            workers: 8,
+            fanout: 4,
+            overlap: false,
+            grouping,
+            link_latency: 1e-3,
+        });
+        assert_eq!(roundtrip(&spec), spec, "{grouping:?}");
+    }
+
+    // TOML: the [shard] section parses with defaults for omitted keys
+    let toml = r#"
+config = "resmlp"
+epochs = 2.0
+
+[clip]
+group_by = "per-device"
+mode = "fixed"
+
+[shard]
+workers = 4
+grouping = "per-device"
+"#;
+    let spec = RunSpec::parse(toml).unwrap();
+    let sh = spec.shard.expect("[shard] section must select the sharded backend");
+    assert_eq!(sh.workers, 4);
+    assert_eq!(sh.fanout, ShardSpec::default().fanout);
+    assert!(sh.overlap, "overlap defaults on");
+    assert_eq!(sh.grouping, ShardGrouping::PerDevice);
+    // the JSON render re-parses to the same spec
+    assert_eq!(RunSpec::parse(&spec.render_json()).unwrap(), spec);
+}
+
+#[test]
+fn shard_grouping_tokens_roundtrip() {
+    for g in [ShardGrouping::Auto, ShardGrouping::Flat, ShardGrouping::PerDevice] {
+        assert_eq!(g.token().parse::<ShardGrouping>().unwrap(), g);
+    }
+    for (alias, want) in [
+        ("perdevice", ShardGrouping::PerDevice),
+        ("per_device", ShardGrouping::PerDevice),
+        ("per-worker", ShardGrouping::PerDevice),
+        ("global", ShardGrouping::Flat),
+    ] {
+        assert_eq!(alias.parse::<ShardGrouping>().unwrap(), want, "alias {alias}");
+    }
+    assert!("per-layer".parse::<ShardGrouping>().is_err(), "per-layer is auto-only");
+    assert!("".parse::<ShardGrouping>().is_err());
+}
+
+#[test]
+fn shard_validation_rejects_each_nonsense_class() {
+    let ok = {
+        let mut s = RunSpec::for_config("resmlp");
+        s.clip = ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed);
+        s.shard = Some(ShardSpec::with_workers(4));
+        s
+    };
+    ok.validate().unwrap();
+
+    // satellite: workers == 0 must fail at validation time
+    let mut s = ok.clone();
+    s.shard = Some(ShardSpec { workers: 0, ..Default::default() });
+    assert!(s.validate().is_err(), "workers == 0");
+
+    // satellite: an explicit expected_batch must deal evenly across workers
+    let mut s = ok.clone();
+    s.expected_batch = 130;
+    assert!(s.validate().is_err(), "130 examples cannot split over 4 workers");
+    let mut s = ok.clone();
+    s.expected_batch = 128;
+    s.validate().unwrap();
+
+    let mut s = ok.clone();
+    s.shard = Some(ShardSpec { fanout: 1, ..Default::default() });
+    assert!(s.validate().is_err(), "fanout < 2");
+
+    let mut s = ok.clone();
+    s.shard = Some(ShardSpec { link_latency: -1.0, ..Default::default() });
+    assert!(s.validate().is_err(), "negative link latency");
+
+    // explicit grouping conflicting with the clip policy
+    let mut s = ok.clone();
+    s.shard = Some(ShardSpec { grouping: ShardGrouping::Flat, ..Default::default() });
+    assert!(s.validate().is_err(), "flat grouping x per-device policy");
+    let mut s = ok.clone();
+    s.clip = ClipPolicy::new(GroupBy::Flat, ClipMode::Fixed);
+    s.shard = Some(ShardSpec { grouping: ShardGrouping::PerDevice, ..Default::default() });
+    assert!(s.validate().is_err(), "per-device grouping x flat policy");
+    // per-layer policies reach the sharded backend only through auto
+    let mut s = ok.clone();
+    s.clip = ClipPolicy::new(GroupBy::PerLayer, ClipMode::Fixed);
+    s.shard = Some(ShardSpec { grouping: ShardGrouping::PerDevice, ..Default::default() });
+    assert!(s.validate().is_err(), "explicit grouping x per-layer policy");
+    let mut s = ok.clone();
+    s.clip = ClipPolicy::new(GroupBy::PerLayer, ClipMode::Fixed);
+    s.shard = Some(ShardSpec::with_workers(2));
+    s.validate().unwrap();
+
+    // a non-private spec does not constrain the grouping
+    let mut s = ok.clone();
+    s.clip = ClipPolicy::non_private();
+    s.shard = Some(ShardSpec { grouping: ShardGrouping::PerDevice, ..Default::default() });
+    s.validate().unwrap();
+
+    // pipeline knobs that would change the sampler or schedule cannot be
+    // silently ignored on a sharded run
+    let mut s = ok.clone();
+    s.pipe.sampling = Sampling::RoundRobin;
+    assert!(s.validate().is_err(), "round_robin sampling x [shard]");
+    let mut s = ok.clone();
+    s.pipe.steps = 10;
+    assert!(s.validate().is_err(), "pipeline.steps x [shard]");
 }
 
 #[test]
