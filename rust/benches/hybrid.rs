@@ -1,0 +1,83 @@
+//! Bench: hybrid 2D-parallel step latency as the replica count scales
+//! over a fixed pipeline partitioning. Each step reports BOTH the
+//! overlapped-reduction and the barrier simulated makespans, so one run
+//! yields the full comparison; the acceptance claim — overlapping each
+//! stage's cross-replica reduction with the pipeline backward beats the
+//! reduce-after-backward barrier at R >= 2 replicas — is checked and
+//! printed per row. Writes BENCH_hybrid.json.
+//!
+//!     cargo bench --bench hybrid
+//!
+//! Under `GWCLIP_BENCH_SMOKE=1` (CI without AOT artifacts) the bench
+//! writes an empty trajectory file and exits cleanly.
+
+use gwclip::data::lm::MarkovCorpus;
+use gwclip::data::Dataset;
+use gwclip::runtime::Runtime;
+use gwclip::session::{
+    ClipMode, ClipPolicy, GroupBy, HybridSpec, OptimSpec, PrivacySpec, Session,
+};
+use gwclip::util::bench::{bench, iters, smoke_skip, write_json, BenchResult};
+
+fn main() -> anyhow::Result<()> {
+    let rt = match Runtime::new(gwclip::artifact_dir()) {
+        Ok(rt) => rt,
+        Err(e) => return smoke_skip("hybrid", e),
+    };
+    let config = "lm_mid_pipe_lora";
+    let cfg = rt.manifest.config(config)?.clone();
+    let data = MarkovCorpus::new(2048, cfg.hyper.seq, cfg.hyper.vocab, 4, 0);
+    let mut rows = Vec::new();
+    let mut failed = false;
+
+    println!("== hybrid 2D-parallel: per-piece clipping on {config} (4 stages), fanout 2 ==");
+    for replicas in [1usize, 2, 4] {
+        let mut sess = Session::builder(&rt, config)
+            .privacy(PrivacySpec { epsilon: 2.0, delta: 1e-5, quantile_r: 0.0 })
+            .clip(ClipPolicy {
+                clip_init: 1e-2,
+                ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed)
+            })
+            .optim(OptimSpec::adam(1e-3))
+            .n_micro(2)
+            .steps(1000) // plenty of scheduled steps for the bench loop
+            .hybrid(HybridSpec::with_replicas(replicas))
+            .build(data.len())?;
+        let (mut ov, mut ba, mut n) = (0.0, 0.0, 0usize);
+        let r = bench(&format!("hybrid/R{replicas}/step"), 1, iters(3), || {
+            let st = sess.hybrid_engine_mut().unwrap().step(&data).unwrap();
+            ov += st.sim_overlap_secs;
+            ba += st.sim_barrier_secs;
+            n += 1;
+        });
+        let (ov, ba) = (ov / n as f64, ba / n as f64);
+        let verdict = if replicas >= 2 {
+            if ov < ba {
+                "PASS: overlap beats barrier"
+            } else {
+                failed = true;
+                "FAIL: overlap did not beat barrier"
+            }
+        } else {
+            "-"
+        };
+        println!(
+            "{}   sim overlap {:.4}s barrier {:.4}s ({:.0}% hidden)  {}",
+            r.report(),
+            ov,
+            ba,
+            100.0 * (1.0 - if ba > 0.0 { ov / ba } else { 1.0 }),
+            verdict
+        );
+        rows.push(r);
+        rows.push(BenchResult::scalar(&format!("hybrid/R{replicas}/sim-overlap"), ov));
+        rows.push(BenchResult::scalar(&format!("hybrid/R{replicas}/sim-barrier"), ba));
+    }
+
+    let path = write_json("hybrid", &rows)?;
+    println!("wrote {}", path.display());
+    if failed {
+        anyhow::bail!("overlapped reduction must beat barrier reduction at R >= 2 replicas");
+    }
+    Ok(())
+}

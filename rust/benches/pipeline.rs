@@ -11,10 +11,13 @@ use gwclip::runtime::Runtime;
 use gwclip::session::{
     ClipMode, ClipPolicy, GroupBy, OptimSpec, PrivacySpec, Sampling, Session,
 };
-use gwclip::util::bench::{bench, write_json, BenchResult};
+use gwclip::util::bench::{bench, iters, smoke_skip, write_json, BenchResult};
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new(gwclip::artifact_dir())?;
+    let rt = match Runtime::new(gwclip::artifact_dir()) {
+        Ok(rt) => rt,
+        Err(e) => return smoke_skip("pipeline", e),
+    };
     let config = "lm_mid_pipe_lora";
     let cfg = rt.manifest.config(config)?.clone();
     let data = MarkovCorpus::new(1024, cfg.hyper.seq, cfg.hyper.vocab, 4, 0);
@@ -40,7 +43,7 @@ fn main() -> anyhow::Result<()> {
                 _ => "flat clipping (sync + remat)",
             };
             let mut sim_acc = Vec::new();
-            let r = bench(&format!("pipeline/J{n_micro}/{label}"), 1, 4, || {
+            let r = bench(&format!("pipeline/J{n_micro}/{label}"), 1, iters(4), || {
                 let st = sess.step(&data).unwrap();
                 sim_acc.push(st.sim_secs);
             });

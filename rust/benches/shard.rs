@@ -13,10 +13,13 @@ use gwclip::runtime::Runtime;
 use gwclip::session::{
     ClipMode, ClipPolicy, GroupBy, OptimSpec, PrivacySpec, Session, ShardSpec,
 };
-use gwclip::util::bench::{bench, write_json, BenchResult};
+use gwclip::util::bench::{bench, iters, smoke_skip, write_json, BenchResult};
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new(gwclip::artifact_dir())?;
+    let rt = match Runtime::new(gwclip::artifact_dir()) {
+        Ok(rt) => rt,
+        Err(e) => return smoke_skip("shard", e),
+    };
     let data = MixtureImages::new(4096, 64, 10, 0);
     let mut rows = Vec::new();
     let mut failed = false;
@@ -34,7 +37,7 @@ fn main() -> anyhow::Result<()> {
             .shard(ShardSpec::with_workers(workers))
             .build(data.len())?;
         let (mut ov, mut ba, mut n) = (0.0, 0.0, 0usize);
-        let r = bench(&format!("shard/N{workers}/step"), 1, 4, || {
+        let r = bench(&format!("shard/N{workers}/step"), 1, iters(4), || {
             let st = sess.shard_engine_mut().unwrap().step(&data).unwrap();
             ov += st.sim_overlap_secs;
             ba += st.sim_barrier_secs;

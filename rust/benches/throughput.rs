@@ -10,10 +10,13 @@ use gwclip::data::lm::MarkovCorpus;
 use gwclip::data::Dataset;
 use gwclip::runtime::Runtime;
 use gwclip::session::{ClipPolicy, OptimSpec, PrivacySpec, Session};
-use gwclip::util::bench::{bench, write_json};
+use gwclip::util::bench::{bench, iters, smoke_skip, write_json};
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new(gwclip::artifact_dir())?;
+    let rt = match Runtime::new(gwclip::artifact_dir()) {
+        Ok(rt) => rt,
+        Err(e) => return smoke_skip("throughput", e),
+    };
     let mut rows = Vec::new();
 
     println!("== throughput: one DP step per scheme, lm_small (GPT-2 analog config) ==");
@@ -33,7 +36,7 @@ fn main() -> anyhow::Result<()> {
             .optim(OptimSpec::adam(1e-4))
             .epochs(100.0) // plenty of steps available
             .build(data.len())?;
-        let r = bench(&format!("lm_small/step/{}", method.name()), 2, 8, || {
+        let r = bench(&format!("lm_small/step/{}", method.name()), 2, iters(8), || {
             sess.step(&data).unwrap();
         });
         if method == Method::NonPrivate {
@@ -53,7 +56,7 @@ fn main() -> anyhow::Result<()> {
             .optim(OptimSpec::sgd(0.1))
             .epochs(100.0)
             .build(data.len())?;
-        let r = bench(&format!("resmlp/step/{}", method.name()), 2, 10, || {
+        let r = bench(&format!("resmlp/step/{}", method.name()), 2, iters(10), || {
             sess.step(&data).unwrap();
         });
         if method == Method::NonPrivate {

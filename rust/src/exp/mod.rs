@@ -5,6 +5,7 @@
 pub mod figures;
 pub mod genexp;
 pub mod harness;
+pub mod hybridexp;
 pub mod pipexp;
 pub mod shardexp;
 pub mod tables;
@@ -16,7 +17,8 @@ use crate::runtime::Runtime;
 use harness::Scale;
 
 /// Dispatch an experiment by name ("table1".."table11", "fig1".."fig7",
-/// "pipeline-overhead", "accountant", "shard-scaling", or "all").
+/// "pipeline-overhead", "accountant", "shard-scaling", "hybrid-scaling",
+/// or "all").
 pub fn run(rt: &Runtime, which: &str, paper_scale: bool) -> Result<()> {
     let scale = if paper_scale { Scale::paper() } else { Scale::quick() };
     std::fs::create_dir_all("results")?;
@@ -38,10 +40,11 @@ pub fn run(rt: &Runtime, which: &str, paper_scale: bool) -> Result<()> {
         "pipeline-overhead" => pipexp::pipeline_overhead(rt, scale),
         "accountant" => pipexp::accountant_table(rt, scale),
         "shard-scaling" => shardexp::shard_scaling(rt, scale),
+        "hybrid-scaling" => hybridexp::hybrid_scaling(rt, scale),
         "all" => {
             for name in [
-                "accountant", "fig1", "pipeline-overhead", "shard-scaling", "table1",
-                "table2", "fig3", "fig2", "table6", "table5", "table11", "table3",
+                "accountant", "fig1", "pipeline-overhead", "shard-scaling", "hybrid-scaling",
+                "table1", "table2", "fig3", "fig2", "table6", "table5", "table11", "table3",
                 "table4", "table10", "fig5", "fig6", "fig7",
             ] {
                 eprintln!("==== exp {name} ====");

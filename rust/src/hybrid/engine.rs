@@ -1,0 +1,489 @@
+//! `HybridEngine` — R data-parallel replicas, each a full S-stage pipeline,
+//! over disjoint slices of ONE global Poisson draw, with per-piece
+//! clipping at the (replica, stage) granularity.
+//!
+//! Execution is sequential on the host (the PJRT CPU client already uses
+//! every core per executable call), but each replica's stage calls are
+//! timed and replayed: the GPipe schedule model yields per-stage
+//! gradient-ready times, and [`ReduceModel`] overlays the cross-replica
+//! reductions on top — stage `st`'s fanout-f tree all-reduce starts the
+//! moment its gradient drains from the pipeline, while earlier stages are
+//! still back-propagating.
+//!
+//! RNG discipline (the parity contract with both 1D backends): per step
+//! the shared [`DpCore`] RNG is consumed in exactly this order —
+//! (1) one global Poisson draw, (2) gradient noise in replica-major,
+//! stage-major, tensor order, (3) the private quantile release. With one
+//! replica this is the [`PipelineEngine`] sequence verbatim; the noise
+//! share each piece adds is `std_g / sqrt(R)`, so with one replica the
+//! share IS the full per-stage std.
+//!
+//! [`DpCore`]: crate::session::DpCore
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::noise::add_noise;
+use crate::coordinator::optimizer::OptimizerKind;
+use crate::data::Dataset;
+use crate::pipeline::schedule::stage_grad_ready;
+use crate::pipeline::{PipelineEngine, PipelineMode, PipelineOpts};
+use crate::runtime::{ConfigManifest, Runtime, Tensor};
+use crate::session::core::DpCore;
+use crate::shard::reduce::{tree_reduce, ReduceModel};
+use crate::shard::sampler::ShardSampler;
+
+/// How clipping-threshold groups tile the (replica, stage) grid (resolved
+/// from `HybridSpec.grouping` by the session builder).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PieceGrouping {
+    /// every (replica, stage) piece owns its own threshold (K = R x S) —
+    /// the paper's per-device scheme on the full 2D grid
+    PerPiece,
+    /// one threshold per stage, shared across replicas (K = S)
+    PerStage,
+}
+
+impl PieceGrouping {
+    pub fn token(&self) -> &'static str {
+        match self {
+            PieceGrouping::PerPiece => "per-piece",
+            PieceGrouping::PerStage => "per-stage",
+        }
+    }
+}
+
+/// Backend wiring computed by the session builder (crate-internal: like
+/// the other engines, the hybrid backend has no public constructor).
+pub(crate) struct HybridWiring {
+    pub replicas: usize,
+    pub fanout: usize,
+    pub overlap: bool,
+    pub link_latency: f64,
+    pub grouping: PieceGrouping,
+    /// `PerDevice` (per-piece clipping) or `NonPrivate`
+    pub mode: PipelineMode,
+    pub n_micro: usize,
+    /// global expected live batch E[B] (normalizes the merged update)
+    pub expected_batch: usize,
+    /// Poisson rate of the one global draw, q = E[B]/n
+    pub rate: f64,
+    pub total_steps: u64,
+    pub n_data: usize,
+    pub optimizer: OptimizerKind,
+    pub lr: f64,
+    pub seed: u64,
+    /// echoed into each replica's `PipelineOpts`; like the per-device
+    /// pipeline sim (whose `makespan` charges it only on the flat-sync
+    /// regrad barrier), the hybrid makespans do NOT charge it — the
+    /// cross-replica reduction's per-round cost is `link_latency`, and
+    /// keeping the compute side identical is what makes the R = 1 sim
+    /// equal the pipeline backend's
+    pub sync_latency: f64,
+    pub clip_init: f64,
+    pub target_q: f64,
+    pub quantile_eta: f64,
+}
+
+/// Per-step report of the hybrid backend.
+#[derive(Debug, Clone)]
+pub struct HybridStepStats {
+    pub step: u64,
+    pub loss: f64,
+    /// live examples across all replicas this step
+    pub batch_size: usize,
+    /// fraction clipped per threshold group (empty for non-private runs)
+    pub clip_frac: Vec<f64>,
+    /// examples the global draw included but total capacity dropped
+    pub truncated: usize,
+    /// measured host seconds for the whole step
+    pub host_secs: f64,
+    /// simulated R x S step latency under the configured reduction
+    pub sim_secs: f64,
+    /// simulated latency with each stage's cross-replica reduction
+    /// overlapped into the remaining backward pass
+    pub sim_overlap_secs: f64,
+    /// simulated latency with a reduce-after-backward barrier
+    pub sim_barrier_secs: f64,
+    /// depth of the cross-replica reduction tree, ceil(log_fanout R)
+    pub syncs: usize,
+    /// executable invocations across all replicas and stages
+    pub calls: usize,
+}
+
+pub struct HybridEngine<'r> {
+    pub runtime: &'r Runtime,
+    pub config_name: String,
+    pub cfg: ConfigManifest,
+    /// the ONE shared DP state: plan, piece thresholds, noise, RNG
+    pub core: DpCore,
+    /// data-parallel replicas R
+    pub replicas_n: usize,
+    /// pipeline stages S (from the manifest)
+    pub n_stages: usize,
+    pub fanout: usize,
+    pub overlap: bool,
+    pub total_steps: u64,
+    pub step_count: u64,
+    grouping: PieceGrouping,
+    private: bool,
+    n_micro: usize,
+    replicas: Vec<PipelineEngine<'r>>,
+    sampler: ShardSampler,
+    /// global E[B] normalizing the merged update
+    expected_batch: f64,
+    /// trainable element count per stage (reduction payload sizing)
+    stage_dims: Vec<f64>,
+    reduce_model: ReduceModel,
+}
+
+impl<'r> HybridEngine<'r> {
+    /// Crate-private constructor: all DP state arrives in `core` (K must
+    /// match the resolved piece grouping), all schedule/topology decisions
+    /// in `wiring`. Only `session::SessionBuilder` builds these.
+    pub(crate) fn with_core(
+        runtime: &'r Runtime,
+        config_name: &str,
+        w: HybridWiring,
+        core: DpCore,
+    ) -> Result<Self> {
+        let cfg = runtime.manifest.config(config_name)?.clone();
+        let stages = cfg.stages.clone().ok_or_else(|| {
+            anyhow!(
+                "config {config_name} has no pipeline stages; the hybrid backend composes \
+                 pipeline x data parallelism — use [shard] for pure data parallelism"
+            )
+        })?;
+        let s = stages.stages.len();
+        if w.replicas == 0 {
+            return Err(anyhow!("hybrid backend needs replicas > 0"));
+        }
+        let private = w.mode == PipelineMode::PerDevice;
+        if w.mode == PipelineMode::FlatSync {
+            return Err(anyhow!(
+                "the hybrid backend supports per-device clipping (or non-private); \
+                 flat-sync is pipeline-only"
+            ));
+        }
+        let expect_k = if private {
+            match w.grouping {
+                PieceGrouping::PerPiece => w.replicas * s,
+                PieceGrouping::PerStage => s,
+            }
+        } else {
+            1
+        };
+        if core.k() != expect_k {
+            return Err(anyhow!(
+                "DpCore has {} threshold groups but {} grouping over {} replicas x {} stages \
+                 needs {}",
+                core.k(),
+                w.grouping.token(),
+                w.replicas,
+                s,
+                expect_k
+            ));
+        }
+
+        // R full pipeline replicas around inert shell cores: thresholds
+        // reach them explicitly via collect_weighted, noise and RNG live
+        // only in the hybrid's own core. One checkpoint read fans out to
+        // every replica, so they start bit-identical.
+        let ck = crate::runtime::checkpoint::read(
+            runtime.manifest.hlo_path(&cfg.init_checkpoint),
+        )?;
+        let shell_k = if private { s } else { 1 };
+        let mut replicas = Vec::with_capacity(w.replicas);
+        for _ in 0..w.replicas {
+            let opts = PipelineOpts {
+                mode: w.mode,
+                n_micro: w.n_micro,
+                expected_batch: (w.expected_batch / w.replicas).max(1),
+                clip: w.clip_init,
+                sigma: 0.0,
+                lr: w.lr,
+                optimizer: w.optimizer,
+                seed: w.seed,
+                sync_latency: w.sync_latency,
+                adaptive: false,
+                target_q: w.target_q,
+                quantile_eta: w.quantile_eta,
+            };
+            replicas.push(PipelineEngine::with_core_from_ck(
+                runtime,
+                config_name,
+                opts,
+                DpCore::shell(shell_k),
+                &ck,
+            )?);
+        }
+        let minibatch = replicas[0].minibatch();
+        let stage_dims = replicas[0].stage_trainable_dims();
+
+        Ok(HybridEngine {
+            runtime,
+            config_name: config_name.to_string(),
+            core,
+            replicas_n: w.replicas,
+            n_stages: s,
+            fanout: w.fanout,
+            overlap: w.overlap,
+            total_steps: w.total_steps,
+            step_count: 0,
+            grouping: w.grouping,
+            private,
+            n_micro: w.n_micro,
+            sampler: ShardSampler::new(w.n_data, w.rate, w.replicas, minibatch),
+            expected_batch: w.expected_batch as f64,
+            stage_dims,
+            reduce_model: ReduceModel::new(w.replicas, w.fanout, w.link_latency),
+            replicas,
+            cfg,
+        })
+    }
+
+    pub fn grouping(&self) -> PieceGrouping {
+        self.grouping
+    }
+
+    /// Static per-replica pipeline minibatch (microbatch x J).
+    pub fn minibatch(&self) -> usize {
+        self.replicas[0].minibatch()
+    }
+
+    /// Global static capacity: replicas x the per-replica minibatch.
+    pub fn capacity(&self) -> usize {
+        self.replicas_n * self.minibatch()
+    }
+
+    /// Current per-group clipping thresholds (R x S for per-piece
+    /// grouping, S for per-stage).
+    pub fn thresholds(&self) -> &[f64] {
+        self.core.thresholds()
+    }
+
+    /// Threshold-group labels matching [`HybridEngine::thresholds`].
+    pub fn group_labels(&self) -> Vec<String> {
+        if !self.private {
+            return vec!["flat".to_string()];
+        }
+        match self.grouping {
+            PieceGrouping::PerPiece => (0..self.replicas_n)
+                .flat_map(|r| (0..self.n_stages).map(move |st| format!("r{r}s{st}")))
+                .collect(),
+            PieceGrouping::PerStage => {
+                (0..self.n_stages).map(|st| format!("stage{st}")).collect()
+            }
+        }
+    }
+
+    /// Group index of piece (replica `r`, stage `st`).
+    fn group_of(&self, r: usize, st: usize) -> usize {
+        if !self.private {
+            return 0;
+        }
+        match self.grouping {
+            PieceGrouping::PerPiece => r * self.n_stages + st,
+            PieceGrouping::PerStage => st,
+        }
+    }
+
+    /// All parameters of replica 0 as a name -> tensor map (the merged
+    /// update keeps every replica bit-identical; see
+    /// [`HybridEngine::replicas_in_sync`]).
+    pub fn dump_params(&self) -> HashMap<String, Tensor> {
+        self.replicas[0].dump_params()
+    }
+
+    /// Load parameters by name on EVERY replica; names absent from the
+    /// map keep their init values (LoRA adapters).
+    pub fn load_params(&mut self, map: &HashMap<String, Tensor>) -> Result<()> {
+        for e in self.replicas.iter_mut() {
+            e.load_params(map)?;
+        }
+        Ok(())
+    }
+
+    /// True when every replica's parameters are bitwise equal to replica
+    /// 0's — the invariant the merged update maintains.
+    pub fn replicas_in_sync(&self) -> bool {
+        let p0 = self.replicas[0].dump_params();
+        self.replicas.iter().skip(1).all(|e| {
+            let p = e.dump_params();
+            p.len() == p0.len()
+                && p.iter().all(|(name, t)| {
+                    p0.get(name)
+                        .map(|t0| t0.shape == t.shape && t0.data == t.data)
+                        .unwrap_or(false)
+                })
+        })
+    }
+
+    /// Topology line for `Session::describe` / the CLI.
+    pub fn describe_topology(&self) -> String {
+        let c: Vec<String> = self.core.thresholds().iter().map(|c| format!("{c:.4}")).collect();
+        format!(
+            "replicas={} stages={} fanout={} reduction={} grouping={} thresholds=[{}]",
+            self.replicas_n,
+            self.n_stages,
+            self.fanout,
+            if self.overlap { "overlapped" } else { "barrier" },
+            self.grouping.token(),
+            c.join(", ")
+        )
+    }
+
+    /// One hybrid DP step: global Poisson draw dealt across replicas ->
+    /// per-replica pipeline backward with per-piece clipping -> local
+    /// noise shares sigma_g/sqrt(R) -> per-stage cross-replica
+    /// tree-reduction -> one merged update broadcast to every replica ->
+    /// private quantile release over all piece groups.
+    pub fn step(&mut self, data: &dyn Dataset) -> Result<HybridStepStats> {
+        let host_t0 = Instant::now();
+        let r_n = self.replicas_n;
+        let s = self.n_stages;
+        let k = self.core.k();
+        let batch = self.sampler.sample(&mut self.core.rng);
+        let live_global = batch.live;
+        let thr = self.core.thresholds().to_vec();
+
+        let mut clip_counts = vec![0f64; k];
+        let mut replica_lives = vec![0usize; r_n];
+        let mut loss_wsum = 0f64;
+        let mut weight_sum = 0f64;
+        let mut calls = 0usize;
+        let mut collected = Vec::with_capacity(r_n);
+        for r in 0..r_n {
+            let slice = &batch.slices[r];
+            replica_lives[r] = slice.live();
+            let piece_thr: Vec<f64> = if self.private {
+                (0..s).map(|st| thr[self.group_of(r, st)]).collect()
+            } else {
+                vec![1e9; s]
+            };
+            let col =
+                self.replicas[r].collect_weighted(data, &slice.indices, &slice.weights, &piece_thr)?;
+            if self.private {
+                for st in 0..s {
+                    clip_counts[self.group_of(r, st)] += col.clip_counts[st];
+                }
+            }
+            loss_wsum += col.loss_wsum;
+            weight_sum += col.weight_sum;
+            calls += col.calls;
+            collected.push(col);
+        }
+
+        // -------- simulated R x S latency (overlap vs barrier) -----------
+        // A real cluster runs the replicas concurrently, so the modeled
+        // compute side is one representative replica (mean of the measured
+        // per-op durations): per-stage gradient-ready times out of the
+        // GPipe schedule, reductions queued FIFO in ready order.
+        let mut ready_mean = vec![0f64; s];
+        for col in &collected {
+            let (ready, _span) =
+                stage_grad_ready(s, self.n_micro, &|op| {
+                    col.durations.get(op).copied().unwrap_or(0.0)
+                });
+            for (a, b) in ready_mean.iter_mut().zip(&ready) {
+                *a += b / r_n as f64;
+            }
+        }
+        let mut order: Vec<usize> = (0..s).collect();
+        order.sort_by(|&a, &b| ready_mean[a].partial_cmp(&ready_mean[b]).unwrap());
+        let ready_sorted: Vec<f64> = order.iter().map(|&st| ready_mean[st]).collect();
+        let red_sorted: Vec<f64> = order
+            .iter()
+            .map(|&st| self.reduce_model.layer_cost(4.0 * self.stage_dims[st]))
+            .collect();
+        let sim_overlap = self.reduce_model.overlap_makespan_at(&ready_sorted, &red_sorted);
+        let sim_barrier = self.reduce_model.barrier_makespan_at(&ready_sorted, &red_sorted);
+
+        // -------- local noise shares, replica-major then stage-major ------
+        // Piece (r, st) adds std_g / sqrt(R): the R independent shares
+        // merge (variances add) to exactly the accountant's per-group std
+        // on every stage's merged gradient. The iteration order is the RNG
+        // discipline that makes R = 1 bitwise-identical to the pipeline
+        // backend (its noise loop is stage-major in the same tensor order).
+        let stds = if self.private { self.core.noise_stds() } else { vec![0.0; k] };
+        let share = 1.0 / (r_n as f64).sqrt();
+        for (r, col) in collected.iter_mut().enumerate() {
+            for st in 0..s {
+                let std = stds[self.group_of(r, st)] * share;
+                for g in col.grads[st].iter_mut() {
+                    add_noise(&mut g.data, std, &mut self.core.rng);
+                }
+            }
+        }
+
+        // -------- per-stage tree-reduction across replicas ----------------
+        // Algorithm 1 line 14: normalize the merged sum by the global E[B]
+        // (a 1-participant tree is the bitwise identity, so R = 1 keeps
+        // the pipeline backend's exact float sequence: noise, /E[B], apply)
+        let mut parts_by_stage: Vec<Vec<Vec<Tensor>>> =
+            (0..s).map(|_| Vec::with_capacity(r_n)).collect();
+        for col in collected {
+            for (st, g) in col.grads.into_iter().enumerate() {
+                parts_by_stage[st].push(g);
+            }
+        }
+        let expected = self.expected_batch;
+        let mut merged: Vec<Vec<Tensor>> = Vec::with_capacity(s);
+        for parts in parts_by_stage {
+            let mut m = tree_reduce(parts, self.fanout);
+            for t in m.iter_mut() {
+                for v in t.data.iter_mut() {
+                    *v /= expected as f32;
+                }
+            }
+            merged.push(m);
+        }
+
+        // one merged update applied to every replica (identical optimizer
+        // states + identical grads keep the replicas bit-identical)
+        for e in self.replicas.iter_mut() {
+            e.apply_update(&merged);
+        }
+
+        // private quantile release over all R x S piece groups at once
+        if self.private && self.core.is_adaptive() {
+            self.core.update_thresholds(&clip_counts);
+        }
+
+        self.step_count += 1;
+        let clip_frac: Vec<f64> = if self.private {
+            (0..k)
+                .map(|g| {
+                    let denom = match self.grouping {
+                        PieceGrouping::PerPiece => replica_lives[g / s],
+                        PieceGrouping::PerStage => live_global,
+                    }
+                    .max(1) as f64;
+                    1.0 - clip_counts[g] / denom
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        Ok(HybridStepStats {
+            step: self.step_count,
+            loss: loss_wsum / weight_sum.max(1.0),
+            batch_size: live_global,
+            clip_frac,
+            truncated: batch.truncated,
+            host_secs: host_t0.elapsed().as_secs_f64(),
+            sim_secs: if self.overlap { sim_overlap } else { sim_barrier },
+            sim_overlap_secs: sim_overlap,
+            sim_barrier_secs: sim_barrier,
+            syncs: self.reduce_model.rounds(),
+            calls,
+        })
+    }
+
+    /// Mean eval loss over `data` through replica 0's pipeline.
+    pub fn evaluate(&self, data: &dyn Dataset) -> Result<f64> {
+        self.replicas[0].evaluate(data)
+    }
+}

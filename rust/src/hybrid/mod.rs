@@ -1,0 +1,56 @@
+//! Hybrid 2D-parallel DP training backend — pipeline stages x
+//! data-parallel replicas, the paper's per-device clipping scheme on the
+//! full (replica, stage) grid. This is the composition the headline
+//! GPT-3 result implies: the model is partitioned into S pipeline stages
+//! AND replicated R ways, and every one of the R x S *pieces* clips its
+//! local per-example gradient piece against its own threshold on its own
+//! host device.
+//!
+//! Each simulated replica owns a full S-stage pipeline (the
+//! [`PipelineEngine`](crate::pipeline::PipelineEngine) machinery,
+//! composed through its crate-private `collect_weighted` seam) and a
+//! **disjoint slice of one global Poisson draw**: the engine samples once
+//! at rate `q = E[B]/n` through the generalized
+//! [`ShardSampler`](crate::shard::ShardSampler), deals the live examples
+//! round-robin across replicas, and pads every slice to the static
+//! pipeline minibatch. Replica `r` then
+//!
+//! 1. runs its GPipe forward/backward wavefront, clipping each
+//!    per-example gradient piece on stage `st` against its threshold
+//!    group `C_(r,st)` (per-piece grouping; per-stage grouping shares
+//!    `C_st` across replicas),
+//! 2. adds its **share** of the Gaussian noise locally — std
+//!    `sigma_g / sqrt(R)` per group, so the merged sum carries exactly
+//!    the per-group std the accountant calibrated (variances add across
+//!    the R independent shares),
+//! 3. feeds each stage's summed gradient into a **fanout-f cross-replica
+//!    tree-reduction that overlaps the pipeline's own backward**: stage
+//!    `st`'s reduction rounds start the moment its gradient drains from
+//!    the schedule, while earlier stages are still back-propagating —
+//!    the paper's clip-in-conjunction-with-backprop overlap lifted to
+//!    the 2D grid (`ReduceModel::overlap_makespan_at` over
+//!    `schedule::stage_grad_ready` times).
+//!
+//! **Sensitivity.** Every example lands on exactly one replica `r`; its
+//! gradient spans that replica's S stage pieces, each clipped to
+//! `C_(r,st)`, so removing one example moves the merged update by at most
+//! `sqrt(sum_st C_(r,st)^2) <= sqrt(sum_(r,st) C_(r,st)^2)` — the
+//! quadrature sum over the WHOLE R x S threshold grid (property-tested in
+//! `prop_hybrid_2d_quadrature_bound_and_noise_shares`). The shared
+//! [`DpCore`](crate::session::DpCore) therefore sees **one release per
+//! step at `q = E[B]/n`, independent of both R and S**; the grid changes
+//! wall-clock structure, never the privacy analysis.
+//!
+//! **Degeneracies** (the parity contracts pinned by integration tests):
+//! with R = 1 the engine is the pipeline backend seed-for-seed (identity
+//! tree, full noise share, same RNG order); a `[hybrid]` section on a
+//! stage-less config routes to the sharded backend (the grid has no
+//! pipeline axis), bit-identical to the same run spelled `[shard]`.
+//!
+//! Construction goes through `session::SessionBuilder` only (add a
+//! `[hybrid]` section to the spec, or `.hybrid(HybridSpec::..)`); there
+//! is no raw-sigma entry point.
+
+pub mod engine;
+
+pub use engine::{HybridEngine, HybridStepStats, PieceGrouping};

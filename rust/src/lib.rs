@@ -44,14 +44,16 @@
 //! Runs are also declarable as TOML/JSON spec files executed by
 //! `gwclip run --spec run.toml` (see `docs/SESSION_API.md`). The session
 //! builder is the *only* construction surface: the legacy `Trainer::new` /
-//! `PipelineEngine::new` raw-sigma shims are retired, and all three
-//! backends — single-device, pipeline-parallel, and the sharded
-//! data-parallel [`shard::ShardEngine`] — receive their DP state through
-//! the same shared [`session::DpCore`].
+//! `PipelineEngine::new` raw-sigma shims are retired, and every backend —
+//! single-device, pipeline-parallel, the sharded data-parallel
+//! [`shard::ShardEngine`], and the hybrid 2D-parallel
+//! [`hybrid::HybridEngine`] (pipeline stages x data-parallel replicas) —
+//! receives its DP state through the same shared [`session::DpCore`].
 
 pub mod coordinator;
 pub mod data;
 pub mod exp;
+pub mod hybrid;
 pub mod metrics;
 pub mod pipeline;
 pub mod runtime;

@@ -13,8 +13,8 @@ use gwclip::coordinator::trainer::Method;
 use gwclip::pipeline::PipelineMode;
 use gwclip::runtime::Runtime;
 use gwclip::session::{
-    ClipMode, ClipPolicy, DataSpec, GroupBy, OptimSpec, PrivacySpec, RunSpec, Sampling, Session,
-    SessionBuilder, ShardGrouping,
+    ClipMode, ClipPolicy, DataSpec, GroupBy, HybridGrouping, HybridSpec, OptimSpec, PrivacySpec,
+    RunSpec, Sampling, Session, SessionBuilder, ShardGrouping,
 };
 use gwclip::util::cli::Args;
 
@@ -38,9 +38,18 @@ USAGE:
                   [--epochs 1] [--lr 0.25] [--clip 1] [--n-data 4096] [--seed 0]
                   (sharded data-parallel backend: per-device clipping across N
                   replicas, overlapped tree-reduction; flags override the spec)
+  gwclip hybrid   [--spec run.toml] [--config lm_mid_pipe_lora] [--replicas 2]
+                  [--fanout 2] [--no-overlap] [--grouping auto|per-piece|per-stage]
+                  [--mode fixed|adaptive|non-private] [--epsilon 1] [--delta 1e-5]
+                  [--epochs 1] [--steps N] [--n-micro 4] [--clip 0.01] [--lr 5e-3]
+                  [--n-data 2048] [--seed 0]
+                  (hybrid 2D backend: R data-parallel replicas x the config's
+                  pipeline stages, per-piece clipping, overlapped cross-replica
+                  tree-reduction; flags override the spec; steps default to
+                  epochs-derived)
   gwclip exp <which>   table1|table2|table3|table4|table5|table6|table10|table11|
                        fig1|fig2|fig3|fig5|fig6|fig7|pipeline-overhead|accountant|
-                       shard-scaling|all   [--paper-scale]
+                       shard-scaling|hybrid-scaling|all   [--paper-scale]
   common: [--artifacts DIR]
 ";
 
@@ -63,6 +72,7 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&rt, &args),
         Some("pipeline") => cmd_pipeline(&rt, &args),
         Some("shard") => cmd_shard(&rt, &args),
+        Some("hybrid") => cmd_hybrid(&rt, &args),
         Some("exp") => {
             let which = args
                 .positional
@@ -150,6 +160,28 @@ fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
     )
 }
 
+/// Shared `--spec` flag-override block for the shard/hybrid shorthands:
+/// every documented common flag overrides the spec file; absent flags
+/// keep the spec's values.
+fn apply_common_overrides(s: &mut RunSpec, args: &Args) -> Result<()> {
+    if let Some(c) = args.flags.get("config") {
+        s.config = c.clone();
+    }
+    if let Some(m) = args.flags.get("mode") {
+        s.clip.mode = m.parse()?;
+    }
+    s.privacy.epsilon = args.get_f64("epsilon", s.privacy.epsilon)?;
+    s.privacy.delta = args.get_f64("delta", s.privacy.delta)?;
+    s.privacy.quantile_r = args.get_f64("quantile-r", s.privacy.quantile_r)?;
+    s.clip.clip_init = args.get_f64("clip", s.clip.clip_init)?;
+    s.clip.target_q = args.get_f64("quantile", s.clip.target_q)?;
+    s.optim.lr = args.get_f64("lr", s.optim.lr)?;
+    s.epochs = args.get_f64("epochs", s.epochs)?;
+    s.data.n_data = args.get_usize("n-data", s.data.n_data)?;
+    s.seed = args.get_u64("seed", s.seed)?;
+    Ok(())
+}
+
 /// Sharded data-parallel run: N full replicas, per-device (or flat)
 /// clipping, local noise shares, overlapped tree-reduction. Starts from a
 /// `--spec` file when given (injecting a default `[shard]` section if the
@@ -160,24 +192,8 @@ fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
 fn cmd_shard(rt: &Runtime, args: &Args) -> Result<()> {
     let mut spec = match args.flags.get("spec") {
         Some(path) => {
-            // every documented flag overrides the spec file; absent flags
-            // keep the spec's values
             let mut s = RunSpec::from_path(path)?;
-            if let Some(c) = args.flags.get("config") {
-                s.config = c.clone();
-            }
-            if let Some(m) = args.flags.get("mode") {
-                s.clip.mode = m.parse()?;
-            }
-            s.privacy.epsilon = args.get_f64("epsilon", s.privacy.epsilon)?;
-            s.privacy.delta = args.get_f64("delta", s.privacy.delta)?;
-            s.privacy.quantile_r = args.get_f64("quantile-r", s.privacy.quantile_r)?;
-            s.clip.clip_init = args.get_f64("clip", s.clip.clip_init)?;
-            s.clip.target_q = args.get_f64("quantile", s.clip.target_q)?;
-            s.optim.lr = args.get_f64("lr", s.optim.lr)?;
-            s.epochs = args.get_f64("epochs", s.epochs)?;
-            s.data.n_data = args.get_usize("n-data", s.data.n_data)?;
-            s.seed = args.get_u64("seed", s.seed)?;
+            apply_common_overrides(&mut s, args)?;
             s
         }
         None => {
@@ -239,6 +255,80 @@ fn cmd_shard(rt: &Runtime, args: &Args) -> Result<()> {
         }
     }
     spec.shard = Some(sh);
+    spec.hybrid = None; // the shard section governs this run
+    spec.validate()?;
+    if args.has("print-spec") {
+        println!("{}", spec.render_json());
+    }
+    run_session(SessionBuilder::from_spec(rt, spec))
+}
+
+/// Hybrid 2D-parallel run: R data-parallel replicas, each a full pipeline
+/// over the config's stages, per-piece clipping, local noise shares,
+/// overlapped cross-replica tree-reduction. Starts from a `--spec` file
+/// when given (injecting a default `[hybrid]` section if the file lacks
+/// one) and applies flag overrides on top; otherwise builds the spec from
+/// flags alone. The accountant sees one release per step at q = E[B]/n
+/// regardless of the replica or stage count; per-step reports carry both
+/// the overlapped and barrier reduction makespans plus truncated draws.
+fn cmd_hybrid(rt: &Runtime, args: &Args) -> Result<()> {
+    let mut spec = match args.flags.get("spec") {
+        Some(path) => {
+            let mut s = RunSpec::from_path(path)?;
+            apply_common_overrides(&mut s, args)?;
+            s.pipe.n_micro = args.get_usize("n-micro", s.pipe.n_micro)?;
+            s.pipe.steps = args.get_usize("steps", s.pipe.steps)?;
+            s
+        }
+        None => {
+            let seed = args.get_u64("seed", 0)?;
+            let mode: ClipMode = args.get("mode", "fixed").parse()?;
+            let clip = if mode == ClipMode::NonPrivate {
+                ClipPolicy::non_private()
+            } else {
+                ClipPolicy {
+                    clip_init: args.get_f64("clip", 1e-2)?,
+                    target_q: args.get_f64("quantile", 0.5)?,
+                    ..ClipPolicy::new(GroupBy::PerDevice, mode)
+                }
+            };
+            let mut s = RunSpec::for_config(&args.get("config", "lm_mid_pipe_lora"));
+            s.clip = clip;
+            s.privacy = PrivacySpec {
+                epsilon: args.get_f64("epsilon", 1.0)?,
+                delta: args.get_f64("delta", 1e-5)?,
+                quantile_r: args.get_f64(
+                    "quantile-r",
+                    if mode == ClipMode::Adaptive { 0.01 } else { 0.0 },
+                )?,
+            };
+            s.optim = OptimSpec::adam(args.get_f64("lr", 5e-3)?);
+            s.data = DataSpec {
+                task: args.get("task", "auto"),
+                n_data: args.get_usize("n-data", 2048)?,
+                seed,
+            };
+            s.epochs = args.get_f64("epochs", 1.0)?;
+            s.pipe.n_micro = args.get_usize("n-micro", 4)?;
+            // 0 = derive the step count from epochs; an explicit --steps
+            // needs a staged config (stage-less [hybrid] runs degenerate
+            // to the sharded backend, which schedules from epochs only)
+            s.pipe.steps = args.get_usize("steps", 0)?;
+            s.seed = seed;
+            s
+        }
+    };
+    let mut hy = spec.hybrid.unwrap_or_default();
+    hy.replicas = args.get_usize("replicas", hy.replicas)?;
+    hy.fanout = args.get_usize("fanout", hy.fanout)?;
+    if args.has("no-overlap") {
+        hy.overlap = false;
+    }
+    if let Some(g) = args.flags.get("grouping") {
+        hy.grouping = g.parse::<HybridGrouping>()?;
+    }
+    spec.hybrid = Some(hy);
+    spec.shard = None; // the hybrid section governs this run
     spec.validate()?;
     if args.has("print-spec") {
         println!("{}", spec.render_json());

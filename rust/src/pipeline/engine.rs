@@ -159,6 +159,36 @@ struct StageDevice {
     eval: Option<Arc<Exec>>,
 }
 
+/// Pre-noise output of one collected per-device step: the raw per-stage
+/// summed trainable gradients plus everything the caller needs to finish
+/// the step (noise, normalization, threshold update, makespan). This is
+/// the seam the hybrid backend composes through — one `CollectedStep` per
+/// data-parallel replica, merged across replicas before noise is applied.
+pub(crate) struct CollectedStep {
+    /// summed trainable gradients per stage, pre-noise, un-normalized
+    pub grads: Vec<Vec<Tensor>>,
+    /// live examples whose stage-piece norm fell at or under the stage
+    /// threshold, per stage (the adaptive quantile statistic)
+    pub clip_counts: Vec<f64>,
+    /// measured per-op durations for the makespan model
+    pub durations: HashMap<Op, f64>,
+    pub loss_wsum: f64,
+    pub weight_sum: f64,
+    pub calls: usize,
+}
+
+/// Live (weight > 0) examples whose reported norm is at or under `thr`;
+/// padded slots carry real norms for masked content and must not leak
+/// into the private quantile statistic.
+fn count_clipped(norms: &Tensor, weights: &[f32], thr: f64) -> f64 {
+    norms
+        .data
+        .iter()
+        .zip(weights)
+        .filter(|&(&n, &w)| w > 0.0 && (n as f64) <= thr)
+        .count() as f64
+}
+
 /// Per-step report.
 #[derive(Debug, Clone)]
 pub struct PipeStepStats {
@@ -183,7 +213,6 @@ pub struct PipelineEngine<'r> {
     /// shared DP state: thresholds (one per device for PerDevice, one
     /// global for FlatSync), noise multiplier, quantile state, RNG
     pub core: DpCore,
-    pending_counts: Vec<f64>,
     pub steps_done: u64,
 }
 
@@ -196,6 +225,22 @@ impl<'r> PipelineEngine<'r> {
         config_name: &str,
         opts: PipelineOpts,
         core: DpCore,
+    ) -> Result<Self> {
+        let cfg = runtime.manifest.config(config_name)?.clone();
+        let ck = checkpoint::read(runtime.manifest.hlo_path(&cfg.init_checkpoint))?;
+        Self::with_core_from_ck(runtime, config_name, opts, core, &ck)
+    }
+
+    /// [`PipelineEngine::with_core`] against an already-read init
+    /// checkpoint map: the hybrid backend reads the checkpoint ONCE and
+    /// fans it out to its R replica engines (the same single-read pattern
+    /// as `Runtime::init_replicas`).
+    pub(crate) fn with_core_from_ck(
+        runtime: &'r Runtime,
+        config_name: &str,
+        opts: PipelineOpts,
+        core: DpCore,
+        ck: &HashMap<String, Tensor>,
     ) -> Result<Self> {
         if opts.n_micro == 0 {
             return Err(anyhow!("pipeline needs n_micro > 0"));
@@ -216,7 +261,6 @@ impl<'r> PipelineEngine<'r> {
                 expect_k
             ));
         }
-        let ck = checkpoint::read(runtime.manifest.hlo_path(&cfg.init_checkpoint))?;
 
         let mut devices = Vec::with_capacity(n_stages);
         for (s, sinfo) in stages.stages.iter().enumerate() {
@@ -260,7 +304,6 @@ impl<'r> PipelineEngine<'r> {
             micro_batch: cfg.batch,
             devices,
             core,
-            pending_counts: vec![0.0; n_stages],
             steps_done: 0,
             opts,
         })
@@ -350,207 +393,15 @@ impl<'r> PipelineEngine<'r> {
         indices: &[usize],
         weights: &[f32],
     ) -> Result<PipeStepStats> {
-        assert_eq!(indices.len(), self.minibatch());
-        assert_eq!(weights.len(), self.minibatch());
-        let j = self.opts.n_micro;
-        let s = self.n_stages;
-        let b = self.micro_batch;
+        if self.opts.mode == PipelineMode::FlatSync {
+            return self.step_flat_sync(data, indices, weights);
+        }
         let host_t0 = Instant::now();
-        let mut durations: HashMap<Op, f64> = HashMap::new();
-        let mut calls = 0usize;
-
-        let micro: Vec<ModelBatch> =
-            (0..j).map(|m| data.batch(&indices[m * b..(m + 1) * b])).collect();
-        let tokens: Vec<(HostValue, HostValue)> = micro.iter().map(|m| m.inputs()).collect();
-        // per-microbatch weight tensors fed to every backward executable
-        let micro_w: Vec<Tensor> = (0..j)
-            .map(|m| Tensor::from_vec(&[b], weights[m * b..(m + 1) * b].to_vec()))
-            .collect::<Result<_>>()?;
-
-        // -------- forward wavefront: acts[s][m] = input act of stage s ----
-        let mut acts: Vec<Vec<Option<Tensor>>> = vec![vec![None; j]; s];
-        for m in 0..j {
-            for st in 0..s - 1 {
-                let x_in = self.stage_x_in(st, m, &tokens, &acts);
-                let d = &self.devices[st];
-                let t0 = Instant::now();
-                let out = d.fwd.as_ref().unwrap().call(&d.params, &[x_in])?;
-                durations.insert(
-                    Op { stage: st, micro: m, phase: Phase::Fwd },
-                    t0.elapsed().as_secs_f64(),
-                );
-                calls += 1;
-                acts[st + 1][m] = Some(out.into_iter().next().unwrap());
-            }
-        }
-
-        let mut loss_total = 0f64;
-        // per-device/non-private: global weighted mean across ALL live
-        // examples (sum_m loss_m * livecount_m / sum_m livecount_m), so
-        // unevenly padded microbatches weigh examples equally — matching
-        // the single-device backend's definition
-        let mut loss_wsum = 0f64;
-        let mut weight_sum = 0f64;
-        let mut syncs = 1usize; // end-of-step optimizer barrier
-
-        match self.opts.mode {
-            PipelineMode::PerDevice | PipelineMode::NonPrivate => {
-                let nonpriv = self.opts.mode == PipelineMode::NonPrivate;
-                for m in 0..j {
-                    // last stage: fused loss+bwd, clipping local piece
-                    let c_last = if nonpriv { 1e9 } else { self.threshold(s - 1) };
-                    let x_in = self.stage_x_in(s - 1, m, &tokens, &acts);
-                    let dlast = &self.devices[s - 1];
-                    let exec = dlast.loss_bwd.as_ref().unwrap().clone();
-                    let t0 = Instant::now();
-                    let outs = exec.call(
-                        &dlast.params,
-                        &[
-                            x_in,
-                            tokens[m].1.clone(),
-                            HostValue::F32(Tensor::scalar(c_last as f32)),
-                            HostValue::F32(micro_w[m].clone()),
-                        ],
-                    )?;
-                    durations.insert(
-                        Op { stage: s - 1, micro: m, phase: Phase::Bwd },
-                        t0.elapsed().as_secs_f64(),
-                    );
-                    calls += 1;
-                    // the executable reports the weighted MEAN over this
-                    // microbatch; recover the weighted sum via the live
-                    // weight mass so the step loss is a global mean
-                    let w_m: f64 = weights[m * b..(m + 1) * b].iter().map(|&w| w as f64).sum();
-                    loss_wsum += outs[0].data[0] as f64 * w_m;
-                    weight_sum += w_m;
-                    let mut dy = outs[1].clone();
-                    let n_tr = self.devices[s - 1].trainable_pos.len();
-                    let norms = outs[2 + n_tr].clone();
-                    self.accumulate(s - 1, &outs[2..2 + n_tr]);
-                    self.record_clip_counts(s - 1, &norms, &weights[m * b..(m + 1) * b]);
-
-                    for st in (0..s - 1).rev() {
-                        let c = if nonpriv { 1e9 } else { self.threshold(st) };
-                        let x_in = self.stage_x_in(st, m, &tokens, &acts);
-                        let d = &self.devices[st];
-                        let exec = d.bwd.as_ref().unwrap().clone();
-                        let t0 = Instant::now();
-                        let outs = exec.call(
-                            &d.params,
-                            &[
-                                x_in,
-                                HostValue::F32(dy),
-                                HostValue::F32(Tensor::scalar(c as f32)),
-                                HostValue::F32(micro_w[m].clone()),
-                            ],
-                        )?;
-                        durations.insert(
-                            Op { stage: st, micro: m, phase: Phase::Bwd },
-                            t0.elapsed().as_secs_f64(),
-                        );
-                        calls += 1;
-                        dy = outs[0].clone();
-                        let n_tr = self.devices[st].trainable_pos.len();
-                        let norms = outs[1 + n_tr].clone();
-                        self.accumulate(st, &outs[1..1 + n_tr]);
-                        self.record_clip_counts(st, &norms, &weights[m * b..(m + 1) * b]);
-                    }
-                }
-            }
-            PipelineMode::FlatSync => {
-                // pass 1: local norms only; cache the dy each stage consumed
-                let mut dy_in: Vec<Vec<Option<Tensor>>> = vec![vec![None; j]; s];
-                let mut local_norms: Vec<Vec<Vec<f32>>> =
-                    (0..s).map(|_| vec![Vec::new(); j]).collect();
-                for m in 0..j {
-                    let x_in = self.stage_x_in(s - 1, m, &tokens, &acts);
-                    let dlast = &self.devices[s - 1];
-                    let exec = dlast.loss_norm.as_ref().unwrap().clone();
-                    let t0 = Instant::now();
-                    let outs = exec.call(&dlast.params, &[x_in, tokens[m].1.clone()])?;
-                    durations.insert(
-                        Op { stage: s - 1, micro: m, phase: Phase::Bwd },
-                        t0.elapsed().as_secs_f64(),
-                    );
-                    calls += 1;
-                    // pass-1 loss is the executable's unweighted mean (the
-                    // norm pass takes no weights); with padded batches the
-                    // reported loss is a diagnostic approximation, while
-                    // the gradients below are exactly masked via coeffs
-                    loss_total += outs[0].data[0] as f64;
-                    let mut dy = outs[1].clone();
-                    local_norms[s - 1][m] = outs[2].data.clone();
-
-                    for st in (0..s - 1).rev() {
-                        dy_in[st][m] = Some(dy.clone());
-                        let x_in = self.stage_x_in(st, m, &tokens, &acts);
-                        let d = &self.devices[st];
-                        let exec = d.bwd_norm.as_ref().unwrap().clone();
-                        let t0 = Instant::now();
-                        let outs = exec.call(&d.params, &[x_in, HostValue::F32(dy)])?;
-                        durations.insert(
-                            Op { stage: st, micro: m, phase: Phase::Bwd },
-                            t0.elapsed().as_secs_f64(),
-                        );
-                        calls += 1;
-                        dy = outs[0].clone();
-                        local_norms[st][m] = outs[1].data.clone();
-                    }
-                }
-
-                // barrier: all-gather per-example norms, form global coeffs
-                // (each coeff carries the example's 0/1 weight so padded
-                // slots emit zero gradient from the regrad pass)
-                syncs += 1;
-                let c_global = self.threshold(0);
-                let mut coeffs: Vec<Tensor> = Vec::with_capacity(j);
-                for m in 0..j {
-                    let mut c = Vec::with_capacity(b);
-                    for i in 0..b {
-                        let sq: f64 = (0..s)
-                            .map(|st| {
-                                let v = local_norms[st][m][i] as f64;
-                                v * v
-                            })
-                            .sum();
-                        let w = weights[m * b + i] as f64;
-                        c.push((w * (c_global / sq.sqrt().max(1e-12)).min(1.0)) as f32);
-                    }
-                    coeffs.push(Tensor::from_vec(&[b], c)?);
-                }
-
-                // pass 2: rematerialize + clipped sums
-                for m in 0..j {
-                    for st in 0..s {
-                        let last = st == s - 1;
-                        let x_in = self.stage_x_in(st, m, &tokens, &acts);
-                        let d = &self.devices[st];
-                        let t0 = Instant::now();
-                        let outs = if last {
-                            d.loss_regrad.as_ref().unwrap().call(
-                                &d.params,
-                                &[x_in, tokens[m].1.clone(), HostValue::F32(coeffs[m].clone())],
-                            )?
-                        } else {
-                            d.regrad.as_ref().unwrap().call(
-                                &d.params,
-                                &[
-                                    x_in,
-                                    HostValue::F32(dy_in[st][m].clone().unwrap()),
-                                    HostValue::F32(coeffs[m].clone()),
-                                ],
-                            )?
-                        };
-                        durations.insert(
-                            Op { stage: st, micro: m, phase: Phase::Regrad },
-                            t0.elapsed().as_secs_f64(),
-                        );
-                        calls += 1;
-                        self.accumulate(st, &outs);
-                    }
-                }
-            }
-        }
+        let s = self.n_stages;
+        // per-device clipping against the core's current thresholds (the
+        // non-private mode clips nothing; its counts are diagnostic only)
+        let thr: Vec<f64> = (0..s).map(|st| self.threshold(st)).collect();
+        let col = self.collect_weighted(data, indices, weights, &thr)?;
 
         // -------- noise + local updates (no cross-device traffic) ---------
         // Per-device noise std comes from the core's equal-budget
@@ -563,17 +414,358 @@ impl<'r> PipelineEngine<'r> {
             self.minibatch() as f64
         };
         let stds = self.core.noise_stds();
+        let mut grads = col.grads;
         for st in 0..s {
-            let std = match self.opts.mode {
-                PipelineMode::NonPrivate => 0.0,
-                PipelineMode::PerDevice => stds[st],
-                PipelineMode::FlatSync => stds[0],
-            };
+            let std = if self.opts.mode == PipelineMode::PerDevice { stds[st] } else { 0.0 };
+            for g in grads[st].iter_mut() {
+                add_noise(&mut g.data, std, &mut self.core.rng);
+                for v in g.data.iter_mut() {
+                    *v /= expected as f32;
+                }
+            }
+            let d = &mut self.devices[st];
+            d.optimizer.apply_indexed(&mut d.params, &d.trainable_pos, &grads[st]);
+        }
+
+        // adaptive per-device thresholds (extension of Algorithm 2): one
+        // vector update over all S device groups through the shared core
+        if self.core.is_adaptive() && self.opts.mode == PipelineMode::PerDevice {
+            self.core.update_thresholds(&col.clip_counts);
+        }
+
+        self.steps_done += 1;
+        let sim = makespan(
+            s,
+            self.opts.n_micro,
+            &|op| col.durations.get(op).copied().unwrap_or(0.0),
+            false,
+            self.opts.sync_latency,
+        );
+        Ok(PipeStepStats {
+            loss: col.loss_wsum / col.weight_sum.max(1.0),
+            host_secs: host_t0.elapsed().as_secs_f64(),
+            sim_secs: sim,
+            syncs: 1,
+            calls: col.calls,
+        })
+    }
+
+    /// Run one per-device (or non-private) step up to — but not including —
+    /// noise, normalization and the optimizer update: forward wavefront,
+    /// fused backward+clip against the EXPLICIT per-stage `thresholds`,
+    /// gradient accumulation, clip counting. Consumes no RNG and reads no
+    /// thresholds from the core, which is what lets the hybrid backend
+    /// drive R replica engines from one shared `DpCore` and merge their
+    /// pre-noise per-stage gradient sums across replicas.
+    pub(crate) fn collect_weighted(
+        &mut self,
+        data: &dyn Dataset,
+        indices: &[usize],
+        weights: &[f32],
+        thresholds: &[f64],
+    ) -> Result<CollectedStep> {
+        assert_eq!(indices.len(), self.minibatch());
+        assert_eq!(weights.len(), self.minibatch());
+        let s = self.n_stages;
+        assert_eq!(thresholds.len(), s);
+        if self.opts.mode == PipelineMode::FlatSync {
+            return Err(anyhow!("collect_weighted serves per-device/non-private modes only"));
+        }
+        let nonpriv = self.opts.mode == PipelineMode::NonPrivate;
+        let j = self.opts.n_micro;
+        let b = self.micro_batch;
+        let mut durations: HashMap<Op, f64> = HashMap::new();
+        let mut calls = 0usize;
+
+        let micro: Vec<ModelBatch> =
+            (0..j).map(|m| data.batch(&indices[m * b..(m + 1) * b])).collect();
+        let tokens: Vec<(HostValue, HostValue)> = micro.iter().map(|m| m.inputs()).collect();
+        // per-microbatch weight tensors fed to every backward executable
+        let micro_w: Vec<Tensor> = (0..j)
+            .map(|m| Tensor::from_vec(&[b], weights[m * b..(m + 1) * b].to_vec()))
+            .collect::<Result<_>>()?;
+
+        let acts = self.forward_wavefront(&tokens, &mut durations, &mut calls)?;
+
+        let mut clip_counts = vec![0f64; s];
+        // global weighted mean across ALL live examples (sum_m loss_m *
+        // livecount_m / sum_m livecount_m), so unevenly padded microbatches
+        // weigh examples equally — matching the single-device backend's
+        // definition
+        let mut loss_wsum = 0f64;
+        let mut weight_sum = 0f64;
+
+        for m in 0..j {
+            // last stage: fused loss+bwd, clipping local piece
+            let c_last = if nonpriv { 1e9 } else { thresholds[s - 1] };
+            let x_in = self.stage_x_in(s - 1, m, &tokens, &acts);
+            let dlast = &self.devices[s - 1];
+            let exec = dlast.loss_bwd.as_ref().unwrap().clone();
+            let t0 = Instant::now();
+            let outs = exec.call(
+                &dlast.params,
+                &[
+                    x_in,
+                    tokens[m].1.clone(),
+                    HostValue::F32(Tensor::scalar(c_last as f32)),
+                    HostValue::F32(micro_w[m].clone()),
+                ],
+            )?;
+            durations.insert(
+                Op { stage: s - 1, micro: m, phase: Phase::Bwd },
+                t0.elapsed().as_secs_f64(),
+            );
+            calls += 1;
+            // the executable reports the weighted MEAN over this
+            // microbatch; recover the weighted sum via the live weight
+            // mass so the step loss is a global mean
+            let w_m: f64 = weights[m * b..(m + 1) * b].iter().map(|&w| w as f64).sum();
+            loss_wsum += outs[0].data[0] as f64 * w_m;
+            weight_sum += w_m;
+            let mut dy = outs[1].clone();
+            let n_tr = self.devices[s - 1].trainable_pos.len();
+            let norms = outs[2 + n_tr].clone();
+            self.accumulate(s - 1, &outs[2..2 + n_tr]);
+            clip_counts[s - 1] +=
+                count_clipped(&norms, &weights[m * b..(m + 1) * b], thresholds[s - 1]);
+
+            for st in (0..s - 1).rev() {
+                let c = if nonpriv { 1e9 } else { thresholds[st] };
+                let x_in = self.stage_x_in(st, m, &tokens, &acts);
+                let d = &self.devices[st];
+                let exec = d.bwd.as_ref().unwrap().clone();
+                let t0 = Instant::now();
+                let outs = exec.call(
+                    &d.params,
+                    &[
+                        x_in,
+                        HostValue::F32(dy),
+                        HostValue::F32(Tensor::scalar(c as f32)),
+                        HostValue::F32(micro_w[m].clone()),
+                    ],
+                )?;
+                durations.insert(
+                    Op { stage: st, micro: m, phase: Phase::Bwd },
+                    t0.elapsed().as_secs_f64(),
+                );
+                calls += 1;
+                dy = outs[0].clone();
+                let n_tr = self.devices[st].trainable_pos.len();
+                let norms = outs[1 + n_tr].clone();
+                self.accumulate(st, &outs[1..1 + n_tr]);
+                clip_counts[st] +=
+                    count_clipped(&norms, &weights[m * b..(m + 1) * b], thresholds[st]);
+            }
+        }
+
+        // drain the per-stage accumulators into the returned gradient set
+        let grads: Vec<Vec<Tensor>> = self
+            .devices
+            .iter_mut()
+            .map(|d| {
+                d.accum
+                    .iter_mut()
+                    .map(|a| std::mem::replace(a, Tensor::zeros(&a.shape)))
+                    .collect()
+            })
+            .collect();
+
+        Ok(CollectedStep { grads, clip_counts, durations, loss_wsum, weight_sum, calls })
+    }
+
+    /// Apply an already-noised, already-normalized gradient set (one
+    /// `Vec<Tensor>` per stage) through this replica's per-stage
+    /// optimizers — the hybrid backend's update path after the
+    /// cross-replica reduction merges every replica's deltas.
+    pub(crate) fn apply_update(&mut self, grads: &[Vec<Tensor>]) {
+        for (st, g) in grads.iter().enumerate() {
+            let d = &mut self.devices[st];
+            d.optimizer.apply_indexed(&mut d.params, &d.trainable_pos, g);
+        }
+        self.steps_done += 1;
+    }
+
+    /// Trainable element count per stage (sizes the cross-replica
+    /// reduction payload in the hybrid makespan model).
+    pub(crate) fn stage_trainable_dims(&self) -> Vec<f64> {
+        self.devices
+            .iter()
+            .map(|d| {
+                d.trainable_pos
+                    .iter()
+                    .map(|&i| d.params[i].data.len() as f64)
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Forward wavefront: `acts[st][m]` = input activation of stage `st`
+    /// for microbatch `m` (stage 0 consumes the tokens directly).
+    fn forward_wavefront(
+        &self,
+        tokens: &[(HostValue, HostValue)],
+        durations: &mut HashMap<Op, f64>,
+        calls: &mut usize,
+    ) -> Result<Vec<Vec<Option<Tensor>>>> {
+        let s = self.n_stages;
+        let j = self.opts.n_micro;
+        let mut acts: Vec<Vec<Option<Tensor>>> = vec![vec![None; j]; s];
+        for m in 0..j {
+            for st in 0..s - 1 {
+                let x_in = self.stage_x_in(st, m, tokens, &acts);
+                let d = &self.devices[st];
+                let t0 = Instant::now();
+                let out = d.fwd.as_ref().unwrap().call(&d.params, &[x_in])?;
+                durations.insert(
+                    Op { stage: st, micro: m, phase: Phase::Fwd },
+                    t0.elapsed().as_secs_f64(),
+                );
+                *calls += 1;
+                acts[st + 1][m] = Some(out.into_iter().next().unwrap());
+            }
+        }
+        Ok(acts)
+    }
+
+    /// The flat-sync baseline step (approach (iii) of section 4): pass 1
+    /// computes local per-example norms, a barrier all-gathers them so the
+    /// leader can form global clip coefficients, pass 2 rematerializes
+    /// forward+backward to emit the clipped sums.
+    fn step_flat_sync(
+        &mut self,
+        data: &dyn Dataset,
+        indices: &[usize],
+        weights: &[f32],
+    ) -> Result<PipeStepStats> {
+        assert_eq!(indices.len(), self.minibatch());
+        assert_eq!(weights.len(), self.minibatch());
+        let j = self.opts.n_micro;
+        let s = self.n_stages;
+        let b = self.micro_batch;
+        let host_t0 = Instant::now();
+        let mut durations: HashMap<Op, f64> = HashMap::new();
+        let mut calls = 0usize;
+
+        let micro: Vec<ModelBatch> =
+            (0..j).map(|m| data.batch(&indices[m * b..(m + 1) * b])).collect();
+        let tokens: Vec<(HostValue, HostValue)> = micro.iter().map(|m| m.inputs()).collect();
+
+        let acts = self.forward_wavefront(&tokens, &mut durations, &mut calls)?;
+
+        let mut loss_total = 0f64;
+        let mut syncs = 1usize; // end-of-step optimizer barrier
+
+        // pass 1 -> norm barrier -> rematerialized pass 2 (temporaries scoped)
+        {
+            // pass 1: local norms only; cache the dy each stage consumed
+            let mut dy_in: Vec<Vec<Option<Tensor>>> = vec![vec![None; j]; s];
+            let mut local_norms: Vec<Vec<Vec<f32>>> =
+                (0..s).map(|_| vec![Vec::new(); j]).collect();
+            for m in 0..j {
+                let x_in = self.stage_x_in(s - 1, m, &tokens, &acts);
+                let dlast = &self.devices[s - 1];
+                let exec = dlast.loss_norm.as_ref().unwrap().clone();
+                let t0 = Instant::now();
+                let outs = exec.call(&dlast.params, &[x_in, tokens[m].1.clone()])?;
+                durations.insert(
+                    Op { stage: s - 1, micro: m, phase: Phase::Bwd },
+                    t0.elapsed().as_secs_f64(),
+                );
+                calls += 1;
+                // pass-1 loss is the executable's unweighted mean (the
+                // norm pass takes no weights); with padded batches the
+                // reported loss is a diagnostic approximation, while
+                // the gradients below are exactly masked via coeffs
+                loss_total += outs[0].data[0] as f64;
+                let mut dy = outs[1].clone();
+                local_norms[s - 1][m] = outs[2].data.clone();
+
+                for st in (0..s - 1).rev() {
+                    dy_in[st][m] = Some(dy.clone());
+                    let x_in = self.stage_x_in(st, m, &tokens, &acts);
+                    let d = &self.devices[st];
+                    let exec = d.bwd_norm.as_ref().unwrap().clone();
+                    let t0 = Instant::now();
+                    let outs = exec.call(&d.params, &[x_in, HostValue::F32(dy)])?;
+                    durations.insert(
+                        Op { stage: st, micro: m, phase: Phase::Bwd },
+                        t0.elapsed().as_secs_f64(),
+                    );
+                    calls += 1;
+                    dy = outs[0].clone();
+                    local_norms[st][m] = outs[1].data.clone();
+                }
+            }
+
+            // barrier: all-gather per-example norms, form global coeffs
+            // (each coeff carries the example's 0/1 weight so padded
+            // slots emit zero gradient from the regrad pass)
+            syncs += 1;
+            let c_global = self.threshold(0);
+            let mut coeffs: Vec<Tensor> = Vec::with_capacity(j);
+            for m in 0..j {
+                let mut c = Vec::with_capacity(b);
+                for i in 0..b {
+                    let sq: f64 = (0..s)
+                        .map(|st| {
+                            let v = local_norms[st][m][i] as f64;
+                            v * v
+                        })
+                        .sum();
+                    let w = weights[m * b + i] as f64;
+                    c.push((w * (c_global / sq.sqrt().max(1e-12)).min(1.0)) as f32);
+                }
+                coeffs.push(Tensor::from_vec(&[b], c)?);
+            }
+
+            // pass 2: rematerialize + clipped sums
+            for m in 0..j {
+                for st in 0..s {
+                    let last = st == s - 1;
+                    let x_in = self.stage_x_in(st, m, &tokens, &acts);
+                    let d = &self.devices[st];
+                    let t0 = Instant::now();
+                    let outs = if last {
+                        d.loss_regrad.as_ref().unwrap().call(
+                            &d.params,
+                            &[x_in, tokens[m].1.clone(), HostValue::F32(coeffs[m].clone())],
+                        )?
+                    } else {
+                        d.regrad.as_ref().unwrap().call(
+                            &d.params,
+                            &[
+                                x_in,
+                                HostValue::F32(dy_in[st][m].clone().unwrap()),
+                                HostValue::F32(coeffs[m].clone()),
+                            ],
+                        )?
+                    };
+                    durations.insert(
+                        Op { stage: st, micro: m, phase: Phase::Regrad },
+                        t0.elapsed().as_secs_f64(),
+                    );
+                    calls += 1;
+                    self.accumulate(st, &outs);
+                }
+            }
+        }
+
+        // -------- noise + local updates (no cross-device traffic) ---------
+        // one global threshold group: every stage adds noise at the flat
+        // std; summed gradients are normalized by the EXPECTED live batch
+        // (Algorithm 1 line 14), not the realized draw
+        let expected = if self.opts.expected_batch > 0 {
+            self.opts.expected_batch as f64
+        } else {
+            self.minibatch() as f64
+        };
+        let stds = self.core.noise_stds();
+        for st in 0..s {
             let d = &mut self.devices[st];
             let mut grads = Vec::with_capacity(d.accum.len());
             for a in d.accum.iter_mut() {
                 let mut g = std::mem::replace(a, Tensor::zeros(&a.shape));
-                add_noise(&mut g.data, std, &mut self.core.rng);
+                add_noise(&mut g.data, stds[0], &mut self.core.rng);
                 for v in g.data.iter_mut() {
                     *v /= expected as f32;
                 }
@@ -582,36 +774,20 @@ impl<'r> PipelineEngine<'r> {
             d.optimizer.apply_indexed(&mut d.params, &d.trainable_pos, &grads);
         }
 
-        // adaptive per-device thresholds (extension of Algorithm 2): one
-        // vector update over all S device groups through the shared core
-        if self.core.is_adaptive() && self.opts.mode == PipelineMode::PerDevice {
-            let counts = self.pending_counts.clone();
-            self.core.update_thresholds(&counts);
-        }
-        for c in self.pending_counts.iter_mut() {
-            *c = 0.0;
-        }
-
         self.steps_done += 1;
-        let with_regrad = self.opts.mode == PipelineMode::FlatSync;
         let sim = makespan(
             s,
             j,
             &|op| durations.get(op).copied().unwrap_or(0.0),
-            with_regrad,
+            true,
             self.opts.sync_latency,
         );
-        let loss = if with_regrad {
-            // flat-sync pass 1 reports unweighted per-micro means only
-            loss_total / j as f64
-        } else {
-            loss_wsum / weight_sum.max(1.0)
-        };
         Ok(PipeStepStats {
-            loss,
+            // flat-sync pass 1 reports unweighted per-micro means only
+            loss: loss_total / j as f64,
             host_secs: host_t0.elapsed().as_secs_f64(),
             sim_secs: sim,
-            syncs: if with_regrad { syncs } else { 1 },
+            syncs,
             calls,
         })
     }
@@ -623,20 +799,6 @@ impl<'r> PipelineEngine<'r> {
                 *av += *gv;
             }
         }
-    }
-
-    /// Count live (weight > 0) examples under the stage threshold; padded
-    /// slots carry real norms for masked content and must not leak into
-    /// the private quantile statistic.
-    fn record_clip_counts(&mut self, stage: usize, norms: &Tensor, weights: &[f32]) {
-        let thr = self.threshold(stage);
-        let c = norms
-            .data
-            .iter()
-            .zip(weights)
-            .filter(|&(&n, &w)| w > 0.0 && (n as f64) <= thr)
-            .count() as f64;
-        self.pending_counts[stage] += c;
     }
 
     /// Mean eval loss over `data` through the pipeline.

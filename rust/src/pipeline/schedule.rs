@@ -130,6 +130,42 @@ pub fn makespan(
     device_free.iter().cloned().fold(0.0, f64::max)
 }
 
+/// Per-stage gradient-ready times for a per-device GPipe step (no
+/// regrad): entry `st` is the finish time of stage `st`'s LAST backward
+/// op — the moment its summed gradient can enter a cross-replica
+/// reduction. Returns `(ready, makespan)`; the makespan equals
+/// [`makespan`] with `with_regrad = false`. Because backward drains from
+/// the last stage toward the first, the ready times are non-decreasing in
+/// `S-1, S-2, …, 0` order — the order the hybrid backend feeds them to
+/// the FIFO reduction model.
+pub fn stage_grad_ready(
+    s: usize,
+    j: usize,
+    durations: &dyn Fn(&Op) -> f64,
+) -> (Vec<f64>, f64) {
+    use std::collections::HashMap;
+    let ops = gpipe_order(s, j, false);
+    let mut finish: HashMap<Op, f64> = HashMap::new();
+    let mut device_free = vec![0f64; s];
+    let mut ready = vec![0f64; s];
+    for op in &ops {
+        let mut start: f64 = device_free[op.stage];
+        for dep in deps(op, s) {
+            if let Some(&f) = finish.get(&dep) {
+                start = start.max(f);
+            }
+        }
+        let end = start + durations(op);
+        finish.insert(*op, end);
+        device_free[op.stage] = end;
+        if op.phase == Phase::Bwd {
+            ready[op.stage] = ready[op.stage].max(end);
+        }
+    }
+    let span = device_free.iter().cloned().fold(0.0, f64::max);
+    (ready, span)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,5 +205,32 @@ mod tests {
         // one stage: J fused loss_bwd ops only
         let m = makespan(1, 5, &dur, false, 0.0);
         assert!((m - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stage_grad_ready_orders_stages_and_matches_makespan() {
+        let dur = |op: &Op| match op.phase {
+            Phase::Fwd => 1.0,
+            _ => 2.0,
+        };
+        for (s, j) in [(1usize, 3usize), (2, 2), (4, 4)] {
+            let (ready, span) = stage_grad_ready(s, j, &dur);
+            assert_eq!(ready.len(), s);
+            // backward drains last stage -> first: ready times non-increasing
+            // from stage 0 down to stage S-1
+            for st in 1..s {
+                assert!(
+                    ready[st] <= ready[st - 1] + 1e-12,
+                    "s={s} j={j}: stage {st} ready {} before stage {}'s {}",
+                    ready[st],
+                    st - 1,
+                    ready[st - 1]
+                );
+            }
+            // the last gradient to arrive defines the backward makespan
+            let m = makespan(s, j, &dur, false, 0.0);
+            assert!((span - m).abs() < 1e-12);
+            assert!((ready[0] - m).abs() < 1e-12, "stage 0 finishes last");
+        }
     }
 }

@@ -5,8 +5,10 @@
 //! the crate's API match: one declarative [`RunSpec`] (privacy target,
 //! [`ClipPolicy`], optimizer, data), one [`SessionBuilder`], and one
 //! [`Session`] that selects the backend from the manifest + spec —
-//! configs with pipeline stages train on the [`PipelineEngine`], specs
-//! with a `[shard]` section on the data-parallel
+//! configs with pipeline stages train on the [`PipelineEngine`] (or, with
+//! a `[hybrid]` section, on the 2D pipeline-x-data-parallel
+//! [`HybridEngine`](crate::hybrid::HybridEngine)), stage-less specs with
+//! a `[shard]` section on the data-parallel
 //! [`ShardEngine`](crate::shard::ShardEngine), everything else on the
 //! single-device [`Trainer`]. All backends share one [`DpCore`] (plan,
 //! thresholds, noise, RNG) and emit one [`StepEvent`] stream.
@@ -41,6 +43,8 @@ use crate::coordinator::accountant::PrivacyPlan;
 use crate::coordinator::sampler::PoissonSampler;
 use crate::coordinator::trainer::{derive_schedule, StepStats, TrainOpts, Trainer};
 use crate::data::Dataset;
+use crate::hybrid::engine::HybridWiring;
+use crate::hybrid::{HybridEngine, HybridStepStats, PieceGrouping};
 use crate::pipeline::{PipeStepStats, PipelineEngine, PipelineMode, PipelineOpts};
 use crate::runtime::{Runtime, Tensor};
 use crate::shard::engine::ShardWiring;
@@ -48,8 +52,8 @@ use crate::shard::{ShardEngine, ShardStepStats, WorkerGrouping};
 
 pub use self::core::{CoreCfg, DpCore};
 pub use self::spec::{
-    ClipMode, ClipPolicy, DataSpec, FlatImpl, GroupBy, OptimSpec, PipeSpec, PrivacySpec, RunSpec,
-    Sampling, ShardGrouping, ShardSpec,
+    ClipMode, ClipPolicy, DataSpec, FlatImpl, GroupBy, HybridGrouping, HybridSpec, OptimSpec,
+    PipeSpec, PrivacySpec, RunSpec, Sampling, ShardGrouping, ShardSpec,
 };
 
 // -------------------------------------------------------------- step event
@@ -70,6 +74,12 @@ pub struct StepEvent {
     pub host_secs: f64,
     /// simulated S-device makespan (0 for the single-device backend)
     pub sim_secs: f64,
+    /// simulated latency with the cross-replica reduction overlapped into
+    /// backprop (sharded/hybrid backends; 0 elsewhere)
+    pub sim_overlap_secs: f64,
+    /// simulated latency with a reduce-after-backward barrier
+    /// (sharded/hybrid backends; 0 elsewhere)
+    pub sim_barrier_secs: f64,
     /// sync barriers this step (0 for the single-device backend)
     pub syncs: usize,
     /// executable invocations (0 for the single-device backend)
@@ -90,6 +100,8 @@ impl StepEvent {
             mean_norms: s.mean_norms,
             host_secs: 0.0,
             sim_secs: 0.0,
+            sim_overlap_secs: 0.0,
+            sim_barrier_secs: 0.0,
             syncs: 0,
             calls: 0,
             truncated: s.truncated,
@@ -105,6 +117,8 @@ impl StepEvent {
             mean_norms: Vec::new(),
             host_secs: s.host_secs,
             sim_secs: s.sim_secs,
+            sim_overlap_secs: 0.0,
+            sim_barrier_secs: 0.0,
             syncs: s.syncs,
             calls: s.calls,
             truncated,
@@ -120,23 +134,59 @@ impl StepEvent {
             mean_norms: s.mean_norms,
             host_secs: s.host_secs,
             sim_secs: s.sim_secs,
+            sim_overlap_secs: s.sim_overlap_secs,
+            sim_barrier_secs: s.sim_barrier_secs,
             syncs: s.syncs,
             calls: s.calls,
             truncated: s.truncated,
         }
     }
 
-    /// One-line human-readable progress report.
+    pub fn from_hybrid(s: HybridStepStats) -> Self {
+        StepEvent {
+            step: s.step,
+            loss: s.loss,
+            batch_size: s.batch_size,
+            clip_frac: s.clip_frac,
+            mean_norms: Vec::new(),
+            host_secs: s.host_secs,
+            sim_secs: s.sim_secs,
+            sim_overlap_secs: s.sim_overlap_secs,
+            sim_barrier_secs: s.sim_barrier_secs,
+            syncs: s.syncs,
+            calls: s.calls,
+            truncated: s.truncated,
+        }
+    }
+
+    /// One-line human-readable progress report. Backends that simulate a
+    /// cross-replica reduction (sharded, hybrid) also report both the
+    /// overlapped and barrier makespans; capacity-bound truncated draws
+    /// are flagged on any backend.
     pub fn log_line(&self, total_steps: u64, label: &str) -> String {
+        let trunc = if self.truncated > 0 {
+            format!(" trunc {}", self.truncated)
+        } else {
+            String::new()
+        };
         if self.calls > 0 {
+            let reduction = if self.sim_barrier_secs > 0.0 {
+                format!(
+                    " ovl {:.3}s/bar {:.3}s",
+                    self.sim_overlap_secs, self.sim_barrier_secs
+                )
+            } else {
+                String::new()
+            };
             format!(
-                "[{label}] step {}/{} loss {:.4} host {:.2}s sim {:.3}s syncs {} calls {}",
+                "[{label}] step {}/{} loss {:.4} host {:.2}s sim {:.3}s{reduction} syncs {} \
+                 calls {}{trunc}",
                 self.step, total_steps, self.loss, self.host_secs, self.sim_secs, self.syncs,
                 self.calls
             )
         } else {
             format!(
-                "[{label}] step {}/{} loss {:.4} |B|={} clip~{:.2}",
+                "[{label}] step {}/{} loss {:.4} |B|={} clip~{:.2}{trunc}",
                 self.step,
                 total_steps,
                 self.loss,
@@ -150,12 +200,15 @@ impl StepEvent {
 // ----------------------------------------------------------------- backend
 
 /// The executor a session selected from the manifest + spec: pipeline for
-/// staged configs, sharded when the spec carries a `[shard]` section,
-/// single-device otherwise.
+/// staged configs, hybrid (pipeline x data-parallel) when a staged
+/// config's spec carries a `[hybrid]` section, sharded when a stage-less
+/// config's spec carries `[shard]` (or `[hybrid]`, whose grid then has no
+/// pipeline axis), single-device otherwise.
 pub enum Backend<'r> {
     Single(Trainer<'r>),
     Pipeline(PipelineEngine<'r>),
     Sharded(ShardEngine<'r>),
+    Hybrid(HybridEngine<'r>),
 }
 
 impl Backend<'_> {
@@ -164,6 +217,7 @@ impl Backend<'_> {
             Backend::Single(_) => "single-device",
             Backend::Pipeline(_) => "pipeline",
             Backend::Sharded(_) => "sharded",
+            Backend::Hybrid(_) => "hybrid",
         }
     }
 }
@@ -241,6 +295,14 @@ impl<'r> SessionBuilder<'r> {
         self
     }
 
+    /// Select the hybrid 2D-parallel backend: R data-parallel replicas,
+    /// each a full pipeline over the config's stages (stage-less configs
+    /// degenerate to the sharded backend).
+    pub fn hybrid(mut self, hy: HybridSpec) -> Self {
+        self.spec.hybrid = Some(hy);
+        self
+    }
+
     /// Explicit pipeline step count (overrides the epochs-derived count).
     pub fn steps(mut self, steps: usize) -> Self {
         self.spec.pipe.steps = steps;
@@ -258,14 +320,137 @@ impl<'r> SessionBuilder<'r> {
         }
 
         if let Some(stages) = &cfg.stages {
-            // ---------------- pipeline backend (manifest has stages) -----
+            // proper hybrid validation replaces the old blanket rejection
+            // of shard-style knobs on staged configs: [shard] still cannot
+            // govern a pipeline model, but the error now points at the 2D
+            // backend that composes both axes
             if spec.shard.is_some() {
                 bail!(
                     "config '{}' has pipeline stages; the sharded backend replicates a \
-                     stage-less model — drop the [shard] section or pick a stage-less config",
+                     stage-less model — use a [hybrid] section to compose pipeline stages \
+                     with data-parallel replicas",
                     spec.config
                 );
             }
+            if let Some(hy) = spec.hybrid {
+                // ---------- hybrid 2D backend (stages x replicas) ---------
+                let mode = spec.clip.pipeline_mode().with_context(|| {
+                    format!("config '{}' trains on the hybrid backend", spec.config)
+                })?;
+                if mode == PipelineMode::FlatSync {
+                    bail!(
+                        "the hybrid backend supports per-device clipping (or non-private); \
+                         flat-sync is pipeline-only"
+                    );
+                }
+                let n_stages = stages.stages.len();
+                let minibatch = cfg.batch * spec.pipe.n_micro;
+                // Per-replica E[B] keeps the pipeline headroom convention
+                // (0.8x the static minibatch, overridable via
+                // spec.expected_batch, dealt evenly across replicas); the
+                // global E[B] is R x that — so an R = 1 hybrid derives the
+                // identical schedule (and plan) as the pipeline backend.
+                let per_replica = if spec.expected_batch > 0 {
+                    spec.expected_batch / hy.replicas
+                } else {
+                    ((minibatch as f64) * 0.8).round().max(1.0) as usize
+                };
+                if per_replica == 0 {
+                    bail!(
+                        "expected_batch {} spreads below one example per replica",
+                        spec.expected_batch
+                    );
+                }
+                if per_replica > minibatch {
+                    bail!(
+                        "expected batch {} exceeds static capacity {} ({} replicas x \
+                         minibatch {})",
+                        per_replica * hy.replicas,
+                        minibatch * hy.replicas,
+                        hy.replicas,
+                        minibatch
+                    );
+                }
+                let expected = per_replica * hy.replicas;
+                let steps = if spec.pipe.steps > 0 {
+                    spec.pipe.steps as u64
+                } else {
+                    ((spec.epochs * n_data as f64) / expected as f64).ceil() as u64
+                };
+                if steps == 0 {
+                    bail!("hybrid schedule is empty: raise epochs or set pipeline.steps");
+                }
+                let rate = (expected as f64 / n_data as f64).min(1.0);
+                let grouping = match hy.grouping {
+                    HybridGrouping::Auto | HybridGrouping::PerPiece => PieceGrouping::PerPiece,
+                    HybridGrouping::PerStage => PieceGrouping::PerStage,
+                };
+                let stage_dims: Vec<u64> =
+                    stages.stages.iter().map(|s| s.d_stage.max(1)).collect();
+                // One accountant release per step at q = E[B]/n regardless
+                // of (R, S): the replicas jointly hold ONE Poisson draw,
+                // and each piece's local noise share sigma_g/sqrt(R) merges
+                // (variances add) to the accountant's per-group std on the
+                // stage's merged gradient. One example lives on one replica
+                // and is clipped per stage piece, so the merged clipped-L2
+                // bound is the quadrature sum over ALL R x S piece
+                // thresholds (docs/SESSION_API.md, "Hybrid backend").
+                // Per-piece quantile groups each see only their replica's
+                // slice, E[B]/R; per-stage groups see the whole draw.
+                let (k, group_dims, quantile_batch) = if !spec.clip.is_private() {
+                    (1, vec![cfg.n_trainable().max(1)], expected as f64)
+                } else {
+                    match grouping {
+                        PieceGrouping::PerPiece => (
+                            hy.replicas * n_stages,
+                            (0..hy.replicas)
+                                .flat_map(|_| stage_dims.iter().copied())
+                                .collect(),
+                            expected as f64 / hy.replicas as f64,
+                        ),
+                        PieceGrouping::PerStage => (n_stages, stage_dims.clone(), expected as f64),
+                    }
+                };
+                let core = DpCore::from_accountant(CoreCfg {
+                    privacy: &spec.privacy,
+                    clip: &spec.clip,
+                    sample_rate: rate,
+                    steps,
+                    k,
+                    group_dims,
+                    expected_batch: quantile_batch,
+                    seed: spec.seed,
+                })?;
+                let wiring = HybridWiring {
+                    replicas: hy.replicas,
+                    fanout: hy.fanout,
+                    overlap: hy.overlap,
+                    link_latency: hy.link_latency,
+                    grouping,
+                    mode,
+                    n_micro: spec.pipe.n_micro,
+                    expected_batch: expected,
+                    rate,
+                    total_steps: steps,
+                    n_data,
+                    optimizer: spec.optim.kind,
+                    lr: spec.optim.lr,
+                    seed: spec.seed,
+                    sync_latency: spec.pipe.sync_latency,
+                    clip_init: spec.clip.clip_init,
+                    target_q: spec.clip.target_q,
+                    quantile_eta: spec.clip.quantile_eta,
+                };
+                let engine = HybridEngine::with_core(runtime, &spec.config, wiring, core)?;
+                return Ok(Session {
+                    backend: Backend::Hybrid(engine),
+                    total_steps: steps,
+                    pipe_cursor: 0,
+                    pipe_sampler: None,
+                    spec,
+                });
+            }
+            // ---------------- pipeline backend (manifest has stages) -----
             let mode = spec
                 .clip
                 .pipeline_mode()
@@ -370,8 +555,40 @@ impl<'r> SessionBuilder<'r> {
                 pipe_sampler,
                 spec,
             })
-        } else if let Some(sh) = spec.shard {
+        } else if spec.shard.is_some() || spec.hybrid.is_some() {
             // ---------------- sharded data-parallel backend ---------------
+            // A stage-less config has no pipeline axis: a [hybrid] grid
+            // degenerates to R pure data-parallel replicas, which IS the
+            // sharded backend — route it there, so the degenerate case is
+            // bit-identical to the same run spelled with [shard] (the S=1
+            // backend-parity contract).
+            let sh = match (spec.shard, &spec.hybrid) {
+                (Some(sh), _) => sh,
+                (None, Some(hy)) => ShardSpec {
+                    workers: hy.replicas,
+                    fanout: hy.fanout,
+                    overlap: hy.overlap,
+                    grouping: match hy.grouping {
+                        HybridGrouping::Auto => ShardGrouping::Auto,
+                        HybridGrouping::PerPiece => ShardGrouping::PerDevice,
+                        HybridGrouping::PerStage => bail!(
+                            "config '{}' has no pipeline stages, so hybrid grouping = \
+                             per-stage has no stage axis — use [shard] with grouping = \
+                             \"flat\" for one shared threshold",
+                            spec.config
+                        ),
+                    },
+                    link_latency: hy.link_latency,
+                },
+                (None, None) => unreachable!("branch guarded by shard/hybrid presence"),
+            };
+            if spec.hybrid.is_some() && spec.pipe.steps > 0 {
+                bail!(
+                    "config '{}' has no pipeline stages; a [hybrid] run here derives its \
+                     step count from epochs — pipeline.steps needs a staged config",
+                    spec.config
+                );
+            }
             if !(spec.epochs > 0.0) {
                 bail!("sharded runs need epochs > 0");
             }
@@ -572,6 +789,7 @@ impl<'r> Session<'r> {
             Backend::Single(t) => &t.core,
             Backend::Pipeline(e) => &e.core,
             Backend::Sharded(e) => &e.core,
+            Backend::Hybrid(e) => &e.core,
         }
     }
 
@@ -586,12 +804,14 @@ impl<'r> Session<'r> {
     }
 
     /// Group labels matching [`Session::thresholds`] (layer groups,
-    /// `stage{i}` device labels, or `worker{i}` replica labels).
+    /// `stage{i}` device labels, `worker{i}` replica labels, or
+    /// `r{r}s{st}` hybrid piece labels).
     pub fn group_labels(&self) -> Vec<String> {
         match &self.backend {
             Backend::Single(t) => t.groups().to_vec(),
             Backend::Pipeline(e) => (0..e.core.k()).map(|i| format!("stage{i}")).collect(),
             Backend::Sharded(e) => e.group_labels(),
+            Backend::Hybrid(e) => e.group_labels(),
         }
     }
 
@@ -637,6 +857,20 @@ impl<'r> Session<'r> {
         }
     }
 
+    pub fn hybrid_engine(&self) -> Option<&HybridEngine<'r>> {
+        match &self.backend {
+            Backend::Hybrid(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    pub fn hybrid_engine_mut(&mut self) -> Option<&mut HybridEngine<'r>> {
+        match &mut self.backend {
+            Backend::Hybrid(e) => Some(e),
+            _ => None,
+        }
+    }
+
     /// Full-model parameters in manifest order (decoding / checkpoints).
     /// Sharded sessions return worker 0's replica — all replicas are kept
     /// bit-identical by the merged update.
@@ -644,8 +878,8 @@ impl<'r> Session<'r> {
         match &self.backend {
             Backend::Single(t) => Ok(&t.params),
             Backend::Sharded(e) => Ok(e.params()),
-            Backend::Pipeline(_) => Err(anyhow!(
-                "pipeline sessions shard parameters per stage; use param_map()"
+            Backend::Pipeline(_) | Backend::Hybrid(_) => Err(anyhow!(
+                "pipeline/hybrid sessions shard parameters per stage; use param_map()"
             )),
         }
     }
@@ -656,8 +890,8 @@ impl<'r> Session<'r> {
         match &mut self.backend {
             Backend::Single(t) => t.set_params(params),
             Backend::Sharded(e) => e.set_params_all(params),
-            Backend::Pipeline(_) => Err(anyhow!(
-                "pipeline sessions load parameters by name; use load_param_map()"
+            Backend::Pipeline(_) | Backend::Hybrid(_) => Err(anyhow!(
+                "pipeline/hybrid sessions load parameters by name; use load_param_map()"
             )),
         }
     }
@@ -680,6 +914,7 @@ impl<'r> Session<'r> {
                 .zip(e.params())
                 .map(|(p, v)| (p.name.clone(), v.clone()))
                 .collect(),
+            Backend::Hybrid(e) => e.dump_params(),
         }
     }
 
@@ -701,6 +936,7 @@ impl<'r> Session<'r> {
             }
             Backend::Pipeline(e) => e.load_params(map),
             Backend::Sharded(e) => e.load_param_map(map),
+            Backend::Hybrid(e) => e.load_params(map),
         }
     }
 
@@ -729,6 +965,7 @@ impl<'r> Session<'r> {
         match &mut self.backend {
             Backend::Single(t) => Ok(StepEvent::from_single(t.step(data)?)),
             Backend::Sharded(e) => Ok(StepEvent::from_shard(e.step(data)?)),
+            Backend::Hybrid(e) => Ok(StepEvent::from_hybrid(e.step(data)?)),
             Backend::Pipeline(e) => {
                 let mb = e.minibatch();
                 if let Some(sampler) = &self.pipe_sampler {
@@ -757,6 +994,10 @@ impl<'r> Session<'r> {
                 WorkerGrouping::PerLayer => "sharded per-layer",
                 WorkerGrouping::PerDevice => "sharded per-device",
             },
+            Backend::Hybrid(e) => match e.grouping() {
+                PieceGrouping::PerPiece => "hybrid per-piece",
+                PieceGrouping::PerStage => "hybrid per-stage",
+            },
         };
         let total = self.total_steps;
         let mut events = Vec::with_capacity(total as usize);
@@ -777,12 +1018,14 @@ impl<'r> Session<'r> {
             Backend::Single(t) => t.evaluate(data),
             Backend::Pipeline(e) => Ok((e.evaluate(data)?, f64::NAN)),
             Backend::Sharded(e) => e.evaluate(data),
+            Backend::Hybrid(e) => Ok((e.evaluate(data)?, f64::NAN)),
         }
     }
 
     /// Human-readable one-line description of the run's privacy wiring.
-    /// Sharded sessions append their topology: worker count, reduction
-    /// fanout, grouping and the per-group thresholds.
+    /// Sharded and hybrid sessions append their topology: replica/worker
+    /// count, stage count, reduction fanout, grouping and the per-group
+    /// thresholds.
     pub fn describe(&self) -> String {
         let be = self.backend.name();
         let base = match self.plan() {
@@ -812,6 +1055,7 @@ impl<'r> Session<'r> {
         };
         match &self.backend {
             Backend::Sharded(e) => format!("{base} | {}", e.describe_topology()),
+            Backend::Hybrid(e) => format!("{base} | {}", e.describe_topology()),
             _ => base,
         }
     }

@@ -727,6 +727,119 @@ impl ShardSpec {
     }
 }
 
+// ----------------------------------------------------------------- hybrid
+
+/// How the hybrid backend tiles clipping-threshold groups over the
+/// (replica, stage) grid.
+///
+/// * `Auto` (default): the paper's per-device scheme on the full grid —
+///   every one of the R x S pieces owns its threshold (= `PerPiece`).
+/// * `PerPiece` / `PerStage`: explicit pins; `per-stage` shares one
+///   threshold per stage across replicas (K = S).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HybridGrouping {
+    Auto,
+    PerPiece,
+    PerStage,
+}
+
+impl HybridGrouping {
+    /// Canonical spec/CLI token; guaranteed to parse back via [`FromStr`].
+    pub fn token(&self) -> &'static str {
+        match self {
+            HybridGrouping::Auto => "auto",
+            HybridGrouping::PerPiece => "per-piece",
+            HybridGrouping::PerStage => "per-stage",
+        }
+    }
+}
+
+impl FromStr for HybridGrouping {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "auto" => HybridGrouping::Auto,
+            "per-piece" | "perpiece" | "per_piece" | "per-device" => HybridGrouping::PerPiece,
+            "per-stage" | "perstage" | "per_stage" => HybridGrouping::PerStage,
+            _ => bail!("unknown hybrid grouping '{s}' (auto|per-piece|per-stage)"),
+        })
+    }
+}
+
+/// Hybrid 2D-parallel backend knobs: R data-parallel replicas, each a
+/// full S-stage pipeline (S comes from the manifest). Presence of a
+/// `[hybrid]` section (or `SessionBuilder::hybrid`) selects
+/// `Backend::Hybrid` on staged configs; on a stage-less config the grid
+/// has no pipeline axis and the run routes to the sharded backend,
+/// bit-identical to the same spec spelled with `[shard]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HybridSpec {
+    /// simulated data-parallel replicas R (each a full S-stage pipeline)
+    pub replicas: usize,
+    /// cross-replica tree-reduction fanout (>= 2)
+    pub fanout: usize,
+    /// overlap each stage's cross-replica reduction with the remaining
+    /// backward pass (false = reduce-after-backward barrier baseline)
+    pub overlap: bool,
+    /// threshold-group tiling over the grid (see [`HybridGrouping`])
+    pub grouping: HybridGrouping,
+    /// per-reduction-round link latency charged by the makespan model (s)
+    pub link_latency: f64,
+}
+
+impl Default for HybridSpec {
+    fn default() -> Self {
+        HybridSpec {
+            replicas: 2,
+            fanout: 2,
+            overlap: true,
+            grouping: HybridGrouping::Auto,
+            link_latency: 5e-4,
+        }
+    }
+}
+
+impl HybridSpec {
+    pub fn with_replicas(replicas: usize) -> Self {
+        HybridSpec { replicas, ..Default::default() }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.replicas == 0 {
+            bail!("hybrid.replicas must be > 0 (one full pipeline per data-parallel replica)");
+        }
+        if self.fanout < 2 {
+            bail!("hybrid.fanout must be >= 2, got {}", self.fanout);
+        }
+        if !(self.link_latency >= 0.0) {
+            bail!("hybrid.link_latency must be >= 0, got {}", self.link_latency);
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("replicas".into(), Json::Num(self.replicas as f64));
+        m.insert("fanout".into(), Json::Num(self.fanout as f64));
+        m.insert("overlap".into(), Json::Bool(self.overlap));
+        m.insert("grouping".into(), Json::Str(self.grouping.token().into()));
+        m.insert("link_latency".into(), Json::Num(self.link_latency));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = HybridSpec::default();
+        Ok(HybridSpec {
+            replicas: opt_usize(j, "replicas", d.replicas)?,
+            fanout: opt_usize(j, "fanout", d.fanout)?,
+            overlap: opt_bool(j, "overlap", d.overlap)?,
+            grouping: opt_str(j, "grouping", d.grouping.token())?.parse()?,
+            link_latency: opt_f64(j, "link_latency", d.link_latency)?,
+        })
+    }
+}
+
 // --------------------------------------------------------------- run spec
 
 /// Everything needed to execute one training run, on either backend.
@@ -749,6 +862,11 @@ pub struct RunSpec {
     /// configs only); `None` keeps the manifest-driven single/pipeline
     /// choice
     pub shard: Option<ShardSpec>,
+    /// `Some` selects the hybrid 2D-parallel backend on staged configs
+    /// (pipeline stages x data-parallel replicas); on a stage-less config
+    /// it degenerates to the sharded backend. Mutually exclusive with
+    /// `shard`.
+    pub hybrid: Option<HybridSpec>,
 }
 
 impl Default for RunSpec {
@@ -764,6 +882,7 @@ impl Default for RunSpec {
             data: DataSpec::default(),
             pipe: PipeSpec::default(),
             shard: None,
+            hybrid: None,
         }
     }
 }
@@ -800,6 +919,46 @@ impl RunSpec {
         self.optim.validate().context("invalid [optim] section")?;
         self.data.validate().context("invalid [data] section")?;
         self.pipe.validate().context("invalid [pipeline] section")?;
+        // exactly one data-parallel section may govern a spec: [hybrid]
+        // already defines the replica axis, so carrying both is ambiguous
+        if self.shard.is_some() && self.hybrid.is_some() {
+            bail!(
+                "spec carries both [shard] and [hybrid]; the hybrid grid already defines \
+                 the data-parallel axis — keep exactly one section"
+            );
+        }
+        if let Some(hy) = &self.hybrid {
+            hy.validate().context("invalid [hybrid] section")?;
+            // the hybrid backend always draws one global Poisson batch;
+            // silently ignoring a sampler override would hand the user a
+            // different privacy analysis than the spec reads as requesting
+            if self.pipe.sampling != Sampling::Poisson {
+                bail!(
+                    "[hybrid] runs always Poisson-sample (one global draw, amplified \
+                     accounting); pipeline.sampling = \"{}\" would have no effect — remove it",
+                    self.pipe.sampling.token()
+                );
+            }
+            // an explicit global E[B] must deal evenly across the replicas,
+            // or the disjoint Poisson slices cannot target it
+            if self.expected_batch > 0 && self.expected_batch % hy.replicas != 0 {
+                bail!(
+                    "expected_batch {} is not divisible across hybrid.replicas {}",
+                    self.expected_batch,
+                    hy.replicas
+                );
+            }
+            // private hybrid runs clip per (replica, stage) piece — the
+            // per-device cell of the taxonomy; flat/per-layer policies
+            // have no hybrid implementation
+            if self.clip.is_private() && self.clip.group_by != GroupBy::PerDevice {
+                bail!(
+                    "[hybrid] requires clip.group_by = per-device for private runs \
+                     (per-piece clipping over the replica x stage grid); got {}",
+                    self.clip.group_by.token()
+                );
+            }
+        }
         if let Some(sh) = &self.shard {
             sh.validate().context("invalid [shard] section")?;
             // the sharded backend always draws one global Poisson batch
@@ -862,6 +1021,9 @@ impl RunSpec {
         if let Some(sh) = &self.shard {
             m.insert("shard".into(), sh.to_json());
         }
+        if let Some(hy) = &self.hybrid {
+            m.insert("hybrid".into(), hy.to_json());
+        }
         Json::Obj(m)
     }
 
@@ -883,6 +1045,12 @@ impl RunSpec {
             shard: match j.opt("shard") {
                 Some(v) => {
                     Some(ShardSpec::from_json(v).context("in [shard] section")?)
+                }
+                None => None,
+            },
+            hybrid: match j.opt("hybrid") {
+                Some(v) => {
+                    Some(HybridSpec::from_json(v).context("in [hybrid] section")?)
                 }
                 None => None,
             },

@@ -100,13 +100,44 @@ impl ReduceModel {
     /// backprop order), sharing one FIFO network resource.
     pub fn overlap_makespan(&self, bwd: &[f64], red: &[f64]) -> f64 {
         assert_eq!(bwd.len(), red.len());
+        let mut ready = Vec::with_capacity(bwd.len());
         let mut compute_t = 0.0f64;
-        let mut net_free = 0.0f64;
-        for (b, r) in bwd.iter().zip(red) {
+        for b in bwd {
             compute_t += b;
-            net_free = net_free.max(compute_t) + r;
+            ready.push(compute_t);
         }
-        net_free.max(compute_t)
+        self.overlap_makespan_at(&ready, red)
+    }
+
+    /// The general overlapped makespan: piece `i`'s gradient becomes
+    /// available at ABSOLUTE time `ready[i]` (non-decreasing — the order
+    /// pieces reach the FIFO network) and needs `red[i]` seconds of
+    /// network time. This is [`ReduceModel::overlap_makespan`] with the
+    /// prefix-sum compute model replaced by arbitrary ready times, which
+    /// is what the hybrid backend feeds it: per-STAGE gradient-ready
+    /// times out of the GPipe schedule
+    /// ([`stage_grad_ready`](crate::pipeline::schedule::stage_grad_ready)),
+    /// so each stage's cross-replica reduction overlaps the earlier
+    /// stages' still-running backward — the paper's
+    /// clip-in-conjunction-with-backprop overlap lifted to the 2D grid.
+    pub fn overlap_makespan_at(&self, ready: &[f64], red: &[f64]) -> f64 {
+        assert_eq!(ready.len(), red.len());
+        // each piece waits for its gradient AND the network: the finish
+        // time already dominates every ready time (net_free >= ready[i])
+        let mut net_free = 0.0f64;
+        let mut end = 0.0f64;
+        for (t, r) in ready.iter().zip(red) {
+            net_free = net_free.max(*t) + r;
+            end = end.max(net_free);
+        }
+        end
+    }
+
+    /// Barrier baseline for ready-time pieces: every reduction waits for
+    /// the LAST gradient, then runs back-to-back.
+    pub fn barrier_makespan_at(&self, ready: &[f64], red: &[f64]) -> f64 {
+        assert_eq!(ready.len(), red.len());
+        ready.iter().cloned().fold(0.0, f64::max) + red.iter().sum::<f64>()
     }
 
     /// Makespan with a barrier: the whole backward pass, then every
@@ -196,6 +227,30 @@ mod tests {
             assert!(o >= bwd.iter().sum::<f64>());
             assert!(o >= red.iter().sum::<f64>());
         }
+    }
+
+    #[test]
+    fn overlap_at_generalizes_the_prefix_sum_form() {
+        let m = ReduceModel::new(4, 2, 1e-3);
+        let bwd = [0.004, 0.003, 0.005, 0.002];
+        let red: Vec<f64> =
+            [4096.0, 1024.0, 8192.0, 512.0].iter().map(|&b| m.layer_cost(b)).collect();
+        let mut ready = Vec::new();
+        let mut t = 0.0;
+        for b in &bwd {
+            t += b;
+            ready.push(t);
+        }
+        assert!(
+            (m.overlap_makespan(&bwd, &red) - m.overlap_makespan_at(&ready, &red)).abs() < 1e-15
+        );
+        assert!(
+            (m.barrier_makespan(&bwd, &red) - m.barrier_makespan_at(&ready, &red)).abs() < 1e-12
+        );
+        let o = m.overlap_makespan_at(&ready, &red);
+        assert!(o <= m.barrier_makespan_at(&ready, &red) + 1e-15);
+        assert!(o >= *ready.last().unwrap());
+        assert!(o >= red.iter().sum::<f64>());
     }
 
     #[test]

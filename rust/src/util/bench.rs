@@ -93,6 +93,40 @@ pub fn write_json_to(
     Ok(path.as_ref().to_path_buf())
 }
 
+/// True when benches run in CI smoke mode (`GWCLIP_BENCH_SMOKE=1`):
+/// minimal iteration counts, and artifact-dependent benches publish an
+/// empty trajectory file instead of erroring when the AOT artifacts are
+/// absent — so every CI run uploads a full set of `BENCH_*.json`.
+pub fn smoke() -> bool {
+    std::env::var("GWCLIP_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Iteration-count helper: `full` normally, 1 under smoke mode.
+pub fn iters(full: usize) -> usize {
+    if smoke() {
+        1
+    } else {
+        full
+    }
+}
+
+/// Smoke-mode escape hatch for benches that cannot run without the AOT
+/// artifacts: under `GWCLIP_BENCH_SMOKE=1` this writes an empty
+/// `BENCH_<suite>.json` (so the CI artifact upload stays complete) and
+/// returns Ok; otherwise the original error propagates.
+pub fn smoke_skip(suite: &str, err: anyhow::Error) -> anyhow::Result<()> {
+    if smoke() {
+        let path = write_json(suite, &[])?;
+        println!(
+            "[smoke] {suite}: artifacts unavailable ({err:#}); wrote empty {}",
+            path.display()
+        );
+        Ok(())
+    } else {
+        Err(err)
+    }
+}
+
 /// Run `f` for `warmup` + `iters` iterations and time each.
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
     for _ in 0..warmup {

@@ -15,8 +15,8 @@ use gwclip::data::lm::MarkovCorpus;
 use gwclip::data::Dataset;
 use gwclip::runtime::{HostValue, Runtime, Tensor};
 use gwclip::session::{
-    ClipMode, ClipPolicy, GroupBy, OptimSpec, PrivacySpec, RunSpec, Sampling, Session,
-    SessionBuilder, ShardSpec,
+    ClipMode, ClipPolicy, GroupBy, HybridGrouping, HybridSpec, OptimSpec, PrivacySpec, RunSpec,
+    Sampling, Session, SessionBuilder, ShardSpec,
 };
 
 // The xla PJRT client is !Send/!Sync, so a shared static is impossible;
@@ -612,6 +612,330 @@ fn sharded_overlap_beats_barrier_in_simulation() {
         );
         assert_eq!(st.syncs, 2, "4 workers, fanout 2 -> 2 tree rounds");
     }
+}
+
+// ------------------------------------------------------------------ hybrid
+
+#[test]
+fn backend_parity_pipeline_vs_hybrid_one_replica() {
+    // The hybrid backend's first parity contract: with ONE replica it must
+    // be the pipeline backend, seed for seed — the same derived schedule
+    // and plan (K = 1 x S piece groups ARE the S per-device groups), the
+    // same padded Poisson draws from the shared core RNG (a 1-slice
+    // ShardSampler is the single-device sampler bitwise), the same
+    // adaptive threshold trajectory (identical RNG consumption order:
+    // draw, stage-major noise, quantile release), and bit-identical
+    // parameters, because a 1-participant tree reduction is the identity
+    // and the noise share std/sqrt(1) is the full per-stage std.
+    let cfg = rt().manifest.config("lm_mid_pipe_lora").unwrap().clone();
+    let data = MarkovCorpus::new(128, cfg.hyper.seq, cfg.hyper.vocab, 4, 11);
+    let build = |hybrid: bool| {
+        let mut b = Session::builder(rt(), "lm_mid_pipe_lora")
+            .privacy(PrivacySpec { epsilon: 2.0, delta: 1e-5, quantile_r: 0.01 })
+            .clip(ClipPolicy {
+                clip_init: 1e-2,
+                target_q: 0.6,
+                ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive)
+            })
+            .optim(OptimSpec::adam(1e-3))
+            .n_micro(2)
+            .steps(4)
+            .seed(11);
+        if hybrid {
+            b = b.hybrid(HybridSpec::with_replicas(1));
+        }
+        b.build(data.len()).unwrap()
+    };
+    let mut pipe = build(false);
+    let mut hyb = build(true);
+    assert!(pipe.engine().is_some());
+    assert!(hyb.hybrid_engine().is_some());
+    assert_eq!(pipe.total_steps, hyb.total_steps, "same derived schedule");
+
+    let (pp, ph) = (pipe.plan().unwrap(), hyb.plan().unwrap());
+    assert_eq!(pp.q, ph.q, "1-replica hybrid must not change the accountant's q");
+    assert_eq!(pp.steps, ph.steps);
+    assert_eq!(pp.sigma_grad, ph.sigma_grad, "identical plan, bit for bit");
+    assert_eq!(pp.sigma_quantile, ph.sigma_quantile);
+    assert_eq!(pipe.thresholds(), hyb.thresholds());
+
+    for step in 0..pipe.total_steps {
+        let a = pipe.step(&data).unwrap();
+        let b = hyb.step(&data).unwrap();
+        assert_eq!(a.batch_size, b.batch_size, "step {step}: same Poisson draw");
+        assert_eq!(a.truncated, b.truncated, "step {step}");
+        // adaptive per-piece thresholds: same clip counts, same quantile
+        // noise draws -> the SAME trajectory, exactly
+        assert_eq!(pipe.thresholds(), hyb.thresholds(), "step {step}");
+        assert_eq!(a.loss, b.loss, "step {step}: bitwise-equal loss");
+        // a 1-replica tree has zero reduction rounds: overlapping hides
+        // nothing and costs nothing
+        assert_eq!(b.sim_overlap_secs, b.sim_barrier_secs, "step {step}");
+    }
+    // bit-identical parameters after the full run, on every stage
+    let pa = pipe.param_map();
+    let pb = hyb.param_map();
+    assert_eq!(pa.len(), pb.len());
+    for (name, ta) in &pa {
+        let tb = &pb[name];
+        assert_eq!(ta.shape, tb.shape, "{name}");
+        assert_eq!(ta.data, tb.data, "{name} diverged");
+    }
+    let (l0, _) = pipe.evaluate(&data).unwrap();
+    let (l1, _) = hyb.evaluate(&data).unwrap();
+    assert_eq!(l0, l1);
+}
+
+#[test]
+fn backend_parity_hybrid_stageless_degenerates_to_sharded() {
+    // The second parity contract: on a stage-less config the hybrid grid
+    // has no pipeline axis (S = 1 with no stage partitioning), and the
+    // session routes [hybrid] to the sharded backend — so the same run
+    // spelled [hybrid] and [shard] must be bit-identical end to end
+    // (thresholds, losses, final params), adaptive trajectory included.
+    let data = tiny_mixture(256, 9);
+    let build = |hybrid: bool| {
+        let mut b = Session::builder(rt(), "resmlp_tiny")
+            .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+            .clip(ClipPolicy {
+                clip_init: 0.5,
+                target_q: 0.6,
+                ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive)
+            })
+            .optim(OptimSpec::sgd(0.1))
+            .epochs(0.5)
+            .seed(13);
+        if hybrid {
+            b = b.hybrid(HybridSpec { replicas: 2, fanout: 2, ..Default::default() });
+        } else {
+            b = b.shard(ShardSpec { workers: 2, fanout: 2, ..Default::default() });
+        }
+        b.build(data.len()).unwrap()
+    };
+    let mut sharded = build(false);
+    let mut hybrid = build(true);
+    assert!(sharded.shard_engine().is_some());
+    assert!(
+        hybrid.shard_engine().is_some() && hybrid.hybrid_engine().is_none(),
+        "a stage-less [hybrid] run IS the sharded backend"
+    );
+    assert_eq!(sharded.total_steps, hybrid.total_steps);
+    let (pa, pb) = (sharded.plan().unwrap(), hybrid.plan().unwrap());
+    assert_eq!(pa.q, pb.q);
+    assert_eq!(pa.sigma_grad, pb.sigma_grad);
+    assert_eq!(pa.sigma_quantile, pb.sigma_quantile);
+
+    for step in 0..sharded.total_steps {
+        let a = sharded.step(&data).unwrap();
+        let b = hybrid.step(&data).unwrap();
+        assert_eq!(a.batch_size, b.batch_size, "step {step}");
+        assert_eq!(a.truncated, b.truncated, "step {step}");
+        assert_eq!(sharded.thresholds(), hybrid.thresholds(), "step {step}");
+        assert_eq!(a.loss, b.loss, "step {step}");
+        assert_eq!(a.clip_frac, b.clip_frac, "step {step}");
+        // satellite: the reduction makespans are threaded through
+        // StepEvent on both spellings (values derive from measured host
+        // timings, so only their structure is comparable across runs)
+        assert!(a.sim_overlap_secs > 0.0 && b.sim_overlap_secs > 0.0);
+        assert!(a.sim_overlap_secs <= a.sim_barrier_secs + 1e-12);
+        assert!(b.sim_overlap_secs <= b.sim_barrier_secs + 1e-12);
+    }
+    let pa = sharded.params().unwrap();
+    let pb = hybrid.params().unwrap();
+    assert_eq!(pa.len(), pb.len());
+    for (x, y) in pa.iter().zip(pb) {
+        assert_eq!(x.data, y.data, "parameters diverged");
+    }
+}
+
+#[test]
+fn backend_parity_hybrid_single_stage_vs_sharded_replicas() {
+    // The cross-executable face of the S = 1 contract: a hybrid R x 1
+    // grid on lm_tiny_pipe (the single-stage pipeline twin of lm_tiny)
+    // and a sharded R-worker run on lm_tiny derive the same plan (same
+    // per-replica E[B] convention, q = E[B]/n over the same step count),
+    // consume the shared core RNG identically (one global draw, then
+    // replica-major noise at the SAME applied std sigma*C after the
+    // 1/sqrt(R) share), and hold the same fixed thresholds — so the RNG
+    // streams stay bit-aligned across the whole run and the losses agree
+    // to f32 reduction order (fused single-device step vs staged
+    // loss_bwd compile to different HLO, as in the existing
+    // single-vs-pipeline parity test).
+    let cfg = rt().manifest.config("lm_tiny").unwrap().clone();
+    let data = MarkovCorpus::new(64, cfg.hyper.seq, cfg.hyper.vocab, 4, 3);
+    let privacy = PrivacySpec { epsilon: 2.0, delta: 1e-5, quantile_r: 0.0 };
+    let clip = ClipPolicy {
+        clip_init: 0.05,
+        ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed)
+    };
+    let mut shard = Session::builder(rt(), "lm_tiny")
+        .privacy(privacy)
+        .clip(clip.clone())
+        .optim(OptimSpec::sgd(0.01))
+        .epochs(0.5)
+        .seed(33)
+        .shard(ShardSpec { workers: 2, ..Default::default() })
+        .build(data.len())
+        .unwrap();
+    let mut hybrid = Session::builder(rt(), "lm_tiny_pipe")
+        .privacy(privacy)
+        .clip(clip)
+        .optim(OptimSpec::sgd(0.01))
+        .epochs(0.5)
+        .n_micro(1)
+        .seed(33)
+        .hybrid(HybridSpec { replicas: 2, ..Default::default() })
+        .build(data.len())
+        .unwrap();
+    assert!(shard.shard_engine().is_some() && hybrid.hybrid_engine().is_some());
+    assert_eq!(hybrid.hybrid_engine().unwrap().n_stages, 1);
+    assert_eq!(shard.total_steps, hybrid.total_steps, "same derived schedule");
+
+    let (ps, ph) = (shard.plan().unwrap(), hybrid.plan().unwrap());
+    assert_eq!(ps.q, ph.q, "one release per step at q = E[B]/n on both");
+    assert!(ps.q < 1.0, "parity must exercise the amplified branch");
+    assert_eq!(ps.steps, ph.steps);
+    assert_eq!(ps.sigma_grad, ph.sigma_grad);
+    assert_eq!(shard.thresholds(), hybrid.thresholds());
+
+    for step in 0..shard.total_steps {
+        let a = shard.step(&data).unwrap();
+        let b = hybrid.step(&data).unwrap();
+        assert_eq!(a.batch_size, b.batch_size, "step {step}: same global draw");
+        assert_eq!(a.truncated, b.truncated, "step {step}");
+        assert_eq!(shard.thresholds(), hybrid.thresholds(), "step {step}");
+        assert!(
+            (a.loss - b.loss).abs() < 2e-3 * (1.0 + a.loss.abs()),
+            "step {step}: loss {} vs {}",
+            a.loss,
+            b.loss
+        );
+    }
+    // same RNG discipline bit for bit: after the full run both shared
+    // cores must sit at the same stream position and value
+    let ra = shard.shard_engine_mut().unwrap().core.rng.uniform();
+    let rb = hybrid.hybrid_engine_mut().unwrap().core.rng.uniform();
+    assert_eq!(ra, rb, "core RNG streams diverged");
+}
+
+#[test]
+fn hybrid_multi_replica_trains_and_stays_in_sync() {
+    let cfg = rt().manifest.config("lm_mid_pipe_lora").unwrap().clone();
+    let data = MarkovCorpus::new(128, cfg.hyper.seq, cfg.hyper.vocab, 4, 5);
+    let mut sess = Session::builder(rt(), "lm_mid_pipe_lora")
+        .privacy(PrivacySpec { epsilon: 2.0, delta: 1e-5, quantile_r: 0.01 })
+        .clip(ClipPolicy {
+            clip_init: 1e-2,
+            target_q: 0.6,
+            ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive)
+        })
+        .optim(OptimSpec::adam(1e-3))
+        .n_micro(2)
+        .steps(3)
+        .seed(7)
+        .hybrid(HybridSpec { replicas: 2, fanout: 2, ..Default::default() })
+        .build(data.len())
+        .unwrap();
+    // satellite: describe() must surface the 2D topology + thresholds
+    let d = sess.describe();
+    assert!(d.contains("hybrid"), "{d}");
+    assert!(d.contains("replicas=2"), "{d}");
+    assert!(d.contains("stages=4"), "{d}");
+    assert!(d.contains("fanout=2"), "{d}");
+    assert!(d.contains("thresholds=["), "{d}");
+    // per-piece grouping: one threshold per (replica, stage) piece
+    assert_eq!(sess.thresholds().len(), 2 * 4);
+    let labels = sess.group_labels();
+    assert_eq!(labels.len(), 8);
+    assert_eq!(labels[0], "r0s0");
+    assert_eq!(labels[7], "r1s3");
+
+    let events = sess.run(&data, 0).unwrap();
+    assert_eq!(events.len(), 3);
+    for ev in &events {
+        assert!(ev.loss.is_finite());
+        assert!(ev.sim_overlap_secs > 0.0);
+        assert!(
+            ev.sim_overlap_secs <= ev.sim_barrier_secs + 1e-12,
+            "overlap {} must never lose to barrier {}",
+            ev.sim_overlap_secs,
+            ev.sim_barrier_secs
+        );
+        assert_eq!(ev.syncs, 1, "2 replicas, fanout 2 -> 1 tree round");
+        for f in &ev.clip_frac {
+            assert!((0.0..=1.0 + 1e-9).contains(f));
+        }
+    }
+    let e = sess.hybrid_engine().unwrap();
+    assert!(e.replicas_in_sync(), "replicas must stay bit-identical");
+    assert!(sess.thresholds().iter().all(|&c| c > 0.0));
+    let (loss, _) = sess.evaluate(&data).unwrap();
+    assert!(loss.is_finite());
+}
+
+#[test]
+fn hybrid_backend_runs_from_spec_file() {
+    // acceptance: `gwclip run --spec docs/specs/hybrid_per_device.toml`
+    // end to end (the CLI drives exactly this path)
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/specs/hybrid_per_device.toml");
+    let spec = RunSpec::from_path(path).unwrap();
+    assert!(spec.hybrid.is_some(), "the example spec must carry a [hybrid] section");
+    let (mut sess, train, eval) =
+        SessionBuilder::from_spec(rt(), spec).build_with_data().unwrap();
+    let d = sess.describe();
+    assert!(d.contains("hybrid") && d.contains("replicas=2") && d.contains("stages=4"), "{d}");
+    let ev = sess.step(&*train).unwrap();
+    assert!(ev.loss.is_finite());
+    assert!(ev.sim_overlap_secs > 0.0 && ev.sim_barrier_secs >= ev.sim_overlap_secs);
+    assert!(sess.hybrid_engine().unwrap().replicas_in_sync());
+    let (loss, _) = sess.evaluate(&*eval).unwrap();
+    assert!(loss.is_finite());
+}
+
+#[test]
+fn session_selects_hybrid_backend_and_validates_surface() {
+    // staged config + [hybrid] -> hybrid backend with an R x S piece grid
+    let s = Session::builder(rt(), "lm_mid_pipe_lora")
+        .privacy(PrivacySpec { epsilon: 2.0, delta: 1e-5, quantile_r: 0.0 })
+        .clip(ClipPolicy { clip_init: 1e-2, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed) })
+        .steps(2)
+        .hybrid(HybridSpec::with_replicas(2))
+        .build(64)
+        .unwrap();
+    assert!(s.hybrid_engine().is_some() && s.engine().is_none() && s.trainer().is_none());
+    assert_eq!(s.thresholds().len(), 2 * s.hybrid_engine().unwrap().n_stages);
+    // per-stage grouping shares one threshold per stage across replicas
+    let s = Session::builder(rt(), "lm_mid_pipe_lora")
+        .privacy(PrivacySpec { epsilon: 2.0, delta: 1e-5, quantile_r: 0.0 })
+        .clip(ClipPolicy { clip_init: 1e-2, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed) })
+        .steps(2)
+        .hybrid(HybridSpec { grouping: HybridGrouping::PerStage, ..HybridSpec::with_replicas(2) })
+        .build(64)
+        .unwrap();
+    assert_eq!(s.thresholds().len(), s.hybrid_engine().unwrap().n_stages);
+    // flat-sync x hybrid is rejected (validation: private hybrid needs
+    // the per-device policy)
+    assert!(Session::builder(rt(), "lm_mid_pipe_lora")
+        .clip(ClipPolicy::new(GroupBy::Flat, ClipMode::Fixed))
+        .steps(2)
+        .hybrid(HybridSpec::with_replicas(2))
+        .build(64)
+        .is_err());
+    // stage-less + per-stage grouping has no stage axis to tile
+    assert!(Session::builder(rt(), "resmlp_tiny")
+        .clip(ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed))
+        .epochs(0.5)
+        .hybrid(HybridSpec { grouping: HybridGrouping::PerStage, ..HybridSpec::with_replicas(2) })
+        .build(64)
+        .is_err());
+    // pipeline.steps cannot govern a stage-less [hybrid] run
+    assert!(Session::builder(rt(), "resmlp_tiny")
+        .clip(ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed))
+        .epochs(0.5)
+        .steps(3)
+        .hybrid(HybridSpec::with_replicas(2))
+        .build(64)
+        .is_err());
 }
 
 #[test]

@@ -588,6 +588,114 @@ fn prop_shard_overlap_never_loses_to_barrier() {
     }
 }
 
+// ------------------------------------------------------- hybrid 2D grid
+
+/// The acceptance property of the hybrid per-piece scheme: an example
+/// lives on exactly one replica `r`, and its gradient is clipped per
+/// stage piece to C_(r,st), so it moves the merged update by at most
+/// sqrt(sum_st C_(r,st)^2) — which the quadrature sum over the WHOLE
+/// R x S threshold grid dominates. The local noise shares
+/// sigma_g/sqrt(R) under the equal-budget allocation over K = R*S groups
+/// merge (variances add) to sigma*sqrt(S)*sqrt(sum_r C_(r,st)^2) per
+/// stage — degenerating to the pipeline per-device formula at R = 1 and
+/// to the sharded quadrature formula at S = 1.
+#[test]
+fn prop_hybrid_2d_quadrature_bound_and_noise_shares() {
+    use gwclip::coordinator::noise::per_device_std;
+    use gwclip::shard::quadrature_bound;
+    let mut r = Xoshiro::seeded(41);
+    for case in 0..25 {
+        let reps = 1 + r.below(5);
+        let stages = 1 + r.below(5);
+        let k = reps * stages;
+        let sigma = 0.3 + 2.0 * r.uniform();
+        // piece thresholds C[(r,st)] flattened replica-major, exactly the
+        // session builder's group order
+        let thr: Vec<f64> = (0..k).map(|_| 0.05 + 2.0 * r.uniform()).collect();
+        let qb = quadrature_bound(&thr);
+
+        // one example on replica rr saturating every piece threshold
+        // moves the merge by exactly its row quadrature <= grid quadrature
+        for rr in 0..reps {
+            let row: Vec<f64> = (0..stages).map(|st| thr[rr * stages + st]).collect();
+            let row_qb = quadrature_bound(&row);
+            assert!(row_qb <= qb + 1e-12, "case {case}: row {rr}");
+            let move_sq: f64 = row.iter().map(|c| c * c).sum();
+            assert!((move_sq.sqrt() - row_qb).abs() < 1e-12);
+        }
+
+        // noise calibration: equal-budget stds over the K = R*S grid,
+        // each piece adding its 1/sqrt(R) share; stage st's merged std
+        // must equal sigma * sqrt(S) * sqrt(sum_r C_(r,st)^2)
+        let dims = vec![10u64; k];
+        let stds = Allocation::EqualBudget.stds(sigma, &thr, &dims);
+        let share = 1.0 / (reps as f64).sqrt();
+        for st in 0..stages {
+            let merged_var: f64 = (0..reps)
+                .map(|rr| {
+                    let s = stds[rr * stages + st] * share;
+                    s * s
+                })
+                .sum();
+            let col_sq: f64 = (0..reps).map(|rr| thr[rr * stages + st].powi(2)).sum();
+            let want = sigma * (stages as f64).sqrt() * col_sq.sqrt();
+            assert!(
+                (merged_var.sqrt() - want).abs() < 1e-9 * want.max(1.0),
+                "case {case} stage {st}: merged std {} vs {want}",
+                merged_var.sqrt()
+            );
+        }
+        // degenerate rows of the grid reproduce both 1D backends' formulas
+        if reps == 1 {
+            for st in 0..stages {
+                let want = per_device_std(sigma, thr[st], stages);
+                assert!((stds[st] * share - want).abs() < 1e-9, "R=1 stage {st}");
+            }
+        }
+        if stages == 1 {
+            let merged_var: f64 = stds.iter().map(|s| (s * share) * (s * share)).sum();
+            assert!(
+                (merged_var.sqrt() - sigma * qb).abs() < 1e-9 * (sigma * qb).max(1.0),
+                "S=1 must give the sharded quadrature formula"
+            );
+        }
+    }
+}
+
+/// The hybrid's pipeline-aware overlapped reduction never loses to the
+/// reduce-after-backward barrier, for every (R >= 1, S >= 1, fanout >= 2)
+/// and any non-decreasing gradient-ready schedule — and strictly wins as
+/// soon as there are >= 2 stages of work and a real reduction to hide.
+#[test]
+fn prop_hybrid_overlap_makespan_never_loses_to_barrier() {
+    use gwclip::shard::ReduceModel;
+    let mut r = Xoshiro::seeded(42);
+    for _ in 0..50 {
+        let replicas = 1 + r.below(16);
+        let fanout = 2 + r.below(3);
+        let stages = 1 + r.below(8);
+        let m = ReduceModel::new(replicas, fanout, 1e-4 + 1e-3 * r.uniform());
+        // non-decreasing ready times: stage gradients drain from the
+        // pipeline last-stage-first
+        let mut ready = Vec::with_capacity(stages);
+        let mut t = 0.0;
+        for _ in 0..stages {
+            t += 1e-4 + 5e-3 * r.uniform();
+            ready.push(t);
+        }
+        let red: Vec<f64> =
+            (0..stages).map(|_| m.layer_cost(1e3 + 1e7 * r.uniform())).collect();
+        let o = m.overlap_makespan_at(&ready, &red);
+        let b = m.barrier_makespan_at(&ready, &red);
+        assert!(o <= b + 1e-15, "overlap {o} > barrier {b}");
+        assert!(o >= *ready.last().unwrap() - 1e-15, "faster than the pipeline alone");
+        assert!(o >= red.iter().sum::<f64>() - 1e-15, "faster than the network alone");
+        if replicas > 1 && stages >= 2 {
+            assert!(o < b, "R={replicas} S={stages}: overlap must strictly win");
+        }
+    }
+}
+
 // ------------------------------------------------------------ noise+gauss
 
 #[test]

@@ -6,8 +6,8 @@ use gwclip::coordinator::noise::Allocation;
 use gwclip::coordinator::trainer::Method;
 use gwclip::pipeline::PipelineMode;
 use gwclip::session::{
-    ClipMode, ClipPolicy, DataSpec, GroupBy, OptimSpec, PipeSpec, PrivacySpec, RunSpec, Sampling,
-    ShardGrouping, ShardSpec,
+    ClipMode, ClipPolicy, DataSpec, GroupBy, HybridGrouping, HybridSpec, OptimSpec, PipeSpec,
+    PrivacySpec, RunSpec, Sampling, ShardGrouping, ShardSpec,
 };
 use gwclip::util::json::Json;
 
@@ -273,6 +273,130 @@ fn shard_validation_rejects_each_nonsense_class() {
     let mut s = ok.clone();
     s.pipe.steps = 10;
     assert!(s.validate().is_err(), "pipeline.steps x [shard]");
+}
+
+#[test]
+fn hybrid_spec_roundtrips_json_and_toml() {
+    // a spec without [hybrid] stays hybrid-less through a round-trip
+    let plain = RunSpec::for_config("lm_mid_pipe_lora");
+    assert_eq!(roundtrip(&plain).hybrid, None);
+
+    // JSON: every grouping token survives a round-trip
+    for grouping in [HybridGrouping::Auto, HybridGrouping::PerPiece, HybridGrouping::PerStage] {
+        let mut spec = RunSpec::for_config("lm_mid_pipe_lora");
+        spec.clip = ClipPolicy {
+            clip_init: 1e-2,
+            ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed)
+        };
+        spec.hybrid = Some(HybridSpec {
+            replicas: 4,
+            fanout: 3,
+            overlap: false,
+            grouping,
+            link_latency: 1e-3,
+        });
+        assert_eq!(roundtrip(&spec), spec, "{grouping:?}");
+    }
+
+    // TOML: the [hybrid] section parses with defaults for omitted keys
+    let toml = r#"
+config = "lm_mid_pipe_lora"
+epochs = 1.0
+
+[clip]
+group_by = "per-device"
+mode = "fixed"
+clip_init = 0.01
+
+[hybrid]
+replicas = 2
+grouping = "per-piece"
+"#;
+    let spec = RunSpec::parse(toml).unwrap();
+    let hy = spec.hybrid.expect("[hybrid] section must select the hybrid backend");
+    assert_eq!(hy.replicas, 2);
+    assert_eq!(hy.fanout, HybridSpec::default().fanout);
+    assert!(hy.overlap, "overlap defaults on");
+    assert_eq!(hy.grouping, HybridGrouping::PerPiece);
+    // the JSON render re-parses to the same spec
+    assert_eq!(RunSpec::parse(&spec.render_json()).unwrap(), spec);
+}
+
+#[test]
+fn hybrid_grouping_tokens_roundtrip() {
+    for g in [HybridGrouping::Auto, HybridGrouping::PerPiece, HybridGrouping::PerStage] {
+        assert_eq!(g.token().parse::<HybridGrouping>().unwrap(), g);
+    }
+    for (alias, want) in [
+        ("perpiece", HybridGrouping::PerPiece),
+        ("per_piece", HybridGrouping::PerPiece),
+        ("per-device", HybridGrouping::PerPiece),
+        ("perstage", HybridGrouping::PerStage),
+        ("per_stage", HybridGrouping::PerStage),
+    ] {
+        assert_eq!(alias.parse::<HybridGrouping>().unwrap(), want, "alias {alias}");
+    }
+    assert!("flat".parse::<HybridGrouping>().is_err(), "no flat grid tiling");
+    assert!("".parse::<HybridGrouping>().is_err());
+}
+
+#[test]
+fn hybrid_validation_rejects_each_nonsense_class() {
+    let ok = {
+        let mut s = RunSpec::for_config("lm_mid_pipe_lora");
+        s.clip = ClipPolicy {
+            clip_init: 1e-2,
+            ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed)
+        };
+        s.hybrid = Some(HybridSpec::with_replicas(2));
+        s
+    };
+    ok.validate().unwrap();
+
+    // satellite: replicas == 0 must fail at validation time
+    let mut s = ok.clone();
+    s.hybrid = Some(HybridSpec { replicas: 0, ..Default::default() });
+    assert!(s.validate().is_err(), "replicas == 0");
+
+    // satellite: an explicit E[B] must deal evenly across replicas
+    let mut s = ok.clone();
+    s.expected_batch = 7;
+    assert!(s.validate().is_err(), "7 examples cannot split over 2 replicas");
+    let mut s = ok.clone();
+    s.expected_batch = 8;
+    s.validate().unwrap();
+
+    let mut s = ok.clone();
+    s.hybrid = Some(HybridSpec { fanout: 1, ..Default::default() });
+    assert!(s.validate().is_err(), "fanout < 2");
+
+    let mut s = ok.clone();
+    s.hybrid = Some(HybridSpec { link_latency: -1.0, ..Default::default() });
+    assert!(s.validate().is_err(), "negative link latency");
+
+    // satellite: carrying both data-parallel sections is ambiguous
+    let mut s = ok.clone();
+    s.shard = Some(ShardSpec::with_workers(2));
+    assert!(s.validate().is_err(), "[shard] + [hybrid] together");
+
+    // the hybrid always Poisson-samples its one global draw
+    let mut s = ok.clone();
+    s.pipe.sampling = Sampling::RoundRobin;
+    assert!(s.validate().is_err(), "round_robin sampling x [hybrid]");
+
+    // private hybrid runs clip per (replica, stage) piece; flat and
+    // per-layer policies have no hybrid implementation
+    let mut s = ok.clone();
+    s.clip = ClipPolicy::new(GroupBy::Flat, ClipMode::Fixed);
+    assert!(s.validate().is_err(), "flat policy x [hybrid]");
+    let mut s = ok.clone();
+    s.clip = ClipPolicy::new(GroupBy::PerLayer, ClipMode::Fixed);
+    assert!(s.validate().is_err(), "per-layer policy x [hybrid]");
+
+    // ...but a non-private grid doesn't constrain the policy
+    let mut s = ok.clone();
+    s.clip = ClipPolicy::non_private();
+    s.validate().unwrap();
 }
 
 #[test]
