@@ -15,7 +15,8 @@ use gwclip::data::lm::MarkovCorpus;
 use gwclip::data::Dataset;
 use gwclip::runtime::Runtime;
 use gwclip::session::{
-    ClipMode, ClipPolicy, GroupBy, HybridSpec, OptimSpec, PrivacySpec, Session,
+    ClipMode, ClipPolicy, CompressKind, CompressSpec, GroupBy, HybridSpec, OptimSpec,
+    PrivacySpec, Session,
 };
 use gwclip::util::bench::{bench, iters, smoke_skip, write_json, BenchResult};
 
@@ -45,7 +46,7 @@ fn main() -> anyhow::Result<()> {
             .build(data.len())?;
         let (mut ov, mut ba, mut n) = (0.0, 0.0, 0usize);
         let r = bench(&format!("hybrid/R{replicas}/step"), 1, iters(3), || {
-            let st = sess.hybrid_engine_mut().unwrap().step(&data).unwrap();
+            let st = sess.step(&data).unwrap();
             ov += st.sim_overlap_secs;
             ba += st.sim_barrier_secs;
             n += 1;
@@ -74,10 +75,54 @@ fn main() -> anyhow::Result<()> {
         rows.push(BenchResult::scalar(&format!("hybrid/R{replicas}/sim-barrier"), ba));
     }
 
+    // compressed reduction on the same seam: error-feedback top-k at
+    // R = 4 must beat the dense counterfactual computed from the SAME
+    // step timings (the engine reports it per compressed step)
+    println!("\n== hybrid compression: topk 25% + error feedback, R = 4 ==");
+    let mut sess = Session::builder(&rt, config)
+        .privacy(PrivacySpec { epsilon: 2.0, delta: 1e-5, quantile_r: 0.0 })
+        .clip(ClipPolicy { clip_init: 1e-2, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed) })
+        .optim(OptimSpec::adam(1e-3))
+        .n_micro(2)
+        .steps(1000)
+        .hybrid(HybridSpec::with_replicas(4))
+        .compress(CompressSpec { kind: CompressKind::TopK, ratio: 0.25, error_feedback: true })
+        .build(data.len())?;
+    let (mut ov, mut n) = (0.0, 0usize);
+    let mut compress_ok = true;
+    let r = bench("hybrid/R4/topk25/step", 1, iters(3), || {
+        let st = sess.step(&data).unwrap();
+        ov += st.sim_overlap_secs;
+        n += 1;
+        // same-timings dense counterfactual: deterministic comparison
+        let (d_ov, _) = sess.hybrid_engine().unwrap().last_dense_sims().unwrap();
+        if st.sim_overlap_secs >= d_ov {
+            compress_ok = false;
+            println!(
+                "R=4: FAIL compressed overlap {:.4}s !< dense-counterfactual {d_ov:.4}s",
+                st.sim_overlap_secs
+            );
+        }
+    });
+    if compress_ok {
+        println!(
+            "{}   sim overlap {:.4}s  PASS: dense counterfactual beaten every step",
+            r.report(),
+            ov / n as f64
+        );
+    } else {
+        failed = true;
+    }
+    rows.push(r);
+    rows.push(BenchResult::scalar("hybrid/R4/topk25/sim-overlap", ov / n as f64));
+
     let path = write_json("hybrid", &rows)?;
     println!("wrote {}", path.display());
     if failed {
-        anyhow::bail!("overlapped reduction must beat barrier reduction at R >= 2 replicas");
+        anyhow::bail!(
+            "hybrid bench acceptance failed (overlap vs barrier at R >= 2, or compressed vs \
+             dense counterfactual at R = 4)"
+        );
     }
     Ok(())
 }

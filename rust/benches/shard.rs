@@ -8,10 +8,12 @@
 //!     cargo bench --bench shard
 
 use gwclip::data::classif::MixtureImages;
+use gwclip::data::lm::MarkovCorpus;
 use gwclip::data::Dataset;
 use gwclip::runtime::Runtime;
 use gwclip::session::{
-    ClipMode, ClipPolicy, GroupBy, OptimSpec, PrivacySpec, Session, ShardSpec,
+    ClipMode, ClipPolicy, CompressKind, CompressSpec, GroupBy, OptimSpec, PrivacySpec, Session,
+    ShardSpec,
 };
 use gwclip::util::bench::{bench, iters, smoke_skip, write_json, BenchResult};
 
@@ -26,51 +28,127 @@ fn main() -> anyhow::Result<()> {
 
     println!("== sharded data-parallel: per-device clipping on resmlp, fanout 2 ==");
     for workers in [1usize, 2, 4, 8] {
-        let mut sess = Session::builder(&rt, "resmlp")
-            .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.0 })
-            .clip(ClipPolicy {
-                clip_init: 1.0,
-                ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed)
-            })
-            .optim(OptimSpec::sgd(0.25))
-            .epochs(100.0) // plenty of scheduled steps for the bench loop
-            .shard(ShardSpec::with_workers(workers))
-            .build(data.len())?;
-        let (mut ov, mut ba, mut n) = (0.0, 0.0, 0usize);
-        let r = bench(&format!("shard/N{workers}/step"), 1, iters(4), || {
-            let st = sess.shard_engine_mut().unwrap().step(&data).unwrap();
-            ov += st.sim_overlap_secs;
-            ba += st.sim_barrier_secs;
-            n += 1;
-        });
-        let (ov, ba) = (ov / n as f64, ba / n as f64);
-        let verdict = if workers >= 4 {
-            if ov < ba {
-                "PASS: overlap beats barrier"
-            } else {
-                failed = true;
-                "FAIL: overlap did not beat barrier"
+        // compress = None -> dense baseline; Some -> error-feedback top-k
+        // on the same run shape (the privacy plan is identical: the ratio
+        // only post-processes already-noised shares)
+        for compress in [
+            None,
+            Some(CompressSpec { kind: CompressKind::TopK, ratio: 0.25, error_feedback: true }),
+        ] {
+            let mut b = Session::builder(&rt, "resmlp")
+                .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.0 })
+                .clip(ClipPolicy {
+                    clip_init: 1.0,
+                    ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed)
+                })
+                .optim(OptimSpec::sgd(0.25))
+                .epochs(100.0) // plenty of scheduled steps for the bench loop
+                .shard(ShardSpec::with_workers(workers));
+            if let Some(c) = compress {
+                b = b.compress(c);
             }
-        } else {
-            "-"
-        };
-        println!(
-            "{}   sim overlap {:.4}s barrier {:.4}s ({:.0}% hidden)  {}",
-            r.report(),
-            ov,
-            ba,
-            100.0 * (1.0 - if ba > 0.0 { ov / ba } else { 1.0 }),
-            verdict
-        );
-        rows.push(r);
-        rows.push(BenchResult::scalar(&format!("shard/N{workers}/sim-overlap"), ov));
-        rows.push(BenchResult::scalar(&format!("shard/N{workers}/sim-barrier"), ba));
+            let mut sess = b.build(data.len())?;
+            let tag = if compress.is_some() { "topk25" } else { "dense" };
+            let (mut ov, mut ba, mut n) = (0.0, 0.0, 0usize);
+            let mut dense_ctf = Vec::new(); // same-timing dense counterfactual
+            let r = bench(&format!("shard/N{workers}/{tag}/step"), 1, iters(4), || {
+                let st = sess.step(&data).unwrap();
+                ov += st.sim_overlap_secs;
+                ba += st.sim_barrier_secs;
+                n += 1;
+                if let Some((d_ov, _)) = sess.shard_engine().unwrap().last_dense_sims() {
+                    dense_ctf.push((st.sim_overlap_secs, d_ov));
+                }
+            });
+            let (ov, ba) = (ov / n as f64, ba / n as f64);
+            // acceptance: compressed reduction beats the uncompressed
+            // makespan (same timings, counterfactual payload) once the
+            // tree actually moves bytes
+            if workers >= 4 {
+                for (comp_ov, d_ov) in &dense_ctf {
+                    if comp_ov >= d_ov {
+                        failed = true;
+                        println!(
+                            "N={workers}: FAIL compressed overlap {comp_ov:.4}s !< \
+                             dense-counterfactual {d_ov:.4}s"
+                        );
+                    }
+                }
+                if compress.is_some() && !dense_ctf.is_empty() {
+                    println!(
+                        "N={workers}: PASS-CHECKED {} compressed step(s) against the \
+                         dense counterfactual",
+                        dense_ctf.len()
+                    );
+                }
+            }
+            let verdict = if compress.is_none() && workers >= 4 {
+                if ov < ba {
+                    "PASS: overlap beats barrier"
+                } else {
+                    failed = true;
+                    "FAIL: overlap did not beat barrier"
+                }
+            } else {
+                "-"
+            };
+            println!(
+                "{}   sim overlap {:.4}s barrier {:.4}s ({:.0}% hidden)  {}",
+                r.report(),
+                ov,
+                ba,
+                100.0 * (1.0 - if ba > 0.0 { ov / ba } else { 1.0 }),
+                verdict
+            );
+            rows.push(r);
+            rows.push(BenchResult::scalar(&format!("shard/N{workers}/{tag}/sim-overlap"), ov));
+            rows.push(BenchResult::scalar(&format!("shard/N{workers}/{tag}/sim-barrier"), ba));
+        }
+    }
+
+    // utility-within-noise smoke on lm_tiny: the same sharded run with and
+    // without compression must land at comparable eval NLL (error feedback
+    // delivers the dropped mass over time); assert a loose factor so the
+    // smoke check is robust to noise
+    println!("\n== compression utility smoke: lm_tiny, 2 workers ==");
+    let cfg = rt.manifest.config("lm_tiny")?.clone();
+    let lm = MarkovCorpus::new(256, cfg.hyper.seq, cfg.hyper.vocab, 4, 0);
+    let mut nlls = Vec::new();
+    for compress in [
+        None,
+        Some(CompressSpec { kind: CompressKind::TopK, ratio: 0.25, error_feedback: true }),
+    ] {
+        let mut b = Session::builder(&rt, "lm_tiny")
+            .privacy(PrivacySpec { epsilon: 1e6, delta: 1e-5, quantile_r: 0.0 })
+            .clip(ClipPolicy { clip_init: 0.1, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed) })
+            .optim(OptimSpec::adam(3e-3))
+            .epochs(if gwclip::util::bench::smoke() { 0.5 } else { 2.0 })
+            .seed(5)
+            .shard(ShardSpec { workers: 2, ..Default::default() });
+        if let Some(c) = compress {
+            b = b.compress(c);
+        }
+        let mut sess = b.build(lm.len())?;
+        sess.run(&lm, 0)?;
+        let (nll, _) = sess.evaluate(&lm)?;
+        let tag = if compress.is_some() { "topk25" } else { "dense" };
+        println!("lm_tiny 2-worker {tag}: eval NLL {nll:.4}");
+        rows.push(BenchResult::scalar(&format!("shard/lm_tiny/{tag}/nll"), nll));
+        nlls.push(nll);
+    }
+    if !(nlls[1].is_finite() && nlls[1] < nlls[0] * 1.5 + 0.5) {
+        failed = true;
+        println!("FAIL: compressed NLL {} vs dense {}", nlls[1], nlls[0]);
+    } else {
+        println!("PASS: compressed utility within noise of dense");
     }
 
     let path = write_json("shard", &rows)?;
     println!("wrote {}", path.display());
     if failed {
-        anyhow::bail!("overlapped reduction must beat barrier reduction at N >= 4 workers");
+        anyhow::bail!(
+            "shard bench acceptance failed (overlap vs barrier, compressed vs dense, or utility)"
+        );
     }
     Ok(())
 }

@@ -17,4 +17,4 @@ pub mod sampler;
 pub mod trainer;
 
 pub use noise::Allocation;
-pub use trainer::{Method, StepStats, TrainOpts, Trainer};
+pub use trainer::{Method, TrainOpts, Trainer};

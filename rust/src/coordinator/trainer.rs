@@ -1,16 +1,19 @@
 //! Single-device DP training backend — Algorithm 1 of the paper.
 //!
-//! The compiled L2 step executable performs the fused
-//! backprop+clip (lines 7-12); this module owns everything else: Poisson
-//! sampling (line 6), the parameter update (lines 13-14), and feeding
-//! gradients/clip-counts through the shared [`DpCore`], which holds the
-//! privacy plan (lines 2-4), noise allocation (line 13) and private
-//! quantile state (lines 15-18).
+//! The compiled L2 step executable performs the fused backprop+clip
+//! (lines 7-12); everything DP-critical around it — the Poisson draw
+//! (line 6), gradient noise (line 13), the `/E[B]` normalization
+//! (line 14) and the private quantile release (lines 15-18) — runs in the
+//! shared [`StepLoop`](crate::session::StepLoop); this module only
+//! implements the backend's [`BackendStep`] hooks (deal / collect /
+//! merge) and holds no noise, quantile or accountant wiring of its own.
 //!
 //! Construction goes through [`crate::session::SessionBuilder`] only: the
 //! legacy `Trainer::new` raw-opts shim is retired, and
 //! [`Trainer::with_core`] is crate-private so every run's DP state is
 //! derived from a declarative spec in exactly one place.
+//!
+//! [`BackendStep`]: crate::session::steploop::BackendStep
 
 use std::str::FromStr;
 use std::sync::Arc;
@@ -20,12 +23,13 @@ use anyhow::{anyhow, Result};
 use crate::data::Dataset;
 use crate::runtime::{ConfigManifest, Exec, HostValue, Runtime, Tensor};
 use crate::session::core::DpCore;
+use crate::session::grad::{Collected, GradUnit, Merged, StepTiming};
 use crate::session::spec::ClipPolicy;
+use crate::session::steploop::BackendStep;
 
-use super::accountant::PrivacyPlan;
-use super::noise::{add_noise, Allocation};
+use super::noise::{Allocation, Rng};
 use super::optimizer::{Optimizer, OptimizerKind, Schedule};
-use super::sampler::PoissonSampler;
+use super::sampler::{Batch, PoissonSampler};
 
 /// Which clipping scheme drives the step (paper sections 2-3). This is the
 /// single-device *backend* view; the API-surface equivalent is
@@ -327,50 +331,36 @@ pub(crate) fn evaluate_full(
     Ok((loss_sum / weight.max(1.0), correct / weight.max(1.0)))
 }
 
-#[derive(Debug, Clone)]
-pub struct StepStats {
-    pub step: u64,
-    pub loss: f64,
-    pub batch_size: usize,
-    /// fraction of examples whose norm was clipped, per group
-    pub clip_frac: Vec<f64>,
-    /// mean per-example norm per group (diagnostic, Figure 2/4)
-    pub mean_norms: Vec<f64>,
-    /// examples the Poisson draw included but the static capacity dropped
-    pub truncated: usize,
-}
-
 pub struct Trainer<'r> {
     pub runtime: &'r Runtime,
     pub config_name: String,
     pub cfg: ConfigManifest,
     pub opts: TrainOpts,
-    /// shared DP state: plan, thresholds, noise allocation, RNG
-    pub core: DpCore,
     pub params: Vec<Tensor>,
     exec: Arc<Exec>,
     eval_exec: Arc<Exec>,
     optimizer: Optimizer,
     sampler: PoissonSampler,
+    /// threshold-group count (mirrors the shared core's K)
+    k: usize,
     expected_batch: f64,
     trainable_idx: Vec<usize>,
     group_of_trainable: Vec<usize>,
     pub total_steps: u64,
-    pub step_count: u64,
     /// when set, per-step [B,K] norms are appended here (Figure 2/4 dumps)
     pub collect_norms: Option<Vec<Vec<f32>>>,
 }
 
 impl<'r> Trainer<'r> {
     /// Crate-private constructor: backend wiring only. All DP state (plan,
-    /// thresholds, noise, RNG) arrives in `core`, built by
-    /// `session::SessionBuilder` from the accountant.
+    /// thresholds, noise, RNG) lives in the session's `StepLoop`; `core`
+    /// is borrowed here only to validate the group-count contract.
     pub(crate) fn with_core(
         runtime: &'r Runtime,
         config_name: &str,
         n_data: usize,
         opts: TrainOpts,
-        core: DpCore,
+        core: &DpCore,
     ) -> Result<Self> {
         let cfg = runtime.manifest.config(config_name)?.clone();
         let (expected_batch, rate, total_steps) =
@@ -400,30 +390,19 @@ impl<'r> Trainer<'r> {
             runtime,
             config_name: config_name.to_string(),
             opts,
-            core,
             params,
             exec,
             eval_exec,
             optimizer,
             sampler: PoissonSampler::new(n_data, rate, b_static),
+            k: expect_k,
             expected_batch: expected_batch as f64,
             trainable_idx,
             group_of_trainable,
             total_steps,
-            step_count: 0,
             collect_norms: None,
             cfg,
         })
-    }
-
-    /// The accountant's plan (None for non-private runs).
-    pub fn plan(&self) -> Option<PrivacyPlan> {
-        self.core.plan
-    }
-
-    /// Current per-group clipping thresholds.
-    pub fn thresholds(&self) -> &[f64] {
-        self.core.thresholds()
     }
 
     /// Replace parameters (e.g. load a pretrained checkpoint for the
@@ -440,18 +419,31 @@ impl<'r> Trainer<'r> {
         &self.cfg.groups
     }
 
-    /// Effective noise stds per group at the current thresholds.
-    pub fn noise_stds(&self) -> Vec<f64> {
-        self.core.noise_stds()
+    /// Full-dataset evaluation: (mean loss, accuracy).
+    pub fn evaluate(&self, data: &dyn Dataset) -> Result<(f64, f64)> {
+        evaluate_full(&self.eval_exec, &self.params, self.cfg.batch, data)
+    }
+}
+
+impl BackendStep for Trainer<'_> {
+    type Slices = Batch;
+
+    fn deal(&mut self, _n_data: usize, rng: &mut Rng) -> Batch {
+        // one Poisson draw padded to the static capacity with index-0,
+        // weight-0 slots (Algorithm 1 line 6)
+        self.sampler.sample_padded(rng)
     }
 
-    /// One Algorithm-1 iteration over a fresh Poisson batch (padded to the
-    /// static capacity with index-0, weight-0 slots).
-    pub fn step(&mut self, data: &dyn Dataset) -> Result<StepStats> {
-        let batch = self.sampler.sample_padded(&mut self.core.rng);
+    fn collect(
+        &mut self,
+        data: &dyn Dataset,
+        batch: &Batch,
+        thresholds: &[f64],
+    ) -> Result<Collected> {
         let mb = data.batch(&batch.indices);
         let (x, y) = mb.inputs();
         let live = batch.live();
+        let k = self.k;
 
         let extras: Vec<HostValue> = match self.opts.method {
             Method::NonPrivate => vec![x, y],
@@ -459,15 +451,15 @@ impl<'r> Trainer<'r> {
                 x,
                 y,
                 HostValue::F32(Tensor::from_vec(
-                    &[self.core.k()],
-                    self.core.thresholds().iter().map(|&c| c as f32).collect(),
+                    &[k],
+                    thresholds.iter().map(|&c| c as f32).collect(),
                 )?),
                 HostValue::F32(Tensor::from_vec(&[batch.weights.len()], batch.weights.clone())?),
             ],
             _ => vec![
                 x,
                 y,
-                HostValue::F32(Tensor::scalar(self.core.thresholds()[0] as f32)),
+                HostValue::F32(Tensor::scalar(thresholds[0] as f32)),
                 HostValue::F32(Tensor::from_vec(&[batch.weights.len()], batch.weights.clone())?),
             ],
         };
@@ -475,9 +467,8 @@ impl<'r> Trainer<'r> {
         let outs = self.exec.call(&self.params, &extras)?;
         let loss = outs[0].data[0] as f64;
         let n_tr = self.trainable_idx.len();
-        let mut grads: Vec<Tensor> = outs[1..1 + n_tr].to_vec();
+        let grads: Vec<Tensor> = outs[1..1 + n_tr].to_vec();
 
-        let k = self.core.k();
         let mut clip_counts = vec![0f64; k];
         let mut mean_norms = vec![0f64; k];
         if self.opts.method.private() {
@@ -491,7 +482,7 @@ impl<'r> Trainer<'r> {
                 for g in 0..k {
                     let v = norms.data[i * k + g] as f64;
                     mean_norms[g] += v;
-                    if v <= self.core.thresholds()[g] {
+                    if v <= thresholds[g] {
                         clip_counts[g] += 1.0;
                     }
                 }
@@ -502,69 +493,43 @@ impl<'r> Trainer<'r> {
             if let Some(c) = &mut self.collect_norms {
                 c.push(norms.data.clone());
             }
-
-            // line 13: draw and add noise
-            let stds = self.core.noise_stds();
-            for (t, &g) in grads.iter_mut().zip(&self.group_of_trainable) {
-                let std = if self.opts.method.per_layer() { stds[g] } else { stds[0] };
-                add_noise(&mut t.data, std, &mut self.core.rng);
-            }
-            // line 14: normalize by expected batch
-            let inv = 1.0 / self.expected_batch;
-            for t in grads.iter_mut() {
-                for v in t.data.iter_mut() {
-                    *v *= inv as f32;
-                }
-            }
         }
 
-        // parameter update on the trainable subset
-        self.optimizer.apply_indexed(&mut self.params, &self.trainable_idx, &grads);
-
-        // lines 15-18: private quantile update (+ A.1 rescale in the core)
-        if self.opts.method.adaptive() {
-            self.core.update_thresholds(&clip_counts);
-        }
-
-        self.step_count += 1;
-        let clip_frac = clip_counts
-            .iter()
-            .map(|&c| 1.0 - c / (live.max(1) as f64))
-            .collect();
-        Ok(StepStats {
-            step: self.step_count,
-            loss,
-            batch_size: live,
-            clip_frac,
+        let groups = if self.opts.method.per_layer() {
+            self.group_of_trainable.clone()
+        } else {
+            vec![0; n_tr]
+        };
+        Ok(Collected {
+            units: vec![GradUnit { tensors: grads, groups }],
+            clip_counts,
+            clip_denoms: vec![live.max(1) as f64; k],
             mean_norms,
+            loss,
+            live,
             truncated: batch.truncated,
+            calls: 0,
+            syncs: 0,
+            timing: StepTiming::default(),
         })
     }
 
-    /// Full-dataset evaluation: (mean loss, accuracy).
-    pub fn evaluate(&self, data: &dyn Dataset) -> Result<(f64, f64)> {
-        evaluate_full(&self.eval_exec, &self.params, self.cfg.batch, data)
+    fn merge(&mut self, units: Vec<GradUnit>, _timing: &StepTiming) -> Merged {
+        Merged::identity(units)
     }
 
-    /// Train for the planned number of steps; returns per-step stats.
-    pub fn run(&mut self, data: &dyn Dataset, log_every: u64) -> Result<Vec<StepStats>> {
-        let mut hist = Vec::with_capacity(self.total_steps as usize);
-        for s in 0..self.total_steps {
-            let st = self.step(data)?;
-            if log_every > 0 && s % log_every == 0 {
-                eprintln!(
-                    "[{}] step {}/{} loss {:.4} |B|={} clip~{:.2}",
-                    self.opts.method.name(),
-                    s,
-                    self.total_steps,
-                    st.loss,
-                    st.batch_size,
-                    st.clip_frac.first().copied().unwrap_or(0.0),
-                );
-            }
-            hist.push(st);
+    fn apply(&mut self, grads: &[Tensor]) {
+        self.optimizer.apply_indexed(&mut self.params, &self.trainable_idx, grads);
+    }
+
+    fn update_scale(&self, _live: usize) -> f32 {
+        if self.opts.method.private() {
+            // Algorithm 1 line 14: normalize by the EXPECTED batch
+            (1.0 / self.expected_batch) as f32
+        } else {
+            // the non-private entry already emits a batch mean
+            1.0
         }
-        Ok(hist)
     }
 }
 

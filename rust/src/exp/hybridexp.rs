@@ -60,10 +60,10 @@ pub fn hybrid_scaling(rt: &Runtime, scale: Scale) -> Result<()> {
             let plan = sess.plan().expect("private hybrid run must carry a plan");
             let s_stages = sess.hybrid_engine().expect("hybrid backend").n_stages;
             // warmup (first PJRT call pays compilation)
-            sess.hybrid_engine_mut().unwrap().step(&data)?;
+            sess.step(&data)?;
             let (mut ov, mut ba, mut host, mut rounds) = (0.0, 0.0, 0.0, 0usize);
             for _ in 0..steps {
-                let st = sess.hybrid_engine_mut().unwrap().step(&data)?;
+                let st = sess.step(&data)?;
                 ov += st.sim_overlap_secs;
                 ba += st.sim_barrier_secs;
                 host += st.host_secs;

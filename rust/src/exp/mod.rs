@@ -17,8 +17,8 @@ use crate::runtime::Runtime;
 use harness::Scale;
 
 /// Dispatch an experiment by name ("table1".."table11", "fig1".."fig7",
-/// "pipeline-overhead", "accountant", "shard-scaling", "hybrid-scaling",
-/// or "all").
+/// "pipeline-overhead", "accountant", "shard-scaling", "compress-scaling",
+/// "hybrid-scaling", or "all").
 pub fn run(rt: &Runtime, which: &str, paper_scale: bool) -> Result<()> {
     let scale = if paper_scale { Scale::paper() } else { Scale::quick() };
     std::fs::create_dir_all("results")?;
@@ -40,12 +40,13 @@ pub fn run(rt: &Runtime, which: &str, paper_scale: bool) -> Result<()> {
         "pipeline-overhead" => pipexp::pipeline_overhead(rt, scale),
         "accountant" => pipexp::accountant_table(rt, scale),
         "shard-scaling" => shardexp::shard_scaling(rt, scale),
+        "compress-scaling" => shardexp::compress_scaling(rt, scale),
         "hybrid-scaling" => hybridexp::hybrid_scaling(rt, scale),
         "all" => {
             for name in [
-                "accountant", "fig1", "pipeline-overhead", "shard-scaling", "hybrid-scaling",
-                "table1", "table2", "fig3", "fig2", "table6", "table5", "table11", "table3",
-                "table4", "table10", "fig5", "fig6", "fig7",
+                "accountant", "fig1", "pipeline-overhead", "shard-scaling", "compress-scaling",
+                "hybrid-scaling", "table1", "table2", "fig3", "fig2", "table6", "table5",
+                "table11", "table3", "table4", "table10", "fig5", "fig6", "fig7",
             ] {
                 eprintln!("==== exp {name} ====");
                 run(rt, name, paper_scale)?;

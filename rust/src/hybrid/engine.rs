@@ -10,30 +10,40 @@
 //! moment its gradient drains from the pipeline, while earlier stages are
 //! still back-propagating.
 //!
-//! RNG discipline (the parity contract with both 1D backends): per step
-//! the shared [`DpCore`] RNG is consumed in exactly this order —
-//! (1) one global Poisson draw, (2) gradient noise in replica-major,
-//! stage-major, tensor order, (3) the private quantile release. With one
-//! replica this is the [`PipelineEngine`] sequence verbatim; the noise
-//! share each piece adds is `std_g / sqrt(R)`, so with one replica the
-//! share IS the full per-stage std.
+//! All DP state lives in the session's shared
+//! [`StepLoop`](crate::session::StepLoop); this engine implements the
+//! [`BackendStep`](crate::session::steploop::BackendStep) hooks only. The
+//! unit layout it hands the loop encodes the documented RNG discipline —
+//! per step the shared core RNG is consumed as (1) one global Poisson
+//! draw, (2) gradient noise in replica-major, stage-major, tensor order
+//! at the local share `sigma_g/sqrt(R)`, (3) the private quantile
+//! release. With one replica this is the [`PipelineEngine`] sequence
+//! verbatim.
 //!
-//! [`DpCore`]: crate::session::DpCore
+//! The merge hook shares the sharded backend's compression seam: with a
+//! `[compress]` spec section each replica's already-noised share is
+//! sparsified (error-feedback top-k / rand-k) before each stage's
+//! cross-replica [`tree_reduce`], shrinking the simulated reduction
+//! payload by the keep ratio — identical semantics under `[shard]` and
+//! `[hybrid]` because the seam is shared.
 
 use std::collections::HashMap;
-use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::noise::add_noise;
+use crate::coordinator::noise::Rng;
 use crate::coordinator::optimizer::OptimizerKind;
 use crate::data::Dataset;
 use crate::pipeline::schedule::stage_grad_ready;
 use crate::pipeline::{PipelineEngine, PipelineMode, PipelineOpts};
 use crate::runtime::{ConfigManifest, Runtime, Tensor};
 use crate::session::core::DpCore;
+use crate::session::grad::{Collected, GradUnit, Merged, StepTiming};
+use crate::session::spec::CompressSpec;
+use crate::session::steploop::BackendStep;
+use crate::shard::compress::Compressor;
 use crate::shard::reduce::{tree_reduce, ReduceModel};
-use crate::shard::sampler::ShardSampler;
+use crate::shard::sampler::{ShardBatch, ShardSampler};
 
 /// How clipping-threshold groups tile the (replica, stage) grid (resolved
 /// from `HybridSpec.grouping` by the session builder).
@@ -85,40 +95,14 @@ pub(crate) struct HybridWiring {
     pub clip_init: f64,
     pub target_q: f64,
     pub quantile_eta: f64,
-}
-
-/// Per-step report of the hybrid backend.
-#[derive(Debug, Clone)]
-pub struct HybridStepStats {
-    pub step: u64,
-    pub loss: f64,
-    /// live examples across all replicas this step
-    pub batch_size: usize,
-    /// fraction clipped per threshold group (empty for non-private runs)
-    pub clip_frac: Vec<f64>,
-    /// examples the global draw included but total capacity dropped
-    pub truncated: usize,
-    /// measured host seconds for the whole step
-    pub host_secs: f64,
-    /// simulated R x S step latency under the configured reduction
-    pub sim_secs: f64,
-    /// simulated latency with each stage's cross-replica reduction
-    /// overlapped into the remaining backward pass
-    pub sim_overlap_secs: f64,
-    /// simulated latency with a reduce-after-backward barrier
-    pub sim_barrier_secs: f64,
-    /// depth of the cross-replica reduction tree, ceil(log_fanout R)
-    pub syncs: usize,
-    /// executable invocations across all replicas and stages
-    pub calls: usize,
+    /// error-feedback gradient sparsification on the reduction path
+    pub compress: Option<CompressSpec>,
 }
 
 pub struct HybridEngine<'r> {
     pub runtime: &'r Runtime,
     pub config_name: String,
     pub cfg: ConfigManifest,
-    /// the ONE shared DP state: plan, piece thresholds, noise, RNG
-    pub core: DpCore,
     /// data-parallel replicas R
     pub replicas_n: usize,
     /// pipeline stages S (from the manifest)
@@ -126,7 +110,6 @@ pub struct HybridEngine<'r> {
     pub fanout: usize,
     pub overlap: bool,
     pub total_steps: u64,
-    pub step_count: u64,
     grouping: PieceGrouping,
     private: bool,
     n_micro: usize,
@@ -136,18 +119,29 @@ pub struct HybridEngine<'r> {
     expected_batch: f64,
     /// trainable element count per stage (reduction payload sizing)
     stage_dims: Vec<f64>,
+    /// trainable tensor count per stage (unit regrouping offsets)
+    stage_tr_counts: Vec<usize>,
     reduce_model: ReduceModel,
+    /// error-feedback sparsifier on the reduction seam (None = dense)
+    compressor: Option<Compressor>,
+    /// live counts of the most recent collect, per replica (per-piece
+    /// clip_frac denominators read them)
+    replica_lives: Vec<usize>,
+    /// when compressing: the (overlap, barrier) makespans the SAME step
+    /// timings would have produced without compression
+    last_dense_sims: Option<(f64, f64)>,
 }
 
 impl<'r> HybridEngine<'r> {
-    /// Crate-private constructor: all DP state arrives in `core` (K must
-    /// match the resolved piece grouping), all schedule/topology decisions
-    /// in `wiring`. Only `session::SessionBuilder` builds these.
+    /// Crate-private constructor: all DP state lives in the session's
+    /// `StepLoop` (`core` is borrowed to validate the group-count
+    /// contract), all schedule/topology decisions in `wiring`. Only
+    /// `session::SessionBuilder` builds these.
     pub(crate) fn with_core(
         runtime: &'r Runtime,
         config_name: &str,
         w: HybridWiring,
-        core: DpCore,
+        core: &DpCore,
     ) -> Result<Self> {
         let cfg = runtime.manifest.config(config_name)?.clone();
         let stages = cfg.stages.clone().ok_or_else(|| {
@@ -187,14 +181,14 @@ impl<'r> HybridEngine<'r> {
             ));
         }
 
-        // R full pipeline replicas around inert shell cores: thresholds
-        // reach them explicitly via collect_weighted, noise and RNG live
-        // only in the hybrid's own core. One checkpoint read fans out to
-        // every replica, so they start bit-identical.
+        // R full pipeline replicas, driven entirely through the
+        // collect_weighted/apply_flat seams: thresholds reach them
+        // explicitly, noise and RNG live only in the session's core. One
+        // checkpoint read fans out to every replica, so they start
+        // bit-identical.
         let ck = crate::runtime::checkpoint::read(
             runtime.manifest.hlo_path(&cfg.init_checkpoint),
         )?;
-        let shell_k = if private { s } else { 1 };
         let mut replicas = Vec::with_capacity(w.replicas);
         for _ in 0..w.replicas {
             let opts = PipelineOpts {
@@ -202,7 +196,6 @@ impl<'r> HybridEngine<'r> {
                 n_micro: w.n_micro,
                 expected_batch: (w.expected_batch / w.replicas).max(1),
                 clip: w.clip_init,
-                sigma: 0.0,
                 lr: w.lr,
                 optimizer: w.optimizer,
                 seed: w.seed,
@@ -215,33 +208,48 @@ impl<'r> HybridEngine<'r> {
                 runtime,
                 config_name,
                 opts,
-                DpCore::shell(shell_k),
+                None,
                 &ck,
             )?);
         }
         let minibatch = replicas[0].minibatch();
         let stage_dims = replicas[0].stage_trainable_dims();
+        let stage_tr_counts = replicas[0].stage_trainable_counts();
 
+        let compressor = w
+            .compress
+            .as_ref()
+            .map(|c| Compressor::new(c.kind, c.ratio, c.error_feedback, w.replicas, w.seed));
         Ok(HybridEngine {
             runtime,
             config_name: config_name.to_string(),
-            core,
             replicas_n: w.replicas,
             n_stages: s,
             fanout: w.fanout,
             overlap: w.overlap,
             total_steps: w.total_steps,
-            step_count: 0,
             grouping: w.grouping,
             private,
             n_micro: w.n_micro,
             sampler: ShardSampler::new(w.n_data, w.rate, w.replicas, minibatch),
             expected_batch: w.expected_batch as f64,
             stage_dims,
+            stage_tr_counts,
             reduce_model: ReduceModel::new(w.replicas, w.fanout, w.link_latency),
+            compressor,
+            replica_lives: vec![0; w.replicas],
+            last_dense_sims: None,
             replicas,
             cfg,
         })
+    }
+
+    /// The (overlap, barrier) makespans the most recent step's timings
+    /// would have produced WITHOUT compression; `None` until a compressed
+    /// step ran. Deterministically comparable to the step's reported sims
+    /// (same measured timings, only the payload differs).
+    pub fn last_dense_sims(&self) -> Option<(f64, f64)> {
+        self.last_dense_sims
     }
 
     pub fn grouping(&self) -> PieceGrouping {
@@ -258,13 +266,8 @@ impl<'r> HybridEngine<'r> {
         self.replicas_n * self.minibatch()
     }
 
-    /// Current per-group clipping thresholds (R x S for per-piece
-    /// grouping, S for per-stage).
-    pub fn thresholds(&self) -> &[f64] {
-        self.core.thresholds()
-    }
-
-    /// Threshold-group labels matching [`HybridEngine::thresholds`].
+    /// Threshold-group labels (R x S `r{r}s{st}` labels for per-piece
+    /// grouping, S `stage{st}` labels for per-stage).
     pub fn group_labels(&self) -> Vec<String> {
         if !self.private {
             return vec!["flat".to_string()];
@@ -321,11 +324,16 @@ impl<'r> HybridEngine<'r> {
         })
     }
 
-    /// Topology line for `Session::describe` / the CLI.
-    pub fn describe_topology(&self) -> String {
-        let c: Vec<String> = self.core.thresholds().iter().map(|c| format!("{c:.4}")).collect();
+    /// Topology line for `Session::describe` / the CLI, against the
+    /// current per-group `thresholds` (owned by the session's core).
+    pub fn describe_topology(&self, thresholds: &[f64]) -> String {
+        let c: Vec<String> = thresholds.iter().map(|c| format!("{c:.4}")).collect();
+        let compress = match &self.compressor {
+            Some(c) => format!(" compress={}", c.describe()),
+            None => String::new(),
+        };
         format!(
-            "replicas={} stages={} fanout={} reduction={} grouping={} thresholds=[{}]",
+            "replicas={} stages={} fanout={} reduction={}{compress} grouping={} thresholds=[{}]",
             self.replicas_n,
             self.n_stages,
             self.fanout,
@@ -335,36 +343,51 @@ impl<'r> HybridEngine<'r> {
         )
     }
 
-    /// One hybrid DP step: global Poisson draw dealt across replicas ->
-    /// per-replica pipeline backward with per-piece clipping -> local
-    /// noise shares sigma_g/sqrt(R) -> per-stage cross-replica
-    /// tree-reduction -> one merged update broadcast to every replica ->
-    /// private quantile release over all piece groups.
-    pub fn step(&mut self, data: &dyn Dataset) -> Result<HybridStepStats> {
-        let host_t0 = Instant::now();
+    /// Mean eval loss over `data` through replica 0's pipeline.
+    pub fn evaluate(&self, data: &dyn Dataset) -> Result<f64> {
+        self.replicas[0].evaluate(data)
+    }
+}
+
+impl BackendStep for HybridEngine<'_> {
+    type Slices = ShardBatch;
+
+    fn deal(&mut self, _n_data: usize, rng: &mut Rng) -> ShardBatch {
+        // ONE global Poisson draw dealt round-robin into disjoint padded
+        // per-replica minibatches (the accountant sees the union)
+        self.sampler.sample(rng)
+    }
+
+    fn collect(
+        &mut self,
+        data: &dyn Dataset,
+        batch: &ShardBatch,
+        thresholds: &[f64],
+    ) -> Result<Collected> {
         let r_n = self.replicas_n;
         let s = self.n_stages;
-        let k = self.core.k();
-        let batch = self.sampler.sample(&mut self.core.rng);
-        let live_global = batch.live;
-        let thr = self.core.thresholds().to_vec();
+        let k = thresholds.len();
 
         let mut clip_counts = vec![0f64; k];
-        let mut replica_lives = vec![0usize; r_n];
         let mut loss_wsum = 0f64;
         let mut weight_sum = 0f64;
         let mut calls = 0usize;
-        let mut collected = Vec::with_capacity(r_n);
+        let mut units: Vec<GradUnit> = Vec::with_capacity(r_n);
+        let mut durations = Vec::with_capacity(r_n);
         for r in 0..r_n {
             let slice = &batch.slices[r];
-            replica_lives[r] = slice.live();
+            self.replica_lives[r] = slice.live();
             let piece_thr: Vec<f64> = if self.private {
-                (0..s).map(|st| thr[self.group_of(r, st)]).collect()
+                (0..s).map(|st| thresholds[self.group_of(r, st)]).collect()
             } else {
                 vec![1e9; s]
             };
-            let col =
-                self.replicas[r].collect_weighted(data, &slice.indices, &slice.weights, &piece_thr)?;
+            let col = self.replicas[r].collect_weighted(
+                data,
+                &slice.indices,
+                &slice.weights,
+                &piece_thr,
+            )?;
             if self.private {
                 for st in 0..s {
                     clip_counts[self.group_of(r, st)] += col.clip_counts[st];
@@ -373,20 +396,68 @@ impl<'r> HybridEngine<'r> {
             loss_wsum += col.loss_wsum;
             weight_sum += col.weight_sum;
             calls += col.calls;
-            collected.push(col);
+            // replica-major, stage-major flattened unit layout: this IS
+            // the RNG discipline that makes R = 1 bitwise-identical to the
+            // pipeline backend (whose noise loop is stage-major in the
+            // same tensor order)
+            let mut tensors = Vec::new();
+            let mut groups = Vec::new();
+            for (st, g) in col.grads.into_iter().enumerate() {
+                let gi = self.group_of(r, st);
+                for t in g {
+                    tensors.push(t);
+                    groups.push(gi);
+                }
+            }
+            units.push(GradUnit { tensors, groups });
+            durations.push(col.durations);
         }
+
+        let clip_denoms: Vec<f64> = if self.private {
+            (0..k)
+                .map(|g| {
+                    match self.grouping {
+                        PieceGrouping::PerPiece => self.replica_lives[g / s],
+                        PieceGrouping::PerStage => batch.live,
+                    }
+                    .max(1) as f64
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        Ok(Collected {
+            units,
+            clip_counts,
+            clip_denoms,
+            mean_norms: Vec::new(),
+            loss: loss_wsum / weight_sum.max(1.0),
+            live: batch.live,
+            truncated: batch.truncated,
+            calls,
+            syncs: 0,
+            timing: StepTiming { durations, bwd_secs: Vec::new() },
+        })
+    }
+
+    fn merge(&mut self, units: Vec<GradUnit>, timing: &StepTiming) -> Merged {
+        let r_n = self.replicas_n;
+        let s = self.n_stages;
 
         // -------- simulated R x S latency (overlap vs barrier) -----------
         // A real cluster runs the replicas concurrently, so the modeled
         // compute side is one representative replica (mean of the measured
         // per-op durations): per-stage gradient-ready times out of the
         // GPipe schedule, reductions queued FIFO in ready order.
+        // Compression scales each stage's reduction payload by the ratio.
+        let ratio = match &self.compressor {
+            Some(c) if r_n > 1 => c.ratio().min(1.0),
+            _ => 1.0,
+        };
         let mut ready_mean = vec![0f64; s];
-        for col in &collected {
+        for dur in &timing.durations {
             let (ready, _span) =
-                stage_grad_ready(s, self.n_micro, &|op| {
-                    col.durations.get(op).copied().unwrap_or(0.0)
-                });
+                stage_grad_ready(s, self.n_micro, &|op| dur.get(op).copied().unwrap_or(0.0));
             for (a, b) in ready_mean.iter_mut().zip(&ready) {
                 *a += b / r_n as f64;
             }
@@ -396,94 +467,70 @@ impl<'r> HybridEngine<'r> {
         let ready_sorted: Vec<f64> = order.iter().map(|&st| ready_mean[st]).collect();
         let red_sorted: Vec<f64> = order
             .iter()
-            .map(|&st| self.reduce_model.layer_cost(4.0 * self.stage_dims[st]))
+            .map(|&st| self.reduce_model.layer_cost(4.0 * self.stage_dims[st] * ratio))
             .collect();
         let sim_overlap = self.reduce_model.overlap_makespan_at(&ready_sorted, &red_sorted);
         let sim_barrier = self.reduce_model.barrier_makespan_at(&ready_sorted, &red_sorted);
+        // apples-to-apples dense baseline from the SAME timings, so the
+        // compressed-beats-dense claim is deterministic, not host-noise
+        self.last_dense_sims = (ratio < 1.0).then(|| {
+            let red_dense: Vec<f64> = order
+                .iter()
+                .map(|&st| self.reduce_model.layer_cost(4.0 * self.stage_dims[st]))
+                .collect();
+            (
+                self.reduce_model.overlap_makespan_at(&ready_sorted, &red_dense),
+                self.reduce_model.barrier_makespan_at(&ready_sorted, &red_dense),
+            )
+        });
 
-        // -------- local noise shares, replica-major then stage-major ------
-        // Piece (r, st) adds std_g / sqrt(R): the R independent shares
-        // merge (variances add) to exactly the accountant's per-group std
-        // on every stage's merged gradient. The iteration order is the RNG
-        // discipline that makes R = 1 bitwise-identical to the pipeline
-        // backend (its noise loop is stage-major in the same tensor order).
-        let stds = if self.private { self.core.noise_stds() } else { vec![0.0; k] };
-        let share = 1.0 / (r_n as f64).sqrt();
-        for (r, col) in collected.iter_mut().enumerate() {
-            for st in 0..s {
-                let std = stds[self.group_of(r, st)] * share;
-                for g in col.grads[st].iter_mut() {
-                    add_noise(&mut g.data, std, &mut self.core.rng);
+        // -------- compression + per-stage tree-reduction ------------------
+        // Each replica sparsifies its ALREADY-NOISED share before its
+        // pieces enter the per-stage trees (post-processing of a paid-for
+        // release; residuals stay replica-local). A 1-replica tree is the
+        // bitwise identity, so R = 1 keeps the pipeline backend's exact
+        // float sequence.
+        let mut flat: Vec<Vec<Tensor>> = units.into_iter().map(|u| u.tensors).collect();
+        if let Some(c) = &mut self.compressor {
+            if r_n > 1 {
+                for (r, tensors) in flat.iter_mut().enumerate() {
+                    c.compress_unit(r, tensors);
                 }
             }
         }
-
-        // -------- per-stage tree-reduction across replicas ----------------
-        // Algorithm 1 line 14: normalize the merged sum by the global E[B]
-        // (a 1-participant tree is the bitwise identity, so R = 1 keeps
-        // the pipeline backend's exact float sequence: noise, /E[B], apply)
+        // regroup the flattened stage-major units into per-stage parts
         let mut parts_by_stage: Vec<Vec<Vec<Tensor>>> =
             (0..s).map(|_| Vec::with_capacity(r_n)).collect();
-        for col in collected {
-            for (st, g) in col.grads.into_iter().enumerate() {
-                parts_by_stage[st].push(g);
+        for tensors in flat {
+            let mut it = tensors.into_iter();
+            for (st, &n) in self.stage_tr_counts.iter().enumerate() {
+                parts_by_stage[st].push(it.by_ref().take(n).collect());
             }
         }
-        let expected = self.expected_batch;
-        let mut merged: Vec<Vec<Tensor>> = Vec::with_capacity(s);
+        let mut merged: Vec<Tensor> = Vec::new();
         for parts in parts_by_stage {
-            let mut m = tree_reduce(parts, self.fanout);
-            for t in m.iter_mut() {
-                for v in t.data.iter_mut() {
-                    *v /= expected as f32;
-                }
-            }
-            merged.push(m);
+            merged.extend(tree_reduce(parts, self.fanout));
         }
 
-        // one merged update applied to every replica (identical optimizer
-        // states + identical grads keep the replicas bit-identical)
-        for e in self.replicas.iter_mut() {
-            e.apply_update(&merged);
-        }
-
-        // private quantile release over all R x S piece groups at once
-        if self.private && self.core.is_adaptive() {
-            self.core.update_thresholds(&clip_counts);
-        }
-
-        self.step_count += 1;
-        let clip_frac: Vec<f64> = if self.private {
-            (0..k)
-                .map(|g| {
-                    let denom = match self.grouping {
-                        PieceGrouping::PerPiece => replica_lives[g / s],
-                        PieceGrouping::PerStage => live_global,
-                    }
-                    .max(1) as f64;
-                    1.0 - clip_counts[g] / denom
-                })
-                .collect()
-        } else {
-            Vec::new()
-        };
-        Ok(HybridStepStats {
-            step: self.step_count,
-            loss: loss_wsum / weight_sum.max(1.0),
-            batch_size: live_global,
-            clip_frac,
-            truncated: batch.truncated,
-            host_secs: host_t0.elapsed().as_secs_f64(),
+        Merged {
+            tensors: merged,
             sim_secs: if self.overlap { sim_overlap } else { sim_barrier },
             sim_overlap_secs: sim_overlap,
             sim_barrier_secs: sim_barrier,
             syncs: self.reduce_model.rounds(),
-            calls,
-        })
+        }
     }
 
-    /// Mean eval loss over `data` through replica 0's pipeline.
-    pub fn evaluate(&self, data: &dyn Dataset) -> Result<f64> {
-        self.replicas[0].evaluate(data)
+    fn apply(&mut self, grads: &[Tensor]) {
+        // one merged update applied to every replica (identical optimizer
+        // states + identical grads keep the replicas bit-identical)
+        for e in self.replicas.iter_mut() {
+            e.apply_flat(grads);
+        }
+    }
+
+    fn update_scale(&self, _live: usize) -> f32 {
+        // Algorithm 1 line 14: normalize the merged sum by the global E[B]
+        (1.0 / self.expected_batch) as f32
     }
 }

@@ -53,4 +53,4 @@
 
 pub mod engine;
 
-pub use engine::{HybridEngine, HybridStepStats, PieceGrouping};
+pub use engine::{HybridEngine, PieceGrouping};

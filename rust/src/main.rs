@@ -36,20 +36,27 @@ USAGE:
                   [--no-overlap] [--grouping auto|flat|per-device]
                   [--mode fixed|adaptive|non-private] [--epsilon 3] [--delta 1e-5]
                   [--epochs 1] [--lr 0.25] [--clip 1] [--n-data 4096] [--seed 0]
+                  [--compress topk|randk] [--compress-ratio 0.25] [--no-error-feedback]
                   (sharded data-parallel backend: per-device clipping across N
-                  replicas, overlapped tree-reduction; flags override the spec)
+                  replicas, overlapped tree-reduction, optional error-feedback
+                  gradient compression; flags override the spec)
   gwclip hybrid   [--spec run.toml] [--config lm_mid_pipe_lora] [--replicas 2]
                   [--fanout 2] [--no-overlap] [--grouping auto|per-piece|per-stage]
                   [--mode fixed|adaptive|non-private] [--epsilon 1] [--delta 1e-5]
                   [--epochs 1] [--steps N] [--n-micro 4] [--clip 0.01] [--lr 5e-3]
                   [--n-data 2048] [--seed 0]
+                  [--compress topk|randk] [--compress-ratio 0.25] [--no-error-feedback]
                   (hybrid 2D backend: R data-parallel replicas x the config's
                   pipeline stages, per-piece clipping, overlapped cross-replica
                   tree-reduction; flags override the spec; steps default to
                   epochs-derived)
   gwclip exp <which>   table1|table2|table3|table4|table5|table6|table10|table11|
                        fig1|fig2|fig3|fig5|fig6|fig7|pipeline-overhead|accountant|
-                       shard-scaling|hybrid-scaling|all   [--paper-scale]
+                       shard-scaling|compress-scaling|hybrid-scaling|all
+                       [--paper-scale]
+  gwclip bench-diff --old DIR [--new DIR] [--max-regress 0.15]
+                  (CI gate: diff the BENCH_*.json step-hot-path rows against a
+                  previous trajectory; fails loudly on a regression)
   common: [--artifacts DIR]
 ";
 
@@ -59,7 +66,14 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     }
-    let args = Args::parse(&argv, &["paper-scale", "print-spec", "no-overlap"])?;
+    let args = Args::parse(
+        &argv,
+        &["paper-scale", "print-spec", "no-overlap", "no-error-feedback"],
+    )?;
+    if args.positional.first().map(|s| s.as_str()) == Some("bench-diff") {
+        // trajectory gate only reads JSON files — no artifacts, no runtime
+        return cmd_bench_diff(&args);
+    }
     let dir = args
         .flags
         .get("artifacts")
@@ -160,6 +174,44 @@ fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
     )
 }
 
+/// Diff the `BENCH_*.json` step-hot-path rows in `--new` (default `.`)
+/// against the previous trajectory in `--old`; any row whose mean step
+/// time regressed by more than `--max-regress` (default 15%) fails the
+/// run loudly — the CI gate for the step hot path.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    let old = args
+        .flags
+        .get("old")
+        .ok_or_else(|| anyhow::anyhow!("bench-diff needs --old <dir with prior BENCH_*.json>"))?;
+    let new = args.get("new", ".");
+    let threshold = args.get_f64("max-regress", 0.15)?;
+    let (compared, regressions) = gwclip::util::bench::diff_dirs(old, &new, threshold)?;
+    println!(
+        "bench-diff: {compared} step-path row(s) compared against {old} \
+         (threshold {:.0}%)",
+        100.0 * threshold
+    );
+    for r in &regressions {
+        println!(
+            "REGRESSION [{}] {}: {:.4} ms -> {:.4} ms ({:.2}x)",
+            r.suite,
+            r.name,
+            1e3 * r.old_mean_s,
+            1e3 * r.new_mean_s,
+            r.ratio()
+        );
+    }
+    if !regressions.is_empty() {
+        bail!(
+            "{} step-hot-path regression(s) above {:.0}%",
+            regressions.len(),
+            100.0 * threshold
+        );
+    }
+    println!("bench-diff: no step-hot-path regressions");
+    Ok(())
+}
+
 /// Shared `--spec` flag-override block for the shard/hybrid shorthands:
 /// every documented common flag overrides the spec file; absent flags
 /// keep the spec's values.
@@ -179,6 +231,25 @@ fn apply_common_overrides(s: &mut RunSpec, args: &Args) -> Result<()> {
     s.epochs = args.get_f64("epochs", s.epochs)?;
     s.data.n_data = args.get_usize("n-data", s.data.n_data)?;
     s.seed = args.get_u64("seed", s.seed)?;
+    Ok(())
+}
+
+/// `--compress` / `--compress-ratio` / `--no-error-feedback` overrides
+/// for the backends with a reduction path (shard, hybrid): `--compress`
+/// enables a `[compress]` section (or re-kinds an existing one), the
+/// other flags tune whichever section is active.
+fn apply_compress_overrides(s: &mut RunSpec, args: &Args) -> Result<()> {
+    if let Some(kind) = args.flags.get("compress") {
+        let mut c = s.compress.unwrap_or_default();
+        c.kind = kind.parse()?;
+        s.compress = Some(c);
+    }
+    if let Some(c) = s.compress.as_mut() {
+        c.ratio = args.get_f64("compress-ratio", c.ratio)?;
+        if args.has("no-error-feedback") {
+            c.error_feedback = false;
+        }
+    }
     Ok(())
 }
 
@@ -256,6 +327,7 @@ fn cmd_shard(rt: &Runtime, args: &Args) -> Result<()> {
     }
     spec.shard = Some(sh);
     spec.hybrid = None; // the shard section governs this run
+    apply_compress_overrides(&mut spec, args)?;
     spec.validate()?;
     if args.has("print-spec") {
         println!("{}", spec.render_json());
@@ -329,6 +401,7 @@ fn cmd_hybrid(rt: &Runtime, args: &Args) -> Result<()> {
     }
     spec.hybrid = Some(hy);
     spec.shard = None; // the hybrid section governs this run
+    apply_compress_overrides(&mut spec, args)?;
     spec.validate()?;
     if args.has("print-spec") {
         println!("{}", spec.render_json());

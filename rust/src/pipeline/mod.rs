@@ -3,4 +3,4 @@
 pub mod engine;
 pub mod schedule;
 
-pub use engine::{merge_lora, PipeStepStats, PipelineEngine, PipelineMode, PipelineOpts};
+pub use engine::{merge_lora, PipelineEngine, PipelineMode, PipelineOpts};

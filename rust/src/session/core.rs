@@ -121,25 +121,6 @@ impl DpCore {
         })
     }
 
-    /// Inert core for backend-internal replica shells: no plan, no noise,
-    /// fixed zero thresholds, a dead RNG. The hybrid backend builds its R
-    /// pipeline replicas around shells and keeps the ONE real core (plan,
-    /// thresholds, RNG) to itself — replicas receive thresholds explicitly
-    /// through `collect_weighted` and never touch their shell.
-    pub(crate) fn shell(k: usize) -> DpCore {
-        let k = k.max(1);
-        DpCore {
-            plan: None,
-            sigma_grad: 0.0,
-            quantiles: QuantileEstimator::fixed(vec![0.0; k]),
-            allocation: Allocation::EqualBudget,
-            group_dims: vec![1; k],
-            clip_init: 0.0,
-            rescale_global: false,
-            rng: Rng::seeded(0),
-        }
-    }
-
     pub fn k(&self) -> usize {
         self.quantiles.k()
     }

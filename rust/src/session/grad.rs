@@ -1,0 +1,108 @@
+//! Shared gradient containers for the [`StepLoop`] — the merged-gradient /
+//! clip-count shapes every backend's [`BackendStep`] hooks speak.
+//!
+//! A step's pre-noise output is a set of [`GradUnit`]s, one per
+//! data-parallel participant (the single-device and pipeline backends have
+//! exactly one; the sharded backend one per worker; the hybrid backend one
+//! per replica). Each unit flattens its summed trainable gradients into
+//! ONE tensor sequence whose iteration order IS the backend's RNG
+//! discipline: the loop walks units in order and tensors within a unit in
+//! order when drawing gradient noise, so a backend encodes its documented
+//! noise order (worker-major for sharded, replica-major/stage-major for
+//! hybrid, stage-major for pipeline) purely by how it lays the tensors
+//! out — no backend touches the RNG itself.
+//!
+//! [`StepLoop`]: super::steploop::StepLoop
+//! [`BackendStep`]: super::steploop::BackendStep
+
+use std::collections::HashMap;
+
+use crate::pipeline::schedule::Op;
+use crate::runtime::Tensor;
+
+/// One data-parallel participant's pre-noise gradient contribution.
+pub(crate) struct GradUnit {
+    /// summed trainable gradients, flattened in this unit's noise order
+    /// (the backend's documented tensor order within the unit)
+    pub tensors: Vec<Tensor>,
+    /// threshold/noise group index per tensor (indexes the shared
+    /// `DpCore` thresholds and per-group noise stds); len == tensors.len()
+    pub groups: Vec<usize>,
+}
+
+/// Backend-measured timings the merge hook turns into simulated
+/// makespans. Backends fill only the fields their latency model reads.
+#[derive(Default)]
+pub(crate) struct StepTiming {
+    /// per-(stage, micro, phase) op durations, one map per unit
+    /// (pipeline: one map; hybrid: one per replica)
+    pub durations: Vec<HashMap<Op, f64>>,
+    /// per-worker whole-backward seconds (sharded backend)
+    pub bwd_secs: Vec<f64>,
+}
+
+/// Pre-noise output of one [`BackendStep::collect`] phase: everything the
+/// generic loop needs to finish the step — per-unit gradients for the
+/// noise/merge phases, raw clip counts for the private quantile release,
+/// and the step's reporting fields.
+///
+/// [`BackendStep::collect`]: super::steploop::BackendStep::collect
+pub(crate) struct Collected {
+    /// one entry per data-parallel unit, in RNG (unit-major) order
+    pub units: Vec<GradUnit>,
+    /// raw per-threshold-group clip counts (the quantile statistic);
+    /// always len == DpCore::k(), zeros when nothing was counted
+    pub clip_counts: Vec<f64>,
+    /// per-group denominators turning clip counts into clipped fractions
+    /// for reporting; empty = this backend does not report clip_frac
+    pub clip_denoms: Vec<f64>,
+    /// mean per-example norm per group (empty where not collected)
+    pub mean_norms: Vec<f64>,
+    /// step loss in this backend's reporting convention
+    pub loss: f64,
+    /// live examples across all units this step
+    pub live: usize,
+    /// examples the draw included but static capacity dropped
+    pub truncated: usize,
+    /// executable invocations (0 on the single-device backend, whose
+    /// one fused call is the baseline the others are compared against)
+    pub calls: usize,
+    /// synchronization barriers incurred during collection (pipeline
+    /// modes); the merge hook adds its own reduction rounds on top
+    pub syncs: usize,
+    /// measured timings for the merge hook's latency model
+    pub timing: StepTiming,
+}
+
+/// Output of one [`BackendStep::merge`] phase: the reduced gradient set
+/// (flattened in the same order as a unit's tensors) plus the simulated
+/// makespans of the cross-unit reduction.
+///
+/// [`BackendStep::merge`]: super::steploop::BackendStep::merge
+pub(crate) struct Merged {
+    /// reduced gradients, same flattened order as each unit's tensors
+    pub tensors: Vec<Tensor>,
+    /// simulated step latency under the backend's configured reduction
+    pub sim_secs: f64,
+    /// simulated latency with the reduction overlapped into backprop
+    pub sim_overlap_secs: f64,
+    /// simulated latency with a reduce-after-backward barrier
+    pub sim_barrier_secs: f64,
+    /// reduction tree rounds this merge traversed
+    pub syncs: usize,
+}
+
+impl Merged {
+    /// The identity merge of backends with a single unit (single-device,
+    /// pipeline): the unit's tensors pass through bitwise untouched.
+    pub fn identity(mut units: Vec<GradUnit>) -> Merged {
+        debug_assert_eq!(units.len(), 1, "identity merge expects one unit");
+        Merged {
+            tensors: units.pop().map(|u| u.tensors).unwrap_or_default(),
+            sim_secs: 0.0,
+            sim_overlap_secs: 0.0,
+            sim_barrier_secs: 0.0,
+            syncs: 0,
+        }
+    }
+}

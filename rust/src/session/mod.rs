@@ -33,7 +33,9 @@
 //! `docs/SESSION_API.md`.
 
 pub mod core;
+pub(crate) mod grad;
 pub mod spec;
+pub mod steploop;
 
 use std::collections::HashMap;
 
@@ -41,38 +43,45 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::accountant::PrivacyPlan;
 use crate::coordinator::sampler::PoissonSampler;
-use crate::coordinator::trainer::{derive_schedule, StepStats, TrainOpts, Trainer};
+use crate::coordinator::trainer::{derive_schedule, TrainOpts, Trainer};
 use crate::data::Dataset;
 use crate::hybrid::engine::HybridWiring;
-use crate::hybrid::{HybridEngine, HybridStepStats, PieceGrouping};
-use crate::pipeline::{PipeStepStats, PipelineEngine, PipelineMode, PipelineOpts};
+use crate::hybrid::{HybridEngine, PieceGrouping};
+use crate::pipeline::{PipelineEngine, PipelineMode, PipelineOpts};
 use crate::runtime::{Runtime, Tensor};
 use crate::shard::engine::ShardWiring;
-use crate::shard::{ShardEngine, ShardStepStats, WorkerGrouping};
+use crate::shard::{ShardEngine, WorkerGrouping};
+
+pub use crate::shard::compress::CompressKind;
 
 pub use self::core::{CoreCfg, DpCore};
 pub use self::spec::{
-    ClipMode, ClipPolicy, DataSpec, FlatImpl, GroupBy, HybridGrouping, HybridSpec, OptimSpec,
-    PipeSpec, PrivacySpec, RunSpec, Sampling, ShardGrouping, ShardSpec,
+    ClipMode, ClipPolicy, CompressSpec, DataSpec, FlatImpl, GroupBy, HybridGrouping, HybridSpec,
+    OptimSpec, PipeSpec, PrivacySpec, RunSpec, Sampling, ShardGrouping, ShardSpec,
 };
+pub use self::steploop::StepLoop;
 
 // -------------------------------------------------------------- step event
 
-/// One training step, reported identically by both backends so the CLI and
-/// the experiment harness print/collect through a single path.
+/// One training step, emitted by the shared [`StepLoop`] for every
+/// backend so the CLI and the experiment harness print/collect through a
+/// single path. This is the ONLY per-step report in the crate — the
+/// legacy per-backend stat structs (`StepStats`, `PipeStepStats`,
+/// `ShardStepStats`, `HybridStepStats`) are retired.
 #[derive(Debug, Clone)]
 pub struct StepEvent {
+    /// 1-based step index
     pub step: u64,
     pub loss: f64,
     /// live examples this step (Poisson draw / pipeline minibatch)
     pub batch_size: usize,
     /// fraction of examples clipped, per group (empty for pipeline runs)
     pub clip_frac: Vec<f64>,
-    /// mean per-example norm per group (empty for pipeline runs)
+    /// mean per-example norm per group (empty for pipeline/hybrid runs)
     pub mean_norms: Vec<f64>,
-    /// measured host seconds (0 for the single-device backend)
+    /// measured host seconds for the whole step
     pub host_secs: f64,
-    /// simulated S-device makespan (0 for the single-device backend)
+    /// simulated multi-device makespan (0 for the single-device backend)
     pub sim_secs: f64,
     /// simulated latency with the cross-replica reduction overlapped into
     /// backprop (sharded/hybrid backends; 0 elsewhere)
@@ -91,74 +100,6 @@ pub struct StepEvent {
 }
 
 impl StepEvent {
-    pub fn from_single(s: StepStats) -> Self {
-        StepEvent {
-            step: s.step,
-            loss: s.loss,
-            batch_size: s.batch_size,
-            clip_frac: s.clip_frac,
-            mean_norms: s.mean_norms,
-            host_secs: 0.0,
-            sim_secs: 0.0,
-            sim_overlap_secs: 0.0,
-            sim_barrier_secs: 0.0,
-            syncs: 0,
-            calls: 0,
-            truncated: s.truncated,
-        }
-    }
-
-    pub fn from_pipeline(step: u64, batch_size: usize, truncated: usize, s: PipeStepStats) -> Self {
-        StepEvent {
-            step,
-            loss: s.loss,
-            batch_size,
-            clip_frac: Vec::new(),
-            mean_norms: Vec::new(),
-            host_secs: s.host_secs,
-            sim_secs: s.sim_secs,
-            sim_overlap_secs: 0.0,
-            sim_barrier_secs: 0.0,
-            syncs: s.syncs,
-            calls: s.calls,
-            truncated,
-        }
-    }
-
-    pub fn from_shard(s: ShardStepStats) -> Self {
-        StepEvent {
-            step: s.step,
-            loss: s.loss,
-            batch_size: s.batch_size,
-            clip_frac: s.clip_frac,
-            mean_norms: s.mean_norms,
-            host_secs: s.host_secs,
-            sim_secs: s.sim_secs,
-            sim_overlap_secs: s.sim_overlap_secs,
-            sim_barrier_secs: s.sim_barrier_secs,
-            syncs: s.syncs,
-            calls: s.calls,
-            truncated: s.truncated,
-        }
-    }
-
-    pub fn from_hybrid(s: HybridStepStats) -> Self {
-        StepEvent {
-            step: s.step,
-            loss: s.loss,
-            batch_size: s.batch_size,
-            clip_frac: s.clip_frac,
-            mean_norms: Vec::new(),
-            host_secs: s.host_secs,
-            sim_secs: s.sim_secs,
-            sim_overlap_secs: s.sim_overlap_secs,
-            sim_barrier_secs: s.sim_barrier_secs,
-            syncs: s.syncs,
-            calls: s.calls,
-            truncated: s.truncated,
-        }
-    }
-
     /// One-line human-readable progress report. Backends that simulate a
     /// cross-replica reduction (sharded, hybrid) also report both the
     /// overlapped and barrier makespans; capacity-bound truncated draws
@@ -303,6 +244,13 @@ impl<'r> SessionBuilder<'r> {
         self
     }
 
+    /// Enable error-feedback gradient compression on the cross-replica
+    /// reduction path (sharded and hybrid backends only).
+    pub fn compress(mut self, c: CompressSpec) -> Self {
+        self.spec.compress = Some(c);
+        self
+    }
+
     /// Explicit pipeline step count (overrides the epochs-derived count).
     pub fn steps(mut self, steps: usize) -> Self {
         self.spec.pipe.steps = steps;
@@ -440,13 +388,13 @@ impl<'r> SessionBuilder<'r> {
                     clip_init: spec.clip.clip_init,
                     target_q: spec.clip.target_q,
                     quantile_eta: spec.clip.quantile_eta,
+                    compress: spec.compress,
                 };
-                let engine = HybridEngine::with_core(runtime, &spec.config, wiring, core)?;
+                let engine = HybridEngine::with_core(runtime, &spec.config, wiring, &core)?;
                 return Ok(Session {
                     backend: Backend::Hybrid(engine),
                     total_steps: steps,
-                    pipe_cursor: 0,
-                    pipe_sampler: None,
+                    steploop: StepLoop::new(core),
                     spec,
                 });
             }
@@ -530,9 +478,6 @@ impl<'r> SessionBuilder<'r> {
                 n_micro: spec.pipe.n_micro,
                 expected_batch: expected,
                 clip: spec.clip.clip_init,
-                // informational echo of the accountant-derived multiplier;
-                // the engine reads noise from the core, never from here
-                sigma: core.sigma_grad,
                 lr: spec.optim.lr,
                 optimizer: spec.optim.kind,
                 seed: spec.seed,
@@ -541,18 +486,17 @@ impl<'r> SessionBuilder<'r> {
                 target_q: spec.clip.target_q,
                 quantile_eta: spec.clip.quantile_eta,
             };
-            let engine = PipelineEngine::with_core(runtime, &spec.config, opts, core)?;
+            let mut engine = PipelineEngine::with_core(runtime, &spec.config, opts, &core)?;
             // Poisson runs draw padded minibatches from this sampler (via
-            // the engine core's RNG); round-robin keeps the legacy cursor.
-            let pipe_sampler = match spec.pipe.sampling {
+            // the shared core RNG); round-robin keeps the legacy cursor.
+            engine.set_sampler(match spec.pipe.sampling {
                 Sampling::Poisson => Some(PoissonSampler::new(n_data, sample_rate, minibatch)),
                 Sampling::RoundRobin => None,
-            };
+            });
             Ok(Session {
                 backend: Backend::Pipeline(engine),
                 total_steps: steps,
-                pipe_cursor: 0,
-                pipe_sampler,
+                steploop: StepLoop::new(core),
                 spec,
             })
         } else if spec.shard.is_some() || spec.hybrid.is_some() {
@@ -686,13 +630,14 @@ impl<'r> SessionBuilder<'r> {
                 lr: spec.optim.lr,
                 weight_decay: spec.optim.weight_decay,
                 lr_decay: spec.optim.lr_decay,
+                compress: spec.compress,
+                seed: spec.seed,
             };
-            let engine = ShardEngine::with_core(runtime, &spec.config, wiring, core)?;
+            let engine = ShardEngine::with_core(runtime, &spec.config, wiring, &core)?;
             Ok(Session {
                 backend: Backend::Sharded(engine),
                 total_steps,
-                pipe_cursor: 0,
-                pipe_sampler: None,
+                steploop: StepLoop::new(core),
                 spec,
             })
         } else {
@@ -740,13 +685,12 @@ impl<'r> SessionBuilder<'r> {
                 rescale_global: spec.clip.rescale_global,
                 seed: spec.seed,
             };
-            let trainer = Trainer::with_core(runtime, &spec.config, n_data, opts, core)?;
+            let trainer = Trainer::with_core(runtime, &spec.config, n_data, opts, &core)?;
             let total_steps = trainer.total_steps;
             Ok(Session {
                 backend: Backend::Single(trainer),
                 total_steps,
-                pipe_cursor: 0,
-                pipe_sampler: None,
+                steploop: StepLoop::new(core),
                 spec,
             })
         }
@@ -765,17 +709,14 @@ impl<'r> SessionBuilder<'r> {
 
 // ----------------------------------------------------------------- session
 
-/// A configured training run: one backend, one shared [`DpCore`], one
-/// event stream.
+/// A configured training run: one backend, one shared [`StepLoop`]
+/// (holding the one [`DpCore`]), one event stream.
 pub struct Session<'r> {
     pub spec: RunSpec,
     pub backend: Backend<'r>,
     pub total_steps: u64,
-    /// round-robin data cursor (pipeline runs with `sampling = round_robin`)
-    pipe_cursor: usize,
-    /// Poisson draw source for pipeline runs (`sampling = poisson`); the
-    /// draws consume the engine core's RNG, mirroring the trainer
-    pipe_sampler: Option<PoissonSampler>,
+    /// the DP-invariant step state machine every backend steps through
+    pub steploop: StepLoop,
 }
 
 impl<'r> Session<'r> {
@@ -785,12 +726,12 @@ impl<'r> Session<'r> {
 
     /// Shared DP state (plan, thresholds, noise, RNG).
     pub fn core(&self) -> &DpCore {
-        match &self.backend {
-            Backend::Single(t) => &t.core,
-            Backend::Pipeline(e) => &e.core,
-            Backend::Sharded(e) => &e.core,
-            Backend::Hybrid(e) => &e.core,
-        }
+        &self.steploop.core
+    }
+
+    /// Mutable shared DP state (tests pin RNG stream positions here).
+    pub fn core_mut(&mut self) -> &mut DpCore {
+        &mut self.steploop.core
     }
 
     /// The accountant's plan (None only for non-private runs).
@@ -809,7 +750,9 @@ impl<'r> Session<'r> {
     pub fn group_labels(&self) -> Vec<String> {
         match &self.backend {
             Backend::Single(t) => t.groups().to_vec(),
-            Backend::Pipeline(e) => (0..e.core.k()).map(|i| format!("stage{i}")).collect(),
+            Backend::Pipeline(_) => {
+                (0..self.core().k()).map(|i| format!("stage{i}")).collect()
+            }
             Backend::Sharded(e) => e.group_labels(),
             Backend::Hybrid(e) => e.group_labels(),
         }
@@ -957,30 +900,17 @@ impl<'r> Session<'r> {
         self.trainer().and_then(|t| t.collect_norms.as_ref())
     }
 
-    /// One training step. The single-device backend draws its own Poisson
-    /// batch; the pipeline draws a padded Poisson batch from the shared
-    /// core RNG (or, with `sampling = round_robin`, consumes the next
-    /// deterministic minibatch).
+    /// One training step through the shared [`StepLoop`]: every backend
+    /// runs the same DP phase sequence (draw, collect, noise shares,
+    /// merge, /E[B] normalization, update, one quantile release) and
+    /// emits the same [`StepEvent`].
     pub fn step(&mut self, data: &dyn Dataset) -> Result<StepEvent> {
-        match &mut self.backend {
-            Backend::Single(t) => Ok(StepEvent::from_single(t.step(data)?)),
-            Backend::Sharded(e) => Ok(StepEvent::from_shard(e.step(data)?)),
-            Backend::Hybrid(e) => Ok(StepEvent::from_hybrid(e.step(data)?)),
-            Backend::Pipeline(e) => {
-                let mb = e.minibatch();
-                if let Some(sampler) = &self.pipe_sampler {
-                    let batch = sampler.sample_padded(&mut e.core.rng);
-                    let live = batch.live();
-                    let st = e.step_weighted(data, &batch.indices, &batch.weights)?;
-                    Ok(StepEvent::from_pipeline(e.steps_done, live, batch.truncated, st))
-                } else {
-                    let base = self.pipe_cursor * mb;
-                    let idx: Vec<usize> = (0..mb).map(|i| (base + i) % data.len()).collect();
-                    self.pipe_cursor += 1;
-                    let st = e.step(data, &idx)?;
-                    Ok(StepEvent::from_pipeline(e.steps_done, mb, 0, st))
-                }
-            }
+        let Session { backend, steploop, .. } = self;
+        match backend {
+            Backend::Single(t) => steploop.step(t, data),
+            Backend::Pipeline(e) => steploop.step(e, data),
+            Backend::Sharded(e) => steploop.step(e, data),
+            Backend::Hybrid(e) => steploop.step(e, data),
         }
     }
 
@@ -1023,9 +953,11 @@ impl<'r> Session<'r> {
     }
 
     /// Human-readable one-line description of the run's privacy wiring.
-    /// Sharded and hybrid sessions append their topology: replica/worker
-    /// count, stage count, reduction fanout, grouping and the per-group
-    /// thresholds.
+    /// Every backend prints the SAME plan-composition block — (eps,
+    /// delta), q, the release count `plan.steps` and the sigma split —
+    /// followed by its topology: stage count and thresholds for the
+    /// pipeline, replica/worker count, reduction fanout, compression,
+    /// grouping and thresholds for the sharded/hybrid backends.
     pub fn describe(&self) -> String {
         let be = self.backend.name();
         let base = match self.plan() {
@@ -1053,10 +985,20 @@ impl<'r> Session<'r> {
                 self.total_steps
             ),
         };
+        let thresholds = self.thresholds();
         match &self.backend {
-            Backend::Sharded(e) => format!("{base} | {}", e.describe_topology()),
-            Backend::Hybrid(e) => format!("{base} | {}", e.describe_topology()),
-            _ => base,
+            Backend::Single(_) => base,
+            Backend::Pipeline(e) => {
+                let c: Vec<String> = thresholds.iter().map(|c| format!("{c:.4}")).collect();
+                format!(
+                    "{base} | stages={} n_micro={} thresholds=[{}]",
+                    e.n_stages,
+                    self.spec.pipe.n_micro,
+                    c.join(", ")
+                )
+            }
+            Backend::Sharded(e) => format!("{base} | {}", e.describe_topology(thresholds)),
+            Backend::Hybrid(e) => format!("{base} | {}", e.describe_topology(thresholds)),
         }
     }
 }

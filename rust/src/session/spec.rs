@@ -26,6 +26,7 @@ use crate::coordinator::noise::Allocation;
 use crate::coordinator::optimizer::OptimizerKind;
 use crate::coordinator::trainer::Method;
 use crate::pipeline::PipelineMode;
+use crate::shard::compress::CompressKind;
 use crate::util::json::Json;
 
 // ---------------------------------------------------------------- privacy
@@ -840,6 +841,58 @@ impl HybridSpec {
     }
 }
 
+// --------------------------------------------------------------- compress
+
+/// Gradient compression on the cross-replica reduction path (sharded and
+/// hybrid backends — the backends with a reduction seam). Each worker /
+/// replica sparsifies its ALREADY-NOISED gradient share to the top-k (or
+/// a random-k) entries per tensor before the tree-reduction, carrying the
+/// dropped mass in a local error-feedback residual. DP-safe by
+/// post-processing: the noise phase has already run when compression
+/// sees the share (see `docs/SESSION_API.md`, "Gradient compression").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompressSpec {
+    /// selection rule (see [`CompressKind`])
+    pub kind: CompressKind,
+    /// keep ratio k/d in (0, 1]; 1.0 keeps everything (bitwise identity)
+    pub ratio: f64,
+    /// carry dropped mass into the next step's share (recommended; off =
+    /// plain sparsification, dropped mass is lost)
+    pub error_feedback: bool,
+}
+
+impl Default for CompressSpec {
+    fn default() -> Self {
+        CompressSpec { kind: CompressKind::TopK, ratio: 0.25, error_feedback: true }
+    }
+}
+
+impl CompressSpec {
+    pub fn validate(&self) -> Result<()> {
+        if !(self.ratio > 0.0 && self.ratio <= 1.0) {
+            bail!("compress.ratio must be in (0, 1], got {}", self.ratio);
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("kind".into(), Json::Str(self.kind.token().into()));
+        m.insert("ratio".into(), Json::Num(self.ratio));
+        m.insert("error_feedback".into(), Json::Bool(self.error_feedback));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = CompressSpec::default();
+        Ok(CompressSpec {
+            kind: opt_str(j, "kind", d.kind.token())?.parse()?,
+            ratio: opt_f64(j, "ratio", d.ratio)?,
+            error_feedback: opt_bool(j, "error_feedback", d.error_feedback)?,
+        })
+    }
+}
+
 // --------------------------------------------------------------- run spec
 
 /// Everything needed to execute one training run, on either backend.
@@ -867,6 +920,10 @@ pub struct RunSpec {
     /// it degenerates to the sharded backend. Mutually exclusive with
     /// `shard`.
     pub hybrid: Option<HybridSpec>,
+    /// `Some` enables error-feedback gradient sparsification on the
+    /// cross-replica reduction path; needs a `[shard]` or `[hybrid]`
+    /// section (the backends with a reduction seam).
+    pub compress: Option<CompressSpec>,
 }
 
 impl Default for RunSpec {
@@ -883,6 +940,7 @@ impl Default for RunSpec {
             pipe: PipeSpec::default(),
             shard: None,
             hybrid: None,
+            compress: None,
         }
     }
 }
@@ -919,6 +977,19 @@ impl RunSpec {
         self.optim.validate().context("invalid [optim] section")?;
         self.data.validate().context("invalid [data] section")?;
         self.pipe.validate().context("invalid [pipeline] section")?;
+        if let Some(c) = &self.compress {
+            c.validate().context("invalid [compress] section")?;
+            // compression rides the cross-replica reduction seam; the
+            // single-device and pure-pipeline backends have no reduction
+            // to compress, so a [compress] section there would silently
+            // do nothing — reject it instead
+            if self.shard.is_none() && self.hybrid.is_none() {
+                bail!(
+                    "[compress] sparsifies the cross-replica reduction path; add a [shard] \
+                     or [hybrid] section (single-device and pipeline runs have no reduction)"
+                );
+            }
+        }
         // exactly one data-parallel section may govern a spec: [hybrid]
         // already defines the replica axis, so carrying both is ambiguous
         if self.shard.is_some() && self.hybrid.is_some() {
@@ -1024,6 +1095,9 @@ impl RunSpec {
         if let Some(hy) = &self.hybrid {
             m.insert("hybrid".into(), hy.to_json());
         }
+        if let Some(c) = &self.compress {
+            m.insert("compress".into(), c.to_json());
+        }
         Json::Obj(m)
     }
 
@@ -1051,6 +1125,12 @@ impl RunSpec {
             hybrid: match j.opt("hybrid") {
                 Some(v) => {
                     Some(HybridSpec::from_json(v).context("in [hybrid] section")?)
+                }
+                None => None,
+            },
+            compress: match j.opt("compress") {
+                Some(v) => {
+                    Some(CompressSpec::from_json(v).context("in [compress] section")?)
                 }
                 None => None,
             },

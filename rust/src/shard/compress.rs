@@ -1,0 +1,285 @@
+//! Gradient compression on the cross-replica reduction path — the first
+//! cross-backend plug-in riding the shared `StepLoop` merge seam.
+//!
+//! Each data-parallel unit (sharded worker / hybrid replica) sparsifies
+//! its gradient contribution to **top-k** or **random-k** entries per
+//! tensor before it enters `tree_reduce`, shrinking the bytes every
+//! reduction round moves by the keep ratio. Dropped mass is carried in a
+//! local **error-feedback residual** (Stich et al., "Sparsified SGD with
+//! memory"): next step the residual is added back before selection, so
+//! over time every coordinate's contribution is delivered — the property
+//! test pins `sent + residual == input + previous residual` exactly.
+//!
+//! **Why this is DP-safe.** Compression runs strictly AFTER the
+//! `StepLoop` noise phase: what a unit sparsifies is its already-noised
+//! local share `clip(grads) + N(0, (sigma_g/sqrt(U))^2)`, i.e. a quantity
+//! whose release the accountant already paid for. Selecting/zeroing
+//! coordinates of a released quantity is post-processing, which cannot
+//! weaken a DP guarantee; the residual never leaves the unit (it is
+//! carried locally and re-enters only that unit's own next share), so no
+//! unreleased function of the raw data ever crosses the reduction seam.
+//! The accountant's (q, sigma, steps) are untouched by the ratio.
+//!
+//! Determinism: random-k draws from a dedicated [`Xoshiro`] stream seeded
+//! from the run seed — never from the shared `DpCore` RNG — so enabling
+//! compression cannot shift the Poisson/noise/quantile streams that the
+//! backend parity pins rely on.
+
+use std::str::FromStr;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Tensor;
+use crate::util::rng::Xoshiro;
+
+/// Selection rule for the kept coordinates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressKind {
+    /// keep the k largest-magnitude entries per tensor (deterministic,
+    /// ties broken by index)
+    TopK,
+    /// keep k uniformly drawn entries per tensor (cheaper selection, the
+    /// classic unbiased-sketch baseline; deterministic per run seed)
+    RandK,
+}
+
+impl CompressKind {
+    /// Canonical spec/CLI token; guaranteed to parse back via [`FromStr`].
+    pub fn token(&self) -> &'static str {
+        match self {
+            CompressKind::TopK => "topk",
+            CompressKind::RandK => "randk",
+        }
+    }
+}
+
+impl FromStr for CompressKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "topk" | "top-k" | "top_k" => CompressKind::TopK,
+            "randk" | "rand-k" | "rand_k" | "randomk" => CompressKind::RandK,
+            _ => bail!("unknown compress kind '{s}' (topk|randk)"),
+        })
+    }
+}
+
+/// Per-unit error-feedback sparsifier applied inside the reduction seam.
+pub struct Compressor {
+    kind: CompressKind,
+    /// keep ratio k/d in (0, 1]; 1.0 is the bitwise identity
+    ratio: f64,
+    error_feedback: bool,
+    /// residuals[unit][tensor] — dropped mass carried locally
+    residuals: Vec<Vec<Tensor>>,
+    /// dedicated selection stream (random-k); NEVER the DpCore RNG
+    rng: Xoshiro,
+}
+
+impl Compressor {
+    /// `units` = number of data-parallel participants whose residual
+    /// state is tracked independently. The RNG is derived from the run
+    /// seed through a fixed tweak so it cannot collide with the DpCore
+    /// stream seeded from the same value.
+    pub fn new(
+        kind: CompressKind,
+        ratio: f64,
+        error_feedback: bool,
+        units: usize,
+        seed: u64,
+    ) -> Self {
+        Compressor {
+            kind,
+            ratio,
+            error_feedback,
+            residuals: vec![Vec::new(); units],
+            rng: Xoshiro::seeded(seed ^ 0x9E37_79B9_7F4A_7C15),
+        }
+    }
+
+    pub fn kind(&self) -> CompressKind {
+        self.kind
+    }
+
+    /// Keep ratio in (0, 1].
+    pub fn ratio(&self) -> f64 {
+        self.ratio
+    }
+
+    /// Kept entries for a tensor of `len` elements: ceil(ratio * len),
+    /// clamped to [1, len].
+    pub fn keep(&self, len: usize) -> usize {
+        ((self.ratio * len as f64).ceil() as usize).clamp(1, len)
+    }
+
+    /// One-line spec echo for `Session::describe` / the CLI.
+    pub fn describe(&self) -> String {
+        format!(
+            "{}:{:.3}{}",
+            self.kind.token(),
+            self.ratio,
+            if self.error_feedback { "+ef" } else { "" }
+        )
+    }
+
+    /// Sparsify `tensors` (unit `unit`'s noised share) in place: add the
+    /// carried residual, keep the selected entries, zero the rest, store
+    /// the dropped mass as the new residual. `ratio >= 1` is a bitwise
+    /// no-op (nothing dropped, residual stays zero), which the k = 100%
+    /// identity property pins.
+    pub fn compress_unit(&mut self, unit: usize, tensors: &mut [Tensor]) {
+        if self.ratio >= 1.0 {
+            return;
+        }
+        let res = &mut self.residuals[unit];
+        if res.len() != tensors.len() {
+            *res = tensors.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+        }
+        for (t, r) in tensors.iter_mut().zip(res.iter_mut()) {
+            let n = t.data.len();
+            if n == 0 {
+                continue;
+            }
+            if self.error_feedback {
+                for (v, rv) in t.data.iter_mut().zip(&r.data) {
+                    *v += *rv;
+                }
+            }
+            let k = self.keep(n);
+            let kept = match self.kind {
+                CompressKind::TopK => top_k_indices(&t.data, k),
+                CompressKind::RandK => rand_k_indices(n, k, &mut self.rng),
+            };
+            let mut keep_mask = vec![false; n];
+            for &i in &kept {
+                keep_mask[i] = true;
+            }
+            for i in 0..n {
+                if keep_mask[i] {
+                    r.data[i] = 0.0;
+                } else {
+                    // the dropped (error-feedback-corrected) mass is the
+                    // residual; without EF it is simply discarded
+                    r.data[i] = if self.error_feedback { t.data[i] } else { 0.0 };
+                    t.data[i] = 0.0;
+                }
+            }
+        }
+    }
+
+    /// Unit `unit`'s current residual tensors (empty until first use).
+    pub fn residual(&self, unit: usize) -> &[Tensor] {
+        &self.residuals[unit]
+    }
+}
+
+/// Indices of the `k` largest-|v| entries, ties broken by lower index —
+/// fully deterministic (the comparator is a total order via `total_cmp`,
+/// so NaN/inf inputs cannot panic the selection). A linear-time
+/// partition, not a sort: this runs per tensor per unit on the step hot
+/// path, and only the kept SET matters (the caller builds a mask).
+fn top_k_indices(v: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..v.len()).collect();
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            v[b].abs().total_cmp(&v[a].abs()).then(a.cmp(&b))
+        });
+        idx.truncate(k);
+    }
+    idx
+}
+
+/// `k` distinct uniform indices out of `n` via a partial Fisher-Yates
+/// over a scratch permutation.
+fn rand_k_indices(n: usize, k: usize, rng: &mut Xoshiro) -> Vec<usize> {
+    let mut perm: Vec<usize> = (0..n).collect();
+    for i in 0..k.min(n) {
+        let j = i + rng.below(n - i);
+        perm.swap(i, j);
+    }
+    perm.truncate(k);
+    perm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: Vec<f32>) -> Tensor {
+        Tensor::from_vec(&[v.len()], v).unwrap()
+    }
+
+    #[test]
+    fn full_ratio_is_bitwise_identity() {
+        let mut c = Compressor::new(CompressKind::TopK, 1.0, true, 2, 9);
+        let orig = vec![t(vec![0.5, -0.25, 1.5e-8, 3.0]), t(vec![-0.0, 7.0])];
+        let mut x = orig.clone();
+        for step in 0..3 {
+            c.compress_unit(0, &mut x);
+            for (a, b) in x.iter().zip(&orig) {
+                assert_eq!(a.data, b.data, "step {step}: ratio 1.0 must be untouched");
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_keeps_largest_magnitudes() {
+        let mut c = Compressor::new(CompressKind::TopK, 0.5, false, 1, 0);
+        let mut x = vec![t(vec![0.1, -5.0, 0.2, 4.0, -0.3, 0.05])];
+        c.compress_unit(0, &mut x);
+        assert_eq!(x[0].data, vec![0.0, -5.0, 0.0, 4.0, -0.3, 0.0]);
+    }
+
+    #[test]
+    fn error_feedback_partitions_exactly() {
+        // per step: sent + residual == input + previous residual, exactly
+        // (the kept/dropped split partitions the corrected vector)
+        let mut c = Compressor::new(CompressKind::TopK, 0.34, true, 1, 0);
+        let mut prev_res = vec![0.0f32; 6];
+        for step in 0..5 {
+            let input: Vec<f32> =
+                (0..6).map(|i| ((i + 1) as f32) * 0.1 * ((step + 1) as f32) * if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+            let corrected: Vec<f32> =
+                input.iter().zip(&prev_res).map(|(a, b)| a + b).collect();
+            let mut x = vec![t(input)];
+            c.compress_unit(0, &mut x);
+            let res = &c.residual(0)[0].data;
+            for i in 0..6 {
+                assert_eq!(
+                    x[0].data[i] + res[i],
+                    corrected[i],
+                    "step {step} slot {i}: sent+residual must equal corrected input"
+                );
+                assert!(
+                    x[0].data[i] == 0.0 || res[i] == 0.0,
+                    "kept/dropped must partition"
+                );
+            }
+            prev_res = res.clone();
+        }
+    }
+
+    #[test]
+    fn rand_k_is_seed_deterministic_and_k_sized() {
+        let pick = |seed| {
+            let mut c = Compressor::new(CompressKind::RandK, 0.5, false, 1, seed);
+            let mut x = vec![t((0..10).map(|i| i as f32 + 1.0).collect())];
+            c.compress_unit(0, &mut x);
+            x[0].data.clone()
+        };
+        let a = pick(4);
+        let b = pick(4);
+        assert_eq!(a, b, "same seed, same selection");
+        assert_eq!(a.iter().filter(|&&v| v != 0.0).count(), 5, "keeps exactly k");
+        let c = pick(5);
+        assert_ne!(a, c, "different seed should (overwhelmingly) differ");
+    }
+
+    #[test]
+    fn keep_clamps_to_at_least_one() {
+        let c = Compressor::new(CompressKind::TopK, 0.01, false, 1, 0);
+        assert_eq!(c.keep(3), 1);
+        assert_eq!(c.keep(1000), 10);
+    }
+}

@@ -1,6 +1,6 @@
 //! `ShardEngine` — N data-parallel workers, each a full model replica over
-//! a disjoint slice of one global Poisson draw, clipping per-device and
-//! noising locally before an overlapped tree-reduction merges the deltas.
+//! a disjoint slice of one global Poisson draw, clipping per-device before
+//! an overlapped tree-reduction merges the deltas.
 //!
 //! Execution is sequential on the host (the PJRT CPU client already uses
 //! every core per executable call), but each worker's executable call is
@@ -8,25 +8,40 @@
 //! cluster would see: per-layer backward completion times against tree
 //! all-reduce rounds, overlapped or behind a barrier.
 //!
-//! RNG discipline (the parity contract with the single-device backend):
-//! per step the shared [`DpCore`] RNG is consumed in exactly this order —
-//! (1) one global Poisson draw, (2) per-trainable-tensor gradient noise in
-//! worker-major order, (3) the private quantile release. With one worker
-//! this is the [`Trainer`](crate::coordinator::Trainer) sequence verbatim.
+//! All DP state lives in the session's shared
+//! [`StepLoop`](crate::session::StepLoop); this engine implements the
+//! [`BackendStep`](crate::session::steploop::BackendStep) hooks only. The
+//! unit layout it hands the loop encodes the documented RNG discipline —
+//! per step the shared core RNG is consumed as (1) one global Poisson
+//! draw, (2) per-trainable-tensor gradient noise in worker-major order at
+//! the local share `sigma_g/sqrt(N)`, (3) the private quantile release.
+//! With one worker this is the [`Trainer`](crate::coordinator::Trainer)
+//! sequence verbatim.
+//!
+//! The merge hook is also the crate's gradient-compression seam: with a
+//! `[compress]` spec section each worker's already-noised share is
+//! sparsified (error-feedback top-k / rand-k, see
+//! [`super::compress`]) before entering [`tree_reduce`], shrinking the
+//! simulated reduction payload by the keep ratio — DP-safe post-processing
+//! because the noise phase has already run.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::noise::add_noise;
+use crate::coordinator::noise::Rng;
 use crate::coordinator::optimizer::{Optimizer, OptimizerKind};
 use crate::data::Dataset;
 use crate::runtime::{ConfigManifest, Exec, HostValue, Runtime, Tensor};
 use crate::session::core::DpCore;
+use crate::session::grad::{Collected, GradUnit, Merged, StepTiming};
+use crate::session::spec::CompressSpec;
+use crate::session::steploop::BackendStep;
 
+use super::compress::Compressor;
 use super::reduce::{tree_reduce, ReduceModel};
-use super::sampler::ShardSampler;
+use super::sampler::{ShardBatch, ShardSampler};
 
 /// How clipping-threshold groups map onto the worker topology (resolved
 /// from `ShardSpec.grouping` x `ClipPolicy.group_by` by the session
@@ -76,6 +91,9 @@ pub(crate) struct ShardWiring {
     pub lr: f64,
     pub weight_decay: f64,
     pub lr_decay: bool,
+    /// error-feedback gradient sparsification on the reduction path
+    pub compress: Option<CompressSpec>,
+    pub seed: u64,
 }
 
 struct Replica {
@@ -83,47 +101,14 @@ struct Replica {
     optimizer: Optimizer,
 }
 
-/// Per-step report of the sharded backend.
-#[derive(Debug, Clone)]
-pub struct ShardStepStats {
-    pub step: u64,
-    pub loss: f64,
-    /// live examples across all workers this step
-    pub batch_size: usize,
-    /// fraction clipped per threshold group
-    pub clip_frac: Vec<f64>,
-    /// mean per-example norm per threshold group
-    pub mean_norms: Vec<f64>,
-    /// examples the global draw included but total capacity dropped
-    pub truncated: usize,
-    /// measured host seconds for the whole step
-    pub host_secs: f64,
-    /// simulated N-worker step latency under the configured reduction
-    pub sim_secs: f64,
-    /// simulated latency with the reduction overlapped into backprop
-    pub sim_overlap_secs: f64,
-    /// simulated latency with a reduce-after-backward barrier
-    pub sim_barrier_secs: f64,
-    /// depth of the reduction tree, ceil(log_fanout(workers)) — the
-    /// rounds EACH layer's all-reduce traverses (layers pipeline through
-    /// the same tree, so this is the latency-relevant count, not the
-    /// total message count, which is ~depth x trainable tensors)
-    pub syncs: usize,
-    /// executable invocations (one per worker)
-    pub calls: usize,
-}
-
 pub struct ShardEngine<'r> {
     pub runtime: &'r Runtime,
     pub config_name: String,
     pub cfg: ConfigManifest,
-    /// shared DP state: plan, thresholds, noise allocation, RNG
-    pub core: DpCore,
     pub workers: usize,
     pub fanout: usize,
     pub overlap: bool,
     pub total_steps: u64,
-    pub step_count: u64,
     grouping: WorkerGrouping,
     private: bool,
     exec: Arc<Exec>,
@@ -134,17 +119,27 @@ pub struct ShardEngine<'r> {
     trainable_idx: Vec<usize>,
     group_of_trainable: Vec<usize>,
     reduce_model: ReduceModel,
+    /// error-feedback sparsifier on the reduction seam (None = dense)
+    compressor: Option<Compressor>,
+    /// live counts of the most recent collect, per worker (clip_frac and
+    /// non-private loss weighting read them)
+    worker_lives: Vec<usize>,
+    /// when compressing: the (overlap, barrier) makespans the SAME step
+    /// timings would have produced without compression — the
+    /// apples-to-apples baseline benches assert against
+    last_dense_sims: Option<(f64, f64)>,
 }
 
 impl<'r> ShardEngine<'r> {
-    /// Crate-private constructor: all DP state arrives in `core` (K must
-    /// match the resolved grouping), all schedule/topology decisions in
-    /// `wiring`. Only `session::SessionBuilder` builds these.
+    /// Crate-private constructor: all DP state lives in the session's
+    /// `StepLoop` (`core` is borrowed to validate the group-count
+    /// contract), all schedule/topology decisions in `wiring`. Only
+    /// `session::SessionBuilder` builds these.
     pub(crate) fn with_core(
         runtime: &'r Runtime,
         config_name: &str,
         w: ShardWiring,
-        core: DpCore,
+        core: &DpCore,
     ) -> Result<Self> {
         let cfg = runtime.manifest.config(config_name)?.clone();
         if cfg.stages.is_some() {
@@ -190,15 +185,17 @@ impl<'r> ShardEngine<'r> {
             })
             .collect();
 
+        let compressor = w
+            .compress
+            .as_ref()
+            .map(|c| Compressor::new(c.kind, c.ratio, c.error_feedback, w.workers, w.seed));
         Ok(ShardEngine {
             runtime,
             config_name: config_name.to_string(),
-            core,
             workers: w.workers,
             fanout: w.fanout,
             overlap: w.overlap,
             total_steps: w.total_steps,
-            step_count: 0,
             grouping: w.grouping,
             private: w.private,
             exec,
@@ -209,8 +206,19 @@ impl<'r> ShardEngine<'r> {
             trainable_idx,
             group_of_trainable,
             reduce_model: ReduceModel::new(w.workers, w.fanout, w.link_latency),
+            compressor,
+            worker_lives: vec![0; w.workers],
+            last_dense_sims: None,
             cfg,
         })
+    }
+
+    /// The (overlap, barrier) makespans the most recent step's timings
+    /// would have produced WITHOUT compression; `None` until a compressed
+    /// step ran. Deterministically comparable to the step's reported sims
+    /// (same measured timings, only the payload differs).
+    pub fn last_dense_sims(&self) -> Option<(f64, f64)> {
+        self.last_dense_sims
     }
 
     pub fn grouping(&self) -> WorkerGrouping {
@@ -222,13 +230,7 @@ impl<'r> ShardEngine<'r> {
         self.workers * self.cfg.batch
     }
 
-    /// Current per-group clipping thresholds (one per worker for
-    /// per-device grouping).
-    pub fn thresholds(&self) -> &[f64] {
-        self.core.thresholds()
-    }
-
-    /// Threshold-group labels matching [`ShardEngine::thresholds`].
+    /// Threshold-group labels (one per worker for per-device grouping).
     pub fn group_labels(&self) -> Vec<String> {
         match self.grouping {
             WorkerGrouping::Flat => vec!["flat".to_string()],
@@ -288,12 +290,16 @@ impl<'r> ShardEngine<'r> {
     }
 
     /// Topology line for `Session::describe` / the CLI: worker count,
-    /// reduction fanout, overlap flag and the per-group thresholds.
-    pub fn describe_topology(&self) -> String {
-        let c: Vec<String> =
-            self.core.thresholds().iter().map(|c| format!("{c:.4}")).collect();
+    /// reduction fanout, overlap flag, compression and the current
+    /// per-group `thresholds` (owned by the session's core).
+    pub fn describe_topology(&self, thresholds: &[f64]) -> String {
+        let c: Vec<String> = thresholds.iter().map(|c| format!("{c:.4}")).collect();
+        let compress = match &self.compressor {
+            Some(c) => format!(" compress={}", c.describe()),
+            None => String::new(),
+        };
         format!(
-            "workers={} fanout={} reduction={} grouping={} thresholds=[{}]",
+            "workers={} fanout={} reduction={}{compress} grouping={} thresholds=[{}]",
             self.workers,
             self.fanout,
             if self.overlap { "overlapped" } else { "barrier" },
@@ -302,30 +308,48 @@ impl<'r> ShardEngine<'r> {
         )
     }
 
-    /// Threshold worker `w` clips against.
-    fn worker_threshold(&self, w: usize) -> f64 {
-        match self.grouping {
-            WorkerGrouping::PerDevice => self.core.thresholds()[w],
-            _ => self.core.thresholds()[0],
-        }
+    /// Full-dataset evaluation on worker 0's replica: (mean loss, acc).
+    pub fn evaluate(&self, data: &dyn Dataset) -> Result<(f64, f64)> {
+        crate::coordinator::trainer::evaluate_full(
+            &self.eval_exec,
+            &self.replicas[0].params,
+            self.cfg.batch,
+            data,
+        )
     }
 
-    /// One sharded DP step: global Poisson draw -> per-worker fused
-    /// backprop+clip -> local noise shares -> tree-reduction -> one merged
-    /// update broadcast to every replica -> private quantile release.
-    pub fn step(&mut self, data: &dyn Dataset) -> Result<ShardStepStats> {
-        let host_t0 = Instant::now();
-        let batch = self.sampler.sample(&mut self.core.rng);
+    /// Threshold group a tensor of worker `w` noises/clips under.
+    fn group_of(&self, w: usize, layer_group: usize) -> usize {
+        match self.grouping {
+            WorkerGrouping::PerLayer => layer_group,
+            WorkerGrouping::Flat => 0,
+            WorkerGrouping::PerDevice => w,
+        }
+    }
+}
+
+impl BackendStep for ShardEngine<'_> {
+    type Slices = ShardBatch;
+
+    fn deal(&mut self, _n_data: usize, rng: &mut Rng) -> ShardBatch {
+        // ONE global Poisson draw dealt round-robin into disjoint padded
+        // per-worker slices (the accountant sees the union)
+        self.sampler.sample(rng)
+    }
+
+    fn collect(
+        &mut self,
+        data: &dyn Dataset,
+        batch: &ShardBatch,
+        thresholds: &[f64],
+    ) -> Result<Collected> {
         let live_global = batch.live;
-        let k = self.core.k();
+        let k = thresholds.len();
         let n_tr = self.trainable_idx.len();
-        let noise_share = 1.0 / (self.workers as f64).sqrt();
-        let stds = if self.private { self.core.noise_stds() } else { vec![0.0; k] };
 
         let mut clip_counts = vec![0f64; k];
         let mut mean_norms = vec![0f64; k];
-        let mut worker_lives = vec![0usize; self.workers];
-        let mut worker_grads: Vec<Vec<Tensor>> = Vec::with_capacity(self.workers);
+        let mut units: Vec<GradUnit> = Vec::with_capacity(self.workers);
         let mut loss_wsum = 0f64;
         let mut loss_plain = 0f64;
         let mut bwd_secs = vec![0f64; self.workers];
@@ -333,7 +357,7 @@ impl<'r> ShardEngine<'r> {
         for w in 0..self.workers {
             let slice = &batch.slices[w];
             let live_w = slice.live();
-            worker_lives[w] = live_w;
+            self.worker_lives[w] = live_w;
             let mb = data.batch(&slice.indices);
             let (x, y) = mb.inputs();
             let extras: Vec<HostValue> = if !self.private {
@@ -344,7 +368,7 @@ impl<'r> ShardEngine<'r> {
                     y,
                     HostValue::F32(Tensor::from_vec(
                         &[k],
-                        self.core.thresholds().iter().map(|&c| c as f32).collect(),
+                        thresholds.iter().map(|&c| c as f32).collect(),
                     )?),
                     HostValue::F32(Tensor::from_vec(
                         &[slice.weights.len()],
@@ -352,10 +376,14 @@ impl<'r> ShardEngine<'r> {
                     )?),
                 ]
             } else {
+                let thr_w = match self.grouping {
+                    WorkerGrouping::PerDevice => thresholds[w],
+                    _ => thresholds[0],
+                };
                 vec![
                     x,
                     y,
-                    HostValue::F32(Tensor::scalar(self.worker_threshold(w) as f32)),
+                    HostValue::F32(Tensor::scalar(thr_w as f32)),
                     HostValue::F32(Tensor::from_vec(
                         &[slice.weights.len()],
                         slice.weights.clone(),
@@ -398,31 +426,23 @@ impl<'r> ShardEngine<'r> {
                         continue;
                     }
                     for g in 0..k_exec {
-                        let target = match self.grouping {
-                            WorkerGrouping::PerLayer => g,
-                            WorkerGrouping::Flat => 0,
-                            WorkerGrouping::PerDevice => w,
-                        };
+                        let target = self.group_of(w, g);
                         let v = norms.data[i * k_exec + g] as f64;
                         mean_norms[target] += v;
-                        if v <= self.core.thresholds()[target] {
+                        if v <= thresholds[target] {
                             clip_counts[target] += 1.0;
                         }
                     }
                 }
-                // local noise share: std_g / sqrt(N) per worker, so the
-                // merged sum carries exactly the accountant's std_g
-                // (variances add across the N independent shares)
-                for (t, &g) in grads.iter_mut().zip(&self.group_of_trainable) {
-                    let gi = match self.grouping {
-                        WorkerGrouping::PerLayer => g,
-                        WorkerGrouping::Flat => 0,
-                        WorkerGrouping::PerDevice => w,
-                    };
-                    add_noise(&mut t.data, stds[gi] * noise_share, &mut self.core.rng);
-                }
             }
-            worker_grads.push(grads);
+            // worker-major unit order with the per-tensor group mapping:
+            // this layout IS the noise discipline the StepLoop replays
+            let groups: Vec<usize> = self
+                .group_of_trainable
+                .iter()
+                .map(|&g| self.group_of(w, g))
+                .collect();
+            units.push(GradUnit { tensors: grads, groups });
         }
 
         // normalize the mean-norm diagnostics by the examples that fed
@@ -430,7 +450,7 @@ impl<'r> ShardEngine<'r> {
         match self.grouping {
             WorkerGrouping::PerDevice => {
                 for (g, m) in mean_norms.iter_mut().enumerate() {
-                    *m /= worker_lives[g].max(1) as f64;
+                    *m /= self.worker_lives[g].max(1) as f64;
                 }
             }
             _ => {
@@ -439,47 +459,60 @@ impl<'r> ShardEngine<'r> {
                 }
             }
         }
-
-        // -------- overlapped tree-reduction of the worker deltas ---------
-        let mut merged = tree_reduce(worker_grads, self.fanout);
-        if self.private {
-            // Algorithm 1 line 14: normalize the merged sum by E[B]
-            let inv = (1.0 / self.expected_batch) as f32;
-            for t in merged.iter_mut() {
-                for v in t.data.iter_mut() {
-                    *v *= inv;
-                }
+        let clip_denoms: Vec<f64> = match self.grouping {
+            WorkerGrouping::PerDevice => {
+                (0..k).map(|g| self.worker_lives[g].max(1) as f64).collect()
             }
-        } else if self.workers > 1 {
-            // complete the live-weighted mean of the per-worker means
-            // (the 1-worker case needs no rescale at all — the worker's
-            // mean IS the global mean, kept bitwise untouched for parity)
-            let inv = 1.0 / (live_global.max(1) as f32);
-            for t in merged.iter_mut() {
-                for v in t.data.iter_mut() {
-                    *v *= inv;
+            _ => vec![live_global.max(1) as f64; k],
+        };
+        let loss = if self.private {
+            loss_wsum / (live_global.max(1) as f64)
+        } else {
+            loss_plain / self.workers as f64
+        };
+        Ok(Collected {
+            units,
+            clip_counts,
+            clip_denoms,
+            mean_norms,
+            loss,
+            live: live_global,
+            truncated: batch.truncated,
+            calls: self.workers,
+            syncs: 0,
+            timing: StepTiming { durations: Vec::new(), bwd_secs },
+        })
+    }
+
+    fn merge(&mut self, units: Vec<GradUnit>, timing: &StepTiming) -> Merged {
+        let n_tr = self.trainable_idx.len();
+        let mut parts: Vec<Vec<Tensor>> = units.into_iter().map(|u| u.tensors).collect();
+
+        // -------- compression on the reduction seam ----------------------
+        // Each worker sparsifies its ALREADY-NOISED share before it enters
+        // the tree (post-processing of a paid-for release; residuals stay
+        // local). A 1-worker tree moves nothing, so there is nothing to
+        // compress — the identity path stays bitwise.
+        let ratio = match (&mut self.compressor, self.workers > 1) {
+            (Some(c), true) => {
+                for (w, p) in parts.iter_mut().enumerate() {
+                    c.compress_unit(w, p);
                 }
+                c.ratio().min(1.0)
             }
-        }
+            _ => 1.0,
+        };
 
-        // one merged update applied to every replica (identical optimizer
-        // states + identical grads keep the replicas bit-identical)
-        for r in self.replicas.iter_mut() {
-            r.optimizer.apply_indexed(&mut r.params, &self.trainable_idx, &merged);
-        }
-
-        // private quantile release over all threshold groups at once
-        if self.private && self.core.is_adaptive() {
-            self.core.update_thresholds(&clip_counts);
-        }
+        let merged = tree_reduce(parts, self.fanout);
 
         // -------- simulated N-worker latency (overlap vs barrier) --------
         // A real cluster runs the replicas concurrently, so the modeled
         // compute time is one representative worker (host measurements are
         // near-identical across replicas); its backward is split across
         // trainable tensors proportional to size, reductions queue behind
-        // it in backprop (reverse) order.
-        let rep_bwd = bwd_secs.iter().sum::<f64>() / self.workers as f64;
+        // it in backprop (reverse) order. Compression scales each layer's
+        // reduction payload by the keep ratio.
+        let rep_bwd = timing.bwd_secs.iter().sum::<f64>() / self.workers as f64;
         let total_dim: f64 = self
             .trainable_idx
             .iter()
@@ -491,51 +524,53 @@ impl<'r> ShardEngine<'r> {
         for &i in self.trainable_idx.iter().rev() {
             let d = self.cfg.params[i].size as f64;
             bwd_layers.push(rep_bwd * d / total_dim);
-            red_layers.push(self.reduce_model.layer_cost(4.0 * d));
+            red_layers.push(self.reduce_model.layer_cost(4.0 * d * ratio));
         }
         let sim_overlap = self.reduce_model.overlap_makespan(&bwd_layers, &red_layers);
         let sim_barrier = self.reduce_model.barrier_makespan(&bwd_layers, &red_layers);
+        // apples-to-apples dense baseline from the SAME timings, so the
+        // compressed-beats-dense claim is deterministic, not host-noise
+        self.last_dense_sims = (ratio < 1.0).then(|| {
+            let red_dense: Vec<f64> = self
+                .trainable_idx
+                .iter()
+                .rev()
+                .map(|&i| self.reduce_model.layer_cost(4.0 * self.cfg.params[i].size as f64))
+                .collect();
+            (
+                self.reduce_model.overlap_makespan(&bwd_layers, &red_dense),
+                self.reduce_model.barrier_makespan(&bwd_layers, &red_dense),
+            )
+        });
 
-        self.step_count += 1;
-        let clip_frac: Vec<f64> = match self.grouping {
-            WorkerGrouping::PerDevice => clip_counts
-                .iter()
-                .enumerate()
-                .map(|(w, &c)| 1.0 - c / (worker_lives[w].max(1) as f64))
-                .collect(),
-            _ => clip_counts
-                .iter()
-                .map(|&c| 1.0 - c / (live_global.max(1) as f64))
-                .collect(),
-        };
-        let loss = if self.private {
-            loss_wsum / (live_global.max(1) as f64)
-        } else {
-            loss_plain / self.workers as f64
-        };
-        Ok(ShardStepStats {
-            step: self.step_count,
-            loss,
-            batch_size: live_global,
-            clip_frac,
-            mean_norms,
-            truncated: batch.truncated,
-            host_secs: host_t0.elapsed().as_secs_f64(),
+        Merged {
+            tensors: merged,
             sim_secs: if self.overlap { sim_overlap } else { sim_barrier },
             sim_overlap_secs: sim_overlap,
             sim_barrier_secs: sim_barrier,
             syncs: self.reduce_model.rounds(),
-            calls: self.workers,
-        })
+        }
     }
 
-    /// Full-dataset evaluation on worker 0's replica: (mean loss, acc).
-    pub fn evaluate(&self, data: &dyn Dataset) -> Result<(f64, f64)> {
-        crate::coordinator::trainer::evaluate_full(
-            &self.eval_exec,
-            &self.replicas[0].params,
-            self.cfg.batch,
-            data,
-        )
+    fn apply(&mut self, grads: &[Tensor]) {
+        // one merged update applied to every replica (identical optimizer
+        // states + identical grads keep the replicas bit-identical)
+        for r in self.replicas.iter_mut() {
+            r.optimizer.apply_indexed(&mut r.params, &self.trainable_idx, grads);
+        }
+    }
+
+    fn update_scale(&self, live: usize) -> f32 {
+        if self.private {
+            // Algorithm 1 line 14: normalize the merged sum by E[B]
+            (1.0 / self.expected_batch) as f32
+        } else if self.workers > 1 {
+            // complete the live-weighted mean of the per-worker means
+            1.0 / (live.max(1) as f32)
+        } else {
+            // the 1-worker case needs no rescale at all — the worker's
+            // mean IS the global mean, kept bitwise untouched for parity
+            1.0
+        }
     }
 }

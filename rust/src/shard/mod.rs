@@ -35,10 +35,12 @@
 //!
 //! [`DpCore`]: crate::session::DpCore
 
+pub mod compress;
 pub mod engine;
 pub mod reduce;
 pub mod sampler;
 
-pub use engine::{ShardEngine, ShardStepStats, WorkerGrouping};
+pub use compress::{CompressKind, Compressor};
+pub use engine::{ShardEngine, WorkerGrouping};
 pub use reduce::{quadrature_bound, tree_reduce, tree_rounds, ReduceModel};
 pub use sampler::{ShardBatch, ShardSampler, WorkerSlice};

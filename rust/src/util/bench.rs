@@ -127,6 +127,100 @@ pub fn smoke_skip(suite: &str, err: anyhow::Error) -> anyhow::Result<()> {
     }
 }
 
+// ------------------------------------------------------------- trajectory
+
+/// One step-hot-path regression found by [`diff_dirs`].
+#[derive(Debug, Clone)]
+pub struct BenchRegression {
+    pub suite: String,
+    pub name: String,
+    pub old_mean_s: f64,
+    pub new_mean_s: f64,
+}
+
+impl BenchRegression {
+    pub fn ratio(&self) -> f64 {
+        if self.old_mean_s > 0.0 {
+            self.new_mean_s / self.old_mean_s
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Parse one `BENCH_<suite>.json` file into (suite, name -> mean_s).
+fn read_suite(path: &Path) -> anyhow::Result<(String, Vec<(String, f64)>)> {
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text)?;
+    let suite = j
+        .get("suite")
+        .ok()
+        .and_then(|s| s.str().ok())
+        .unwrap_or_default()
+        .to_string();
+    let mut rows = Vec::new();
+    if let Ok(rs) = j.get("results").and_then(|r| r.arr()) {
+        for r in rs {
+            if let (Some(name), Some(mean)) = (
+                r.get("name").ok().and_then(|v| v.str().ok()),
+                r.get("mean_s").ok().and_then(|v| v.f64().ok()),
+            ) {
+                rows.push((name.to_string(), mean));
+            }
+        }
+    }
+    Ok((suite, rows))
+}
+
+/// Diff the `BENCH_*.json` trajectory between two directories: for every
+/// suite present in BOTH, compare the rows whose name marks the step hot
+/// path (contains "/step") and report those whose mean regressed by more
+/// than `threshold` (e.g. 0.15 = 15%). Returns (rows compared,
+/// regressions). Suites or rows present on only one side are skipped —
+/// a fresh bench or an artifact-less smoke run must not fail the gate.
+pub fn diff_dirs(
+    old_dir: impl AsRef<Path>,
+    new_dir: impl AsRef<Path>,
+    threshold: f64,
+) -> anyhow::Result<(usize, Vec<BenchRegression>)> {
+    let mut compared = 0usize;
+    let mut regressions = Vec::new();
+    let entries = match std::fs::read_dir(old_dir.as_ref()) {
+        Ok(e) => e,
+        Err(_) => return Ok((0, regressions)), // no prior trajectory
+    };
+    for entry in entries.flatten() {
+        let fname = entry.file_name().to_string_lossy().to_string();
+        if !(fname.starts_with("BENCH_") && fname.ends_with(".json")) {
+            continue;
+        }
+        let new_path = new_dir.as_ref().join(&fname);
+        if !new_path.is_file() {
+            continue;
+        }
+        let (suite, old_rows) = read_suite(&entry.path())?;
+        let (_, new_rows) = read_suite(&new_path)?;
+        for (name, old_mean) in &old_rows {
+            if !name.contains("/step") || *old_mean <= 0.0 {
+                continue;
+            }
+            let Some((_, new_mean)) = new_rows.iter().find(|(n, _)| n == name) else {
+                continue;
+            };
+            compared += 1;
+            if *new_mean > old_mean * (1.0 + threshold) {
+                regressions.push(BenchRegression {
+                    suite: suite.clone(),
+                    name: name.clone(),
+                    old_mean_s: *old_mean,
+                    new_mean_s: *new_mean,
+                });
+            }
+        }
+    }
+    Ok((compared, regressions))
+}
+
 /// Run `f` for `warmup` + `iters` iterations and time each.
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
     for _ in 0..warmup {

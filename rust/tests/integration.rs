@@ -15,8 +15,8 @@ use gwclip::data::lm::MarkovCorpus;
 use gwclip::data::Dataset;
 use gwclip::runtime::{HostValue, Runtime, Tensor};
 use gwclip::session::{
-    ClipMode, ClipPolicy, GroupBy, HybridGrouping, HybridSpec, OptimSpec, PrivacySpec, RunSpec,
-    Sampling, Session, SessionBuilder, ShardSpec,
+    ClipMode, ClipPolicy, CompressKind, CompressSpec, GroupBy, HybridGrouping, HybridSpec,
+    OptimSpec, PrivacySpec, RunSpec, Sampling, Session, SessionBuilder, ShardSpec,
 };
 
 // The xla PJRT client is !Send/!Sync, so a shared static is impossible;
@@ -520,6 +520,11 @@ fn backend_parity_single_device_vs_sharded_one_worker() {
     let (l0, a0) = single.evaluate(&data).unwrap();
     let (l1, a1) = sharded.evaluate(&data).unwrap();
     assert!((l0 - l1).abs() < 1e-9 && (a0 - a1).abs() < 1e-9);
+    // the StepLoop consumed the shared RNG identically on both backends:
+    // the streams must sit at the same position after the full run
+    let ra = single.core_mut().rng.uniform();
+    let rb = sharded.core_mut().rng.uniform();
+    assert_eq!(ra, rb, "core RNG streams diverged");
 }
 
 #[test]
@@ -601,8 +606,7 @@ fn sharded_overlap_beats_barrier_in_simulation() {
         .build(data.len())
         .unwrap();
     for _ in 0..2 {
-        let e = sess.shard_engine_mut().unwrap();
-        let st = e.step(&data).unwrap();
+        let st = sess.step(&data).unwrap();
         assert!(st.sim_overlap_secs > 0.0 && st.sim_barrier_secs > 0.0);
         assert!(
             st.sim_overlap_secs < st.sim_barrier_secs,
@@ -684,6 +688,11 @@ fn backend_parity_pipeline_vs_hybrid_one_replica() {
     let (l0, _) = pipe.evaluate(&data).unwrap();
     let (l1, _) = hyb.evaluate(&data).unwrap();
     assert_eq!(l0, l1);
+    // the StepLoop consumed the shared RNG identically on both backends:
+    // the streams must sit at the same position after the full run
+    let ra = pipe.core_mut().rng.uniform();
+    let rb = hyb.core_mut().rng.uniform();
+    assert_eq!(ra, rb, "core RNG streams diverged");
 }
 
 #[test]
@@ -813,8 +822,8 @@ fn backend_parity_hybrid_single_stage_vs_sharded_replicas() {
     }
     // same RNG discipline bit for bit: after the full run both shared
     // cores must sit at the same stream position and value
-    let ra = shard.shard_engine_mut().unwrap().core.rng.uniform();
-    let rb = hybrid.hybrid_engine_mut().unwrap().core.rng.uniform();
+    let ra = shard.core_mut().rng.uniform();
+    let rb = hybrid.core_mut().rng.uniform();
     assert_eq!(ra, rb, "core RNG streams diverged");
 }
 
@@ -1004,6 +1013,178 @@ n_data = 64
     assert!(events.iter().all(|e| e.loss.is_finite()));
     let (loss, _) = sess.evaluate(&*eval).unwrap();
     assert!(loss.is_finite());
+}
+
+// ------------------------------------------------------------- compression
+
+#[test]
+fn compression_full_ratio_is_bitwise_identity_on_sharded_runs() {
+    // k = 100% keeps every coordinate: the compressed run must be
+    // bit-identical to the dense run — same losses, same adaptive
+    // threshold trajectory, same final parameters — because ratio 1.0
+    // never touches a tensor and the compressor draws from its own RNG
+    // stream (never the shared core's).
+    let data = tiny_mixture(256, 17);
+    let build = |compress: Option<CompressSpec>| {
+        let mut b = Session::builder(rt(), "resmlp_tiny")
+            .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+            .clip(ClipPolicy {
+                clip_init: 1.0,
+                ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive)
+            })
+            .optim(OptimSpec::sgd(0.1))
+            .epochs(0.5)
+            .seed(6)
+            .shard(ShardSpec { workers: 2, fanout: 2, ..Default::default() });
+        if let Some(c) = compress {
+            b = b.compress(c);
+        }
+        b.build(data.len()).unwrap()
+    };
+    let mut dense = build(None);
+    let mut full = build(Some(CompressSpec {
+        kind: CompressKind::TopK,
+        ratio: 1.0,
+        error_feedback: true,
+    }));
+    for step in 0..dense.total_steps {
+        let a = dense.step(&data).unwrap();
+        let b = full.step(&data).unwrap();
+        assert_eq!(a.loss, b.loss, "step {step}: k=100% must be bitwise dense");
+        assert_eq!(dense.thresholds(), full.thresholds(), "step {step}");
+        assert_eq!(a.clip_frac, b.clip_frac, "step {step}");
+    }
+    let pa = dense.params().unwrap();
+    let pb = full.params().unwrap();
+    for (x, y) in pa.iter().zip(pb) {
+        assert_eq!(x.data, y.data, "parameters diverged under k=100% compression");
+    }
+}
+
+#[test]
+fn compression_trains_sharded_and_shrinks_the_simulated_reduction() {
+    // top-k 25% + error feedback on 4 workers: replicas stay in sync (the
+    // merged update is still broadcast), the privacy plan is ratio-
+    // invariant, describe() surfaces the compressor, and the simulated
+    // reduction beats the dense run's on every step
+    let data = tiny_mixture(512, 18);
+    let build = |compress: bool| {
+        let mut b = Session::builder(rt(), "resmlp_tiny")
+            .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.0 })
+            .clip(ClipPolicy {
+                clip_init: 1.0,
+                ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed)
+            })
+            .optim(OptimSpec::sgd(0.1))
+            .epochs(0.5)
+            .seed(8)
+            .shard(ShardSpec { workers: 4, fanout: 2, ..Default::default() });
+        if compress {
+            b = b.compress(CompressSpec {
+                kind: CompressKind::TopK,
+                ratio: 0.25,
+                error_feedback: true,
+            });
+        }
+        b.build(data.len()).unwrap()
+    };
+    let mut dense = build(false);
+    let mut comp = build(true);
+    assert_eq!(
+        dense.plan().unwrap().sigma_grad,
+        comp.plan().unwrap().sigma_grad,
+        "compression is post-processing: the plan must not move"
+    );
+    let d = comp.describe();
+    assert!(d.contains("compress=topk:0.250+ef"), "{d}");
+    for step in 0..dense.total_steps.min(3) {
+        let a = dense.step(&data).unwrap();
+        let b = comp.step(&data).unwrap();
+        assert!(b.loss.is_finite());
+        // the same global draw feeds both runs (compressor RNG is
+        // separate), so the batches coincide
+        assert_eq!(a.batch_size, b.batch_size, "step {step}");
+        // apples-to-apples: the engine reports what the SAME timings
+        // would have cost dense — the compressed makespan must beat it
+        let (dense_ov, dense_ba) =
+            comp.shard_engine().unwrap().last_dense_sims().expect("compressed step ran");
+        assert!(
+            b.sim_overlap_secs < dense_ov,
+            "step {step}: compressed overlap {} must beat dense {dense_ov}",
+            b.sim_overlap_secs
+        );
+        assert!(b.sim_barrier_secs < dense_ba, "step {step}");
+    }
+    assert!(comp.shard_engine().unwrap().replicas_in_sync());
+}
+
+#[test]
+fn compression_works_identically_under_hybrid_spelling() {
+    // the seam is shared: a [compress] section on the hybrid backend runs
+    // the same sparsifier per replica; smoke the 2-replica staged case
+    let cfg = rt().manifest.config("lm_mid_pipe_lora").unwrap().clone();
+    let data = MarkovCorpus::new(128, cfg.hyper.seq, cfg.hyper.vocab, 4, 21);
+    let mut sess = Session::builder(rt(), "lm_mid_pipe_lora")
+        .privacy(PrivacySpec { epsilon: 2.0, delta: 1e-5, quantile_r: 0.0 })
+        .clip(ClipPolicy { clip_init: 1e-2, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed) })
+        .optim(OptimSpec::adam(1e-3))
+        .n_micro(2)
+        .steps(2)
+        .seed(21)
+        .hybrid(HybridSpec { replicas: 2, fanout: 2, ..Default::default() })
+        .compress(CompressSpec { kind: CompressKind::RandK, ratio: 0.5, error_feedback: true })
+        .build(data.len())
+        .unwrap();
+    let d = sess.describe();
+    assert!(d.contains("compress=randk:0.500+ef"), "{d}");
+    let ev = sess.step(&data).unwrap();
+    assert!(ev.loss.is_finite());
+    assert!(ev.sim_overlap_secs > 0.0 && ev.sim_barrier_secs >= ev.sim_overlap_secs);
+    assert!(sess.hybrid_engine().unwrap().replicas_in_sync());
+}
+
+#[test]
+fn describe_prints_one_plan_block_on_every_backend() {
+    // satellite: all four backends print the same plan-composition block
+    // (q, sigma, releases over plan.steps) followed by their topology
+    let single = Session::builder(rt(), "resmlp_tiny")
+        .privacy(PrivacySpec { epsilon: 3.0, delta: 1e-5, quantile_r: 0.01 })
+        .epochs(0.5)
+        .build(64)
+        .unwrap();
+    let pipe = Session::builder(rt(), "lm_mid_pipe_lora")
+        .privacy(PrivacySpec { epsilon: 2.0, delta: 1e-5, quantile_r: 0.0 })
+        .clip(ClipPolicy { clip_init: 1e-2, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed) })
+        .steps(2)
+        .build(64)
+        .unwrap();
+    let shard = Session::builder(rt(), "resmlp_tiny")
+        .privacy(PrivacySpec { epsilon: 3.0, delta: 1e-5, quantile_r: 0.0 })
+        .clip(ClipPolicy { clip_init: 1.0, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed) })
+        .epochs(0.5)
+        .shard(ShardSpec::with_workers(2))
+        .build(64)
+        .unwrap();
+    let hybrid = Session::builder(rt(), "lm_mid_pipe_lora")
+        .privacy(PrivacySpec { epsilon: 2.0, delta: 1e-5, quantile_r: 0.0 })
+        .clip(ClipPolicy { clip_init: 1e-2, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed) })
+        .steps(2)
+        .hybrid(HybridSpec::with_replicas(2))
+        .build(64)
+        .unwrap();
+    for sess in [&single, &pipe, &shard, &hybrid] {
+        let d = sess.describe();
+        let p = sess.plan().unwrap();
+        // the SAME composition block, derived from the plan, on all four
+        assert!(d.contains(&format!("over {} releases", p.steps)), "{d}");
+        assert!(d.contains("q="), "{d}");
+        assert!(d.contains("sigma="), "{d}");
+    }
+    // per-backend topology suffixes
+    assert!(pipe.describe().contains("stages=4"), "{}", pipe.describe());
+    assert!(pipe.describe().contains("thresholds=["), "{}", pipe.describe());
+    assert!(shard.describe().contains("workers=2"), "{}", shard.describe());
+    assert!(hybrid.describe().contains("replicas=2"), "{}", hybrid.describe());
 }
 
 #[test]

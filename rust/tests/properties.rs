@@ -349,73 +349,6 @@ fn prop_bleu_rouge_bounded_and_identity() {
 /// arbitrary other examples at weight 0 must produce bit-identical
 /// parameters on every stage. Gated on the AOT artifacts; skips (with a
 /// note) when they are absent so the artifact-free suite stays green.
-#[test]
-fn prop_masked_pipeline_step_ignores_pad_content() {
-    use gwclip::data::lm::MarkovCorpus;
-    use gwclip::runtime::Runtime;
-    use gwclip::session::{ClipMode, ClipPolicy, GroupBy, OptimSpec, PrivacySpec, Session};
-
-    let dir = std::env::var("GWCLIP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let rt = match Runtime::new(&dir) {
-        Ok(rt) => rt,
-        Err(_) => {
-            eprintln!("[skip] prop_masked_pipeline_step_ignores_pad_content: no artifacts in {dir}");
-            return;
-        }
-    };
-    let cfg = rt.manifest.config("lm_mid_pipe_lora").unwrap().clone();
-    let data = MarkovCorpus::new(64, cfg.hyper.seq, cfg.hyper.vocab, 4, 9);
-
-    for seed in 0..3u64 {
-        // two identically-built sessions (accountant-derived sigma); the
-        // engines are then driven directly through step_weighted to pin
-        // the pad-content invariance of a masked step
-        let build = || {
-            Session::builder(&rt, "lm_mid_pipe_lora")
-                .privacy(PrivacySpec { epsilon: 2.0, delta: 1e-5, quantile_r: 0.0 })
-                .clip(ClipPolicy {
-                    clip_init: 1e-2,
-                    ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed)
-                })
-                .optim(OptimSpec::adam(1e-3))
-                .n_micro(2)
-                .steps(4)
-                .seed(seed)
-                .build(data.len())
-                .unwrap()
-        };
-        let mut sa = build();
-        let mut sb = build();
-        let a = sa.engine_mut().unwrap();
-        let b = sb.engine_mut().unwrap();
-        let mb = a.minibatch();
-        let live = mb - 1 - (seed as usize % (mb - 1)); // at least one pad slot
-        let mut weights = vec![0f32; mb];
-        for w in weights.iter_mut().take(live) {
-            *w = 1.0;
-        }
-        // canonical padding (what sample_padded emits) vs adversarial pad
-        // content: same live prefix, different masked suffix
-        let mut idx_canon: Vec<usize> = (0..live).map(|i| (7 * i + 1) % data.len()).collect();
-        let mut idx_junk = idx_canon.clone();
-        idx_canon.resize(mb, 0);
-        for i in live..mb {
-            idx_junk.push((13 * i + 5) % data.len());
-        }
-        let ra = a.step_weighted(&data, &idx_canon, &weights).unwrap();
-        let rb = b.step_weighted(&data, &idx_junk, &weights).unwrap();
-        assert!((ra.loss - rb.loss).abs() < 1e-9, "seed {seed}: loss {} vs {}", ra.loss, rb.loss);
-        let pa = a.dump_params();
-        let pb = b.dump_params();
-        assert_eq!(pa.len(), pb.len());
-        for (name, ta) in &pa {
-            let tb = &pb[name];
-            assert_eq!(ta.shape, tb.shape, "seed {seed}: {name}");
-            assert_eq!(ta.data, tb.data, "seed {seed}: {name} diverged under pad content");
-        }
-    }
-}
-
 // ------------------------------------------------- sharded data-parallel
 
 /// The sharded backend's sampler contract: with one worker it is the
@@ -718,4 +651,120 @@ fn prop_polar_gauss_tail_behaviour() {
     let p2 = over2 as f64 / n as f64; // expect 0.0455
     assert!((p1 - 0.3173).abs() < 0.01, "P(|g|>1) = {p1}");
     assert!((p2 - 0.0455).abs() < 0.005, "P(|g|>2) = {p2}");
+}
+
+// --------------------------------------------------------- compression
+
+#[test]
+fn prop_compress_full_ratio_is_bitwise_identity_through_tree_reduce() {
+    // k = 100%: for random worker gradient sets, the compressed reduction
+    // must be bit-identical to the dense one (the compressor never
+    // touches a tensor at ratio 1.0, and tree_reduce is deterministic)
+    use gwclip::runtime::Tensor;
+    use gwclip::shard::{tree_reduce, CompressKind, Compressor};
+    let mut r = Xoshiro::seeded(31);
+    for trial in 0..10 {
+        let workers = 2 + r.below(5);
+        let lens = [1 + r.below(9), 1 + r.below(17)];
+        let mk = |r: &mut Xoshiro| -> Vec<Tensor> {
+            lens.iter()
+                .map(|&n| {
+                    Tensor::from_vec(
+                        &[n],
+                        (0..n).map(|_| (r.uniform() - 0.5) as f32).collect(),
+                    )
+                    .unwrap()
+                })
+                .collect()
+        };
+        let parts: Vec<Vec<Tensor>> = (0..workers).map(|_| mk(&mut r)).collect();
+        let mut compressed = parts.clone();
+        let mut c = Compressor::new(CompressKind::TopK, 1.0, true, workers, trial as u64);
+        for (w, p) in compressed.iter_mut().enumerate() {
+            c.compress_unit(w, p);
+            for (a, b) in p.iter().zip(&parts[w]) {
+                assert_eq!(a.data, b.data, "trial {trial}: ratio 1.0 modified a tensor");
+            }
+        }
+        let dense = tree_reduce(parts, 2);
+        let comp = tree_reduce(compressed, 2);
+        for (a, b) in dense.iter().zip(&comp) {
+            assert_eq!(a.data, b.data, "trial {trial}: reductions diverged");
+        }
+    }
+}
+
+#[test]
+fn prop_compress_error_feedback_residuals_sum_to_the_uncompressed_gradient() {
+    // over T steps of constant-rate sparsification, the cumulative sent
+    // mass plus the final residual must equal the cumulative input mass:
+    // error feedback loses nothing, it only delays. Per step the exact
+    // invariant sent + residual == input + previous residual holds
+    // bitwise (kept/dropped partition the corrected vector).
+    use gwclip::runtime::Tensor;
+    use gwclip::shard::{CompressKind, Compressor};
+    let mut r = Xoshiro::seeded(77);
+    for kind in [CompressKind::TopK, CompressKind::RandK] {
+        for ratio in [0.1f64, 0.34, 0.75] {
+            let n = 24usize;
+            let mut c = Compressor::new(kind, ratio, true, 1, 5);
+            let mut sum_inputs = vec![0f64; n];
+            let mut sum_sent = vec![0f64; n];
+            let mut prev_res = vec![0f32; n];
+            for step in 0..12 {
+                let input: Vec<f32> =
+                    (0..n).map(|_| (r.uniform() - 0.5) as f32).collect();
+                let mut x = vec![Tensor::from_vec(&[n], input.clone()).unwrap()];
+                c.compress_unit(0, &mut x);
+                let res = &c.residual(0)[0].data;
+                let kept = x[0].data.iter().filter(|&&v| v != 0.0).count();
+                assert!(
+                    kept <= c.keep(n),
+                    "{kind:?} ratio {ratio}: kept {kept} > k {}",
+                    c.keep(n)
+                );
+                for i in 0..n {
+                    // exact per-step conservation (f32 add is the only op)
+                    assert_eq!(
+                        x[0].data[i] + res[i],
+                        input[i] + prev_res[i],
+                        "step {step} slot {i}: sent+res != input+prev_res"
+                    );
+                    sum_inputs[i] += input[i] as f64;
+                    sum_sent[i] += x[0].data[i] as f64;
+                }
+                prev_res = res.clone();
+            }
+            for i in 0..n {
+                let delivered = sum_sent[i] + prev_res[i] as f64;
+                assert!(
+                    (delivered - sum_inputs[i]).abs() < 1e-4,
+                    "{kind:?} ratio {ratio} slot {i}: delivered {delivered} vs input {}",
+                    sum_inputs[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_compress_ratio_shrinks_reduction_cost_monotonically() {
+    // the sim-side claim behind `gwclip exp compress-scaling`: for any
+    // worker count with at least one tree round, the per-layer reduction
+    // cost is strictly monotone in the payload ratio
+    use gwclip::shard::ReduceModel;
+    let mut r = Xoshiro::seeded(9);
+    for _ in 0..50 {
+        let workers = 2 + r.below(15);
+        let fanout = 2 + r.below(3);
+        let m = ReduceModel::new(workers, fanout, 1e-4 * (1.0 + r.uniform()));
+        let bytes = 4.0 * (1.0 + r.uniform() * 1e7);
+        let dense = m.layer_cost(bytes);
+        let mut last = dense;
+        for ratio in [0.75, 0.5, 0.25, 0.1] {
+            let cost = m.layer_cost(bytes * ratio);
+            assert!(cost < last, "N={workers} f={fanout}: {cost} !< {last}");
+            last = cost;
+        }
+    }
 }

@@ -6,8 +6,8 @@ use gwclip::coordinator::noise::Allocation;
 use gwclip::coordinator::trainer::Method;
 use gwclip::pipeline::PipelineMode;
 use gwclip::session::{
-    ClipMode, ClipPolicy, DataSpec, GroupBy, HybridGrouping, HybridSpec, OptimSpec, PipeSpec,
-    PrivacySpec, RunSpec, Sampling, ShardGrouping, ShardSpec,
+    ClipMode, ClipPolicy, CompressKind, CompressSpec, DataSpec, GroupBy, HybridGrouping,
+    HybridSpec, OptimSpec, PipeSpec, PrivacySpec, RunSpec, Sampling, ShardGrouping, ShardSpec,
 };
 use gwclip::util::json::Json;
 
@@ -442,4 +442,105 @@ fn clip_policy_unifies_method_and_pipeline_mode() {
         let p = ClipPolicy::from_pipeline_mode(mode, adaptive);
         assert_eq!(p.pipeline_mode().unwrap(), mode);
     }
+}
+
+// ---------------------------------------------------------------- compress
+
+#[test]
+fn compress_spec_roundtrips_json_and_toml() {
+    let mut spec = RunSpec::for_config("resmlp");
+    spec.clip = ClipPolicy { clip_init: 1.0, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed) };
+    spec.privacy = PrivacySpec { epsilon: 3.0, delta: 1e-5, quantile_r: 0.0 };
+    spec.shard = Some(ShardSpec::with_workers(4));
+    spec.compress = Some(CompressSpec {
+        kind: CompressKind::RandK,
+        ratio: 0.125,
+        error_feedback: false,
+    });
+    let back = roundtrip(&spec);
+    assert_eq!(spec, back);
+
+    let doc = r#"
+config = "resmlp"
+epochs = 1.0
+
+[privacy]
+epsilon = 3.0
+quantile_r = 0.0
+
+[clip]
+group_by = "per-device"
+mode = "fixed"
+
+[shard]
+workers = 4
+
+[compress]
+kind = "topk"
+ratio = 0.25
+error_feedback = true
+"#;
+    let parsed = RunSpec::parse(doc).unwrap();
+    let c = parsed.compress.expect("[compress] section parsed");
+    assert_eq!(c.kind, CompressKind::TopK);
+    assert_eq!(c.ratio, 0.25);
+    assert!(c.error_feedback);
+    // defaults: omitted keys land on topk 25% with error feedback
+    let d = CompressSpec::default();
+    assert_eq!(d.kind, CompressKind::TopK);
+    assert_eq!(d.ratio, 0.25);
+    assert!(d.error_feedback);
+}
+
+#[test]
+fn compress_kind_tokens_roundtrip() {
+    for k in [CompressKind::TopK, CompressKind::RandK] {
+        assert_eq!(k.token().parse::<CompressKind>().unwrap(), k);
+    }
+    for (alias, want) in [
+        ("top-k", CompressKind::TopK),
+        ("top_k", CompressKind::TopK),
+        ("rand-k", CompressKind::RandK),
+        ("randomk", CompressKind::RandK),
+    ] {
+        assert_eq!(alias.parse::<CompressKind>().unwrap(), want, "alias {alias}");
+    }
+    assert!("gzip".parse::<CompressKind>().is_err());
+}
+
+#[test]
+fn compress_validation_rejects_each_nonsense_class() {
+    let base = || {
+        let mut s = RunSpec::for_config("resmlp");
+        s.clip =
+            ClipPolicy { clip_init: 1.0, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed) };
+        s.privacy = PrivacySpec { epsilon: 3.0, delta: 1e-5, quantile_r: 0.0 };
+        s.shard = Some(ShardSpec::with_workers(2));
+        s.compress = Some(CompressSpec::default());
+        s
+    };
+    base().validate().unwrap();
+    // ratio outside (0, 1]
+    let mut s = base();
+    s.compress = Some(CompressSpec { ratio: 0.0, ..CompressSpec::default() });
+    assert!(s.validate().is_err(), "ratio 0");
+    let mut s = base();
+    s.compress = Some(CompressSpec { ratio: 1.5, ..CompressSpec::default() });
+    assert!(s.validate().is_err(), "ratio > 1");
+    let mut s = base();
+    s.compress = Some(CompressSpec { ratio: -0.1, ..CompressSpec::default() });
+    assert!(s.validate().is_err(), "negative ratio");
+    // compression needs a reduction path: no [shard]/[hybrid] -> reject
+    let mut s = base();
+    s.shard = None;
+    let err = s.validate().unwrap_err().to_string();
+    assert!(err.contains("[shard]") || err.contains("[hybrid]"), "{err}");
+    // ...but a [hybrid] section satisfies it
+    let mut s = base();
+    s.shard = None;
+    s.hybrid = Some(HybridSpec::with_replicas(2));
+    s.validate().unwrap();
+    // unknown kind token rejected at parse time
+    let doc = "config = \"resmlp\"\nepochs = 1.0\n\n[shard]\nworkers = 2\n\n[compress]\nkind = \"gzip\"\n";
+    assert!(RunSpec::parse(doc).is_err());
 }
