@@ -1,0 +1,83 @@
+//! Bench: federated user-level step latency across cohort shapes — the
+//! degenerate fused path (1-example users, the sharded-parity regime)
+//! against the general per-user path (multi-example users, multiple
+//! local steps), plus per-user vs flat threshold grouping. Each step
+//! reports both the overlapped-reduction and barrier simulated
+//! aggregation makespans. Writes BENCH_federated.json.
+//!
+//!     cargo bench --bench federated
+
+use gwclip::data::lm::MarkovCorpus;
+use gwclip::data::Dataset;
+use gwclip::runtime::Runtime;
+use gwclip::session::{
+    ClipMode, ClipPolicy, ExamplesDist, FederatedSpec, GroupBy, OptimSpec, PrivacySpec, Session,
+};
+use gwclip::util::bench::{bench, iters, smoke_skip, write_json, BenchResult};
+
+fn main() -> anyhow::Result<()> {
+    let rt = match Runtime::new(gwclip::artifact_dir()) {
+        Ok(rt) => rt,
+        Err(e) => return smoke_skip("federated", e),
+    };
+    let cfg = rt.manifest.config("lm_tiny")?.clone();
+    let lm = MarkovCorpus::new(512, cfg.hyper.seq, cfg.hyper.vocab, 4, 0);
+    let mut rows = Vec::new();
+    let mut failed = false;
+
+    println!("== federated user-level DP on lm_tiny ==");
+    // (tag, population, E[U], examples/user, dist, local_steps, group_by)
+    let shapes: &[(&str, usize, usize, usize, ExamplesDist, usize, GroupBy)] = &[
+        // degenerate fused path: users ARE examples (the parity regime)
+        ("fused-peruser", lm.len(), 20, 1, ExamplesDist::Fixed, 1, GroupBy::PerDevice),
+        // general path: heterogeneous users (1-3 examples, within the
+        // compiled batch of 4), local work before transmit
+        ("general-peruser", 10_000, 16, 2, ExamplesDist::Uniform, 2, GroupBy::PerDevice),
+        // flat threshold over the same general cohort
+        ("general-flat", 10_000, 16, 2, ExamplesDist::Uniform, 2, GroupBy::Flat),
+    ];
+    for &(tag, population, expected, e_per_u, dist, local_steps, group_by) in shapes {
+        let fed = FederatedSpec {
+            examples_per_user: e_per_u,
+            examples_dist: dist,
+            local_steps,
+            ..FederatedSpec::with_population(population, expected as f64 / population as f64)
+        };
+        let mut sess = Session::builder(&rt, "lm_tiny")
+            .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.0 })
+            .clip(ClipPolicy { clip_init: 0.5, ..ClipPolicy::new(group_by, ClipMode::Fixed) })
+            .optim(OptimSpec::sgd(0.25))
+            .epochs(100.0) // plenty of scheduled steps for the bench loop
+            .seed(3)
+            .federated(fed)
+            .build(lm.len())?;
+        // acceptance: the plan and the event stream must both read at the
+        // user level — the whole point of the backend
+        if !sess.describe().contains("user-level") {
+            failed = true;
+            println!("FAIL [{tag}]: describe() does not report user-level accounting");
+        }
+        let (mut ov, mut ba, mut n) = (0.0, 0.0, 0usize);
+        let r = bench(&format!("federated/{tag}/step"), 1, iters(4), || {
+            let st = sess.step(&lm).unwrap();
+            if st.unit != "user" {
+                panic!("step event unit = {:?}, expected \"user\"", st.unit);
+            }
+            ov += st.sim_overlap_secs;
+            ba += st.sim_barrier_secs;
+            n += 1;
+        });
+        let (ov, ba) = (ov / n as f64, ba / n as f64);
+        println!("{}   sim overlap {:.4}s barrier {:.4}s", r.report(), ov, ba);
+        rows.push(r);
+        rows.push(BenchResult::scalar(&format!("federated/{tag}/sim-overlap"), ov));
+        rows.push(BenchResult::scalar(&format!("federated/{tag}/sim-barrier"), ba));
+    }
+
+    let path = write_json("federated", &rows)?;
+    println!("wrote {}", path.display());
+    if failed {
+        anyhow::bail!("federated bench acceptance failed (user-level accounting not reported)");
+    }
+    Ok(())
+}

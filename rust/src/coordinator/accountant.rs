@@ -112,6 +112,34 @@ pub fn sigma_b_for_fraction(sigma: f64, r: f64, k_groups: usize) -> f64 {
     ((k_groups as f64) * sigma * sigma / (4.0 * r)).sqrt()
 }
 
+/// The unit of privacy the (epsilon, delta) guarantee protects.
+///
+/// Every release composed by the accountant is one Poisson-subsampled
+/// Gaussian at rate `q`; the formula does not care whether the subsampled
+/// record is an *example* or a *user's entire contribution*. What changes
+/// is the neighbouring relation: under [`PrivacyUnit::User`] the clipped
+/// quantity is the full per-user model delta, so adding or removing one
+/// user (all of their examples at once) moves the aggregate by at most C,
+/// and `q = E[U]/population` is a *user* sampling rate. The plan records
+/// which reading applies so `describe()` and step events can report the
+/// guarantee honestly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrivacyUnit {
+    /// add/remove one training example (DP-SGD style)
+    Example,
+    /// add/remove one user and every example they contribute (DP-FedAvg style)
+    User,
+}
+
+impl PrivacyUnit {
+    pub fn token(&self) -> &'static str {
+        match self {
+            PrivacyUnit::Example => "example",
+            PrivacyUnit::User => "user",
+        }
+    }
+}
+
 /// Everything the trainer needs, bundled.
 #[derive(Debug, Clone, Copy)]
 pub struct PrivacyPlan {
@@ -119,6 +147,8 @@ pub struct PrivacyPlan {
     pub delta: f64,
     pub q: f64,
     pub steps: u64,
+    /// what one subsampled record is: an example or a whole user
+    pub unit: PrivacyUnit,
     /// multiplier if all budget went to gradients
     pub sigma_base: f64,
     /// multiplier actually applied to gradients (after Prop 3.1 split)
@@ -145,6 +175,7 @@ pub fn plan(
             delta,
             q,
             steps,
+            unit: PrivacyUnit::Example,
             sigma_base,
             sigma_grad: sigma_base,
             sigma_quantile: 0.0,
@@ -157,10 +188,24 @@ pub fn plan(
         delta,
         q,
         steps,
+        unit: PrivacyUnit::Example,
         sigma_base,
         sigma_grad: sigma_new(sigma_base, sigma_b, k_groups),
         sigma_quantile: sigma_b,
         quantile_fraction: r,
+    }
+}
+
+impl PrivacyPlan {
+    /// Re-read the same calibrated plan as a user-level guarantee. The
+    /// multipliers are untouched — the subsampled-Gaussian composition is
+    /// identical — only the neighbouring relation recorded for reporting
+    /// changes, which is exactly the DP-FedAvg argument: clip the per-user
+    /// delta to C, noise with the same sigma, and (epsilon, delta) holds at
+    /// q = E[U]/population with *user* in place of *example*.
+    pub fn at_user_level(mut self) -> Self {
+        self.unit = PrivacyUnit::User;
+        self
     }
 }
 

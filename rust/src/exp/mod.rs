@@ -2,6 +2,7 @@
 //! `gwclip exp <name>` writes results/<name>.md (+ CSV series where the
 //! paper plots curves).
 
+pub mod fedexp;
 pub mod figures;
 pub mod genexp;
 pub mod harness;
@@ -18,7 +19,7 @@ use harness::Scale;
 
 /// Dispatch an experiment by name ("table1".."table11", "fig1".."fig7",
 /// "pipeline-overhead", "accountant", "shard-scaling", "compress-scaling",
-/// "hybrid-scaling", or "all").
+/// "hybrid-scaling", "user-vs-example", or "all").
 pub fn run(rt: &Runtime, which: &str, paper_scale: bool) -> Result<()> {
     let scale = if paper_scale { Scale::paper() } else { Scale::quick() };
     std::fs::create_dir_all("results")?;
@@ -42,11 +43,13 @@ pub fn run(rt: &Runtime, which: &str, paper_scale: bool) -> Result<()> {
         "shard-scaling" => shardexp::shard_scaling(rt, scale),
         "compress-scaling" => shardexp::compress_scaling(rt, scale),
         "hybrid-scaling" => hybridexp::hybrid_scaling(rt, scale),
+        "user-vs-example" => fedexp::user_vs_example(rt, scale),
         "all" => {
             for name in [
                 "accountant", "fig1", "pipeline-overhead", "shard-scaling", "compress-scaling",
-                "hybrid-scaling", "table1", "table2", "fig3", "fig2", "table6", "table5",
-                "table11", "table3", "table4", "table10", "fig5", "fig6", "fig7",
+                "hybrid-scaling", "user-vs-example", "table1", "table2", "fig3", "fig2",
+                "table6", "table5", "table11", "table3", "table4", "table10", "fig5", "fig6",
+                "fig7",
             ] {
                 eprintln!("==== exp {name} ====");
                 run(rt, name, paper_scale)?;

@@ -1,0 +1,672 @@
+//! `FederatedEngine` — user-level DP training over a simulated population:
+//! Poisson-sample users, run each sampled user's local update against the
+//! current checkpoint, clip the full per-user model delta, and aggregate
+//! on the tree-reduction seam.
+//!
+//! The dealt unit is the **user**: one global Poisson draw at rate
+//! `q = E[U]/population` over user ids (the same [`ShardSampler`]
+//! machinery the sharded backend deals examples with), dealt round-robin
+//! across `slots` aggregation slots. Each slot holds a full model replica
+//! and processes its users in deal order, so walking the slot-major
+//! [`GradUnit`] layout visits users in user-major order — the
+//! layout-encodes-order invariant the shared
+//! [`StepLoop`](crate::session::StepLoop) noise phase relies on. Each
+//! slot's unit adds the local noise share `sigma_g/sqrt(slots)`; the
+//! merged sum therefore carries exactly the accountant's per-group std,
+//! for every realized cohort size U_t.
+//!
+//! Per-user clipping is group-wise clipping in the paper's sense with
+//! groups = users: adding or removing one user (every example they
+//! contribute, over every local step) moves the aggregate by at most the
+//! threshold C, so the accountant's subsampled-Gaussian composition reads
+//! at the user level ([`PrivacyUnit::User`]).
+//!
+//! Two collection paths share one contract:
+//!
+//! * **fused** (every user contributes exactly one example and takes one
+//!   local step): a user's delta IS its example's gradient, so each slot
+//!   runs the same fused backprop+clip executable as the sharded backend
+//!   over its users' examples. With `population == n_data` and the
+//!   identity user partition this is *bitwise* the example-level sharded
+//!   step — the degenerate-parity pin in `tests/integration.rs`.
+//! * **general** (`examples_per_user > 1`, heterogeneous cohorts, or
+//!   `local_steps > 1`): each sampled user runs `local_steps` full-batch
+//!   gradient steps over its own examples on a scratch copy of the
+//!   checkpoint (plain SGD at the base lr), accumulates the per-step
+//!   gradient sums into one per-user delta, and the engine clips that
+//!   delta's global L2 norm against the user's threshold group before
+//!   summing it into the slot's unit. The unclipped gradients come from
+//!   the same fused executable called with an effectively infinite
+//!   threshold (the per-example clip factors saturate at 1), so the two
+//!   paths cannot drift in kernel semantics.
+//!
+//! All DP state lives in the session's shared `StepLoop`; this engine
+//! implements the [`BackendStep`] hooks only and touches no
+//! RNG/noise/quantile/accountant state.
+//!
+//! [`PrivacyUnit::User`]: crate::coordinator::accountant::PrivacyUnit
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::noise::Rng;
+use crate::coordinator::optimizer::{Optimizer, OptimizerKind};
+use crate::data::Dataset;
+use crate::runtime::{ConfigManifest, Exec, HostValue, Runtime, Tensor};
+use crate::session::core::DpCore;
+use crate::session::grad::{Collected, GradUnit, Merged, StepTiming};
+use crate::session::steploop::BackendStep;
+use crate::shard::reduce::{tree_reduce, ReduceModel};
+use crate::shard::sampler::{ShardBatch, ShardSampler};
+
+/// Stand-in for an unbounded clipping threshold on the fused executable:
+/// per-example clip factors `min(1, thr/norm)` saturate at 1, so the
+/// entry returns the *raw* weighted gradient sum the general path clips
+/// per user on the host. Finite (not `f32::MAX`) so the kernel's
+/// `thr/norm` division stays well-behaved.
+const NO_CLIP: f32 = 1e30;
+
+/// How clipping-threshold groups map onto the sampled cohort (resolved
+/// from `FederatedSpec.grouping` x `ClipPolicy.group_by` by the session
+/// builder).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CohortGrouping {
+    /// one global threshold shared by every user's delta (K = 1)
+    Flat,
+    /// per-user adaptive thresholds, factorized over the aggregation
+    /// slots: slot k owns threshold C_k and clips the deltas of the users
+    /// dealt to it (K = slots) — the per-device taxonomy cell with users
+    /// as the clipped records
+    PerUser,
+}
+
+impl CohortGrouping {
+    pub fn token(&self) -> &'static str {
+        match self {
+            CohortGrouping::Flat => "flat",
+            CohortGrouping::PerUser => "per-user",
+        }
+    }
+}
+
+/// Backend wiring computed by the session builder (crate-internal: the
+/// federated backend has no public constructor surface).
+pub(crate) struct FederatedWiring {
+    /// aggregation slots (one model replica each; the cohort is dealt
+    /// round-robin across them)
+    pub slots: usize,
+    pub fanout: usize,
+    pub overlap: bool,
+    pub link_latency: f64,
+    pub grouping: CohortGrouping,
+    /// user sampling rate q = E[U]/population of the one global draw
+    pub rate: f64,
+    /// expected sampled cohort size E[U] (normalizes the merged update)
+    pub expected_users: usize,
+    pub total_steps: u64,
+    /// simulated user population (the accountant's denominator)
+    pub population: usize,
+    /// local update steps each sampled user takes before transmitting
+    pub local_steps: usize,
+    /// user id -> the dataset indices that user contributes
+    pub partition: Vec<Vec<usize>>,
+    pub optimizer: OptimizerKind,
+    pub lr: f64,
+    pub weight_decay: f64,
+    pub lr_decay: bool,
+}
+
+struct Replica {
+    params: Vec<Tensor>,
+    optimizer: Optimizer,
+}
+
+pub struct FederatedEngine<'r> {
+    pub runtime: &'r Runtime,
+    pub config_name: String,
+    pub cfg: ConfigManifest,
+    pub slots: usize,
+    pub fanout: usize,
+    pub overlap: bool,
+    pub total_steps: u64,
+    pub population: usize,
+    pub local_steps: usize,
+    grouping: CohortGrouping,
+    exec: Arc<Exec>,
+    eval_exec: Arc<Exec>,
+    replicas: Vec<Replica>,
+    sampler: ShardSampler,
+    expected_users: f64,
+    lr: f64,
+    trainable_idx: Vec<usize>,
+    group_of_trainable: Vec<usize>,
+    reduce_model: ReduceModel,
+    partition: Vec<Vec<usize>>,
+    /// every user contributes exactly one example and takes one local
+    /// step: collection runs the sharded backend's fused per-example path
+    fused: bool,
+    /// live user counts of the most recent collect, per slot (clip_frac
+    /// denominators for per-user grouping read them)
+    slot_lives: Vec<usize>,
+}
+
+impl<'r> FederatedEngine<'r> {
+    /// Crate-private constructor: all DP state lives in the session's
+    /// `StepLoop` (`core` is borrowed to validate the group-count
+    /// contract), all schedule/topology decisions in `wiring`. Only
+    /// `session::SessionBuilder` builds these.
+    pub(crate) fn with_core(
+        runtime: &'r Runtime,
+        config_name: &str,
+        w: FederatedWiring,
+        core: &DpCore,
+    ) -> Result<Self> {
+        let cfg = runtime.manifest.config(config_name)?.clone();
+        if cfg.stages.is_some() {
+            return Err(anyhow!(
+                "config {config_name} has pipeline stages; the federated backend replicates \
+                 a stage-less model"
+            ));
+        }
+        if w.slots == 0 {
+            return Err(anyhow!("federated backend needs at least one aggregation slot"));
+        }
+        if w.partition.len() != w.population {
+            return Err(anyhow!(
+                "user partition covers {} users but the population is {}",
+                w.partition.len(),
+                w.population
+            ));
+        }
+        for (u, block) in w.partition.iter().enumerate() {
+            if block.is_empty() {
+                return Err(anyhow!("user {u} contributes no examples"));
+            }
+            if block.len() > cfg.batch {
+                return Err(anyhow!(
+                    "user {u} contributes {} examples but the compiled batch holds {}",
+                    block.len(),
+                    cfg.batch
+                ));
+            }
+        }
+        let expect_k = match w.grouping {
+            CohortGrouping::Flat => 1,
+            CohortGrouping::PerUser => w.slots,
+        };
+        if core.k() != expect_k {
+            return Err(anyhow!(
+                "DpCore has {} threshold groups but {} grouping over {} slots needs {}",
+                core.k(),
+                w.grouping.token(),
+                w.slots,
+                expect_k
+            ));
+        }
+        // the fused flat entry serves both paths: per-example clipping for
+        // single-example single-step users, raw gradient sums (threshold
+        // NO_CLIP) for the host-side per-user delta clip
+        let exec = runtime.load(config_name, "dp_flat")?;
+        let eval_exec = runtime.load(config_name, "eval")?;
+
+        let (trainable_idx, group_of_trainable, schedule) =
+            crate::coordinator::trainer::replica_wiring(&cfg, w.lr, w.lr_decay, w.total_steps);
+        let replicas: Vec<Replica> = runtime
+            .init_replicas(config_name, w.slots)?
+            .into_iter()
+            .map(|params| {
+                let tr: Vec<Tensor> = trainable_idx.iter().map(|&i| params[i].clone()).collect();
+                Replica {
+                    optimizer: Optimizer::new(w.optimizer, schedule, w.weight_decay, &tr),
+                    params,
+                }
+            })
+            .collect();
+        let fused = w.local_steps == 1 && w.partition.iter().all(|b| b.len() == 1);
+        Ok(FederatedEngine {
+            runtime,
+            config_name: config_name.to_string(),
+            slots: w.slots,
+            fanout: w.fanout,
+            overlap: w.overlap,
+            total_steps: w.total_steps,
+            population: w.population,
+            local_steps: w.local_steps,
+            grouping: w.grouping,
+            exec,
+            eval_exec,
+            replicas,
+            // users are the dealt unit: one global Poisson draw over user
+            // ids at rate q, dealt round-robin across the slots with the
+            // same padded fixed-capacity convention as example dealing
+            sampler: ShardSampler::new(w.population, w.rate, w.slots, cfg.batch),
+            expected_users: w.expected_users as f64,
+            lr: w.lr,
+            trainable_idx,
+            group_of_trainable,
+            reduce_model: ReduceModel::new(w.slots, w.fanout, w.link_latency),
+            partition: w.partition,
+            fused,
+            slot_lives: vec![0; w.slots],
+            cfg,
+        })
+    }
+
+    pub fn grouping(&self) -> CohortGrouping {
+        self.grouping
+    }
+
+    /// True when collection takes the fused per-example path (every user
+    /// = one example, one local step) — the degenerate-parity regime.
+    pub fn is_fused(&self) -> bool {
+        self.fused
+    }
+
+    /// Static cohort capacity: slots x the per-slot compiled batch.
+    pub fn capacity(&self) -> usize {
+        self.slots * self.cfg.batch
+    }
+
+    /// Threshold-group labels (one per slot for per-user grouping).
+    pub fn group_labels(&self) -> Vec<String> {
+        match self.grouping {
+            CohortGrouping::Flat => vec!["users".to_string()],
+            CohortGrouping::PerUser => (0..self.slots).map(|s| format!("users@slot{s}")).collect(),
+        }
+    }
+
+    /// Slot-0's full-model parameters in manifest order (all replicas
+    /// stay bit-identical; see [`FederatedEngine::replicas_in_sync`]).
+    pub fn params(&self) -> &[Tensor] {
+        &self.replicas[0].params
+    }
+
+    /// Broadcast a full parameter set to every replica (checkpoint
+    /// fan-out).
+    pub fn set_params_all(&mut self, params: Vec<Tensor>) -> Result<()> {
+        if params.len() != self.cfg.params.len() {
+            return Err(anyhow!("param count mismatch"));
+        }
+        for r in self.replicas.iter_mut() {
+            r.params = params.clone();
+        }
+        Ok(())
+    }
+
+    /// Load parameters by name; names absent from the map keep their init
+    /// values. The result is fanned out to every replica.
+    pub fn load_param_map(
+        &mut self,
+        map: &std::collections::HashMap<String, Tensor>,
+    ) -> Result<()> {
+        let mut params = self.replicas[0].params.clone();
+        for (i, p) in self.cfg.params.iter().enumerate() {
+            if let Some(v) = map.get(&p.name) {
+                if v.shape != p.shape {
+                    return Err(anyhow!("shape mismatch for {}", p.name));
+                }
+                params[i] = v.clone();
+            }
+        }
+        self.set_params_all(params)
+    }
+
+    /// True when every replica's parameters are bitwise equal to
+    /// slot 0's — the invariant the merged update maintains.
+    pub fn replicas_in_sync(&self) -> bool {
+        let r0 = &self.replicas[0].params;
+        self.replicas.iter().skip(1).all(|r| {
+            r.params
+                .iter()
+                .zip(r0)
+                .all(|(a, b)| a.shape == b.shape && a.data == b.data)
+        })
+    }
+
+    /// Topology line for `Session::describe` / the CLI: population and
+    /// cohort shape, the aggregation sim knobs and the current per-group
+    /// `thresholds` (owned by the session's core).
+    pub fn describe_topology(&self, thresholds: &[f64]) -> String {
+        let c: Vec<String> = thresholds.iter().map(|c| format!("{c:.4}")).collect();
+        format!(
+            "population={} E[U]={} local_steps={} slots={} fanout={} reduction={} \
+             grouping={} thresholds=[{}]",
+            self.population,
+            self.expected_users as usize,
+            self.local_steps,
+            self.slots,
+            self.fanout,
+            if self.overlap { "overlapped" } else { "barrier" },
+            self.grouping.token(),
+            c.join(", ")
+        )
+    }
+
+    /// Full-dataset evaluation on slot 0's replica: (mean loss, acc).
+    pub fn evaluate(&self, data: &dyn Dataset) -> Result<(f64, f64)> {
+        crate::coordinator::trainer::evaluate_full(
+            &self.eval_exec,
+            &self.replicas[0].params,
+            self.cfg.batch,
+            data,
+        )
+    }
+
+    /// Threshold group slot `s`'s users clip and noise under.
+    fn group_of(&self, s: usize) -> usize {
+        match self.grouping {
+            CohortGrouping::Flat => 0,
+            CohortGrouping::PerUser => s,
+        }
+    }
+
+    /// Fused path: every user is one example taking one local step, so
+    /// the slot's whole user slice runs through the per-example clipping
+    /// executable in one call — structurally (and, with the identity
+    /// partition, bitwise) the sharded backend's collect.
+    #[allow(clippy::too_many_arguments)]
+    fn collect_fused(
+        &mut self,
+        data: &dyn Dataset,
+        batch: &ShardBatch,
+        thresholds: &[f64],
+        clip_counts: &mut [f64],
+        mean_norms: &mut [f64],
+        units: &mut Vec<GradUnit>,
+        bwd_secs: &mut [f64],
+    ) -> Result<(f64, f64, usize)> {
+        let n_tr = self.trainable_idx.len();
+        let mut loss_wsum = 0f64;
+        for s in 0..self.slots {
+            let slice = &batch.slices[s];
+            let live_s = slice.live();
+            self.slot_lives[s] = live_s;
+            // dealt ids are users; each owns exactly one dataset index
+            let indices: Vec<usize> =
+                slice.indices.iter().map(|&u| self.partition[u][0]).collect();
+            let mb = data.batch(&indices);
+            let (x, y) = mb.inputs();
+            let thr_s = thresholds[self.group_of(s)];
+            let extras = vec![
+                x,
+                y,
+                HostValue::F32(Tensor::scalar(thr_s as f32)),
+                HostValue::F32(Tensor::from_vec(
+                    &[slice.weights.len()],
+                    slice.weights.clone(),
+                )?),
+            ];
+            let t0 = Instant::now();
+            let outs = self.exec.call(&self.replicas[s].params, &extras)?;
+            bwd_secs[s] = t0.elapsed().as_secs_f64();
+            let loss_s = outs[0].data[0] as f64;
+            // the entry reports a weighted mean over this slot's live
+            // users; recover the global mean via the live counts. A slot
+            // whose slice drew empty reports a 0/0 loss — skip it.
+            if live_s > 0 {
+                loss_wsum += loss_s * live_s as f64;
+            }
+            let grads: Vec<Tensor> = outs[1..1 + n_tr].to_vec();
+            // per-example norms ARE per-user delta norms here
+            let norms = &outs[1 + n_tr];
+            for i in 0..slice.weights.len() {
+                if slice.weights[i] == 0.0 {
+                    continue;
+                }
+                let target = self.group_of(s);
+                let v = norms.data[i] as f64;
+                mean_norms[target] += v;
+                if v <= thresholds[target] {
+                    clip_counts[target] += 1.0;
+                }
+            }
+            let groups: Vec<usize> =
+                self.group_of_trainable.iter().map(|_| self.group_of(s)).collect();
+            units.push(GradUnit { tensors: grads, groups });
+        }
+        Ok((loss_wsum, batch.live as f64, self.slots))
+    }
+
+    /// General path: per sampled user, `local_steps` full-batch gradient
+    /// steps over the user's own examples on a scratch checkpoint copy;
+    /// the accumulated gradient sums form the per-user delta, clipped as
+    /// one group against the user's threshold before joining the slot's
+    /// unit sum. Measured in gradient units (the plain-SGD local delta
+    /// divided by the local lr) so the server optimizer treats it exactly
+    /// like a gradient.
+    #[allow(clippy::too_many_arguments)]
+    fn collect_general(
+        &mut self,
+        data: &dyn Dataset,
+        batch: &ShardBatch,
+        thresholds: &[f64],
+        clip_counts: &mut [f64],
+        mean_norms: &mut [f64],
+        units: &mut Vec<GradUnit>,
+        bwd_secs: &mut [f64],
+    ) -> Result<(f64, f64, usize)> {
+        let n_tr = self.trainable_idx.len();
+        let mut loss_wsum = 0f64;
+        let mut example_total = 0usize;
+        let mut calls = 0usize;
+        for s in 0..self.slots {
+            let slice = &batch.slices[s];
+            let live_s = slice.live();
+            self.slot_lives[s] = live_s;
+            let target = self.group_of(s);
+            // slot accumulator over its users' clipped deltas
+            let mut acc: Vec<Tensor> = self
+                .trainable_idx
+                .iter()
+                .map(|&i| Tensor::zeros(&self.cfg.params[i].shape))
+                .collect();
+            let t0 = Instant::now();
+            for i in 0..live_s {
+                let user = slice.indices[i];
+                let block = &self.partition[user];
+                let ex = block.len();
+                let mut idx = block.clone();
+                idx.resize(self.cfg.batch, 0);
+                let mut wts = vec![1.0f32; ex];
+                wts.resize(self.cfg.batch, 0.0);
+                // local scratch copy of this slot's checkpoint
+                let mut local = self.replicas[s].params.clone();
+                let mut delta: Vec<Tensor> = Vec::new();
+                for step in 0..self.local_steps {
+                    let mb = data.batch(&idx);
+                    let (x, y) = mb.inputs();
+                    let extras = vec![
+                        x,
+                        y,
+                        HostValue::F32(Tensor::scalar(NO_CLIP)),
+                        HostValue::F32(Tensor::from_vec(&[wts.len()], wts.clone())?),
+                    ];
+                    let outs = self.exec.call(&local, &extras)?;
+                    calls += 1;
+                    if step == 0 {
+                        // weighted mean loss over the user's live examples
+                        loss_wsum += outs[0].data[0] as f64 * ex as f64;
+                        example_total += ex;
+                    }
+                    let g: Vec<Tensor> = outs[1..1 + n_tr].to_vec();
+                    if delta.is_empty() {
+                        delta = g.clone();
+                    } else {
+                        for (d, t) in delta.iter_mut().zip(&g) {
+                            for (a, b) in d.data.iter_mut().zip(&t.data) {
+                                *a += *b;
+                            }
+                        }
+                    }
+                    if step + 1 < self.local_steps {
+                        // plain local SGD at the base lr on the mean
+                        // gradient (the sum / the user's example count)
+                        let lr = (self.lr / ex as f64) as f32;
+                        for (j, &pi) in self.trainable_idx.iter().enumerate() {
+                            for (p, gv) in local[pi].data.iter_mut().zip(&g[j].data) {
+                                *p -= lr * gv;
+                            }
+                        }
+                    }
+                }
+                // clip the FULL per-user delta: one global L2 norm across
+                // every trainable tensor, bounded by the user's threshold
+                let mut sq = 0f64;
+                for t in &delta {
+                    for &v in &t.data {
+                        sq += (v as f64) * (v as f64);
+                    }
+                }
+                let norm = sq.sqrt();
+                mean_norms[target] += norm;
+                if norm <= thresholds[target] {
+                    clip_counts[target] += 1.0;
+                }
+                let factor =
+                    if norm > thresholds[target] { (thresholds[target] / norm) as f32 } else { 1.0 };
+                for (a, d) in acc.iter_mut().zip(&delta) {
+                    for (x, v) in a.data.iter_mut().zip(&d.data) {
+                        *x += factor * v;
+                    }
+                }
+            }
+            bwd_secs[s] = t0.elapsed().as_secs_f64();
+            let groups: Vec<usize> =
+                self.group_of_trainable.iter().map(|_| target).collect();
+            units.push(GradUnit { tensors: acc, groups });
+        }
+        Ok((loss_wsum, example_total as f64, calls))
+    }
+}
+
+impl BackendStep for FederatedEngine<'_> {
+    type Slices = ShardBatch;
+
+    fn deal(&mut self, _n_data: usize, rng: &mut Rng) -> ShardBatch {
+        // ONE global Poisson draw over USER ids, dealt round-robin into
+        // padded per-slot slices (the accountant sees the union at
+        // q = E[U]/population, user level)
+        self.sampler.sample(rng)
+    }
+
+    fn collect(
+        &mut self,
+        data: &dyn Dataset,
+        batch: &ShardBatch,
+        thresholds: &[f64],
+    ) -> Result<Collected> {
+        let k = thresholds.len();
+        let mut clip_counts = vec![0f64; k];
+        let mut mean_norms = vec![0f64; k];
+        let mut units: Vec<GradUnit> = Vec::with_capacity(self.slots);
+        let mut bwd_secs = vec![0f64; self.slots];
+        let (loss_wsum, loss_denom, calls) = if self.fused {
+            self.collect_fused(
+                data,
+                batch,
+                thresholds,
+                &mut clip_counts,
+                &mut mean_norms,
+                &mut units,
+                &mut bwd_secs,
+            )?
+        } else {
+            self.collect_general(
+                data,
+                batch,
+                thresholds,
+                &mut clip_counts,
+                &mut mean_norms,
+                &mut units,
+                &mut bwd_secs,
+            )?
+        };
+
+        // normalize the mean-norm diagnostics by the users that fed each
+        // group (per-user slot groups see only their cohort slice)
+        let live_global = batch.live;
+        match self.grouping {
+            CohortGrouping::PerUser => {
+                for (g, m) in mean_norms.iter_mut().enumerate() {
+                    *m /= self.slot_lives[g].max(1) as f64;
+                }
+            }
+            CohortGrouping::Flat => {
+                for m in mean_norms.iter_mut() {
+                    *m /= live_global.max(1) as f64;
+                }
+            }
+        }
+        let clip_denoms: Vec<f64> = match self.grouping {
+            CohortGrouping::PerUser => {
+                (0..k).map(|g| self.slot_lives[g].max(1) as f64).collect()
+            }
+            CohortGrouping::Flat => vec![live_global.max(1) as f64; k],
+        };
+        let loss = loss_wsum / loss_denom.max(1.0);
+        Ok(Collected {
+            units,
+            clip_counts,
+            clip_denoms,
+            mean_norms,
+            loss,
+            live: live_global,
+            truncated: batch.truncated,
+            calls,
+            syncs: 0,
+            timing: StepTiming { durations: Vec::new(), bwd_secs },
+        })
+    }
+
+    fn merge(&mut self, units: Vec<GradUnit>, timing: &StepTiming) -> Merged {
+        let parts: Vec<Vec<Tensor>> = units.into_iter().map(|u| u.tensors).collect();
+        let merged = tree_reduce(parts, self.fanout);
+
+        // simulated aggregation latency: a real deployment aggregates the
+        // slots concurrently, so the modeled compute time is one
+        // representative slot; its backward is split across trainable
+        // tensors proportional to size, reduction rounds queue behind it
+        // in backprop (reverse) order — same model as the sharded seam
+        let rep_bwd = timing.bwd_secs.iter().sum::<f64>() / self.slots as f64;
+        let total_dim: f64 = self
+            .trainable_idx
+            .iter()
+            .map(|&i| self.cfg.params[i].size as f64)
+            .sum::<f64>()
+            .max(1.0);
+        let n_tr = self.trainable_idx.len();
+        let mut bwd_layers = Vec::with_capacity(n_tr);
+        let mut red_layers = Vec::with_capacity(n_tr);
+        for &i in self.trainable_idx.iter().rev() {
+            let d = self.cfg.params[i].size as f64;
+            bwd_layers.push(rep_bwd * d / total_dim);
+            red_layers.push(self.reduce_model.layer_cost(4.0 * d));
+        }
+        let sim_overlap = self.reduce_model.overlap_makespan(&bwd_layers, &red_layers);
+        let sim_barrier = self.reduce_model.barrier_makespan(&bwd_layers, &red_layers);
+
+        Merged {
+            tensors: merged,
+            sim_secs: if self.overlap { sim_overlap } else { sim_barrier },
+            sim_overlap_secs: sim_overlap,
+            sim_barrier_secs: sim_barrier,
+            syncs: self.reduce_model.rounds(),
+        }
+    }
+
+    fn apply(&mut self, grads: &[Tensor]) {
+        // one merged update applied to every replica (identical optimizer
+        // states + identical grads keep the replicas bit-identical)
+        for r in self.replicas.iter_mut() {
+            r.optimizer.apply_indexed(&mut r.params, &self.trainable_idx, grads);
+        }
+    }
+
+    fn update_scale(&self, _live: usize) -> f32 {
+        // Algorithm 1 line 14 at the user level: normalize the merged sum
+        // of clipped per-user deltas by the EXPECTED cohort size E[U]
+        (1.0 / self.expected_users) as f32
+    }
+}

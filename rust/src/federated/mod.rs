@@ -1,0 +1,44 @@
+//! Federated user-level DP backend — group-wise clipping taken to its
+//! natural limit: **groups = users**.
+//!
+//! The paper treats per-layer and per-device clipping as instances of one
+//! abstraction, group-wise clipping; DP-FedAvg's per-user clipping is the
+//! same abstraction with a user's entire contribution as the clipped
+//! group. This backend simulates that regime over a large population:
+//!
+//! 1. the session Poisson-samples **users** (not examples) at rate
+//!    `q = E[U]/population` — one global draw over user ids, dealt
+//!    round-robin across aggregation slots by the same
+//!    [`ShardSampler`](crate::shard::ShardSampler) machinery the sharded
+//!    backend deals examples with,
+//! 2. each sampled user runs its local update (`local_steps` full-batch
+//!    gradient steps over its own examples) against the current
+//!    checkpoint and transmits a model delta,
+//! 3. the **full per-user delta** is clipped to threshold C — one L2
+//!    norm across every trainable tensor, so adding or removing one user
+//!    moves the aggregate by at most C regardless of how many examples
+//!    they contribute or how many local steps they take,
+//! 4. each slot adds its local noise share `sigma_g/sqrt(slots)` (the
+//!    shared [`StepLoop`](crate::session::StepLoop) phase — variances add
+//!    to exactly the accountant's per-group std at any realized cohort
+//!    size), and the slot sums aggregate on the existing
+//!    [`tree_reduce`](crate::shard::tree_reduce) seam.
+//!
+//! The accountant composes the same subsampled-Gaussian releases as every
+//! other backend — only the *neighbouring relation* changes, recorded as
+//! [`PrivacyUnit::User`](crate::coordinator::accountant::PrivacyUnit) in
+//! the [`PrivacyPlan`](crate::coordinator::accountant::PrivacyPlan) and
+//! surfaced through `describe()` / `StepEvent.unit`.
+//!
+//! With `population == n_data`, one example per user and one local step,
+//! a user *is* an example and the whole construction degenerates —
+//! bitwise, including RNG stream positions — to the example-level sharded
+//! backend (pinned in `tests/integration.rs`).
+//!
+//! Construction goes through `session::SessionBuilder` only (add a
+//! `[federated]` section to the spec, or `.federated(FederatedSpec::..)`);
+//! there is no raw-sigma entry point, and the backend is private-only.
+
+pub mod engine;
+
+pub use engine::{CohortGrouping, FederatedEngine};

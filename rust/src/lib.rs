@@ -46,13 +46,15 @@
 //! builder is the *only* construction surface: the legacy `Trainer::new` /
 //! `PipelineEngine::new` raw-sigma shims are retired, and every backend —
 //! single-device, pipeline-parallel, the sharded data-parallel
-//! [`shard::ShardEngine`], and the hybrid 2D-parallel
-//! [`hybrid::HybridEngine`] (pipeline stages x data-parallel replicas) —
+//! [`shard::ShardEngine`], the hybrid 2D-parallel
+//! [`hybrid::HybridEngine`] (pipeline stages x data-parallel replicas),
+//! and the user-level federated [`federated::FederatedEngine`] —
 //! receives its DP state through the same shared [`session::DpCore`].
 
 pub mod coordinator;
 pub mod data;
 pub mod exp;
+pub mod federated;
 pub mod hybrid;
 pub mod metrics;
 pub mod pipeline;

@@ -23,7 +23,8 @@ gwclip — group-wise clipping for DP deep learning (ICLR 2023 reproduction)
 
 USAGE:
   gwclip run      --spec run.toml|run.json   (one declarative file, any
-                  backend; see docs/SESSION_API.md) [--print-spec]
+                  backend incl. [federated] user-level DP; see
+                  docs/SESSION_API.md) [--print-spec]
   gwclip train    [--config resmlp] [--method adaptive-per-layer] [--epsilon 3]
                   [--delta 1e-5] [--epochs 3] [--lr 0.5] [--n-data 4096]
                   [--seed 0] [--allocation global|equal|weighted]
@@ -52,7 +53,8 @@ USAGE:
                   epochs-derived)
   gwclip exp <which>   table1|table2|table3|table4|table5|table6|table10|table11|
                        fig1|fig2|fig3|fig5|fig6|fig7|pipeline-overhead|accountant|
-                       shard-scaling|compress-scaling|hybrid-scaling|all
+                       shard-scaling|compress-scaling|hybrid-scaling|
+                       user-vs-example|all
                        [--paper-scale]
   gwclip bench-diff --old DIR [--new DIR] [--max-regress 0.15]
                   (CI gate: diff the BENCH_*.json step-hot-path rows against a
@@ -185,13 +187,20 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("bench-diff needs --old <dir with prior BENCH_*.json>"))?;
     let new = args.get("new", ".");
     let threshold = args.get_f64("max-regress", 0.15)?;
-    let (compared, regressions) = gwclip::util::bench::diff_dirs(old, &new, threshold)?;
+    let diff = gwclip::util::bench::diff_dirs(old, &new, threshold)?;
     println!(
-        "bench-diff: {compared} step-path row(s) compared against {old} \
+        "bench-diff: {} step-path row(s) compared against {old} \
          (threshold {:.0}%)",
+        diff.compared,
         100.0 * threshold
     );
-    for r in &regressions {
+    // suites/rows with no prior trajectory (a freshly landed bench) are
+    // additions: reported so the trajectory's growth is visible in CI
+    // logs, but never a failure
+    for a in &diff.additions {
+        println!("ADDITION {a}: no prior trajectory, gated from the next run on");
+    }
+    for r in &diff.regressions {
         println!(
             "REGRESSION [{}] {}: {:.4} ms -> {:.4} ms ({:.2}x)",
             r.suite,
@@ -201,10 +210,10 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
             r.ratio()
         );
     }
-    if !regressions.is_empty() {
+    if !diff.regressions.is_empty() {
         bail!(
             "{} step-hot-path regression(s) above {:.0}%",
-            regressions.len(),
+            diff.regressions.len(),
             100.0 * threshold
         );
     }

@@ -45,6 +45,8 @@ use crate::coordinator::accountant::PrivacyPlan;
 use crate::coordinator::sampler::PoissonSampler;
 use crate::coordinator::trainer::{derive_schedule, TrainOpts, Trainer};
 use crate::data::Dataset;
+use crate::federated::engine::FederatedWiring;
+use crate::federated::{CohortGrouping, FederatedEngine};
 use crate::hybrid::engine::HybridWiring;
 use crate::hybrid::{HybridEngine, PieceGrouping};
 use crate::pipeline::{PipelineEngine, PipelineMode, PipelineOpts};
@@ -56,8 +58,9 @@ pub use crate::shard::compress::CompressKind;
 
 pub use self::core::{CoreCfg, DpCore};
 pub use self::spec::{
-    ClipMode, ClipPolicy, CompressSpec, DataSpec, FlatImpl, GroupBy, HybridGrouping, HybridSpec,
-    OptimSpec, PipeSpec, PrivacySpec, RunSpec, Sampling, ShardGrouping, ShardSpec,
+    ClipMode, ClipPolicy, CompressSpec, DataSpec, ExamplesDist, FederatedGrouping, FederatedSpec,
+    FlatImpl, GroupBy, HybridGrouping, HybridSpec, OptimSpec, PipeSpec, PrivacySpec, RunSpec,
+    Sampling, ShardGrouping, ShardSpec,
 };
 pub use self::steploop::StepLoop;
 
@@ -97,6 +100,11 @@ pub struct StepEvent {
     /// dropped (0 for round-robin pipeline steps; rare when capacity is
     /// sized ~1.25x the expected batch)
     pub truncated: usize,
+    /// the unit of privacy this step's release protects — `"example"`
+    /// for DP-SGD-style backends, `"user"` for the federated backend
+    /// (add/remove one user and every example they contribute);
+    /// `"example"` for non-private runs, where no guarantee is claimed
+    pub unit: &'static str,
 }
 
 impl StepEvent {
@@ -144,12 +152,14 @@ impl StepEvent {
 /// staged configs, hybrid (pipeline x data-parallel) when a staged
 /// config's spec carries a `[hybrid]` section, sharded when a stage-less
 /// config's spec carries `[shard]` (or `[hybrid]`, whose grid then has no
-/// pipeline axis), single-device otherwise.
+/// pipeline axis), federated (user-level DP over a simulated population)
+/// when it carries `[federated]`, single-device otherwise.
 pub enum Backend<'r> {
     Single(Trainer<'r>),
     Pipeline(PipelineEngine<'r>),
     Sharded(ShardEngine<'r>),
     Hybrid(HybridEngine<'r>),
+    Federated(FederatedEngine<'r>),
 }
 
 impl Backend<'_> {
@@ -159,6 +169,7 @@ impl Backend<'_> {
             Backend::Pipeline(_) => "pipeline",
             Backend::Sharded(_) => "sharded",
             Backend::Hybrid(_) => "hybrid",
+            Backend::Federated(_) => "federated",
         }
     }
 }
@@ -244,6 +255,15 @@ impl<'r> SessionBuilder<'r> {
         self
     }
 
+    /// Select the federated user-level backend (stage-less configs only):
+    /// Poisson-sample users from a simulated population and clip each
+    /// sampled user's full model delta — group-wise clipping with
+    /// groups = users.
+    pub fn federated(mut self, f: FederatedSpec) -> Self {
+        self.spec.federated = Some(f);
+        self
+    }
+
     /// Enable error-feedback gradient compression on the cross-replica
     /// reduction path (sharded and hybrid backends only).
     pub fn compress(mut self, c: CompressSpec) -> Self {
@@ -277,6 +297,14 @@ impl<'r> SessionBuilder<'r> {
                     "config '{}' has pipeline stages; the sharded backend replicates a \
                      stage-less model — use a [hybrid] section to compose pipeline stages \
                      with data-parallel replicas",
+                    spec.config
+                );
+            }
+            if spec.federated.is_some() {
+                bail!(
+                    "config '{}' has pipeline stages; the federated backend replicates a \
+                     stage-less model per aggregation slot — user cohorts have no stage \
+                     axis",
                     spec.config
                 );
             }
@@ -496,6 +524,117 @@ impl<'r> SessionBuilder<'r> {
             Ok(Session {
                 backend: Backend::Pipeline(engine),
                 total_steps: steps,
+                steploop: StepLoop::new(core),
+                spec,
+            })
+        } else if let Some(fed) = spec.federated.clone() {
+            // ---------------- federated user-level backend ----------------
+            // spec validation already guaranteed: private clip policy with
+            // the fused flat entry, no [shard]/[hybrid], Poisson sampling,
+            // no explicit pipeline.steps, grouping/clip agreement.
+            if !(spec.epochs > 0.0) {
+                bail!("federated runs need epochs > 0");
+            }
+            // Expected sampled cohort E[U]: explicit override or
+            // q x population rounded to the nearest user. The rounding is
+            // what makes the degenerate case exact — with
+            // population == n_data and user_rate = E[B]/n this recovers
+            // the sharded backend's E[B] bit-for-bit.
+            let expected = if spec.expected_batch > 0 {
+                spec.expected_batch
+            } else {
+                fed.expected_users()
+            };
+            if expected > fed.population {
+                bail!(
+                    "expected cohort {} exceeds federated.population {}",
+                    expected,
+                    fed.population
+                );
+            }
+            // Aggregation slots follow the replica-holding schedule
+            // convention (trainer::derive_schedule_n): each slot hosts the
+            // single-device 0.8x-headroom share of the cohort, so the
+            // degenerate federated run lands on the same slot count —
+            // and the same (rate, steps) schedule — as the matching
+            // sharded worker count.
+            let per_slot = ((cfg.batch as f64) * 0.8).round().max(1.0) as usize;
+            let slots = (expected + per_slot - 1) / per_slot;
+            let rate = (expected as f64 / fed.population as f64).min(1.0);
+            let total_steps =
+                ((spec.epochs * fed.population as f64) / expected as f64).ceil() as u64;
+            if total_steps == 0 {
+                bail!("federated schedule is empty: raise epochs");
+            }
+            let grouping = match (fed.grouping, spec.clip.group_by) {
+                (FederatedGrouping::Flat, _) | (FederatedGrouping::Auto, GroupBy::Flat) => {
+                    CohortGrouping::Flat
+                }
+                (FederatedGrouping::PerUser, _)
+                | (FederatedGrouping::Auto, GroupBy::PerDevice) => CohortGrouping::PerUser,
+                (FederatedGrouping::Auto, GroupBy::PerLayer) => {
+                    unreachable!("rejected by RunSpec::validate")
+                }
+            };
+            // One accountant release per step at q = E[U]/population: the
+            // slots jointly hold ONE Poisson draw over users, and each
+            // slot's local noise share sigma_g/sqrt(slots) merges
+            // (variances add) to the accountant's per-group std on the
+            // aggregated update — at ANY realized cohort size. Per-user
+            // slot groups each see E[U]/slots users per quantile release;
+            // the flat group sees the whole cohort.
+            let (k, group_dims, quantile_batch) = match grouping {
+                CohortGrouping::Flat => (1, vec![cfg.n_trainable().max(1)], expected as f64),
+                CohortGrouping::PerUser => (
+                    slots,
+                    vec![cfg.n_trainable().max(1); slots],
+                    expected as f64 / slots as f64,
+                ),
+            };
+            let mut core = DpCore::from_accountant(CoreCfg {
+                privacy: &spec.privacy,
+                clip: &spec.clip,
+                sample_rate: rate,
+                steps: total_steps.max(1),
+                k,
+                group_dims,
+                expected_batch: quantile_batch,
+                seed: spec.seed,
+            })?;
+            // same releases, same composition, same multipliers — only the
+            // neighbouring relation changes: q is a USER sampling rate and
+            // the clipped record is the whole per-user delta (see
+            // PrivacyPlan::at_user_level)
+            if let Some(p) = core.plan {
+                core.plan = Some(p.at_user_level());
+            }
+            // the user partition maps the simulated population onto the
+            // dataset actually handed to build(): user u contributes the
+            // examples of block u
+            let dspec = DataSpec { n_data, ..spec.data.clone() };
+            let partition =
+                dspec.user_partition(fed.population, fed.examples_per_user, fed.examples_dist);
+            let wiring = FederatedWiring {
+                slots,
+                fanout: fed.fanout,
+                overlap: fed.overlap,
+                link_latency: fed.link_latency,
+                grouping,
+                rate,
+                expected_users: expected,
+                total_steps,
+                population: fed.population,
+                local_steps: fed.local_steps,
+                partition,
+                optimizer: spec.optim.kind,
+                lr: spec.optim.lr,
+                weight_decay: spec.optim.weight_decay,
+                lr_decay: spec.optim.lr_decay,
+            };
+            let engine = FederatedEngine::with_core(runtime, &spec.config, wiring, &core)?;
+            Ok(Session {
+                backend: Backend::Federated(engine),
+                total_steps,
                 steploop: StepLoop::new(core),
                 spec,
             })
@@ -755,6 +894,7 @@ impl<'r> Session<'r> {
             }
             Backend::Sharded(e) => e.group_labels(),
             Backend::Hybrid(e) => e.group_labels(),
+            Backend::Federated(e) => e.group_labels(),
         }
     }
 
@@ -814,6 +954,20 @@ impl<'r> Session<'r> {
         }
     }
 
+    pub fn federated_engine(&self) -> Option<&FederatedEngine<'r>> {
+        match &self.backend {
+            Backend::Federated(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    pub fn federated_engine_mut(&mut self) -> Option<&mut FederatedEngine<'r>> {
+        match &mut self.backend {
+            Backend::Federated(e) => Some(e),
+            _ => None,
+        }
+    }
+
     /// Full-model parameters in manifest order (decoding / checkpoints).
     /// Sharded sessions return worker 0's replica — all replicas are kept
     /// bit-identical by the merged update.
@@ -821,6 +975,7 @@ impl<'r> Session<'r> {
         match &self.backend {
             Backend::Single(t) => Ok(&t.params),
             Backend::Sharded(e) => Ok(e.params()),
+            Backend::Federated(e) => Ok(e.params()),
             Backend::Pipeline(_) | Backend::Hybrid(_) => Err(anyhow!(
                 "pipeline/hybrid sessions shard parameters per stage; use param_map()"
             )),
@@ -833,6 +988,7 @@ impl<'r> Session<'r> {
         match &mut self.backend {
             Backend::Single(t) => t.set_params(params),
             Backend::Sharded(e) => e.set_params_all(params),
+            Backend::Federated(e) => e.set_params_all(params),
             Backend::Pipeline(_) | Backend::Hybrid(_) => Err(anyhow!(
                 "pipeline/hybrid sessions load parameters by name; use load_param_map()"
             )),
@@ -851,6 +1007,13 @@ impl<'r> Session<'r> {
                 .collect(),
             Backend::Pipeline(e) => e.dump_params(),
             Backend::Sharded(e) => e
+                .cfg
+                .params
+                .iter()
+                .zip(e.params())
+                .map(|(p, v)| (p.name.clone(), v.clone()))
+                .collect(),
+            Backend::Federated(e) => e
                 .cfg
                 .params
                 .iter()
@@ -879,6 +1042,7 @@ impl<'r> Session<'r> {
             }
             Backend::Pipeline(e) => e.load_params(map),
             Backend::Sharded(e) => e.load_param_map(map),
+            Backend::Federated(e) => e.load_param_map(map),
             Backend::Hybrid(e) => e.load_params(map),
         }
     }
@@ -911,6 +1075,7 @@ impl<'r> Session<'r> {
             Backend::Pipeline(e) => steploop.step(e, data),
             Backend::Sharded(e) => steploop.step(e, data),
             Backend::Hybrid(e) => steploop.step(e, data),
+            Backend::Federated(e) => steploop.step(e, data),
         }
     }
 
@@ -927,6 +1092,10 @@ impl<'r> Session<'r> {
             Backend::Hybrid(e) => match e.grouping() {
                 PieceGrouping::PerPiece => "hybrid per-piece",
                 PieceGrouping::PerStage => "hybrid per-stage",
+            },
+            Backend::Federated(e) => match e.grouping() {
+                CohortGrouping::Flat => "federated flat",
+                CohortGrouping::PerUser => "federated per-user",
             },
         };
         let total = self.total_steps;
@@ -949,6 +1118,7 @@ impl<'r> Session<'r> {
             Backend::Pipeline(e) => Ok((e.evaluate(data)?, f64::NAN)),
             Backend::Sharded(e) => e.evaluate(data),
             Backend::Hybrid(e) => Ok((e.evaluate(data)?, f64::NAN)),
+            Backend::Federated(e) => e.evaluate(data),
         }
     }
 
@@ -965,12 +1135,13 @@ impl<'r> Session<'r> {
             // round-robin pipeline, plan.steps is the per-example
             // participation count, not the run's total step count
             Some(p) => format!(
-                "{be} | {} x {} | (eps={}, delta={}) q={:.4} over {} releases -> sigma={:.3} \
-                 (grad {:.3}, quantile {:.2}, r={})",
+                "{be} | {} x {} | (eps={}, delta={}) {}-level q={:.4} over {} releases -> \
+                 sigma={:.3} (grad {:.3}, quantile {:.2}, r={})",
                 self.spec.clip.group_by.token(),
                 self.spec.clip.mode.token(),
                 p.epsilon,
                 p.delta,
+                p.unit.token(),
                 p.q,
                 p.steps,
                 p.sigma_base,
@@ -999,6 +1170,7 @@ impl<'r> Session<'r> {
             }
             Backend::Sharded(e) => format!("{base} | {}", e.describe_topology(thresholds)),
             Backend::Hybrid(e) => format!("{base} | {}", e.describe_topology(thresholds)),
+            Backend::Federated(e) => format!("{base} | {}", e.describe_topology(thresholds)),
         }
     }
 }

@@ -521,6 +521,57 @@ impl DataSpec {
             },
         })
     }
+
+    /// User-partition assignment for the federated backend: which dataset
+    /// indices user `u` contributes. The same corpora serve both privacy
+    /// regimes — example-level runs index the corpus directly, user-level
+    /// runs index it through this map.
+    ///
+    /// Deterministic in `(self.seed, population, examples_per_user,
+    /// dist)` and independent of the training RNG stream: the partition is
+    /// data, not a mechanism release, so building it must not perturb the
+    /// seeded noise/sampling sequence. Users own contiguous index blocks
+    /// (wrapping modulo `n_data` when the simulated population outgrows
+    /// the finite corpus, which stands in for a larger one); with
+    /// `population == n_data`, one example per user and `Fixed` sizing the
+    /// map degenerates to the identity `u -> [u]`, which is what makes the
+    /// federated backend's degenerate parity with the example-level
+    /// sharded backend possible.
+    pub fn user_partition(
+        &self,
+        population: usize,
+        examples_per_user: usize,
+        dist: ExamplesDist,
+    ) -> Vec<Vec<usize>> {
+        assert!(population > 0 && examples_per_user > 0 && self.n_data > 0);
+        // splitmix64 over (seed, u): stable per-user sizes with no shared
+        // stream to contend with
+        let size_of = |u: usize| -> usize {
+            match dist {
+                ExamplesDist::Fixed => examples_per_user,
+                ExamplesDist::Uniform => {
+                    let mut z = self
+                        .seed
+                        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                        .wrapping_add(u as u64)
+                        .wrapping_add(0x9e37_79b9_7f4a_7c15);
+                    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+                    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+                    z ^= z >> 31;
+                    1 + (z as usize) % (2 * examples_per_user - 1).max(1)
+                }
+            }
+        };
+        let mut start = 0usize;
+        (0..population)
+            .map(|u| {
+                let sz = size_of(u);
+                let block: Vec<usize> = (0..sz).map(|j| (start + j) % self.n_data).collect();
+                start = (start + sz) % self.n_data;
+                block
+            })
+            .collect()
+    }
 }
 
 // --------------------------------------------------------------- pipeline
@@ -841,6 +892,197 @@ impl HybridSpec {
     }
 }
 
+// -------------------------------------------------------------- federated
+
+/// How the federated backend maps clipping-threshold groups onto the
+/// sampled user cohort.
+///
+/// * `Auto` (default): mirror `clip.group_by` — `per-device` gives every
+///   aggregation slot its own threshold (per-user adaptive clipping, the
+///   group-wise cell with users as the clipped records), `flat` a single
+///   threshold shared by every user's delta. `per-layer` has no federated
+///   implementation and is rejected.
+/// * `Flat` / `PerUser`: explicit pins; a private spec whose
+///   `clip.group_by` disagrees is rejected at validation time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FederatedGrouping {
+    Auto,
+    Flat,
+    PerUser,
+}
+
+impl FederatedGrouping {
+    /// Canonical spec/CLI token; guaranteed to parse back via [`FromStr`].
+    pub fn token(&self) -> &'static str {
+        match self {
+            FederatedGrouping::Auto => "auto",
+            FederatedGrouping::Flat => "flat",
+            FederatedGrouping::PerUser => "per-user",
+        }
+    }
+}
+
+impl FromStr for FederatedGrouping {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "auto" => FederatedGrouping::Auto,
+            "flat" | "global" => FederatedGrouping::Flat,
+            "per-user" | "peruser" | "per_user" => FederatedGrouping::PerUser,
+            _ => bail!("unknown federated grouping '{s}' (auto|flat|per-user)"),
+        })
+    }
+}
+
+/// How many examples each simulated user contributes.
+///
+/// * `Fixed`: every user owns exactly `examples_per_user` indices.
+/// * `Uniform`: user u owns a deterministic (data-seeded) size drawn
+///   uniformly from `1..=2*examples_per_user - 1`, mean
+///   `examples_per_user` — heterogeneous cohorts without touching the
+///   training RNG stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExamplesDist {
+    Fixed,
+    Uniform,
+}
+
+impl ExamplesDist {
+    /// Canonical spec/CLI token; guaranteed to parse back via [`FromStr`].
+    pub fn token(&self) -> &'static str {
+        match self {
+            ExamplesDist::Fixed => "fixed",
+            ExamplesDist::Uniform => "uniform",
+        }
+    }
+}
+
+impl FromStr for ExamplesDist {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fixed" => ExamplesDist::Fixed,
+            "uniform" => ExamplesDist::Uniform,
+            _ => bail!("unknown examples_dist '{s}' (fixed|uniform)"),
+        })
+    }
+}
+
+/// Federated user-level DP backend knobs. Presence of a `[federated]`
+/// section (or `SessionBuilder::federated`) selects `Backend::Federated`
+/// on stage-less configs; staged configs reject it. The dealt — and
+/// privacy-accounted — unit is the *user*: each step Poisson-samples users
+/// at `user_rate` from a simulated `population`, runs every sampled user's
+/// local update against the current checkpoint, clips the full per-user
+/// delta (per-user clipping as group-wise clipping), and aggregates on the
+/// tree-reduction seam. The accountant composes at `q = E[U]/population`
+/// with [`PrivacyUnit::User`] recorded in the plan.
+///
+/// [`PrivacyUnit::User`]: crate::coordinator::accountant::PrivacyUnit
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FederatedSpec {
+    /// simulated user population U (the accountant's denominator)
+    pub population: usize,
+    /// Poisson sampling rate q over users, in (0, 1]
+    pub user_rate: f64,
+    /// examples each user contributes (mean under `examples_dist`)
+    pub examples_per_user: usize,
+    /// shape of the per-user example-count distribution
+    pub examples_dist: ExamplesDist,
+    /// local update steps each sampled user takes before transmitting
+    pub local_steps: usize,
+    /// aggregation tree-reduction fanout (>= 2)
+    pub fanout: usize,
+    /// overlap reduction rounds with backprop (false = barrier baseline)
+    pub overlap: bool,
+    /// threshold-group topology (see [`FederatedGrouping`])
+    pub grouping: FederatedGrouping,
+    /// per-reduction-round link latency charged by the makespan model (s)
+    pub link_latency: f64,
+}
+
+impl Default for FederatedSpec {
+    fn default() -> Self {
+        FederatedSpec {
+            population: 1_000_000,
+            user_rate: 2e-4,
+            examples_per_user: 1,
+            examples_dist: ExamplesDist::Fixed,
+            local_steps: 1,
+            fanout: 2,
+            overlap: true,
+            grouping: FederatedGrouping::Auto,
+            link_latency: 5e-4,
+        }
+    }
+}
+
+impl FederatedSpec {
+    pub fn with_population(population: usize, user_rate: f64) -> Self {
+        FederatedSpec { population, user_rate, ..Default::default() }
+    }
+
+    /// Expected sampled cohort size E[U] = q * population, rounded to the
+    /// nearest whole user (the accountant re-derives q from this integer
+    /// so the sampler and the plan agree exactly).
+    pub fn expected_users(&self) -> usize {
+        ((self.user_rate * self.population as f64).round() as usize).max(1)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.population == 0 {
+            bail!("federated.population must be > 0");
+        }
+        if !(self.user_rate > 0.0 && self.user_rate <= 1.0) {
+            bail!("federated.user_rate must be in (0, 1], got {}", self.user_rate);
+        }
+        if self.examples_per_user == 0 {
+            bail!("federated.examples_per_user must be > 0");
+        }
+        if self.local_steps == 0 {
+            bail!("federated.local_steps must be > 0");
+        }
+        if self.fanout < 2 {
+            bail!("federated.fanout must be >= 2, got {}", self.fanout);
+        }
+        if !(self.link_latency >= 0.0) {
+            bail!("federated.link_latency must be >= 0, got {}", self.link_latency);
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("population".into(), Json::Num(self.population as f64));
+        m.insert("user_rate".into(), Json::Num(self.user_rate));
+        m.insert("examples_per_user".into(), Json::Num(self.examples_per_user as f64));
+        m.insert("examples_dist".into(), Json::Str(self.examples_dist.token().into()));
+        m.insert("local_steps".into(), Json::Num(self.local_steps as f64));
+        m.insert("fanout".into(), Json::Num(self.fanout as f64));
+        m.insert("overlap".into(), Json::Bool(self.overlap));
+        m.insert("grouping".into(), Json::Str(self.grouping.token().into()));
+        m.insert("link_latency".into(), Json::Num(self.link_latency));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = FederatedSpec::default();
+        Ok(FederatedSpec {
+            population: opt_usize(j, "population", d.population)?,
+            user_rate: opt_f64(j, "user_rate", d.user_rate)?,
+            examples_per_user: opt_usize(j, "examples_per_user", d.examples_per_user)?,
+            examples_dist: opt_str(j, "examples_dist", d.examples_dist.token())?.parse()?,
+            local_steps: opt_usize(j, "local_steps", d.local_steps)?,
+            fanout: opt_usize(j, "fanout", d.fanout)?,
+            overlap: opt_bool(j, "overlap", d.overlap)?,
+            grouping: opt_str(j, "grouping", d.grouping.token())?.parse()?,
+            link_latency: opt_f64(j, "link_latency", d.link_latency)?,
+        })
+    }
+}
+
 // --------------------------------------------------------------- compress
 
 /// Gradient compression on the cross-replica reduction path (sharded and
@@ -920,6 +1162,10 @@ pub struct RunSpec {
     /// it degenerates to the sharded backend. Mutually exclusive with
     /// `shard`.
     pub hybrid: Option<HybridSpec>,
+    /// `Some` selects the federated user-level DP backend (stage-less
+    /// configs only): users become the dealt, clipped and accounted unit.
+    /// Mutually exclusive with both `shard` and `hybrid`.
+    pub federated: Option<FederatedSpec>,
     /// `Some` enables error-feedback gradient sparsification on the
     /// cross-replica reduction path; needs a `[shard]` or `[hybrid]`
     /// section (the backends with a reduction seam).
@@ -940,6 +1186,7 @@ impl Default for RunSpec {
             pipe: PipeSpec::default(),
             shard: None,
             hybrid: None,
+            federated: None,
             compress: None,
         }
     }
@@ -1075,6 +1322,87 @@ impl RunSpec {
                 }
             }
         }
+        if let Some(fed) = &self.federated {
+            fed.validate().context("invalid [federated] section")?;
+            // the federated backend IS a data-parallel topology of its
+            // own (users dealt over aggregation slots); a second
+            // data-parallel section would define the axis twice
+            if self.shard.is_some() || self.hybrid.is_some() {
+                bail!(
+                    "spec carries [federated] together with [shard]/[hybrid]; the federated \
+                     cohort already defines the data-parallel axis — keep exactly one section"
+                );
+            }
+            // sampling users at rate q must be able to target the expected
+            // cohort: an explicit E[U] override larger than the population
+            // is unsatisfiable
+            if self.expected_batch > 0 && self.expected_batch > fed.population {
+                bail!(
+                    "expected_batch {} exceeds federated.population {} — the expected \
+                     sampled cohort cannot outnumber the user population",
+                    self.expected_batch,
+                    fed.population
+                );
+            }
+            // one global Poisson draw over users, amplified accounting:
+            // sampler overrides and explicit pipeline schedules are
+            // meaningless here, same as for [shard]
+            if self.pipe.sampling != Sampling::Poisson {
+                bail!(
+                    "[federated] runs always Poisson-sample users (one global draw, \
+                     amplified user-level accounting); pipeline.sampling = \"{}\" would \
+                     have no effect — remove it",
+                    self.pipe.sampling.token()
+                );
+            }
+            if self.pipe.steps > 0 {
+                bail!(
+                    "[federated] runs derive their step count from epochs over the user \
+                     population; pipeline.steps is pipeline-only"
+                );
+            }
+            // the whole point of the backend is the user-level guarantee;
+            // non-private federated averaging has no clipping threshold
+            // to factor over users and is out of scope
+            if !self.clip.is_private() {
+                bail!(
+                    "[federated] models user-level DP (per-user delta clipping + noise); \
+                     clip.mode = nonprivate has no federated implementation"
+                );
+            }
+            // both collection paths go through the fused flat entry (the
+            // general path re-uses it with a saturating threshold)
+            if self.clip.flat_impl != FlatImpl::Fused {
+                bail!(
+                    "[federated] collection runs on the fused clipping entry; \
+                     clip.flat_impl = \"{}\" is single-device-only",
+                    self.clip.flat_impl.token()
+                );
+            }
+            // explicit grouping pins must agree with the clip policy:
+            // per-user thresholds are the per-device taxonomy cell with
+            // users as the clipped records; per-layer has no federated
+            // implementation
+            if self.clip.is_private() {
+                match (fed.grouping, self.clip.group_by) {
+                    (FederatedGrouping::Auto, GroupBy::PerLayer) => bail!(
+                        "clip.group_by = per-layer has no federated implementation \
+                         (the clipped record is the whole per-user delta); use flat or \
+                         per-device"
+                    ),
+                    (FederatedGrouping::Auto, _) => {}
+                    (FederatedGrouping::Flat, GroupBy::Flat) => {}
+                    (FederatedGrouping::PerUser, GroupBy::PerDevice) => {}
+                    (g, c) => bail!(
+                        "federated.grouping = {} conflicts with clip.group_by = {} \
+                         (per-user thresholds pair with group_by = per-device; use \
+                         grouping = \"auto\" or align the two)",
+                        g.token(),
+                        c.token()
+                    ),
+                }
+            }
+        }
         Ok(())
     }
 
@@ -1094,6 +1422,9 @@ impl RunSpec {
         }
         if let Some(hy) = &self.hybrid {
             m.insert("hybrid".into(), hy.to_json());
+        }
+        if let Some(fed) = &self.federated {
+            m.insert("federated".into(), fed.to_json());
         }
         if let Some(c) = &self.compress {
             m.insert("compress".into(), c.to_json());
@@ -1125,6 +1456,12 @@ impl RunSpec {
             hybrid: match j.opt("hybrid") {
                 Some(v) => {
                     Some(HybridSpec::from_json(v).context("in [hybrid] section")?)
+                }
+                None => None,
+            },
+            federated: match j.opt("federated") {
+                Some(v) => {
+                    Some(FederatedSpec::from_json(v).context("in [federated] section")?)
                 }
                 None => None,
             },
@@ -1363,6 +1700,12 @@ sampling = "round_robin"
         for s in [Sampling::Poisson, Sampling::RoundRobin] {
             assert_eq!(s.token().parse::<Sampling>().unwrap(), s);
         }
+        for g in [FederatedGrouping::Auto, FederatedGrouping::Flat, FederatedGrouping::PerUser] {
+            assert_eq!(g.token().parse::<FederatedGrouping>().unwrap(), g);
+        }
+        for e in [ExamplesDist::Fixed, ExamplesDist::Uniform] {
+            assert_eq!(e.token().parse::<ExamplesDist>().unwrap(), e);
+        }
         for (alias, want) in [
             ("round-robin", Sampling::RoundRobin),
             ("roundrobin", Sampling::RoundRobin),
@@ -1370,6 +1713,80 @@ sampling = "round_robin"
             assert_eq!(alias.parse::<Sampling>().unwrap(), want, "alias {alias}");
         }
         assert!("bernoulli".parse::<Sampling>().is_err());
+    }
+
+    #[test]
+    fn user_partition_degenerate_case_is_identity() {
+        // population == n_data, one example per user, fixed sizing: the
+        // map the degenerate-parity pin relies on
+        let d = DataSpec { task: "auto".into(), n_data: 64, seed: 7 };
+        let part = d.user_partition(64, 1, ExamplesDist::Fixed);
+        for (u, block) in part.iter().enumerate() {
+            assert_eq!(block, &vec![u], "user {u}");
+        }
+    }
+
+    #[test]
+    fn user_partition_is_deterministic_and_sized() {
+        let d = DataSpec { task: "auto".into(), n_data: 128, seed: 3 };
+        let a = d.user_partition(1000, 4, ExamplesDist::Uniform);
+        let b = d.user_partition(1000, 4, ExamplesDist::Uniform);
+        assert_eq!(a, b, "partition must be pure in (seed, shape)");
+        assert_eq!(a.len(), 1000);
+        let mut total = 0usize;
+        for block in &a {
+            assert!(!block.is_empty() && block.len() <= 7, "uniform sizes live in 1..=2e-1");
+            assert!(block.iter().all(|&i| i < 128));
+            total += block.len();
+        }
+        // mean ~ examples_per_user
+        let mean = total as f64 / 1000.0;
+        assert!((mean - 4.0).abs() < 0.3, "mean block size {mean} strayed from 4");
+        // fixed sizing is exact
+        for block in d.user_partition(100, 4, ExamplesDist::Fixed) {
+            assert_eq!(block.len(), 4);
+        }
+    }
+
+    #[test]
+    fn federated_spec_roundtrips_json_and_toml() {
+        let mut spec = RunSpec::for_config("lm_tiny");
+        spec.clip = ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive);
+        spec.federated = Some(FederatedSpec {
+            population: 250_000,
+            user_rate: 1e-3,
+            examples_per_user: 3,
+            examples_dist: ExamplesDist::Uniform,
+            local_steps: 2,
+            fanout: 4,
+            overlap: false,
+            grouping: FederatedGrouping::PerUser,
+            link_latency: 1e-3,
+        });
+        let back = RunSpec::from_json(&Json::parse(&spec.render_json()).unwrap()).unwrap();
+        assert_eq!(spec, back);
+        let toml = r#"
+config = "lm_tiny"
+epochs = 1.0
+
+[clip]
+group_by = "per-device"
+mode = "adaptive"
+
+[federated]
+population = 250000
+user_rate = 1e-3
+examples_per_user = 3
+examples_dist = "uniform"
+local_steps = 2
+fanout = 4
+overlap = false
+grouping = "per-user"
+link_latency = 1e-3
+"#;
+        let parsed = RunSpec::parse(toml).unwrap();
+        assert_eq!(parsed.federated, spec.federated);
+        assert_eq!(parsed.federated.unwrap().expected_users(), 250);
     }
 
     #[test]

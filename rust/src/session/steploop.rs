@@ -174,6 +174,7 @@ impl StepLoop {
             syncs: col.syncs + merged.syncs,
             calls: col.calls,
             truncated: col.truncated,
+            unit: self.core.plan.map(|p| p.unit.token()).unwrap_or("example"),
         })
     }
 }

@@ -172,44 +172,84 @@ fn read_suite(path: &Path) -> anyhow::Result<(String, Vec<(String, f64)>)> {
     Ok((suite, rows))
 }
 
+/// Outcome of [`diff_dirs`]: the regression gate's verdict plus the
+/// suites/rows that have no prior trajectory to regress against.
+#[derive(Debug, Clone, Default)]
+pub struct BenchDiff {
+    /// step-hot-path rows compared against a prior mean
+    pub compared: usize,
+    /// rows whose mean regressed beyond the threshold — these fail CI
+    pub regressions: Vec<BenchRegression>,
+    /// suites present only in the NEW trajectory (`"suite"`) or rows
+    /// present only in the new side of a shared suite (`"suite/row"`) —
+    /// a freshly added bench has no history, so these are REPORTED as
+    /// additions and never fail the gate
+    pub additions: Vec<String>,
+}
+
+/// List the `BENCH_<suite>.json` files in a directory (empty if absent).
+fn bench_files(dir: &Path) -> Vec<String> {
+    let mut files = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for entry in entries.flatten() {
+            let fname = entry.file_name().to_string_lossy().to_string();
+            if fname.starts_with("BENCH_") && fname.ends_with(".json") {
+                files.push(fname);
+            }
+        }
+    }
+    files.sort();
+    files
+}
+
 /// Diff the `BENCH_*.json` trajectory between two directories: for every
 /// suite present in BOTH, compare the rows whose name marks the step hot
 /// path (contains "/step") and report those whose mean regressed by more
-/// than `threshold` (e.g. 0.15 = 15%). Returns (rows compared,
-/// regressions). Suites or rows present on only one side are skipped —
-/// a fresh bench or an artifact-less smoke run must not fail the gate.
+/// than `threshold` (e.g. 0.15 = 15%). Suites or rows present only in the
+/// NEW trajectory are additions — a bench the prior trajectory has never
+/// seen (e.g. a freshly landed backend) is reported, never failed;
+/// old-only suites (a retired bench) are skipped entirely.
 pub fn diff_dirs(
     old_dir: impl AsRef<Path>,
     new_dir: impl AsRef<Path>,
     threshold: f64,
-) -> anyhow::Result<(usize, Vec<BenchRegression>)> {
-    let mut compared = 0usize;
-    let mut regressions = Vec::new();
-    let entries = match std::fs::read_dir(old_dir.as_ref()) {
-        Ok(e) => e,
-        Err(_) => return Ok((0, regressions)), // no prior trajectory
-    };
-    for entry in entries.flatten() {
-        let fname = entry.file_name().to_string_lossy().to_string();
-        if !(fname.starts_with("BENCH_") && fname.ends_with(".json")) {
+) -> anyhow::Result<BenchDiff> {
+    let (old_dir, new_dir) = (old_dir.as_ref(), new_dir.as_ref());
+    let mut diff = BenchDiff::default();
+    let old_files = bench_files(old_dir);
+    for fname in bench_files(new_dir) {
+        if old_files.contains(&fname) {
             continue;
         }
-        let new_path = new_dir.as_ref().join(&fname);
+        // suite with no prior trajectory: an addition, not a regression
+        let (suite, _) = read_suite(&new_dir.join(&fname))?;
+        diff.additions.push(if suite.is_empty() {
+            fname.clone()
+        } else {
+            suite
+        });
+    }
+    for fname in &old_files {
+        let new_path = new_dir.join(fname);
         if !new_path.is_file() {
-            continue;
+            continue; // retired bench: nothing to gate
         }
-        let (suite, old_rows) = read_suite(&entry.path())?;
+        let (suite, old_rows) = read_suite(&old_dir.join(fname))?;
         let (_, new_rows) = read_suite(&new_path)?;
-        for (name, old_mean) in &old_rows {
+        for (name, new_mean) in &new_rows {
+            // new step-path rows inside a known suite are additions too
+            if name.contains("/step") && !old_rows.iter().any(|(n, _)| n == name) {
+                diff.additions.push(format!("{suite}/{name}"));
+            }
+            let Some((_, old_mean)) = old_rows.iter().find(|(n, _)| n == name) else {
+                continue;
+            };
             if !name.contains("/step") || *old_mean <= 0.0 {
                 continue;
             }
-            let Some((_, new_mean)) = new_rows.iter().find(|(n, _)| n == name) else {
-                continue;
-            };
-            compared += 1;
+            diff.compared += 1;
             if *new_mean > old_mean * (1.0 + threshold) {
-                regressions.push(BenchRegression {
+                diff.regressions.push(BenchRegression {
                     suite: suite.clone(),
                     name: name.clone(),
                     old_mean_s: *old_mean,
@@ -218,7 +258,7 @@ pub fn diff_dirs(
             }
         }
     }
-    Ok((compared, regressions))
+    Ok(diff)
 }
 
 /// Run `f` for `warmup` + `iters` iterations and time each.
@@ -262,6 +302,38 @@ mod tests {
         assert_eq!(rs[0].get("mean_s").unwrap().f64().unwrap(), 0.5);
         assert_eq!(rs[1].get("iters").unwrap().usize().unwrap(), 1);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn diff_reports_new_suites_as_additions_not_regressions() {
+        let base = std::env::temp_dir().join(format!("gw_benchdiff_{}", std::process::id()));
+        let (old, new) = (base.join("old"), base.join("new"));
+        std::fs::create_dir_all(&old).unwrap();
+        std::fs::create_dir_all(&new).unwrap();
+        let shared_old = vec![
+            BenchResult { name: "x/step".into(), iters: 3, mean_s: 1.0, std_s: 0.0, min_s: 1.0 },
+        ];
+        let shared_new = vec![
+            // 3x regression on the known row...
+            BenchResult { name: "x/step".into(), iters: 3, mean_s: 3.0, std_s: 0.0, min_s: 3.0 },
+            // ...plus a step row the trajectory has never seen
+            BenchResult { name: "y/step".into(), iters: 3, mean_s: 9.0, std_s: 0.0, min_s: 9.0 },
+        ];
+        write_json_to(old.join("BENCH_shared.json"), "shared", &shared_old).unwrap();
+        write_json_to(new.join("BENCH_shared.json"), "shared", &shared_new).unwrap();
+        // a whole suite present only on the new side (the fresh-bench case)
+        write_json_to(new.join("BENCH_federated.json"), "federated", &shared_new).unwrap();
+        // and one retired on the old side: skipped entirely
+        write_json_to(old.join("BENCH_retired.json"), "retired", &shared_old).unwrap();
+
+        let d = diff_dirs(&old, &new, 0.15).unwrap();
+        assert_eq!(d.compared, 1, "only the shared row is gated");
+        assert_eq!(d.regressions.len(), 1);
+        assert_eq!(d.regressions[0].name, "x/step");
+        assert!(d.additions.contains(&"federated".to_string()), "{:?}", d.additions);
+        assert!(d.additions.contains(&"shared/y/step".to_string()), "{:?}", d.additions);
+        assert!(!d.additions.iter().any(|a| a.contains("retired")), "{:?}", d.additions);
+        std::fs::remove_dir_all(&base).ok();
     }
 
     #[test]

@@ -89,6 +89,45 @@ fn noise_multiplier_inverts_golden_epsilons() {
     }
 }
 
+/// (q, sigma, steps, delta, epsilon_reference) at federated user-level
+/// sampling rates — q = E[U]/population, orders of magnitude below the
+/// example-level fixtures above. Computed with the same independent
+/// lgamma reference; pins the deep-amplification tail of the q < 1
+/// branch that the [federated] backend's plans live on.
+const GOLDEN_USER_LEVEL: &[(f64, f64, u64, f64, f64)] = &[
+    (2e-4, 0.6, 10_000, 1e-6, 2.947_305_110_0),
+    (2e-4, 1.0, 100_000, 1e-6, 0.977_025_822_5),
+    (5e-3, 0.8, 2_000, 1e-5, 3.145_728_847_7),
+    (1e-3, 1.2, 30_000, 1e-6, 1.066_723_710_5),
+];
+
+#[test]
+fn user_level_q_branch_matches_reference_accountant() {
+    use gwclip::session::FederatedSpec;
+    for &(q, sigma, steps, delta, want) in GOLDEN_USER_LEVEL {
+        let (got, alpha) = epsilon_for(q, sigma, steps, delta);
+        let rel = (got - want).abs() / want;
+        assert!(
+            rel < 1e-6,
+            "(q={q}, sigma={sigma}, T={steps}, delta={delta}): \
+             eps {got} vs reference {want} (alpha*={alpha}, rel err {rel:.2e})"
+        );
+    }
+    // and the q the [federated] builder hands the accountant — the
+    // rounded E[U] over the population — reproduces the fixture rates
+    // exactly, so these pins cover the plan the backend actually builds
+    for (population, rate, q) in
+        [(1_000_000usize, 2e-4, 2e-4), (2_000_000, 5e-3, 5e-3), (1_000_000, 1e-3, 1e-3)]
+    {
+        let fed = FederatedSpec::with_population(population, rate);
+        let derived = fed.expected_users() as f64 / population as f64;
+        assert!(
+            (derived - q).abs() < 1e-15,
+            "population {population} rate {rate}: derived q {derived} != fixture q {q}"
+        );
+    }
+}
+
 #[test]
 fn amplification_strictly_beats_q1_composition_for_pipeline_schedules() {
     // the tentpole guarantee: a Poisson pipeline schedule (q = mb/n over T

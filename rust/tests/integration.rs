@@ -15,8 +15,8 @@ use gwclip::data::lm::MarkovCorpus;
 use gwclip::data::Dataset;
 use gwclip::runtime::{HostValue, Runtime, Tensor};
 use gwclip::session::{
-    ClipMode, ClipPolicy, CompressKind, CompressSpec, GroupBy, HybridGrouping, HybridSpec,
-    OptimSpec, PrivacySpec, RunSpec, Sampling, Session, SessionBuilder, ShardSpec,
+    ClipMode, ClipPolicy, CompressKind, CompressSpec, FederatedSpec, GroupBy, HybridGrouping,
+    HybridSpec, OptimSpec, PrivacySpec, RunSpec, Sampling, Session, SessionBuilder, ShardSpec,
 };
 
 // The xla PJRT client is !Send/!Sync, so a shared static is impossible;
@@ -755,6 +755,105 @@ fn backend_parity_hybrid_stageless_degenerates_to_sharded() {
     for (x, y) in pa.iter().zip(pb) {
         assert_eq!(x.data, y.data, "parameters diverged");
     }
+}
+
+#[test]
+fn backend_parity_federated_degenerate_cohort_vs_sharded() {
+    // The federated parity contract: with population == n_data, one
+    // example per user and local_steps = 1, "sample users, clip each
+    // user's model delta" IS "sample examples, clip each example's
+    // gradient" — a user's delta over one local step on its single
+    // example is that example's gradient. The federated run must then be
+    // BITWISE identical to the sharded run with workers = slots and the
+    // same seed: same per-step events, same adaptive threshold
+    // trajectory, same final params, and the shared DP RNG stream parked
+    // at the same position. Only the unit of privacy differs.
+    let data = tiny_mixture(256, 9);
+    let n = data.len();
+    // resmlp_tiny batch 8 -> per-slot share round(8 * 0.8) = 6; a cohort
+    // of E[U] = 12 derives 2 slots, matching the 2-worker sharded run
+    let expected = 12usize;
+    let build = |federated: bool| {
+        let mut b = Session::builder(rt(), "resmlp_tiny")
+            .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+            .clip(ClipPolicy {
+                clip_init: 0.5,
+                target_q: 0.6,
+                ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive)
+            })
+            .optim(OptimSpec::sgd(0.1))
+            .epochs(0.5)
+            .seed(13);
+        if federated {
+            b = b.federated(FederatedSpec {
+                population: n,
+                user_rate: expected as f64 / n as f64,
+                ..Default::default()
+            });
+        } else {
+            b = b.shard(ShardSpec { workers: 2, fanout: 2, ..Default::default() });
+        }
+        b.build(n).unwrap()
+    };
+    let mut sharded = build(false);
+    let mut fed = build(true);
+    let e = fed.federated_engine().expect("federated backend selected");
+    assert!(e.is_fused(), "1-example users at local_steps = 1 must take the fused path");
+    assert_eq!(e.slots, 2, "E[U] = 12 over batch-8 replicas derives 2 slots");
+    assert_eq!(sharded.total_steps, fed.total_steps);
+
+    // identical releases and multipliers; only the unit flips
+    let (pa, pb) = (sharded.plan().unwrap(), fed.plan().unwrap());
+    assert_eq!(pa.q, pb.q);
+    assert_eq!(pa.steps, pb.steps);
+    assert_eq!(pa.sigma_grad, pb.sigma_grad);
+    assert_eq!(pa.sigma_quantile, pb.sigma_quantile);
+    assert!(sharded.describe().contains("example-level"));
+    assert!(fed.describe().contains("user-level"));
+
+    for step in 0..sharded.total_steps {
+        let a = sharded.step(&data).unwrap();
+        let b = fed.step(&data).unwrap();
+        assert_eq!(a.unit, "example", "step {step}");
+        assert_eq!(b.unit, "user", "step {step}");
+        assert_eq!(a.batch_size, b.batch_size, "step {step}");
+        assert_eq!(a.truncated, b.truncated, "step {step}");
+        assert_eq!(sharded.thresholds(), fed.thresholds(), "step {step}");
+        assert_eq!(a.loss, b.loss, "step {step}");
+        assert_eq!(a.clip_frac, b.clip_frac, "step {step}");
+    }
+    assert!(fed.federated_engine().unwrap().replicas_in_sync());
+    let pa = sharded.params().unwrap();
+    let pb = fed.params().unwrap();
+    assert_eq!(pa.len(), pb.len());
+    for (x, y) in pa.iter().zip(pb) {
+        assert_eq!(x.data, y.data, "parameters diverged");
+    }
+    // the strongest pin: after identical histories the shared DP RNG
+    // streams (sampling + noise + quantile draws) sit at the same
+    // position — one further draw from each must coincide bitwise
+    assert_eq!(
+        sharded.core_mut().rng.uniform().to_bits(),
+        fed.core_mut().rng.uniform().to_bits(),
+        "DP RNG streams diverged during the run"
+    );
+}
+
+#[test]
+fn federated_backend_rejects_staged_configs() {
+    // the federated backend replicates the FULL model per aggregation
+    // slot; a staged (pipeline-partitioned) config has no full-model
+    // executable to replicate, so the builder must bail rather than
+    // silently train something else
+    let err = Session::builder(rt(), "lm_tiny_pipe")
+        .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.0 })
+        .clip(ClipPolicy { clip_init: 0.5, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed) })
+        .optim(OptimSpec::sgd(0.1))
+        .epochs(0.5)
+        .federated(FederatedSpec::with_population(256, 12.0 / 256.0))
+        .build(256)
+        .unwrap_err();
+    assert!(err.to_string().contains("pipeline stages"), "unexpected error: {err:#}");
 }
 
 #[test]

@@ -768,3 +768,135 @@ fn prop_compress_ratio_shrinks_reduction_cost_monotonically() {
         }
     }
 }
+
+// ------------------------------------------------- federated user level
+
+/// The acceptance property of per-user delta clipping — group-wise
+/// clipping with groups = users: a user's transmitted contribution is the
+/// sum of its local-step gradient sums over however many examples it
+/// owns, and clipping that WHOLE delta's L2 norm to C bounds the
+/// user-level sensitivity by C regardless of `examples_per_user` and
+/// `local_steps`. Removing a user from the aggregate changes it by
+/// exactly that user's clipped delta.
+#[test]
+fn prop_federated_per_user_clip_bounds_user_sensitivity() {
+    let mut r = Xoshiro::seeded(41);
+    for case in 0..40 {
+        let dim = 4 + r.below(12);
+        let users = 1 + r.below(8);
+        let c_thr = 0.1 + 2.0 * r.uniform();
+        let mut aggregate = vec![0f64; dim];
+        let mut clipped_deltas: Vec<Vec<f64>> = Vec::new();
+        for _ in 0..users {
+            // heterogeneous cohort: example counts and local-step counts
+            // vary per user, and the raw delta magnitude grows with both
+            let examples = 1 + r.below(7);
+            let local_steps = 1 + r.below(4);
+            let mut delta = vec![0f64; dim];
+            for _ in 0..local_steps {
+                for _ in 0..examples {
+                    for d in delta.iter_mut() {
+                        *d += 6.0 * r.uniform() - 3.0;
+                    }
+                }
+            }
+            // the engine's host-side clip: one global L2 norm across the
+            // full delta, factor min(1, C/norm)
+            let norm = delta.iter().map(|x| x * x).sum::<f64>().sqrt();
+            let factor = if norm > c_thr { c_thr / norm } else { 1.0 };
+            let clipped: Vec<f64> = delta.iter().map(|x| x * factor).collect();
+            let clipped_norm = clipped.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!(
+                clipped_norm <= c_thr + 1e-9,
+                "case {case}: {examples} examples x {local_steps} local steps moved the \
+                 aggregate by {clipped_norm} > C {c_thr}"
+            );
+            for (a, x) in aggregate.iter_mut().zip(&clipped) {
+                *a += *x;
+            }
+            clipped_deltas.push(clipped);
+        }
+        // user-level neighbouring: dropping user u changes the aggregate
+        // by exactly u's clipped delta, norm <= C — independent of how
+        // many examples or local steps that user contributed
+        for (u, delta) in clipped_deltas.iter().enumerate() {
+            let moved = delta.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!(moved <= c_thr + 1e-9, "case {case}: user {u} moved {moved} > C");
+        }
+    }
+}
+
+/// The slot-major noise discipline: every aggregation slot adds its local
+/// share sigma_g/sqrt(slots) whether it drew 0, 1 or many users, so the
+/// merged noise variance equals the accountant's calibration exactly at
+/// ANY sampled cohort size U_t — sigma*C per coordinate for the flat
+/// group, sigma*quadrature(thresholds) for per-user slot groups (the
+/// same per-device quadrature bound, with users as the clipped records).
+#[test]
+fn prop_federated_merged_noise_matches_accountant_at_any_cohort_size() {
+    use gwclip::shard::quadrature_bound;
+    let mut r = Xoshiro::seeded(42);
+    for case in 0..40 {
+        let slots = 1 + r.below(8);
+        let sigma = 0.3 + 2.0 * r.uniform();
+        let share = 1.0 / (slots as f64).sqrt();
+        // realized cohorts of wildly different sizes, including the empty
+        // draw: U_t must appear NOWHERE in the noise calculation, which
+        // is the whole proof — the formula below never references it
+        for u_t in [0usize, 1, slots, 3 * slots + r.below(40)] {
+            // per-user grouping: K = slots, equal-budget stds over the
+            // slot thresholds; slot s's unit carries group s
+            let thresholds: Vec<f64> = (0..slots).map(|_| 0.1 + 2.0 * r.uniform()).collect();
+            let dims = vec![10u64; slots];
+            let stds = Allocation::EqualBudget.stds(sigma, &thresholds, &dims);
+            let merged_var: f64 = (0..slots).map(|s| (stds[s] * share).powi(2)).sum();
+            let want = sigma * quadrature_bound(&thresholds);
+            assert!(
+                (merged_var.sqrt() - want).abs() < 1e-9 * want.max(1.0),
+                "case {case} U_t={u_t}: per-user merged std {} != sigma*quadrature {want}",
+                merged_var.sqrt()
+            );
+
+            // flat grouping: K = 1, every slot's unit carries group 0
+            let c_thr = thresholds[0];
+            let stds = Allocation::EqualBudget.stds(sigma, &[c_thr], &[10u64]);
+            let merged_var: f64 = (0..slots).map(|_| (stds[0] * share).powi(2)).sum();
+            let want = sigma * c_thr;
+            assert!(
+                (merged_var.sqrt() - want).abs() < 1e-9 * want.max(1.0),
+                "case {case} U_t={u_t}: flat merged std {} != sigma*C {want}",
+                merged_var.sqrt()
+            );
+        }
+    }
+}
+
+/// User-level amplification is monotone in the user sampling rate: a
+/// larger `user_rate` means a larger q = E[U]/population, and the
+/// accountant's epsilon at fixed (sigma, steps, delta) never decreases.
+#[test]
+fn prop_federated_user_level_q_monotone_in_user_rate() {
+    use gwclip::session::FederatedSpec;
+    let population = 1_000_000usize;
+    let (sigma, steps, delta) = (1.2, 1000u64, 1e-6);
+    let mut last_q = 0.0f64;
+    let mut last_eps = 0.0f64;
+    for rate in [1e-5, 1e-4, 5e-4, 2e-3, 1e-2, 5e-2] {
+        let fed = FederatedSpec::with_population(population, rate);
+        fed.validate().unwrap();
+        let q = fed.expected_users() as f64 / population as f64;
+        assert!(q > last_q, "q must grow with user_rate: {q} !> {last_q}");
+        assert!(q <= 1.0);
+        let (eps, _) = accountant::epsilon_for(q, sigma, steps, delta);
+        assert!(
+            eps >= last_eps,
+            "epsilon must not decrease with q: rate {rate} gave {eps} < {last_eps}"
+        );
+        (last_q, last_eps) = (q, eps);
+    }
+    // and the integer rounding keeps sampler and plan in agreement: the
+    // re-derived q times the population is a whole number of users
+    let fed = FederatedSpec::with_population(250_000, 1e-3);
+    let q = fed.expected_users() as f64 / 250_000.0;
+    assert_eq!((q * 250_000.0).round() as usize, fed.expected_users());
+}

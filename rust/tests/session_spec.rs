@@ -6,8 +6,9 @@ use gwclip::coordinator::noise::Allocation;
 use gwclip::coordinator::trainer::Method;
 use gwclip::pipeline::PipelineMode;
 use gwclip::session::{
-    ClipMode, ClipPolicy, CompressKind, CompressSpec, DataSpec, GroupBy, HybridGrouping,
-    HybridSpec, OptimSpec, PipeSpec, PrivacySpec, RunSpec, Sampling, ShardGrouping, ShardSpec,
+    ClipMode, ClipPolicy, CompressKind, CompressSpec, DataSpec, ExamplesDist, FederatedGrouping,
+    FederatedSpec, FlatImpl, GroupBy, HybridGrouping, HybridSpec, OptimSpec, PipeSpec,
+    PrivacySpec, RunSpec, Sampling, ShardGrouping, ShardSpec,
 };
 use gwclip::util::json::Json;
 
@@ -543,4 +544,229 @@ fn compress_validation_rejects_each_nonsense_class() {
     // unknown kind token rejected at parse time
     let doc = "config = \"resmlp\"\nepochs = 1.0\n\n[shard]\nworkers = 2\n\n[compress]\nkind = \"gzip\"\n";
     assert!(RunSpec::parse(doc).is_err());
+}
+
+#[test]
+fn federated_spec_roundtrips_json_and_toml() {
+    // a spec without [federated] stays federated-less through a round-trip
+    let plain = RunSpec::for_config("lm_tiny");
+    assert_eq!(roundtrip(&plain).federated, None);
+
+    // JSON: every grouping and dist token survives a round-trip
+    for grouping in [FederatedGrouping::Auto, FederatedGrouping::Flat, FederatedGrouping::PerUser]
+    {
+        for dist in [ExamplesDist::Fixed, ExamplesDist::Uniform] {
+            let mut spec = RunSpec::for_config("lm_tiny");
+            spec.clip = ClipPolicy::new(
+                match grouping {
+                    FederatedGrouping::Flat => GroupBy::Flat,
+                    _ => GroupBy::PerDevice,
+                },
+                ClipMode::Fixed,
+            );
+            spec.federated = Some(FederatedSpec {
+                population: 50_000,
+                user_rate: 4e-4,
+                examples_per_user: 3,
+                examples_dist: dist,
+                local_steps: 2,
+                fanout: 4,
+                overlap: false,
+                grouping,
+                link_latency: 1e-3,
+            });
+            assert_eq!(roundtrip(&spec), spec, "{grouping:?} x {dist:?}");
+        }
+    }
+
+    // TOML: the [federated] section parses with defaults for omitted keys
+    let toml = r#"
+config = "lm_tiny"
+epochs = 2.0
+
+[clip]
+group_by = "per-device"
+mode = "fixed"
+
+[federated]
+population = 100000
+user_rate = 2e-4
+examples_per_user = 2
+grouping = "per-user"
+"#;
+    let spec = RunSpec::parse(toml).unwrap();
+    let fed = spec.federated.expect("[federated] section must select the federated backend");
+    assert_eq!(fed.population, 100_000);
+    assert_eq!(fed.user_rate, 2e-4);
+    assert_eq!(fed.examples_per_user, 2);
+    assert_eq!(fed.examples_dist, ExamplesDist::Fixed);
+    assert_eq!(fed.local_steps, FederatedSpec::default().local_steps);
+    assert_eq!(fed.fanout, FederatedSpec::default().fanout);
+    assert!(fed.overlap, "overlap defaults on");
+    assert_eq!(fed.grouping, FederatedGrouping::PerUser);
+    assert_eq!(fed.expected_users(), 20, "E[U] = q * population, rounded");
+    // the JSON render re-parses to the same spec
+    assert_eq!(RunSpec::parse(&spec.render_json()).unwrap(), spec);
+    spec.validate().unwrap();
+}
+
+#[test]
+fn federated_grouping_and_dist_tokens_roundtrip() {
+    for g in [FederatedGrouping::Auto, FederatedGrouping::Flat, FederatedGrouping::PerUser] {
+        assert_eq!(g.token().parse::<FederatedGrouping>().unwrap(), g);
+    }
+    for (alias, want) in [
+        ("peruser", FederatedGrouping::PerUser),
+        ("per_user", FederatedGrouping::PerUser),
+        ("global", FederatedGrouping::Flat),
+    ] {
+        assert_eq!(alias.parse::<FederatedGrouping>().unwrap(), want, "alias {alias}");
+    }
+    assert!("per-layer".parse::<FederatedGrouping>().is_err(), "per-layer has no federated cell");
+    for d in [ExamplesDist::Fixed, ExamplesDist::Uniform] {
+        assert_eq!(d.token().parse::<ExamplesDist>().unwrap(), d);
+    }
+    assert!("zipf".parse::<ExamplesDist>().is_err());
+}
+
+#[test]
+fn federated_validation_rejects_each_nonsense_class() {
+    let ok = {
+        let mut s = RunSpec::for_config("lm_tiny");
+        s.clip = ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed);
+        s.federated = Some(FederatedSpec::with_population(100_000, 2e-4));
+        s
+    };
+    ok.validate().unwrap();
+
+    // exactly one data-parallel section: the cohort IS the topology
+    let mut s = ok.clone();
+    s.shard = Some(ShardSpec::with_workers(2));
+    assert!(s.validate().is_err(), "[federated] x [shard]");
+    let mut s = ok.clone();
+    s.hybrid = Some(HybridSpec::with_replicas(2));
+    assert!(s.validate().is_err(), "[federated] x [hybrid]");
+
+    // an explicit E[U] override cannot outnumber the population
+    let mut s = ok.clone();
+    s.federated = Some(FederatedSpec::with_population(100, 0.5));
+    s.expected_batch = 101;
+    assert!(s.validate().is_err(), "expected_batch > population");
+    let mut s = ok.clone();
+    s.federated = Some(FederatedSpec::with_population(100, 0.5));
+    s.expected_batch = 100;
+    s.validate().unwrap();
+
+    // user_rate outside (0, 1]
+    for rate in [0.0, -0.1, 1.5] {
+        let mut s = ok.clone();
+        s.federated = Some(FederatedSpec::with_population(100_000, rate));
+        assert!(s.validate().is_err(), "user_rate {rate}");
+    }
+    let mut s = ok.clone();
+    s.federated = Some(FederatedSpec::with_population(100_000, 1.0));
+    s.validate().unwrap();
+
+    // degenerate cohort shape knobs
+    let mut s = ok.clone();
+    s.federated = Some(FederatedSpec { population: 0, ..Default::default() });
+    assert!(s.validate().is_err(), "population == 0");
+    let mut s = ok.clone();
+    s.federated = Some(FederatedSpec { examples_per_user: 0, ..Default::default() });
+    assert!(s.validate().is_err(), "examples_per_user == 0");
+    let mut s = ok.clone();
+    s.federated = Some(FederatedSpec { local_steps: 0, ..Default::default() });
+    assert!(s.validate().is_err(), "local_steps == 0");
+    let mut s = ok.clone();
+    s.federated = Some(FederatedSpec { fanout: 1, ..Default::default() });
+    assert!(s.validate().is_err(), "fanout < 2");
+    let mut s = ok.clone();
+    s.federated = Some(FederatedSpec { link_latency: -1.0, ..Default::default() });
+    assert!(s.validate().is_err(), "negative link latency");
+
+    // adaptive per-user thresholds without a quantile budget slice leave
+    // the clip-count releases unnoised — same rule as every backend
+    let mut s = ok.clone();
+    s.clip = ClipPolicy { clip_init: 0.5, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive) };
+    s.privacy.quantile_r = 0.0;
+    assert!(s.validate().is_err(), "adaptive x quantile_r == 0");
+    let mut s = ok.clone();
+    s.clip = ClipPolicy { clip_init: 0.5, ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive) };
+    s.privacy.quantile_r = 0.01;
+    s.validate().unwrap();
+
+    // the backend models user-level DP; a non-private federated run has
+    // no per-user threshold to speak of
+    let mut s = ok.clone();
+    s.clip = ClipPolicy::non_private();
+    assert!(s.validate().is_err(), "nonprivate x [federated]");
+
+    // collection runs on the fused clipping entry only
+    let mut s = ok.clone();
+    s.clip = ClipPolicy {
+        flat_impl: FlatImpl::Ghost,
+        ..ClipPolicy::new(GroupBy::Flat, ClipMode::Fixed)
+    };
+    assert!(s.validate().is_err(), "ghost flat_impl x [federated]");
+
+    // explicit grouping conflicting with the clip policy
+    let mut s = ok.clone();
+    s.federated =
+        Some(FederatedSpec { grouping: FederatedGrouping::Flat, ..Default::default() });
+    assert!(s.validate().is_err(), "flat grouping x per-device policy");
+    let mut s = ok.clone();
+    s.clip = ClipPolicy::new(GroupBy::Flat, ClipMode::Fixed);
+    s.federated =
+        Some(FederatedSpec { grouping: FederatedGrouping::PerUser, ..Default::default() });
+    assert!(s.validate().is_err(), "per-user grouping x flat policy");
+    // per-layer has no federated cell, even through auto
+    let mut s = ok.clone();
+    s.clip = ClipPolicy::new(GroupBy::PerLayer, ClipMode::Fixed);
+    assert!(s.validate().is_err(), "per-layer policy x [federated]");
+
+    // sampler/schedule overrides cannot be silently ignored
+    let mut s = ok.clone();
+    s.pipe.sampling = Sampling::RoundRobin;
+    assert!(s.validate().is_err(), "round_robin sampling x [federated]");
+    let mut s = ok.clone();
+    s.pipe.steps = 10;
+    assert!(s.validate().is_err(), "pipeline.steps x [federated]");
+}
+
+#[test]
+fn federated_user_partition_is_deterministic_and_well_formed() {
+    // the builder-side partition: blocks are non-empty contiguous index
+    // runs (wrapping modulo n_data when the simulated population outgrows
+    // the finite corpus), and the Uniform shape is deterministic in the
+    // data seed — it must never touch the training RNG stream
+    let d = DataSpec { n_data: 64, ..Default::default() };
+    for (population, e_per_u, dist) in [
+        (64usize, 1usize, ExamplesDist::Fixed),
+        (32, 2, ExamplesDist::Fixed),
+        (16, 2, ExamplesDist::Uniform),
+        (100, 3, ExamplesDist::Uniform), // population outgrows the corpus
+    ] {
+        let p1 = d.user_partition(population, e_per_u, dist);
+        let p2 = d.user_partition(population, e_per_u, dist);
+        assert_eq!(p1, p2, "partition must be deterministic");
+        assert_eq!(p1.len(), population);
+        for block in &p1 {
+            assert!(!block.is_empty(), "empty user block");
+            for (j, &i) in block.iter().enumerate() {
+                assert!(i < d.n_data, "index {i} out of range");
+                assert_eq!(i, (block[0] + j) % d.n_data, "blocks are contiguous mod n_data");
+            }
+        }
+    }
+    // exact-tiling cohorts cover the corpus with no example shared
+    // between users — the shape the user-level guarantee is cleanest on
+    let exact = d.user_partition(32, 2, ExamplesDist::Fixed);
+    let mut seen = vec![false; d.n_data];
+    for block in &exact {
+        for &i in block {
+            assert!(!seen[i], "index {i} owned by two users");
+            seen[i] = true;
+        }
+    }
+    assert!(seen.iter().all(|&s| s), "exact tiling left examples unowned");
 }
