@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
             failed = true;
             println!("FAIL [{tag}]: describe() does not report user-level accounting");
         }
-        let (mut ov, mut ba, mut n) = (0.0, 0.0, 0usize);
+        let (mut ov, mut ba, mut wall, mut n) = (0.0, 0.0, 0.0, 0usize);
         let r = bench(&format!("federated/{tag}/step"), 1, iters(4), || {
             let st = sess.step(&lm).unwrap();
             if st.unit != "user" {
@@ -65,13 +65,23 @@ fn main() -> anyhow::Result<()> {
             }
             ov += st.sim_overlap_secs;
             ba += st.sim_barrier_secs;
+            wall += st.collect_wall_secs;
             n += 1;
         });
-        let (ov, ba) = (ov / n as f64, ba / n as f64);
-        println!("{}   sim overlap {:.4}s barrier {:.4}s", r.report(), ov, ba);
+        let (ov, ba, wall) = (ov / n as f64, ba / n as f64, wall / n as f64);
+        println!(
+            "{}   sim overlap {:.4}s barrier {:.4}s  measured collect {:.4}s",
+            r.report(),
+            ov,
+            ba,
+            wall
+        );
         rows.push(r);
         rows.push(BenchResult::scalar(&format!("federated/{tag}/sim-overlap"), ov));
         rows.push(BenchResult::scalar(&format!("federated/{tag}/sim-barrier"), ba));
+        // measured wall-clock next to the simulated columns, for the
+        // bench-diff trajectory (reported, never gated)
+        rows.push(BenchResult::scalar(&format!("federated/{tag}/collect-wall"), wall));
     }
 
     let path = write_json("federated", &rows)?;

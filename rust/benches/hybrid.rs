@@ -44,14 +44,15 @@ fn main() -> anyhow::Result<()> {
             .steps(1000) // plenty of scheduled steps for the bench loop
             .hybrid(HybridSpec::with_replicas(replicas))
             .build(data.len())?;
-        let (mut ov, mut ba, mut n) = (0.0, 0.0, 0usize);
+        let (mut ov, mut ba, mut wall, mut n) = (0.0, 0.0, 0.0, 0usize);
         let r = bench(&format!("hybrid/R{replicas}/step"), 1, iters(3), || {
             let st = sess.step(&data).unwrap();
             ov += st.sim_overlap_secs;
             ba += st.sim_barrier_secs;
+            wall += st.collect_wall_secs;
             n += 1;
         });
-        let (ov, ba) = (ov / n as f64, ba / n as f64);
+        let (ov, ba, wall) = (ov / n as f64, ba / n as f64, wall / n as f64);
         let verdict = if replicas >= 2 {
             if ov < ba {
                 "PASS: overlap beats barrier"
@@ -73,6 +74,9 @@ fn main() -> anyhow::Result<()> {
         rows.push(r);
         rows.push(BenchResult::scalar(&format!("hybrid/R{replicas}/sim-overlap"), ov));
         rows.push(BenchResult::scalar(&format!("hybrid/R{replicas}/sim-barrier"), ba));
+        // measured wall-clock next to the simulated columns, for the
+        // bench-diff trajectory (reported, never gated)
+        rows.push(BenchResult::scalar(&format!("hybrid/R{replicas}/collect-wall"), wall));
     }
 
     // compressed reduction on the same seam: error-feedback top-k at

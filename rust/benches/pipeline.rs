@@ -43,14 +43,28 @@ fn main() -> anyhow::Result<()> {
                 _ => "flat clipping (sync + remat)",
             };
             let mut sim_acc = Vec::new();
+            let mut wall_acc = Vec::new();
             let r = bench(&format!("pipeline/J{n_micro}/{label}"), 1, iters(4), || {
                 let st = sess.step(&data).unwrap();
                 sim_acc.push(st.sim_secs);
+                wall_acc.push(st.collect_wall_secs);
             });
             let sim = sim_acc.iter().sum::<f64>() / sim_acc.len() as f64;
-            println!("{}   sim 4-device makespan {:.3}s", r.report(), sim);
+            let wall = wall_acc.iter().sum::<f64>() / wall_acc.len() as f64;
+            println!(
+                "{}   sim 4-device makespan {:.3}s  measured collect {:.3}s",
+                r.report(),
+                sim,
+                wall
+            );
             rows.push(r);
             rows.push(BenchResult::scalar(&format!("pipeline/J{n_micro}/{label}/sim"), sim));
+            // measured wall-clock next to the simulated column, for the
+            // bench-diff trajectory (reported, never gated)
+            rows.push(BenchResult::scalar(
+                &format!("pipeline/J{n_micro}/{label}/collect-wall"),
+                wall,
+            ));
             sims.push(sim);
         }
         println!(

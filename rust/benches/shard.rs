@@ -49,18 +49,19 @@ fn main() -> anyhow::Result<()> {
             }
             let mut sess = b.build(data.len())?;
             let tag = if compress.is_some() { "topk25" } else { "dense" };
-            let (mut ov, mut ba, mut n) = (0.0, 0.0, 0usize);
+            let (mut ov, mut ba, mut wall, mut n) = (0.0, 0.0, 0.0, 0usize);
             let mut dense_ctf = Vec::new(); // same-timing dense counterfactual
             let r = bench(&format!("shard/N{workers}/{tag}/step"), 1, iters(4), || {
                 let st = sess.step(&data).unwrap();
                 ov += st.sim_overlap_secs;
                 ba += st.sim_barrier_secs;
+                wall += st.collect_wall_secs;
                 n += 1;
                 if let Some((d_ov, _)) = sess.shard_engine().unwrap().last_dense_sims() {
                     dense_ctf.push((st.sim_overlap_secs, d_ov));
                 }
             });
-            let (ov, ba) = (ov / n as f64, ba / n as f64);
+            let (ov, ba, wall) = (ov / n as f64, ba / n as f64, wall / n as f64);
             // acceptance: compressed reduction beats the uncompressed
             // makespan (same timings, counterfactual payload) once the
             // tree actually moves bytes
@@ -103,6 +104,74 @@ fn main() -> anyhow::Result<()> {
             rows.push(r);
             rows.push(BenchResult::scalar(&format!("shard/N{workers}/{tag}/sim-overlap"), ov));
             rows.push(BenchResult::scalar(&format!("shard/N{workers}/{tag}/sim-barrier"), ba));
+            // measured wall-clock next to the simulated columns, for the
+            // bench-diff trajectory (reported, never gated)
+            rows.push(BenchResult::scalar(&format!("shard/N{workers}/{tag}/collect-wall"), wall));
+        }
+    }
+
+    // Real threads under the simulated parallelism: the same 4-worker
+    // dense session with collect fanned across OS threads. Each step
+    // event carries the measured collect wall-clock and the summed
+    // per-unit busy time; with round-robin bucketing over symmetric
+    // workers the modeled wall is busy / min(threads, workers). The
+    // acceptance envelope is deliberately generous — the measured wall
+    // can never beat perfect division of the busy time by more than
+    // timing jitter, and must not exceed the fully-serial busy sum by
+    // more than scheduling slop (the PJRT CPU client already
+    // parallelises inside each unit, so the realised speedup may be
+    // well short of the model without being wrong).
+    println!("\n== threaded collect: resmlp, 4 workers, dense ==");
+    let mut measured = Vec::new(); // (threads, wall, busy)
+    for threads in [1usize, 4] {
+        let mut sess = Session::builder(&rt, "resmlp")
+            .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.0 })
+            .clip(ClipPolicy {
+                clip_init: 1.0,
+                ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Fixed)
+            })
+            .optim(OptimSpec::sgd(0.25))
+            .epochs(100.0)
+            .shard(ShardSpec::with_workers(4))
+            .build(data.len())?;
+        sess.steploop.threads = threads; // force, independent of GWCLIP_THREADS
+        let (mut wall, mut busy, mut n) = (0.0, 0.0, 0usize);
+        let r = bench(&format!("shard/threads{threads}/step"), 1, iters(4), || {
+            let st = sess.step(&data).unwrap();
+            wall += st.collect_wall_secs;
+            busy += st.collect_busy_secs;
+            n += 1;
+        });
+        let (wall, busy) = (wall / n as f64, busy / n as f64);
+        println!("{}   collect wall {:.4}s busy {:.4}s x{}", r.report(), wall, busy, threads);
+        rows.push(r);
+        rows.push(BenchResult::scalar(&format!("shard/threads{threads}/collect-wall"), wall));
+        rows.push(BenchResult::scalar(&format!("shard/threads{threads}/collect-busy"), busy));
+        measured.push((threads, wall, busy));
+    }
+    let (_, seq_wall, _) = measured[0];
+    let (t, par_wall, par_busy) = measured[1];
+    let modeled = par_busy / (t.min(4) as f64);
+    rows.push(BenchResult::scalar("shard/threads4/modeled-wall", modeled));
+    rows.push(BenchResult::scalar("shard/threads4/speedup", seq_wall / par_wall.max(1e-12)));
+    if !gwclip::util::bench::smoke() {
+        // stated tolerance: 2x below the perfect round-robin division,
+        // 1.6x + 5ms above the no-overlap serial sum
+        let floor = modeled * 0.5 - 1e-6;
+        let ceil = par_busy * 1.6 + 5e-3;
+        if par_wall >= floor && par_wall <= ceil {
+            println!(
+                "PASS: measured threaded wall {par_wall:.4}s within modeled envelope \
+                 [{floor:.4}, {ceil:.4}] (round-robin model {modeled:.4}s, \
+                 speedup over sequential {:.2}x)",
+                seq_wall / par_wall.max(1e-12)
+            );
+        } else {
+            failed = true;
+            println!(
+                "FAIL: measured threaded wall {par_wall:.4}s outside modeled envelope \
+                 [{floor:.4}, {ceil:.4}] (model {modeled:.4}s, busy {par_busy:.4}s)"
+            );
         }
     }
 
@@ -147,7 +216,8 @@ fn main() -> anyhow::Result<()> {
     println!("wrote {}", path.display());
     if failed {
         anyhow::bail!(
-            "shard bench acceptance failed (overlap vs barrier, compressed vs dense, or utility)"
+            "shard bench acceptance failed (overlap vs barrier, compressed vs dense, utility, \
+             or threaded-collect envelope)"
         );
     }
     Ok(())

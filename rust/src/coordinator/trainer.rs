@@ -23,9 +23,9 @@ use anyhow::{anyhow, Result};
 use crate::data::Dataset;
 use crate::runtime::{ConfigManifest, Exec, HostValue, Runtime, Tensor};
 use crate::session::core::DpCore;
-use crate::session::grad::{Collected, GradUnit, Merged, StepTiming};
+use crate::session::grad::{Collected, GradUnit, Merged, StepTiming, UnitCollected};
 use crate::session::spec::ClipPolicy;
-use crate::session::steploop::BackendStep;
+use crate::session::steploop::{BackendStep, UnitTask};
 
 use super::noise::{Allocation, Rng};
 use super::optimizer::{Optimizer, OptimizerKind, Schedule};
@@ -434,84 +434,124 @@ impl BackendStep for Trainer<'_> {
         self.sampler.sample_padded(rng)
     }
 
-    fn collect(
-        &mut self,
-        data: &dyn Dataset,
-        batch: &Batch,
-        thresholds: &[f64],
-    ) -> Result<Collected> {
-        let mb = data.batch(&batch.indices);
-        let (x, y) = mb.inputs();
-        let live = batch.live();
+    fn collect_tasks<'a>(
+        &'a mut self,
+        data: &'a dyn Dataset,
+        batch: &'a Batch,
+        thresholds: &'a [f64],
+    ) -> Vec<UnitTask<'a>> {
+        // the single-device backend is one unit: one task owning the one
+        // fused executable call (still RNG-free; all backend state it
+        // touches is read-only or returned in the part)
+        let exec = self.exec.clone();
+        let params: &'a [Tensor] = &self.params;
+        let group_of_trainable: &'a [usize] = &self.group_of_trainable;
+        let method = self.opts.method;
         let k = self.k;
-
-        let extras: Vec<HostValue> = match self.opts.method {
-            Method::NonPrivate => vec![x, y],
-            m if m.per_layer() => vec![
-                x,
-                y,
-                HostValue::F32(Tensor::from_vec(
-                    &[k],
-                    thresholds.iter().map(|&c| c as f32).collect(),
-                )?),
-                HostValue::F32(Tensor::from_vec(&[batch.weights.len()], batch.weights.clone())?),
-            ],
-            _ => vec![
-                x,
-                y,
-                HostValue::F32(Tensor::scalar(thresholds[0] as f32)),
-                HostValue::F32(Tensor::from_vec(&[batch.weights.len()], batch.weights.clone())?),
-            ],
-        };
-
-        let outs = self.exec.call(&self.params, &extras)?;
-        let loss = outs[0].data[0] as f64;
         let n_tr = self.trainable_idx.len();
-        let grads: Vec<Tensor> = outs[1..1 + n_tr].to_vec();
+        let keep_norms = self.collect_norms.is_some();
+        vec![Box::new(move || {
+            let mb = data.batch(&batch.indices);
+            let (x, y) = mb.inputs();
+            let live = batch.live();
 
-        let mut clip_counts = vec![0f64; k];
-        let mut mean_norms = vec![0f64; k];
-        if self.opts.method.private() {
-            // norms output: [B,K] (per-layer) or [B] (flat-family)
-            let norms = &outs[1 + n_tr];
-            let b = batch.weights.len();
-            for i in 0..b {
-                if batch.weights[i] == 0.0 {
-                    continue;
-                }
-                for g in 0..k {
-                    let v = norms.data[i * k + g] as f64;
-                    mean_norms[g] += v;
-                    if v <= thresholds[g] {
-                        clip_counts[g] += 1.0;
+            let extras: Vec<HostValue> = match method {
+                Method::NonPrivate => vec![x, y],
+                m if m.per_layer() => vec![
+                    x,
+                    y,
+                    HostValue::F32(Tensor::from_vec(
+                        &[k],
+                        thresholds.iter().map(|&c| c as f32).collect(),
+                    )?),
+                    HostValue::F32(Tensor::from_vec(
+                        &[batch.weights.len()],
+                        batch.weights.clone(),
+                    )?),
+                ],
+                _ => vec![
+                    x,
+                    y,
+                    HostValue::F32(Tensor::scalar(thresholds[0] as f32)),
+                    HostValue::F32(Tensor::from_vec(
+                        &[batch.weights.len()],
+                        batch.weights.clone(),
+                    )?),
+                ],
+            };
+
+            let call_t0 = std::time::Instant::now();
+            let outs = exec.call(params, &extras)?;
+            let bwd_secs = call_t0.elapsed().as_secs_f64();
+            let loss = outs[0].data[0] as f64;
+            let grads: Vec<Tensor> = outs[1..1 + n_tr].to_vec();
+
+            let groups = if method.per_layer() {
+                group_of_trainable.to_vec()
+            } else {
+                vec![0; n_tr]
+            };
+            let mut part = UnitCollected::new(GradUnit { tensors: grads, groups }, k);
+            part.live = live;
+            part.loss_wsum = loss;
+            part.weight_sum = 1.0;
+            part.bwd_secs = bwd_secs;
+            if method.private() {
+                // norms output: [B,K] (per-layer) or [B] (flat-family)
+                let norms = &outs[1 + n_tr];
+                let b = batch.weights.len();
+                for i in 0..b {
+                    if batch.weights[i] == 0.0 {
+                        continue;
+                    }
+                    for g in 0..k {
+                        let v = norms.data[i * k + g] as f64;
+                        part.norm_sums[g] += v;
+                        if v <= thresholds[g] {
+                            part.clip_counts[g] += 1.0;
+                        }
                     }
                 }
+                if keep_norms {
+                    part.norms = norms.data.clone();
+                }
             }
+            Ok(part)
+        })]
+    }
+
+    fn finish_collect(&mut self, batch: &Batch, mut parts: Vec<UnitCollected>) -> Result<Collected> {
+        let p = parts.pop().ok_or_else(|| anyhow!("single-device backend lost its unit"))?;
+        debug_assert!(parts.is_empty());
+        let live = p.live;
+        let k = self.k;
+        let mut mean_norms = p.norm_sums;
+        if self.opts.method.private() {
             for m in mean_norms.iter_mut() {
                 *m /= (live.max(1)) as f64;
             }
             if let Some(c) = &mut self.collect_norms {
-                c.push(norms.data.clone());
+                c.push(p.norms);
             }
         }
-
-        let groups = if self.opts.method.per_layer() {
-            self.group_of_trainable.clone()
-        } else {
-            vec![0; n_tr]
-        };
         Ok(Collected {
-            units: vec![GradUnit { tensors: grads, groups }],
-            clip_counts,
-            clip_denoms: vec![live.max(1) as f64; k],
+            units: vec![p.unit],
+            clip_counts: p.clip_counts,
+            // TRUE denominator: 0 on an empty draw (the loop guards the
+            // clip_frac division), no .max(1) masking
+            clip_denoms: vec![live as f64; k],
             mean_norms,
-            loss,
+            loss: p.loss_wsum,
             live,
             truncated: batch.truncated,
             calls: 0,
             syncs: 0,
             timing: StepTiming::default(),
         })
+    }
+
+    fn prefetch_lists(&self, batch: &Batch) -> Vec<Vec<usize>> {
+        vec![batch.indices.clone()]
     }
 
     fn merge(&mut self, units: Vec<GradUnit>, _timing: &StepTiming) -> Merged {

@@ -56,8 +56,8 @@ use crate::coordinator::optimizer::{Optimizer, OptimizerKind};
 use crate::data::Dataset;
 use crate::runtime::{ConfigManifest, Exec, HostValue, Runtime, Tensor};
 use crate::session::core::DpCore;
-use crate::session::grad::{Collected, GradUnit, Merged, StepTiming};
-use crate::session::steploop::BackendStep;
+use crate::session::grad::{fold_parts, Collected, GradUnit, Merged, StepTiming, UnitCollected};
+use crate::session::steploop::{BackendStep, UnitTask};
 use crate::shard::reduce::{tree_reduce, ReduceModel};
 use crate::shard::sampler::{ShardBatch, ShardSampler};
 
@@ -362,183 +362,6 @@ impl<'r> FederatedEngine<'r> {
         }
     }
 
-    /// Fused path: every user is one example taking one local step, so
-    /// the slot's whole user slice runs through the per-example clipping
-    /// executable in one call — structurally (and, with the identity
-    /// partition, bitwise) the sharded backend's collect.
-    #[allow(clippy::too_many_arguments)]
-    fn collect_fused(
-        &mut self,
-        data: &dyn Dataset,
-        batch: &ShardBatch,
-        thresholds: &[f64],
-        clip_counts: &mut [f64],
-        mean_norms: &mut [f64],
-        units: &mut Vec<GradUnit>,
-        bwd_secs: &mut [f64],
-    ) -> Result<(f64, f64, usize)> {
-        let n_tr = self.trainable_idx.len();
-        let mut loss_wsum = 0f64;
-        for s in 0..self.slots {
-            let slice = &batch.slices[s];
-            let live_s = slice.live();
-            self.slot_lives[s] = live_s;
-            // dealt ids are users; each owns exactly one dataset index
-            let indices: Vec<usize> =
-                slice.indices.iter().map(|&u| self.partition[u][0]).collect();
-            let mb = data.batch(&indices);
-            let (x, y) = mb.inputs();
-            let thr_s = thresholds[self.group_of(s)];
-            let extras = vec![
-                x,
-                y,
-                HostValue::F32(Tensor::scalar(thr_s as f32)),
-                HostValue::F32(Tensor::from_vec(
-                    &[slice.weights.len()],
-                    slice.weights.clone(),
-                )?),
-            ];
-            let t0 = Instant::now();
-            let outs = self.exec.call(&self.replicas[s].params, &extras)?;
-            bwd_secs[s] = t0.elapsed().as_secs_f64();
-            let loss_s = outs[0].data[0] as f64;
-            // the entry reports a weighted mean over this slot's live
-            // users; recover the global mean via the live counts. A slot
-            // whose slice drew empty reports a 0/0 loss — skip it.
-            if live_s > 0 {
-                loss_wsum += loss_s * live_s as f64;
-            }
-            let grads: Vec<Tensor> = outs[1..1 + n_tr].to_vec();
-            // per-example norms ARE per-user delta norms here
-            let norms = &outs[1 + n_tr];
-            for i in 0..slice.weights.len() {
-                if slice.weights[i] == 0.0 {
-                    continue;
-                }
-                let target = self.group_of(s);
-                let v = norms.data[i] as f64;
-                mean_norms[target] += v;
-                if v <= thresholds[target] {
-                    clip_counts[target] += 1.0;
-                }
-            }
-            let groups: Vec<usize> =
-                self.group_of_trainable.iter().map(|_| self.group_of(s)).collect();
-            units.push(GradUnit { tensors: grads, groups });
-        }
-        Ok((loss_wsum, batch.live as f64, self.slots))
-    }
-
-    /// General path: per sampled user, `local_steps` full-batch gradient
-    /// steps over the user's own examples on a scratch checkpoint copy;
-    /// the accumulated gradient sums form the per-user delta, clipped as
-    /// one group against the user's threshold before joining the slot's
-    /// unit sum. Measured in gradient units (the plain-SGD local delta
-    /// divided by the local lr) so the server optimizer treats it exactly
-    /// like a gradient.
-    #[allow(clippy::too_many_arguments)]
-    fn collect_general(
-        &mut self,
-        data: &dyn Dataset,
-        batch: &ShardBatch,
-        thresholds: &[f64],
-        clip_counts: &mut [f64],
-        mean_norms: &mut [f64],
-        units: &mut Vec<GradUnit>,
-        bwd_secs: &mut [f64],
-    ) -> Result<(f64, f64, usize)> {
-        let n_tr = self.trainable_idx.len();
-        let mut loss_wsum = 0f64;
-        let mut example_total = 0usize;
-        let mut calls = 0usize;
-        for s in 0..self.slots {
-            let slice = &batch.slices[s];
-            let live_s = slice.live();
-            self.slot_lives[s] = live_s;
-            let target = self.group_of(s);
-            // slot accumulator over its users' clipped deltas
-            let mut acc: Vec<Tensor> = self
-                .trainable_idx
-                .iter()
-                .map(|&i| Tensor::zeros(&self.cfg.params[i].shape))
-                .collect();
-            let t0 = Instant::now();
-            for i in 0..live_s {
-                let user = slice.indices[i];
-                let block = &self.partition[user];
-                let ex = block.len();
-                let mut idx = block.clone();
-                idx.resize(self.cfg.batch, 0);
-                let mut wts = vec![1.0f32; ex];
-                wts.resize(self.cfg.batch, 0.0);
-                // local scratch copy of this slot's checkpoint
-                let mut local = self.replicas[s].params.clone();
-                let mut delta: Vec<Tensor> = Vec::new();
-                for step in 0..self.local_steps {
-                    let mb = data.batch(&idx);
-                    let (x, y) = mb.inputs();
-                    let extras = vec![
-                        x,
-                        y,
-                        HostValue::F32(Tensor::scalar(NO_CLIP)),
-                        HostValue::F32(Tensor::from_vec(&[wts.len()], wts.clone())?),
-                    ];
-                    let outs = self.exec.call(&local, &extras)?;
-                    calls += 1;
-                    if step == 0 {
-                        // weighted mean loss over the user's live examples
-                        loss_wsum += outs[0].data[0] as f64 * ex as f64;
-                        example_total += ex;
-                    }
-                    let g: Vec<Tensor> = outs[1..1 + n_tr].to_vec();
-                    if delta.is_empty() {
-                        delta = g.clone();
-                    } else {
-                        for (d, t) in delta.iter_mut().zip(&g) {
-                            for (a, b) in d.data.iter_mut().zip(&t.data) {
-                                *a += *b;
-                            }
-                        }
-                    }
-                    if step + 1 < self.local_steps {
-                        // plain local SGD at the base lr on the mean
-                        // gradient (the sum / the user's example count)
-                        let lr = (self.lr / ex as f64) as f32;
-                        for (j, &pi) in self.trainable_idx.iter().enumerate() {
-                            for (p, gv) in local[pi].data.iter_mut().zip(&g[j].data) {
-                                *p -= lr * gv;
-                            }
-                        }
-                    }
-                }
-                // clip the FULL per-user delta: one global L2 norm across
-                // every trainable tensor, bounded by the user's threshold
-                let mut sq = 0f64;
-                for t in &delta {
-                    for &v in &t.data {
-                        sq += (v as f64) * (v as f64);
-                    }
-                }
-                let norm = sq.sqrt();
-                mean_norms[target] += norm;
-                if norm <= thresholds[target] {
-                    clip_counts[target] += 1.0;
-                }
-                let factor =
-                    if norm > thresholds[target] { (thresholds[target] / norm) as f32 } else { 1.0 };
-                for (a, d) in acc.iter_mut().zip(&delta) {
-                    for (x, v) in a.data.iter_mut().zip(&d.data) {
-                        *x += factor * v;
-                    }
-                }
-            }
-            bwd_secs[s] = t0.elapsed().as_secs_f64();
-            let groups: Vec<usize> =
-                self.group_of_trainable.iter().map(|_| target).collect();
-            units.push(GradUnit { tensors: acc, groups });
-        }
-        Ok((loss_wsum, example_total as f64, calls))
-    }
 }
 
 impl BackendStep for FederatedEngine<'_> {
@@ -551,42 +374,213 @@ impl BackendStep for FederatedEngine<'_> {
         self.sampler.sample(rng)
     }
 
-    fn collect(
-        &mut self,
-        data: &dyn Dataset,
-        batch: &ShardBatch,
-        thresholds: &[f64],
-    ) -> Result<Collected> {
+    fn collect_tasks<'a>(
+        &'a mut self,
+        data: &'a dyn Dataset,
+        batch: &'a ShardBatch,
+        thresholds: &'a [f64],
+    ) -> Vec<UnitTask<'a>> {
+        // one task per aggregation slot: every task reads only its own
+        // slot's checkpoint replica (the fused path calls the executable
+        // against it, the general path clones scratch copies from it), so
+        // the slots can run on separate OS threads
+        let this = &*self;
+        let n_tr = this.trainable_idx.len();
         let k = thresholds.len();
-        let mut clip_counts = vec![0f64; k];
-        let mut mean_norms = vec![0f64; k];
-        let mut units: Vec<GradUnit> = Vec::with_capacity(self.slots);
-        let mut bwd_secs = vec![0f64; self.slots];
-        let (loss_wsum, loss_denom, calls) = if self.fused {
-            self.collect_fused(
-                data,
-                batch,
-                thresholds,
-                &mut clip_counts,
-                &mut mean_norms,
-                &mut units,
-                &mut bwd_secs,
-            )?
-        } else {
-            self.collect_general(
-                data,
-                batch,
-                thresholds,
-                &mut clip_counts,
-                &mut mean_norms,
-                &mut units,
-                &mut bwd_secs,
-            )?
-        };
+        let fused = this.fused;
+        let local_steps = this.local_steps;
+        let lr = this.lr;
+        (0..this.slots)
+            .map(|s| {
+                let exec = this.exec.clone();
+                let slice = &batch.slices[s];
+                let params: &'a [Tensor] = &this.replicas[s].params;
+                let partition: &'a [Vec<usize>] = &this.partition;
+                let trainable_idx: &'a [usize] = &this.trainable_idx;
+                let cfg = &this.cfg;
+                let target = this.group_of(s);
+                let task: UnitTask<'a> = if fused {
+                    // Fused path: every user is one example taking one
+                    // local step, so the slot's whole user slice runs
+                    // through the per-example clipping executable in one
+                    // call — structurally (and, with the identity
+                    // partition, bitwise) the sharded backend's collect.
+                    Box::new(move || {
+                        let live_s = slice.live();
+                        // dealt ids are users; each owns one dataset index
+                        let indices: Vec<usize> =
+                            slice.indices.iter().map(|&u| partition[u][0]).collect();
+                        let mb = data.batch(&indices);
+                        let (x, y) = mb.inputs();
+                        let extras = vec![
+                            x,
+                            y,
+                            HostValue::F32(Tensor::scalar(thresholds[target] as f32)),
+                            HostValue::F32(Tensor::from_vec(
+                                &[slice.weights.len()],
+                                slice.weights.clone(),
+                            )?),
+                        ];
+                        let t0 = Instant::now();
+                        let outs = exec.call(params, &extras)?;
+                        let mut part = UnitCollected::new(
+                            GradUnit {
+                                tensors: outs[1..1 + n_tr].to_vec(),
+                                groups: vec![target; n_tr],
+                            },
+                            k,
+                        );
+                        part.bwd_secs = t0.elapsed().as_secs_f64();
+                        // the entry reports a weighted mean over this
+                        // slot's live users; recover the global mean via
+                        // the live counts. A slot whose slice drew empty
+                        // reports a 0/0 loss — skip it.
+                        if live_s > 0 {
+                            part.loss_wsum = outs[0].data[0] as f64 * live_s as f64;
+                        }
+                        part.weight_sum = live_s as f64;
+                        part.live = live_s;
+                        part.calls = 1;
+                        // per-example norms ARE per-user delta norms here
+                        let norms = &outs[1 + n_tr];
+                        for i in 0..slice.weights.len() {
+                            if slice.weights[i] == 0.0 {
+                                continue;
+                            }
+                            let v = norms.data[i] as f64;
+                            part.norm_sums[target] += v;
+                            if v <= thresholds[target] {
+                                part.clip_counts[target] += 1.0;
+                            }
+                        }
+                        Ok(part)
+                    })
+                } else {
+                    // General path: per sampled user, `local_steps`
+                    // full-batch gradient steps over the user's own
+                    // examples on a scratch checkpoint copy; the
+                    // accumulated gradient sums form the per-user delta,
+                    // clipped as one group against the user's threshold
+                    // before joining the slot's unit sum. Measured in
+                    // gradient units (the plain-SGD local delta divided by
+                    // the local lr) so the server optimizer treats it
+                    // exactly like a gradient.
+                    Box::new(move || {
+                        let live_s = slice.live();
+                        let mut loss_wsum = 0f64;
+                        let mut example_total = 0usize;
+                        let mut calls = 0usize;
+                        let mut clip_counts = vec![0f64; k];
+                        let mut norm_sums = vec![0f64; k];
+                        // slot accumulator over its users' clipped deltas
+                        let mut acc: Vec<Tensor> = trainable_idx
+                            .iter()
+                            .map(|&i| Tensor::zeros(&cfg.params[i].shape))
+                            .collect();
+                        let t0 = Instant::now();
+                        for i in 0..live_s {
+                            let user = slice.indices[i];
+                            let block = &partition[user];
+                            let ex = block.len();
+                            let mut idx = block.clone();
+                            idx.resize(cfg.batch, 0);
+                            let mut wts = vec![1.0f32; ex];
+                            wts.resize(cfg.batch, 0.0);
+                            // local scratch copy of this slot's checkpoint
+                            let mut local = params.to_vec();
+                            let mut delta: Vec<Tensor> = Vec::new();
+                            for step in 0..local_steps {
+                                let mb = data.batch(&idx);
+                                let (x, y) = mb.inputs();
+                                let extras = vec![
+                                    x,
+                                    y,
+                                    HostValue::F32(Tensor::scalar(NO_CLIP)),
+                                    HostValue::F32(Tensor::from_vec(&[wts.len()], wts.clone())?),
+                                ];
+                                let outs = exec.call(&local, &extras)?;
+                                calls += 1;
+                                if step == 0 {
+                                    // weighted mean loss over the user's
+                                    // live examples
+                                    loss_wsum += outs[0].data[0] as f64 * ex as f64;
+                                    example_total += ex;
+                                }
+                                let g: Vec<Tensor> = outs[1..1 + n_tr].to_vec();
+                                if delta.is_empty() {
+                                    delta = g.clone();
+                                } else {
+                                    for (d, t) in delta.iter_mut().zip(&g) {
+                                        for (a, b) in d.data.iter_mut().zip(&t.data) {
+                                            *a += *b;
+                                        }
+                                    }
+                                }
+                                if step + 1 < local_steps {
+                                    // plain local SGD at the base lr on the
+                                    // mean gradient (sum / example count)
+                                    let lr = (lr / ex as f64) as f32;
+                                    for (j, &pi) in trainable_idx.iter().enumerate() {
+                                        for (p, gv) in
+                                            local[pi].data.iter_mut().zip(&g[j].data)
+                                        {
+                                            *p -= lr * gv;
+                                        }
+                                    }
+                                }
+                            }
+                            // clip the FULL per-user delta: one global L2
+                            // norm across every trainable tensor, bounded
+                            // by the user's threshold
+                            let mut sq = 0f64;
+                            for t in &delta {
+                                for &v in &t.data {
+                                    sq += (v as f64) * (v as f64);
+                                }
+                            }
+                            let norm = sq.sqrt();
+                            norm_sums[target] += norm;
+                            if norm <= thresholds[target] {
+                                clip_counts[target] += 1.0;
+                            }
+                            let factor = if norm > thresholds[target] {
+                                (thresholds[target] / norm) as f32
+                            } else {
+                                1.0
+                            };
+                            for (a, d) in acc.iter_mut().zip(&delta) {
+                                for (x, v) in a.data.iter_mut().zip(&d.data) {
+                                    *x += factor * v;
+                                }
+                            }
+                        }
+                        let mut part = UnitCollected::new(
+                            GradUnit { tensors: acc, groups: vec![target; n_tr] },
+                            k,
+                        );
+                        part.bwd_secs = t0.elapsed().as_secs_f64();
+                        part.clip_counts = clip_counts;
+                        part.norm_sums = norm_sums;
+                        part.loss_wsum = loss_wsum;
+                        part.weight_sum = example_total as f64;
+                        part.live = live_s;
+                        part.calls = calls;
+                        Ok(part)
+                    })
+                };
+                task
+            })
+            .collect()
+    }
 
+    fn finish_collect(&mut self, batch: &ShardBatch, parts: Vec<UnitCollected>) -> Result<Collected> {
+        let k = parts.first().map(|p| p.clip_counts.len()).unwrap_or(0);
+        let f = fold_parts(parts, k);
+        self.slot_lives.copy_from_slice(&f.lives);
+        let live_global = batch.live;
         // normalize the mean-norm diagnostics by the users that fed each
         // group (per-user slot groups see only their cohort slice)
-        let live_global = batch.live;
+        let mut mean_norms = f.norm_sums;
         match self.grouping {
             CohortGrouping::PerUser => {
                 for (g, m) in mean_norms.iter_mut().enumerate() {
@@ -599,24 +593,24 @@ impl BackendStep for FederatedEngine<'_> {
                 }
             }
         }
+        // TRUE per-group denominators: an empty cohort (or an empty slot
+        // under per-user grouping) reports 0 and the loop's guarded
+        // division turns the clip fraction into 0.0 rather than NaN
         let clip_denoms: Vec<f64> = match self.grouping {
-            CohortGrouping::PerUser => {
-                (0..k).map(|g| self.slot_lives[g].max(1) as f64).collect()
-            }
-            CohortGrouping::Flat => vec![live_global.max(1) as f64; k],
+            CohortGrouping::PerUser => (0..k).map(|g| self.slot_lives[g] as f64).collect(),
+            CohortGrouping::Flat => vec![live_global as f64; k],
         };
-        let loss = loss_wsum / loss_denom.max(1.0);
         Ok(Collected {
-            units,
-            clip_counts,
+            units: f.units,
+            clip_counts: f.clip_counts,
             clip_denoms,
             mean_norms,
-            loss,
+            loss: f.loss_wsum / f.weight_sum.max(1.0),
             live: live_global,
             truncated: batch.truncated,
-            calls,
+            calls: f.calls,
             syncs: 0,
-            timing: StepTiming { durations: Vec::new(), bwd_secs },
+            timing: StepTiming { durations: Vec::new(), bwd_secs: f.bwd_secs },
         })
     }
 
@@ -668,5 +662,28 @@ impl BackendStep for FederatedEngine<'_> {
         // Algorithm 1 line 14 at the user level: normalize the merged sum
         // of clipped per-user deltas by the EXPECTED cohort size E[U]
         (1.0 / self.expected_users) as f32
+    }
+
+    fn prefetch_lists(&self, batch: &ShardBatch) -> Vec<Vec<usize>> {
+        if self.fused {
+            // one ModelBatch per slot, over the users' single examples
+            batch
+                .slices
+                .iter()
+                .map(|slice| slice.indices.iter().map(|&u| self.partition[u][0]).collect())
+                .collect()
+        } else {
+            // one padded ModelBatch per live user (each local step reuses
+            // the same index list, so assembling it once suffices)
+            let mut lists = Vec::new();
+            for slice in &batch.slices {
+                for i in 0..slice.live() {
+                    let mut idx = self.partition[slice.indices[i]].clone();
+                    idx.resize(self.cfg.batch, 0);
+                    lists.push(idx);
+                }
+            }
+            lists
+        }
     }
 }

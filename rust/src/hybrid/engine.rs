@@ -38,9 +38,9 @@ use crate::pipeline::schedule::stage_grad_ready;
 use crate::pipeline::{PipelineEngine, PipelineMode, PipelineOpts};
 use crate::runtime::{ConfigManifest, Runtime, Tensor};
 use crate::session::core::DpCore;
-use crate::session::grad::{Collected, GradUnit, Merged, StepTiming};
+use crate::session::grad::{fold_parts, Collected, GradUnit, Merged, StepTiming, UnitCollected};
 use crate::session::spec::CompressSpec;
-use crate::session::steploop::BackendStep;
+use crate::session::steploop::{BackendStep, UnitTask};
 use crate::shard::compress::Compressor;
 use crate::shard::reduce::{tree_reduce, ReduceModel};
 use crate::shard::sampler::{ShardBatch, ShardSampler};
@@ -358,85 +358,106 @@ impl BackendStep for HybridEngine<'_> {
         self.sampler.sample(rng)
     }
 
-    fn collect(
-        &mut self,
-        data: &dyn Dataset,
-        batch: &ShardBatch,
-        thresholds: &[f64],
-    ) -> Result<Collected> {
-        let r_n = self.replicas_n;
+    fn collect_tasks<'a>(
+        &'a mut self,
+        data: &'a dyn Dataset,
+        batch: &'a ShardBatch,
+        thresholds: &'a [f64],
+    ) -> Vec<UnitTask<'a>> {
         let s = self.n_stages;
         let k = thresholds.len();
+        let private = self.private;
+        let grouping = self.grouping;
+        // one task per data-parallel replica: each owns its pipeline's
+        // activation/accumulator state exclusively, so the R wavefronts can
+        // run on separate OS threads
+        self.replicas
+            .iter_mut()
+            .enumerate()
+            .map(|(r, replica)| {
+                let slice = &batch.slices[r];
+                let task: UnitTask<'a> = Box::new(move || {
+                    let group_of = |st: usize| {
+                        if !private {
+                            0
+                        } else {
+                            match grouping {
+                                PieceGrouping::PerPiece => r * s + st,
+                                PieceGrouping::PerStage => st,
+                            }
+                        }
+                    };
+                    let piece_thr: Vec<f64> = if private {
+                        (0..s).map(|st| thresholds[group_of(st)]).collect()
+                    } else {
+                        vec![1e9; s]
+                    };
+                    let col = replica.collect_weighted(
+                        data,
+                        &slice.indices,
+                        &slice.weights,
+                        &piece_thr,
+                    )?;
+                    // replica-major, stage-major flattened unit layout:
+                    // this IS the RNG discipline that makes R = 1
+                    // bitwise-identical to the pipeline backend (whose
+                    // noise loop is stage-major in the same tensor order)
+                    let mut tensors = Vec::new();
+                    let mut groups = Vec::new();
+                    let mut clip_counts = vec![0f64; k];
+                    for (st, g) in col.grads.into_iter().enumerate() {
+                        let gi = group_of(st);
+                        if private {
+                            clip_counts[gi] += col.clip_counts[st];
+                        }
+                        for t in g {
+                            tensors.push(t);
+                            groups.push(gi);
+                        }
+                    }
+                    let mut part = UnitCollected::new(GradUnit { tensors, groups }, k);
+                    part.clip_counts = clip_counts;
+                    part.loss_wsum = col.loss_wsum;
+                    part.weight_sum = col.weight_sum;
+                    part.live = slice.live();
+                    part.calls = col.calls;
+                    part.durations = col.durations;
+                    Ok(part)
+                });
+                task
+            })
+            .collect()
+    }
 
-        let mut clip_counts = vec![0f64; k];
-        let mut loss_wsum = 0f64;
-        let mut weight_sum = 0f64;
-        let mut calls = 0usize;
-        let mut units: Vec<GradUnit> = Vec::with_capacity(r_n);
-        let mut durations = Vec::with_capacity(r_n);
-        for r in 0..r_n {
-            let slice = &batch.slices[r];
-            self.replica_lives[r] = slice.live();
-            let piece_thr: Vec<f64> = if self.private {
-                (0..s).map(|st| thresholds[self.group_of(r, st)]).collect()
-            } else {
-                vec![1e9; s]
-            };
-            let col = self.replicas[r].collect_weighted(
-                data,
-                &slice.indices,
-                &slice.weights,
-                &piece_thr,
-            )?;
-            if self.private {
-                for st in 0..s {
-                    clip_counts[self.group_of(r, st)] += col.clip_counts[st];
-                }
-            }
-            loss_wsum += col.loss_wsum;
-            weight_sum += col.weight_sum;
-            calls += col.calls;
-            // replica-major, stage-major flattened unit layout: this IS
-            // the RNG discipline that makes R = 1 bitwise-identical to the
-            // pipeline backend (whose noise loop is stage-major in the
-            // same tensor order)
-            let mut tensors = Vec::new();
-            let mut groups = Vec::new();
-            for (st, g) in col.grads.into_iter().enumerate() {
-                let gi = self.group_of(r, st);
-                for t in g {
-                    tensors.push(t);
-                    groups.push(gi);
-                }
-            }
-            units.push(GradUnit { tensors, groups });
-            durations.push(col.durations);
-        }
-
+    fn finish_collect(&mut self, batch: &ShardBatch, parts: Vec<UnitCollected>) -> Result<Collected> {
+        let s = self.n_stages;
+        let k = parts.first().map(|p| p.clip_counts.len()).unwrap_or(0);
+        let f = fold_parts(parts, k);
+        self.replica_lives.copy_from_slice(&f.lives);
+        // TRUE per-group denominators: a replica whose slice drew no live
+        // example reports 0 and the loop's guarded division turns the
+        // fraction into 0.0 rather than NaN
         let clip_denoms: Vec<f64> = if self.private {
             (0..k)
-                .map(|g| {
-                    match self.grouping {
-                        PieceGrouping::PerPiece => self.replica_lives[g / s],
-                        PieceGrouping::PerStage => batch.live,
-                    }
-                    .max(1) as f64
+                .map(|g| match self.grouping {
+                    PieceGrouping::PerPiece => self.replica_lives[g / s] as f64,
+                    PieceGrouping::PerStage => batch.live as f64,
                 })
                 .collect()
         } else {
             Vec::new()
         };
         Ok(Collected {
-            units,
-            clip_counts,
+            units: f.units,
+            clip_counts: f.clip_counts,
             clip_denoms,
             mean_norms: Vec::new(),
-            loss: loss_wsum / weight_sum.max(1.0),
+            loss: f.loss_wsum / f.weight_sum.max(1.0),
             live: batch.live,
             truncated: batch.truncated,
-            calls,
+            calls: f.calls,
             syncs: 0,
-            timing: StepTiming { durations, bwd_secs: Vec::new() },
+            timing: StepTiming { durations: f.durations, bwd_secs: Vec::new() },
         })
     }
 
@@ -462,6 +483,9 @@ impl BackendStep for HybridEngine<'_> {
                 *a += b / r_n as f64;
             }
         }
+        // `overlap_makespan_at` requires its ready times non-decreasing
+        // (FIFO network order) and debug-asserts it; sorting here is the
+        // caller's side of that contract
         let mut order: Vec<usize> = (0..s).collect();
         order.sort_by(|&a, &b| ready_mean[a].partial_cmp(&ready_mean[b]).unwrap());
         let ready_sorted: Vec<f64> = order.iter().map(|&st| ready_mean[st]).collect();
@@ -532,5 +556,18 @@ impl BackendStep for HybridEngine<'_> {
     fn update_scale(&self, _live: usize) -> f32 {
         // Algorithm 1 line 14: normalize the merged sum by the global E[B]
         (1.0 / self.expected_batch) as f32
+    }
+
+    fn prefetch_lists(&self, batch: &ShardBatch) -> Vec<Vec<usize>> {
+        // each replica's collection assembles one ModelBatch per
+        // microbatch, sliced from its dealt slice in J fixed-size chunks
+        let b = self.replicas[0].micro_batch();
+        batch
+            .slices
+            .iter()
+            .flat_map(|slice| {
+                (0..self.n_micro).map(move |m| slice.indices[m * b..(m + 1) * b].to_vec())
+            })
+            .collect()
     }
 }

@@ -58,8 +58,12 @@ USAGE:
                        [--paper-scale]
   gwclip bench-diff --old DIR [--new DIR] [--max-regress 0.15]
                   (CI gate: diff the BENCH_*.json step-hot-path rows against a
-                  previous trajectory; fails loudly on a regression)
-  common: [--artifacts DIR]
+                  previous trajectory; fails loudly on a regression. Also
+                  surfaces the per-backend measured collect-wall rows,
+                  informational only)
+  common: [--artifacts DIR] [--threads N]   (N > 1 fans the collect phase
+                  across N OS threads — bitwise identical to sequential;
+                  GWCLIP_THREADS overrides)
 ";
 
 fn main() -> Result<()> {
@@ -110,7 +114,8 @@ fn cmd_run(rt: &Runtime, args: &Args) -> Result<()> {
         .flags
         .get("spec")
         .ok_or_else(|| anyhow::anyhow!("run needs --spec <file>; see docs/SESSION_API.md"))?;
-    let spec = RunSpec::from_path(path)?;
+    let mut spec = RunSpec::from_path(path)?;
+    spec.threads = args.get_usize("threads", spec.threads)?;
     if args.has("print-spec") {
         println!("{}", spec.render_json());
     }
@@ -172,6 +177,7 @@ fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
             .optim(optim)
             .data(data)
             .epochs(args.get_f64("epochs", 3.0)?)
+            .threads(args.get_usize("threads", 1)?)
             .seed(seed),
     )
 }
@@ -199,6 +205,20 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
     // logs, but never a failure
     for a in &diff.additions {
         println!("ADDITION {a}: no prior trajectory, gated from the next run on");
+    }
+    // per-backend measured collect wall-clock, printed next to whatever
+    // prior the trajectory holds — informational, never a gate (real
+    // thread scheduling is machine-dependent in a way the simulated
+    // makespans are not)
+    for (name, new_s, old_s) in &diff.measured {
+        match old_s {
+            Some(o) => println!(
+                "MEASURED {name}: collect wall {:.4} ms (prior {:.4} ms)",
+                1e3 * new_s,
+                1e3 * o
+            ),
+            None => println!("MEASURED {name}: collect wall {:.4} ms (no prior)", 1e3 * new_s),
+        }
     }
     for r in &diff.regressions {
         println!(
@@ -240,6 +260,7 @@ fn apply_common_overrides(s: &mut RunSpec, args: &Args) -> Result<()> {
     s.epochs = args.get_f64("epochs", s.epochs)?;
     s.data.n_data = args.get_usize("n-data", s.data.n_data)?;
     s.seed = args.get_u64("seed", s.seed)?;
+    s.threads = args.get_usize("threads", s.threads)?;
     Ok(())
 }
 
@@ -314,6 +335,7 @@ fn cmd_shard(rt: &Runtime, args: &Args) -> Result<()> {
             s
         }
     };
+    spec.threads = args.get_usize("threads", spec.threads)?;
     let mut sh = spec.shard.unwrap_or_default();
     sh.workers = args.get_usize("workers", sh.workers)?;
     sh.fanout = args.get_usize("fanout", sh.fanout)?;
@@ -399,6 +421,7 @@ fn cmd_hybrid(rt: &Runtime, args: &Args) -> Result<()> {
             s
         }
     };
+    spec.threads = args.get_usize("threads", spec.threads)?;
     let mut hy = spec.hybrid.unwrap_or_default();
     hy.replicas = args.get_usize("replicas", hy.replicas)?;
     hy.fanout = args.get_usize("fanout", hy.fanout)?;
@@ -463,6 +486,7 @@ fn cmd_pipeline(rt: &Runtime, args: &Args) -> Result<()> {
             .n_micro(args.get_usize("n-micro", 4)?)
             .steps(args.get_usize("steps", 10)?)
             .sampling(sampling)
+            .threads(args.get_usize("threads", 1)?)
             .seed(seed),
     )
 }

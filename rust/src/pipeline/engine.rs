@@ -47,8 +47,8 @@ use crate::coordinator::sampler::{Batch, PoissonSampler};
 use crate::data::{Dataset, ModelBatch};
 use crate::runtime::{checkpoint, Exec, HostValue, Runtime, Tensor};
 use crate::session::core::DpCore;
-use crate::session::grad::{Collected, GradUnit, Merged, StepTiming};
-use crate::session::steploop::BackendStep;
+use crate::session::grad::{Collected, GradUnit, Merged, StepTiming, UnitCollected};
+use crate::session::steploop::{BackendStep, UnitTask};
 
 use super::schedule::{makespan, Op, Phase};
 
@@ -786,53 +786,76 @@ impl BackendStep for PipelineEngine<'_> {
         }
     }
 
-    fn collect(
-        &mut self,
-        data: &dyn Dataset,
-        batch: &Batch,
-        thresholds: &[f64],
-    ) -> Result<Collected> {
-        let live = batch.live();
-        let s = self.n_stages;
-        let per_device = self.opts.mode == PipelineMode::PerDevice;
-        let col = match self.opts.mode {
-            PipelineMode::FlatSync => {
-                self.collect_flat_sync(data, &batch.indices, &batch.weights, thresholds[0])?
+    fn collect_tasks<'a>(
+        &'a mut self,
+        data: &'a dyn Dataset,
+        batch: &'a Batch,
+        thresholds: &'a [f64],
+    ) -> Vec<UnitTask<'a>> {
+        // one pipeline is ONE data-parallel unit: the whole wavefront is a
+        // single task (the S simulated stages share the engine's activation
+        // and accumulator state), so the task moves the &mut engine borrow
+        // into the closure wholesale
+        vec![Box::new(move || {
+            let s = self.n_stages;
+            let per_device = self.opts.mode == PipelineMode::PerDevice;
+            let col = match self.opts.mode {
+                PipelineMode::FlatSync => {
+                    self.collect_flat_sync(data, &batch.indices, &batch.weights, thresholds[0])?
+                }
+                PipelineMode::PerDevice => {
+                    assert_eq!(thresholds.len(), s);
+                    self.collect_weighted(data, &batch.indices, &batch.weights, thresholds)?
+                }
+                // non-private: thresholds are ignored stage-side (clip = 1e9)
+                PipelineMode::NonPrivate => {
+                    let thr = vec![thresholds[0]; s];
+                    self.collect_weighted(data, &batch.indices, &batch.weights, &thr)?
+                }
+            };
+            // flatten stage-major: the unit layout IS the engine's
+            // documented noise order (stage-major, tensor order within the
+            // stage)
+            let mut tensors = Vec::new();
+            let mut groups = Vec::new();
+            for (st, g) in col.grads.into_iter().enumerate() {
+                let gi = if per_device { st } else { 0 };
+                for t in g {
+                    tensors.push(t);
+                    groups.push(gi);
+                }
             }
-            PipelineMode::PerDevice => {
-                assert_eq!(thresholds.len(), s);
-                self.collect_weighted(data, &batch.indices, &batch.weights, thresholds)?
+            let mut part = UnitCollected::new(GradUnit { tensors, groups }, thresholds.len());
+            if per_device {
+                part.clip_counts = col.clip_counts;
             }
-            // non-private: thresholds are ignored stage-side (clip = 1e9)
-            PipelineMode::NonPrivate => {
-                let thr = vec![thresholds[0]; s];
-                self.collect_weighted(data, &batch.indices, &batch.weights, &thr)?
-            }
-        };
-        // flatten stage-major: the unit layout IS the engine's documented
-        // noise order (stage-major, tensor order within the stage)
-        let mut tensors = Vec::new();
-        let mut groups = Vec::new();
-        for (st, g) in col.grads.into_iter().enumerate() {
-            let gi = if per_device { st } else { 0 };
-            for t in g {
-                tensors.push(t);
-                groups.push(gi);
-            }
-        }
+            part.loss_wsum = col.loss_wsum;
+            part.weight_sum = col.weight_sum;
+            part.live = batch.live();
+            part.calls = col.calls;
+            part.syncs = col.syncs;
+            part.durations = col.durations;
+            Ok(part)
+        })]
+    }
+
+    fn finish_collect(&mut self, batch: &Batch, parts: Vec<UnitCollected>) -> Result<Collected> {
+        let mut parts = parts;
+        let p = parts.pop().expect("pipeline collection emits exactly one task");
+        debug_assert!(parts.is_empty());
         Ok(Collected {
-            units: vec![GradUnit { tensors, groups }],
-            clip_counts: if per_device { col.clip_counts } else { vec![0.0] },
+            units: vec![p.unit],
+            clip_counts: p.clip_counts,
             // the pipeline never reports clip fractions (cross-device norm
             // matrices are never materialized)
             clip_denoms: Vec::new(),
             mean_norms: Vec::new(),
-            loss: col.loss_wsum / col.weight_sum.max(1.0),
-            live,
+            loss: p.loss_wsum / p.weight_sum.max(1.0),
+            live: batch.live(),
             truncated: batch.truncated,
-            calls: col.calls,
-            syncs: col.syncs,
-            timing: StepTiming { durations: vec![col.durations], bwd_secs: Vec::new() },
+            calls: p.calls,
+            syncs: p.syncs,
+            timing: StepTiming { durations: vec![p.durations], bwd_secs: Vec::new() },
         })
     }
 
@@ -858,6 +881,15 @@ impl BackendStep for PipelineEngine<'_> {
     fn update_scale(&self, _live: usize) -> f32 {
         // every pipeline mode normalizes the summed gradients by E[B]
         (1.0 / self.expected()) as f32
+    }
+
+    fn prefetch_lists(&self, batch: &Batch) -> Vec<Vec<usize>> {
+        // collection assembles one ModelBatch per microbatch, sliced from
+        // the dealt minibatch in J fixed-size chunks
+        let b = self.micro_batch;
+        (0..self.opts.n_micro)
+            .map(|m| batch.indices[m * b..(m + 1) * b].to_vec())
+            .collect()
     }
 }
 

@@ -25,6 +25,16 @@ pub struct Exec {
     exe: xla::PjRtLoadedExecutable,
 }
 
+// SAFETY: the xla binding does not mark PjRtLoadedExecutable Send/Sync,
+// but the PJRT C API guarantees a loaded executable is immutable after
+// compilation and supports concurrent PJRT_LoadedExecutable_Execute calls
+// from multiple threads (the CPU client serializes internally where it
+// must). `Exec` exposes only `&self` execution over that handle — no
+// interior mutation on our side — so sharing an `Arc<Exec>` across the
+// step loop's collect threads is sound.
+unsafe impl Send for Exec {}
+unsafe impl Sync for Exec {}
+
 impl Exec {
     /// Execute with pre-marshalled literals; returns the decomposed tuple.
     pub fn call_literals(&self, args: &[Literal]) -> Result<Vec<Literal>> {
@@ -82,6 +92,15 @@ pub struct Runtime {
     client: xla::PjRtClient,
     cache: Mutex<HashMap<String, Arc<Exec>>>,
 }
+
+// SAFETY: sharing `&Runtime` across the step loop's collect threads is
+// sound because every PJRT C API function is thread-safe unless its
+// documentation says otherwise (compilation included — the CPU plugin
+// locks internally), the executable cache is already mutex-guarded, and
+// the manifest is plain immutable host data. Engines hold `&Runtime`
+// inside the per-unit collect closures, which is what forces this bound;
+// the `Runtime` value itself is never moved off the thread that built it.
+unsafe impl Sync for Runtime {}
 
 impl Runtime {
     pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {

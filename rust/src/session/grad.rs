@@ -41,12 +41,132 @@ pub(crate) struct StepTiming {
     pub bwd_secs: Vec<f64>,
 }
 
-/// Pre-noise output of one [`BackendStep::collect`] phase: everything the
+/// One unit's contribution to a step's collection, produced by a single
+/// [`BackendStep::collect_tasks`] task — the Send closure the loop may run
+/// on its own OS thread. Tasks are RNG-free and touch only their own
+/// unit's state, so the threaded fan-out is bitwise identical to running
+/// the same closures sequentially; everything order- or backend-sensitive
+/// (loss convention, mean-norm denominators, clip_frac denominators)
+/// happens afterwards on the main thread in
+/// [`BackendStep::finish_collect`].
+///
+/// [`BackendStep::collect_tasks`]: super::steploop::BackendStep::collect_tasks
+/// [`BackendStep::finish_collect`]: super::steploop::BackendStep::finish_collect
+pub(crate) struct UnitCollected {
+    /// this unit's summed pre-noise gradients
+    pub unit: GradUnit,
+    /// full-K clip-count contribution (zeros where this unit counts none)
+    pub clip_counts: Vec<f64>,
+    /// full-K per-example norm sums; `finish_collect` picks denominators
+    pub norm_sums: Vec<f64>,
+    /// weighted loss sum and its weight, in the backend's convention
+    /// (step loss = sum(loss_wsum) / sum(weight_sum).max(1.0))
+    pub loss_wsum: f64,
+    pub weight_sum: f64,
+    /// live examples this unit processed
+    pub live: usize,
+    /// executable invocations / sync barriers this unit incurred
+    pub calls: usize,
+    pub syncs: usize,
+    /// measured whole-backward seconds (prefix-sum latency models)
+    pub bwd_secs: f64,
+    /// wall seconds the task spent executing — measured by the loop's
+    /// task runner, not the backend; feeds the measured StepEvent columns
+    pub busy_secs: f64,
+    /// per-(stage, micro, phase) op durations (pipeline-style units)
+    pub durations: HashMap<Op, f64>,
+    /// raw per-example norms when the backend is asked to keep them
+    pub norms: Vec<f32>,
+}
+
+impl UnitCollected {
+    /// A zeroed contribution around `unit` with `k` threshold groups.
+    pub fn new(unit: GradUnit, k: usize) -> Self {
+        UnitCollected {
+            unit,
+            clip_counts: vec![0.0; k],
+            norm_sums: vec![0.0; k],
+            loss_wsum: 0.0,
+            weight_sum: 0.0,
+            live: 0,
+            calls: 0,
+            syncs: 0,
+            bwd_secs: 0.0,
+            busy_secs: 0.0,
+            durations: HashMap::new(),
+            norms: Vec::new(),
+        }
+    }
+}
+
+/// The order-preserving fold of per-unit contributions every backend's
+/// `finish_collect` starts from: units in task (unit-major) order, counts
+/// and sums accumulated in that same order so the threaded path reduces
+/// exactly like the old sequential loops did.
+pub(crate) struct FoldedParts {
+    pub units: Vec<GradUnit>,
+    pub clip_counts: Vec<f64>,
+    pub norm_sums: Vec<f64>,
+    pub loss_wsum: f64,
+    pub weight_sum: f64,
+    pub live: usize,
+    pub calls: usize,
+    pub syncs: usize,
+    /// per-unit live counts, in unit order (per-device denominators)
+    pub lives: Vec<usize>,
+    /// per-unit measured backward seconds, in unit order
+    pub bwd_secs: Vec<f64>,
+    /// per-unit op-duration maps, in unit order
+    pub durations: Vec<HashMap<Op, f64>>,
+    /// per-unit raw norm vectors (empty unless collected)
+    pub norms: Vec<Vec<f32>>,
+}
+
+pub(crate) fn fold_parts(parts: Vec<UnitCollected>, k: usize) -> FoldedParts {
+    let mut f = FoldedParts {
+        units: Vec::with_capacity(parts.len()),
+        clip_counts: vec![0.0; k],
+        norm_sums: vec![0.0; k],
+        loss_wsum: 0.0,
+        weight_sum: 0.0,
+        live: 0,
+        calls: 0,
+        syncs: 0,
+        lives: Vec::with_capacity(parts.len()),
+        bwd_secs: Vec::with_capacity(parts.len()),
+        durations: Vec::with_capacity(parts.len()),
+        norms: Vec::new(),
+    };
+    for p in parts {
+        for (a, b) in f.clip_counts.iter_mut().zip(&p.clip_counts) {
+            *a += *b;
+        }
+        for (a, b) in f.norm_sums.iter_mut().zip(&p.norm_sums) {
+            *a += *b;
+        }
+        f.loss_wsum += p.loss_wsum;
+        f.weight_sum += p.weight_sum;
+        f.live += p.live;
+        f.calls += p.calls;
+        f.syncs += p.syncs;
+        f.lives.push(p.live);
+        f.bwd_secs.push(p.bwd_secs);
+        f.durations.push(p.durations);
+        if !p.norms.is_empty() {
+            f.norms.push(p.norms);
+        }
+        f.units.push(p.unit);
+    }
+    f
+}
+
+/// Pre-noise output of one collection phase: everything the
 /// generic loop needs to finish the step — per-unit gradients for the
 /// noise/merge phases, raw clip counts for the private quantile release,
-/// and the step's reporting fields.
+/// and the step's reporting fields. Assembled from per-unit
+/// [`UnitCollected`] parts by [`BackendStep::finish_collect`].
 ///
-/// [`BackendStep::collect`]: super::steploop::BackendStep::collect
+/// [`BackendStep::finish_collect`]: super::steploop::BackendStep::finish_collect
 pub(crate) struct Collected {
     /// one entry per data-parallel unit, in RNG (unit-major) order
     pub units: Vec<GradUnit>,

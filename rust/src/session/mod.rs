@@ -34,6 +34,7 @@
 
 pub mod core;
 pub(crate) mod grad;
+pub(crate) mod prefetch;
 pub mod spec;
 pub mod steploop;
 
@@ -42,6 +43,7 @@ use std::collections::HashMap;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::accountant::PrivacyPlan;
+use crate::coordinator::noise::StreamPos;
 use crate::coordinator::sampler::PoissonSampler;
 use crate::coordinator::trainer::{derive_schedule, TrainOpts, Trainer};
 use crate::data::Dataset;
@@ -92,6 +94,19 @@ pub struct StepEvent {
     /// simulated latency with a reduce-after-backward barrier
     /// (sharded/hybrid backends; 0 elsewhere)
     pub sim_barrier_secs: f64,
+    /// MEASURED wall-clock seconds of the collect phase — the real-time
+    /// column next to the simulated `sim_overlap_secs`/`sim_barrier_secs`
+    /// makespans. With `threads > 1` the per-unit tasks overlap, so this
+    /// drops below `collect_busy_secs`
+    pub collect_wall_secs: f64,
+    /// summed per-unit busy seconds inside the collect tasks; wall ==
+    /// busy (almost) when sequential, wall < busy when the thread fan-out
+    /// overlaps units — their ratio is the measured speedup the benches
+    /// compare against the modeled one
+    pub collect_busy_secs: f64,
+    /// OS threads the step loop fanned collect/noise across this step
+    /// (1 = sequential, the reproducibility default)
+    pub threads: usize,
     /// sync barriers this step (0 for the single-device backend)
     pub syncs: usize,
     /// executable invocations (0 for the single-device backend)
@@ -127,9 +142,17 @@ impl StepEvent {
             } else {
                 String::new()
             };
+            let measured = if self.threads > 1 {
+                format!(
+                    " coll {:.2}s/{:.2}s x{}",
+                    self.collect_wall_secs, self.collect_busy_secs, self.threads
+                )
+            } else {
+                String::new()
+            };
             format!(
-                "[{label}] step {}/{} loss {:.4} host {:.2}s sim {:.3}s{reduction} syncs {} \
-                 calls {}{trunc}",
+                "[{label}] step {}/{} loss {:.4} host {:.2}s sim {:.3}s{reduction}{measured} \
+                 syncs {} calls {}{trunc}",
                 self.step, total_steps, self.loss, self.host_secs, self.sim_secs, self.syncs,
                 self.calls
             )
@@ -230,6 +253,16 @@ impl<'r> SessionBuilder<'r> {
         self
     }
 
+    /// OS threads fanning out the per-unit collect tasks and noise jobs
+    /// (1 = sequential, the default). The threaded path is bitwise
+    /// identical to the sequential one; `threads > 1` also turns on the
+    /// background prefetching data loader in [`Session::run`].
+    /// `GWCLIP_THREADS` overrides this at run time.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.spec.threads = n;
+        self
+    }
+
     pub fn n_micro(mut self, j: usize) -> Self {
         self.spec.pipe.n_micro = j;
         self
@@ -282,6 +315,7 @@ impl<'r> SessionBuilder<'r> {
     pub fn build(self, n_data: usize) -> Result<Session<'r>> {
         let SessionBuilder { runtime, spec } = self;
         spec.validate().context("invalid run spec")?;
+        let threads = spec.resolved_threads();
         let cfg = runtime.manifest.config(&spec.config)?.clone();
         if n_data == 0 {
             bail!("session needs a non-empty dataset");
@@ -422,7 +456,7 @@ impl<'r> SessionBuilder<'r> {
                 return Ok(Session {
                     backend: Backend::Hybrid(engine),
                     total_steps: steps,
-                    steploop: StepLoop::new(core),
+                    steploop: StepLoop::with_threads(core, threads),
                     spec,
                 });
             }
@@ -524,7 +558,7 @@ impl<'r> SessionBuilder<'r> {
             Ok(Session {
                 backend: Backend::Pipeline(engine),
                 total_steps: steps,
-                steploop: StepLoop::new(core),
+                steploop: StepLoop::with_threads(core, threads),
                 spec,
             })
         } else if let Some(fed) = spec.federated.clone() {
@@ -635,7 +669,7 @@ impl<'r> SessionBuilder<'r> {
             Ok(Session {
                 backend: Backend::Federated(engine),
                 total_steps,
-                steploop: StepLoop::new(core),
+                steploop: StepLoop::with_threads(core, threads),
                 spec,
             })
         } else if spec.shard.is_some() || spec.hybrid.is_some() {
@@ -776,7 +810,7 @@ impl<'r> SessionBuilder<'r> {
             Ok(Session {
                 backend: Backend::Sharded(engine),
                 total_steps,
-                steploop: StepLoop::new(core),
+                steploop: StepLoop::with_threads(core, threads),
                 spec,
             })
         } else {
@@ -829,7 +863,7 @@ impl<'r> SessionBuilder<'r> {
             Ok(Session {
                 backend: Backend::Single(trainer),
                 total_steps,
-                steploop: StepLoop::new(core),
+                steploop: StepLoop::with_threads(core, threads),
                 spec,
             })
         }
@@ -1080,6 +1114,11 @@ impl<'r> Session<'r> {
     }
 
     /// Train for the planned number of steps; returns the event stream.
+    /// With `threads > 1` the loop runs the prefetching loader: step
+    /// `t + 1`'s draw is dealt (on the dedicated draw stream) and its
+    /// batches assembled in the background while step `t` collects —
+    /// bitwise identical to the sequential loop, which deals the same
+    /// draws in the same stream order, just later.
     pub fn run(&mut self, data: &dyn Dataset, log_every: u64) -> Result<Vec<StepEvent>> {
         let label = match &self.backend {
             Backend::Single(t) => t.opts.method.name(),
@@ -1099,15 +1138,22 @@ impl<'r> Session<'r> {
             },
         };
         let total = self.total_steps;
-        let mut events = Vec::with_capacity(total as usize);
-        for s in 0..total {
-            let ev = self.step(data)?;
-            if log_every > 0 && (s % log_every == 0 || s + 1 == total) {
-                eprintln!("{}", ev.log_line(total, label));
-            }
-            events.push(ev);
+        let Session { backend, steploop, .. } = self;
+        match backend {
+            Backend::Single(t) => run_loop(steploop, t, data, total, log_every, label),
+            Backend::Pipeline(e) => run_loop(steploop, e, data, total, log_every, label),
+            Backend::Sharded(e) => run_loop(steploop, e, data, total, log_every, label),
+            Backend::Hybrid(e) => run_loop(steploop, e, data, total, log_every, label),
+            Backend::Federated(e) => run_loop(steploop, e, data, total, log_every, label),
         }
-        Ok(events)
+    }
+
+    /// Post-run RNG positions `(core stream, draw stream)` — the
+    /// parity-pin observable: unlike sampling `uniform()`, a
+    /// [`StreamPos`] also sees a buffered Marsaglia spare, so two runs
+    /// that agree here consumed EXACTLY the same randomness.
+    pub fn stream_pos(&self) -> (StreamPos, StreamPos) {
+        (self.steploop.core.rng.stream_pos(), self.steploop.draw_rng.stream_pos())
     }
 
     /// (mean eval loss, accuracy). The pipeline backend has no accuracy
@@ -1173,4 +1219,59 @@ impl<'r> Session<'r> {
             Backend::Federated(e) => format!("{base} | {}", e.describe_topology(thresholds)),
         }
     }
+}
+
+/// The monomorphized training loop behind [`Session::run`]. Sequential
+/// sessions step straight through; threaded sessions (`threads > 1`)
+/// deal one draw ahead on the dedicated draw stream and feed the next
+/// step's batch index lists to the background prefetching loader, so
+/// batch assembly overlaps the current step's collect phase. Both paths
+/// deal exactly `total` draws in the same stream order and read bitwise
+/// identical batches (a prefetch miss assembles inline), so they emit
+/// identical events.
+fn run_loop<B: steploop::BackendStep>(
+    lp: &mut StepLoop,
+    backend: &mut B,
+    data: &dyn Dataset,
+    total: u64,
+    log_every: u64,
+    label: &str,
+) -> Result<Vec<StepEvent>> {
+    let emit = |ev: &StepEvent, s: u64| {
+        if log_every > 0 && (s % log_every == 0 || s + 1 == total) {
+            eprintln!("{}", ev.log_line(total, label));
+        }
+    };
+    if lp.threads <= 1 {
+        let mut events = Vec::with_capacity(total as usize);
+        for s in 0..total {
+            let ev = lp.step(backend, data)?;
+            emit(&ev, s);
+            events.push(ev);
+        }
+        return Ok(events);
+    }
+    prefetch::with_prefetch(data, |pf, tx| {
+        let n = data.len();
+        let mut events = Vec::with_capacity(total as usize);
+        let mut pending = (total > 0).then(|| {
+            let first = lp.deal(backend, n);
+            let _ = tx.send(backend.prefetch_lists(&first));
+            first
+        });
+        for s in 0..total {
+            let slices = pending.take().expect("a dealt draw is always pending");
+            if s + 1 < total {
+                // lookahead: deal step s+1 NOW (draw stream only) and hand
+                // its batches to the loader while step s collects below
+                let ahead = lp.deal(backend, n);
+                let _ = tx.send(backend.prefetch_lists(&ahead));
+                pending = Some(ahead);
+            }
+            let ev = lp.step_dealt(backend, pf, &slices)?;
+            emit(&ev, s);
+            events.push(ev);
+        }
+        Ok(events)
+    })
 }

@@ -1,0 +1,230 @@
+//! Background batch prefetching for the threaded step loop.
+//!
+//! Poisson draws come from the session's dedicated draw stream (split off
+//! the core RNG at construction), so the loop can deal step t+1 while
+//! step t is still collecting — RNG-neutrally. [`with_prefetch`] runs a
+//! loader thread fed through a bounded [`sync_channel`]: the run loop
+//! sends the NEXT step's batch index lists (one per `ModelBatch` the
+//! backend will assemble, from [`BackendStep::prefetch_lists`]), the
+//! loader materializes them into a [`PrefetchDataset`] store, and the
+//! collect phase's `Dataset::batch` calls pop them by exact index-list
+//! match. A miss (the loader hasn't gotten there yet) falls back to
+//! assembling inline, so prefetching can only ever change wall-clock
+//! time, never a single byte of a batch.
+//!
+//! The channel capacity is the double-buffer depth: at most `DEPTH`
+//! steps' worth of lists are in flight, which bounds the store to the
+//! current step's leftovers plus the next draws' batches — backpressure,
+//! not an unbounded queue.
+//!
+//! [`sync_channel`]: std::sync::mpsc::sync_channel
+//! [`BackendStep::prefetch_lists`]: super::steploop::BackendStep::prefetch_lists
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::Mutex;
+
+use crate::data::{Dataset, ModelBatch};
+
+/// Steps' worth of batch lists that may be in flight at once (the current
+/// step's and the dealt-ahead draw's) before `send` blocks.
+pub(crate) const DEPTH: usize = 2;
+
+/// A [`Dataset`] view backed by a store of pre-assembled batches. Batches
+/// are keyed by their exact index list and removed on first use; misses
+/// fall through to the wrapped dataset.
+pub(crate) struct PrefetchDataset<'d> {
+    inner: &'d dyn Dataset,
+    store: Mutex<Vec<(Vec<usize>, ModelBatch)>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl<'d> PrefetchDataset<'d> {
+    pub fn new(inner: &'d dyn Dataset) -> Self {
+        PrefetchDataset {
+            inner,
+            store: Mutex::new(Vec::new()),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    /// Assemble `indices` now and park the result for a later
+    /// [`Dataset::batch`] call with the same list (loader-thread side).
+    pub fn preload(&self, indices: &[usize]) {
+        let batch = self.inner.batch(indices);
+        self.store.lock().unwrap().push((indices.to_vec(), batch));
+    }
+
+    /// (served from the store, assembled inline) counters.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Batches parked but never consumed (leftover diagnostics).
+    pub fn parked(&self) -> usize {
+        self.store.lock().unwrap().len()
+    }
+}
+
+impl Dataset for PrefetchDataset<'_> {
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn batch(&self, indices: &[usize]) -> ModelBatch {
+        let parked = {
+            let mut store = self.store.lock().unwrap();
+            store
+                .iter()
+                .position(|(key, _)| key == indices)
+                .map(|pos| store.remove(pos).1)
+        };
+        match parked {
+            Some(b) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.inner.batch(indices)
+            }
+        }
+    }
+}
+
+/// Run `body` against a prefetching view of `data` and a sender feeding
+/// the background loader. Each message is one step's batch index lists;
+/// the loader assembles them in arrival order. The loader thread is
+/// scoped: it drains and exits when `body` returns (the sender side is
+/// dropped here), so no thread outlives the call.
+pub(crate) fn with_prefetch<R>(
+    data: &dyn Dataset,
+    body: impl FnOnce(&PrefetchDataset<'_>, &SyncSender<Vec<Vec<usize>>>) -> R,
+) -> R {
+    let pf = PrefetchDataset::new(data);
+    let (tx, rx) = sync_channel::<Vec<Vec<usize>>>(DEPTH);
+    std::thread::scope(|scope| {
+        let pf_ref = &pf;
+        scope.spawn(move || {
+            while let Ok(lists) = rx.recv() {
+                for idx in lists {
+                    pf_ref.preload(&idx);
+                }
+            }
+        });
+        let r = body(&pf, &tx);
+        drop(tx); // closes the channel; the loader drains and joins
+        r
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::TrySendError;
+
+    /// Deterministic index-addressed dataset: batch(i..) encodes the
+    /// indices so equality checks prove WHICH assembly served a call.
+    struct Probe {
+        n: usize,
+        calls: AtomicUsize,
+    }
+
+    impl Dataset for Probe {
+        fn len(&self) -> usize {
+            self.n
+        }
+        fn batch(&self, indices: &[usize]) -> ModelBatch {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            let data: Vec<f32> = indices.iter().map(|&i| i as f32).collect();
+            ModelBatch::Feat {
+                x: crate::runtime::Tensor::from_vec(&[indices.len()], data).unwrap(),
+                y: crate::runtime::IntTensor {
+                    shape: vec![indices.len()],
+                    data: vec![0; indices.len()],
+                },
+            }
+        }
+    }
+
+    fn payload(b: &ModelBatch) -> Vec<f32> {
+        match b {
+            ModelBatch::Feat { x, .. } => x.data.clone(),
+            _ => panic!("probe emits Feat batches"),
+        }
+    }
+
+    /// Preloaded batches come back bitwise identical to inline assembly,
+    /// are served in the requested order whatever order they were parked
+    /// in, and each parked entry is consumed exactly once.
+    #[test]
+    fn prefetch_serves_parked_batches_in_request_order() {
+        let probe = Probe { n: 16, calls: AtomicUsize::new(0) };
+        let pf = PrefetchDataset::new(&probe);
+        // park out of request order
+        pf.preload(&[4, 5]);
+        pf.preload(&[0, 1]);
+        pf.preload(&[2, 3]);
+        assert_eq!(pf.parked(), 3);
+        let direct = Probe { n: 16, calls: AtomicUsize::new(0) };
+        for want in [[0usize, 1], [2, 3], [4, 5]] {
+            let got = pf.batch(&want);
+            assert_eq!(payload(&got), payload(&direct.batch(&want)));
+        }
+        assert_eq!(pf.stats(), (3, 0));
+        assert_eq!(pf.parked(), 0);
+        // a list that was never parked falls through to the inner dataset
+        let got = pf.batch(&[7, 9]);
+        assert_eq!(payload(&got), vec![7.0, 9.0]);
+        assert_eq!(pf.stats(), (3, 1));
+        // 3 preloads + 1 fallback hit the inner dataset; the 3 store
+        // hits did not
+        assert_eq!(probe.calls.load(Ordering::Relaxed), 4);
+    }
+
+    /// The loader channel exerts backpressure: with `DEPTH` lists parked
+    /// unread, a further `try_send` reports Full instead of queueing
+    /// unboundedly.
+    #[test]
+    fn prefetch_channel_backpressure_caps_inflight_steps() {
+        let (tx, rx) = sync_channel::<Vec<Vec<usize>>>(DEPTH);
+        for _ in 0..DEPTH {
+            tx.try_send(vec![vec![0]]).unwrap();
+        }
+        match tx.try_send(vec![vec![1]]) {
+            Err(TrySendError::Full(_)) => {}
+            other => panic!("expected Full backpressure, got {other:?}"),
+        }
+        // draining one slot frees exactly one send
+        rx.recv().unwrap();
+        tx.try_send(vec![vec![2]]).unwrap();
+    }
+
+    /// End-to-end through `with_prefetch`: the loop sends the next step's
+    /// lists, the loader parks them, and every batch read agrees with
+    /// inline assembly regardless of hit/miss timing.
+    #[test]
+    fn with_prefetch_round_trip_matches_inline_assembly() {
+        let probe = Probe { n: 32, calls: AtomicUsize::new(0) };
+        let steps: Vec<Vec<Vec<usize>>> =
+            (0..4).map(|s| vec![vec![2 * s, 2 * s + 1], vec![8 + s, 16 + s]]).collect();
+        let collected = with_prefetch(&probe, |pf, tx| {
+            let mut got = Vec::new();
+            for lists in &steps {
+                tx.send(lists.clone()).unwrap();
+                for idx in lists {
+                    got.push(payload(&pf.batch(idx)));
+                }
+            }
+            got
+        });
+        let direct = Probe { n: 32, calls: AtomicUsize::new(0) };
+        let want: Vec<Vec<f32>> = steps
+            .iter()
+            .flat_map(|lists| lists.iter().map(|idx| payload(&direct.batch(idx))))
+            .collect();
+        assert_eq!(collected, want);
+    }
+}

@@ -1170,6 +1170,12 @@ pub struct RunSpec {
     /// cross-replica reduction path; needs a `[shard]` or `[hybrid]`
     /// section (the backends with a reduction seam).
     pub compress: Option<CompressSpec>,
+    /// OS threads fanning out the per-unit collect tasks and per-unit
+    /// noise jobs (1 = sequential, the reproducibility default). The
+    /// threaded path is bitwise identical to the sequential one — every
+    /// unit noises on its own seed-derived RNG stream — so this is purely
+    /// a wall-clock knob. `GWCLIP_THREADS` overrides it at run time.
+    pub threads: usize,
 }
 
 impl Default for RunSpec {
@@ -1188,6 +1194,7 @@ impl Default for RunSpec {
             hybrid: None,
             federated: None,
             compress: None,
+            threads: 1,
         }
     }
 }
@@ -1195,6 +1202,20 @@ impl Default for RunSpec {
 impl RunSpec {
     pub fn for_config(config: &str) -> Self {
         RunSpec { config: config.to_string(), ..Default::default() }
+    }
+
+    /// The thread count the step loop should actually run with: the
+    /// `GWCLIP_THREADS` environment override when set and parseable,
+    /// otherwise the spec's `threads` field, floored at 1. The override
+    /// never touches the spec itself (serialization round-trips are
+    /// unaffected), mirroring how `GWCLIP_ARTIFACTS` selects artifacts
+    /// without entering the manifest.
+    pub fn resolved_threads(&self) -> usize {
+        std::env::var("GWCLIP_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(self.threads)
+            .max(1)
     }
 
     /// Builder-time validation of every nonsensical-spec class (satellite
@@ -1412,6 +1433,7 @@ impl RunSpec {
         m.insert("epochs".into(), Json::Num(self.epochs));
         m.insert("expected_batch".into(), Json::Num(self.expected_batch as f64));
         m.insert("seed".into(), Json::Num(self.seed as f64));
+        m.insert("threads".into(), Json::Num(self.threads as f64));
         m.insert("privacy".into(), self.privacy.to_json());
         m.insert("clip".into(), self.clip.to_json());
         m.insert("optim".into(), self.optim.to_json());
@@ -1438,6 +1460,7 @@ impl RunSpec {
             config: j.get("config").context("spec needs a `config` key")?.str()?.to_string(),
             epochs: opt_f64(j, "epochs", d.epochs)?,
             expected_batch: opt_usize(j, "expected_batch", d.expected_batch)?,
+            threads: opt_usize(j, "threads", d.threads)?,
             seed: match j.opt("seed") {
                 Some(v) => v.u64()?,
                 None => d.seed,

@@ -8,33 +8,46 @@
 //! This module owns it once:
 //!
 //! ```text
-//!  1. deal      one global Poisson (or round-robin) draw   [core RNG]
+//!  1. deal      one global Poisson (or round-robin) draw    [draw RNG]
 //!  2. collect   backend fwd/bwd + clip vs EXPLICIT thresholds  [no RNG]
-//!  3. noise     local shares sigma_g/sqrt(U) per unit      [core RNG]
-//!  4. merge     cross-unit reduction + sim makespans       [no RNG]
+//!  3. noise     local shares sigma_g/sqrt(U) per unit   [pre-split RNG]
+//!  4. merge     cross-unit reduction + sim makespans        [no RNG]
 //!  5. scale     /E[B] normalization (Algorithm 1 line 14)
 //!  6. apply     optimizer update on every replica
-//!  7. quantile  ONE private release over all groups        [core RNG]
+//!  7. quantile  ONE private release over all groups         [core RNG]
 //!  8. emit      one StepEvent
 //! ```
 //!
 //! A backend is an implementation of [`BackendStep`]: it deals the draw
-//! into local slices, collects pre-noise per-group gradients + clip
-//! counts + timings, and merges the (already-noised) unit gradients —
-//! everything DP-critical (thresholds, noise calibration, RNG order,
-//! quantile adaptation, accountant-facing normalization) lives here and
-//! cannot drift between backends.
+//! into local slices, exposes one Send collection task per data-parallel
+//! unit, folds the tasks' results back into a [`Collected`], and merges
+//! the (already-noised) unit gradients — everything DP-critical
+//! (thresholds, noise calibration, RNG order, quantile adaptation,
+//! accountant-facing normalization) lives here and cannot drift between
+//! backends.
 //!
-//! RNG discipline: the loop consumes the shared [`DpCore`] RNG in exactly
-//! the order each backend documented before the refactor — one draw, then
-//! gradient noise walking units in order and each unit's flattened
-//! tensors in order (the unit layout encodes worker-major / replica-major
-//! / stage-major), then the quantile release. `add_noise` is a no-op at
-//! std 0, so non-private phases consume nothing. The per-unit noise share
-//! is `std_g / sqrt(U)` with U = number of units, so U independent shares
-//! merge (variances add) to exactly the accountant's per-group std — and
-//! U = 1 degenerates to the full std, which is what keeps the 1-worker /
-//! 1-replica parity pins bitwise.
+//! Real threads: `collect` tasks are RNG-free and own disjoint state, so
+//! with `threads > 1` the loop fans them out across a
+//! [`std::thread::scope`] and joins in unit order — bitwise identical to
+//! running the same closures sequentially. The noise phase is threadable
+//! for the same reason once each unit has its own stream.
+//!
+//! RNG discipline (stream-split form): the core RNG is split ONCE at
+//! construction into a dedicated draw stream (so `deal` can run a step
+//! ahead of the noise/quantile stream for the prefetching loader). Each
+//! private step then drains the core spare and splits one independent
+//! child stream per unit, in unit order — the unit-major layout encodes
+//! worker-major / replica-major / stage-major exactly as before, but the
+//! parent now advances one u64 per unit regardless of element counts
+//! (Marsaglia rejection makes position-splitting impossible). When every
+//! group's std is 0 (non-private), the noise phase performs NO splits and
+//! consumes nothing. The quantile release draws from the core stream and
+//! drains its spare afterwards, so every phase boundary is at a
+//! well-defined [`StreamPos`](crate::coordinator::noise::StreamPos). The
+//! per-unit noise share is `std_g / sqrt(U)` with U = number of units, so
+//! U independent shares merge (variances add) to exactly the accountant's
+//! per-group std — and U = 1 degenerates to the full std, which is what
+//! keeps the 1-worker / 1-replica parity pins bitwise.
 
 use std::time::Instant;
 
@@ -44,32 +57,51 @@ use crate::coordinator::noise::{add_noise, Rng};
 use crate::data::Dataset;
 
 use super::core::DpCore;
-use super::grad::{Collected, GradUnit, Merged, StepTiming};
+use super::grad::{Collected, GradUnit, Merged, StepTiming, UnitCollected};
 use super::StepEvent;
 
-/// The three-hook backend contract (plus the update application): how one
-/// engine plugs into the shared [`StepLoop`]. Hooks must not touch the
-/// core RNG except through the arguments the loop passes them — `deal`
-/// receives it for the draw; `collect` and `merge` are RNG-free.
+/// One unit's collection task: a Send closure the loop may execute on any
+/// thread. Borrows the backend's per-unit state disjointly (`iter_mut`
+/// over replicas) plus shared read-only context (dataset, thresholds,
+/// `Arc<Exec>` clones).
+pub(crate) type UnitTask<'a> = Box<dyn FnOnce() -> Result<UnitCollected> + Send + 'a>;
+
+/// The backend contract: how one engine plugs into the shared
+/// [`StepLoop`]. Hooks must not touch the core RNG except through the
+/// arguments the loop passes them — `deal` receives the draw stream;
+/// collection tasks and `merge` are RNG-free.
 pub(crate) trait BackendStep {
     /// Backend-specific view of one dealt draw (padded per-worker slices,
     /// a single padded batch, a round-robin window, ...).
     type Slices;
 
-    /// Draw this step's batch from the shared RNG and deal it into the
-    /// backend's local slices. `n_data` is the live dataset size (the
-    /// round-robin cursor wraps over it).
+    /// Draw this step's batch from the dedicated draw stream and deal it
+    /// into the backend's local slices. `n_data` is the live dataset size
+    /// (the round-robin cursor wraps over it).
     fn deal(&mut self, n_data: usize, rng: &mut Rng) -> Self::Slices;
 
-    /// Run the pre-noise collection: forward/backward + clip against the
-    /// EXPLICIT `thresholds` (indexed by the backend's group mapping),
-    /// returning per-unit summed gradients, clip counts and timings.
-    /// Consumes no RNG and reads no thresholds from anywhere else.
-    fn collect(
+    /// One Send task per data-parallel unit, in unit (noise) order. Each
+    /// task runs the pre-noise collection for its unit: forward/backward
+    /// + clip against the EXPLICIT `thresholds` (indexed by the backend's
+    /// group mapping), returning the unit's summed gradients, counts and
+    /// timings. Tasks consume no RNG, read no thresholds from anywhere
+    /// else, and share no mutable state — the loop may run them on real
+    /// OS threads.
+    fn collect_tasks<'a>(
+        &'a mut self,
+        data: &'a dyn Dataset,
+        slices: &'a Self::Slices,
+        thresholds: &'a [f64],
+    ) -> Vec<UnitTask<'a>>;
+
+    /// Fold the per-unit results (returned in unit order, however they
+    /// were scheduled) into one [`Collected`]: the backend picks its loss
+    /// convention, mean-norm denominators and clip_frac denominators
+    /// here, on the main thread.
+    fn finish_collect(
         &mut self,
-        data: &dyn Dataset,
         slices: &Self::Slices,
-        thresholds: &[f64],
+        parts: Vec<UnitCollected>,
     ) -> Result<Collected>;
 
     /// Merge the units' (already-noised) gradients across the
@@ -86,21 +118,101 @@ pub(crate) trait BackendStep {
     /// the backend's documented non-private convention otherwise
     /// (1.0 = no rescale). Applied once to every merged element.
     fn update_scale(&self, live: usize) -> f32;
+
+    /// The index lists this step's collection will pass to
+    /// [`Dataset::batch`], for the prefetching loader. Backends that
+    /// return an empty vec opt out of prefetching (the loader falls back
+    /// to computing batches on demand either way).
+    fn prefetch_lists(&self, _slices: &Self::Slices) -> Vec<Vec<usize>> {
+        Vec::new()
+    }
+}
+
+/// Wrap a task with the runner's busy-clock: `busy_secs` is wall time the
+/// task spent executing, summed into the measured StepEvent columns.
+fn run_timed(task: UnitTask<'_>) -> Result<UnitCollected> {
+    let t0 = Instant::now();
+    task().map(|mut p| {
+        p.busy_secs = t0.elapsed().as_secs_f64();
+        p
+    })
+}
+
+/// Run `items` through `f`, fanning out over at most `threads` OS threads
+/// (round-robin assignment, results returned in item order). `threads <=
+/// 1` or a single item runs inline — the SAME code path the threaded
+/// workers execute, so the two modes cannot drift.
+pub(crate) fn run_buckets<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let workers = threads.min(n);
+    let mut buckets: Vec<Vec<(usize, T)>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        buckets[i % workers].push((i, item));
+    }
+    let f = &f;
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = buckets
+            .into_iter()
+            .map(|bucket| {
+                s.spawn(move || {
+                    bucket.into_iter().map(|(i, item)| (i, f(item))).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("step-loop worker thread panicked") {
+                out[i] = Some(r);
+            }
+        }
+    });
+    out.into_iter().map(|r| r.expect("bucket worker dropped a unit")).collect()
 }
 
 /// The DP-invariant per-step state machine: owns the shared [`DpCore`]
 /// (plan, thresholds, noise allocation, RNG) and the step counter, and
 /// drives any [`BackendStep`] through the eight phases.
 pub struct StepLoop {
-    /// shared DP state — plan, thresholds, noise, the ONE RNG
+    /// shared DP state — plan, thresholds, noise, the core RNG (noise
+    /// splits + quantile release)
     pub core: DpCore,
+    /// dedicated draw stream, split from the core RNG at construction:
+    /// `deal` consumes ONLY this stream, so the next step's draw can run
+    /// ahead of the current step's noise/quantile without reordering
+    /// either stream
+    pub draw_rng: Rng,
     /// steps completed (1-based in emitted events)
     pub steps_done: u64,
+    /// worker threads for the collect/noise fan-out; 1 = sequential
+    /// (the reproducibility default — the threaded path is bitwise
+    /// identical, but sequential keeps single-threaded determinism
+    /// trivially auditable)
+    pub threads: usize,
 }
 
 impl StepLoop {
     pub fn new(core: DpCore) -> Self {
-        StepLoop { core, steps_done: 0 }
+        Self::with_threads(core, 1)
+    }
+
+    pub fn with_threads(mut core: DpCore, threads: usize) -> Self {
+        let draw_rng = core.rng.split();
+        StepLoop { core, draw_rng, steps_done: 0, threads: threads.max(1) }
+    }
+
+    /// Deal the next step's draw (consumes only the draw stream). Safe to
+    /// run ahead of [`StepLoop::step_dealt`] for the current step — the
+    /// prefetching loader uses this one-step lookahead.
+    pub(crate) fn deal<B: BackendStep>(&mut self, backend: &mut B, n_data: usize) -> B::Slices {
+        backend.deal(n_data, &mut self.draw_rng)
     }
 
     /// One full DP step of `backend` over `data`; emits the unified
@@ -110,24 +222,58 @@ impl StepLoop {
         backend: &mut B,
         data: &dyn Dataset,
     ) -> Result<StepEvent> {
+        // 1. deal: the only RNG the draw consumes
+        let slices = self.deal(backend, data.len());
+        self.step_dealt(backend, data, &slices)
+    }
+
+    /// Phases 2-8 over an already-dealt draw.
+    pub(crate) fn step_dealt<B: BackendStep>(
+        &mut self,
+        backend: &mut B,
+        data: &dyn Dataset,
+        slices: &B::Slices,
+    ) -> Result<StepEvent> {
         let host_t0 = Instant::now();
 
-        // 1. deal: the only RNG the draw consumes
-        let slices = backend.deal(data.len(), &mut self.core.rng);
-
-        // 2. collect: pre-noise gradients against the current thresholds
+        // 2. collect: pre-noise gradients against the current thresholds,
+        // one Send task per unit, fanned across real threads when asked
         let thresholds = self.core.thresholds().to_vec();
-        let mut col = backend.collect(data, &slices, &thresholds)?;
+        let collect_t0 = Instant::now();
+        let tasks = backend.collect_tasks(data, slices, &thresholds);
+        let results = run_buckets(tasks, self.threads, run_timed);
+        let collect_wall_secs = collect_t0.elapsed().as_secs_f64();
+        let mut parts = Vec::with_capacity(results.len());
+        for r in results {
+            parts.push(r?);
+        }
+        let collect_busy_secs: f64 = parts.iter().map(|p| p.busy_secs).sum();
+        let mut col = backend.finish_collect(slices, parts)?;
 
-        // 3. noise: each unit adds its local share sigma_g/sqrt(U) in the
-        // unit's flattened tensor order (std 0 consumes no RNG)
+        // 3. noise: each unit adds its local share sigma_g/sqrt(U) on its
+        // OWN pre-split stream, split from the core RNG in unit order.
+        // All-zero stds (non-private) split nothing and consume nothing.
         let stds = self.core.noise_stds();
-        let share = 1.0 / (col.units.len().max(1) as f64).sqrt();
-        for unit in col.units.iter_mut() {
-            debug_assert_eq!(unit.tensors.len(), unit.groups.len());
-            for (t, &g) in unit.tensors.iter_mut().zip(&unit.groups) {
-                add_noise(&mut t.data, stds[g] * share, &mut self.core.rng);
-            }
+        if stds.iter().any(|&s| s > 0.0) {
+            // unit boundary: child streams must derive from a spare-free
+            // parent position
+            self.core.rng.drain_spare();
+            let share = 1.0 / (col.units.len().max(1) as f64).sqrt();
+            let jobs: Vec<(&mut GradUnit, Rng)> = col
+                .units
+                .iter_mut()
+                .map(|u| {
+                    let stream = self.core.rng.split();
+                    (u, stream)
+                })
+                .collect();
+            let stds = &stds;
+            run_buckets(jobs, self.threads, move |(unit, mut rng)| {
+                debug_assert_eq!(unit.tensors.len(), unit.groups.len());
+                for (t, &g) in unit.tensors.iter_mut().zip(&unit.groups) {
+                    add_noise(&mut t.data, stds[g] * share, &mut rng);
+                }
+            });
         }
 
         // 4. merge: cross-unit reduction (identity for single-unit
@@ -151,6 +297,10 @@ impl StepLoop {
         // (adaptive cores are private by construction; fixed cores no-op)
         if self.core.is_adaptive() {
             self.core.update_thresholds(&col.clip_counts);
+            // phase boundary: the release's gaussians may buffer a
+            // Marsaglia spare; drain so the next step's unit streams
+            // derive from a well-defined position
+            self.core.rng.drain_spare();
         }
 
         // 8. emit
@@ -159,7 +309,9 @@ impl StepLoop {
             .clip_denoms
             .iter()
             .zip(&col.clip_counts)
-            .map(|(&d, &c)| 1.0 - c / d)
+            // an empty Poisson draw reports denominator 0: nothing was
+            // clipped OR kept, so the clipped fraction is 0, not NaN
+            .map(|(&d, &c)| if d > 0.0 { 1.0 - c / d } else { 0.0 })
             .collect();
         Ok(StepEvent {
             step: self.steps_done,
@@ -171,6 +323,9 @@ impl StepLoop {
             sim_secs: merged.sim_secs,
             sim_overlap_secs: merged.sim_overlap_secs,
             sim_barrier_secs: merged.sim_barrier_secs,
+            collect_wall_secs,
+            collect_busy_secs,
+            threads: self.threads,
             syncs: col.syncs + merged.syncs,
             calls: col.calls,
             truncated: col.truncated,
@@ -221,24 +376,42 @@ mod tests {
             self.sampler.sample_padded(rng)
         }
 
-        fn collect(
-            &mut self,
-            _data: &dyn Dataset,
-            slices: &Self::Slices,
-            thresholds: &[f64],
-        ) -> Result<Collected> {
+        fn collect_tasks<'a>(
+            &'a mut self,
+            _data: &'a dyn Dataset,
+            _slices: &'a Self::Slices,
+            thresholds: &'a [f64],
+        ) -> Vec<UnitTask<'a>> {
             assert_eq!(thresholds.len(), self.k);
-            self.last_live = slices.live();
-            let units = (0..self.units)
-                .map(|_| GradUnit {
-                    tensors: (0..self.k).map(|_| Tensor::zeros(&[3])).collect(),
-                    groups: (0..self.k).collect(),
+            let k = self.k;
+            (0..self.units)
+                .map(|_| {
+                    let task: UnitTask<'a> = Box::new(move || {
+                        Ok(UnitCollected::new(
+                            GradUnit {
+                                tensors: (0..k).map(|_| Tensor::zeros(&[3])).collect(),
+                                groups: (0..k).collect(),
+                            },
+                            k,
+                        ))
+                    });
+                    task
                 })
-                .collect();
+                .collect()
+        }
+
+        fn finish_collect(
+            &mut self,
+            slices: &Self::Slices,
+            parts: Vec<UnitCollected>,
+        ) -> Result<Collected> {
+            self.last_live = slices.live();
             Ok(Collected {
-                units,
+                units: parts.into_iter().map(|p| p.unit).collect(),
                 clip_counts: vec![1.0; self.k],
-                clip_denoms: vec![slices.live().max(1) as f64; self.k],
+                // TRUE denominator: 0 on an empty draw (the loop guards
+                // the division)
+                clip_denoms: vec![slices.live() as f64; self.k],
                 mean_norms: vec![0.5; self.k],
                 loss: 1.25,
                 live: slices.live(),
@@ -278,6 +451,17 @@ mod tests {
         }
     }
 
+    fn stub(units: usize, k: usize) -> StubBackend {
+        StubBackend {
+            sampler: PoissonSampler::new(64, 0.1, 16),
+            units,
+            k,
+            applied: Vec::new(),
+            scale: 0.5,
+            last_live: 0,
+        }
+    }
+
     fn core(k: usize, seed: u64) -> DpCore {
         let clip = ClipPolicy {
             clip_init: 1.0,
@@ -297,41 +481,42 @@ mod tests {
     }
 
     #[test]
-    fn steploop_rng_discipline_is_draw_then_unit_major_noise_then_quantile() {
+    fn steploop_rng_discipline_is_draw_stream_then_per_unit_splits_then_quantile() {
         // run the loop, then replay the documented RNG order by hand on a
         // fresh RNG with the same seed; the stub's applied gradients must
         // equal the replayed noise (scaled), and the threshold trajectory
         // must match a manual quantile update — proving the loop consumes
-        // the stream as (1) draw, (2) unit-major tensor noise at
-        // std_g/sqrt(U), (3) one quantile release.
+        // the streams as (0) one construction split for the draw stream,
+        // (1) draw on the draw stream, (2) one child split per unit in
+        // unit order with noise at std_g/sqrt(U) on the child, (3) one
+        // quantile release on the core stream, spare drained.
         let (units, k, seed) = (2usize, 2usize, 7u64);
         let mut lp = StepLoop::new(core(k, seed));
         let stds = lp.core.noise_stds();
         let init_thr = lp.core.thresholds().to_vec();
-        let mut backend = StubBackend {
-            sampler: PoissonSampler::new(64, 0.1, 16),
-            units,
-            k,
-            applied: Vec::new(),
-            scale: 0.5,
-            last_live: 0,
-        };
+        let mut backend = stub(units, k);
+        backend.scale = 0.5;
         let data = NullData(64);
         let ev = lp.step(&mut backend, &data).unwrap();
         assert_eq!(ev.step, 1);
         assert_eq!(ev.batch_size, backend.last_live);
         assert_eq!(ev.clip_frac.len(), k);
+        assert_eq!(ev.threads, 1);
+        assert!(ev.collect_wall_secs >= 0.0 && ev.collect_busy_secs >= 0.0);
 
         // ---- replay ----
         let mut replay = Rng::seeded(seed);
-        let drawn = PoissonSampler::new(64, 0.1, 16).sample_padded(&mut replay);
+        let mut draw = replay.split(); // construction split
+        let drawn = PoissonSampler::new(64, 0.1, 16).sample_padded(&mut draw);
         assert_eq!(drawn.live(), backend.last_live, "same draw");
         let share = 1.0 / (units as f64).sqrt();
         let mut expect: Vec<Vec<f32>> = vec![vec![0.0; 3]; k];
+        replay.drain_spare(); // no-op here, but part of the contract
         for _u in 0..units {
+            let mut child = replay.split();
             for (g, e) in expect.iter_mut().enumerate() {
                 for slot in e.iter_mut() {
-                    *slot += (stds[g] * share * replay.gauss()) as f32;
+                    *slot += (stds[g] * share * child.gauss()) as f32;
                 }
             }
         }
@@ -341,7 +526,7 @@ mod tests {
             }
         }
         // the quantile release consumed exactly k gaussians after the
-        // noise phase: replaying it reproduces the threshold trajectory
+        // noise splits: replaying it reproduces the threshold trajectory
         let mut q = crate::coordinator::quantile::QuantileEstimator::adaptive(
             init_thr,
             lp.core.quantiles.target_q,
@@ -350,10 +535,14 @@ mod tests {
             lp.core.quantiles.batch,
         );
         q.update(&vec![1.0; k], &mut replay);
+        replay.drain_spare();
         // (no A.1 rescale: per-device policies default rescale_global off)
         assert_eq!(lp.core.thresholds(), &q.thresholds[..], "same trajectory");
-        // streams fully aligned afterwards
-        assert_eq!(lp.core.rng.uniform(), replay.uniform());
+        // streams fully aligned afterwards — position, not a uniform()
+        // sample (which cannot see a buffered Marsaglia spare)
+        assert_eq!(lp.core.rng.stream_pos(), replay.stream_pos());
+        assert_eq!(lp.draw_rng.stream_pos(), draw.stream_pos());
+        assert!(!lp.core.rng.stream_pos().has_spare, "quantile spare must be drained");
     }
 
     #[test]
@@ -371,21 +560,112 @@ mod tests {
         })
         .unwrap();
         let mut lp = StepLoop::new(core);
-        let mut backend = StubBackend {
-            sampler: PoissonSampler::new(64, 0.1, 16),
-            units: 1,
-            k: 1,
-            applied: Vec::new(),
-            scale: 1.0,
-            last_live: 0,
-        };
+        let mut backend = stub(1, 1);
+        backend.scale = 1.0;
         let data = NullData(64);
         lp.step(&mut backend, &data).unwrap();
-        // zero noise std => gradients stay exactly zero, RNG only drew the
-        // Poisson batch
+        // zero noise std => gradients stay exactly zero, no unit streams
+        // were split, and the core RNG advanced ONLY by the construction
+        // split for the draw stream
         assert!(backend.applied[0].data.iter().all(|&v| v == 0.0));
         let mut replay = Rng::seeded(3);
-        PoissonSampler::new(64, 0.1, 16).sample_padded(&mut replay);
-        assert_eq!(lp.core.rng.uniform(), replay.uniform());
+        let mut draw = replay.split();
+        PoissonSampler::new(64, 0.1, 16).sample_padded(&mut draw);
+        assert_eq!(lp.core.rng.stream_pos(), replay.stream_pos());
+        assert_eq!(lp.draw_rng.stream_pos(), draw.stream_pos());
+    }
+
+    #[test]
+    fn steploop_threaded_collect_and_noise_are_bitwise_identical_to_sequential() {
+        // the tentpole's parity property at the unit level: same seed,
+        // threads = 1 vs threads = 4, several adaptive private steps —
+        // applied updates, thresholds, events and post-run stream
+        // positions must be IDENTICAL to the bit. Units (2) < threads (4)
+        // and units (5) > threads (2) both exercised.
+        for (units, threads) in [(2usize, 4usize), (5, 2), (3, 3)] {
+            let k = 2;
+            let seed = 21;
+            let mut seq = StepLoop::new(core(k, seed));
+            let mut par = StepLoop::with_threads(core(k, seed), threads);
+            assert_eq!(par.threads, threads);
+            let mut b_seq = stub(units, k);
+            let mut b_par = stub(units, k);
+            let data = NullData(64);
+            for step in 0..4 {
+                let e1 = seq.step(&mut b_seq, &data).unwrap();
+                let e2 = par.step(&mut b_par, &data).unwrap();
+                assert_eq!(e1.batch_size, e2.batch_size, "step {step}");
+                assert_eq!(e1.loss.to_bits(), e2.loss.to_bits());
+                for (a, b) in e1.clip_frac.iter().zip(&e2.clip_frac) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "step {step}");
+                }
+                assert_eq!(b_seq.applied.len(), b_par.applied.len());
+                for (ta, tb) in b_seq.applied.iter().zip(&b_par.applied) {
+                    for (x, y) in ta.data.iter().zip(&tb.data) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "step {step}: update diverged");
+                    }
+                }
+                assert_eq!(seq.core.thresholds(), par.core.thresholds(), "step {step}");
+            }
+            assert_eq!(seq.core.rng.stream_pos(), par.core.rng.stream_pos());
+            assert_eq!(seq.draw_rng.stream_pos(), par.draw_rng.stream_pos());
+        }
+    }
+
+    #[test]
+    fn steploop_empty_draw_reports_zero_clip_frac_not_nan() {
+        // regression (ISSUE 7 satellite): a Poisson draw with live == 0
+        // used to divide by a zero denominator and put NaN into the event
+        let mut lp = StepLoop::new(core(2, 5));
+        let mut backend = stub(2, 2);
+        // a rate this small makes an empty draw near-certain immediately;
+        // loop a few steps to be safe and require at least one empty
+        backend.sampler = PoissonSampler::new(64, 1e-9, 4);
+        let data = NullData(64);
+        let mut saw_empty = false;
+        for _ in 0..8 {
+            let ev = lp.step(&mut backend, &data).unwrap();
+            for (g, f) in ev.clip_frac.iter().enumerate() {
+                assert!(f.is_finite(), "group {g}: clip_frac {f} not finite");
+            }
+            if ev.batch_size == 0 {
+                saw_empty = true;
+                assert!(ev.clip_frac.iter().all(|&f| f == 0.0), "empty draw must report 0");
+            }
+        }
+        assert!(saw_empty, "sampler at rate 1e-9 never drew an empty batch?");
+    }
+
+    #[test]
+    fn steploop_deal_ahead_matches_deal_in_step() {
+        // the prefetch lookahead contract: dealing step t+1 BEFORE
+        // executing step t is invisible to both streams, because deal
+        // consumes only the dedicated draw stream
+        let (units, k, seed) = (2usize, 2usize, 9u64);
+        let mut inline = StepLoop::new(core(k, seed));
+        let mut ahead = StepLoop::new(core(k, seed));
+        let mut b1 = stub(units, k);
+        let mut b2 = stub(units, k);
+        let data = NullData(64);
+
+        let mut pending = ahead.deal(&mut b2, data.len());
+        for _ in 0..3 {
+            let e1 = inline.step(&mut b1, &data).unwrap();
+            let slices = std::mem::replace(&mut pending, ahead.deal(&mut b2, data.len()));
+            let e2 = ahead.step_dealt(&mut b2, &data, &slices).unwrap();
+            assert_eq!(e1.batch_size, e2.batch_size);
+            assert_eq!(e1.loss.to_bits(), e2.loss.to_bits());
+            assert_eq!(inline.core.thresholds(), ahead.core.thresholds());
+            for (ta, tb) in b1.applied.iter().zip(&b2.applied) {
+                for (x, y) in ta.data.iter().zip(&tb.data) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+        }
+        // ahead has dealt one extra draw; consuming one more on the
+        // inline loop's draw stream lands both on the same position
+        inline.deal(&mut b1, data.len());
+        assert_eq!(inline.draw_rng.stream_pos(), ahead.draw_rng.stream_pos());
+        assert_eq!(inline.core.rng.stream_pos(), ahead.core.rng.stream_pos());
     }
 }

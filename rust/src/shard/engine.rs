@@ -35,9 +35,9 @@ use crate::coordinator::optimizer::{Optimizer, OptimizerKind};
 use crate::data::Dataset;
 use crate::runtime::{ConfigManifest, Exec, HostValue, Runtime, Tensor};
 use crate::session::core::DpCore;
-use crate::session::grad::{Collected, GradUnit, Merged, StepTiming};
+use crate::session::grad::{fold_parts, Collected, GradUnit, Merged, StepTiming, UnitCollected};
 use crate::session::spec::CompressSpec;
-use crate::session::steploop::BackendStep;
+use crate::session::steploop::{BackendStep, UnitTask};
 
 use super::compress::Compressor;
 use super::reduce::{tree_reduce, ReduceModel};
@@ -337,116 +337,148 @@ impl BackendStep for ShardEngine<'_> {
         self.sampler.sample(rng)
     }
 
-    fn collect(
-        &mut self,
-        data: &dyn Dataset,
-        batch: &ShardBatch,
-        thresholds: &[f64],
-    ) -> Result<Collected> {
-        let live_global = batch.live;
+    fn collect_tasks<'a>(
+        &'a mut self,
+        data: &'a dyn Dataset,
+        batch: &'a ShardBatch,
+        thresholds: &'a [f64],
+    ) -> Vec<UnitTask<'a>> {
+        // one Send task per worker: each borrows ITS replica immutably
+        // plus shared read-only context, so the loop can run them on real
+        // OS threads; all cross-worker accumulation happens afterwards in
+        // `finish_collect` on the main thread, in worker order
         let k = thresholds.len();
         let n_tr = self.trainable_idx.len();
+        let grouping = self.grouping;
+        let private = self.private;
+        let workers = self.workers;
+        let group_of_trainable: &'a [usize] = &self.group_of_trainable;
+        self.replicas
+            .iter()
+            .enumerate()
+            .map(|(w, replica)| {
+                let exec = self.exec.clone();
+                let slice = &batch.slices[w];
+                let task: UnitTask<'a> = Box::new(move || {
+                    let group_of = |layer_group: usize| match grouping {
+                        WorkerGrouping::PerLayer => layer_group,
+                        WorkerGrouping::Flat => 0,
+                        WorkerGrouping::PerDevice => w,
+                    };
+                    let live_w = slice.live();
+                    let mb = data.batch(&slice.indices);
+                    let (x, y) = mb.inputs();
+                    let extras: Vec<HostValue> = if !private {
+                        vec![x, y]
+                    } else if grouping == WorkerGrouping::PerLayer {
+                        vec![
+                            x,
+                            y,
+                            HostValue::F32(Tensor::from_vec(
+                                &[k],
+                                thresholds.iter().map(|&c| c as f32).collect(),
+                            )?),
+                            HostValue::F32(Tensor::from_vec(
+                                &[slice.weights.len()],
+                                slice.weights.clone(),
+                            )?),
+                        ]
+                    } else {
+                        let thr_w = match grouping {
+                            WorkerGrouping::PerDevice => thresholds[w],
+                            _ => thresholds[0],
+                        };
+                        vec![
+                            x,
+                            y,
+                            HostValue::F32(Tensor::scalar(thr_w as f32)),
+                            HostValue::F32(Tensor::from_vec(
+                                &[slice.weights.len()],
+                                slice.weights.clone(),
+                            )?),
+                        ]
+                    };
+                    let t0 = Instant::now();
+                    let outs = exec.call(&replica.params, &extras)?;
+                    let bwd_secs = t0.elapsed().as_secs_f64();
+                    let loss_w = outs[0].data[0] as f64;
 
-        let mut clip_counts = vec![0f64; k];
-        let mut mean_norms = vec![0f64; k];
-        let mut units: Vec<GradUnit> = Vec::with_capacity(self.workers);
-        let mut loss_wsum = 0f64;
-        let mut loss_plain = 0f64;
-        let mut bwd_secs = vec![0f64; self.workers];
-
-        for w in 0..self.workers {
-            let slice = &batch.slices[w];
-            let live_w = slice.live();
-            self.worker_lives[w] = live_w;
-            let mb = data.batch(&slice.indices);
-            let (x, y) = mb.inputs();
-            let extras: Vec<HostValue> = if !self.private {
-                vec![x, y]
-            } else if self.grouping == WorkerGrouping::PerLayer {
-                vec![
-                    x,
-                    y,
-                    HostValue::F32(Tensor::from_vec(
-                        &[k],
-                        thresholds.iter().map(|&c| c as f32).collect(),
-                    )?),
-                    HostValue::F32(Tensor::from_vec(
-                        &[slice.weights.len()],
-                        slice.weights.clone(),
-                    )?),
-                ]
-            } else {
-                let thr_w = match self.grouping {
-                    WorkerGrouping::PerDevice => thresholds[w],
-                    _ => thresholds[0],
-                };
-                vec![
-                    x,
-                    y,
-                    HostValue::F32(Tensor::scalar(thr_w as f32)),
-                    HostValue::F32(Tensor::from_vec(
-                        &[slice.weights.len()],
-                        slice.weights.clone(),
-                    )?),
-                ]
-            };
-            let t0 = Instant::now();
-            let outs = self.exec.call(&self.replicas[w].params, &extras)?;
-            bwd_secs[w] = t0.elapsed().as_secs_f64();
-            let loss_w = outs[0].data[0] as f64;
-            // private entries report a weighted mean over this worker's
-            // live examples; recover the global mean via the live counts.
-            // A worker whose slice drew empty reports a 0/0 loss — skip it.
-            if live_w > 0 {
-                loss_wsum += loss_w * live_w as f64;
-            }
-            loss_plain += loss_w;
-
-            let mut grads: Vec<Tensor> = outs[1..1 + n_tr].to_vec();
-            if !self.private && self.workers > 1 {
-                // the nonprivate entry has no weight mask and emits a mean
-                // over its full static batch; weight each worker's mean by
-                // its live count so a sparsely-drawn (or empty) slice —
-                // whose mean is dominated by index-0 pad slots, as on the
-                // single-device backend — doesn't get an equal 1/N share
-                // of the merged update
-                let scale = live_w as f32;
-                for t in grads.iter_mut() {
-                    for v in t.data.iter_mut() {
-                        *v *= scale;
-                    }
-                }
-            }
-            if self.private {
-                // norms output: [B,K] for per-layer, [B] otherwise
-                let norms = &outs[1 + n_tr];
-                let k_exec = if self.grouping == WorkerGrouping::PerLayer { k } else { 1 };
-                for i in 0..slice.weights.len() {
-                    if slice.weights[i] == 0.0 {
-                        continue;
-                    }
-                    for g in 0..k_exec {
-                        let target = self.group_of(w, g);
-                        let v = norms.data[i * k_exec + g] as f64;
-                        mean_norms[target] += v;
-                        if v <= thresholds[target] {
-                            clip_counts[target] += 1.0;
+                    let mut grads: Vec<Tensor> = outs[1..1 + n_tr].to_vec();
+                    if !private && workers > 1 {
+                        // the nonprivate entry has no weight mask and emits
+                        // a mean over its full static batch; weight each
+                        // worker's mean by its live count so a
+                        // sparsely-drawn (or empty) slice — whose mean is
+                        // dominated by index-0 pad slots, as on the
+                        // single-device backend — doesn't get an equal 1/N
+                        // share of the merged update
+                        let scale = live_w as f32;
+                        for t in grads.iter_mut() {
+                            for v in t.data.iter_mut() {
+                                *v *= scale;
+                            }
                         }
                     }
-                }
-            }
-            // worker-major unit order with the per-tensor group mapping:
-            // this layout IS the noise discipline the StepLoop replays
-            let groups: Vec<usize> = self
-                .group_of_trainable
-                .iter()
-                .map(|&g| self.group_of(w, g))
-                .collect();
-            units.push(GradUnit { tensors: grads, groups });
-        }
+                    // worker-major unit order with the per-tensor group
+                    // mapping: this layout IS the noise discipline the
+                    // StepLoop replays
+                    let groups: Vec<usize> =
+                        group_of_trainable.iter().map(|&g| group_of(g)).collect();
+                    let mut part = UnitCollected::new(GradUnit { tensors: grads, groups }, k);
+                    part.live = live_w;
+                    part.calls = 1;
+                    part.bwd_secs = bwd_secs;
+                    // private entries report a weighted mean over this
+                    // worker's live examples; the finish fold recovers the
+                    // global mean via the live counts. A worker whose
+                    // slice drew empty reports a 0/0 loss — weight it 0.
+                    if private {
+                        if live_w > 0 {
+                            part.loss_wsum = loss_w * live_w as f64;
+                        }
+                        part.weight_sum = live_w as f64;
+                    } else {
+                        part.loss_wsum = loss_w;
+                        part.weight_sum = 1.0;
+                    }
+                    if private {
+                        // norms output: [B,K] for per-layer, [B] otherwise
+                        let norms = &outs[1 + n_tr];
+                        let k_exec = if grouping == WorkerGrouping::PerLayer { k } else { 1 };
+                        for i in 0..slice.weights.len() {
+                            if slice.weights[i] == 0.0 {
+                                continue;
+                            }
+                            for g in 0..k_exec {
+                                let target = group_of(g);
+                                let v = norms.data[i * k_exec + g] as f64;
+                                part.norm_sums[target] += v;
+                                if v <= thresholds[target] {
+                                    part.clip_counts[target] += 1.0;
+                                }
+                            }
+                        }
+                    }
+                    Ok(part)
+                });
+                task
+            })
+            .collect()
+    }
+
+    fn finish_collect(
+        &mut self,
+        batch: &ShardBatch,
+        parts: Vec<UnitCollected>,
+    ) -> Result<Collected> {
+        let live_global = batch.live;
+        let k = parts.first().map(|p| p.clip_counts.len()).unwrap_or(0);
+        let f = fold_parts(parts, k);
+        self.worker_lives.copy_from_slice(&f.lives);
 
         // normalize the mean-norm diagnostics by the examples that fed
         // each group (per-device groups see only their worker's slice)
+        let mut mean_norms = f.norm_sums;
         match self.grouping {
             WorkerGrouping::PerDevice => {
                 for (g, m) in mean_norms.iter_mut().enumerate() {
@@ -459,29 +491,29 @@ impl BackendStep for ShardEngine<'_> {
                 }
             }
         }
+        // TRUE denominators — 0 where a slice (or the whole draw) came up
+        // empty; the loop guards the clip_frac division
         let clip_denoms: Vec<f64> = match self.grouping {
-            WorkerGrouping::PerDevice => {
-                (0..k).map(|g| self.worker_lives[g].max(1) as f64).collect()
-            }
-            _ => vec![live_global.max(1) as f64; k],
+            WorkerGrouping::PerDevice => (0..k).map(|g| self.worker_lives[g] as f64).collect(),
+            _ => vec![live_global as f64; k],
         };
-        let loss = if self.private {
-            loss_wsum / (live_global.max(1) as f64)
-        } else {
-            loss_plain / self.workers as f64
-        };
+        let loss = f.loss_wsum / f.weight_sum.max(1.0);
         Ok(Collected {
-            units,
-            clip_counts,
+            units: f.units,
+            clip_counts: f.clip_counts,
             clip_denoms,
             mean_norms,
             loss,
             live: live_global,
             truncated: batch.truncated,
-            calls: self.workers,
-            syncs: 0,
-            timing: StepTiming { durations: Vec::new(), bwd_secs },
+            calls: f.calls,
+            syncs: f.syncs,
+            timing: StepTiming { durations: Vec::new(), bwd_secs: f.bwd_secs },
         })
+    }
+
+    fn prefetch_lists(&self, batch: &ShardBatch) -> Vec<Vec<usize>> {
+        batch.slices.iter().map(|s| s.indices.clone()).collect()
     }
 
     fn merge(&mut self, units: Vec<GradUnit>, timing: &StepTiming) -> Merged {

@@ -122,6 +122,15 @@ impl ReduceModel {
     /// clip-in-conjunction-with-backprop overlap lifted to the 2D grid.
     pub fn overlap_makespan_at(&self, ready: &[f64], red: &[f64]) -> f64 {
         assert_eq!(ready.len(), red.len());
+        // the FIFO recurrence below is only a valid makespan when pieces
+        // enter the network in ready order — an out-of-order piece would
+        // let a LATER arrival start before an earlier one finished
+        // queueing, understating the contention. Callers sort (hybrid) or
+        // construct prefix sums (overlap_makespan); hold them to it.
+        debug_assert!(
+            ready.windows(2).all(|w| w[0] <= w[1]),
+            "overlap_makespan_at needs non-decreasing ready times, got {ready:?}"
+        );
         // each piece waits for its gradient AND the network: the finish
         // time already dominates every ready time (net_free >= ready[i])
         let mut net_free = 0.0f64;

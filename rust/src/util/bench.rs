@@ -185,6 +185,11 @@ pub struct BenchDiff {
     /// a freshly added bench has no history, so these are REPORTED as
     /// additions and never fail the gate
     pub additions: Vec<String>,
+    /// per-backend measured collect wall-clock rows (`"collect-wall"`
+    /// scalars) in the NEW trajectory as `(suite/name, new_s, old_s)` —
+    /// surfaced so the measured-vs-simulated trajectory is visible in CI
+    /// logs, informational only, never gated
+    pub measured: Vec<(String, f64, Option<f64>)>,
 }
 
 /// List the `BENCH_<suite>.json` files in a directory (empty if absent).
@@ -222,7 +227,12 @@ pub fn diff_dirs(
             continue;
         }
         // suite with no prior trajectory: an addition, not a regression
-        let (suite, _) = read_suite(&new_dir.join(&fname))?;
+        let (suite, new_rows) = read_suite(&new_dir.join(&fname))?;
+        for (name, mean) in &new_rows {
+            if name.contains("collect-wall") {
+                diff.measured.push((format!("{suite}/{name}"), *mean, None));
+            }
+        }
         diff.additions.push(if suite.is_empty() {
             fname.clone()
         } else {
@@ -240,6 +250,10 @@ pub fn diff_dirs(
             // new step-path rows inside a known suite are additions too
             if name.contains("/step") && !old_rows.iter().any(|(n, _)| n == name) {
                 diff.additions.push(format!("{suite}/{name}"));
+            }
+            if name.contains("collect-wall") {
+                let prior = old_rows.iter().find(|(n, _)| n == name).map(|(_, m)| *m);
+                diff.measured.push((format!("{suite}/{name}"), *new_mean, prior));
             }
             let Some((_, old_mean)) = old_rows.iter().find(|(n, _)| n == name) else {
                 continue;
@@ -312,12 +326,15 @@ mod tests {
         std::fs::create_dir_all(&new).unwrap();
         let shared_old = vec![
             BenchResult { name: "x/step".into(), iters: 3, mean_s: 1.0, std_s: 0.0, min_s: 1.0 },
+            BenchResult::scalar("x/collect-wall", 0.2),
         ];
         let shared_new = vec![
             // 3x regression on the known row...
             BenchResult { name: "x/step".into(), iters: 3, mean_s: 3.0, std_s: 0.0, min_s: 3.0 },
             // ...plus a step row the trajectory has never seen
             BenchResult { name: "y/step".into(), iters: 3, mean_s: 9.0, std_s: 0.0, min_s: 9.0 },
+            // measured wall-clock rows are surfaced, never gated
+            BenchResult::scalar("x/collect-wall", 0.9),
         ];
         write_json_to(old.join("BENCH_shared.json"), "shared", &shared_old).unwrap();
         write_json_to(new.join("BENCH_shared.json"), "shared", &shared_new).unwrap();
@@ -333,6 +350,19 @@ mod tests {
         assert!(d.additions.contains(&"federated".to_string()), "{:?}", d.additions);
         assert!(d.additions.contains(&"shared/y/step".to_string()), "{:?}", d.additions);
         assert!(!d.additions.iter().any(|a| a.contains("retired")), "{:?}", d.additions);
+        // the 4.5x-slower collect-wall row is surfaced with its prior but
+        // never counted as a regression — measured wall-clock is
+        // informational
+        assert!(
+            d.measured.contains(&("shared/x/collect-wall".to_string(), 0.9, Some(0.2))),
+            "{:?}",
+            d.measured
+        );
+        assert!(
+            d.measured.contains(&("federated/x/collect-wall".to_string(), 0.9, None)),
+            "{:?}",
+            d.measured
+        );
         std::fs::remove_dir_all(&base).ok();
     }
 

@@ -21,6 +21,14 @@ impl Xoshiro {
         Xoshiro { s: [splitmix64(&mut x), splitmix64(&mut x), splitmix64(&mut x), splitmix64(&mut x)] }
     }
 
+    /// The full 256-bit generator state. Two generators with equal state
+    /// produce identical streams forever — the basis of the
+    /// `Rng::stream_pos` parity pins.
+    #[inline]
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[0]

@@ -375,7 +375,9 @@ fn prop_shard_sampler_one_worker_equals_single_device_sampler() {
             assert_eq!(a.slices[0].weights, b.weights);
             assert_eq!(a.truncated, b.truncated);
         }
-        assert_eq!(r1.uniform(), r2.uniform(), "RNG streams diverged");
+        // full observable position, not a uniform() sample (which is
+        // blind to a buffered Marsaglia spare)
+        assert_eq!(r1.stream_pos(), r2.stream_pos(), "RNG streams diverged");
     }
 }
 
@@ -627,6 +629,56 @@ fn prop_hybrid_overlap_makespan_never_loses_to_barrier() {
             assert!(o < b, "R={replicas} S={stages}: overlap must strictly win");
         }
     }
+}
+
+/// `overlap_makespan_at` documents (and now debug-asserts) that `ready`
+/// is non-decreasing; sorting the (ready, red) pairs first — the hybrid
+/// merge's side of the contract — always yields a valid makespan: it
+/// dominates the last arrival and the total network time, never exceeds
+/// the barrier baseline, and is monotone in every reduction cost.
+#[test]
+fn prop_overlap_makespan_sorted_ready_contract() {
+    use gwclip::shard::ReduceModel;
+    let mut r = Xoshiro::seeded(43);
+    for case in 0..50 {
+        let pieces = 1 + r.below(10);
+        let m = ReduceModel::new(2 + r.below(8), 2 + r.below(3), 1e-4 + 1e-3 * r.uniform());
+        // ARBITRARY ready times (a wavefront schedule can finish pieces
+        // in any order) — the caller must sort before the FIFO recurrence
+        let mut order: Vec<(f64, f64)> = (0..pieces)
+            .map(|_| (1e-4 + 5e-3 * r.uniform(), m.layer_cost(1e3 + 1e7 * r.uniform())))
+            .collect();
+        order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let ready: Vec<f64> = order.iter().map(|p| p.0).collect();
+        let red: Vec<f64> = order.iter().map(|p| p.1).collect();
+        let o = m.overlap_makespan_at(&ready, &red);
+        let b = m.barrier_makespan_at(&ready, &red);
+        assert!(o <= b + 1e-15, "case {case}: overlap {o} > barrier {b}");
+        assert!(o >= *ready.last().unwrap() - 1e-15, "case {case}");
+        assert!(o >= red.iter().sum::<f64>() - 1e-15, "case {case}");
+        // growing any single reduction can only delay the makespan
+        let grow = r.below(pieces);
+        let mut red2 = red.clone();
+        red2[grow] += 1e-3;
+        assert!(
+            m.overlap_makespan_at(&ready, &red2) >= o - 1e-15,
+            "case {case}: makespan shrank when red[{grow}] grew"
+        );
+    }
+}
+
+/// Regression (ISSUE 7 satellite): out-of-order ready times used to run
+/// the FIFO recurrence silently, understating network contention. Debug
+/// builds now reject them at the boundary.
+#[test]
+#[cfg(debug_assertions)]
+#[should_panic(expected = "non-decreasing ready times")]
+fn overlap_makespan_at_rejects_out_of_order_ready_times() {
+    use gwclip::shard::ReduceModel;
+    let m = ReduceModel::new(4, 2, 1e-3);
+    let ready = [2.0e-3, 1.0e-3];
+    let red = [m.layer_cost(4096.0), m.layer_cost(1024.0)];
+    m.overlap_makespan_at(&ready, &red);
 }
 
 // ------------------------------------------------------------ noise+gauss
