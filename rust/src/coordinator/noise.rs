@@ -36,6 +36,25 @@ impl Rng {
         StreamPos { state: self.inner.state(), has_spare: self.spare.is_some() }
     }
 
+    /// The raw 256-bit xoshiro state (snapshot serialization).
+    pub fn state(&self) -> [u64; 4] {
+        self.inner.state()
+    }
+
+    /// The buffered Marsaglia spare, if any. `stream_pos` records only
+    /// its *presence*; a bitwise resume needs the buffered *value* too,
+    /// because the next `gauss()` returns it verbatim.
+    pub fn spare(&self) -> Option<f64> {
+        self.spare
+    }
+
+    /// Rebuild a stream at an exact position (state + buffered spare).
+    /// The restored stream continues bitwise — the restore half of the
+    /// `session::snapshot` contract.
+    pub fn from_parts(state: [u64; 4], spare: Option<f64>) -> Self {
+        Rng { inner: Xoshiro::from_state(state), spare }
+    }
+
     /// Discard any buffered Marsaglia spare. Phase boundaries in the
     /// step loop drain so a phase's gaussian consumption cannot leak a
     /// half-drawn pair into the next phase (e.g. noise into the quantile

@@ -419,6 +419,15 @@ impl<'r> Trainer<'r> {
         &self.cfg.groups
     }
 
+    /// Optimizer state (step counter + moment buffers) for snapshots.
+    pub fn optimizer(&self) -> &Optimizer {
+        &self.optimizer
+    }
+
+    pub fn optimizer_mut(&mut self) -> &mut Optimizer {
+        &mut self.optimizer
+    }
+
     /// Full-dataset evaluation: (mean loss, accuracy).
     pub fn evaluate(&self, data: &dyn Dataset) -> Result<(f64, f64)> {
         evaluate_full(&self.eval_exec, &self.params, self.cfg.batch, data)

@@ -123,14 +123,14 @@ pub fn fig2(rt: &Runtime, scale: Scale) -> Result<()> {
         }
     }
     std::fs::create_dir_all("results")?;
-    std::fs::write("results/fig2_norms.csv", &csv)?;
+    crate::util::fsio::write_atomic(std::path::Path::new("results/fig2_norms.csv"), csv.as_bytes())?;
     let doc = "# Figure 2/4: per-layer gradient-norm shift across training\n\n\
         Per-group mean/median/p90 of per-example gradient norms at 5 training\n\
         checkpoints (CSV: fig2_norms.csv). The paper's observation reproduces:\n\
         early in training norms are uniformly small; later, input-side layers'\n\
         norms grow and the distribution spreads, which is why fixed per-layer\n\
         thresholds mis-clip and adaptive thresholds are needed.\n";
-    std::fs::write("results/fig2.md", doc)?;
+    crate::util::fsio::write_atomic(std::path::Path::new("results/fig2.md"), doc.as_bytes())?;
     println!("wrote results/fig2.md + fig2_norms.csv");
     Ok(())
 }
@@ -163,7 +163,7 @@ pub fn fig3(rt: &Runtime, scale: Scale) -> Result<()> {
         eprintln!("[fig3] {} -> {:.1}", method.name(), 100.0 * acc);
     }
     std::fs::create_dir_all("results")?;
-    std::fs::write("results/fig3_curves.csv", &csv)?;
+    crate::util::fsio::write_atomic(std::path::Path::new("results/fig3_curves.csv"), csv.as_bytes())?;
     t.save("results/fig3.md", "Figure 3: adaptive per-layer clipping eliminates fixed per-layer's loss (curves in fig3_curves.csv)")?;
     println!("{}", t.render());
     Ok(())
@@ -263,7 +263,7 @@ pub fn fig7(rt: &Runtime, scale: Scale) -> Result<()> {
         eprintln!("[fig7] {} wall {:.1}s nll {:.4}", method.name(), wall, nll);
     }
     std::fs::create_dir_all("results")?;
-    std::fs::write("results/fig7_curves.csv", &csv)?;
+    crate::util::fsio::write_atomic(std::path::Path::new("results/fig7_curves.csv"), csv.as_bytes())?;
     t.save("results/fig7.md", "Figures 7/8: eval NLL vs wall time on the E2E analog (curves in fig7_curves.csv)")?;
     println!("{}", t.render());
     Ok(())

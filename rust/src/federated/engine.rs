@@ -295,6 +295,26 @@ impl<'r> FederatedEngine<'r> {
         Ok(())
     }
 
+    /// Slot-0's optimizer state (all slots stay bit-identical, so
+    /// snapshots persist one and fan it back out on restore).
+    pub fn optimizer(&self) -> &Optimizer {
+        &self.replicas[0].optimizer
+    }
+
+    /// Restore one optimizer state into every slot (snapshot fan-out,
+    /// mirroring `set_params_all`).
+    pub fn restore_optimizers(
+        &mut self,
+        step: u64,
+        m: Vec<Vec<f32>>,
+        v: Vec<Vec<f32>>,
+    ) -> Result<()> {
+        for r in self.replicas.iter_mut() {
+            r.optimizer.restore_state(step, m.clone(), v.clone())?;
+        }
+        Ok(())
+    }
+
     /// Load parameters by name; names absent from the map keep their init
     /// values. The result is fanned out to every replica.
     pub fn load_param_map(

@@ -32,7 +32,7 @@ use std::collections::HashMap;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::noise::Rng;
-use crate::coordinator::optimizer::OptimizerKind;
+use crate::coordinator::optimizer::{Optimizer, OptimizerKind};
 use crate::data::Dataset;
 use crate::pipeline::schedule::stage_grad_ready;
 use crate::pipeline::{PipelineEngine, PipelineMode, PipelineOpts};
@@ -307,6 +307,44 @@ impl<'r> HybridEngine<'r> {
             e.load_params(map)?;
         }
         Ok(())
+    }
+
+    /// Replica-0's per-stage optimizer states (all replicas stay
+    /// bit-identical, so snapshots persist one replica's and fan them
+    /// back out on restore).
+    pub fn stage_optimizers(&self) -> Vec<&Optimizer> {
+        self.replicas[0].stage_optimizers()
+    }
+
+    /// Restore per-stage optimizer states (stage order) into EVERY
+    /// replica (snapshot fan-out, mirroring `load_params`).
+    pub fn restore_stage_optimizers(
+        &mut self,
+        states: &[(u64, Vec<Vec<f32>>, Vec<Vec<f32>>)],
+    ) -> Result<()> {
+        for e in self.replicas.iter_mut() {
+            let opts = e.stage_optimizers_mut();
+            if opts.len() != states.len() {
+                return Err(anyhow!(
+                    "hybrid optimizer restore: {} stage states, engine has {} stages",
+                    states.len(),
+                    opts.len()
+                ));
+            }
+            for (opt, (step, m, v)) in opts.into_iter().zip(states) {
+                opt.restore_state(*step, m.clone(), v.clone())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// The error-feedback compressor, if `[compress]` is configured.
+    pub fn compressor(&self) -> Option<&Compressor> {
+        self.compressor.as_ref()
+    }
+
+    pub fn compressor_mut(&mut self) -> Option<&mut Compressor> {
+        self.compressor.as_mut()
     }
 
     /// True when every replica's parameters are bitwise equal to replica

@@ -59,6 +59,7 @@ pub mod hybrid;
 pub mod metrics;
 pub mod pipeline;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod shard;
 pub mod util;

@@ -12,6 +12,7 @@ use gwclip::coordinator::noise::Allocation;
 use gwclip::coordinator::trainer::Method;
 use gwclip::pipeline::PipelineMode;
 use gwclip::runtime::Runtime;
+use gwclip::session::snapshot;
 use gwclip::session::{
     ClipMode, ClipPolicy, DataSpec, GroupBy, HybridGrouping, HybridSpec, OptimSpec, PrivacySpec,
     RunSpec, Sampling, Session, SessionBuilder, ShardGrouping,
@@ -25,6 +26,21 @@ USAGE:
   gwclip run      --spec run.toml|run.json   (one declarative file, any
                   backend incl. [federated] user-level DP; see
                   docs/SESSION_API.md) [--print-spec]
+                  [--snapshot-every N] [--snapshot-dir D]   (publish an atomic
+                  resumable snapshot every N steps + one at completion)
+  gwclip resume   <snapshot.json> [--snapshot-every N] [--snapshot-dir D]
+                  (rebuild the session a snapshot describes, restore its
+                  bitwise state — params, optimizer moments, thresholds,
+                  RNG stream positions, accountant ledger — and train the
+                  remaining steps; any backend. The continued run is
+                  bitwise identical to the uninterrupted one)
+  gwclip serve    [--addr 127.0.0.1:7700] [--state-dir serve-state]
+                  [--snapshot-every 25]
+                  (multi-session training daemon: submit named TOML/JSON
+                  specs over a local HTTP JSON API, stream per-step events
+                  as ndjson, snapshot each session on its cadence, and
+                  resume every resident session from its latest snapshot
+                  on restart; see docs/SESSION_API.md \"Serving\")
   gwclip train    [--config resmlp] [--method adaptive-per-layer] [--epsilon 3]
                   [--delta 1e-5] [--epochs 3] [--lr 0.5] [--n-data 4096]
                   [--seed 0] [--allocation global|equal|weighted]
@@ -63,7 +79,9 @@ USAGE:
                   informational only)
   common: [--artifacts DIR] [--threads N]   (N > 1 fans the collect phase
                   across N OS threads — bitwise identical to sequential;
-                  GWCLIP_THREADS overrides)
+                  GWCLIP_THREADS overrides) [--digest]   (print the bitwise
+                  state certificate — params FNV, thresholds, RNG stream
+                  positions, eps spent — after the run)
 ";
 
 fn main() -> Result<()> {
@@ -74,11 +92,17 @@ fn main() -> Result<()> {
     }
     let args = Args::parse(
         &argv,
-        &["paper-scale", "print-spec", "no-overlap", "no-error-feedback"],
+        &["paper-scale", "print-spec", "no-overlap", "no-error-feedback", "digest"],
     )?;
     if args.positional.first().map(|s| s.as_str()) == Some("bench-diff") {
         // trajectory gate only reads JSON files — no artifacts, no runtime
         return cmd_bench_diff(&args);
+    }
+    if args.positional.first().map(|s| s.as_str()) == Some("serve") {
+        // the daemon binds before touching artifacts: each session runner
+        // thread loads its own Runtime (the PJRT client is not Send), so
+        // the main thread never needs one
+        return cmd_serve(&args);
     }
     let dir = args
         .flags
@@ -89,6 +113,7 @@ fn main() -> Result<()> {
 
     match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&rt, &args),
+        Some("resume") => cmd_resume(&rt, &args),
         Some("train") => cmd_train(&rt, &args),
         Some("pipeline") => cmd_pipeline(&rt, &args),
         Some("shard") => cmd_shard(&rt, &args),
@@ -119,14 +144,76 @@ fn cmd_run(rt: &Runtime, args: &Args) -> Result<()> {
     if args.has("print-spec") {
         println!("{}", spec.render_json());
     }
-    run_session(SessionBuilder::from_spec(rt, spec))
+    run_session(SessionBuilder::from_spec(rt, spec), args)
 }
 
-fn run_session(builder: SessionBuilder) -> Result<()> {
+/// Rebuild the session a snapshot describes, restore its bitwise state
+/// and train the remaining steps — any backend. New snapshots continue
+/// into the source snapshot's directory unless `--snapshot-dir` says
+/// otherwise.
+fn cmd_resume(rt: &Runtime, args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("resume needs a snapshot file; see --help"))?;
+    let path = std::path::Path::new(path);
+    let snap = snapshot::read_file(path)?;
+    let mut spec = snapshot::spec_of(&snap)?;
+    // thread count is bitwise-neutral, so the override composes with a
+    // resume (GWCLIP_THREADS still wins inside the builder)
+    spec.threads = args.get_usize("threads", spec.threads)?;
+    let (mut sess, train, eval) = SessionBuilder::from_spec(rt, spec).build_with_data()?;
+    snapshot::restore(&mut sess, &snap)?;
+    eprintln!("{}", sess.describe());
+    eprintln!(
+        "resumed {} at step {} of {}",
+        path.display(),
+        sess.steploop.steps_done,
+        sess.total_steps
+    );
+    let dir = args
+        .flags
+        .get("snapshot-dir")
+        .map(std::path::PathBuf::from)
+        .or_else(|| path.parent().map(std::path::Path::to_path_buf))
+        .unwrap_or_else(|| std::path::PathBuf::from("snapshots"));
+    sess.run_with_snapshots(&*train, 10, args.get_u64("snapshot-every", 0)?, &dir)?;
+    finish_session(&sess, &*eval, args)
+}
+
+/// Start the multi-session training daemon (see `gwclip::serve`).
+fn cmd_serve(args: &Args) -> Result<()> {
+    let opts = gwclip::serve::ServeOpts {
+        addr: args.get("addr", "127.0.0.1:7700"),
+        artifacts: args
+            .flags
+            .get("artifacts")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(gwclip::artifact_dir),
+        state_dir: std::path::PathBuf::from(args.get("state-dir", "serve-state")),
+        snapshot_every: args.get_u64("snapshot-every", 25)?,
+    };
+    gwclip::serve::Daemon::bind(opts)?.run()
+}
+
+fn run_session(builder: SessionBuilder, args: &Args) -> Result<()> {
     let (mut sess, train, eval) = builder.build_with_data()?;
     eprintln!("{}", sess.describe());
-    sess.run(&*train, 10)?;
-    let (loss, acc) = sess.evaluate(&*eval)?;
+    let snapshot_every = args.get_u64("snapshot-every", 0)?;
+    let snapshot_dir = args.flags.get("snapshot-dir");
+    if snapshot_every > 0 || snapshot_dir.is_some() {
+        let dir = snapshot_dir
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| std::path::PathBuf::from("snapshots"));
+        sess.run_with_snapshots(&*train, 10, snapshot_every, &dir)?;
+    } else {
+        sess.run(&*train, 10)?;
+    }
+    finish_session(&sess, &*eval, args)
+}
+
+fn finish_session(sess: &Session, eval: &dyn gwclip::data::Dataset, args: &Args) -> Result<()> {
+    let (loss, acc) = sess.evaluate(eval)?;
     if acc.is_nan() {
         println!("final: eval loss {loss:.4}");
     } else {
@@ -139,6 +226,9 @@ fn run_session(builder: SessionBuilder) -> Result<()> {
             eprint!(" {g}={c:.4}");
         }
         eprintln!();
+    }
+    if args.has("digest") {
+        println!("digest: {}", sess.digest().render());
     }
     Ok(())
 }
@@ -179,6 +269,7 @@ fn cmd_train(rt: &Runtime, args: &Args) -> Result<()> {
             .epochs(args.get_f64("epochs", 3.0)?)
             .threads(args.get_usize("threads", 1)?)
             .seed(seed),
+        args,
     )
 }
 
@@ -363,7 +454,7 @@ fn cmd_shard(rt: &Runtime, args: &Args) -> Result<()> {
     if args.has("print-spec") {
         println!("{}", spec.render_json());
     }
-    run_session(SessionBuilder::from_spec(rt, spec))
+    run_session(SessionBuilder::from_spec(rt, spec), args)
 }
 
 /// Hybrid 2D-parallel run: R data-parallel replicas, each a full pipeline
@@ -438,7 +529,7 @@ fn cmd_hybrid(rt: &Runtime, args: &Args) -> Result<()> {
     if args.has("print-spec") {
         println!("{}", spec.render_json());
     }
-    run_session(SessionBuilder::from_spec(rt, spec))
+    run_session(SessionBuilder::from_spec(rt, spec), args)
 }
 
 /// Flag-driven pipeline run. Sigma is always accountant-derived from
@@ -488,5 +579,6 @@ fn cmd_pipeline(rt: &Runtime, args: &Args) -> Result<()> {
             .sampling(sampling)
             .threads(args.get_usize("threads", 1)?)
             .seed(seed),
+        args,
     )
 }

@@ -37,7 +37,7 @@ impl LossMeter {
         for (st, l) in &self.history {
             writeln!(s, "{st},{l}")?;
         }
-        std::fs::write(path, s)?;
+        crate::util::fsio::write_atomic(path.as_ref(), s.as_bytes())?;
         Ok(())
     }
 }
@@ -109,7 +109,10 @@ impl MdTable {
         if let Some(dir) = path.as_ref().parent() {
             std::fs::create_dir_all(dir)?;
         }
-        std::fs::write(path, format!("# {title}\n\n{}", self.render()))?;
+        crate::util::fsio::write_atomic(
+            path.as_ref(),
+            format!("# {title}\n\n{}", self.render()).as_bytes(),
+        )?;
         Ok(())
     }
 }

@@ -341,6 +341,25 @@ impl<'r> PipelineEngine<'r> {
         Ok(())
     }
 
+    /// Round-robin data cursor (legacy non-Poisson sampling). The one
+    /// piece of engine-held mutable draw state, so snapshots persist it.
+    pub fn cursor(&self) -> usize {
+        self.cursor
+    }
+
+    pub fn set_cursor(&mut self, cursor: usize) {
+        self.cursor = cursor;
+    }
+
+    /// Per-stage optimizer states, stage order (snapshot capture).
+    pub fn stage_optimizers(&self) -> Vec<&Optimizer> {
+        self.devices.iter().map(|d| &d.optimizer).collect()
+    }
+
+    pub fn stage_optimizers_mut(&mut self) -> Vec<&mut Optimizer> {
+        self.devices.iter_mut().map(|d| &mut d.optimizer).collect()
+    }
+
     /// Dump all stage parameters into one map (checkpointing / LoRA merge).
     pub fn dump_params(&self) -> HashMap<String, Tensor> {
         let mut m = HashMap::new();

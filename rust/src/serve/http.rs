@@ -1,0 +1,143 @@
+//! Minimal HTTP/1.1 on `std::net` — just enough for the serve daemon's
+//! local JSON API (no new dependencies, mirroring `util::json`). Every
+//! response is `Connection: close`, so clients read to EOF; the ndjson
+//! event stream omits `Content-Length` for the same reason.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Largest request body the daemon accepts (specs are a few KB; this
+/// bound keeps a bad client from ballooning the daemon).
+const MAX_BODY: usize = 16 << 20;
+
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: BTreeMap<String, String>,
+    pub body: String,
+}
+
+impl Request {
+    /// Non-empty path segments: `/sessions/a/events` -> `["sessions",
+    /// "a", "events"]`.
+    pub fn segments(&self) -> Vec<&str> {
+        self.path.split('/').filter(|s| !s.is_empty()).collect()
+    }
+}
+
+/// One accepted connection: buffered request reading + response writing.
+pub struct Conn {
+    reader: BufReader<TcpStream>,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream) -> Result<Conn> {
+        // a stalled client must not pin a handler thread forever
+        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+        stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+        Ok(Conn { reader: BufReader::new(stream) })
+    }
+
+    pub fn read_request(&mut self) -> Result<Request> {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).context("reading request line")?;
+        let mut parts = line.split_whitespace();
+        let method = parts.next().context("empty request line")?.to_string();
+        let target = parts.next().context("request line has no target")?.to_string();
+        let mut content_length = 0usize;
+        loop {
+            let mut h = String::new();
+            self.reader.read_line(&mut h).context("reading header")?;
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    content_length = v.trim().parse().context("bad content-length")?;
+                }
+            }
+        }
+        if content_length > MAX_BODY {
+            bail!("request body of {content_length} bytes exceeds the {MAX_BODY} byte limit");
+        }
+        let mut body = vec![0u8; content_length];
+        self.reader.read_exact(&mut body).context("reading request body")?;
+        let body = String::from_utf8(body).context("request body is not utf-8")?;
+        let (path, query_str) = match target.split_once('?') {
+            Some((p, q)) => (p.to_string(), q),
+            None => (target.clone(), ""),
+        };
+        let mut query = BTreeMap::new();
+        for pair in query_str.split('&').filter(|p| !p.is_empty()) {
+            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+            query.insert(k.to_string(), v.to_string());
+        }
+        Ok(Request { method, path, query, body })
+    }
+
+    fn write_head(&mut self, status: u16, content_type: &str, length: Option<usize>) -> Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nConnection: close\r\n",
+            status_text(status)
+        );
+        if let Some(n) = length {
+            head.push_str(&format!("Content-Length: {n}\r\n"));
+        }
+        head.push_str("\r\n");
+        self.reader.get_mut().write_all(head.as_bytes())?;
+        Ok(())
+    }
+
+    /// One complete JSON response; the connection is done after this.
+    pub fn respond_json(&mut self, status: u16, body: &Json) -> Result<()> {
+        let text = body.render();
+        self.write_head(status, "application/json", Some(text.len()))?;
+        self.reader.get_mut().write_all(text.as_bytes())?;
+        self.reader.get_mut().flush()?;
+        Ok(())
+    }
+
+    /// An error response with the message under `"error"`.
+    pub fn respond_error(&mut self, status: u16, msg: &str) -> Result<()> {
+        let mut m = BTreeMap::new();
+        m.insert("error".to_string(), Json::Str(msg.to_string()));
+        self.respond_json(status, &Json::Obj(m))
+    }
+
+    /// Begin a newline-delimited JSON stream (no Content-Length; the
+    /// close delimits it). Follow with [`Conn::write_line`] calls.
+    pub fn start_ndjson(&mut self) -> Result<()> {
+        self.write_head(200, "application/x-ndjson", None)
+    }
+
+    /// One ndjson line, flushed immediately so a tailing client sees
+    /// each event as it happens.
+    pub fn write_line(&mut self, line: &str) -> Result<()> {
+        let s = self.reader.get_mut();
+        s.write_all(line.as_bytes())?;
+        s.write_all(b"\n")?;
+        s.flush()?;
+        Ok(())
+    }
+}
+
+fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        500 => "Internal Server Error",
+        _ => "Status",
+    }
+}

@@ -1,0 +1,901 @@
+//! `gwclip serve` — a long-running daemon owning many concurrent named
+//! training sessions, with crash-safe checkpoint/resume.
+//!
+//! The daemon is the production wrapper the ROADMAP names: specs are
+//! submitted as TOML/JSON over a local HTTP/1.1 JSON API (hand-rolled
+//! on `std::net::TcpListener`, zero new dependencies), each session
+//! trains on its own OS thread, per-session [`StepEvent`] streams are
+//! queryable as ndjson, snapshots are published on a per-session
+//! cadence, and on restart every resident session resumes from its
+//! latest snapshot — bitwise, by the `session::snapshot` contract.
+//!
+//! **Threading model.** The PJRT client behind `Runtime` is neither
+//! `Send` nor `Sync`, so a session cannot migrate between threads: each
+//! runner thread constructs its own `Runtime` and owns its session end
+//! to end; only spec text and JSON cross thread boundaries. *Within* a
+//! session, the step loop's scoped-thread collect fan-out (the PR 7
+//! machinery, `threads` knob) still applies — the daemon is a pool of
+//! session threads, each of which may itself fan collect across
+//! threads. Stepping is sequential per session (no prefetch lookahead):
+//! snapshots are only sound at a true step boundary, and sequential
+//! stepping is bitwise identical to the prefetch loop by contract.
+//!
+//! **Thread-count precedence** (`session::spec::resolve_threads`): a
+//! submit's `threads` field overrides the spec's, and the daemon
+//! process's `GWCLIP_THREADS` overrides both — resolved per session at
+//! submit time, not frozen at daemon start.
+//!
+//! **API** (all JSON; `Connection: close`):
+//!
+//! | method & path                  | effect                                      |
+//! |--------------------------------|---------------------------------------------|
+//! | GET  /healthz                  | liveness + session count                    |
+//! | GET  /sessions                 | list every resident session's status        |
+//! | POST /sessions                 | submit `{name, spec, threads?, snapshot_every?}` |
+//! | GET  /sessions/N               | one session's status (+ digest when done)   |
+//! | GET  /sessions/N/events        | ndjson event stream (`?from=K&wait=0`)      |
+//! | POST /sessions/N/snapshot      | snapshot after the current step             |
+//! | POST /sessions/N/stop          | stop at the next step boundary (+ snapshot) |
+//! | DELETE /sessions/N             | stop, drop from the registry, remove state  |
+//! | POST /shutdown                 | stop every session, exit the accept loop    |
+//!
+//! On-disk layout under `--state-dir`: one directory per session
+//! holding `serve.json` (the submitted spec + options, written
+//! atomically) and `step-*.json` snapshots. The bound address is
+//! published to `<state-dir>/addr` so `--addr 127.0.0.1:0` (ephemeral
+//! port, used by the CI smoke script) is discoverable.
+
+pub mod http;
+
+use std::collections::BTreeMap;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::Runtime;
+use crate::session::snapshot;
+use crate::session::spec::resolve_threads;
+use crate::session::{RunSpec, SessionBuilder};
+use crate::util::fsio;
+use crate::util::json::Json;
+
+use http::{Conn, Request};
+
+// ------------------------------------------------------------------ state
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// runner is building the session (artifacts, data, accountant)
+    Pending,
+    Running,
+    /// finished all planned steps
+    Done,
+    /// stopped at a step boundary by request; resumable
+    Stopped,
+    Failed,
+}
+
+impl Phase {
+    fn token(self) -> &'static str {
+        match self {
+            Phase::Pending => "pending",
+            Phase::Running => "running",
+            Phase::Done => "done",
+            Phase::Stopped => "stopped",
+            Phase::Failed => "failed",
+        }
+    }
+
+    fn terminal(self) -> bool {
+        matches!(self, Phase::Done | Phase::Stopped | Phase::Failed)
+    }
+}
+
+struct Status {
+    phase: Phase,
+    /// error message when Failed
+    detail: String,
+    step: u64,
+    total: u64,
+    threads: usize,
+    backend: String,
+    eps_spent: Option<f64>,
+    snapshot_step: Option<u64>,
+    /// bitwise state certificate, set when the run reaches a terminal
+    /// phase (see `Session::digest`)
+    digest: Option<Json>,
+}
+
+/// One resident session: immutable submit data + shared mutable status,
+/// events and control flags. The runner thread is the only writer of
+/// status/events; API handler threads read them and flip the flags.
+struct SessionEntry {
+    name: String,
+    spec_text: String,
+    threads: Option<usize>,
+    snapshot_every: u64,
+    status: Mutex<Status>,
+    events: Mutex<Vec<Json>>,
+    /// paired with `events`; also rung on status transitions so event
+    /// tails and status waiters wake promptly (they re-check with
+    /// timeouts, so a missed ring only costs latency)
+    bell: Condvar,
+    stop: AtomicBool,
+    snap_req: AtomicBool,
+    runner: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl SessionEntry {
+    fn new(name: String, spec_text: String, threads: Option<usize>, snapshot_every: u64) -> Self {
+        SessionEntry {
+            name,
+            spec_text,
+            threads,
+            snapshot_every,
+            status: Mutex::new(Status {
+                phase: Phase::Pending,
+                detail: String::new(),
+                step: 0,
+                total: 0,
+                threads: 0,
+                backend: String::new(),
+                eps_spent: None,
+                snapshot_step: None,
+                digest: None,
+            }),
+            events: Mutex::new(Vec::new()),
+            bell: Condvar::new(),
+            stop: AtomicBool::new(false),
+            snap_req: AtomicBool::new(false),
+            runner: Mutex::new(None),
+        }
+    }
+
+    fn ring(&self) {
+        self.bell.notify_all();
+    }
+
+    fn status_json(&self) -> Json {
+        // lock order is events -> status everywhere (stream_events holds
+        // events while peeking at the phase)
+        let n_events = self.events.lock().unwrap().len();
+        let st = self.status.lock().unwrap();
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("phase".to_string(), Json::Str(st.phase.token().to_string()));
+        m.insert("step".to_string(), Json::Num(st.step as f64));
+        m.insert("total_steps".to_string(), Json::Num(st.total as f64));
+        m.insert("threads".to_string(), Json::Num(st.threads as f64));
+        m.insert("backend".to_string(), Json::Str(st.backend.clone()));
+        m.insert("events".to_string(), Json::Num(n_events as f64));
+        m.insert(
+            "eps_spent".to_string(),
+            match st.eps_spent {
+                Some(e) => Json::Num(e),
+                None => Json::Null,
+            },
+        );
+        m.insert(
+            "snapshot_step".to_string(),
+            match st.snapshot_step {
+                Some(s) => Json::Num(s as f64),
+                None => Json::Null,
+            },
+        );
+        if !st.detail.is_empty() {
+            m.insert("detail".to_string(), Json::Str(st.detail.clone()));
+        }
+        if let Some(d) = &st.digest {
+            m.insert("digest".to_string(), d.clone());
+        }
+        Json::Obj(m)
+    }
+}
+
+type Registry = Arc<Mutex<BTreeMap<String, Arc<SessionEntry>>>>;
+
+// ----------------------------------------------------------------- daemon
+
+pub struct ServeOpts {
+    /// bind address, e.g. `127.0.0.1:7777` or `127.0.0.1:0` (ephemeral)
+    pub addr: String,
+    /// AOT artifact directory each runner's `Runtime` loads from
+    pub artifacts: PathBuf,
+    /// root of per-session state (sidecars + snapshots)
+    pub state_dir: PathBuf,
+    /// default snapshot cadence for submits that don't set one (0 = only
+    /// on stop/completion)
+    pub snapshot_every: u64,
+}
+
+pub struct Daemon {
+    opts: Arc<ServeOpts>,
+    listener: TcpListener,
+    registry: Registry,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Daemon {
+    /// Bind the listener, publish the bound address to
+    /// `<state-dir>/addr`, and re-register every resident session found
+    /// under the state dir (each resumes from its latest snapshot on
+    /// its own runner thread).
+    pub fn bind(opts: ServeOpts) -> Result<Daemon> {
+        std::fs::create_dir_all(&opts.state_dir).with_context(|| {
+            format!("creating state dir {}", opts.state_dir.display())
+        })?;
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("binding {}", opts.addr))?;
+        let local = listener.local_addr()?;
+        fsio::write_atomic(&opts.state_dir.join("addr"), local.to_string().as_bytes())?;
+        let daemon = Daemon {
+            opts: Arc::new(opts),
+            listener,
+            registry: Arc::new(Mutex::new(BTreeMap::new())),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        };
+        daemon.resume_residents();
+        Ok(daemon)
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.listener.local_addr().expect("listener is bound")
+    }
+
+    /// Scan the state dir for `serve.json` sidecars and restart each
+    /// session found — resuming from its latest snapshot if one exists,
+    /// from step 0 otherwise. A broken sidecar skips that session with
+    /// a warning; it never takes the daemon down.
+    fn resume_residents(&self) {
+        let entries = match std::fs::read_dir(&self.opts.state_dir) {
+            Ok(e) => e,
+            Err(_) => return,
+        };
+        for entry in entries.flatten() {
+            let sidecar = entry.path().join("serve.json");
+            if !sidecar.is_file() {
+                continue;
+            }
+            let resume = (|| -> Result<()> {
+                let text = std::fs::read_to_string(&sidecar)?;
+                let j = Json::parse(&text)?;
+                let name = j.get("name")?.str()?.to_string();
+                let spec_text = j.get("spec")?.str()?.to_string();
+                let threads = match j.opt("threads") {
+                    Some(v) => Some(v.usize()?),
+                    None => None,
+                };
+                let every = j.get("snapshot_every")?.u64()?;
+                let entry = Arc::new(SessionEntry::new(name.clone(), spec_text, threads, every));
+                self.registry.lock().unwrap().insert(name, Arc::clone(&entry));
+                spawn_runner(entry, Arc::clone(&self.opts));
+                Ok(())
+            })();
+            if let Err(e) = resume {
+                eprintln!("[serve] skipping resident {}: {e:#}", sidecar.display());
+            }
+        }
+    }
+
+    /// Accept loop; returns after `POST /shutdown`, with every runner
+    /// stopped at a step boundary (snapshotted) and joined.
+    pub fn run(&self) -> Result<()> {
+        eprintln!(
+            "[serve] listening on http://{} (state {})",
+            self.local_addr(),
+            self.opts.state_dir.display()
+        );
+        for stream in self.listener.incoming() {
+            if self.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let registry = Arc::clone(&self.registry);
+            let opts = Arc::clone(&self.opts);
+            let shutdown = Arc::clone(&self.shutdown);
+            let addr = self.local_addr();
+            std::thread::spawn(move || {
+                let mut conn = match Conn::new(stream) {
+                    Ok(c) => c,
+                    Err(_) => return,
+                };
+                let req = match conn.read_request() {
+                    Ok(r) => r,
+                    Err(e) => {
+                        let _ = conn.respond_error(400, &format!("{e:#}"));
+                        return;
+                    }
+                };
+                if let Err(e) = handle(&mut conn, &req, &registry, &opts, &shutdown) {
+                    let _ = conn.respond_error(500, &format!("{e:#}"));
+                }
+                // unblock the accept loop so it observes the flag
+                if shutdown.load(Ordering::SeqCst) {
+                    let _ = TcpStream::connect(addr);
+                }
+            });
+        }
+        // stop and join every runner so their final snapshots land
+        let entries: Vec<Arc<SessionEntry>> =
+            self.registry.lock().unwrap().values().cloned().collect();
+        for e in &entries {
+            e.stop.store(true, Ordering::SeqCst);
+            e.ring();
+        }
+        for e in &entries {
+            if let Some(h) = e.runner.lock().unwrap().take() {
+                let _ = h.join();
+            }
+        }
+        eprintln!("[serve] shut down");
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------------------- runner
+
+fn spawn_runner(entry: Arc<SessionEntry>, opts: Arc<ServeOpts>) {
+    let for_thread = Arc::clone(&entry);
+    let handle = std::thread::Builder::new()
+        .name(format!("gwclip-serve-{}", entry.name))
+        .spawn(move || {
+            if let Err(e) = run_session(&for_thread, &opts) {
+                let mut st = for_thread.status.lock().unwrap();
+                st.phase = Phase::Failed;
+                st.detail = format!("{e:#}");
+                drop(st);
+                for_thread.ring();
+            }
+        })
+        .expect("spawning a session runner thread");
+    *entry.runner.lock().unwrap() = Some(handle);
+}
+
+/// The whole life of one session, on its own thread: build (or resume
+/// from the latest snapshot), step to completion or stop, snapshot on
+/// cadence/demand, publish events and the final digest.
+fn run_session(entry: &SessionEntry, opts: &ServeOpts) -> Result<()> {
+    // the PJRT runtime is thread-local by construction (!Send): built
+    // here, owned here, dropped here
+    let rt = Runtime::new(&opts.artifacts).with_context(|| {
+        format!(
+            "loading artifacts from {} (run `make artifacts` first)",
+            opts.artifacts.display()
+        )
+    })?;
+    let sdir = opts.state_dir.join(&entry.name);
+    std::fs::create_dir_all(&sdir)?;
+    let latest = snapshot::latest_in_dir(&sdir)?;
+    let (mut sess, train, _eval) = match &latest {
+        Some(path) => {
+            let snap = snapshot::read_file(path)?;
+            let mut spec = snapshot::spec_of(&snap)?;
+            if let Some(t) = entry.threads {
+                spec.threads = t;
+            }
+            let (mut sess, train, eval) = SessionBuilder::from_spec(&rt, spec).build_with_data()?;
+            snapshot::restore(&mut sess, &snap)
+                .with_context(|| format!("resuming from {}", path.display()))?;
+            (sess, train, eval)
+        }
+        None => {
+            let mut spec = RunSpec::parse(&entry.spec_text)?;
+            if let Some(t) = entry.threads {
+                spec.threads = t;
+            }
+            SessionBuilder::from_spec(&rt, spec).build_with_data()?
+        }
+    };
+    {
+        let mut st = entry.status.lock().unwrap();
+        st.phase = Phase::Running;
+        st.step = sess.steploop.steps_done;
+        st.total = sess.total_steps;
+        st.threads = sess.steploop.threads;
+        st.backend = sess.backend.name().to_string();
+        st.eps_spent = sess.epsilon_spent();
+        st.snapshot_step = latest.as_ref().map(|_| sess.steploop.steps_done);
+    }
+    entry.ring();
+
+    let every = entry.snapshot_every;
+    while sess.steploop.steps_done < sess.total_steps {
+        if entry.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let ev = sess.step(&*train)?;
+        let s = ev.step;
+        entry.events.lock().unwrap().push(ev.to_json());
+        {
+            let mut st = entry.status.lock().unwrap();
+            st.step = s;
+            st.eps_spent = sess.epsilon_spent();
+        }
+        if entry.snap_req.swap(false, Ordering::SeqCst)
+            || (every > 0 && s % every == 0)
+            || s == sess.total_steps
+        {
+            snapshot::write(&sess, &sdir.join(snapshot::file_name(s)))?;
+            entry.status.lock().unwrap().snapshot_step = Some(s);
+        }
+        entry.ring();
+    }
+
+    let finished = sess.steploop.steps_done >= sess.total_steps;
+    if !finished {
+        // stopped by request: publish a parting snapshot at this exact
+        // boundary so the next start resumes bitwise from here
+        let s = sess.steploop.steps_done;
+        snapshot::write(&sess, &sdir.join(snapshot::file_name(s)))?;
+        entry.status.lock().unwrap().snapshot_step = Some(s);
+    }
+    {
+        let mut st = entry.status.lock().unwrap();
+        st.phase = if finished { Phase::Done } else { Phase::Stopped };
+        st.eps_spent = sess.epsilon_spent();
+        st.digest = Some(sess.digest());
+    }
+    entry.ring();
+    Ok(())
+}
+
+// --------------------------------------------------------------- handlers
+
+fn valid_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.len() <= 64
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+}
+
+fn get_entry(registry: &Registry, name: &str) -> Option<Arc<SessionEntry>> {
+    registry.lock().unwrap().get(name).cloned()
+}
+
+fn handle(
+    conn: &mut Conn,
+    req: &Request,
+    registry: &Registry,
+    opts: &Arc<ServeOpts>,
+    shutdown: &Arc<AtomicBool>,
+) -> Result<()> {
+    let segs = req.segments();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => {
+            let mut m = BTreeMap::new();
+            m.insert("ok".to_string(), Json::Bool(true));
+            m.insert("sessions".to_string(), Json::Num(registry.lock().unwrap().len() as f64));
+            conn.respond_json(200, &Json::Obj(m))
+        }
+        ("GET", ["sessions"]) => {
+            let entries: Vec<Arc<SessionEntry>> =
+                registry.lock().unwrap().values().cloned().collect();
+            let list: Vec<Json> = entries.iter().map(|e| e.status_json()).collect();
+            conn.respond_json(200, &Json::Arr(list))
+        }
+        ("POST", ["sessions"]) => submit(conn, req, registry, opts),
+        ("GET", [s, name]) if *s == "sessions" => match get_entry(registry, name) {
+            Some(e) => conn.respond_json(200, &e.status_json()),
+            None => conn.respond_error(404, &format!("no session named {name:?}")),
+        },
+        ("GET", [s, name, ev]) if *s == "sessions" && *ev == "events" => {
+            match get_entry(registry, name) {
+                Some(e) => stream_events(conn, req, &e),
+                None => conn.respond_error(404, &format!("no session named {name:?}")),
+            }
+        }
+        ("POST", [s, name, act]) if *s == "sessions" && *act == "snapshot" => {
+            match get_entry(registry, name) {
+                Some(e) => {
+                    e.snap_req.store(true, Ordering::SeqCst);
+                    let mut m = BTreeMap::new();
+                    m.insert("requested".to_string(), Json::Bool(true));
+                    conn.respond_json(202, &Json::Obj(m))
+                }
+                None => conn.respond_error(404, &format!("no session named {name:?}")),
+            }
+        }
+        ("POST", [s, name, act]) if *s == "sessions" && *act == "stop" => {
+            match get_entry(registry, name) {
+                Some(e) => {
+                    e.stop.store(true, Ordering::SeqCst);
+                    e.ring();
+                    let mut m = BTreeMap::new();
+                    m.insert("stopping".to_string(), Json::Bool(true));
+                    conn.respond_json(202, &Json::Obj(m))
+                }
+                None => conn.respond_error(404, &format!("no session named {name:?}")),
+            }
+        }
+        ("DELETE", [s, name]) if *s == "sessions" => delete_session(conn, registry, opts, name),
+        ("POST", ["shutdown"]) => {
+            shutdown.store(true, Ordering::SeqCst);
+            for e in registry.lock().unwrap().values() {
+                e.stop.store(true, Ordering::SeqCst);
+                e.ring();
+            }
+            let mut m = BTreeMap::new();
+            m.insert("ok".to_string(), Json::Bool(true));
+            conn.respond_json(200, &Json::Obj(m))
+        }
+        (_, ["healthz" | "sessions" | "shutdown", ..]) => {
+            conn.respond_error(405, &format!("{} not allowed on {}", req.method, req.path))
+        }
+        _ => conn.respond_error(404, &format!("no route for {} {}", req.method, req.path)),
+    }
+}
+
+fn submit(
+    conn: &mut Conn,
+    req: &Request,
+    registry: &Registry,
+    opts: &Arc<ServeOpts>,
+) -> Result<()> {
+    let body = match Json::parse(&req.body) {
+        Ok(j) => j,
+        Err(e) => return conn.respond_error(400, &format!("submit body is not JSON: {e:#}")),
+    };
+    let parsed = (|| -> Result<(String, String, Option<usize>, u64)> {
+        let name = body.get("name")?.str()?.to_string();
+        if !valid_name(&name) {
+            bail!("session name must be 1-64 chars of [a-zA-Z0-9_-], got {name:?}");
+        }
+        // the spec rides as embedded TOML/JSON text, or as an inline
+        // JSON object (rendered back to text for the sidecar)
+        let spec_text = match body.get("spec")? {
+            Json::Str(s) => s.clone(),
+            obj @ Json::Obj(_) => obj.render(),
+            _ => bail!("`spec` must be a spec string (TOML/JSON) or a JSON object"),
+        };
+        // parse + validate NOW so a bad spec fails the submit, not the
+        // runner thread minutes later
+        let spec = RunSpec::parse(&spec_text).context("invalid spec")?;
+        let threads = match body.opt("threads") {
+            Some(v) => Some(v.usize()?),
+            None => None,
+        };
+        let every = match body.opt("snapshot_every") {
+            Some(v) => v.u64()?,
+            None => opts.snapshot_every,
+        };
+        // resolved per session at submit time: spec < submit < env
+        let resolved = resolve_threads(
+            spec.threads,
+            threads,
+            std::env::var("GWCLIP_THREADS").ok().as_deref(),
+        );
+        Ok((name, spec_text, threads.map(|_| resolved), every))
+    })();
+    let (name, spec_text, threads, every) = match parsed {
+        Ok(v) => v,
+        Err(e) => return conn.respond_error(400, &format!("{e:#}")),
+    };
+
+    let entry = Arc::new(SessionEntry::new(name.clone(), spec_text.clone(), threads, every));
+    {
+        let mut reg = registry.lock().unwrap();
+        if reg.contains_key(&name) {
+            drop(reg);
+            return conn.respond_error(409, &format!("session {name:?} already exists"));
+        }
+        reg.insert(name.clone(), Arc::clone(&entry));
+    }
+
+    // persist the sidecar so a daemon restart re-registers this session
+    let sdir = opts.state_dir.join(&name);
+    std::fs::create_dir_all(&sdir)?;
+    let mut sc = BTreeMap::new();
+    sc.insert("name".to_string(), Json::Str(name.clone()));
+    sc.insert("spec".to_string(), Json::Str(spec_text));
+    sc.insert(
+        "threads".to_string(),
+        match threads {
+            Some(t) => Json::Num(t as f64),
+            None => Json::Null,
+        },
+    );
+    sc.insert("snapshot_every".to_string(), Json::Num(every as f64));
+    fsio::write_atomic(&sdir.join("serve.json"), Json::Obj(sc).render().as_bytes())?;
+
+    spawn_runner(entry, Arc::clone(opts));
+
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(name));
+    m.insert("snapshot_every".to_string(), Json::Num(every as f64));
+    conn.respond_json(201, &Json::Obj(m))
+}
+
+fn delete_session(
+    conn: &mut Conn,
+    registry: &Registry,
+    opts: &Arc<ServeOpts>,
+    name: &str,
+) -> Result<()> {
+    let entry = match get_entry(registry, name) {
+        Some(e) => e,
+        None => return conn.respond_error(404, &format!("no session named {name:?}")),
+    };
+    entry.stop.store(true, Ordering::SeqCst);
+    entry.ring();
+    // runners check the stop flag at step boundaries; a session still
+    // building can't be interrupted, so bound the wait and let the
+    // client retry
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if entry.status.lock().unwrap().phase.terminal() {
+            break;
+        }
+        if Instant::now() >= deadline {
+            return conn.respond_error(409, &format!("session {name:?} is still stopping; retry"));
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    if let Some(h) = entry.runner.lock().unwrap().take() {
+        let _ = h.join();
+    }
+    registry.lock().unwrap().remove(name);
+    // dropping the state dir makes the removal permanent: a daemon
+    // restart will NOT resurrect this session
+    let _ = std::fs::remove_dir_all(opts.state_dir.join(name));
+    let mut m = BTreeMap::new();
+    m.insert("deleted".to_string(), Json::Bool(true));
+    conn.respond_json(200, &Json::Obj(m))
+}
+
+/// Stream a session's events as ndjson from `?from=K` (default 0).
+/// With `?wait=0` the stream ends at the current tail; by default it
+/// follows the session until a terminal phase, then emits one final
+/// status line (phase + digest) and closes — the continuity marker the
+/// smoke script asserts on.
+fn stream_events(conn: &mut Conn, req: &Request, entry: &Arc<SessionEntry>) -> Result<()> {
+    let from: usize = match req.query.get("from").map(|v| v.parse()) {
+        None => 0,
+        Some(Ok(v)) => v,
+        Some(Err(_)) => return conn.respond_error(400, "bad ?from= value"),
+    };
+    let follow = req.query.get("wait").map(|v| v != "0").unwrap_or(true);
+    conn.start_ndjson()?;
+    let mut cursor = from;
+    loop {
+        let (lines, terminal) = {
+            let evs = entry.events.lock().unwrap();
+            let start = cursor.min(evs.len());
+            let lines: Vec<String> = evs[start..].iter().map(|j| j.render()).collect();
+            cursor = evs.len();
+            (lines, entry.status.lock().unwrap().phase.terminal())
+        };
+        for line in &lines {
+            if conn.write_line(line).is_err() {
+                return Ok(()); // client went away
+            }
+        }
+        if terminal || !follow {
+            if terminal {
+                let _ = conn.write_line(&entry.status_json().render());
+            }
+            return Ok(());
+        }
+        let evs = entry.events.lock().unwrap();
+        if evs.len() > cursor {
+            continue;
+        }
+        let (guard, _timed_out) = entry
+            .bell
+            .wait_timeout(evs, Duration::from_millis(200))
+            .map_err(|_| anyhow!("events mutex poisoned"))?;
+        drop(guard);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read as _, Write as _};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "gwclip_serve_{tag}_{}_{}",
+            std::process::id(),
+            std::thread::current().name().unwrap_or("t").replace("::", "_")
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// Raw HTTP round trip; responses are Connection: close, so read to
+    /// EOF and split status/body by hand.
+    fn req(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let msg = format!(
+            "{method} {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        s.write_all(msg.as_bytes()).unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let status: u16 = buf
+            .split_whitespace()
+            .nth(1)
+            .and_then(|c| c.parse().ok())
+            .unwrap_or_else(|| panic!("bad response: {buf:?}"));
+        let payload = buf.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+        (status, payload)
+    }
+
+    fn start(tag: &str) -> (Arc<Daemon>, std::net::SocketAddr, PathBuf) {
+        let state = tmpdir(tag);
+        let daemon = Arc::new(
+            Daemon::bind(ServeOpts {
+                addr: "127.0.0.1:0".to_string(),
+                // deliberately nonexistent: runner builds fail fast,
+                // which is exactly what the artifact-free API tests need
+                artifacts: PathBuf::from("/nonexistent-artifacts-for-tests"),
+                state_dir: state.clone(),
+                snapshot_every: 0,
+            })
+            .unwrap(),
+        );
+        let addr = daemon.local_addr();
+        let d2 = Arc::clone(&daemon);
+        std::thread::spawn(move || d2.run().unwrap());
+        (daemon, addr, state)
+    }
+
+    fn shutdown(addr: std::net::SocketAddr) {
+        let (code, _) = req(addr, "POST", "/shutdown", "");
+        assert_eq!(code, 200);
+    }
+
+    const SPEC: &str = "config = \"resmlp_tiny\"\nepochs = 0.05\n";
+
+    #[test]
+    fn healthz_and_unknown_routes() {
+        let (_d, addr, state) = start("health");
+        let (code, body) = req(addr, "GET", "/healthz", "");
+        assert_eq!(code, 200);
+        assert!(body.contains("\"ok\":true"), "{body}");
+        let (code, _) = req(addr, "GET", "/nope", "");
+        assert_eq!(code, 404);
+        let (code, _) = req(addr, "GET", "/sessions/ghost", "");
+        assert_eq!(code, 404);
+        let (code, _) = req(addr, "GET", "/sessions/ghost/events", "");
+        assert_eq!(code, 404);
+        let (code, _) = req(addr, "DELETE", "/healthz", "");
+        assert_eq!(code, 405);
+        shutdown(addr);
+        std::fs::remove_dir_all(state).ok();
+    }
+
+    #[test]
+    fn submit_validation_and_failed_build_surface() {
+        let (_d, addr, state) = start("submit");
+        // bad name
+        let bad_name = "{\"name\":\"no/slash\",\"spec\":\"x\"}";
+        let (code, body) = req(addr, "POST", "/sessions", bad_name);
+        assert_eq!(code, 400, "{body}");
+        // bad spec fails the submit, not the runner
+        let (code, body) =
+            req(addr, "POST", "/sessions", "{\"name\":\"bad\",\"spec\":\"config = 7\"}");
+        assert_eq!(code, 400, "{body}");
+        // not json at all
+        let (code, _) = req(addr, "POST", "/sessions", "not json");
+        assert_eq!(code, 400);
+        // valid spec: accepted, then fails in the runner (no artifacts
+        // in this environment) and surfaces the error in status
+        let submit =
+            format!("{{\"name\":\"s1\",\"spec\":{}}}", Json::Str(SPEC.to_string()).render());
+        let (code, body) = req(addr, "POST", "/sessions", &submit);
+        assert_eq!(code, 201, "{body}");
+        // duplicate name
+        let (code, _) = req(addr, "POST", "/sessions", &submit);
+        assert_eq!(code, 409);
+        // sidecar persisted for restart
+        assert!(state.join("s1").join("serve.json").is_file());
+        // runner fails fast; status shows failed + detail
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let (code, body) = req(addr, "GET", "/sessions/s1", "");
+            assert_eq!(code, 200);
+            if body.contains("\"phase\":\"failed\"") {
+                assert!(body.contains("artifacts"), "{body}");
+                break;
+            }
+            assert!(Instant::now() < deadline, "never failed: {body}");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        // the event stream of a failed session terminates with a status line
+        let (code, body) = req(addr, "GET", "/sessions/s1/events", "");
+        assert_eq!(code, 200);
+        assert!(body.contains("\"phase\":\"failed\""), "{body}");
+        shutdown(addr);
+        std::fs::remove_dir_all(state).ok();
+    }
+
+    #[test]
+    fn restart_scan_reregisters_resident_sessions() {
+        let (_d, addr, state) = start("restart");
+        let submit = format!(
+            "{{\"name\":\"resident\",\"spec\":{},\"threads\":3,\"snapshot_every\":5}}",
+            Json::Str(SPEC.to_string()).render()
+        );
+        let (code, _) = req(addr, "POST", "/sessions", &submit);
+        assert_eq!(code, 201);
+        shutdown(addr);
+        // wait for the listener to actually exit so rebinding the state
+        // dir is the "restart"
+        std::thread::sleep(Duration::from_millis(100));
+
+        let daemon2 = Daemon::bind(ServeOpts {
+            addr: "127.0.0.1:0".to_string(),
+            artifacts: PathBuf::from("/nonexistent-artifacts-for-tests"),
+            state_dir: state.clone(),
+            snapshot_every: 0,
+        })
+        .unwrap();
+        let addr2 = daemon2.local_addr();
+        let d2 = Arc::new(daemon2);
+        let d3 = Arc::clone(&d2);
+        std::thread::spawn(move || d3.run().unwrap());
+        let (code, body) = req(addr2, "GET", "/sessions/resident", "");
+        assert_eq!(code, 200, "{body}");
+        // broken sidecars are skipped, not fatal
+        std::fs::create_dir_all(state.join("broken")).unwrap();
+        std::fs::write(state.join("broken").join("serve.json"), b"{{{").unwrap();
+        shutdown(addr2);
+        std::thread::sleep(Duration::from_millis(100));
+        let daemon3 = Daemon::bind(ServeOpts {
+            addr: "127.0.0.1:0".to_string(),
+            artifacts: PathBuf::from("/nonexistent-artifacts-for-tests"),
+            state_dir: state.clone(),
+            snapshot_every: 0,
+        })
+        .unwrap();
+        assert!(daemon3.registry.lock().unwrap().contains_key("resident"));
+        assert!(!daemon3.registry.lock().unwrap().contains_key("broken"));
+        let addr3 = daemon3.local_addr();
+        let d4 = Arc::new(daemon3);
+        let d5 = Arc::clone(&d4);
+        std::thread::spawn(move || d5.run().unwrap());
+        shutdown(addr3);
+        std::fs::remove_dir_all(state).ok();
+    }
+
+    #[test]
+    fn delete_removes_session_and_state() {
+        let (_d, addr, state) = start("delete");
+        let submit =
+            format!("{{\"name\":\"gone\",\"spec\":{}}}", Json::Str(SPEC.to_string()).render());
+        let (code, _) = req(addr, "POST", "/sessions", &submit);
+        assert_eq!(code, 201);
+        // wait until terminal (failed: no artifacts) so DELETE is instant
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while !req(addr, "GET", "/sessions/gone", "").1.contains("\"phase\":\"failed\"") {
+            assert!(Instant::now() < deadline);
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        let (code, body) = req(addr, "DELETE", "/sessions/gone", "");
+        assert_eq!(code, 200, "{body}");
+        let (code, _) = req(addr, "GET", "/sessions/gone", "");
+        assert_eq!(code, 404);
+        assert!(!state.join("gone").exists(), "state dir must be removed");
+        shutdown(addr);
+        std::fs::remove_dir_all(state).ok();
+    }
+
+    #[test]
+    fn name_validation() {
+        assert!(valid_name("a"));
+        assert!(valid_name("train-1_b"));
+        assert!(!valid_name(""));
+        assert!(!valid_name("a/b"));
+        assert!(!valid_name("a b"));
+        assert!(!valid_name(&"x".repeat(65)));
+    }
+}

@@ -35,6 +35,7 @@
 pub mod core;
 pub(crate) mod grad;
 pub(crate) mod prefetch;
+pub mod snapshot;
 pub mod spec;
 pub mod steploop;
 
@@ -123,6 +124,28 @@ pub struct StepEvent {
 }
 
 impl StepEvent {
+    /// The event as a JSON object (the serve daemon's ndjson event
+    /// stream). Numbers render through Rust's shortest-round-trip f64
+    /// formatting, so finite values parse back to equal floats.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let nums = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("step".to_string(), Json::Num(self.step as f64));
+        m.insert("loss".to_string(), Json::Num(self.loss));
+        m.insert("batch_size".to_string(), Json::Num(self.batch_size as f64));
+        m.insert("clip_frac".to_string(), nums(&self.clip_frac));
+        m.insert("mean_norms".to_string(), nums(&self.mean_norms));
+        m.insert("host_secs".to_string(), Json::Num(self.host_secs));
+        m.insert("sim_secs".to_string(), Json::Num(self.sim_secs));
+        m.insert("threads".to_string(), Json::Num(self.threads as f64));
+        m.insert("syncs".to_string(), Json::Num(self.syncs as f64));
+        m.insert("calls".to_string(), Json::Num(self.calls as f64));
+        m.insert("truncated".to_string(), Json::Num(self.truncated as f64));
+        m.insert("unit".to_string(), Json::Str(self.unit.to_string()));
+        Json::Obj(m)
+    }
+
     /// One-line human-readable progress report. Backends that simulate a
     /// cross-replica reduction (sharded, hybrid) also report both the
     /// overlapped and barrier makespans; capacity-bound truncated draws
@@ -1113,14 +1136,94 @@ impl<'r> Session<'r> {
         }
     }
 
-    /// Train for the planned number of steps; returns the event stream.
-    /// With `threads > 1` the loop runs the prefetching loader: step
-    /// `t + 1`'s draw is dealt (on the dedicated draw stream) and its
-    /// batches assembled in the background while step `t` collects —
-    /// bitwise identical to the sequential loop, which deals the same
-    /// draws in the same stream order, just later.
-    pub fn run(&mut self, data: &dyn Dataset, log_every: u64) -> Result<Vec<StepEvent>> {
-        let label = match &self.backend {
+    /// Override the step loop's OS-thread fan-out. Thread count is
+    /// contractually bitwise-neutral (the PR 7 parity pins), so the
+    /// serve daemon resolves it per session at submit time.
+    pub fn set_threads(&mut self, n: usize) {
+        self.steploop.threads = n.max(1);
+    }
+
+    /// Privacy spent so far: (eps, delta)-composition over the releases
+    /// made in the first `steps_done` steps, at the plan's calibrated
+    /// sigma. For Poisson-sampled backends `plan.steps == total_steps`
+    /// and this composes exactly `steps_done` releases; for round-robin
+    /// pipeline runs the plan composes per-example participations, so
+    /// the spent fraction is scaled accordingly (rounded up — never
+    /// under-reported). `None` for non-private runs.
+    pub fn epsilon_spent(&self) -> Option<f64> {
+        let p = self.plan()?;
+        let done = self.steploop.steps_done.min(self.total_steps);
+        let released = if self.total_steps == 0 || done == 0 {
+            0
+        } else {
+            let num = p.steps as u128 * done as u128;
+            let den = self.total_steps as u128;
+            ((num + den - 1) / den) as u64
+        };
+        if released == 0 {
+            return Some(0.0);
+        }
+        Some(crate::coordinator::accountant::epsilon_for(p.q, p.sigma_base, released, p.delta).0)
+    }
+
+    /// A compact bitwise state certificate: step counter, an FNV-1a-64
+    /// hash over the name-sorted parameter bit patterns, exact threshold
+    /// bits, both RNG stream positions (incl. Marsaglia spare presence)
+    /// and the privacy spent. Two sessions with equal digests took the
+    /// same trajectory — the observable the kill-and-resume parity
+    /// tests and the serve smoke script compare.
+    pub fn digest(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        use snapshot::{hex_f64, hex_u64};
+        let map = self.param_map();
+        let mut names: Vec<&String> = map.keys().collect();
+        names.sort();
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+        };
+        for name in names {
+            eat(name.as_bytes());
+            eat(&[0]);
+            for x in &map[name].data {
+                eat(&x.to_bits().to_le_bytes());
+            }
+        }
+        let pos_json = |p: StreamPos| {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert(
+                "state".to_string(),
+                Json::Arr(p.state.iter().map(|w| Json::Str(hex_u64(*w))).collect()),
+            );
+            m.insert("has_spare".to_string(), Json::Bool(p.has_spare));
+            Json::Obj(m)
+        };
+        let (core_pos, draw_pos) = self.stream_pos();
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("steps_done".to_string(), Json::Num(self.steploop.steps_done as f64));
+        m.insert("params_fnv64".to_string(), Json::Str(hex_u64(h)));
+        m.insert(
+            "thresholds".to_string(),
+            Json::Arr(self.thresholds().iter().map(|&t| Json::Str(hex_f64(t))).collect()),
+        );
+        m.insert("rng_core".to_string(), pos_json(core_pos));
+        m.insert("rng_draw".to_string(), pos_json(draw_pos));
+        m.insert(
+            "eps_spent".to_string(),
+            match self.epsilon_spent() {
+                Some(e) => Json::Str(hex_f64(e)),
+                None => Json::Null,
+            },
+        );
+        Json::Obj(m)
+    }
+
+    /// The one-line progress label [`Session::run`] logs with.
+    fn run_label(&self) -> &'static str {
+        match &self.backend {
             Backend::Single(t) => t.opts.method.name(),
             Backend::Pipeline(e) => e.opts.mode.name(),
             Backend::Sharded(e) => match e.grouping() {
@@ -1136,7 +1239,17 @@ impl<'r> Session<'r> {
                 CohortGrouping::Flat => "federated flat",
                 CohortGrouping::PerUser => "federated per-user",
             },
-        };
+        }
+    }
+
+    /// Train for the planned number of steps; returns the event stream.
+    /// With `threads > 1` the loop runs the prefetching loader: step
+    /// `t + 1`'s draw is dealt (on the dedicated draw stream) and its
+    /// batches assembled in the background while step `t` collects —
+    /// bitwise identical to the sequential loop, which deals the same
+    /// draws in the same stream order, just later.
+    pub fn run(&mut self, data: &dyn Dataset, log_every: u64) -> Result<Vec<StepEvent>> {
+        let label = self.run_label();
         let total = self.total_steps;
         let Session { backend, steploop, .. } = self;
         match backend {
@@ -1146,6 +1259,42 @@ impl<'r> Session<'r> {
             Backend::Hybrid(e) => run_loop(steploop, e, data, total, log_every, label),
             Backend::Federated(e) => run_loop(steploop, e, data, total, log_every, label),
         }
+    }
+
+    /// Train to completion with periodic snapshots: step sequentially
+    /// from wherever `steps_done` stands (freshly built or restored via
+    /// [`snapshot::restore`]) and atomically publish a snapshot every
+    /// `snapshot_every` steps plus one at completion. Steps run through
+    /// [`Session::step`] — sequential stepping is bitwise identical to
+    /// the threaded prefetch loop, and snapshotting at a step boundary
+    /// is only sound without the prefetch lookahead (which deals draw
+    /// `t + 1` before step `t` executes, so a mid-lookahead snapshot
+    /// would double-consume the draw stream on resume).
+    pub fn run_with_snapshots(
+        &mut self,
+        data: &dyn Dataset,
+        log_every: u64,
+        snapshot_every: u64,
+        snapshot_dir: &std::path::Path,
+    ) -> Result<Vec<StepEvent>> {
+        std::fs::create_dir_all(snapshot_dir).with_context(|| {
+            format!("creating snapshot directory {}", snapshot_dir.display())
+        })?;
+        let label = self.run_label();
+        let total = self.total_steps;
+        let mut events = Vec::new();
+        while self.steploop.steps_done < total {
+            let ev = self.step(data)?;
+            if log_every > 0 && (ev.step % log_every == 0 || ev.step == total) {
+                eprintln!("{}", ev.log_line(total, label));
+            }
+            let s = ev.step;
+            events.push(ev);
+            if (snapshot_every > 0 && s % snapshot_every == 0) || s == total {
+                snapshot::write(self, &snapshot_dir.join(snapshot::file_name(s)))?;
+            }
+        }
+        Ok(events)
     }
 
     /// Post-run RNG positions `(core stream, draw stream)` — the

@@ -1,0 +1,642 @@
+//! Versioned on-disk snapshots of a running [`Session`] — the
+//! crash-safe half of `gwclip serve`.
+//!
+//! A DP guarantee is a statement about the *whole* mechanism trace, so a
+//! killed-and-resumed run must be **bitwise identical** to an
+//! uninterrupted one or the (eps, delta) accounting silently breaks: a
+//! replayed noise draw is a second release the accountant never
+//! composed, and a drifted threshold changes the sensitivity the noise
+//! was calibrated for. A snapshot therefore captures every piece of
+//! mutable DP-critical state:
+//!
+//! - **RNG stream positions** for the core stream (noise + quantile
+//!   releases) and the draw stream (Poisson/shard sampling), each as the
+//!   full 256-bit xoshiro state *plus the buffered Marsaglia spare
+//!   value* — `StreamPos` records only the spare's presence, but the
+//!   next `gauss()` returns the buffered value verbatim, so a bitwise
+//!   resume must restore it exactly.
+//! - **Adaptive quantile thresholds**, as f64 bit patterns: they set the
+//!   clipping sensitivity of every subsequent release.
+//! - **The accountant ledger** — `steps_done`, i.e. how many releases
+//!   have been composed. The plan itself is deterministically re-derived
+//!   from the spec (the calibration bisection is fixed-iteration), and
+//!   the snapshot stores its figures as a loud cross-check so a resumed
+//!   `describe()`/eps can never drift from the run that wrote them.
+//! - **Optimizer moments** (step counter + m/v buffers) and **model
+//!   parameters** as f32 bit patterns — not DP state, but required for
+//!   the resumed trajectory to be the same trajectory.
+//! - **Engine-held cursors**: the pipeline round-robin data cursor, and
+//!   the compressor's per-unit error-feedback residuals + selection
+//!   stream (unit-local mutable state on the reduction seam).
+//!
+//! Serialization uses the in-tree `util::json` (no serde). Values that
+//! don't survive a `f64` JSON number — `u64` RNG words, f32/f64 bit
+//! patterns — are hex strings. Files are written atomically
+//! ([`crate::util::fsio::write_atomic`]) and carry a `format`/`version`
+//! header that is rejected loudly on mismatch, never mis-restored.
+//!
+//! Snapshots are taken at step boundaries only. The resume entry points
+//! step the session sequentially (`Session::step`), which is bitwise
+//! identical to the threaded prefetch loop by the PR 7 parity contract —
+//! the prefetch path deals draw `t + 1` before step `t` executes, so
+//! snapshotting mid-lookahead would double-consume the draw stream.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::coordinator::noise::Rng;
+use crate::coordinator::optimizer::Optimizer;
+use crate::runtime::Tensor;
+use crate::util::fsio;
+use crate::util::json::Json;
+
+use super::{Backend, RunSpec, Session};
+
+/// Magic tag in every snapshot's `format` field.
+pub const FORMAT: &str = "gwclip-snapshot";
+/// Schema version this build writes and the only one it reads.
+pub const VERSION: u64 = 1;
+
+// ------------------------------------------------------------ hex encoding
+
+/// 16-hex-char encoding of a `u64`. JSON numbers are f64 (53-bit
+/// mantissa), so RNG state words and bit patterns go through strings.
+pub fn hex_u64(x: u64) -> String {
+    format!("{x:016x}")
+}
+
+pub fn parse_hex_u64(s: &str) -> Result<u64> {
+    ensure!(s.len() == 16, "expected 16 hex chars, got {:?}", s);
+    u64::from_str_radix(s, 16).with_context(|| format!("bad hex u64 {s:?}"))
+}
+
+/// An `f64` as its exact bit pattern — survives NaN/inf and never
+/// rounds, unlike decimal text.
+pub fn hex_f64(x: f64) -> String {
+    hex_u64(x.to_bits())
+}
+
+pub fn parse_hex_f64(s: &str) -> Result<f64> {
+    Ok(f64::from_bits(parse_hex_u64(s)?))
+}
+
+/// An f32 buffer as one little-ordered hex blob, 8 chars per element —
+/// ~2.7x denser than decimal JSON and exact by construction.
+pub fn hex_f32s(v: &[f32]) -> String {
+    let mut s = String::with_capacity(v.len() * 8);
+    for x in v {
+        s.push_str(&format!("{:08x}", x.to_bits()));
+    }
+    s
+}
+
+pub fn parse_hex_f32s(s: &str) -> Result<Vec<f32>> {
+    ensure!(s.len() % 8 == 0, "f32 hex blob length {} is not a multiple of 8", s.len());
+    ensure!(s.is_ascii(), "f32 hex blob contains non-ascii bytes");
+    s.as_bytes()
+        .chunks(8)
+        .map(|c| {
+            let chunk = std::str::from_utf8(c).expect("ascii checked above");
+            Ok(f32::from_bits(
+                u32::from_str_radix(chunk, 16).with_context(|| format!("bad hex f32 {chunk:?}"))?,
+            ))
+        })
+        .collect()
+}
+
+// --------------------------------------------------------- value encoders
+
+fn rng_to_json(r: &Rng) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "state".to_string(),
+        Json::Arr(r.state().iter().map(|w| Json::Str(hex_u64(*w))).collect()),
+    );
+    m.insert(
+        "spare".to_string(),
+        match r.spare() {
+            Some(v) => Json::Str(hex_f64(v)),
+            None => Json::Null,
+        },
+    );
+    Json::Obj(m)
+}
+
+fn rng_from_json(j: &Json) -> Result<Rng> {
+    let words = j.get("state")?.arr()?;
+    ensure!(words.len() == 4, "rng state has {} words, expected 4", words.len());
+    let mut state = [0u64; 4];
+    for (i, w) in words.iter().enumerate() {
+        state[i] = parse_hex_u64(w.str()?)?;
+    }
+    let spare = match j.opt("spare") {
+        Some(v) => Some(parse_hex_f64(v.str()?)?),
+        None => None,
+    };
+    Ok(Rng::from_parts(state, spare))
+}
+
+fn tensor_to_json(t: &Tensor) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "shape".to_string(),
+        Json::Arr(t.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+    );
+    m.insert("data".to_string(), Json::Str(hex_f32s(&t.data)));
+    Json::Obj(m)
+}
+
+fn tensor_from_json(j: &Json) -> Result<Tensor> {
+    let shape = j.get("shape")?.usizes()?;
+    let data = parse_hex_f32s(j.get("data")?.str()?)?;
+    Tensor::from_vec(&shape, data)
+}
+
+fn optimizer_to_json(o: &Optimizer) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("step".to_string(), Json::Num(o.step_count() as f64));
+    m.insert(
+        "m".to_string(),
+        Json::Arr(o.moments_m().iter().map(|b| Json::Str(hex_f32s(b))).collect()),
+    );
+    m.insert(
+        "v".to_string(),
+        Json::Arr(o.moments_v().iter().map(|b| Json::Str(hex_f32s(b))).collect()),
+    );
+    Json::Obj(m)
+}
+
+type OptState = (u64, Vec<Vec<f32>>, Vec<Vec<f32>>);
+
+fn optimizer_state_from_json(j: &Json) -> Result<OptState> {
+    let step = j.get("step")?.u64()?;
+    let decode = |key: &str| -> Result<Vec<Vec<f32>>> {
+        j.get(key)?.arr()?.iter().map(|b| parse_hex_f32s(b.str()?)).collect()
+    };
+    Ok((step, decode("m")?, decode("v")?))
+}
+
+// ----------------------------------------------------------------- capture
+
+/// Serialize the session's full mutable state as a snapshot document.
+pub fn capture(sess: &Session) -> Json {
+    let mut top = BTreeMap::new();
+    top.insert("format".to_string(), Json::Str(FORMAT.to_string()));
+    top.insert("version".to_string(), Json::Num(VERSION as f64));
+    top.insert("spec".to_string(), sess.spec.to_json());
+    top.insert("steps_done".to_string(), Json::Num(sess.steploop.steps_done as f64));
+    top.insert("total_steps".to_string(), Json::Num(sess.total_steps as f64));
+
+    let mut rng = BTreeMap::new();
+    rng.insert("core".to_string(), rng_to_json(&sess.steploop.core.rng));
+    rng.insert("draw".to_string(), rng_to_json(&sess.steploop.draw_rng));
+    top.insert("rng".to_string(), Json::Obj(rng));
+
+    top.insert(
+        "thresholds".to_string(),
+        Json::Arr(sess.thresholds().iter().map(|&t| Json::Str(hex_f64(t))).collect()),
+    );
+
+    top.insert(
+        "accountant".to_string(),
+        match sess.plan() {
+            None => Json::Null,
+            Some(p) => {
+                let mut a = BTreeMap::new();
+                a.insert("epsilon".to_string(), Json::Num(p.epsilon));
+                a.insert("delta".to_string(), Json::Num(p.delta));
+                a.insert("q".to_string(), Json::Str(hex_f64(p.q)));
+                a.insert("steps".to_string(), Json::Num(p.steps as f64));
+                a.insert("unit".to_string(), Json::Str(p.unit.token().to_string()));
+                a.insert("sigma_base".to_string(), Json::Str(hex_f64(p.sigma_base)));
+                a.insert("sigma_grad".to_string(), Json::Str(hex_f64(p.sigma_grad)));
+                a.insert("sigma_quantile".to_string(), Json::Str(hex_f64(p.sigma_quantile)));
+                a.insert(
+                    "quantile_fraction".to_string(),
+                    Json::Str(hex_f64(p.quantile_fraction)),
+                );
+                Json::Obj(a)
+            }
+        },
+    );
+
+    let mut be = BTreeMap::new();
+    be.insert("kind".to_string(), Json::Str(sess.backend.name().to_string()));
+    let mut params = BTreeMap::new();
+    for (name, t) in sess.param_map() {
+        params.insert(name, tensor_to_json(&t));
+    }
+    be.insert("params".to_string(), Json::Obj(params));
+    let optimizers: Vec<Json> = match &sess.backend {
+        Backend::Single(t) => vec![optimizer_to_json(t.optimizer())],
+        Backend::Pipeline(e) => e.stage_optimizers().into_iter().map(optimizer_to_json).collect(),
+        Backend::Sharded(e) => vec![optimizer_to_json(e.optimizer())],
+        Backend::Hybrid(e) => e.stage_optimizers().into_iter().map(optimizer_to_json).collect(),
+        Backend::Federated(e) => vec![optimizer_to_json(e.optimizer())],
+    };
+    be.insert("optimizers".to_string(), Json::Arr(optimizers));
+    if let Backend::Pipeline(e) = &sess.backend {
+        be.insert("cursor".to_string(), Json::Num(e.cursor() as f64));
+    }
+    let compressor = match &sess.backend {
+        Backend::Sharded(e) => e.compressor(),
+        Backend::Hybrid(e) => e.compressor(),
+        _ => None,
+    };
+    if let Some(c) = compressor {
+        let mut cm = BTreeMap::new();
+        cm.insert(
+            "residuals".to_string(),
+            Json::Arr(
+                c.residuals()
+                    .iter()
+                    .map(|unit| Json::Arr(unit.iter().map(tensor_to_json).collect()))
+                    .collect(),
+            ),
+        );
+        cm.insert(
+            "rng".to_string(),
+            Json::Arr(c.rng_state().iter().map(|w| Json::Str(hex_u64(*w))).collect()),
+        );
+        be.insert("compressor".to_string(), Json::Obj(cm));
+    }
+    top.insert("backend".to_string(), Json::Obj(be));
+
+    Json::Obj(top)
+}
+
+/// Capture and atomically publish a snapshot file. A crash at any point
+/// leaves either the previous file or the new one, never a prefix.
+pub fn write(sess: &Session, path: &Path) -> Result<()> {
+    fsio::write_atomic(path, capture(sess).render().as_bytes())
+        .with_context(|| format!("writing snapshot {}", path.display()))
+}
+
+// -------------------------------------------------------------------- read
+
+fn validate_header(j: &Json) -> Result<()> {
+    let fmt = j
+        .get("format")
+        .and_then(|v| v.str())
+        .map_err(|_| anyhow!("not a gwclip snapshot (no `format` field)"))?;
+    ensure!(fmt == FORMAT, "not a gwclip snapshot (format {fmt:?}, expected {FORMAT:?})");
+    let version = j.get("version")?.u64()?;
+    ensure!(
+        version == VERSION,
+        "snapshot schema version {version} is not supported by this build (reads version \
+         {VERSION} only); refusing to restore rather than risk a mis-restored DP state"
+    );
+    Ok(())
+}
+
+/// Parse and header-validate a snapshot document from text. Truncated
+/// or corrupt files fail the JSON parse; wrong formats and schema
+/// versions are rejected loudly — never best-effort restored.
+pub fn parse(text: &str) -> Result<Json> {
+    let j = Json::parse(text).context("snapshot is corrupt or truncated (JSON parse failed)")?;
+    validate_header(&j)?;
+    Ok(j)
+}
+
+/// Read, parse and header-validate a snapshot file.
+pub fn read_file(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading snapshot {}", path.display()))?;
+    parse(&text).with_context(|| format!("in snapshot {}", path.display()))
+}
+
+/// The run spec embedded in a snapshot — resume rebuilds the session
+/// from this, so the snapshot file alone identifies the run.
+pub fn spec_of(snap: &Json) -> Result<RunSpec> {
+    RunSpec::from_json(snap.get("spec")?).context("snapshot spec")
+}
+
+/// How many steps the snapshotted session had completed.
+pub fn steps_done_of(snap: &Json) -> Result<u64> {
+    snap.get("steps_done")?.u64()
+}
+
+/// The newest `step-*.json` snapshot in a directory (by step number —
+/// the zero-padded name makes lexicographic and numeric order agree).
+pub fn latest_in_dir(dir: &Path) -> Result<Option<PathBuf>> {
+    let mut best: Option<PathBuf> = None;
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(None),
+    };
+    for entry in entries {
+        let path = entry?.path();
+        let name = match path.file_name().and_then(|n| n.to_str()) {
+            Some(n) => n,
+            None => continue,
+        };
+        if name.starts_with("step-")
+            && name.ends_with(".json")
+            && best.as_ref().and_then(|b| b.file_name()).and_then(|n| n.to_str()) < Some(name)
+        {
+            best = Some(path.clone());
+        }
+    }
+    Ok(best)
+}
+
+/// Standard snapshot file name for a step count.
+pub fn file_name(step: u64) -> String {
+    format!("step-{step:010}.json")
+}
+
+// ----------------------------------------------------------------- restore
+
+/// Restore a snapshot into a freshly built session. The session must
+/// have been built from the same spec (resume rebuilds from
+/// [`spec_of`]); every structural mismatch — spec drift, backend kind,
+/// tensor shapes, optimizer layout, accountant figures — is rejected
+/// loudly before any state is overwritten that could leave the session
+/// half-restored: all decoding happens up front, mutation last.
+pub fn restore(sess: &mut Session, snap: &Json) -> Result<()> {
+    validate_header(snap)?;
+
+    // spec must match (thread count aside: it has no bitwise effect by
+    // the PR 7 parity contract, so resuming under a different thread
+    // count is allowed and documented)
+    let snap_spec = spec_of(snap)?;
+    let mut a = snap_spec.clone();
+    let mut b = sess.spec.clone();
+    a.threads = 0;
+    b.threads = 0;
+    ensure!(
+        a == b,
+        "snapshot was taken under a different spec; rebuild the session from the snapshot's \
+         embedded spec (gwclip resume) instead of restoring across specs"
+    );
+
+    let kind = snap.get("backend")?.get("kind")?.str()?;
+    ensure!(
+        kind == sess.backend.name(),
+        "snapshot backend {kind:?} does not match session backend {:?}",
+        sess.backend.name()
+    );
+
+    let total = snap.get("total_steps")?.u64()?;
+    ensure!(
+        total == sess.total_steps,
+        "snapshot plans {total} total steps, session plans {}",
+        sess.total_steps
+    );
+    let steps_done = steps_done_of(snap)?;
+    ensure!(steps_done <= total, "snapshot claims {steps_done} steps done of {total} total");
+
+    // accountant cross-check: the plan is re-derived deterministically
+    // from the spec, so these can only disagree if the calibration code
+    // changed between write and read — which silently changes (eps,
+    // delta) and must fail loudly
+    match (snap.opt("accountant"), sess.plan()) {
+        (None, None) => {}
+        (Some(a), Some(p)) => {
+            let figs = [
+                ("q", hex_f64(p.q)),
+                ("sigma_base", hex_f64(p.sigma_base)),
+                ("sigma_grad", hex_f64(p.sigma_grad)),
+                ("sigma_quantile", hex_f64(p.sigma_quantile)),
+                ("quantile_fraction", hex_f64(p.quantile_fraction)),
+            ];
+            for (key, want) in figs {
+                let got = a.get(key)?.str()?;
+                ensure!(
+                    got == want,
+                    "accountant drift on {key}: snapshot has {got}, this build derives {want} — \
+                     the (eps, delta) calibration changed; refusing to resume"
+                );
+            }
+            ensure!(a.get("epsilon")?.f64()? == p.epsilon, "accountant drift on epsilon");
+            ensure!(a.get("delta")?.f64()? == p.delta, "accountant drift on delta");
+            ensure!(a.get("steps")?.u64()? == p.steps, "accountant drift on release count");
+            ensure!(a.get("unit")?.str()? == p.unit.token(), "accountant drift on privacy unit");
+        }
+        (snap_has, _) => bail!(
+            "snapshot {} an accountant plan but the session {} one",
+            if snap_has.is_some() { "has" } else { "lacks" },
+            if sess.plan().is_some() { "has" } else { "lacks" },
+        ),
+    }
+
+    // decode everything before mutating anything
+    let thr: Vec<f64> = snap
+        .get("thresholds")?
+        .arr()?
+        .iter()
+        .map(|t| parse_hex_f64(t.str()?))
+        .collect::<Result<_>>()?;
+    ensure!(
+        thr.len() == sess.thresholds().len(),
+        "snapshot has {} thresholds, session has {} groups",
+        thr.len(),
+        sess.thresholds().len()
+    );
+
+    let be = snap.get("backend")?;
+    let mut params = std::collections::HashMap::new();
+    for (name, t) in be.get("params")?.obj()? {
+        params.insert(name.clone(), tensor_from_json(t)?);
+    }
+    let current = sess.param_map();
+    ensure!(
+        params.len() == current.len(),
+        "snapshot has {} parameter tensors, session has {}",
+        params.len(),
+        current.len()
+    );
+    for name in current.keys() {
+        ensure!(params.contains_key(name), "snapshot is missing parameter {name:?}");
+    }
+
+    let opt_states: Vec<OptState> = be
+        .get("optimizers")?
+        .arr()?
+        .iter()
+        .map(optimizer_state_from_json)
+        .collect::<Result<_>>()?;
+
+    let core_rng = rng_from_json(snap.get("rng")?.get("core")?)?;
+    let draw_rng = rng_from_json(snap.get("rng")?.get("draw")?)?;
+
+    // ---- mutate ----
+    sess.load_param_map(&params)?;
+    match &mut sess.backend {
+        Backend::Single(t) => {
+            ensure!(opt_states.len() == 1, "single-device snapshot needs 1 optimizer state");
+            let (step, m, v) = opt_states.into_iter().next().unwrap();
+            t.optimizer_mut().restore_state(step, m, v)?;
+        }
+        Backend::Pipeline(e) => {
+            let opts = e.stage_optimizers_mut();
+            ensure!(
+                opt_states.len() == opts.len(),
+                "pipeline snapshot has {} stage optimizers, engine has {}",
+                opt_states.len(),
+                opts.len()
+            );
+            for (opt, (step, m, v)) in opts.into_iter().zip(opt_states) {
+                opt.restore_state(step, m, v)?;
+            }
+            e.set_cursor(be.get("cursor")?.usize()?);
+        }
+        Backend::Sharded(e) => {
+            ensure!(opt_states.len() == 1, "sharded snapshot needs 1 optimizer state");
+            let (step, m, v) = opt_states.into_iter().next().unwrap();
+            e.restore_optimizers(step, m, v)?;
+        }
+        Backend::Hybrid(e) => {
+            e.restore_stage_optimizers(&opt_states)?;
+        }
+        Backend::Federated(e) => {
+            ensure!(opt_states.len() == 1, "federated snapshot needs 1 optimizer state");
+            let (step, m, v) = opt_states.into_iter().next().unwrap();
+            e.restore_optimizers(step, m, v)?;
+        }
+    }
+
+    // compressor residuals (unit-local error-feedback state)
+    let comp_snap = be.opt("compressor");
+    let live_has = match &sess.backend {
+        Backend::Sharded(e) => e.compressor().is_some(),
+        Backend::Hybrid(e) => e.compressor().is_some(),
+        _ => false,
+    };
+    if comp_snap.is_some() != live_has {
+        bail!(
+            "snapshot {} compressor state but the session {} a compressor",
+            if comp_snap.is_some() { "has" } else { "lacks" },
+            if live_has { "has" } else { "lacks" },
+        );
+    }
+    if let Some(cj) = comp_snap {
+        let residuals: Vec<Vec<Tensor>> = cj
+            .get("residuals")?
+            .arr()?
+            .iter()
+            .map(|unit| -> Result<Vec<Tensor>> {
+                unit.arr()?.iter().map(tensor_from_json).collect()
+            })
+            .collect::<Result<_>>()?;
+        let words = cj.get("rng")?.arr()?;
+        ensure!(words.len() == 4, "compressor rng state needs 4 words");
+        let mut state = [0u64; 4];
+        for (i, w) in words.iter().enumerate() {
+            state[i] = parse_hex_u64(w.str()?)?;
+        }
+        let c = match &mut sess.backend {
+            Backend::Sharded(e) => e.compressor_mut(),
+            Backend::Hybrid(e) => e.compressor_mut(),
+            _ => None,
+        }
+        .expect("presence checked above");
+        c.restore_residuals(residuals)?;
+        c.restore_rng(state);
+    }
+
+    sess.core_mut().quantiles.thresholds = thr;
+    sess.steploop.core.rng = core_rng;
+    sess.steploop.draw_rng = draw_rng;
+    sess.steploop.steps_done = steps_done;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex_round_trips() {
+        for x in [0u64, 1, u64::MAX, 0x9E3779B97F4A7C15, 1u64 << 63] {
+            assert_eq!(parse_hex_u64(&hex_u64(x)).unwrap(), x);
+        }
+        for x in [0.0f64, -0.0, 1.5, f64::MIN_POSITIVE, f64::MAX, f64::NEG_INFINITY] {
+            assert_eq!(parse_hex_f64(&hex_f64(x)).unwrap().to_bits(), x.to_bits());
+        }
+        let nan = parse_hex_f64(&hex_f64(f64::NAN)).unwrap();
+        assert!(nan.is_nan());
+        let v: Vec<f32> = vec![0.0, -1.25, 3.4e38, f32::MIN_POSITIVE, -0.0];
+        let back = parse_hex_f32s(&hex_f32s(&v)).unwrap();
+        assert_eq!(v.len(), back.len());
+        for (a, b) in v.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(parse_hex_f32s("12345").is_err(), "odd-length blob rejected");
+        assert!(parse_hex_u64("xyz").is_err());
+    }
+
+    #[test]
+    fn header_rejects_wrong_version_and_format() {
+        let doc = format!("{{\"format\":\"{FORMAT}\",\"version\":999}}");
+        let err = parse(&doc).unwrap_err();
+        assert!(err.to_string().contains("version 999"), "{err:#}");
+        let err = parse("{\"format\":\"something-else\",\"version\":1}").unwrap_err();
+        assert!(err.to_string().contains("not a gwclip snapshot"), "{err:#}");
+        let err = parse("{\"version\":1}").unwrap_err();
+        assert!(err.to_string().contains("format"), "{err:#}");
+    }
+
+    #[test]
+    fn truncated_file_is_rejected_not_restored() {
+        let doc = format!("{{\"format\":\"{FORMAT}\",\"version\":1,\"steps_done\":7}}");
+        for cut in [1, doc.len() / 2, doc.len() - 1] {
+            let err = parse(&doc[..cut]).unwrap_err();
+            assert!(err.to_string().contains("corrupt or truncated"), "cut={cut}: {err:#}");
+        }
+        assert!(parse(&doc).is_ok());
+    }
+
+    #[test]
+    fn latest_in_dir_picks_highest_step() {
+        let d = std::env::temp_dir()
+            .join(format!("gwclip_snap_latest_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        assert!(latest_in_dir(&d).unwrap().is_none());
+        for step in [2u64, 10, 9] {
+            std::fs::write(d.join(file_name(step)), b"{}").unwrap();
+        }
+        std::fs::write(d.join("unrelated.txt"), b"x").unwrap();
+        let best = latest_in_dir(&d).unwrap().unwrap();
+        assert_eq!(best.file_name().unwrap().to_str().unwrap(), file_name(10));
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn rng_json_round_trips_spare_value() {
+        let mut r = Rng::seeded(42);
+        // drive to a position with a buffered spare
+        while r.spare().is_none() {
+            r.gauss();
+        }
+        let j = rng_to_json(&r);
+        let mut back = rng_from_json(&j).unwrap();
+        assert_eq!(back.stream_pos(), r.stream_pos());
+        for _ in 0..64 {
+            assert_eq!(back.gauss().to_bits(), r.gauss().to_bits());
+            assert_eq!(back.uniform().to_bits(), r.uniform().to_bits());
+        }
+    }
+
+    #[test]
+    fn optimizer_json_round_trips() {
+        use crate::coordinator::optimizer::{OptimizerKind, Schedule};
+        let t = Tensor::from_vec(&[3], vec![0.1, 0.2, 0.3]).unwrap();
+        let mut o = Optimizer::new(
+            OptimizerKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+            Schedule::constant(0.01),
+            0.0,
+            std::slice::from_ref(&t),
+        );
+        let mut p = t.clone();
+        for _ in 0..5 {
+            o.apply(&mut [&mut p], &[t.clone()]);
+        }
+        let (step, m, v) = optimizer_state_from_json(&optimizer_to_json(&o)).unwrap();
+        assert_eq!(step, 5);
+        assert_eq!(m, o.moments_m());
+        assert_eq!(v, o.moments_v());
+    }
+}

@@ -1199,6 +1199,22 @@ impl Default for RunSpec {
     }
 }
 
+/// The one thread-count precedence rule, shared by the CLI, the session
+/// builder and the serve daemon: spec < per-invocation override (a
+/// `--threads` flag or a daemon submit's `threads` field) < the
+/// `GWCLIP_THREADS` environment of the process that *runs* the steps,
+/// floored at 1. Pure so the precedence is testable without touching
+/// the process environment; callers pass `std::env::var("GWCLIP_THREADS")`
+/// (the daemon evaluates it at submit time, not build time, so a
+/// long-lived daemon sees the environment it was launched with per
+/// session, not a stale build-time constant).
+pub fn resolve_threads(spec: usize, flag: Option<usize>, env: Option<&str>) -> usize {
+    env.and_then(|v| v.trim().parse::<usize>().ok())
+        .or(flag)
+        .unwrap_or(spec)
+        .max(1)
+}
+
 impl RunSpec {
     pub fn for_config(config: &str) -> Self {
         RunSpec { config: config.to_string(), ..Default::default() }
@@ -1211,11 +1227,7 @@ impl RunSpec {
     /// unaffected), mirroring how `GWCLIP_ARTIFACTS` selects artifacts
     /// without entering the manifest.
     pub fn resolved_threads(&self) -> usize {
-        std::env::var("GWCLIP_THREADS")
-            .ok()
-            .and_then(|v| v.trim().parse::<usize>().ok())
-            .unwrap_or(self.threads)
-            .max(1)
+        resolve_threads(self.threads, None, std::env::var("GWCLIP_THREADS").ok().as_deref())
     }
 
     /// Builder-time validation of every nonsensical-spec class (satellite

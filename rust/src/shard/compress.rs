@@ -172,6 +172,39 @@ impl Compressor {
     pub fn residual(&self, unit: usize) -> &[Tensor] {
         &self.residuals[unit]
     }
+
+    /// All per-unit residuals, unit order (snapshot capture). Residuals
+    /// DIFFER across units — error feedback is unit-local — so every
+    /// unit's state must be persisted, not one fanned out.
+    pub fn residuals(&self) -> &[Vec<Tensor>] {
+        &self.residuals
+    }
+
+    /// Restore per-unit residuals captured via [`Compressor::residuals`].
+    /// The unit count must match the configured participant count; a
+    /// snapshot from a different topology is rejected, never silently
+    /// mis-restored. (The selection RNG is reseeded from the spec on
+    /// rebuild for rand-k; top-k is selection-stateless.)
+    pub fn restore_residuals(&mut self, residuals: Vec<Vec<Tensor>>) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            residuals.len() == self.residuals.len(),
+            "compressor restore: {} residual units, expected {}",
+            residuals.len(),
+            self.residuals.len()
+        );
+        self.residuals = residuals;
+        Ok(())
+    }
+
+    /// Selection-stream position (rand-k consumes it; top-k never does).
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Restore the selection stream (see [`Compressor::rng_state`]).
+    pub fn restore_rng(&mut self, state: [u64; 4]) {
+        self.rng = Xoshiro::from_state(state);
+    }
 }
 
 /// Indices of the `k` largest-|v| entries, ties broken by lower index —

@@ -247,6 +247,37 @@ impl<'r> ShardEngine<'r> {
         &self.replicas[0].params
     }
 
+    /// Worker-0's optimizer state (all replicas stay bit-identical, so
+    /// snapshots persist one and fan it back out on restore).
+    pub fn optimizer(&self) -> &Optimizer {
+        &self.replicas[0].optimizer
+    }
+
+    /// Restore one optimizer state into every replica (snapshot fan-out,
+    /// mirroring `set_params_all`).
+    pub fn restore_optimizers(
+        &mut self,
+        step: u64,
+        m: Vec<Vec<f32>>,
+        v: Vec<Vec<f32>>,
+    ) -> Result<()> {
+        for r in self.replicas.iter_mut() {
+            r.optimizer.restore_state(step, m.clone(), v.clone())?;
+        }
+        Ok(())
+    }
+
+    /// The error-feedback compressor, if `[compress]` is configured.
+    /// Its per-unit residuals are mutable cross-step state and must be
+    /// snapshotted (they differ per unit — error feedback is unit-local).
+    pub fn compressor(&self) -> Option<&Compressor> {
+        self.compressor.as_ref()
+    }
+
+    pub fn compressor_mut(&mut self) -> Option<&mut Compressor> {
+        self.compressor.as_mut()
+    }
+
     /// Broadcast a full parameter set to every replica (checkpoint
     /// fan-out).
     pub fn set_params_all(&mut self, params: Vec<Tensor>) -> Result<()> {

@@ -89,7 +89,10 @@ pub fn write_json_to(
         "results".to_string(),
         Json::Arr(results.iter().map(|r| r.to_json()).collect()),
     );
-    std::fs::write(&path, Json::Obj(top).render())?;
+    // atomic publish: a crash mid-write must not leave a truncated
+    // trajectory that poisons the next `gwclip bench-diff`
+    crate::util::fsio::write_atomic(path.as_ref(), Json::Obj(top).render().as_bytes())
+        .map_err(std::io::Error::other)?;
     Ok(path.as_ref().to_path_buf())
 }
 

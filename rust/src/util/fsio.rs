@@ -1,0 +1,79 @@
+//! Crash-safe filesystem writes.
+//!
+//! Every on-disk artifact that a later run consumes (bench
+//! trajectories, `gwclip exp` tables, session snapshots) goes through
+//! [`write_atomic`]: the bytes land in a temp file in the *same
+//! directory* as the destination and are published with a single
+//! `rename`, so a reader can never observe a truncated file — it sees
+//! either the old content or the new content, never a prefix.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Write `contents` to `path` atomically (temp file + rename).
+///
+/// The temp file lives next to the destination so the rename stays on
+/// one filesystem (cross-device renames are not atomic and fail on
+/// most platforms). The temp name is keyed by pid so two concurrent
+/// writers of *different* destinations in one directory cannot
+/// collide; concurrent writers of the *same* destination last-write
+/// wins, which is the same contract as `std::fs::write`.
+pub fn write_atomic(path: &Path, contents: &[u8]) -> Result<()> {
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
+    let file_name = path
+        .file_name()
+        .with_context(|| format!("write_atomic: no file name in {}", path.display()))?;
+    let mut tmp_name = std::ffi::OsString::from(format!(".{}.tmp-", std::process::id()));
+    tmp_name.push(file_name);
+    let tmp = match dir {
+        Some(d) => d.join(&tmp_name),
+        None => std::path::PathBuf::from(&tmp_name),
+    };
+    std::fs::write(&tmp, contents)
+        .with_context(|| format!("write_atomic: writing temp file {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| {
+        // best-effort cleanup so a failed publish doesn't litter
+        let _ = std::fs::remove_file(&tmp);
+        format!("write_atomic: renaming {} -> {}", tmp.display(), path.display())
+    })?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("gwclip_fsio_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn writes_and_replaces() {
+        let d = tmpdir("basic");
+        let p = d.join("out.json");
+        write_atomic(&p, b"first").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"first");
+        write_atomic(&p, b"second, longer than before").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"second, longer than before");
+        // no temp litter left behind
+        let leftovers: Vec<_> = std::fs::read_dir(&d)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains("tmp-"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left: {leftovers:?}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn missing_parent_fails_loudly() {
+        let d = tmpdir("noparent");
+        let p = d.join("nope").join("out.json");
+        let err = write_atomic(&p, b"x").unwrap_err();
+        assert!(err.to_string().contains("write_atomic"), "{err:#}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

@@ -29,6 +29,15 @@ impl Xoshiro {
         self.s
     }
 
+    /// Rebuild a generator at an exact stream position captured via
+    /// [`Xoshiro::state`]. The restored generator continues the stream
+    /// bitwise — this is the restore half of the snapshot/resume
+    /// contract (`session::snapshot`).
+    #[inline]
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Xoshiro { s }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[0]
@@ -70,6 +79,18 @@ mod tests {
     fn deterministic() {
         let mut a = Xoshiro::seeded(7);
         let mut b = Xoshiro::seeded(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn from_state_continues_stream() {
+        let mut a = Xoshiro::seeded(11);
+        for _ in 0..37 {
+            a.next_u64();
+        }
+        let mut b = Xoshiro::from_state(a.state());
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
         }

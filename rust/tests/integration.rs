@@ -1502,3 +1502,317 @@ fn threads_knob_round_trips_and_builds() {
     let sess = SessionBuilder::from_spec(rt(), spec).build(64).unwrap();
     assert_eq!(sess.steploop.threads, want, "builder must resolve the threads knob");
 }
+
+// ------------------------------------------------ kill-and-resume parity
+
+use gwclip::session::snapshot;
+
+/// The serve tentpole's core contract: run K steps, snapshot, DROP the
+/// session entirely (simulated crash), rebuild from the spec, restore
+/// from the snapshot, run the remaining steps — and land bitwise on the
+/// uninterrupted run: same per-step events, same adaptive threshold
+/// trajectory, same parameters, same accountant epsilon, same RNG stream
+/// positions (including the Marsaglia spare), same digest.
+fn assert_resume_parity(mk: &dyn Fn() -> Session<'static>, data: &dyn Dataset, label: &str) {
+    let mut full = mk();
+    let total = full.total_steps;
+    assert!(total >= 2, "{label}: the parity split needs >= 2 steps, got {total}");
+    let k = total / 2;
+    let full_events = full.run(data, 0).unwrap();
+
+    let dir = std::env::temp_dir().join(format!(
+        "gwclip_resume_{}_{}",
+        label.replace(' ', "_"),
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut events = Vec::new();
+    let path = dir.join(snapshot::file_name(k));
+    {
+        let mut first = mk();
+        for _ in 0..k {
+            events.push(first.step(data).unwrap());
+        }
+        snapshot::write(&first, &path).unwrap();
+        // `first` is dropped here — the kill. Only the snapshot survives.
+    }
+
+    let snap = snapshot::read_file(&path).unwrap();
+    assert_eq!(snapshot::steps_done_of(&snap).unwrap(), k, "{label}");
+    assert_eq!(
+        snapshot::latest_in_dir(&dir).unwrap().as_deref(),
+        Some(path.as_path()),
+        "{label}: latest_in_dir"
+    );
+    let mut resumed = mk();
+    snapshot::restore(&mut resumed, &snap).unwrap();
+    assert_eq!(resumed.steploop.steps_done, k, "{label}: restored step counter");
+    for _ in k..total {
+        events.push(resumed.step(data).unwrap());
+    }
+
+    assert_eq!(events.len(), full_events.len(), "{label}: step counts");
+    for (a, b) in full_events.iter().zip(&events) {
+        assert_eq!(a.step, b.step, "{label}");
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{label} step {}: loss", a.step);
+        assert_eq!(a.batch_size, b.batch_size, "{label} step {}: draw", a.step);
+        assert_eq!(a.truncated, b.truncated, "{label} step {}", a.step);
+        assert_eq!(a.clip_frac.len(), b.clip_frac.len(), "{label} step {}", a.step);
+        for (x, y) in a.clip_frac.iter().zip(&b.clip_frac) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label} step {}: clip_frac", a.step);
+        }
+        for (x, y) in a.mean_norms.iter().zip(&b.mean_norms) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label} step {}: mean_norms", a.step);
+        }
+    }
+    assert_eq!(full.thresholds(), resumed.thresholds(), "{label}: threshold trajectories");
+    let pa = full.param_map();
+    let pb = resumed.param_map();
+    assert_eq!(pa.len(), pb.len(), "{label}");
+    for (name, ta) in &pa {
+        assert_eq!(ta.data, pb[name].data, "{label}: parameter {name} diverged");
+    }
+    assert_eq!(full.stream_pos(), resumed.stream_pos(), "{label}: RNG stream positions");
+    assert_eq!(
+        full.epsilon_spent().map(f64::to_bits),
+        resumed.epsilon_spent().map(f64::to_bits),
+        "{label}: accountant epsilon"
+    );
+    assert_eq!(full.digest(), resumed.digest(), "{label}: digest");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn kill_and_resume_is_bitwise_identical_on_every_backend() {
+    let mixture = tiny_mixture(256, 31);
+    let corpus = {
+        let cfg = rt().manifest.config("lm_tiny_pipe").unwrap().clone();
+        MarkovCorpus::new(64, cfg.hyper.seq, cfg.hyper.vocab, 4, 7)
+    };
+
+    // single-device, adaptive per-layer (thresholds + optimizer moments +
+    // both RNG streams all in play)
+    assert_resume_parity(
+        &|| {
+            Session::builder(rt(), "resmlp_tiny")
+                .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+                .clip(ClipPolicy {
+                    clip_init: 0.5,
+                    ..ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive)
+                })
+                .optim(OptimSpec::adam(0.01))
+                .epochs(0.25)
+                .seed(61)
+                .build(256)
+                .unwrap()
+        },
+        &mixture,
+        "single",
+    );
+
+    // sharded with error-feedback compression: the compressor's residuals
+    // and private selection RNG must survive the crash too
+    assert_resume_parity(
+        &|| {
+            Session::builder(rt(), "resmlp_tiny")
+                .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+                .clip(ClipPolicy {
+                    clip_init: 0.5,
+                    target_q: 0.6,
+                    ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive)
+                })
+                .optim(OptimSpec::sgd(0.1))
+                .epochs(0.25)
+                .seed(62)
+                .shard(ShardSpec { workers: 3, fanout: 2, ..Default::default() })
+                .compress(CompressSpec {
+                    kind: CompressKind::RandK,
+                    ratio: 0.5,
+                    error_feedback: true,
+                })
+                .build(256)
+                .unwrap()
+        },
+        &mixture,
+        "sharded",
+    );
+
+    // pipeline with round-robin sampling: the engine-held data cursor is
+    // the state under test (Poisson runs hold no cursor at all)
+    assert_resume_parity(
+        &|| {
+            Session::builder(rt(), "lm_tiny_pipe")
+                .privacy(PrivacySpec { epsilon: 4.0, delta: 1e-5, quantile_r: 0.01 })
+                .clip(ClipPolicy {
+                    clip_init: 0.5,
+                    ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive)
+                })
+                .optim(OptimSpec::sgd(0.05))
+                .epochs(0.25)
+                .n_micro(2)
+                .sampling(Sampling::RoundRobin)
+                .seed(63)
+                .build(64)
+                .unwrap()
+        },
+        &corpus,
+        "pipeline roundrobin",
+    );
+
+    // pipeline, Poisson draws (the amplified-accountant default)
+    assert_resume_parity(
+        &|| {
+            Session::builder(rt(), "lm_tiny_pipe")
+                .privacy(PrivacySpec { epsilon: 4.0, delta: 1e-5, quantile_r: 0.01 })
+                .clip(ClipPolicy {
+                    clip_init: 0.5,
+                    ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive)
+                })
+                .optim(OptimSpec::sgd(0.05))
+                .epochs(0.25)
+                .n_micro(2)
+                .seed(64)
+                .build(64)
+                .unwrap()
+        },
+        &corpus,
+        "pipeline poisson",
+    );
+
+    // hybrid: per-stage optimizer moments across 2 replicas
+    assert_resume_parity(
+        &|| {
+            Session::builder(rt(), "lm_tiny_pipe")
+                .privacy(PrivacySpec { epsilon: 4.0, delta: 1e-5, quantile_r: 0.01 })
+                .clip(ClipPolicy {
+                    clip_init: 0.5,
+                    ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive)
+                })
+                .optim(OptimSpec::sgd(0.05))
+                .epochs(0.25)
+                .n_micro(2)
+                .seed(65)
+                .hybrid(HybridSpec { replicas: 2, fanout: 2, ..Default::default() })
+                .build(64)
+                .unwrap()
+        },
+        &corpus,
+        "hybrid",
+    );
+
+    // federated user-level DP: the accountant cross-check runs at user level
+    assert_resume_parity(
+        &|| {
+            Session::builder(rt(), "resmlp_tiny")
+                .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+                .clip(ClipPolicy {
+                    clip_init: 0.5,
+                    target_q: 0.6,
+                    ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive)
+                })
+                .optim(OptimSpec::sgd(0.1))
+                .epochs(0.25)
+                .seed(66)
+                .federated(FederatedSpec {
+                    population: 256,
+                    user_rate: 12.0 / 256.0,
+                    ..Default::default()
+                })
+                .build(256)
+                .unwrap()
+        },
+        &mixture,
+        "federated",
+    );
+}
+
+/// Round-trip identity at arbitrary step indices (not just the midpoint):
+/// capture -> restore into a fresh session at step k must reproduce the
+/// digest exactly, for every k — including 0 (before any step) and the
+/// final step.
+#[test]
+fn snapshot_round_trip_is_identity_at_any_step_index() {
+    let data = tiny_mixture(128, 41);
+    let mk = || {
+        Session::builder(rt(), "resmlp_tiny")
+            .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+            .clip(ClipPolicy {
+                clip_init: 0.5,
+                ..ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive)
+            })
+            .optim(OptimSpec::adam(0.05))
+            .epochs(0.25)
+            .seed(71)
+            .build(128)
+            .unwrap()
+    };
+    let mut live = mk();
+    let total = live.total_steps;
+    for k in 0..=total {
+        let snap = snapshot::parse(&snapshot::capture(&live).render()).unwrap();
+        let mut clone = mk();
+        snapshot::restore(&mut clone, &snap).unwrap();
+        assert_eq!(clone.digest(), live.digest(), "round trip at step {k}");
+        if k < total {
+            let a = live.step(&data).unwrap();
+            let b = clone.step(&data).unwrap();
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "post-restore step {}", a.step);
+        }
+    }
+}
+
+/// Wrong-backend and drifted-spec snapshots must be rejected loudly, not
+/// mis-restored into a live session.
+#[test]
+fn snapshot_restore_rejects_mismatched_sessions() {
+    let mk_single = || {
+        Session::builder(rt(), "resmlp_tiny")
+            .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+            .clip(ClipPolicy {
+                clip_init: 0.5,
+                ..ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive)
+            })
+            .optim(OptimSpec::sgd(0.1))
+            .epochs(0.25)
+            .seed(81)
+            .build(256)
+            .unwrap()
+    };
+    let single = mk_single();
+    let snap = snapshot::capture(&single);
+
+    // different spec (seed) -> rejected
+    let mut other_seed = Session::builder(rt(), "resmlp_tiny")
+        .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+        .clip(ClipPolicy { clip_init: 0.5, ..ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive) })
+        .optim(OptimSpec::sgd(0.1))
+        .epochs(0.25)
+        .seed(82)
+        .build(256)
+        .unwrap();
+    let err = snapshot::restore(&mut other_seed, &snap).unwrap_err();
+    assert!(format!("{err:#}").contains("spec"), "{err:#}");
+
+    // different backend -> rejected
+    let mut sharded = Session::builder(rt(), "resmlp_tiny")
+        .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+        .clip(ClipPolicy {
+            clip_init: 0.5,
+            ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive)
+        })
+        .optim(OptimSpec::sgd(0.1))
+        .epochs(0.25)
+        .seed(81)
+        .shard(ShardSpec { workers: 2, fanout: 2, ..Default::default() })
+        .build(256)
+        .unwrap();
+    let err = snapshot::restore(&mut sharded, &snap).unwrap_err();
+    assert!(!format!("{err:#}").is_empty());
+
+    // a DIFFERENT thread count is NOT a mismatch (bitwise-neutral knob):
+    // restoring a threads=1 snapshot into a threads=4 session succeeds
+    let mut threaded = mk_single();
+    threaded.set_threads(4);
+    snapshot::restore(&mut threaded, &snap).unwrap();
+    assert_eq!(threaded.digest(), single.digest());
+}

@@ -952,3 +952,112 @@ fn prop_federated_user_level_q_monotone_in_user_rate() {
     let q = fed.expected_users() as f64 / 250_000.0;
     assert_eq!((q * 250_000.0).round() as usize, fed.expected_users());
 }
+
+// --------------------------------------------- threads-knob precedence
+
+/// Satellite contract for the serve daemon: the thread count is resolved
+/// per session at SUBMIT time from three layers — spec < submit flag <
+/// `GWCLIP_THREADS` env — never frozen at daemon (or build) start. The
+/// pure resolver encodes that precedence; CI runs this suite both with
+/// the env unset and with `GWCLIP_THREADS=4`, so both branches of the
+/// env layer are exercised for real.
+#[test]
+fn prop_thread_resolution_precedence_spec_flag_env() {
+    use gwclip::session::spec::resolve_threads;
+    // spec alone
+    assert_eq!(resolve_threads(3, None, None), 3);
+    // flag beats spec
+    assert_eq!(resolve_threads(3, Some(7), None), 7);
+    // env beats both
+    assert_eq!(resolve_threads(3, Some(7), Some("2")), 2);
+    assert_eq!(resolve_threads(3, None, Some("2")), 2);
+    // whitespace tolerated, garbage falls through to the next layer
+    assert_eq!(resolve_threads(3, Some(7), Some(" 5 ")), 5);
+    assert_eq!(resolve_threads(3, Some(7), Some("not-a-number")), 7);
+    assert_eq!(resolve_threads(3, None, Some("")), 3);
+    // floored at 1 on every layer
+    assert_eq!(resolve_threads(0, None, None), 1);
+    assert_eq!(resolve_threads(3, Some(0), None), 1);
+    assert_eq!(resolve_threads(3, None, Some("0")), 1);
+    // exhaustive over small grids: the winner is always the highest-
+    // precedence PARSEABLE layer, floored at 1
+    for spec in 0..4usize {
+        for flag in [None, Some(0), Some(1), Some(6)] {
+            for env in [None, Some("0"), Some("2"), Some("x")] {
+                let got = resolve_threads(spec, flag, env);
+                let want = env
+                    .and_then(|v| v.parse::<usize>().ok())
+                    .or(flag)
+                    .unwrap_or(spec)
+                    .max(1);
+                assert_eq!(got, want, "spec={spec} flag={flag:?} env={env:?}");
+            }
+        }
+    }
+    // and the spec's own resolver agrees with the ambient environment
+    // (compute the expectation from the env rather than mutating it —
+    // tests run in parallel threads)
+    let spec = gwclip::session::RunSpec::for_config("resmlp_tiny");
+    let want = resolve_threads(
+        spec.threads,
+        None,
+        std::env::var("GWCLIP_THREADS").ok().as_deref(),
+    );
+    assert_eq!(spec.resolved_threads(), want);
+}
+
+// --------------------------------------------------- snapshot encoding
+
+/// Snapshot hex encodings are exact over random bit patterns: every u64
+/// (RNG state word), f64 (threshold / spare / epsilon) and f32 buffer
+/// (params, optimizer moments, residuals) round-trips bitwise — including
+/// NaN payloads and signed zeros, which `Json::Num`'s f64 path would
+/// destroy.
+#[test]
+fn prop_snapshot_hex_round_trips_random_bit_patterns() {
+    use gwclip::session::snapshot::{
+        hex_f32s, hex_f64, hex_u64, parse_hex_f32s, parse_hex_f64, parse_hex_u64,
+    };
+    let mut r = Xoshiro::seeded(99);
+    for _ in 0..200 {
+        let w = r.next_u64();
+        assert_eq!(parse_hex_u64(&hex_u64(w)).unwrap(), w);
+        let f = f64::from_bits(w);
+        assert_eq!(parse_hex_f64(&hex_f64(f)).unwrap().to_bits(), w);
+    }
+    for len in [0usize, 1, 3, 17] {
+        let xs: Vec<f32> = (0..len).map(|_| f32::from_bits(r.next_u64() as u32)).collect();
+        let back = parse_hex_f32s(&hex_f32s(&xs)).unwrap();
+        assert_eq!(back.len(), xs.len());
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+    assert_eq!(hex_f64(-0.0).len(), 16);
+    assert_eq!(parse_hex_f64(&hex_f64(-0.0)).unwrap().to_bits(), (-0.0f64).to_bits());
+}
+
+/// Truncated or version-bumped snapshot documents are REJECTED loudly —
+/// never mis-restored. This is the artifact-free face of the restore
+/// contract (the full restore paths run in the integration suite).
+#[test]
+fn prop_snapshot_header_gate_rejects_corruption() {
+    use gwclip::session::snapshot;
+    // truncation at every prefix of a minimal valid header document must
+    // produce a parse error, not a partial object
+    let doc = r#"{"format":"gwclip-snapshot","version":1,"steps_done":0}"#;
+    for cut in 1..doc.len() {
+        assert!(
+            snapshot::parse(&doc[..cut]).is_err(),
+            "prefix of {cut} bytes must not parse"
+        );
+    }
+    // a future schema version is refused with a loud error
+    let bumped = doc.replace("\"version\":1", "\"version\":999");
+    let err = snapshot::parse(&bumped).unwrap_err();
+    assert!(format!("{err:#}").contains("999"), "{err:#}");
+    // a different format token is refused
+    let other = doc.replace("gwclip-snapshot", "something-else");
+    let err = snapshot::parse(&other).unwrap_err();
+    assert!(format!("{err:#}").contains("not a gwclip snapshot"), "{err:#}");
+}

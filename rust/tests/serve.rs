@@ -1,0 +1,238 @@
+//! End-to-end tests for the `gwclip serve` daemon over the real AOT
+//! artifacts (tiny configs). Requires `make artifacts` — CI compile-gates
+//! this suite (`cargo test --no-run --test serve`); the artifact-free API
+//! surface is covered by the in-module tests in `src/serve/mod.rs`, and
+//! the crash-with-`kill -9` path by `scripts/serve_smoke.sh`.
+
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use gwclip::serve::{Daemon, ServeOpts};
+use gwclip::session::spec::resolve_threads;
+use gwclip::session::{RunSpec, SessionBuilder};
+use gwclip::util::json::Json;
+
+fn artifacts() -> PathBuf {
+    std::env::var("GWCLIP_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+}
+
+fn tmp_state(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gwclip_serve_it_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Raw HTTP round trip; every daemon response is `Connection: close`, so
+/// read to EOF and split off the head.
+fn req(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let msg = format!(
+        "{method} {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(msg.as_bytes()).unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let status: u16 = buf.split_whitespace().nth(1).and_then(|c| c.parse().ok()).unwrap();
+    let payload = buf.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, payload)
+}
+
+fn start_daemon(
+    state: &std::path::Path,
+    snapshot_every: u64,
+) -> (std::net::SocketAddr, Arc<Daemon>) {
+    let daemon = Arc::new(
+        Daemon::bind(ServeOpts {
+            addr: "127.0.0.1:0".to_string(),
+            artifacts: artifacts(),
+            state_dir: state.to_path_buf(),
+            snapshot_every,
+        })
+        .unwrap(),
+    );
+    let addr = daemon.local_addr();
+    let d = Arc::clone(&daemon);
+    std::thread::spawn(move || d.run().unwrap());
+    (addr, daemon)
+}
+
+fn submit(addr: std::net::SocketAddr, name: &str, spec: &str, extra: &str) {
+    let body =
+        format!("{{\"name\":\"{name}\",\"spec\":{}{extra}}}", Json::Str(spec.into()).render());
+    let (code, resp) = req(addr, "POST", "/sessions", &body);
+    assert_eq!(code, 201, "submit {name}: {resp}");
+}
+
+/// Poll a session until it reaches `phase` (panics on `failed` unless
+/// that is the target); returns the final status object.
+fn await_phase(addr: std::net::SocketAddr, name: &str, phase: &str) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(300);
+    loop {
+        let (code, body) = req(addr, "GET", &format!("/sessions/{name}"), "");
+        assert_eq!(code, 200, "{body}");
+        let st = Json::parse(&body).unwrap();
+        let got = st.get("phase").unwrap().str().unwrap().to_string();
+        if got == phase {
+            return st;
+        }
+        assert_ne!(got, "failed", "session {name} failed: {body}");
+        assert!(Instant::now() < deadline, "timed out waiting for {name} -> {phase}: {body}");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+fn spec_text(seed: u64) -> String {
+    spec_text_epochs(seed, 0.5)
+}
+
+fn spec_text_epochs(seed: u64, epochs: f64) -> String {
+    format!(
+        r#"
+config = "resmlp_tiny"
+epochs = {epochs}
+seed = {seed}
+
+[privacy]
+epsilon = 8.0
+
+[clip]
+group_by = "per-layer"
+mode = "adaptive"
+target_q = 0.6
+
+[data]
+task = "mixture"
+n_data = 64
+"#
+    )
+}
+
+/// Run the same spec standalone (no daemon) and return (per-step losses,
+/// digest render) — the bitwise reference the daemon must match.
+fn standalone(spec: &str) -> (Vec<u64>, String) {
+    let rt = gwclip::runtime::Runtime::new(artifacts()).expect("make artifacts first");
+    let parsed = RunSpec::parse(spec).unwrap();
+    let (mut sess, train, _eval) =
+        SessionBuilder::from_spec(&rt, parsed).build_with_data().unwrap();
+    let events = sess.run(&*train, 0).unwrap();
+    (events.iter().map(|e| e.loss.to_bits()).collect(), sess.digest().render())
+}
+
+/// Two concurrent sessions interleaving steps across the daemon's worker
+/// threads must each be bitwise identical to its standalone run: same
+/// per-step loss bits on the event stream, same final digest — the
+/// daemon's scheduling must not leak between sessions.
+#[test]
+fn daemon_runs_two_concurrent_sessions_bitwise_identical_to_standalone() {
+    let state = tmp_state("pair");
+    let (addr, _daemon) = start_daemon(&state, 0);
+    let (spec_a, spec_b) = (spec_text(101), spec_text(202));
+    submit(addr, "a", &spec_a, "");
+    submit(addr, "b", &spec_b, "");
+
+    let st_a = await_phase(addr, "a", "done");
+    let st_b = await_phase(addr, "b", "done");
+
+    let (ref_a, digest_a) = standalone(&spec_a);
+    let (ref_b, digest_b) = standalone(&spec_b);
+    assert_ne!(digest_a, digest_b, "different seeds must diverge");
+
+    for (name, st, reference, digest) in
+        [("a", st_a, ref_a, digest_a), ("b", st_b, ref_b, digest_b)]
+    {
+        assert_eq!(st.get("digest").unwrap().render(), digest, "session {name}: digest");
+        let (code, body) = req(addr, "GET", &format!("/sessions/{name}/events?wait=0"), "");
+        assert_eq!(code, 200);
+        let losses: Vec<u64> = body
+            .lines()
+            .filter_map(|l| Json::parse(l).ok())
+            .filter(|j| j.opt("step").is_some())
+            .map(|j| j.get("loss").unwrap().f64().unwrap().to_bits())
+            .collect();
+        assert_eq!(losses, reference, "session {name}: event-stream losses");
+    }
+
+    let (code, _) = req(addr, "POST", "/shutdown", "");
+    assert_eq!(code, 200);
+    std::fs::remove_dir_all(state).ok();
+}
+
+/// The serve-path thread precedence (spec < submit < GWCLIP_THREADS):
+/// the running session's status reports the resolved count, and the
+/// result is still bitwise identical to the sequential standalone run.
+#[test]
+fn daemon_resolves_threads_per_session_at_submit_time() {
+    let state = tmp_state("threads");
+    let (addr, _daemon) = start_daemon(&state, 0);
+    let spec = format!("threads = 2\n{}", spec_text(303));
+    submit(addr, "t", &spec, ",\"threads\":3");
+    let st = await_phase(addr, "t", "done");
+    let want = resolve_threads(2, Some(3), std::env::var("GWCLIP_THREADS").ok().as_deref());
+    assert_eq!(st.get("threads").unwrap().usize().unwrap(), want, "{}", st.render());
+    // the thread count is bitwise-neutral: the daemon run still matches
+    // the (sequential) standalone reference
+    let (_, digest) = standalone(&spec);
+    assert_eq!(st.get("digest").unwrap().render(), digest);
+    let (code, _) = req(addr, "POST", "/shutdown", "");
+    assert_eq!(code, 200);
+    std::fs::remove_dir_all(state).ok();
+}
+
+/// Stop mid-run, shut the daemon down, start a fresh daemon on the same
+/// state dir: the resident session resumes from its parting snapshot and
+/// finishes bitwise identical to the uninterrupted standalone run, with
+/// the event stream numbering continuing where it left off.
+#[test]
+fn daemon_restart_resumes_resident_sessions_bitwise() {
+    let state = tmp_state("restart");
+    let (addr, _daemon) = start_daemon(&state, 1);
+    // long enough (~100+ steps) that the stop request reliably lands
+    // mid-run rather than racing completion
+    let spec = spec_text_epochs(404, 25.0);
+    submit(addr, "r", &spec, ",\"snapshot_every\":1");
+    await_phase(addr, "r", "running");
+    // let at least one step land so the stop point is mid-run
+    let deadline = Instant::now() + Duration::from_secs(300);
+    loop {
+        let (_, body) = req(addr, "GET", "/sessions/r", "");
+        let st = Json::parse(&body).unwrap();
+        if st.get("step").unwrap().u64().unwrap() >= 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "{body}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let (code, _) = req(addr, "POST", "/sessions/r/stop", "");
+    assert_eq!(code, 202);
+    let stopped = await_phase(addr, "r", "stopped");
+    let stop_step = stopped.get("step").unwrap().u64().unwrap();
+    let (code, _) = req(addr, "POST", "/shutdown", "");
+    assert_eq!(code, 200);
+    std::thread::sleep(Duration::from_millis(200));
+
+    let (addr2, _daemon2) = start_daemon(&state, 1);
+    let done = await_phase(addr2, "r", "done");
+    assert!(
+        done.get("step").unwrap().u64().unwrap() > stop_step,
+        "resumed run must advance past the stop point"
+    );
+    let (_, digest) = standalone(&spec);
+    assert_eq!(done.get("digest").unwrap().render(), digest, "resume parity");
+    // the second daemon's event stream starts at the resumed step — the
+    // continuity marker: its first event is stop_step + 1
+    let (code, body) = req(addr2, "GET", "/sessions/r/events?wait=0", "");
+    assert_eq!(code, 200);
+    let first_step = body
+        .lines()
+        .filter_map(|l| Json::parse(l).ok())
+        .find_map(|j| j.opt("step").map(|s| s.u64().unwrap()));
+    assert_eq!(first_step, Some(stop_step + 1), "event numbering continuity");
+    let (code, _) = req(addr2, "POST", "/shutdown", "");
+    assert_eq!(code, 200);
+    std::fs::remove_dir_all(state).ok();
+}
