@@ -136,10 +136,12 @@ fn main() -> anyhow::Result<()> {
             .build(data.len())?;
         sess.steploop.threads = threads; // force, independent of GWCLIP_THREADS
         let (mut wall, mut busy, mut n) = (0.0, 0.0, 0usize);
+        let mut phase = gwclip::obs::PhaseSecs::default();
         let r = bench(&format!("shard/threads{threads}/step"), 1, iters(4), || {
             let st = sess.step(&data).unwrap();
             wall += st.collect_wall_secs;
             busy += st.collect_busy_secs;
+            phase.add(&st.phase);
             n += 1;
         });
         let (wall, busy) = (wall / n as f64, busy / n as f64);
@@ -147,6 +149,13 @@ fn main() -> anyhow::Result<()> {
         rows.push(r);
         rows.push(BenchResult::scalar(&format!("shard/threads{threads}/collect-wall"), wall));
         rows.push(BenchResult::scalar(&format!("shard/threads{threads}/collect-busy"), busy));
+        // mean per-phase split of the same steps (bench-diff PHASE rows)
+        for (ph, secs) in phase.iter() {
+            rows.push(BenchResult::scalar(
+                &format!("shard/threads{threads}/step/phase-{ph}"),
+                secs / n as f64,
+            ));
+        }
         measured.push((threads, wall, busy));
     }
     let (_, seq_wall, _) = measured[0];

@@ -10,7 +10,7 @@ use gwclip::data::lm::MarkovCorpus;
 use gwclip::data::Dataset;
 use gwclip::runtime::Runtime;
 use gwclip::session::{ClipPolicy, OptimSpec, PrivacySpec, Session};
-use gwclip::util::bench::{bench, iters, smoke_skip, write_json};
+use gwclip::util::bench::{bench, iters, smoke_skip, write_json, BenchResult};
 
 fn main() -> anyhow::Result<()> {
     let rt = match Runtime::new(gwclip::artifact_dir()) {
@@ -36,14 +36,26 @@ fn main() -> anyhow::Result<()> {
             .optim(OptimSpec::adam(1e-4))
             .epochs(100.0) // plenty of steps available
             .build(data.len())?;
+        let mut phase = gwclip::obs::PhaseSecs::default();
+        let mut n = 0usize;
         let r = bench(&format!("lm_small/step/{}", method.name()), 2, iters(8), || {
-            sess.step(&data).unwrap();
+            let st = sess.step(&data).unwrap();
+            phase.add(&st.phase);
+            n += 1;
         });
         if method == Method::NonPrivate {
             base = r.mean_s;
         }
         println!("{}   ({:.2}x non-private)", r.report(), r.mean_s / base);
         rows.push(r);
+        // mean per-phase split of the same steps (bench-diff PHASE rows,
+        // informational — the /step row above is the gate)
+        for (ph, secs) in phase.iter() {
+            rows.push(BenchResult::scalar(
+                &format!("lm_small/step/{}/phase-{ph}", method.name()),
+                secs / n as f64,
+            ));
+        }
     }
 
     println!("\n== same comparison on the CIFAR-analog (resmlp) config ==");

@@ -57,6 +57,7 @@ pub mod exp;
 pub mod federated;
 pub mod hybrid;
 pub mod metrics;
+pub mod obs;
 pub mod pipeline;
 pub mod runtime;
 pub mod serve;

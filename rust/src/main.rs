@@ -28,7 +28,12 @@ USAGE:
                   docs/SESSION_API.md) [--print-spec]
                   [--snapshot-every N] [--snapshot-dir D]   (publish an atomic
                   resumable snapshot every N steps + one at completion)
+                  [--trace-out trace.json]   (record per-phase spans — deal/
+                  collect per unit+thread/noise/merge/normalize/apply/
+                  quantile — and export Chrome trace-event JSON; zero RNG
+                  impact, the run stays bitwise identical)
   gwclip resume   <snapshot.json> [--snapshot-every N] [--snapshot-dir D]
+                  [--trace-out trace.json]
                   (rebuild the session a snapshot describes, restore its
                   bitwise state — params, optimizer moments, thresholds,
                   RNG stream positions, accountant ledger — and train the
@@ -40,7 +45,9 @@ USAGE:
                   specs over a local HTTP JSON API, stream per-step events
                   as ndjson, snapshot each session on its cadence, and
                   resume every resident session from its latest snapshot
-                  on restart; see docs/SESSION_API.md \"Serving\")
+                  on restart; GET /metrics serves a Prometheus exposition
+                  and GET /sessions/N/phases the per-phase time breakdown;
+                  see docs/SESSION_API.md \"Serving\" + \"Observability\")
   gwclip train    [--config resmlp] [--method adaptive-per-layer] [--epsilon 3]
                   [--delta 1e-5] [--epochs 3] [--lr 0.5] [--n-data 4096]
                   [--seed 0] [--allocation global|equal|weighted]
@@ -75,8 +82,8 @@ USAGE:
   gwclip bench-diff --old DIR [--new DIR] [--max-regress 0.15]
                   (CI gate: diff the BENCH_*.json step-hot-path rows against a
                   previous trajectory; fails loudly on a regression. Also
-                  surfaces the per-backend measured collect-wall rows,
-                  informational only)
+                  surfaces the per-backend measured collect-wall and
+                  per-phase rows, informational only)
   common: [--artifacts DIR] [--threads N]   (N > 1 fans the collect phase
                   across N OS threads — bitwise identical to sequential;
                   GWCLIP_THREADS overrides) [--digest]   (print the bitwise
@@ -164,6 +171,10 @@ fn cmd_resume(rt: &Runtime, args: &Args) -> Result<()> {
     spec.threads = args.get_usize("threads", spec.threads)?;
     let (mut sess, train, eval) = SessionBuilder::from_spec(rt, spec).build_with_data()?;
     snapshot::restore(&mut sess, &snap)?;
+    let trace_out = args.flags.get("trace-out").map(std::path::PathBuf::from);
+    if trace_out.is_some() {
+        sess.enable_trace();
+    }
     eprintln!("{}", sess.describe());
     eprintln!(
         "resumed {} at step {} of {}",
@@ -178,6 +189,10 @@ fn cmd_resume(rt: &Runtime, args: &Args) -> Result<()> {
         .or_else(|| path.parent().map(std::path::Path::to_path_buf))
         .unwrap_or_else(|| std::path::PathBuf::from("snapshots"));
     sess.run_with_snapshots(&*train, 10, args.get_u64("snapshot-every", 0)?, &dir)?;
+    if let Some(p) = &trace_out {
+        sess.write_trace(p)?;
+        eprintln!("trace: wrote Chrome trace events to {}", p.display());
+    }
     finish_session(&sess, &*eval, args)
 }
 
@@ -198,6 +213,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn run_session(builder: SessionBuilder, args: &Args) -> Result<()> {
     let (mut sess, train, eval) = builder.build_with_data()?;
+    // span recording is observational only (no RNG, no feedback), so
+    // enabling it cannot change what the run computes
+    let trace_out = args.flags.get("trace-out").map(std::path::PathBuf::from);
+    if trace_out.is_some() {
+        sess.enable_trace();
+    }
     eprintln!("{}", sess.describe());
     let snapshot_every = args.get_u64("snapshot-every", 0)?;
     let snapshot_dir = args.flags.get("snapshot-dir");
@@ -208,6 +229,10 @@ fn run_session(builder: SessionBuilder, args: &Args) -> Result<()> {
         sess.run_with_snapshots(&*train, 10, snapshot_every, &dir)?;
     } else {
         sess.run(&*train, 10)?;
+    }
+    if let Some(p) = &trace_out {
+        sess.write_trace(p)?;
+        eprintln!("trace: wrote Chrome trace events to {}", p.display());
     }
     finish_session(&sess, &*eval, args)
 }
@@ -309,6 +334,17 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
                 1e3 * o
             ),
             None => println!("MEASURED {name}: collect wall {:.4} ms (no prior)", 1e3 * new_s),
+        }
+    }
+    // per-phase splits of the step hot path — informational for the same
+    // reason: wall-clock phase shares are machine-dependent; the /step
+    // totals above are the gate
+    for (name, new_s, old_s) in &diff.phases {
+        match old_s {
+            Some(o) => {
+                println!("PHASE {name}: {:.4} ms (prior {:.4} ms)", 1e3 * new_s, 1e3 * o)
+            }
+            None => println!("PHASE {name}: {:.4} ms (no prior)", 1e3 * new_s),
         }
     }
     for r in &diff.regressions {

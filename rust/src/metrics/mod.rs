@@ -69,11 +69,20 @@ impl Throughput {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// Steps per wall second; 0.0 before the first tick (a zero-step
+    /// meter used to divide ~0 by ~0 and report an absurd rate).
     pub fn steps_per_sec(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
         self.steps as f64 / self.elapsed().max(1e-9)
     }
 
+    /// Examples per wall second; 0.0 before any examples are recorded.
     pub fn examples_per_sec(&self) -> f64 {
+        if self.examples == 0 {
+            return 0.0;
+        }
         self.examples as f64 / self.elapsed().max(1e-9)
     }
 }
@@ -136,6 +145,19 @@ mod tests {
         m.push(1, 0.0);
         assert!((m.ema() - 9.5).abs() < 1e-9);
         assert_eq!(m.last(), 0.0);
+    }
+
+    #[test]
+    fn throughput_without_ticks_reports_zero_rates() {
+        let t = Throughput::new();
+        assert_eq!(t.steps_per_sec(), 0.0);
+        assert_eq!(t.examples_per_sec(), 0.0);
+        let mut t = Throughput::new();
+        t.tick(0); // a step with an empty draw: steps move, examples don't
+        assert!(t.steps_per_sec() > 0.0);
+        assert_eq!(t.examples_per_sec(), 0.0);
+        t.tick(16);
+        assert!(t.examples_per_sec() > 0.0);
     }
 
     #[test]

@@ -1,0 +1,368 @@
+//! Metrics registry: counters, gauges, and log-bucketed latency
+//! histograms with a hand-rolled Prometheus text exposition (this
+//! environment has no prometheus crate, mirroring `util::json` /
+//! `serve::http`).
+//!
+//! Histograms use power-of-two bucket bounds starting at 1µs, which
+//! covers every latency this repo measures (sub-µs snapshot syscalls up
+//! to two-minute steps) with exact, platform-independent bucketing:
+//! `le = 1e-6 * 2^i`. Quantiles (p50/p95/p99) are bucket upper bounds —
+//! conservative by at most one octave, and deterministic.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::Mutex;
+
+/// Number of finite histogram buckets: `1e-6 * 2^27` ≈ 134 s tops out
+/// well above any single phase or snapshot this repo times.
+pub const HIST_BUCKETS: usize = 28;
+
+/// Upper bound (`le`) of finite bucket `i`.
+pub fn bucket_bound(i: usize) -> f64 {
+    1e-6 * (1u64 << i) as f64
+}
+
+/// Fixed-bound log₂ histogram. The last slot counts the +Inf overflow.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    counts: [u64; HIST_BUCKETS + 1],
+    sum: f64,
+    count: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { counts: [0; HIST_BUCKETS + 1], sum: 0.0, count: 0 }
+    }
+
+    /// The unique bucket a sample lands in (NaN maps to overflow —
+    /// every comparison with NaN is false, so the scan falls through).
+    pub fn bucket_index(v: f64) -> usize {
+        for i in 0..HIST_BUCKETS {
+            if v <= bucket_bound(i) {
+                return i;
+            }
+        }
+        HIST_BUCKETS
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        self.counts[Self::bucket_index(v)] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Per-bucket (non-cumulative) counts, overflow last.
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Quantile as the upper bound of the bucket where the cumulative
+    /// count crosses `q * count`. Empty histogram -> 0.0; a crossing in
+    /// the overflow bucket -> +Inf (honest: the sample exceeded every
+    /// finite bound).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for i in 0..HIST_BUCKETS {
+            cum += self.counts[i];
+            if cum >= target {
+                return bucket_bound(i);
+            }
+        }
+        f64::INFINITY
+    }
+
+    /// Merge another histogram into this one. Bucket counts and totals
+    /// add exactly, so `merge(a, b)` has identical bucket counts and
+    /// quantiles to a histogram fed the concatenated sample stream.
+    pub fn merge(&mut self, other: &Histogram) {
+        for i in 0..self.counts.len() {
+            self.counts[i] += other.counts[i];
+        }
+        self.sum += other.sum;
+        self.count += other.count;
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+enum Series {
+    Val(f64),
+    Hist(Histogram),
+}
+
+struct Family {
+    kind: Kind,
+    help: &'static str,
+    /// Keyed by the rendered label pairs (e.g. `session="smoke"`; empty
+    /// string for an unlabeled series) — BTreeMap keeps the exposition
+    /// deterministically ordered.
+    series: BTreeMap<String, Series>,
+}
+
+/// Thread-safe named-metric registry. One lives on the serve daemon
+/// (shared by every session runner and the HTTP handler); standalone
+/// runs can hold one locally.
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn with_series<R>(
+        &self,
+        name: &str,
+        kind: Kind,
+        help: &'static str,
+        labels: &str,
+        f: impl FnOnce(&mut Series) -> R,
+    ) -> Option<R> {
+        let mut fams = self.families.lock().unwrap_or_else(|e| e.into_inner());
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            kind,
+            help,
+            series: BTreeMap::new(),
+        });
+        if fam.kind != kind {
+            debug_assert!(false, "metric '{name}' re-registered as a different kind");
+            return None;
+        }
+        let s = fam.series.entry(labels.to_string()).or_insert_with(|| match kind {
+            Kind::Histogram => Series::Hist(Histogram::new()),
+            _ => Series::Val(0.0),
+        });
+        Some(f(s))
+    }
+
+    /// Add `v` to a (monotonic) counter series, creating it at 0.
+    pub fn counter_add(&self, name: &str, help: &'static str, labels: &str, v: f64) {
+        self.with_series(name, Kind::Counter, help, labels, |s| {
+            if let Series::Val(x) = s {
+                *x += v;
+            }
+        });
+    }
+
+    /// Set a gauge series to `v`.
+    pub fn gauge_set(&self, name: &str, help: &'static str, labels: &str, v: f64) {
+        self.with_series(name, Kind::Gauge, help, labels, |s| {
+            if let Series::Val(x) = s {
+                *x = v;
+            }
+        });
+    }
+
+    /// Record `v` into a histogram series.
+    pub fn observe(&self, name: &str, help: &'static str, labels: &str, v: f64) {
+        self.with_series(name, Kind::Histogram, help, labels, |s| {
+            if let Series::Hist(h) = s {
+                h.observe(v);
+            }
+        });
+    }
+
+    /// Current value of a counter/gauge series (tests, /phases).
+    pub fn value(&self, name: &str, labels: &str) -> Option<f64> {
+        let fams = self.families.lock().unwrap_or_else(|e| e.into_inner());
+        match fams.get(name)?.series.get(labels)? {
+            Series::Val(v) => Some(*v),
+            Series::Hist(_) => None,
+        }
+    }
+
+    /// Quantile of a histogram series.
+    pub fn hist_quantile(&self, name: &str, labels: &str, q: f64) -> Option<f64> {
+        let fams = self.families.lock().unwrap_or_else(|e| e.into_inner());
+        match fams.get(name)?.series.get(labels)? {
+            Series::Hist(h) => Some(h.quantile(q)),
+            Series::Val(_) => None,
+        }
+    }
+
+    /// Render the whole registry in Prometheus text exposition format
+    /// (one HELP/TYPE pair per family, series sorted by label set).
+    pub fn render(&self) -> String {
+        let fams = self.families.lock().unwrap_or_else(|e| e.into_inner());
+        let mut out = String::new();
+        for (name, fam) in fams.iter() {
+            writeln!(out, "# HELP {name} {}", fam.help).unwrap();
+            writeln!(out, "# TYPE {name} {}", fam.kind.as_str()).unwrap();
+            for (labels, series) in fam.series.iter() {
+                match series {
+                    Series::Val(v) => {
+                        if labels.is_empty() {
+                            writeln!(out, "{name} {v}").unwrap();
+                        } else {
+                            writeln!(out, "{name}{{{labels}}} {v}").unwrap();
+                        }
+                    }
+                    Series::Hist(h) => {
+                        let mut cum = 0u64;
+                        for (i, c) in h.bucket_counts().iter().enumerate() {
+                            cum += c;
+                            let le = if i < HIST_BUCKETS {
+                                format!("{}", bucket_bound(i))
+                            } else {
+                                "+Inf".to_string()
+                            };
+                            let sep = if labels.is_empty() { "" } else { "," };
+                            writeln!(out, "{name}_bucket{{{labels}{sep}le=\"{le}\"}} {cum}")
+                                .unwrap();
+                        }
+                        let (so, sc) = if labels.is_empty() {
+                            (format!("{name}_sum"), format!("{name}_count"))
+                        } else {
+                            (format!("{name}_sum{{{labels}}}"), format!("{name}_count{{{labels}}}"))
+                        };
+                        writeln!(out, "{so} {}", h.sum()).unwrap();
+                        writeln!(out, "{sc} {}", h.count()).unwrap();
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_sample_lands_in_exactly_one_bucket() {
+        // dense sweep across the full range plus edge values; the index
+        // function is total, so "exactly one" means counts sum to count
+        let mut h = Histogram::new();
+        let mut samples = vec![0.0, -1.0, 1e-9, 134.0, 1e6, f64::INFINITY];
+        for i in 0..HIST_BUCKETS {
+            let b = bucket_bound(i);
+            samples.push(b); // boundary: lands in bucket i (le is inclusive)
+            samples.push(b * 1.0000001); // just above: next bucket
+        }
+        for &v in &samples {
+            let i = Histogram::bucket_index(v);
+            assert!(i <= HIST_BUCKETS);
+            if i < HIST_BUCKETS {
+                assert!(v <= bucket_bound(i), "sample {v} above its bucket bound");
+            }
+            if i > 0 && v.is_finite() {
+                assert!(v > bucket_bound(i - 1), "sample {v} belongs in an earlier bucket");
+            }
+            h.observe(v);
+        }
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), h.count());
+        assert_eq!(h.count(), samples.len() as u64);
+    }
+
+    #[test]
+    fn quantiles_are_monotone() {
+        let mut h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.observe(i as f64 * 1e-5);
+        }
+        let (p50, p95, p99) = (h.quantile(0.50), h.quantile(0.95), h.quantile(0.99));
+        assert!(p50 <= p95 && p95 <= p99, "p50={p50} p95={p95} p99={p99}");
+        assert!(p50 > 0.0);
+        assert_eq!(Histogram::new().quantile(0.5), 0.0, "empty histogram quantile is 0");
+    }
+
+    #[test]
+    fn merge_equals_concatenated_stream() {
+        // dyadic sample values so the running sums are exact in f64 and
+        // the equality below can be bitwise
+        let xs: Vec<f64> = (0..500).map(|i| (i % 37) as f64 / 1024.0).collect();
+        let ys: Vec<f64> = (0..300).map(|i| (i % 53) as f64 / 256.0).collect();
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut whole = Histogram::new();
+        for &v in &xs {
+            a.observe(v);
+            whole.observe(v);
+        }
+        for &v in &ys {
+            b.observe(v);
+            whole.observe(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, whole);
+        for q in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            assert_eq!(a.quantile(q), whole.quantile(q));
+        }
+    }
+
+    #[test]
+    fn registry_renders_prometheus_exposition() {
+        let r = Registry::new();
+        r.counter_add("gwclip_steps_total", "Steps completed.", "session=\"a\"", 3.0);
+        r.counter_add("gwclip_steps_total", "Steps completed.", "session=\"a\"", 2.0);
+        r.gauge_set("gwclip_eps_spent", "Privacy spent.", "session=\"a\"", 1.25);
+        r.observe("gwclip_step_seconds", "Step latency.", "", 0.5e-6);
+        r.observe("gwclip_step_seconds", "Step latency.", "", 3e-6);
+        let text = r.render();
+        assert!(text.contains("# HELP gwclip_steps_total Steps completed.\n"));
+        assert!(text.contains("# TYPE gwclip_steps_total counter\n"));
+        assert!(text.contains("gwclip_steps_total{session=\"a\"} 5\n"));
+        assert!(text.contains("gwclip_eps_spent{session=\"a\"} 1.25\n"));
+        assert!(text.contains("# TYPE gwclip_step_seconds histogram\n"));
+        // cumulative buckets: 1 sample <= 1e-6, both <= 4e-6
+        assert!(text.contains("gwclip_step_seconds_bucket{le=\"0.000001\"} 1\n"));
+        assert!(text.contains("gwclip_step_seconds_bucket{le=\"0.000004\"} 2\n"));
+        assert!(text.contains("gwclip_step_seconds_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("gwclip_step_seconds_count 2\n"));
+        // exactly one HELP line per family
+        for fam in ["gwclip_steps_total", "gwclip_eps_spent", "gwclip_step_seconds"] {
+            let n = text.matches(&format!("# HELP {fam} ")).count();
+            assert_eq!(n, 1, "duplicate HELP for {fam}");
+        }
+        assert_eq!(r.value("gwclip_steps_total", "session=\"a\""), Some(5.0));
+        assert_eq!(r.hist_quantile("gwclip_step_seconds", "", 0.5), Some(1e-6));
+    }
+
+    #[test]
+    fn counters_and_gauges_track_independent_label_sets() {
+        let r = Registry::new();
+        r.counter_add("c", "h", "session=\"x\"", 1.0);
+        r.counter_add("c", "h", "session=\"y\"", 7.0);
+        assert_eq!(r.value("c", "session=\"x\""), Some(1.0));
+        assert_eq!(r.value("c", "session=\"y\""), Some(7.0));
+        assert_eq!(r.value("c", "session=\"z\""), None);
+        assert_eq!(r.value("nope", ""), None);
+    }
+}

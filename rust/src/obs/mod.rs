@@ -1,0 +1,101 @@
+//! Crate-wide observability: per-phase span tracing and a metrics
+//! registry, surfaced through the serve daemon's `/metrics` endpoint
+//! and `gwclip run --trace-out` Chrome-trace export.
+//!
+//! The hard contract of this module is **zero RNG impact**: nothing in
+//! here draws from, splits, or reorders any random stream. Tracing and
+//! metrics observe wall-clock time and already-released values only, so
+//! every bitwise parity pin in the test suite holds with tracing on or
+//! off. Timing is measured with `std::time::Instant` (monotonic) and
+//! never feeds back into the training computation.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{Histogram, Registry};
+pub use trace::{Span, Tracer};
+
+/// Wall-clock seconds spent in each DP phase of one training step.
+///
+/// The phase taxonomy mirrors the `StepLoop` structure one-to-one:
+/// `deal` (draw + host->device staging), `collect` (per-unit gradient +
+/// norm work, possibly fanned across OS threads), `noise` (Gaussian
+/// draw + add), `merge` (backend cross-unit reduction), `normalize`
+/// (clip-scale application), `apply` (optimizer update), `quantile`
+/// (adaptive threshold update). Phases a backend does not run are 0.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseSecs {
+    pub deal: f64,
+    pub collect: f64,
+    pub noise: f64,
+    pub merge: f64,
+    pub normalize: f64,
+    pub apply: f64,
+    pub quantile: f64,
+}
+
+impl PhaseSecs {
+    /// Phase names, in step-loop execution order.
+    pub const NAMES: [&'static str; 7] =
+        ["deal", "collect", "noise", "merge", "normalize", "apply", "quantile"];
+
+    /// (name, seconds) pairs in execution order.
+    pub fn iter(&self) -> [(&'static str, f64); 7] {
+        [
+            ("deal", self.deal),
+            ("collect", self.collect),
+            ("noise", self.noise),
+            ("merge", self.merge),
+            ("normalize", self.normalize),
+            ("apply", self.apply),
+            ("quantile", self.quantile),
+        ]
+    }
+
+    /// Seconds attributed to a phase by name; `None` for unknown names.
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.iter().iter().find(|(n, _)| *n == name).map(|(_, v)| *v)
+    }
+
+    /// Sum over all phases (the instrumented fraction of `host_secs`).
+    pub fn total(&self) -> f64 {
+        self.iter().iter().map(|(_, v)| v).sum()
+    }
+
+    /// Accumulate another step's phase times into this one.
+    pub fn add(&mut self, other: &PhaseSecs) {
+        self.deal += other.deal;
+        self.collect += other.collect;
+        self.noise += other.noise;
+        self.merge += other.merge;
+        self.normalize += other.normalize;
+        self.apply += other.apply;
+        self.quantile += other.quantile;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_secs_iter_matches_names_and_total() {
+        let mut p = PhaseSecs::default();
+        p.deal = 1.0;
+        p.collect = 2.0;
+        p.noise = 4.0;
+        p.merge = 8.0;
+        p.normalize = 16.0;
+        p.apply = 32.0;
+        p.quantile = 64.0;
+        let names: Vec<&str> = p.iter().iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, PhaseSecs::NAMES);
+        assert_eq!(p.total(), 127.0);
+        assert_eq!(p.get("merge"), Some(8.0));
+        assert_eq!(p.get("bogus"), None);
+        let mut q = PhaseSecs::default();
+        q.add(&p);
+        q.add(&p);
+        assert_eq!(q.total(), 254.0);
+    }
+}

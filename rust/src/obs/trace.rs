@@ -1,0 +1,273 @@
+//! Lightweight phase-span recorder with Chrome trace-event export.
+//!
+//! The `StepLoop` drives a [`Tracer`] (when enabled) with one span per
+//! DP phase and one span per collect unit, recording monotonic start
+//! offsets and durations into a bounded ring buffer. Everything here is
+//! plain bookkeeping on the host thread — no RNG, no locks, no I/O
+//! until export — so a traced run is bitwise identical to an untraced
+//! one. When tracing is disabled the `StepLoop` holds `None` and the
+//! per-phase cost is a branch on an `Option`.
+//!
+//! Export follows the Chrome trace-event JSON format (the `ph:"X"`
+//! complete-event form plus `ph:"M"` thread-name metadata), loadable in
+//! `chrome://tracing` / Perfetto: one track (`tid`) for the step loop
+//! and one per observed collect worker thread, so the threaded collect
+//! fan-out shows up as a flamegraph.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Default ring capacity: at 8 spans/step this holds ~8k steps, far
+/// beyond any smoke/bench run, while bounding memory for long serves.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// Track id of the main step loop; worker tracks are assigned 1..= in
+/// first-seen order.
+pub const MAIN_TRACK: u64 = 0;
+
+/// One completed phase (or per-unit collect task) interval.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// Phase name from the fixed taxonomy (`deal`, `collect`, ...).
+    pub name: &'static str,
+    /// Start offset from the tracer's epoch, microseconds.
+    pub start_us: u64,
+    /// Duration, microseconds.
+    pub dur_us: u64,
+    /// Step the span belongs to (1-based, matching `StepEvent::step`).
+    pub step: u64,
+    /// Track: [`MAIN_TRACK`] for the step loop, worker ids otherwise.
+    pub track: u64,
+    /// Collect spans carry the unit index they processed.
+    pub unit: Option<usize>,
+}
+
+/// Bounded span ring buffer anchored at a monotonic epoch.
+pub struct Tracer {
+    epoch: Instant,
+    cap: usize,
+    buf: Vec<Span>,
+    /// Next overwrite position once the ring is full; also the oldest
+    /// retained span, so chronological iteration starts here.
+    head: usize,
+    dropped: u64,
+    /// Hashed worker-thread id -> small stable track id (1-based).
+    tracks: BTreeMap<u64, u64>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Tracer {
+            epoch: Instant::now(),
+            cap: cap.max(1),
+            buf: Vec::new(),
+            head: 0,
+            dropped: 0,
+            tracks: BTreeMap::new(),
+        }
+    }
+
+    /// The monotonic zero point all span offsets are measured from.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Microseconds from the epoch to `t` (0 for pre-epoch instants).
+    pub fn us_since_epoch(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Map a hashed worker-thread id to a small stable track id
+    /// (assigned 1, 2, ... in first-seen order; 0 is the step loop).
+    pub fn track_for(&mut self, thread_hash: u64) -> u64 {
+        let next = self.tracks.len() as u64 + 1;
+        *self.tracks.entry(thread_hash).or_insert(next)
+    }
+
+    /// Append a span, overwriting the oldest once the ring is full.
+    pub fn push(&mut self, span: Span) {
+        if self.buf.len() < self.cap {
+            self.buf.push(span);
+        } else {
+            self.buf[self.head] = span;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Convenience: record a main-track span from two instants.
+    pub fn record(&mut self, name: &'static str, step: u64, start: Instant, end: Instant) {
+        let start_us = self.us_since_epoch(start);
+        let dur_us = end.saturating_duration_since(start).as_micros() as u64;
+        self.push(Span { name, start_us, dur_us, step, track: MAIN_TRACK, unit: None });
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Spans evicted so far (ring overwrites).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Retained spans, oldest first.
+    pub fn spans(&self) -> impl Iterator<Item = &Span> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+
+    /// Render the retained spans as a Chrome trace-event JSON document.
+    pub fn to_chrome_json(&self) -> Json {
+        let mut events = Vec::new();
+        // thread_name metadata: one entry per track so the viewer shows
+        // readable lane names instead of bare tids
+        let mut track_ids: Vec<u64> = vec![MAIN_TRACK];
+        track_ids.extend(self.tracks.values().copied());
+        track_ids.sort_unstable();
+        track_ids.dedup();
+        for tid in track_ids {
+            let label = if tid == MAIN_TRACK {
+                "step loop".to_string()
+            } else {
+                format!("collect worker {tid}")
+            };
+            let mut args = BTreeMap::new();
+            args.insert("name".to_string(), Json::Str(label));
+            let mut m = BTreeMap::new();
+            m.insert("ph".to_string(), Json::Str("M".to_string()));
+            m.insert("name".to_string(), Json::Str("thread_name".to_string()));
+            m.insert("pid".to_string(), Json::Num(0.0));
+            m.insert("tid".to_string(), Json::Num(tid as f64));
+            m.insert("args".to_string(), Json::Obj(args));
+            events.push(Json::Obj(m));
+        }
+        for s in self.spans() {
+            let name = match s.unit {
+                Some(u) => format!("{}/unit{}", s.name, u),
+                None => s.name.to_string(),
+            };
+            let mut args = BTreeMap::new();
+            args.insert("step".to_string(), Json::Num(s.step as f64));
+            if let Some(u) = s.unit {
+                args.insert("unit".to_string(), Json::Num(u as f64));
+            }
+            let mut m = BTreeMap::new();
+            m.insert("ph".to_string(), Json::Str("X".to_string()));
+            m.insert("name".to_string(), Json::Str(name));
+            m.insert("cat".to_string(), Json::Str("dp-phase".to_string()));
+            m.insert("ts".to_string(), Json::Num(s.start_us as f64));
+            m.insert("dur".to_string(), Json::Num(s.dur_us as f64));
+            m.insert("pid".to_string(), Json::Num(0.0));
+            m.insert("tid".to_string(), Json::Num(s.track as f64));
+            m.insert("args".to_string(), Json::Obj(args));
+            events.push(Json::Obj(m));
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+        doc.insert("traceEvents".to_string(), Json::Arr(events));
+        Json::Obj(doc)
+    }
+
+    /// Write the Chrome trace document atomically to `path`.
+    pub fn write_chrome(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        crate::util::fsio::write_atomic(path, self.to_chrome_json().render().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(name: &'static str, step: u64, start_us: u64) -> Span {
+        Span { name, start_us, dur_us: 5, step, track: MAIN_TRACK, unit: None }
+    }
+
+    #[test]
+    fn ring_buffer_wraps_and_keeps_newest() {
+        let mut t = Tracer::with_capacity(4);
+        for i in 0..10u64 {
+            t.push(span("deal", i, i));
+        }
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dropped(), 6);
+        let steps: Vec<u64> = t.spans().map(|s| s.step).collect();
+        assert_eq!(steps, vec![6, 7, 8, 9], "oldest-first iteration after wraparound");
+    }
+
+    #[test]
+    fn ring_buffer_below_capacity_keeps_all_in_order() {
+        let mut t = Tracer::with_capacity(8);
+        for i in 0..3u64 {
+            t.push(span("noise", i, i));
+        }
+        assert_eq!(t.dropped(), 0);
+        let steps: Vec<u64> = t.spans().map(|s| s.step).collect();
+        assert_eq!(steps, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn track_ids_are_stable_and_first_seen_ordered() {
+        let mut t = Tracer::new();
+        let a = t.track_for(0xdead);
+        let b = t.track_for(0xbeef);
+        assert_eq!(a, 1);
+        assert_eq!(b, 2);
+        assert_eq!(t.track_for(0xdead), 1, "same thread hash keeps its track");
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let mut t = Tracer::with_capacity(16);
+        t.push(span("deal", 1, 10));
+        let w = t.track_for(42);
+        t.push(Span { name: "collect", start_us: 20, dur_us: 7, step: 1, track: w, unit: Some(3) });
+        let doc = t.to_chrome_json();
+        let events = doc.get("traceEvents").unwrap().arr().unwrap();
+        // 2 thread_name metadata entries (main + worker) + 2 spans
+        assert_eq!(events.len(), 4);
+        let metas: Vec<&Json> =
+            events.iter().filter(|e| e.get("ph").unwrap().str().unwrap() == "M").collect();
+        assert_eq!(metas.len(), 2);
+        for m in &metas {
+            assert_eq!(m.get("name").unwrap().str().unwrap(), "thread_name");
+        }
+        let xs: Vec<&Json> =
+            events.iter().filter(|e| e.get("ph").unwrap().str().unwrap() == "X").collect();
+        assert_eq!(xs.len(), 2);
+        let collect = xs
+            .iter()
+            .find(|e| e.get("name").unwrap().str().unwrap() == "collect/unit3")
+            .expect("per-unit collect span present");
+        assert_eq!(collect.get("ts").unwrap().u64().unwrap(), 20);
+        assert_eq!(collect.get("dur").unwrap().u64().unwrap(), 7);
+        assert_eq!(collect.get("tid").unwrap().u64().unwrap(), w);
+        assert_eq!(collect.get("args").unwrap().get("unit").unwrap().u64().unwrap(), 3);
+        // the document round-trips through the in-tree parser
+        let back = Json::parse(&doc.render()).unwrap();
+        assert_eq!(back, doc);
+    }
+}

@@ -104,6 +104,15 @@ impl Conn {
         Ok(())
     }
 
+    /// One complete plain-text response (the Prometheus exposition on
+    /// `GET /metrics` uses `text/plain; version=0.0.4`).
+    pub fn respond_text(&mut self, status: u16, content_type: &str, body: &str) -> Result<()> {
+        self.write_head(status, content_type, Some(body.len()))?;
+        self.reader.get_mut().write_all(body.as_bytes())?;
+        self.reader.get_mut().flush()?;
+        Ok(())
+    }
+
     /// An error response with the message under `"error"`.
     pub fn respond_error(&mut self, status: u16, msg: &str) -> Result<()> {
         let mut m = BTreeMap::new();

@@ -32,8 +32,10 @@
 //! | GET  /healthz                  | liveness + session count                    |
 //! | GET  /sessions                 | list every resident session's status        |
 //! | POST /sessions                 | submit `{name, spec, threads?, snapshot_every?}` |
+//! | GET  /metrics                  | Prometheus text exposition, labeled per session |
 //! | GET  /sessions/N               | one session's status (+ digest when done)   |
 //! | GET  /sessions/N/events        | ndjson event stream (`?from=K&wait=0`)      |
+//! | GET  /sessions/N/phases        | cumulative per-phase time breakdown (JSON)  |
 //! | POST /sessions/N/snapshot      | snapshot after the current step             |
 //! | POST /sessions/N/stop          | stop at the next step boundary (+ snapshot) |
 //! | DELETE /sessions/N             | stop, drop from the registry, remove state  |
@@ -57,6 +59,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::obs::{PhaseSecs, Registry as Metrics};
 use crate::runtime::Runtime;
 use crate::session::snapshot;
 use crate::session::spec::resolve_threads;
@@ -106,6 +109,13 @@ struct Status {
     backend: String,
     eps_spent: Option<f64>,
     snapshot_step: Option<u64>,
+    /// cumulative wall seconds per DP phase across all steps run by
+    /// THIS process (resets on daemon restart, like the event list)
+    phase_secs: PhaseSecs,
+    /// cumulative collect wall/busy seconds (their ratio is the
+    /// measured thread-fan-out overlap `/phases` reports)
+    collect_wall: f64,
+    collect_busy: f64,
     /// bitwise state certificate, set when the run reaches a terminal
     /// phase (see `Session::digest`)
     digest: Option<Json>,
@@ -146,6 +156,9 @@ impl SessionEntry {
                 backend: String::new(),
                 eps_spent: None,
                 snapshot_step: None,
+                phase_secs: PhaseSecs::default(),
+                collect_wall: 0.0,
+                collect_busy: 0.0,
                 digest: None,
             }),
             events: Mutex::new(Vec::new()),
@@ -195,6 +208,34 @@ impl SessionEntry {
         }
         Json::Obj(m)
     }
+
+    /// Per-phase time breakdown for `GET /sessions/N/phases`: cumulative
+    /// wall seconds per DP phase (this process's steps only) plus the
+    /// collect busy/wall overlap ratio. `collect_busy_ratio > 1` means
+    /// the per-unit thread fan-out genuinely overlapped work.
+    fn phases_json(&self) -> Json {
+        let st = self.status.lock().unwrap();
+        let mut phases = BTreeMap::new();
+        for (name, secs) in st.phase_secs.iter() {
+            phases.insert(name.to_string(), Json::Num(secs));
+        }
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("steps".to_string(), Json::Num(st.step as f64));
+        m.insert("phase_secs".to_string(), Json::Obj(phases));
+        m.insert("total_secs".to_string(), Json::Num(st.phase_secs.total()));
+        m.insert("collect_wall_secs".to_string(), Json::Num(st.collect_wall));
+        m.insert("collect_busy_secs".to_string(), Json::Num(st.collect_busy));
+        m.insert(
+            "collect_busy_ratio".to_string(),
+            if st.collect_wall > 0.0 {
+                Json::Num(st.collect_busy / st.collect_wall)
+            } else {
+                Json::Null
+            },
+        );
+        Json::Obj(m)
+    }
 }
 
 type Registry = Arc<Mutex<BTreeMap<String, Arc<SessionEntry>>>>;
@@ -217,6 +258,9 @@ pub struct Daemon {
     opts: Arc<ServeOpts>,
     listener: TcpListener,
     registry: Registry,
+    /// process-wide metric registry: every session runner records into
+    /// it (labeled `session="name"`), `GET /metrics` renders it
+    metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
 }
 
@@ -237,6 +281,7 @@ impl Daemon {
             opts: Arc::new(opts),
             listener,
             registry: Arc::new(Mutex::new(BTreeMap::new())),
+            metrics: Arc::new(Metrics::new()),
             shutdown: Arc::new(AtomicBool::new(false)),
         };
         daemon.resume_residents();
@@ -273,7 +318,7 @@ impl Daemon {
                 let every = j.get("snapshot_every")?.u64()?;
                 let entry = Arc::new(SessionEntry::new(name.clone(), spec_text, threads, every));
                 self.registry.lock().unwrap().insert(name, Arc::clone(&entry));
-                spawn_runner(entry, Arc::clone(&self.opts));
+                spawn_runner(entry, Arc::clone(&self.opts), Arc::clone(&self.metrics));
                 Ok(())
             })();
             if let Err(e) = resume {
@@ -300,6 +345,7 @@ impl Daemon {
             };
             let registry = Arc::clone(&self.registry);
             let opts = Arc::clone(&self.opts);
+            let metrics = Arc::clone(&self.metrics);
             let shutdown = Arc::clone(&self.shutdown);
             let addr = self.local_addr();
             std::thread::spawn(move || {
@@ -314,7 +360,7 @@ impl Daemon {
                         return;
                     }
                 };
-                if let Err(e) = handle(&mut conn, &req, &registry, &opts, &shutdown) {
+                if let Err(e) = handle(&mut conn, &req, &registry, &opts, &metrics, &shutdown) {
                     let _ = conn.respond_error(500, &format!("{e:#}"));
                 }
                 // unblock the accept loop so it observes the flag
@@ -342,12 +388,12 @@ impl Daemon {
 
 // ----------------------------------------------------------------- runner
 
-fn spawn_runner(entry: Arc<SessionEntry>, opts: Arc<ServeOpts>) {
+fn spawn_runner(entry: Arc<SessionEntry>, opts: Arc<ServeOpts>, metrics: Arc<Metrics>) {
     let for_thread = Arc::clone(&entry);
     let handle = std::thread::Builder::new()
         .name(format!("gwclip-serve-{}", entry.name))
         .spawn(move || {
-            if let Err(e) = run_session(&for_thread, &opts) {
+            if let Err(e) = run_session(&for_thread, &opts, &metrics) {
                 let mut st = for_thread.status.lock().unwrap();
                 st.phase = Phase::Failed;
                 st.detail = format!("{e:#}");
@@ -362,7 +408,7 @@ fn spawn_runner(entry: Arc<SessionEntry>, opts: Arc<ServeOpts>) {
 /// The whole life of one session, on its own thread: build (or resume
 /// from the latest snapshot), step to completion or stop, snapshot on
 /// cadence/demand, publish events and the final digest.
-fn run_session(entry: &SessionEntry, opts: &ServeOpts) -> Result<()> {
+fn run_session(entry: &SessionEntry, opts: &ServeOpts, metrics: &Metrics) -> Result<()> {
     // the PJRT runtime is thread-local by construction (!Send): built
     // here, owned here, dropped here
     let rt = Runtime::new(&opts.artifacts).with_context(|| {
@@ -407,23 +453,36 @@ fn run_session(entry: &SessionEntry, opts: &ServeOpts) -> Result<()> {
     entry.ring();
 
     let every = entry.snapshot_every;
+    let labels = session_labels(&entry.name);
+    let groups = sess.group_labels();
     while sess.steploop.steps_done < sess.total_steps {
         if entry.stop.load(Ordering::SeqCst) {
             break;
         }
         let ev = sess.step(&*train)?;
         let s = ev.step;
-        entry.events.lock().unwrap().push(ev.to_json());
+        record_step_metrics(metrics, &entry.name, &ev, sess.thresholds(), &groups);
         {
             let mut st = entry.status.lock().unwrap();
             st.step = s;
             st.eps_spent = sess.epsilon_spent();
+            st.phase_secs.add(&ev.phase);
+            st.collect_wall += ev.collect_wall_secs;
+            st.collect_busy += ev.collect_busy_secs;
         }
+        entry.events.lock().unwrap().push(ev.to_json());
         if entry.snap_req.swap(false, Ordering::SeqCst)
             || (every > 0 && s % every == 0)
             || s == sess.total_steps
         {
+            let t0 = Instant::now();
             snapshot::write(&sess, &sdir.join(snapshot::file_name(s)))?;
+            metrics.observe(
+                "gwclip_snapshot_write_seconds",
+                "Snapshot serialize+atomic-write latency.",
+                &labels,
+                t0.elapsed().as_secs_f64(),
+            );
             entry.status.lock().unwrap().snapshot_step = Some(s);
         }
         entry.ring();
@@ -434,7 +493,14 @@ fn run_session(entry: &SessionEntry, opts: &ServeOpts) -> Result<()> {
         // stopped by request: publish a parting snapshot at this exact
         // boundary so the next start resumes bitwise from here
         let s = sess.steploop.steps_done;
+        let t0 = Instant::now();
         snapshot::write(&sess, &sdir.join(snapshot::file_name(s)))?;
+        metrics.observe(
+            "gwclip_snapshot_write_seconds",
+            "Snapshot serialize+atomic-write latency.",
+            &labels,
+            t0.elapsed().as_secs_f64(),
+        );
         entry.status.lock().unwrap().snapshot_step = Some(s);
     }
     {
@@ -445,6 +511,81 @@ fn run_session(entry: &SessionEntry, opts: &ServeOpts) -> Result<()> {
     }
     entry.ring();
     Ok(())
+}
+
+/// Rendered label set keying every per-session series (`valid_name`
+/// admits only `[a-zA-Z0-9_-]`, so no escaping is ever needed).
+fn session_labels(name: &str) -> String {
+    format!("session=\"{name}\"")
+}
+
+/// Publish one step's already-released values into the daemon metric
+/// registry. Strictly post-processing: every input was computed by the
+/// step itself — no new accountant queries, no RNG, no feedback into
+/// training (the `obs` zero-RNG contract).
+fn record_step_metrics(
+    m: &Metrics,
+    name: &str,
+    ev: &crate::session::StepEvent,
+    thresholds: &[f64],
+    groups: &[String],
+) {
+    let l = session_labels(name);
+    m.counter_add("gwclip_steps_total", "DP training steps completed.", &l, 1.0);
+    m.counter_add(
+        "gwclip_examples_total",
+        "Live examples processed across all steps.",
+        &l,
+        ev.batch_size as f64,
+    );
+    m.counter_add(
+        "gwclip_truncated_draws_total",
+        "Sampled examples dropped by the static batch capacity.",
+        &l,
+        ev.truncated as f64,
+    );
+    if let Some(e) = ev.eps_spent {
+        m.gauge_set("gwclip_eps_spent", "Privacy budget spent so far (epsilon).", &l, e);
+    }
+    for (i, &t) in thresholds.iter().enumerate() {
+        let g = groups.get(i).map(String::as_str).unwrap_or("?");
+        m.gauge_set(
+            "gwclip_group_threshold",
+            "Current per-group clipping threshold.",
+            &format!("session=\"{name}\",group=\"{g}\""),
+            t,
+        );
+    }
+    for (i, &f) in ev.clip_frac.iter().enumerate() {
+        let g = groups.get(i).map(String::as_str).unwrap_or("?");
+        m.gauge_set(
+            "gwclip_clip_fraction",
+            "Fraction of examples clipped last step, per group.",
+            &format!("session=\"{name}\",group=\"{g}\""),
+            f,
+        );
+    }
+    for (ph, secs) in ev.phase.iter() {
+        m.counter_add(
+            "gwclip_phase_seconds_total",
+            "Cumulative wall seconds per DP phase.",
+            &format!("session=\"{name}\",phase=\"{ph}\""),
+            secs,
+        );
+    }
+    m.counter_add(
+        "gwclip_collect_wall_seconds_total",
+        "Cumulative collect-phase wall seconds.",
+        &l,
+        ev.collect_wall_secs,
+    );
+    m.counter_add(
+        "gwclip_collect_busy_seconds_total",
+        "Cumulative summed per-unit collect busy seconds.",
+        &l,
+        ev.collect_busy_secs,
+    );
+    m.observe("gwclip_step_seconds", "Host wall seconds per training step.", &l, ev.host_secs);
 }
 
 // --------------------------------------------------------------- handlers
@@ -464,10 +605,22 @@ fn handle(
     req: &Request,
     registry: &Registry,
     opts: &Arc<ServeOpts>,
+    metrics: &Arc<Metrics>,
     shutdown: &Arc<AtomicBool>,
 ) -> Result<()> {
     let segs = req.segments();
     match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["metrics"]) => {
+            // refreshed at scrape time so the family exists (and is
+            // correct) even before any session has run a step
+            metrics.gauge_set(
+                "gwclip_sessions",
+                "Sessions resident in the daemon registry.",
+                "",
+                registry.lock().unwrap().len() as f64,
+            );
+            conn.respond_text(200, "text/plain; version=0.0.4", &metrics.render())
+        }
         ("GET", ["healthz"]) => {
             let mut m = BTreeMap::new();
             m.insert("ok".to_string(), Json::Bool(true));
@@ -480,7 +633,7 @@ fn handle(
             let list: Vec<Json> = entries.iter().map(|e| e.status_json()).collect();
             conn.respond_json(200, &Json::Arr(list))
         }
-        ("POST", ["sessions"]) => submit(conn, req, registry, opts),
+        ("POST", ["sessions"]) => submit(conn, req, registry, opts, metrics),
         ("GET", [s, name]) if *s == "sessions" => match get_entry(registry, name) {
             Some(e) => conn.respond_json(200, &e.status_json()),
             None => conn.respond_error(404, &format!("no session named {name:?}")),
@@ -488,6 +641,12 @@ fn handle(
         ("GET", [s, name, ev]) if *s == "sessions" && *ev == "events" => {
             match get_entry(registry, name) {
                 Some(e) => stream_events(conn, req, &e),
+                None => conn.respond_error(404, &format!("no session named {name:?}")),
+            }
+        }
+        ("GET", [s, name, ph]) if *s == "sessions" && *ph == "phases" => {
+            match get_entry(registry, name) {
+                Some(e) => conn.respond_json(200, &e.phases_json()),
                 None => conn.respond_error(404, &format!("no session named {name:?}")),
             }
         }
@@ -525,7 +684,7 @@ fn handle(
             m.insert("ok".to_string(), Json::Bool(true));
             conn.respond_json(200, &Json::Obj(m))
         }
-        (_, ["healthz" | "sessions" | "shutdown", ..]) => {
+        (_, ["healthz" | "sessions" | "shutdown" | "metrics", ..]) => {
             conn.respond_error(405, &format!("{} not allowed on {}", req.method, req.path))
         }
         _ => conn.respond_error(404, &format!("no route for {} {}", req.method, req.path)),
@@ -537,6 +696,7 @@ fn submit(
     req: &Request,
     registry: &Registry,
     opts: &Arc<ServeOpts>,
+    metrics: &Arc<Metrics>,
 ) -> Result<()> {
     let body = match Json::parse(&req.body) {
         Ok(j) => j,
@@ -604,7 +764,7 @@ fn submit(
     sc.insert("snapshot_every".to_string(), Json::Num(every as f64));
     fsio::write_atomic(&sdir.join("serve.json"), Json::Obj(sc).render().as_bytes())?;
 
-    spawn_runner(entry, Arc::clone(opts));
+    spawn_runner(entry, Arc::clone(opts), Arc::clone(metrics));
 
     let mut m = BTreeMap::new();
     m.insert("name".to_string(), Json::Str(name));
@@ -885,6 +1045,57 @@ mod tests {
         let (code, _) = req(addr, "GET", "/sessions/gone", "");
         assert_eq!(code, 404);
         assert!(!state.join("gone").exists(), "state dir must be removed");
+        shutdown(addr);
+        std::fs::remove_dir_all(state).ok();
+    }
+
+    #[test]
+    fn metrics_endpoint_exposes_prometheus_text() {
+        let (_d, addr, state) = start("metrics");
+        // the daemon-level gauge renders even with zero sessions, so an
+        // artifact-free scrape is never empty
+        let (code, body) = req(addr, "GET", "/metrics", "");
+        assert_eq!(code, 200);
+        assert!(body.contains("# HELP gwclip_sessions "), "{body}");
+        assert!(body.contains("# TYPE gwclip_sessions gauge\n"), "{body}");
+        assert!(body.contains("gwclip_sessions 0\n"), "{body}");
+        // exactly one HELP line per family
+        assert_eq!(body.matches("# HELP gwclip_sessions ").count(), 1);
+        // wrong method is 405 (named prefix), not the 404 catch-all
+        let (code, _) = req(addr, "POST", "/metrics", "");
+        assert_eq!(code, 405);
+        // the gauge tracks the registry at scrape time
+        let submit =
+            format!("{{\"name\":\"m1\",\"spec\":{}}}", Json::Str(SPEC.to_string()).render());
+        let (code, _) = req(addr, "POST", "/sessions", &submit);
+        assert_eq!(code, 201);
+        let (_, body) = req(addr, "GET", "/metrics", "");
+        assert!(body.contains("gwclip_sessions 1\n"), "{body}");
+        shutdown(addr);
+        std::fs::remove_dir_all(state).ok();
+    }
+
+    #[test]
+    fn phases_endpoint_reports_full_taxonomy() {
+        let (_d, addr, state) = start("phases");
+        let (code, _) = req(addr, "GET", "/sessions/ghost/phases", "");
+        assert_eq!(code, 404);
+        let submit =
+            format!("{{\"name\":\"p1\",\"spec\":{}}}", Json::Str(SPEC.to_string()).render());
+        let (code, _) = req(addr, "POST", "/sessions", &submit);
+        assert_eq!(code, 201);
+        // even a session that never stepped (build fails: no artifacts)
+        // answers with every phase of the taxonomy, zeroed
+        let (code, body) = req(addr, "GET", "/sessions/p1/phases", "");
+        assert_eq!(code, 200, "{body}");
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("name").unwrap().str().unwrap(), "p1");
+        let phases = j.get("phase_secs").unwrap();
+        for ph in crate::obs::PhaseSecs::NAMES {
+            assert!(phases.opt(ph).is_some(), "missing phase {ph}: {body}");
+        }
+        assert!(j.opt("collect_wall_secs").is_some(), "{body}");
+        assert!(j.opt("collect_busy_ratio").is_some(), "{body}");
         shutdown(addr);
         std::fs::remove_dir_all(state).ok();
     }

@@ -73,6 +73,12 @@ pub(crate) struct UnitCollected {
     /// wall seconds the task spent executing — measured by the loop's
     /// task runner, not the backend; feeds the measured StepEvent columns
     pub busy_secs: f64,
+    /// when the task runner started this task (observability only —
+    /// becomes a per-unit collect span when tracing is enabled)
+    pub task_t0: Option<std::time::Instant>,
+    /// hashed OS-thread id the task ran on (observability only — keys
+    /// the per-thread collect track in the Chrome trace export)
+    pub task_thread: u64,
     /// per-(stage, micro, phase) op durations (pipeline-style units)
     pub durations: HashMap<Op, f64>,
     /// raw per-example norms when the backend is asked to keep them
@@ -93,6 +99,8 @@ impl UnitCollected {
             syncs: 0,
             bwd_secs: 0.0,
             busy_secs: 0.0,
+            task_t0: None,
+            task_thread: 0,
             durations: HashMap::new(),
             norms: Vec::new(),
         }

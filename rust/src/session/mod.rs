@@ -121,12 +121,24 @@ pub struct StepEvent {
     /// (add/remove one user and every example they contribute);
     /// `"example"` for non-private runs, where no guarantee is claimed
     pub unit: &'static str,
+    /// measured wall seconds per DP phase (deal, collect, noise, merge,
+    /// normalize, apply, quantile) — observational timing only, always
+    /// populated whether or not span tracing is enabled
+    pub phase: crate::obs::PhaseSecs,
+    /// privacy spent through this step: (eps, delta)-composition over
+    /// the releases made so far, computed from already-released
+    /// accountant values (pure post-processing — no new query). `None`
+    /// for non-private runs
+    pub eps_spent: Option<f64>,
 }
 
 impl StepEvent {
     /// The event as a JSON object (the serve daemon's ndjson event
     /// stream). Numbers render through Rust's shortest-round-trip f64
-    /// formatting, so finite values parse back to equal floats.
+    /// formatting, so finite values parse back to equal floats. EVERY
+    /// struct field is serialized — the key set is pinned by
+    /// `step_event_json_carries_every_field`, so a field added here
+    /// without a key (or vice versa) fails the suite.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
         let nums = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
@@ -138,11 +150,27 @@ impl StepEvent {
         m.insert("mean_norms".to_string(), nums(&self.mean_norms));
         m.insert("host_secs".to_string(), Json::Num(self.host_secs));
         m.insert("sim_secs".to_string(), Json::Num(self.sim_secs));
+        m.insert("sim_overlap_secs".to_string(), Json::Num(self.sim_overlap_secs));
+        m.insert("sim_barrier_secs".to_string(), Json::Num(self.sim_barrier_secs));
+        m.insert("collect_wall_secs".to_string(), Json::Num(self.collect_wall_secs));
+        m.insert("collect_busy_secs".to_string(), Json::Num(self.collect_busy_secs));
         m.insert("threads".to_string(), Json::Num(self.threads as f64));
         m.insert("syncs".to_string(), Json::Num(self.syncs as f64));
         m.insert("calls".to_string(), Json::Num(self.calls as f64));
         m.insert("truncated".to_string(), Json::Num(self.truncated as f64));
         m.insert("unit".to_string(), Json::Str(self.unit.to_string()));
+        let mut ph = std::collections::BTreeMap::new();
+        for (name, v) in self.phase.iter() {
+            ph.insert(name.to_string(), Json::Num(v));
+        }
+        m.insert("phase_secs".to_string(), Json::Obj(ph));
+        m.insert(
+            "eps_spent".to_string(),
+            match self.eps_spent {
+                Some(e) => Json::Num(e),
+                None => Json::Null,
+            },
+        );
         Json::Obj(m)
     }
 
@@ -336,6 +364,14 @@ impl<'r> SessionBuilder<'r> {
     /// Build against a caller-supplied dataset of `n_data` examples (the
     /// sampling rate and step count depend on it).
     pub fn build(self, n_data: usize) -> Result<Session<'r>> {
+        let mut sess = self.build_inner(n_data)?;
+        // reporting-only: lets the step loop emit eps_spent per event
+        // without re-deriving the schedule
+        sess.steploop.planned_steps = sess.total_steps;
+        Ok(sess)
+    }
+
+    fn build_inner(self, n_data: usize) -> Result<Session<'r>> {
         let SessionBuilder { runtime, spec } = self;
         spec.validate().context("invalid run spec")?;
         let threads = spec.resolved_threads();
@@ -1143,6 +1179,31 @@ impl<'r> Session<'r> {
         self.steploop.threads = n.max(1);
     }
 
+    /// Enable per-phase span tracing ([`crate::obs::trace`]). Tracing is
+    /// contractually bitwise-neutral: spans record wall-clock only and
+    /// never touch any RNG stream (the trace-on-vs-off parity pins).
+    /// Idempotent — an already-attached tracer keeps its spans.
+    pub fn enable_trace(&mut self) {
+        if self.steploop.trace.is_none() {
+            self.steploop.trace = Some(crate::obs::Tracer::new());
+        }
+    }
+
+    /// The attached span recorder, if [`Session::enable_trace`] ran.
+    pub fn tracer(&self) -> Option<&crate::obs::Tracer> {
+        self.steploop.trace.as_ref()
+    }
+
+    /// Export the recorded spans as Chrome trace-event JSON (load in
+    /// `chrome://tracing` or Perfetto). Errors if tracing was never
+    /// enabled — an empty trace would silently hide the mistake.
+    pub fn write_trace(&self, path: &std::path::Path) -> Result<()> {
+        match &self.steploop.trace {
+            Some(t) => t.write_chrome(path),
+            None => bail!("tracing was not enabled on this session (--trace-out sets it up)"),
+        }
+    }
+
     /// Privacy spent so far: (eps, delta)-composition over the releases
     /// made in the first `steps_done` steps, at the plan's calibrated
     /// sigma. For Poisson-sampled backends `plan.steps == total_steps`
@@ -1151,19 +1212,7 @@ impl<'r> Session<'r> {
     /// the spent fraction is scaled accordingly (rounded up — never
     /// under-reported). `None` for non-private runs.
     pub fn epsilon_spent(&self) -> Option<f64> {
-        let p = self.plan()?;
-        let done = self.steploop.steps_done.min(self.total_steps);
-        let released = if self.total_steps == 0 || done == 0 {
-            0
-        } else {
-            let num = p.steps as u128 * done as u128;
-            let den = self.total_steps as u128;
-            ((num + den - 1) / den) as u64
-        };
-        if released == 0 {
-            return Some(0.0);
-        }
-        Some(crate::coordinator::accountant::epsilon_for(p.q, p.sigma_base, released, p.delta).0)
+        epsilon_spent_at(self.plan(), self.steploop.steps_done, self.total_steps)
     }
 
     /// A compact bitwise state certificate: step counter, an FNV-1a-64
@@ -1370,6 +1419,33 @@ impl<'r> Session<'r> {
     }
 }
 
+/// Privacy spent after `steps_done` of `total_steps` planned steps:
+/// (eps, delta)-composition over the releases made so far at the plan's
+/// calibrated sigma — the body behind [`Session::epsilon_spent`], shared
+/// with the step loop's per-event `eps_spent` field. Pure
+/// post-processing of already-released values; the released count is
+/// rounded up so privacy is never under-reported. `None` without a plan
+/// (non-private runs).
+pub(crate) fn epsilon_spent_at(
+    plan: Option<PrivacyPlan>,
+    steps_done: u64,
+    total_steps: u64,
+) -> Option<f64> {
+    let p = plan?;
+    let done = steps_done.min(total_steps);
+    let released = if total_steps == 0 || done == 0 {
+        0
+    } else {
+        let num = p.steps as u128 * done as u128;
+        let den = total_steps as u128;
+        ((num + den - 1) / den) as u64
+    };
+    if released == 0 {
+        return Some(0.0);
+    }
+    Some(crate::coordinator::accountant::epsilon_for(p.q, p.sigma_base, released, p.delta).0)
+}
+
 /// The monomorphized training loop behind [`Session::run`]. Sequential
 /// sessions step straight through; threaded sessions (`threads > 1`)
 /// deal one draw ahead on the dedicated draw stream and feed the next
@@ -1423,4 +1499,110 @@ fn run_loop<B: steploop::BackendStep>(
         }
         Ok(events)
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::PhaseSecs;
+
+    fn event() -> StepEvent {
+        StepEvent {
+            step: 3,
+            loss: 1.5,
+            batch_size: 8,
+            clip_frac: vec![0.25],
+            mean_norms: vec![0.5],
+            host_secs: 1.0,
+            sim_secs: 2.0,
+            sim_overlap_secs: 3.0,
+            sim_barrier_secs: 4.0,
+            collect_wall_secs: 5.0,
+            collect_busy_secs: 6.0,
+            threads: 2,
+            syncs: 1,
+            calls: 4,
+            truncated: 7,
+            unit: "example",
+            phase: PhaseSecs { deal: 0.125, collect: 5.0, ..Default::default() },
+            eps_spent: Some(1.25),
+        }
+    }
+
+    #[test]
+    fn step_event_json_carries_every_field() {
+        // the pin: this sorted key set IS the ndjson schema the daemon
+        // streams; adding a StepEvent field without serializing it (the
+        // old sim_overlap/sim_barrier/collect_wall/collect_busy bug)
+        // breaks this assertion
+        let j = event().to_json();
+        let keys: Vec<&str> = j.obj().unwrap().keys().map(|s| s.as_str()).collect();
+        assert_eq!(
+            keys,
+            vec![
+                "batch_size",
+                "calls",
+                "clip_frac",
+                "collect_busy_secs",
+                "collect_wall_secs",
+                "eps_spent",
+                "host_secs",
+                "loss",
+                "mean_norms",
+                "phase_secs",
+                "sim_barrier_secs",
+                "sim_overlap_secs",
+                "sim_secs",
+                "step",
+                "syncs",
+                "threads",
+                "truncated",
+                "unit",
+            ]
+        );
+        // the once-dropped fields round-trip with their values
+        assert_eq!(j.get("sim_overlap_secs").unwrap().f64().unwrap(), 3.0);
+        assert_eq!(j.get("sim_barrier_secs").unwrap().f64().unwrap(), 4.0);
+        assert_eq!(j.get("collect_wall_secs").unwrap().f64().unwrap(), 5.0);
+        assert_eq!(j.get("collect_busy_secs").unwrap().f64().unwrap(), 6.0);
+        assert_eq!(j.get("eps_spent").unwrap().f64().unwrap(), 1.25);
+        let ph = j.get("phase_secs").unwrap();
+        let mut names: Vec<&'static str> = PhaseSecs::NAMES.to_vec();
+        names.sort_unstable();
+        let got: Vec<&str> = ph.obj().unwrap().keys().map(|s| s.as_str()).collect();
+        assert_eq!(got, names);
+        assert_eq!(ph.get("deal").unwrap().f64().unwrap(), 0.125);
+    }
+
+    #[test]
+    fn step_event_json_null_eps_for_nonprivate() {
+        let ev = StepEvent { eps_spent: None, ..event() };
+        let j = ev.to_json();
+        assert_eq!(j.get("eps_spent").unwrap(), &crate::util::json::Json::Null);
+        // and the key is still present (the schema does not shrink)
+        assert!(j.obj().unwrap().contains_key("eps_spent"));
+    }
+
+    #[test]
+    fn epsilon_spent_at_handles_edges() {
+        assert_eq!(epsilon_spent_at(None, 5, 10), None, "non-private: no plan");
+        let plan = PrivacyPlan {
+            epsilon: 3.0,
+            delta: 1e-5,
+            q: 0.1,
+            steps: 100,
+            unit: crate::coordinator::accountant::PrivacyUnit::Example,
+            sigma_base: 2.0,
+            sigma_grad: 2.0,
+            sigma_quantile: 0.0,
+            quantile_fraction: 0.0,
+        };
+        assert_eq!(epsilon_spent_at(Some(plan), 0, 100), Some(0.0));
+        assert_eq!(epsilon_spent_at(Some(plan), 0, 0), Some(0.0));
+        let half = epsilon_spent_at(Some(plan), 50, 100).unwrap();
+        let full = epsilon_spent_at(Some(plan), 100, 100).unwrap();
+        assert!(half > 0.0 && half < full, "spending is monotone: {half} vs {full}");
+        // overshoot clamps to the planned total
+        assert_eq!(epsilon_spent_at(Some(plan), 150, 100), Some(full));
+    }
 }

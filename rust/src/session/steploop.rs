@@ -49,12 +49,16 @@
 //! per-group std — and U = 1 degenerates to the full std, which is what
 //! keeps the 1-worker / 1-replica parity pins bitwise.
 
+use std::collections::hash_map::DefaultHasher;
+use std::collections::VecDeque;
+use std::hash::{Hash, Hasher};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::coordinator::noise::{add_noise, Rng};
 use crate::data::Dataset;
+use crate::obs::{PhaseSecs, Span, Tracer};
 
 use super::core::DpCore;
 use super::grad::{Collected, GradUnit, Merged, StepTiming, UnitCollected};
@@ -129,11 +133,17 @@ pub(crate) trait BackendStep {
 }
 
 /// Wrap a task with the runner's busy-clock: `busy_secs` is wall time the
-/// task spent executing, summed into the measured StepEvent columns.
+/// task spent executing, summed into the measured StepEvent columns. The
+/// start instant and (hashed) executing-thread id ride along for the
+/// tracer's per-unit collect spans — wall-clock bookkeeping only, no RNG.
 fn run_timed(task: UnitTask<'_>) -> Result<UnitCollected> {
     let t0 = Instant::now();
     task().map(|mut p| {
         p.busy_secs = t0.elapsed().as_secs_f64();
+        p.task_t0 = Some(t0);
+        let mut h = DefaultHasher::new();
+        std::thread::current().id().hash(&mut h);
+        p.task_thread = h.finish();
         p
     })
 }
@@ -196,6 +206,20 @@ pub struct StepLoop {
     /// identical, but sequential keeps single-threaded determinism
     /// trivially auditable)
     pub threads: usize,
+    /// per-phase span recorder (`None` = tracing disabled, the
+    /// default). Strictly observational: spans record wall-clock only,
+    /// never touch any RNG stream, and are pushed on the main thread —
+    /// a traced run is bitwise identical to an untraced one (see
+    /// [`crate::obs`])
+    pub trace: Option<Tracer>,
+    /// total steps this run plans to take (0 = unknown): the
+    /// denominator of the per-step `eps_spent` release fraction. Set by
+    /// the session builder; reporting-only
+    pub planned_steps: u64,
+    /// durations of dealt-but-unconsumed draws (FIFO): the prefetching
+    /// loader deals step t+1 during step t, so each deal's wall time is
+    /// queued here and popped by the step that consumes the draw
+    deal_secs: VecDeque<f64>,
 }
 
 impl StepLoop {
@@ -205,14 +229,32 @@ impl StepLoop {
 
     pub fn with_threads(mut core: DpCore, threads: usize) -> Self {
         let draw_rng = core.rng.split();
-        StepLoop { core, draw_rng, steps_done: 0, threads: threads.max(1) }
+        StepLoop {
+            core,
+            draw_rng,
+            steps_done: 0,
+            threads: threads.max(1),
+            trace: None,
+            planned_steps: 0,
+            deal_secs: VecDeque::new(),
+        }
     }
 
     /// Deal the next step's draw (consumes only the draw stream). Safe to
     /// run ahead of [`StepLoop::step_dealt`] for the current step — the
     /// prefetching loader uses this one-step lookahead.
     pub(crate) fn deal<B: BackendStep>(&mut self, backend: &mut B, n_data: usize) -> B::Slices {
-        backend.deal(n_data, &mut self.draw_rng)
+        let t0 = Instant::now();
+        let slices = backend.deal(n_data, &mut self.draw_rng);
+        let t1 = Instant::now();
+        // attribute this deal to the step that will CONSUME the draw:
+        // under the prefetch lookahead that is one past the queue depth
+        let step = self.steps_done + self.deal_secs.len() as u64 + 1;
+        if let Some(tr) = self.trace.as_mut() {
+            tr.record("deal", step, t0, t1);
+        }
+        self.deal_secs.push_back(t1.saturating_duration_since(t0).as_secs_f64());
+        slices
     }
 
     /// One full DP step of `backend` over `data`; emits the unified
@@ -235,6 +277,9 @@ impl StepLoop {
         slices: &B::Slices,
     ) -> Result<StepEvent> {
         let host_t0 = Instant::now();
+        // deal time of the draw this step consumes (queued by `deal`,
+        // possibly one step ago under the prefetch lookahead)
+        let deal_secs = self.deal_secs.pop_front().unwrap_or(0.0);
 
         // 2. collect: pre-noise gradients against the current thresholds,
         // one Send task per unit, fanned across real threads when asked
@@ -242,17 +287,26 @@ impl StepLoop {
         let collect_t0 = Instant::now();
         let tasks = backend.collect_tasks(data, slices, &thresholds);
         let results = run_buckets(tasks, self.threads, run_timed);
-        let collect_wall_secs = collect_t0.elapsed().as_secs_f64();
+        let collect_t1 = Instant::now();
+        let collect_wall_secs = collect_t1.saturating_duration_since(collect_t0).as_secs_f64();
         let mut parts = Vec::with_capacity(results.len());
         for r in results {
             parts.push(r?);
         }
         let collect_busy_secs: f64 = parts.iter().map(|p| p.busy_secs).sum();
+        // per-unit span metadata, lifted out before finish_collect
+        // consumes the parts (tracing only)
+        let unit_meta: Vec<(Option<Instant>, f64, u64)> = if self.trace.is_some() {
+            parts.iter().map(|p| (p.task_t0, p.busy_secs, p.task_thread)).collect()
+        } else {
+            Vec::new()
+        };
         let mut col = backend.finish_collect(slices, parts)?;
 
         // 3. noise: each unit adds its local share sigma_g/sqrt(U) on its
         // OWN pre-split stream, split from the core RNG in unit order.
         // All-zero stds (non-private) split nothing and consume nothing.
+        let noise_t0 = Instant::now();
         let stds = self.core.noise_stds();
         if stds.iter().any(|&s| s > 0.0) {
             // unit boundary: child streams must derive from a spare-free
@@ -278,9 +332,11 @@ impl StepLoop {
 
         // 4. merge: cross-unit reduction (identity for single-unit
         // backends) + the overlap-vs-barrier latency model
+        let merge_t0 = Instant::now();
         let mut merged = backend.merge(col.units, &col.timing);
 
         // 5. scale: one normalization of the merged sum
+        let norm_t0 = Instant::now();
         let scale = backend.update_scale(col.live);
         if scale != 1.0 {
             for t in merged.tensors.iter_mut() {
@@ -291,10 +347,12 @@ impl StepLoop {
         }
 
         // 6. apply: one update, broadcast to every replica by the backend
+        let apply_t0 = Instant::now();
         backend.apply(&merged.tensors);
 
         // 7. quantile: ONE private release over all threshold groups
         // (adaptive cores are private by construction; fixed cores no-op)
+        let quantile_t0 = Instant::now();
         if self.core.is_adaptive() {
             self.core.update_thresholds(&col.clip_counts);
             // phase boundary: the release's gaussians may buffer a
@@ -302,9 +360,47 @@ impl StepLoop {
             // derive from a well-defined position
             self.core.rng.drain_spare();
         }
+        let quantile_t1 = Instant::now();
 
         // 8. emit
         self.steps_done += 1;
+        let step_no = self.steps_done;
+        let secs = |a: Instant, b: Instant| b.saturating_duration_since(a).as_secs_f64();
+        let phase = PhaseSecs {
+            deal: deal_secs,
+            collect: collect_wall_secs,
+            noise: secs(noise_t0, merge_t0),
+            merge: secs(merge_t0, norm_t0),
+            normalize: secs(norm_t0, apply_t0),
+            apply: secs(apply_t0, quantile_t0),
+            quantile: secs(quantile_t0, quantile_t1),
+        };
+        // spans land AFTER all DP work for the step: the tracer is pure
+        // wall-clock bookkeeping appended on the main thread
+        if let Some(tr) = self.trace.as_mut() {
+            tr.record("collect", step_no, collect_t0, collect_t1);
+            for (i, (t0, busy, thash)) in unit_meta.iter().enumerate() {
+                if let Some(t0) = t0 {
+                    let track = tr.track_for(*thash);
+                    let start_us = tr.us_since_epoch(*t0);
+                    tr.push(Span {
+                        name: "collect",
+                        start_us,
+                        dur_us: (busy * 1e6) as u64,
+                        step: step_no,
+                        track,
+                        unit: Some(i),
+                    });
+                }
+            }
+            tr.record("noise", step_no, noise_t0, merge_t0);
+            tr.record("merge", step_no, merge_t0, norm_t0);
+            tr.record("normalize", step_no, norm_t0, apply_t0);
+            tr.record("apply", step_no, apply_t0, quantile_t0);
+            tr.record("quantile", step_no, quantile_t0, quantile_t1);
+        }
+        let eps_spent =
+            super::epsilon_spent_at(self.core.plan, self.steps_done, self.planned_steps);
         let clip_frac: Vec<f64> = col
             .clip_denoms
             .iter()
@@ -330,6 +426,8 @@ impl StepLoop {
             calls: col.calls,
             truncated: col.truncated,
             unit: self.core.plan.map(|p| p.unit.token()).unwrap_or("example"),
+            phase,
+            eps_spent,
         })
     }
 }
@@ -634,6 +732,82 @@ mod tests {
             }
         }
         assert!(saw_empty, "sampler at rate 1e-9 never drew an empty batch?");
+    }
+
+    #[test]
+    fn steploop_tracing_is_bitwise_neutral_and_records_phase_spans() {
+        // same seed, tracer on vs off: applied updates, thresholds and
+        // post-run stream positions must be identical to the bit — the
+        // tracer only reads the wall clock. Spans must cover the full
+        // phase taxonomy with one collect span per unit per step.
+        let (units, k, seed, steps) = (2usize, 2usize, 33u64, 3u64);
+        let mut plain = StepLoop::new(core(k, seed));
+        let mut traced = StepLoop::new(core(k, seed));
+        traced.trace = Some(Tracer::new());
+        let mut b1 = stub(units, k);
+        let mut b2 = stub(units, k);
+        let data = NullData(64);
+        for _ in 0..steps {
+            let e1 = plain.step(&mut b1, &data).unwrap();
+            let e2 = traced.step(&mut b2, &data).unwrap();
+            assert_eq!(e1.loss.to_bits(), e2.loss.to_bits());
+            assert_eq!(e1.batch_size, e2.batch_size);
+            for (ta, tb) in b1.applied.iter().zip(&b2.applied) {
+                for (x, y) in ta.data.iter().zip(&tb.data) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "tracing changed the update");
+                }
+            }
+            assert_eq!(plain.core.thresholds(), traced.core.thresholds());
+            // every phase is timed on both loops (>= 0 wall seconds)
+            for (name, v) in e2.phase.iter() {
+                assert!(v >= 0.0, "phase {name} negative: {v}");
+            }
+            assert!(e2.phase.collect >= 0.0 && e1.phase.total() >= 0.0);
+        }
+        assert_eq!(plain.core.rng.stream_pos(), traced.core.rng.stream_pos());
+        assert_eq!(plain.draw_rng.stream_pos(), traced.draw_rng.stream_pos());
+
+        let tr = traced.trace.as_ref().unwrap();
+        // 7 main-track phase spans + one per-unit collect span, per step
+        assert_eq!(tr.len() as u64, steps * (7 + units as u64));
+        for step in 1..=steps {
+            let names: Vec<&str> =
+                tr.spans().filter(|s| s.step == step && s.unit.is_none()).map(|s| s.name).collect();
+            for want in PhaseSecs::NAMES {
+                assert!(names.contains(&want), "step {step} missing span {want}");
+            }
+            let unit_spans: Vec<usize> = tr
+                .spans()
+                .filter(|s| s.step == step && s.unit.is_some())
+                .map(|s| s.unit.unwrap())
+                .collect();
+            assert_eq!(unit_spans, vec![0, 1], "one collect span per unit, in unit order");
+        }
+        // the export renders and parses
+        let doc = tr.to_chrome_json();
+        assert!(doc.get("traceEvents").unwrap().arr().unwrap().len() > tr.len());
+    }
+
+    #[test]
+    fn steploop_traced_deal_ahead_attributes_deal_to_consuming_step() {
+        // the prefetch lookahead deals draw t+1 during step t: the deal
+        // span (and the PhaseSecs.deal attribution) must follow the draw
+        // to the step that consumes it, via the FIFO queue
+        let (units, k, seed) = (2usize, 2usize, 9u64);
+        let mut lp = StepLoop::new(core(k, seed));
+        lp.trace = Some(Tracer::new());
+        let mut b = stub(units, k);
+        let data = NullData(64);
+        let mut pending = lp.deal(&mut b, data.len());
+        for _ in 0..3 {
+            let slices = std::mem::replace(&mut pending, lp.deal(&mut b, data.len()));
+            lp.step_dealt(&mut b, &data, &slices).unwrap();
+        }
+        let tr = lp.trace.as_ref().unwrap();
+        let deal_steps: Vec<u64> =
+            tr.spans().filter(|s| s.name == "deal").map(|s| s.step).collect();
+        // 4 deals: steps 1..=3 consumed, step 4 dealt ahead and pending
+        assert_eq!(deal_steps, vec![1, 2, 3, 4]);
     }
 
     #[test]

@@ -193,6 +193,11 @@ pub struct BenchDiff {
     /// surfaced so the measured-vs-simulated trajectory is visible in CI
     /// logs, informational only, never gated
     pub measured: Vec<(String, f64, Option<f64>)>,
+    /// per-phase mean-seconds rows (names containing `"/phase-"`, e.g.
+    /// `step/phase-noise`) in the NEW trajectory as `(suite/name, new_s,
+    /// old_s)` — like `measured`, informational only: phase splits are
+    /// machine-dependent wall-clock, the `/step` totals are the gate
+    pub phases: Vec<(String, f64, Option<f64>)>,
 }
 
 /// List the `BENCH_<suite>.json` files in a directory (empty if absent).
@@ -235,6 +240,9 @@ pub fn diff_dirs(
             if name.contains("collect-wall") {
                 diff.measured.push((format!("{suite}/{name}"), *mean, None));
             }
+            if name.contains("/phase-") {
+                diff.phases.push((format!("{suite}/{name}"), *mean, None));
+            }
         }
         diff.additions.push(if suite.is_empty() {
             fname.clone()
@@ -251,17 +259,26 @@ pub fn diff_dirs(
         let (_, new_rows) = read_suite(&new_path)?;
         for (name, new_mean) in &new_rows {
             // new step-path rows inside a known suite are additions too
-            if name.contains("/step") && !old_rows.iter().any(|(n, _)| n == name) {
+            // (phase splits are carved out: they ride under /step names
+            // but report through `phases`, not the gate)
+            if name.contains("/step")
+                && !name.contains("/phase-")
+                && !old_rows.iter().any(|(n, _)| n == name)
+            {
                 diff.additions.push(format!("{suite}/{name}"));
             }
             if name.contains("collect-wall") {
                 let prior = old_rows.iter().find(|(n, _)| n == name).map(|(_, m)| *m);
                 diff.measured.push((format!("{suite}/{name}"), *new_mean, prior));
             }
+            if name.contains("/phase-") {
+                let prior = old_rows.iter().find(|(n, _)| n == name).map(|(_, m)| *m);
+                diff.phases.push((format!("{suite}/{name}"), *new_mean, prior));
+            }
             let Some((_, old_mean)) = old_rows.iter().find(|(n, _)| n == name) else {
                 continue;
             };
-            if !name.contains("/step") || *old_mean <= 0.0 {
+            if !name.contains("/step") || name.contains("/phase-") || *old_mean <= 0.0 {
                 continue;
             }
             diff.compared += 1;
@@ -338,6 +355,9 @@ mod tests {
             BenchResult { name: "y/step".into(), iters: 3, mean_s: 9.0, std_s: 0.0, min_s: 9.0 },
             // measured wall-clock rows are surfaced, never gated
             BenchResult::scalar("x/collect-wall", 0.9),
+            // per-phase splits likewise surface without gating, even
+            // when wildly slower than any prior
+            BenchResult::scalar("x/step/phase-noise", 0.8),
         ];
         write_json_to(old.join("BENCH_shared.json"), "shared", &shared_old).unwrap();
         write_json_to(new.join("BENCH_shared.json"), "shared", &shared_new).unwrap();
@@ -365,6 +385,24 @@ mod tests {
             d.measured.contains(&("federated/x/collect-wall".to_string(), 0.9, None)),
             "{:?}",
             d.measured
+        );
+        // phase rows: no prior in the shared suite (fresh), and never a
+        // regression even at 0.8 s vs nothing
+        assert!(
+            d.phases.contains(&("shared/x/step/phase-noise".to_string(), 0.8, None)),
+            "{:?}",
+            d.phases
+        );
+        assert!(
+            d.phases.contains(&("federated/x/step/phase-noise".to_string(), 0.8, None)),
+            "{:?}",
+            d.phases
+        );
+        assert_eq!(d.regressions.len(), 1, "phase rows must not gate");
+        assert!(
+            !d.additions.iter().any(|a| a.contains("/phase-")),
+            "phase rows are not step-gate additions: {:?}",
+            d.additions
         );
         std::fs::remove_dir_all(&base).ok();
     }

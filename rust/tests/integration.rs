@@ -1482,6 +1482,177 @@ fn threaded_collect_is_bitwise_identical_to_sequential_on_every_backend() {
     );
 }
 
+// ---------------------------------------------- tracing-on/off parity
+
+/// ISSUE 9 acceptance: enabling span tracing must be invisible to the
+/// computation. The tracer observes wall-clock time and already-released
+/// values only — it never draws from, splits, or reorders an RNG stream —
+/// so a traced run must be BITWISE identical to an untraced one: same
+/// per-step events (loss, draws, clip fractions, mean norms to the bit),
+/// same adaptive threshold trajectory, same final parameters, and the
+/// same post-run `Session::stream_pos()` on both streams.
+fn assert_trace_parity(mk: &dyn Fn() -> Session<'static>, data: &dyn Dataset, label: &str) {
+    let mut plain = mk();
+    let mut traced = mk();
+    // same thread count on both sides (2 exercises the per-unit fan-out
+    // spans); only the tracer differs
+    plain.steploop.threads = 2;
+    traced.steploop.threads = 2;
+    traced.enable_trace();
+    let ea = plain.run(data, 0).unwrap();
+    let eb = traced.run(data, 0).unwrap();
+    assert_eq!(ea.len(), eb.len(), "{label}: step counts");
+    for (a, b) in ea.iter().zip(&eb) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{label} step {}: loss", a.step);
+        assert_eq!(a.batch_size, b.batch_size, "{label} step {}: draw", a.step);
+        assert_eq!(a.truncated, b.truncated, "{label} step {}", a.step);
+        for (x, y) in a.clip_frac.iter().zip(&b.clip_frac) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label} step {}: clip_frac", a.step);
+        }
+        for (x, y) in a.mean_norms.iter().zip(&b.mean_norms) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label} step {}: mean_norms", a.step);
+        }
+        // the per-phase timing rides on BOTH paths (always-on), and the
+        // privacy gauge is pure post-processing so it matches exactly
+        assert!(a.phase.total() >= 0.0 && b.phase.total() >= 0.0, "{label}");
+        assert_eq!(a.eps_spent.is_some(), b.eps_spent.is_some(), "{label}");
+        if let (Some(x), Some(y)) = (a.eps_spent, b.eps_spent) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label} step {}: eps_spent", a.step);
+        }
+    }
+    assert_eq!(plain.thresholds(), traced.thresholds(), "{label}: threshold trajectories");
+    let pa = plain.param_map();
+    let pb = traced.param_map();
+    assert_eq!(pa.len(), pb.len(), "{label}");
+    for (name, ta) in &pa {
+        assert_eq!(ta.data, pb[name].data, "{label}: parameter {name} diverged");
+    }
+    assert_eq!(plain.stream_pos(), traced.stream_pos(), "{label}: RNG stream positions");
+    // and the traced side really did record: one span per phase per step
+    // (plus per-unit collect spans), exported as a parsable Chrome doc
+    let tr = traced.tracer().expect("tracing was enabled");
+    assert!(tr.len() >= eb.len() * 7, "{label}: missing phase spans ({} spans)", tr.len());
+    let doc = tr.to_chrome_json().render();
+    let parsed = gwclip::util::json::Json::parse(&doc).unwrap();
+    let events = parsed.get("traceEvents").unwrap().arr().unwrap();
+    assert!(events.len() > tr.len(), "{label}: chrome doc lost events");
+}
+
+#[test]
+fn tracing_enabled_run_is_bitwise_identical_on_every_backend() {
+    let mixture = tiny_mixture(256, 17);
+    let corpus = {
+        let cfg = rt().manifest.config("lm_tiny_pipe").unwrap().clone();
+        MarkovCorpus::new(64, cfg.hyper.seq, cfg.hyper.vocab, 4, 3)
+    };
+
+    // single-device: degenerate single-unit fan-out + prefetch loader
+    assert_trace_parity(
+        &|| {
+            Session::builder(rt(), "resmlp_tiny")
+                .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+                .clip(ClipPolicy {
+                    clip_init: 0.5,
+                    ..ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive)
+                })
+                .optim(OptimSpec::sgd(0.1))
+                .epochs(0.25)
+                .seed(61)
+                .build(256)
+                .unwrap()
+        },
+        &mixture,
+        "single",
+    );
+
+    // sharded: 3 worker units -> per-unit collect spans on real threads
+    assert_trace_parity(
+        &|| {
+            Session::builder(rt(), "resmlp_tiny")
+                .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+                .clip(ClipPolicy {
+                    clip_init: 0.5,
+                    target_q: 0.6,
+                    ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive)
+                })
+                .optim(OptimSpec::sgd(0.1))
+                .epochs(0.25)
+                .seed(62)
+                .shard(ShardSpec { workers: 3, fanout: 2, ..Default::default() })
+                .build(256)
+                .unwrap()
+        },
+        &mixture,
+        "sharded",
+    );
+
+    // pipeline: one wavefront unit over 4 stages
+    assert_trace_parity(
+        &|| {
+            Session::builder(rt(), "lm_tiny_pipe")
+                .privacy(PrivacySpec { epsilon: 4.0, delta: 1e-5, quantile_r: 0.01 })
+                .clip(ClipPolicy {
+                    clip_init: 0.5,
+                    ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive)
+                })
+                .optim(OptimSpec::sgd(0.05))
+                .epochs(0.25)
+                .n_micro(2)
+                .seed(63)
+                .build(64)
+                .unwrap()
+        },
+        &corpus,
+        "pipeline",
+    );
+
+    // hybrid: 2 replica units x pipeline stages
+    assert_trace_parity(
+        &|| {
+            Session::builder(rt(), "lm_tiny_pipe")
+                .privacy(PrivacySpec { epsilon: 4.0, delta: 1e-5, quantile_r: 0.01 })
+                .clip(ClipPolicy {
+                    clip_init: 0.5,
+                    ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive)
+                })
+                .optim(OptimSpec::sgd(0.05))
+                .epochs(0.25)
+                .n_micro(2)
+                .seed(64)
+                .hybrid(HybridSpec { replicas: 2, fanout: 2, ..Default::default() })
+                .build(64)
+                .unwrap()
+        },
+        &corpus,
+        "hybrid",
+    );
+
+    // federated: slot units over Poisson-sampled users (user-level DP)
+    assert_trace_parity(
+        &|| {
+            Session::builder(rt(), "resmlp_tiny")
+                .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+                .clip(ClipPolicy {
+                    clip_init: 0.5,
+                    target_q: 0.6,
+                    ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive)
+                })
+                .optim(OptimSpec::sgd(0.1))
+                .epochs(0.25)
+                .seed(65)
+                .federated(FederatedSpec {
+                    population: 256,
+                    user_rate: 12.0 / 256.0,
+                    ..Default::default()
+                })
+                .build(256)
+                .unwrap()
+        },
+        &mixture,
+        "federated",
+    );
+}
+
 /// The spec/CLI face of the threads knob: it round-trips through
 /// TOML/JSON, defaults to sequential, and `GWCLIP_THREADS` wins at
 /// session-build time (resolved, not stored).

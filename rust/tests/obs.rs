@@ -1,0 +1,104 @@
+//! Public-surface tests for the observability layer (`gwclip::obs`).
+//! Deliberately artifact-free — no `Runtime`, no AOT artifacts — so they
+//! ride in the CI's artifact-free test command next to `properties` /
+//! `session_spec`.
+
+use std::time::Duration;
+
+use gwclip::obs::{Histogram, PhaseSecs, Registry, Span, Tracer};
+use gwclip::util::json::Json;
+
+#[test]
+fn tracer_chrome_export_round_trips_through_a_file() {
+    let mut tr = Tracer::new();
+    let e = tr.epoch();
+    tr.record("deal", 1, e, e + Duration::from_micros(250));
+    tr.record("noise", 1, e + Duration::from_micros(250), e + Duration::from_micros(300));
+    let track = tr.track_for(0xfeed);
+    tr.push(Span { name: "collect", start_us: 10, dur_us: 120, step: 1, track, unit: Some(0) });
+
+    let dir = std::env::temp_dir().join(format!("gwclip_obs_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+    tr.write_chrome(&path).unwrap();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = Json::parse(&text).unwrap();
+    assert_eq!(j.get("displayTimeUnit").unwrap().str().unwrap(), "ms");
+    let events = j.get("traceEvents").unwrap().arr().unwrap();
+    // 2 thread_name metadata rows (main + worker track) + 3 spans
+    let phases: Vec<&str> =
+        events.iter().filter_map(|ev| ev.get("ph").ok().and_then(|p| p.str().ok())).collect();
+    assert_eq!(phases.iter().filter(|p| **p == "M").count(), 2, "{text}");
+    assert_eq!(phases.iter().filter(|p| **p == "X").count(), 3, "{text}");
+    // the per-unit collect span names its unit so trace viewers show
+    // which participant ran on which thread
+    let names: Vec<&str> =
+        events.iter().filter_map(|ev| ev.get("name").ok().and_then(|p| p.str().ok())).collect();
+    assert!(names.contains(&"collect/unit0"), "{names:?}");
+    assert!(names.contains(&"deal"), "{names:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn ring_buffer_keeps_the_newest_spans() {
+    let mut tr = Tracer::with_capacity(8);
+    let e = tr.epoch();
+    for step in 1..=20u64 {
+        tr.record("apply", step, e, e + Duration::from_micros(step));
+    }
+    assert_eq!(tr.len(), 8);
+    assert_eq!(tr.dropped(), 12);
+    let steps: Vec<u64> = tr.spans().map(|s| s.step).collect();
+    assert_eq!(steps, (13..=20).collect::<Vec<_>>(), "oldest spans must be evicted in order");
+}
+
+#[test]
+fn registry_drives_quantiles_and_exposition_from_outside_the_crate() {
+    let r = Registry::new();
+    for i in 1..=100u64 {
+        r.observe("gwclip_step_seconds", "Step latency.", "session=\"t\"", i as f64 * 1e-4);
+    }
+    let p50 = r.hist_quantile("gwclip_step_seconds", "session=\"t\"", 0.50).unwrap();
+    let p95 = r.hist_quantile("gwclip_step_seconds", "session=\"t\"", 0.95).unwrap();
+    let p99 = r.hist_quantile("gwclip_step_seconds", "session=\"t\"", 0.99).unwrap();
+    assert!(p50 <= p95 && p95 <= p99, "p50={p50} p95={p95} p99={p99}");
+    r.counter_add("gwclip_steps_total", "Steps.", "session=\"t\"", 100.0);
+    let text = r.render();
+    assert!(text.contains("# TYPE gwclip_step_seconds histogram\n"), "{text}");
+    assert!(text.contains("gwclip_steps_total{session=\"t\"} 100\n"), "{text}");
+    assert!(text.contains("gwclip_step_seconds_count{session=\"t\"} 100\n"), "{text}");
+}
+
+#[test]
+fn histogram_merge_matches_concatenation_via_public_api() {
+    let mut a = Histogram::new();
+    let mut b = Histogram::new();
+    let mut whole = Histogram::new();
+    for i in 0..200 {
+        let v = (i % 31) as f64 / 512.0; // dyadic: sums are exact in f64
+        if i % 2 == 0 {
+            a.observe(v);
+        } else {
+            b.observe(v);
+        }
+        whole.observe(v);
+    }
+    a.merge(&b);
+    assert_eq!(a, whole);
+}
+
+#[test]
+fn phase_taxonomy_is_stable() {
+    // docs, the /phases endpoint, the serve metric labels, and the
+    // bench-diff PHASE rows all key off these names — renaming one is a
+    // cross-layer breaking change, so pin the list
+    assert_eq!(
+        PhaseSecs::NAMES,
+        ["deal", "collect", "noise", "merge", "normalize", "apply", "quantile"]
+    );
+    let p = PhaseSecs { deal: 0.5, quantile: 0.25, ..Default::default() };
+    assert_eq!(p.total(), 0.75);
+    assert_eq!(p.get("deal"), Some(0.5));
+    assert_eq!(p.get("collect"), Some(0.0));
+}

@@ -5,12 +5,16 @@
 #
 # With AOT artifacts present (`make artifacts`) the script additionally
 # asserts the hard contract: the resumed run finishes bitwise identical
-# to an uninterrupted standalone `gwclip run` (same digest), and the
+# to an uninterrupted standalone `gwclip run` (same digest), the
 # restarted daemon's event stream continues the step numbering instead
-# of starting over. Without artifacts (CI) it degrades to the
-# API/restart-resilience checks — every session build fails loudly, but
-# submit validation, sidecar persistence and kill -9 recovery are all
-# still exercised for real.
+# of starting over, the finished run populates the session-labeled
+# /metrics families and /phases breakdown, and `gwclip run --trace-out`
+# writes loadable Chrome trace-event JSON. Without artifacts (CI) it
+# degrades to the API/restart-resilience checks plus the artifact-free
+# observability surface (/metrics parses, /phases serves the full phase
+# taxonomy) — every session build fails loudly, but submit validation,
+# sidecar persistence and kill -9 recovery are all still exercised for
+# real.
 #
 # Honors GWCLIP_THREADS (CI runs this twice: unset and =4) and
 # GWCLIP_BIN / GWCLIP_ARTIFACTS overrides.
@@ -167,6 +171,35 @@ if [ ! -f "$STATE/smoke/serve.json" ]; then
 fi
 expect 202 POST /sessions/smoke/snapshot
 
+# --- observability surface -------------------------------------------------
+# /metrics must always serve a well-formed Prometheus text exposition —
+# the daemon-level gwclip_sessions gauge exists even before any session
+# has stepped, so this half of the check is artifact-free
+expect 200 GET /metrics
+python3 - "$RESP" <<'PY' || fail "/metrics exposition malformed"
+import sys
+text = open(sys.argv[1]).read()
+helps = [l.split()[2] for l in text.splitlines() if l.startswith("# HELP ")]
+assert len(helps) == len(set(helps)), "duplicate HELP lines: %r" % sorted(helps)
+assert "gwclip_sessions" in helps, "missing gwclip_sessions family:\n" + text
+for l in text.splitlines():
+    if not l or l.startswith("#"):
+        continue
+    float(l.rpartition(" ")[2])  # every sample line must end in a number
+PY
+echo "serve_smoke: /metrics exposition parses"
+
+expect 404 GET /sessions/ghost/phases
+expect 200 GET /sessions/smoke/phases
+python3 - "$RESP" <<'PY' || fail "/phases breakdown malformed"
+import json, sys
+j = json.load(open(sys.argv[1]))
+want = {"deal", "collect", "noise", "merge", "normalize", "apply", "quantile"}
+assert set(j["phase_secs"]) == want, j
+assert "collect_busy_ratio" in j, j
+PY
+echo "serve_smoke: /sessions/N/phases reports the full phase taxonomy"
+
 # --- kill -9 the daemon mid-run, restart on the same state dir -------------
 if [ "$HAVE_ARTIFACTS" = 1 ]; then
     # let a few steps land so SIGKILL strikes mid-run with snapshots on
@@ -242,6 +275,39 @@ for line in sys.stdin:
         fail "resumed stream starts at step $FIRST (killed at step $KILL_STEP)"
     fi
     echo "serve_smoke: resumed at step $FIRST after kill at step $KILL_STEP; digests match"
+
+    # the finished run must have populated the session-labeled metric
+    # families (counters, the phase split, latency histograms, eps)
+    expect 200 GET /metrics
+    python3 - "$RESP" <<'PY' || fail "finished run left /metrics unpopulated"
+import sys
+text = open(sys.argv[1]).read()
+for fam in ("gwclip_steps_total", "gwclip_phase_seconds_total",
+            "gwclip_step_seconds_count", "gwclip_eps_spent"):
+    assert fam + '{session="smoke"' in text, "missing %s:\n%s" % (fam, text)
+PY
+    expect 200 GET /sessions/smoke/phases
+    python3 - "$RESP" <<'PY' || fail "finished run left /phases empty"
+import json, sys
+j = json.load(open(sys.argv[1]))
+assert j["steps"] > 0 and j["total_secs"] > 0, j
+PY
+    echo "serve_smoke: metric families + phase breakdown populated"
+
+    # --- Chrome trace export smoke -----------------------------------------
+    "$BIN" run --spec "$SPEC_FILE" --trace-out "$STATE/trace.json" \
+        >"$STATE/trace.log" 2>&1 ||
+        fail "traced run: $(tail -n 20 "$STATE/trace.log")"
+    python3 - "$STATE/trace.json" <<'PY' || fail "trace.json shape wrong"
+import json, sys
+j = json.load(open(sys.argv[1]))
+assert j["displayTimeUnit"] == "ms", sorted(j)
+ev = j["traceEvents"]
+assert ev, "empty traceEvents"
+assert any(e.get("ph") == "X" and e.get("name") == "noise" for e in ev), \
+    "no noise-phase span in %d events" % len(ev)
+PY
+    echo "serve_smoke: Chrome trace export OK"
 fi
 
 expect 200 POST /shutdown
