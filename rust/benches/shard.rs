@@ -10,20 +10,62 @@
 use gwclip::data::classif::MixtureImages;
 use gwclip::data::lm::MarkovCorpus;
 use gwclip::data::Dataset;
-use gwclip::runtime::Runtime;
+use gwclip::kernels::{KernelMode, Kernels};
+use gwclip::runtime::{Runtime, Tensor};
 use gwclip::session::{
     ClipMode, ClipPolicy, CompressKind, CompressSpec, GroupBy, OptimSpec, PrivacySpec, Session,
     ShardSpec,
 };
-use gwclip::util::bench::{bench, iters, smoke_skip, write_json, BenchResult};
+use gwclip::shard::reduce::tree_reduce_with;
+use gwclip::util::bench::{bench, iters, smoke, write_json, BenchResult};
+
+/// Per-mode tree-reduce fold rows on synthetic per-worker gradient sets.
+/// Pure host work — no runtime artifacts needed — so these publish a
+/// trajectory even on smoke CI hosts without the PJRT plugin. Both rows
+/// pay the same participant-clone cost inside the timed closure, so the
+/// scalar-vs-auto comparison isolates the fold itself.
+fn kernel_reduce_rows() -> Vec<BenchResult> {
+    const W: usize = 8; // workers
+    const D: usize = 250_000; // elements per worker gradient
+    let parts: Vec<Vec<Tensor>> = (0..W)
+        .map(|w| {
+            let data: Vec<f32> =
+                (0..D).map(|i| ((i * 31 + w * 7919) % 997) as f32 * 1e-3 - 0.498).collect();
+            vec![Tensor::from_vec(&[D], data).unwrap()]
+        })
+        .collect();
+    let mut rows = Vec::new();
+    for (tag, k) in [("scalar", Kernels::scalar()), ("auto", Kernels::for_mode(KernelMode::Auto))] {
+        let r = bench(&format!("shard/kernel-tree-reduce/{tag}"), 1, iters(10), || {
+            std::hint::black_box(tree_reduce_with(k, parts.clone(), 2));
+        });
+        println!("{}", r.report());
+        rows.push(r);
+    }
+    rows
+}
 
 fn main() -> anyhow::Result<()> {
+    println!("== tree-reduce kernel fold: 8 synthetic workers, fanout 2 ==");
+    let mut rows = kernel_reduce_rows();
+
     let rt = match Runtime::new(gwclip::artifact_dir()) {
         Ok(rt) => rt,
-        Err(e) => return smoke_skip("shard", e),
+        Err(e) => {
+            // smoke hosts without artifacts still publish the kernel rows
+            // (the legacy behavior wrote an empty suite file here)
+            if smoke() {
+                let path = write_json("shard", &rows)?;
+                println!(
+                    "[smoke] shard: artifacts unavailable ({e:#}); wrote kernel-only {}",
+                    path.display()
+                );
+                return Ok(());
+            }
+            return Err(e);
+        }
     };
     let data = MixtureImages::new(4096, 64, 10, 0);
-    let mut rows = Vec::new();
     let mut failed = false;
 
     println!("== sharded data-parallel: per-device clipping on resmlp, fanout 2 ==");

@@ -157,10 +157,14 @@ impl Allocation {
                 .map(|(c, &d)| c / (d.max(1) as f64).sqrt())
                 .collect(),
         };
+        // A zero threshold makes gamma_k = 0 under EqualBudget/Weighted,
+        // and 0/0 would poison S with NaN. A group clipped to C_k = 0
+        // contributes nothing to the release, so its sensitivity share is
+        // exactly 0 (and its std below is sigma * S * 0 = 0).
         let s2: f64 = thresholds
             .iter()
             .zip(&gammas)
-            .map(|(c, g)| (c / g) * (c / g))
+            .map(|(c, g)| if *g == 0.0 { 0.0 } else { (c / g) * (c / g) })
             .sum();
         let s = s2.sqrt();
         gammas.iter().map(|g| sigma * s * g).collect()
@@ -254,6 +258,26 @@ mod tests {
         let r0 = c[0] / (d[0] as f64).sqrt() / stds[0];
         let r1 = c[1] / (d[1] as f64).sqrt() / stds[1];
         assert!((r0 - r1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_threshold_yields_zero_std_not_nan() {
+        // regression: C_k = 0 under EqualBudget/Weighted made gamma_k = 0
+        // and the sensitivity term c/g = 0/0 = NaN, poisoning every std
+        for alloc in [Allocation::EqualBudget, Allocation::Weighted] {
+            let stds = alloc.stds(1.5, &[0.0, 2.0], &[10, 10]);
+            assert!(stds.iter().all(|s| s.is_finite()), "{alloc:?}: {stds:?}");
+            assert_eq!(stds[0], 0.0, "{alloc:?}: zero-C group gets zero std");
+            assert!(stds[1] > 0.0, "{alloc:?}: nonzero group keeps noise");
+            // the nonzero group is calibrated as if the zero group were
+            // absent: S^2 only sums over groups that release anything
+            let alone = alloc.stds(1.5, &[2.0], &[10]);
+            assert!((stds[1] - alone[0]).abs() < 1e-12, "{alloc:?}");
+            assert!(alloc.total_noise_sq(1.5, &[0.0, 2.0], &[10, 10]).is_finite());
+        }
+        // all-zero thresholds: nothing is released, nothing is noised
+        let stds = Allocation::EqualBudget.stds(1.5, &[0.0, 0.0], &[4, 4]);
+        assert_eq!(stds, vec![0.0, 0.0]);
     }
 
     #[test]

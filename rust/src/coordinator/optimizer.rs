@@ -2,6 +2,7 @@
 //! parameter buffers after noising (Algorithm 1 line 14). The paper's
 //! experiments use DP-SGD (momentum) for vision and DP-Adam for language.
 
+use crate::kernels::{AdamCoeffs, Kernels, SgdCoeffs};
 use crate::runtime::Tensor;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -57,6 +58,7 @@ pub struct Optimizer {
     step: u64,
     m: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
+    kernels: Kernels,
 }
 
 impl Optimizer {
@@ -66,7 +68,14 @@ impl Optimizer {
             OptimizerKind::Adam { .. } => params.iter().map(|p| vec![0f32; p.len()]).collect(),
             _ => Vec::new(),
         };
-        Optimizer { kind, schedule, weight_decay, step: 0, m, v }
+        Optimizer { kind, schedule, weight_decay, step: 0, m, v, kernels: Kernels::default() }
+    }
+
+    /// Install the session's dispatched kernel vtable. The optimizer
+    /// update kernels are bit-exact across ISAs, so this never changes
+    /// the trained parameters — only how fast they move.
+    pub fn set_kernels(&mut self, kernels: Kernels) {
+        self.kernels = kernels;
     }
 
     pub fn step_count(&self) -> u64 {
@@ -136,31 +145,36 @@ impl Optimizer {
         self.step += 1;
         match self.kind {
             OptimizerKind::Sgd { momentum } => {
+                let c = SgdCoeffs {
+                    weight_decay: self.weight_decay as f32,
+                    momentum: momentum as f32,
+                    lr: lr as f32,
+                };
                 for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
-                    let m = &mut self.m[i];
-                    for ((pj, gj), mj) in p.data.iter_mut().zip(&g.data).zip(m.iter_mut()) {
-                        let grad = *gj + (self.weight_decay as f32) * *pj;
-                        *mj = (momentum as f32) * *mj + grad;
-                        *pj -= (lr as f32) * *mj;
-                    }
+                    self.kernels.sgd_update(&mut p.data, &g.data, &mut self.m[i], c);
                 }
             }
             OptimizerKind::Adam { beta1, beta2, eps } => {
                 let t = self.step as f64;
-                let bc1 = 1.0 - beta1.powf(t);
-                let bc2 = 1.0 - beta2.powf(t);
+                let c = AdamCoeffs {
+                    weight_decay: self.weight_decay as f32,
+                    beta1: beta1 as f32,
+                    one_minus_beta1: 1.0 - beta1 as f32,
+                    beta2: beta2 as f32,
+                    one_minus_beta2: 1.0 - beta2 as f32,
+                    bias1: 1.0 - beta1.powf(t),
+                    bias2: 1.0 - beta2.powf(t),
+                    lr,
+                    eps,
+                };
                 for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
-                    let (ms, vs) = (&mut self.m[i], &mut self.v[i]);
-                    for (((pj, gj), mj), vj) in
-                        p.data.iter_mut().zip(&g.data).zip(ms.iter_mut()).zip(vs.iter_mut())
-                    {
-                        let grad = *gj + (self.weight_decay as f32) * *pj;
-                        *mj = (beta1 as f32) * *mj + (1.0 - beta1 as f32) * grad;
-                        *vj = (beta2 as f32) * *vj + (1.0 - beta2 as f32) * grad * grad;
-                        let mhat = *mj as f64 / bc1;
-                        let vhat = *vj as f64 / bc2;
-                        *pj -= (lr * mhat / (vhat.sqrt() + eps)) as f32;
-                    }
+                    self.kernels.adam_update(
+                        &mut p.data,
+                        &g.data,
+                        &mut self.m[i],
+                        &mut self.v[i],
+                        c,
+                    );
                 }
             }
         }

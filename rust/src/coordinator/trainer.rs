@@ -428,6 +428,12 @@ impl<'r> Trainer<'r> {
         &mut self.optimizer
     }
 
+    /// Install the session's dispatched kernel vtable on the optimizer
+    /// (the single-device backend's only host-side hot loop).
+    pub fn set_kernels(&mut self, kernels: crate::kernels::Kernels) {
+        self.optimizer.set_kernels(kernels);
+    }
+
     /// Full-dataset evaluation: (mean loss, accuracy).
     pub fn evaluate(&self, data: &dyn Dataset) -> Result<(f64, f64)> {
         evaluate_full(&self.eval_exec, &self.params, self.cfg.batch, data)

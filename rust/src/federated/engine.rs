@@ -54,11 +54,12 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::noise::Rng;
 use crate::coordinator::optimizer::{Optimizer, OptimizerKind};
 use crate::data::Dataset;
+use crate::kernels::Kernels;
 use crate::runtime::{ConfigManifest, Exec, HostValue, Runtime, Tensor};
 use crate::session::core::DpCore;
 use crate::session::grad::{fold_parts, Collected, GradUnit, Merged, StepTiming, UnitCollected};
 use crate::session::steploop::{BackendStep, UnitTask};
-use crate::shard::reduce::{tree_reduce, ReduceModel};
+use crate::shard::reduce::{tree_reduce_with, ReduceModel};
 use crate::shard::sampler::{ShardBatch, ShardSampler};
 
 /// Stand-in for an unbounded clipping threshold on the fused executable:
@@ -150,6 +151,8 @@ pub struct FederatedEngine<'r> {
     /// live user counts of the most recent collect, per slot (clip_frac
     /// denominators for per-user grouping read them)
     slot_lives: Vec<usize>,
+    /// dispatched kernel vtable for the host-side delta/reduction loops
+    kernels: Kernels,
 }
 
 impl<'r> FederatedEngine<'r> {
@@ -250,8 +253,18 @@ impl<'r> FederatedEngine<'r> {
             partition: w.partition,
             fused,
             slot_lives: vec![0; w.slots],
+            kernels: Kernels::default(),
             cfg,
         })
+    }
+
+    /// Install the session's dispatched kernel vtable on the engine and
+    /// every slot's optimizer.
+    pub fn set_kernels(&mut self, kernels: Kernels) {
+        self.kernels = kernels;
+        for r in self.replicas.iter_mut() {
+            r.optimizer.set_kernels(kernels);
+        }
     }
 
     pub fn grouping(&self) -> CohortGrouping {
@@ -410,6 +423,7 @@ impl BackendStep for FederatedEngine<'_> {
         let fused = this.fused;
         let local_steps = this.local_steps;
         let lr = this.lr;
+        let kn = this.kernels;
         (0..this.slots)
             .map(|s| {
                 let exec = this.exec.clone();
@@ -531,9 +545,7 @@ impl BackendStep for FederatedEngine<'_> {
                                     delta = g.clone();
                                 } else {
                                     for (d, t) in delta.iter_mut().zip(&g) {
-                                        for (a, b) in d.data.iter_mut().zip(&t.data) {
-                                            *a += *b;
-                                        }
+                                        kn.add_assign(&mut d.data, &t.data);
                                     }
                                 }
                                 if step + 1 < local_steps {
@@ -541,11 +553,7 @@ impl BackendStep for FederatedEngine<'_> {
                                     // mean gradient (sum / example count)
                                     let lr = (lr / ex as f64) as f32;
                                     for (j, &pi) in trainable_idx.iter().enumerate() {
-                                        for (p, gv) in
-                                            local[pi].data.iter_mut().zip(&g[j].data)
-                                        {
-                                            *p -= lr * gv;
-                                        }
+                                        kn.axpy(&mut local[pi].data, &g[j].data, -lr);
                                     }
                                 }
                             }
@@ -554,9 +562,7 @@ impl BackendStep for FederatedEngine<'_> {
                             // by the user's threshold
                             let mut sq = 0f64;
                             for t in &delta {
-                                for &v in &t.data {
-                                    sq += (v as f64) * (v as f64);
-                                }
+                                sq = kn.sq_norm(sq, &t.data);
                             }
                             let norm = sq.sqrt();
                             norm_sums[target] += norm;
@@ -569,9 +575,7 @@ impl BackendStep for FederatedEngine<'_> {
                                 1.0
                             };
                             for (a, d) in acc.iter_mut().zip(&delta) {
-                                for (x, v) in a.data.iter_mut().zip(&d.data) {
-                                    *x += factor * v;
-                                }
+                                kn.axpy(&mut a.data, &d.data, factor);
                             }
                         }
                         let mut part = UnitCollected::new(
@@ -636,7 +640,7 @@ impl BackendStep for FederatedEngine<'_> {
 
     fn merge(&mut self, units: Vec<GradUnit>, timing: &StepTiming) -> Merged {
         let parts: Vec<Vec<Tensor>> = units.into_iter().map(|u| u.tensors).collect();
-        let merged = tree_reduce(parts, self.fanout);
+        let merged = tree_reduce_with(self.kernels, parts, self.fanout);
 
         // simulated aggregation latency: a real deployment aggregates the
         // slots concurrently, so the modeled compute time is one

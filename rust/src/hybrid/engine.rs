@@ -23,7 +23,7 @@
 //! The merge hook shares the sharded backend's compression seam: with a
 //! `[compress]` spec section each replica's already-noised share is
 //! sparsified (error-feedback top-k / rand-k) before each stage's
-//! cross-replica [`tree_reduce`], shrinking the simulated reduction
+//! cross-replica [`tree_reduce_with`], shrinking the simulated reduction
 //! payload by the keep ratio — identical semantics under `[shard]` and
 //! `[hybrid]` because the seam is shared.
 
@@ -34,6 +34,7 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::noise::Rng;
 use crate::coordinator::optimizer::{Optimizer, OptimizerKind};
 use crate::data::Dataset;
+use crate::kernels::Kernels;
 use crate::pipeline::schedule::stage_grad_ready;
 use crate::pipeline::{PipelineEngine, PipelineMode, PipelineOpts};
 use crate::runtime::{ConfigManifest, Runtime, Tensor};
@@ -42,7 +43,7 @@ use crate::session::grad::{fold_parts, Collected, GradUnit, Merged, StepTiming, 
 use crate::session::spec::CompressSpec;
 use crate::session::steploop::{BackendStep, UnitTask};
 use crate::shard::compress::Compressor;
-use crate::shard::reduce::{tree_reduce, ReduceModel};
+use crate::shard::reduce::{tree_reduce_with, ReduceModel};
 use crate::shard::sampler::{ShardBatch, ShardSampler};
 
 /// How clipping-threshold groups tile the (replica, stage) grid (resolved
@@ -130,6 +131,8 @@ pub struct HybridEngine<'r> {
     /// when compressing: the (overlap, barrier) makespans the SAME step
     /// timings would have produced without compression
     last_dense_sims: Option<(f64, f64)>,
+    /// dispatched kernel vtable for the host-side reduction/apply loops
+    kernels: Kernels,
 }
 
 impl<'r> HybridEngine<'r> {
@@ -239,9 +242,22 @@ impl<'r> HybridEngine<'r> {
             compressor,
             replica_lives: vec![0; w.replicas],
             last_dense_sims: None,
+            kernels: Kernels::default(),
             replicas,
             cfg,
         })
+    }
+
+    /// Install the session's dispatched kernel vtable on the engine, its
+    /// compressor, and every replica's stage optimizers.
+    pub fn set_kernels(&mut self, kernels: Kernels) {
+        self.kernels = kernels;
+        for e in self.replicas.iter_mut() {
+            e.set_kernels(kernels);
+        }
+        if let Some(c) = self.compressor.as_mut() {
+            c.set_kernels(kernels);
+        }
     }
 
     /// The (overlap, barrier) makespans the most recent step's timings
@@ -571,7 +587,7 @@ impl BackendStep for HybridEngine<'_> {
         }
         let mut merged: Vec<Tensor> = Vec::new();
         for parts in parts_by_stage {
-            merged.extend(tree_reduce(parts, self.fanout));
+            merged.extend(tree_reduce_with(self.kernels, parts, self.fanout));
         }
 
         Merged {

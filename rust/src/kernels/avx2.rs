@@ -1,0 +1,393 @@
+//! AVX2 kernel variants. Every elementwise kernel here performs the same
+//! IEEE-754 operations, in the same per-element order, as its scalar
+//! reference in [`super::scalar`] — `vmulps`/`vaddps`/`vdivpd`/`vsqrtpd`
+//! and the `cvtpd2ps`/`cvtps2pd` conversions are correctly rounded
+//! exactly like the corresponding scalar Rust ops, and no FMA contraction
+//! is used — so the outputs are bitwise identical on every input. The
+//! blocked kernels (`sq_norm_wide`, `gauss_block`) implement the exact
+//! lane layout their scalar mirrors specify, so `auto` mode produces the
+//! same bits regardless of which ISA was dispatched.
+//!
+//! Safety: every public function is a safe wrapper around a
+//! `#[target_feature(enable = "avx2")]` body; the wrappers are only ever
+//! installed into a [`super::Kernels`] vtable after
+//! `KernelIsa::Avx2.available()` verified the host supports AVX2.
+
+#![allow(clippy::missing_safety_doc)]
+
+use std::arch::x86_64::*;
+
+use crate::util::rng::Xoshiro;
+
+use super::{
+    poly_ln, AdamCoeffs, SgdCoeffs, C11, C13, C15, C17, C19, C3, C5, C7, C9, GAUSS_ROUNDS,
+    TWO_NEG53,
+};
+
+pub fn axpy(acc: &mut [f32], x: &[f32], f: f32) {
+    unsafe { axpy_impl(acc, x, f) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_impl(acc: &mut [f32], x: &[f32], f: f32) {
+    let n = acc.len().min(x.len());
+    let fv = _mm256_set1_ps(f);
+    let mut i = 0;
+    while i + 8 <= n {
+        let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+        let v = _mm256_loadu_ps(x.as_ptr().add(i));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(a, _mm256_mul_ps(fv, v)));
+        i += 8;
+    }
+    while i < n {
+        acc[i] += f * x[i];
+        i += 1;
+    }
+}
+
+pub fn add_assign(acc: &mut [f32], x: &[f32]) {
+    unsafe { add_assign_impl(acc, x) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn add_assign_impl(acc: &mut [f32], x: &[f32]) {
+    let n = acc.len().min(x.len());
+    let mut i = 0;
+    while i + 8 <= n {
+        let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+        let v = _mm256_loadu_ps(x.as_ptr().add(i));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(a, v));
+        i += 8;
+    }
+    while i < n {
+        acc[i] += x[i];
+        i += 1;
+    }
+}
+
+pub fn add2_assign(acc: &mut [f32], a: &[f32], b: &[f32]) {
+    unsafe { add2_assign_impl(acc, a, b) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn add2_assign_impl(acc: &mut [f32], a: &[f32], b: &[f32]) {
+    let n = acc.len().min(a.len()).min(b.len());
+    let mut i = 0;
+    while i + 8 <= n {
+        let t = _mm256_loadu_ps(acc.as_ptr().add(i));
+        let x = _mm256_loadu_ps(a.as_ptr().add(i));
+        let y = _mm256_loadu_ps(b.as_ptr().add(i));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(t, _mm256_add_ps(x, y)));
+        i += 8;
+    }
+    while i < n {
+        acc[i] += a[i] + b[i];
+        i += 1;
+    }
+}
+
+pub fn scale(x: &mut [f32], f: f32) {
+    unsafe { scale_impl(x, f) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn scale_impl(x: &mut [f32], f: f32) {
+    let n = x.len();
+    let fv = _mm256_set1_ps(f);
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm256_loadu_ps(x.as_ptr().add(i));
+        _mm256_storeu_ps(x.as_mut_ptr().add(i), _mm256_mul_ps(v, fv));
+        i += 8;
+    }
+    while i < n {
+        x[i] *= f;
+        i += 1;
+    }
+}
+
+pub fn add_noise_from(buf: &mut [f32], gauss: &[f64], std: f64) {
+    unsafe { add_noise_from_impl(buf, gauss, std) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn add_noise_from_impl(buf: &mut [f32], gauss: &[f64], std: f64) {
+    let n = buf.len().min(gauss.len());
+    let sv = _mm256_set1_pd(std);
+    let mut i = 0;
+    while i + 4 <= n {
+        let g = _mm256_loadu_pd(gauss.as_ptr().add(i));
+        // (std * g) rounded to f32 — vcvtpd2ps rounds to nearest-even
+        // exactly like the scalar `as f32` cast
+        let f4 = _mm256_cvtpd_ps(_mm256_mul_pd(sv, g));
+        let b = _mm_loadu_ps(buf.as_ptr().add(i));
+        _mm_storeu_ps(buf.as_mut_ptr().add(i), _mm_add_ps(b, f4));
+        i += 4;
+    }
+    while i < n {
+        buf[i] += (std * gauss[i]) as f32;
+        i += 1;
+    }
+}
+
+pub fn sgd_update(p: &mut [f32], g: &[f32], m: &mut [f32], c: SgdCoeffs) {
+    unsafe { sgd_update_impl(p, g, m, c) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn sgd_update_impl(p: &mut [f32], g: &[f32], m: &mut [f32], c: SgdCoeffs) {
+    let n = p.len().min(g.len()).min(m.len());
+    let wd = _mm256_set1_ps(c.weight_decay);
+    let mom = _mm256_set1_ps(c.momentum);
+    let lr = _mm256_set1_ps(c.lr);
+    let mut i = 0;
+    while i + 8 <= n {
+        let pv = _mm256_loadu_ps(p.as_ptr().add(i));
+        let gv = _mm256_loadu_ps(g.as_ptr().add(i));
+        let mv = _mm256_loadu_ps(m.as_ptr().add(i));
+        let grad = _mm256_add_ps(gv, _mm256_mul_ps(wd, pv));
+        let m2 = _mm256_add_ps(_mm256_mul_ps(mom, mv), grad);
+        _mm256_storeu_ps(m.as_mut_ptr().add(i), m2);
+        _mm256_storeu_ps(p.as_mut_ptr().add(i), _mm256_sub_ps(pv, _mm256_mul_ps(lr, m2)));
+        i += 8;
+    }
+    while i < n {
+        let grad = g[i] + c.weight_decay * p[i];
+        m[i] = c.momentum * m[i] + grad;
+        p[i] -= c.lr * m[i];
+        i += 1;
+    }
+}
+
+pub fn adam_update(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], c: AdamCoeffs) {
+    unsafe { adam_update_impl(p, g, m, v, c) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn adam_update_impl(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], c: AdamCoeffs) {
+    let n = p.len().min(g.len()).min(m.len()).min(v.len());
+    let wd = _mm_set1_ps(c.weight_decay);
+    let b1 = _mm_set1_ps(c.beta1);
+    let c1 = _mm_set1_ps(c.one_minus_beta1);
+    let b2 = _mm_set1_ps(c.beta2);
+    let c2 = _mm_set1_ps(c.one_minus_beta2);
+    let bias1 = _mm256_set1_pd(c.bias1);
+    let bias2 = _mm256_set1_pd(c.bias2);
+    let lr = _mm256_set1_pd(c.lr);
+    let eps = _mm256_set1_pd(c.eps);
+    let mut i = 0;
+    while i + 4 <= n {
+        let pv = _mm_loadu_ps(p.as_ptr().add(i));
+        let gv = _mm_loadu_ps(g.as_ptr().add(i));
+        let mv = _mm_loadu_ps(m.as_ptr().add(i));
+        let vv = _mm_loadu_ps(v.as_ptr().add(i));
+        let grad = _mm_add_ps(gv, _mm_mul_ps(wd, pv));
+        let m2 = _mm_add_ps(_mm_mul_ps(b1, mv), _mm_mul_ps(c1, grad));
+        // (1-beta2) * grad * grad is left-associated in the reference
+        let v2 = _mm_add_ps(_mm_mul_ps(b2, vv), _mm_mul_ps(_mm_mul_ps(c2, grad), grad));
+        _mm_storeu_ps(m.as_mut_ptr().add(i), m2);
+        _mm_storeu_ps(v.as_mut_ptr().add(i), v2);
+        let mhat = _mm256_div_pd(_mm256_cvtps_pd(m2), bias1);
+        let vhat = _mm256_div_pd(_mm256_cvtps_pd(v2), bias2);
+        let upd = _mm256_div_pd(
+            _mm256_mul_pd(lr, mhat),
+            _mm256_add_pd(_mm256_sqrt_pd(vhat), eps),
+        );
+        _mm_storeu_ps(p.as_mut_ptr().add(i), _mm_sub_ps(pv, _mm256_cvtpd_ps(upd)));
+        i += 4;
+    }
+    while i < n {
+        let grad = g[i] + c.weight_decay * p[i];
+        m[i] = c.beta1 * m[i] + c.one_minus_beta1 * grad;
+        v[i] = c.beta2 * v[i] + c.one_minus_beta2 * grad * grad;
+        let mhat = m[i] as f64 / c.bias1;
+        let vhat = v[i] as f64 / c.bias2;
+        p[i] -= (c.lr * mhat / (vhat.sqrt() + c.eps)) as f32;
+        i += 1;
+    }
+}
+
+pub fn sq_norm_wide(x: &[f32]) -> f64 {
+    unsafe { sq_norm_wide_impl(x) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn sq_norm_wide_impl(x: &[f32]) -> f64 {
+    let n = x.len();
+    let mut acc_lo = _mm256_setzero_pd();
+    let mut acc_hi = _mm256_setzero_pd();
+    let mut i = 0;
+    while i + 8 <= n {
+        let x8 = _mm256_loadu_ps(x.as_ptr().add(i));
+        let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(x8));
+        let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(x8));
+        acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(lo, lo));
+        acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(hi, hi));
+        i += 8;
+    }
+    // fixed reduction tree, mirrored by scalar::sq_norm_wide:
+    // ((a0+a4)+(a2+a6)) + ((a1+a5)+(a3+a7))
+    let s = _mm256_add_pd(acc_lo, acc_hi);
+    let pair = _mm_add_pd(_mm256_castpd256_pd128(s), _mm256_extractf128_pd::<1>(s));
+    let mut total = _mm_cvtsd_f64(pair) + _mm_cvtsd_f64(_mm_unpackhi_pd(pair, pair));
+    while i < n {
+        let v = x[i] as f64;
+        total += v * v;
+        i += 1;
+    }
+    total
+}
+
+// ----------------------------------------------------- batched gaussians
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn rotl64<const K: i32, const INV: i32>(x: __m256i) -> __m256i {
+    _mm256_or_si256(_mm256_slli_epi64::<K>(x), _mm256_srli_epi64::<INV>(x))
+}
+
+/// Four xoshiro256++ steps in lockstep — lane `j` advances exactly like
+/// the scalar `Xoshiro::next_u64` on lane `j`'s state.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn next4(s: &mut [__m256i; 4]) -> __m256i {
+    let r = _mm256_add_epi64(rotl64::<23, 41>(_mm256_add_epi64(s[0], s[3])), s[0]);
+    let t = _mm256_slli_epi64::<17>(s[1]);
+    s[2] = _mm256_xor_si256(s[2], s[0]);
+    s[3] = _mm256_xor_si256(s[3], s[1]);
+    s[1] = _mm256_xor_si256(s[1], s[2]);
+    s[0] = _mm256_xor_si256(s[0], s[3]);
+    s[2] = _mm256_xor_si256(s[2], t);
+    s[3] = rotl64::<45, 19>(s[3]);
+    r
+}
+
+/// `(x >> 11) as f64 * 2^-53` for four u64 lanes, bit-exact to the
+/// scalar conversion: split the 53-bit value into its top 52 bits plus
+/// its lsb (both exactly representable via the 2^52 magic-number trick),
+/// recombine exactly, then scale by the exact power of two.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn to_unit(x: __m256i) -> __m256d {
+    let magic_i = _mm256_set1_epi64x(0x4330_0000_0000_0000);
+    let magic_d = _mm256_set1_pd(4503599627370496.0); // 2^52
+    let hi = _mm256_srli_epi64::<12>(x);
+    let lsb = _mm256_and_si256(_mm256_srli_epi64::<11>(x), _mm256_set1_epi64x(1));
+    let dhi = _mm256_sub_pd(_mm256_castsi256_pd(_mm256_or_si256(hi, magic_i)), magic_d);
+    let dlsb = _mm256_sub_pd(_mm256_castsi256_pd(_mm256_or_si256(lsb, magic_i)), magic_d);
+    _mm256_mul_pd(_mm256_add_pd(_mm256_add_pd(dhi, dhi), dlsb), _mm256_set1_pd(TWO_NEG53))
+}
+
+/// [`super::poly_ln`] on four lanes — identical operation order, so each
+/// lane's result is bitwise equal to the scalar function on that input.
+/// Inputs must be positive normal f64 (the polar method's `s` is).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn poly_ln_pd(x: __m256d) -> __m256d {
+    let bits = _mm256_castpd_si256(x);
+    // positive input -> sign bit 0, so the shift alone isolates the
+    // biased exponent; it fits an i32 lane for the exact i32->f64 convert
+    let biased = _mm256_srli_epi64::<52>(bits);
+    let idx = _mm256_setr_epi32(0, 2, 4, 6, 0, 0, 0, 0);
+    let packed = _mm256_permutevar8x32_epi32(biased, idx);
+    let e = _mm256_sub_pd(
+        _mm256_cvtepi32_pd(_mm256_castsi256_si128(packed)),
+        _mm256_set1_pd(1023.0),
+    );
+    let m = _mm256_castsi256_pd(_mm256_or_si256(
+        _mm256_and_si256(bits, _mm256_set1_epi64x(0x000f_ffff_ffff_ffff)),
+        _mm256_set1_epi64x(0x3ff0_0000_0000_0000),
+    ));
+    let one = _mm256_set1_pd(1.0);
+    let t = _mm256_div_pd(_mm256_sub_pd(m, one), _mm256_add_pd(m, one));
+    let t2 = _mm256_mul_pd(t, t);
+    let mut p = _mm256_set1_pd(C19);
+    for c in [C17, C15, C13, C11, C9, C7, C5, C3] {
+        p = _mm256_add_pd(_mm256_mul_pd(p, t2), _mm256_set1_pd(c));
+    }
+    p = _mm256_add_pd(_mm256_mul_pd(p, t2), one);
+    _mm256_add_pd(
+        _mm256_mul_pd(e, _mm256_set1_pd(std::f64::consts::LN_2)),
+        _mm256_mul_pd(_mm256_add_pd(t, t), p),
+    )
+}
+
+pub fn gauss_block(lanes: &mut [Xoshiro; 4], out: &mut Vec<f64>) {
+    unsafe { gauss_block_impl(lanes, out) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn gauss_block_impl(lanes: &mut [Xoshiro; 4], out: &mut Vec<f64>) {
+    const N: usize = GAUSS_ROUNDS * 4;
+    // transpose the four lane states into word-major vectors:
+    // s[i] lane j = lanes[j].state()[i]
+    let st = [lanes[0].state(), lanes[1].state(), lanes[2].state(), lanes[3].state()];
+    let mut s = [_mm256_setzero_si256(); 4];
+    for (i, sv) in s.iter_mut().enumerate() {
+        *sv = _mm256_set_epi64x(
+            st[3][i] as i64,
+            st[2][i] as i64,
+            st[1][i] as i64,
+            st[0][i] as i64,
+        );
+    }
+    let one = _mm256_set1_pd(1.0);
+    let mut us = [0f64; N];
+    let mut vs = [0f64; N];
+    let mut ss = [0f64; N];
+    for r in 0..GAUSS_ROUNDS {
+        let ra = next4(&mut s);
+        let rb = next4(&mut s);
+        let ua = to_unit(ra);
+        let ub = to_unit(rb);
+        let u = _mm256_sub_pd(_mm256_add_pd(ua, ua), one);
+        let v = _mm256_sub_pd(_mm256_add_pd(ub, ub), one);
+        let sq = _mm256_add_pd(_mm256_mul_pd(u, u), _mm256_mul_pd(v, v));
+        _mm256_storeu_pd(us.as_mut_ptr().add(4 * r), u);
+        _mm256_storeu_pd(vs.as_mut_ptr().add(4 * r), v);
+        _mm256_storeu_pd(ss.as_mut_ptr().add(4 * r), sq);
+    }
+    // write the advanced lane states back
+    let mut back = [[0u64; 4]; 4];
+    for (i, sv) in s.iter().enumerate() {
+        _mm256_storeu_si256(back[i].as_mut_ptr() as *mut __m256i, *sv);
+    }
+    for (j, lane) in lanes.iter_mut().enumerate() {
+        *lane = Xoshiro::from_state([back[0][j], back[1][j], back[2][j], back[3][j]]);
+    }
+    // acceptance compaction in candidate order (round-major, lane-minor)
+    let mut ua = [0f64; N];
+    let mut va = [0f64; N];
+    let mut sa = [0f64; N];
+    let mut cnt = 0;
+    for i in 0..N {
+        let sv = ss[i];
+        if sv < 1.0 && sv != 0.0 {
+            ua[cnt] = us[i];
+            va[cnt] = vs[i];
+            sa[cnt] = sv;
+            cnt += 1;
+        }
+    }
+    // vectorized transform over the accepted candidates; the tail uses
+    // the scalar poly_ln, which is lane-identical to poly_ln_pd
+    let neg2 = _mm256_set1_pd(-2.0);
+    let mut i = 0;
+    while i + 4 <= cnt {
+        let sv = _mm256_loadu_pd(sa.as_ptr().add(i));
+        let rr = _mm256_sqrt_pd(_mm256_div_pd(_mm256_mul_pd(neg2, poly_ln_pd(sv)), sv));
+        let mut rbuf = [0f64; 4];
+        _mm256_storeu_pd(rbuf.as_mut_ptr(), rr);
+        for (j, r) in rbuf.iter().enumerate() {
+            out.push(ua[i + j] * r);
+            out.push(va[i + j] * r);
+        }
+        i += 4;
+    }
+    while i < cnt {
+        let r = ((-2.0 * poly_ln(sa[i])) / sa[i]).sqrt();
+        out.push(ua[i] * r);
+        out.push(va[i] * r);
+        i += 1;
+    }
+}

@@ -1,0 +1,544 @@
+//! Runtime-dispatched SIMD kernels for the host-side hot path.
+//!
+//! Every per-step host loop the profiler sees — gaussian noise fill,
+//! clip-coefficient application, squared-norm accumulation, tree-reduce
+//! summation, optimizer apply — routes through one [`Kernels`] vtable.
+//! The vtable is populated once per session from the host's CPU features
+//! (`is_x86_feature_detected!("avx2")`, cached process-wide) and the
+//! session's `kernels` mode knob, then passed by value (it is `Copy`, a
+//! bundle of function pointers) into the step loop, the engines and the
+//! optimizer.
+//!
+//! ## The reproducibility contract
+//!
+//! Kernels split into two classes:
+//!
+//! * **Bit-exact elementwise** — clip/axpy apply, tensor add, scaling,
+//!   SGD/Adam update, noise add from a pre-filled gaussian buffer. Each
+//!   output element is produced by the same IEEE-754 operations in the
+//!   same order as the scalar reference (AVX2 `mul`/`add`/`div`/`sqrt`
+//!   and `cvtpd_ps` round exactly like their scalar counterparts; no FMA
+//!   contraction is ever used), so the SIMD variants are bitwise
+//!   identical to scalar on every input. These dispatch purely on ISA.
+//! * **Reassociating** — squared-norm accumulation (blocked partial
+//!   sums), tree-reduce pair folding, and the batched gaussian draw
+//!   (block candidate generation over four interleaved xoshiro lanes
+//!   with a polynomial `ln`). They change summation order or the RNG
+//!   consumption pattern and therefore sit behind the `kernels` mode:
+//!   [`KernelMode::Scalar`] (the default) keeps the sequential
+//!   bit-reference; [`KernelMode::Auto`] enables them. `Auto` is itself
+//!   deterministic ACROSS hosts — the batched algorithms are specified
+//!   exactly (same lane layout, same polynomial, same acceptance order)
+//!   and the scalar and AVX2 implementations of each batched kernel are
+//!   bitwise identical to each other — so the mode, not the host,
+//!   decides the bits.
+//!
+//! See `docs/SESSION_API.md`, "Kernels".
+
+use std::sync::OnceLock;
+
+use crate::util::rng::Xoshiro;
+
+pub mod scalar;
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+// ----------------------------------------------------------------- mode
+
+/// The `kernels` spec knob: which summation/draw semantics the run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// Sequential bit-reference semantics everywhere (the default):
+    /// left-to-right summation, one Marsaglia-polar gaussian at a time.
+    #[default]
+    Scalar,
+    /// Reassociated summations (blocked squared-norm partials, paired
+    /// tree-reduce folds) and the batched 4-lane gaussian fill. Bitwise
+    /// self-consistent across hosts, but a DIFFERENT bit-stream than
+    /// `scalar` — snapshots record the mode so resume can refuse a
+    /// switch (`session::snapshot`).
+    Auto,
+}
+
+impl KernelMode {
+    pub fn token(self) -> &'static str {
+        match self {
+            KernelMode::Scalar => "scalar",
+            KernelMode::Auto => "auto",
+        }
+    }
+}
+
+impl std::str::FromStr for KernelMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "scalar" => Ok(KernelMode::Scalar),
+            "auto" => Ok(KernelMode::Auto),
+            other => anyhow::bail!("unknown kernels mode {other:?} (expected scalar | auto)"),
+        }
+    }
+}
+
+// ------------------------------------------------------------------ isa
+
+/// The instruction set a [`Kernels`] vtable was built for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelIsa {
+    Scalar,
+    Avx2,
+}
+
+impl KernelIsa {
+    pub fn token(self) -> &'static str {
+        match self {
+            KernelIsa::Scalar => "scalar",
+            KernelIsa::Avx2 => "avx2",
+        }
+    }
+
+    /// Whether this ISA's kernels can run on the current host.
+    pub fn available(self) -> bool {
+        match self {
+            KernelIsa::Scalar => true,
+            KernelIsa::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+        }
+    }
+
+    /// The best ISA the host supports, detected once per process
+    /// (extensible to avx512 by adding a variant and a probe here).
+    pub fn detect() -> KernelIsa {
+        static DETECTED: OnceLock<KernelIsa> = OnceLock::new();
+        *DETECTED.get_or_init(|| {
+            if KernelIsa::Avx2.available() {
+                KernelIsa::Avx2
+            } else {
+                KernelIsa::Scalar
+            }
+        })
+    }
+}
+
+// --------------------------------------------------------------- vtable
+
+/// Per-element SGD coefficients (all pre-cast to f32, matching the
+/// scalar reference loop in `coordinator::optimizer`).
+#[derive(Clone, Copy, Debug)]
+pub struct SgdCoeffs {
+    pub weight_decay: f32,
+    pub momentum: f32,
+    pub lr: f32,
+}
+
+/// Per-element Adam coefficients. The f32 fields drive the moment
+/// updates; the f64 fields drive the bias-corrected step, exactly as the
+/// scalar reference computes them.
+#[derive(Clone, Copy, Debug)]
+pub struct AdamCoeffs {
+    pub weight_decay: f32,
+    pub beta1: f32,
+    /// `1.0 - beta1 as f32`, precomputed once (the reference hoists it).
+    pub one_minus_beta1: f32,
+    pub beta2: f32,
+    pub one_minus_beta2: f32,
+    /// `1 - beta1^t` / `1 - beta2^t` bias corrections at this step.
+    pub bias1: f64,
+    pub bias2: f64,
+    pub lr: f64,
+    pub eps: f64,
+}
+
+/// The dispatched kernel vtable: one set of function pointers chosen at
+/// construction from (mode, ISA). `Copy` so engines and closures carry
+/// it by value with no indirection beyond the call itself.
+#[derive(Clone, Copy)]
+pub struct Kernels {
+    mode: KernelMode,
+    isa: KernelIsa,
+    // bit-exact elementwise (ISA-dispatched, mode-independent)
+    axpy: fn(&mut [f32], &[f32], f32),
+    add_assign: fn(&mut [f32], &[f32]),
+    add2_assign: fn(&mut [f32], &[f32], &[f32]),
+    scale: fn(&mut [f32], f32),
+    add_noise_from: fn(&mut [f32], &[f64], f64),
+    sgd_update: fn(&mut [f32], &[f32], &mut [f32], SgdCoeffs),
+    adam_update: fn(&mut [f32], &[f32], &mut [f32], &mut [f32], AdamCoeffs),
+    // reassociating (used only when mode == Auto)
+    sq_norm_wide: fn(&[f32]) -> f64,
+    gauss_block: fn(&mut [Xoshiro; 4], &mut Vec<f64>),
+}
+
+impl std::fmt::Debug for Kernels {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Kernels").field("mode", &self.mode).field("isa", &self.isa).finish()
+    }
+}
+
+impl Default for Kernels {
+    fn default() -> Self {
+        Kernels::scalar()
+    }
+}
+
+impl Kernels {
+    /// The pure bit-reference: scalar mode on the scalar ISA. This is
+    /// what every session runs unless the `kernels` knob says otherwise.
+    pub fn scalar() -> Kernels {
+        Kernels::with(KernelMode::Scalar, KernelIsa::Scalar)
+    }
+
+    /// The vtable a session resolves from its `kernels` mode: `scalar`
+    /// stays on the scalar ISA end to end (maximally conservative —
+    /// byte-for-byte the pre-kernel-layer behavior), `auto` takes the
+    /// best detected ISA plus the reassociating kernels.
+    pub fn for_mode(mode: KernelMode) -> Kernels {
+        match mode {
+            KernelMode::Scalar => Kernels::scalar(),
+            KernelMode::Auto => Kernels::with(KernelMode::Auto, KernelIsa::detect()),
+        }
+    }
+
+    /// Explicit (mode, ISA) construction — the test/bench surface for
+    /// pinning scalar-vs-SIMD parity on the same mode. Panics if the
+    /// ISA is unavailable on this host.
+    pub fn with(mode: KernelMode, isa: KernelIsa) -> Kernels {
+        assert!(isa.available(), "kernel ISA {} unavailable on this host", isa.token());
+        match isa {
+            KernelIsa::Scalar => Kernels {
+                mode,
+                isa,
+                axpy: scalar::axpy,
+                add_assign: scalar::add_assign,
+                add2_assign: scalar::add2_assign,
+                scale: scalar::scale,
+                add_noise_from: scalar::add_noise_from,
+                sgd_update: scalar::sgd_update,
+                adam_update: scalar::adam_update,
+                sq_norm_wide: scalar::sq_norm_wide,
+                gauss_block: scalar::gauss_block,
+            },
+            KernelIsa::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    Kernels {
+                        mode,
+                        isa,
+                        axpy: avx2::axpy,
+                        add_assign: avx2::add_assign,
+                        add2_assign: avx2::add2_assign,
+                        scale: avx2::scale,
+                        add_noise_from: avx2::add_noise_from,
+                        sgd_update: avx2::sgd_update,
+                        adam_update: avx2::adam_update,
+                        sq_norm_wide: avx2::sq_norm_wide,
+                        gauss_block: avx2::gauss_block,
+                    }
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    unreachable!("avx2 availability is gated above")
+                }
+            }
+        }
+    }
+
+    pub fn mode(&self) -> KernelMode {
+        self.mode
+    }
+
+    pub fn isa(&self) -> KernelIsa {
+        self.isa
+    }
+
+    /// Whether reassociating kernels are enabled (tree-reduce pair
+    /// folding, blocked squared-norm, batched gaussian fill).
+    pub fn reassociate(&self) -> bool {
+        self.mode == KernelMode::Auto
+    }
+
+    /// `acc[i] += f * x[i]` — clip-coefficient / local-SGD apply.
+    #[inline]
+    pub fn axpy(&self, acc: &mut [f32], x: &[f32], f: f32) {
+        debug_assert_eq!(acc.len(), x.len());
+        (self.axpy)(acc, x, f)
+    }
+
+    /// `acc[i] += x[i]` — gradient accumulation / error-feedback add.
+    #[inline]
+    pub fn add_assign(&self, acc: &mut [f32], x: &[f32]) {
+        debug_assert_eq!(acc.len(), x.len());
+        (self.add_assign)(acc, x)
+    }
+
+    /// `acc[i] += a[i] + b[i]` — the paired tree-reduce fold. NOTE this
+    /// reassociates relative to two sequential [`Kernels::add_assign`]
+    /// calls; callers gate it on [`Kernels::reassociate`].
+    #[inline]
+    pub fn add2_assign(&self, acc: &mut [f32], a: &[f32], b: &[f32]) {
+        debug_assert_eq!(acc.len(), a.len());
+        debug_assert_eq!(acc.len(), b.len());
+        (self.add2_assign)(acc, a, b)
+    }
+
+    /// `x[i] *= f` — worker-mean / update-scale rescale.
+    #[inline]
+    pub fn scale(&self, x: &mut [f32], f: f32) {
+        (self.scale)(x, f)
+    }
+
+    /// `buf[i] += (std * gauss[i]) as f32` — noise add from a pre-filled
+    /// standard-gaussian buffer. Bit-exact across ISAs.
+    #[inline]
+    pub fn add_noise_from(&self, buf: &mut [f32], gauss: &[f64], std: f64) {
+        debug_assert_eq!(buf.len(), gauss.len());
+        (self.add_noise_from)(buf, gauss, std)
+    }
+
+    /// One SGD(-momentum) update over a parameter buffer, bit-exact to
+    /// the scalar reference in `coordinator::optimizer`.
+    #[inline]
+    pub fn sgd_update(&self, p: &mut [f32], g: &[f32], m: &mut [f32], c: SgdCoeffs) {
+        debug_assert_eq!(p.len(), g.len());
+        debug_assert_eq!(p.len(), m.len());
+        (self.sgd_update)(p, g, m, c)
+    }
+
+    /// One Adam update over a parameter buffer, bit-exact to the scalar
+    /// reference in `coordinator::optimizer`.
+    #[inline]
+    pub fn adam_update(&self, p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], c: AdamCoeffs) {
+        debug_assert_eq!(p.len(), g.len());
+        debug_assert_eq!(p.len(), m.len());
+        debug_assert_eq!(p.len(), v.len());
+        (self.adam_update)(p, g, m, v, c)
+    }
+
+    /// `init + sum x[i]^2` in f64. Scalar mode folds left-to-right (the
+    /// bit-reference); auto mode uses 8 blocked partial accumulators
+    /// with a fixed reduction tree — reassociated, so drift-bounded
+    /// rather than bit-pinned (see `tests/kernels.rs`).
+    #[inline]
+    pub fn sq_norm(&self, init: f64, x: &[f32]) -> f64 {
+        match self.mode {
+            KernelMode::Scalar => scalar::sq_norm_seq(init, x),
+            KernelMode::Auto => init + (self.sq_norm_wide)(x),
+        }
+    }
+
+    /// Append one block of standard gaussians drawn from the four
+    /// interleaved lanes (see [`GaussFill`]). Bitwise identical across
+    /// ISAs by construction.
+    #[inline]
+    pub fn gauss_block(&self, lanes: &mut [Xoshiro; 4], out: &mut Vec<f64>) {
+        (self.gauss_block)(lanes, out)
+    }
+}
+
+// ------------------------------------------------------- batched gauss
+
+/// Candidate rounds per [`Kernels::gauss_block`] call; each round draws
+/// one (u, v) candidate per lane, so a block yields ~`4 * ROUNDS * pi/4`
+/// accepted gaussians.
+pub const GAUSS_ROUNDS: usize = 64;
+
+pub(crate) const TWO_NEG53: f64 = 1.0 / (1u64 << 53) as f64;
+
+/// A batched standard-gaussian source: four xoshiro256++ lanes split off
+/// a parent [`Rng`](crate::coordinator::noise::Rng) (consuming exactly
+/// four child splits), generating Marsaglia-polar candidates in blocks.
+/// The candidate order (round-major, lane-minor), the acceptance rule
+/// (`s < 1 && s != 0`) and the `sqrt(-2 ln s / s)` transform via
+/// [`poly_ln`] are fixed by specification, so the stream depends only on
+/// the parent's split states — never on the ISA.
+pub struct GaussFill {
+    lanes: [Xoshiro; 4],
+    pending: Vec<f64>,
+    cursor: usize,
+}
+
+impl GaussFill {
+    /// Seed the four lanes from `rng` (four `split()`s, advancing the
+    /// parent stream by four draws).
+    pub fn new(rng: &mut crate::coordinator::noise::Rng) -> GaussFill {
+        let lanes = std::array::from_fn(|_| Xoshiro::from_state(rng.split().state()));
+        GaussFill { lanes, pending: Vec::new(), cursor: 0 }
+    }
+
+    /// Seed the lanes directly (tests pin ISA parity on fixed states).
+    pub fn from_lanes(lanes: [Xoshiro; 4]) -> GaussFill {
+        GaussFill { lanes, pending: Vec::new(), cursor: 0 }
+    }
+
+    /// Fill `out` with the next standard gaussians of this stream.
+    pub fn fill(&mut self, k: &Kernels, out: &mut [f64]) {
+        let mut i = 0;
+        while i < out.len() {
+            if self.cursor == self.pending.len() {
+                self.pending.clear();
+                self.cursor = 0;
+                while self.pending.is_empty() {
+                    k.gauss_block(&mut self.lanes, &mut self.pending);
+                }
+            }
+            let n = (out.len() - i).min(self.pending.len() - self.cursor);
+            out[i..i + n].copy_from_slice(&self.pending[self.cursor..self.cursor + n]);
+            self.cursor += n;
+            i += n;
+        }
+    }
+}
+
+// ---------------------------------------------------------- polynomial ln
+
+pub(crate) const C3: f64 = 1.0 / 3.0;
+pub(crate) const C5: f64 = 1.0 / 5.0;
+pub(crate) const C7: f64 = 1.0 / 7.0;
+pub(crate) const C9: f64 = 1.0 / 9.0;
+pub(crate) const C11: f64 = 1.0 / 11.0;
+pub(crate) const C13: f64 = 1.0 / 13.0;
+pub(crate) const C15: f64 = 1.0 / 15.0;
+pub(crate) const C17: f64 = 1.0 / 17.0;
+pub(crate) const C19: f64 = 1.0 / 19.0;
+
+/// Polynomial natural log for finite positive *normal* f64 inputs, used
+/// by the batched gaussian transform on every ISA (libm `ln`
+/// implementations vary across platforms; this one is pinned down to the
+/// operation order, so the batched stream is host-independent).
+///
+/// Decomposes `x = m * 2^e` with `m` in `[1, 2)` and sums the odd atanh
+/// series of `t = (m-1)/(m+1)` (|t| < 1/3) through `t^19/19` by Horner —
+/// truncation plus rounding stays under ~1e-10 relative (pinned by a
+/// property test against `f64::ln`).
+#[inline]
+pub fn poly_ln(x: f64) -> f64 {
+    debug_assert!(x > 0.0 && x.is_finite() && x >= f64::MIN_POSITIVE);
+    let bits = x.to_bits();
+    let e = (((bits >> 52) & 0x7ff) as i64 - 1023) as f64;
+    let m = f64::from_bits((bits & 0x000f_ffff_ffff_ffff) | 0x3ff0_0000_0000_0000);
+    let t = (m - 1.0) / (m + 1.0);
+    let t2 = t * t;
+    let mut p = C19;
+    p = p * t2 + C17;
+    p = p * t2 + C15;
+    p = p * t2 + C13;
+    p = p * t2 + C11;
+    p = p * t2 + C9;
+    p = p * t2 + C7;
+    p = p * t2 + C5;
+    p = p * t2 + C3;
+    p = p * t2 + 1.0;
+    e * std::f64::consts::LN_2 + (2.0 * t) * p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_tokens_round_trip_and_bad_tokens_fail() {
+        for m in [KernelMode::Scalar, KernelMode::Auto] {
+            assert_eq!(m.token().parse::<KernelMode>().unwrap(), m);
+        }
+        assert!("avx2".parse::<KernelMode>().is_err());
+        assert!("".parse::<KernelMode>().is_err());
+        assert!("Scalar".parse::<KernelMode>().is_err());
+    }
+
+    #[test]
+    fn default_mode_is_scalar_and_default_vtable_is_the_bit_reference() {
+        assert_eq!(KernelMode::default(), KernelMode::Scalar);
+        let k = Kernels::default();
+        assert_eq!(k.mode(), KernelMode::Scalar);
+        assert_eq!(k.isa(), KernelIsa::Scalar);
+        assert!(!k.reassociate());
+    }
+
+    #[test]
+    fn for_mode_scalar_stays_on_the_scalar_isa() {
+        let k = Kernels::for_mode(KernelMode::Scalar);
+        assert_eq!(k.isa(), KernelIsa::Scalar);
+        let k = Kernels::for_mode(KernelMode::Auto);
+        assert_eq!(k.isa(), KernelIsa::detect());
+        assert!(k.reassociate());
+    }
+
+    #[test]
+    fn detect_is_stable_across_calls() {
+        assert_eq!(KernelIsa::detect(), KernelIsa::detect());
+        assert!(KernelIsa::detect().available());
+    }
+
+    #[test]
+    fn poly_ln_tracks_libm_ln() {
+        let mut r = Xoshiro::seeded(9);
+        for _ in 0..20_000 {
+            // spread across magnitudes: s = u * 2^k, k in [-300, 300)
+            let u = r.uniform().max(1e-3);
+            let k = (r.below(600) as i32) - 300;
+            let x = u * 2f64.powi(k);
+            let got = poly_ln(x);
+            let want = x.ln();
+            assert!(
+                (got - want).abs() <= 1e-10 * want.abs().max(1.0),
+                "poly_ln({x}) = {got}, ln = {want}"
+            );
+        }
+        // the polar-method domain specifically
+        for s in [1e-300, 1e-12, 0.017, 0.5, 0.999_999, 1.0 - f64::EPSILON] {
+            assert!((poly_ln(s) - s.ln()).abs() <= 1e-10 * s.ln().abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn gauss_fill_is_deterministic_for_fixed_lane_states() {
+        let lanes = || std::array::from_fn(|j| Xoshiro::seeded(100 + j as u64));
+        let k = Kernels::scalar();
+        let mut a = vec![0.0; 1000];
+        let mut b = vec![0.0; 1000];
+        GaussFill::from_lanes(lanes()).fill(&k, &mut a);
+        GaussFill::from_lanes(lanes()).fill(&k, &mut b);
+        assert_eq!(a, b);
+        // and invariant to how the output is chunked
+        let mut c = vec![0.0; 1000];
+        let mut g = GaussFill::from_lanes(lanes());
+        g.fill(&k, &mut c[..137]);
+        g.fill(&k, &mut c[137..612]);
+        g.fill(&k, &mut c[612..]);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn gauss_block_is_bitwise_identical_across_isas() {
+        if KernelIsa::detect() == KernelIsa::Scalar {
+            return; // scalar-only host: the pin is vacuous here, CI x86 covers it
+        }
+        let lanes = || -> [Xoshiro; 4] { std::array::from_fn(|j| Xoshiro::seeded(7 + j as u64)) };
+        let (ks, kv) = (
+            Kernels::with(KernelMode::Auto, KernelIsa::Scalar),
+            Kernels::with(KernelMode::Auto, KernelIsa::detect()),
+        );
+        let (mut ls, mut lv) = (lanes(), lanes());
+        let (mut outs, mut outv) = (Vec::new(), Vec::new());
+        for _ in 0..50 {
+            ks.gauss_block(&mut ls, &mut outs);
+            kv.gauss_block(&mut lv, &mut outv);
+        }
+        assert_eq!(outs.len(), outv.len());
+        for (a, b) in outs.iter().zip(&outv) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // lane states advanced identically too
+        for j in 0..4 {
+            assert_eq!(ls[j].state(), lv[j].state());
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Scalar kernel variants — the bit-reference every SIMD variant is
+//! pinned against. The elementwise loops here reproduce, operation for
+//! operation, the inner loops they replaced in `coordinator::optimizer`,
+//! `coordinator::noise`, `shard::reduce` and the engine collect paths;
+//! the blocked/batched variants (`sq_norm_wide`, `gauss_block`) mirror
+//! the AVX2 lane layout exactly so both ISAs produce the same bits in
+//! `auto` mode.
+
+use crate::util::rng::Xoshiro;
+
+use super::{poly_ln, AdamCoeffs, SgdCoeffs, GAUSS_ROUNDS, TWO_NEG53};
+
+pub fn axpy(acc: &mut [f32], x: &[f32], f: f32) {
+    for (a, v) in acc.iter_mut().zip(x) {
+        *a += f * *v;
+    }
+}
+
+pub fn add_assign(acc: &mut [f32], x: &[f32]) {
+    for (a, v) in acc.iter_mut().zip(x) {
+        *a += *v;
+    }
+}
+
+pub fn add2_assign(acc: &mut [f32], a: &[f32], b: &[f32]) {
+    for ((t, x), y) in acc.iter_mut().zip(a).zip(b) {
+        *t += *x + *y;
+    }
+}
+
+pub fn scale(x: &mut [f32], f: f32) {
+    for v in x.iter_mut() {
+        *v *= f;
+    }
+}
+
+pub fn add_noise_from(buf: &mut [f32], gauss: &[f64], std: f64) {
+    for (x, g) in buf.iter_mut().zip(gauss) {
+        *x += (std * *g) as f32;
+    }
+}
+
+pub fn sgd_update(p: &mut [f32], g: &[f32], m: &mut [f32], c: SgdCoeffs) {
+    for ((pj, gj), mj) in p.iter_mut().zip(g).zip(m.iter_mut()) {
+        let grad = *gj + c.weight_decay * *pj;
+        *mj = c.momentum * *mj + grad;
+        *pj -= c.lr * *mj;
+    }
+}
+
+pub fn adam_update(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], c: AdamCoeffs) {
+    for (((pj, gj), mj), vj) in p.iter_mut().zip(g).zip(m.iter_mut()).zip(v.iter_mut()) {
+        let grad = *gj + c.weight_decay * *pj;
+        *mj = c.beta1 * *mj + c.one_minus_beta1 * grad;
+        *vj = c.beta2 * *vj + c.one_minus_beta2 * grad * grad;
+        let mhat = *mj as f64 / c.bias1;
+        let vhat = *vj as f64 / c.bias2;
+        *pj -= (c.lr * mhat / (vhat.sqrt() + c.eps)) as f32;
+    }
+}
+
+/// Left-to-right `init + sum x^2` in f64 — the sequential bit-reference
+/// used in scalar mode (identical to the engines' original loops).
+pub fn sq_norm_seq(init: f64, x: &[f32]) -> f64 {
+    let mut sq = init;
+    for &v in x {
+        let v = v as f64;
+        sq += v * v;
+    }
+    sq
+}
+
+/// Blocked `sum x^2`: 8 partial f64 accumulators over chunks of 8
+/// elements, combined by the fixed tree
+/// `((a0+a4)+(a2+a6)) + ((a1+a5)+(a3+a7))`, then a sequential tail —
+/// the exact reduction the AVX2 variant performs, so both ISAs agree
+/// bitwise in `auto` mode.
+pub fn sq_norm_wide(x: &[f32]) -> f64 {
+    let mut acc = [0f64; 8];
+    let chunks = x.len() / 8;
+    for c in 0..chunks {
+        for (j, a) in acc.iter_mut().enumerate() {
+            let v = x[c * 8 + j] as f64;
+            *a += v * v;
+        }
+    }
+    let mut total =
+        ((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7]));
+    for &v in &x[chunks * 8..] {
+        let v = v as f64;
+        total += v * v;
+    }
+    total
+}
+
+#[inline]
+fn u64_unit(x: u64) -> f64 {
+    (x >> 11) as f64 * TWO_NEG53
+}
+
+/// One block of batched Marsaglia-polar gaussians: `GAUSS_ROUNDS` rounds,
+/// each drawing one (u, v) candidate per lane — all four u-draws, then
+/// all four v-draws, candidates consumed round-major/lane-minor — with
+/// acceptance `s < 1 && s != 0` and the [`poly_ln`] transform. This
+/// order matches the AVX2 variant's vectorized draws exactly.
+pub fn gauss_block(lanes: &mut [Xoshiro; 4], out: &mut Vec<f64>) {
+    for _ in 0..GAUSS_ROUNDS {
+        let mut a = [0u64; 4];
+        for (j, w) in a.iter_mut().enumerate() {
+            *w = lanes[j].next_u64();
+        }
+        let mut b = [0u64; 4];
+        for (j, w) in b.iter_mut().enumerate() {
+            *w = lanes[j].next_u64();
+        }
+        for j in 0..4 {
+            let u = 2.0 * u64_unit(a[j]) - 1.0;
+            let v = 2.0 * u64_unit(b[j]) - 1.0;
+            let s = u * u + v * v;
+            if s < 1.0 && s != 0.0 {
+                let r = ((-2.0 * poly_ln(s)) / s).sqrt();
+                out.push(u * r);
+                out.push(v * r);
+            }
+        }
+    }
+}

@@ -56,6 +56,7 @@ pub mod data;
 pub mod exp;
 pub mod federated;
 pub mod hybrid;
+pub mod kernels;
 pub mod metrics;
 pub mod obs;
 pub mod pipeline;

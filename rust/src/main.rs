@@ -86,7 +86,12 @@ USAGE:
                   per-phase rows, informational only)
   common: [--artifacts DIR] [--threads N]   (N > 1 fans the collect phase
                   across N OS threads — bitwise identical to sequential;
-                  GWCLIP_THREADS overrides) [--digest]   (print the bitwise
+                  GWCLIP_THREADS overrides) [--kernels scalar|auto]
+                  (host kernel dispatch: scalar = the bit-reference
+                  default, auto = detected-ISA elementwise kernels plus
+                  reassociated norm/reduce/gaussian kernels — a different,
+                  still deterministic, bit trace; GWCLIP_KERNELS
+                  overrides) [--digest]   (print the bitwise
                   state certificate — params FNV, thresholds, RNG stream
                   positions, eps spent — after the run)
 ";
@@ -169,6 +174,12 @@ fn cmd_resume(rt: &Runtime, args: &Args) -> Result<()> {
     // thread count is bitwise-neutral, so the override composes with a
     // resume (GWCLIP_THREADS still wins inside the builder)
     spec.threads = args.get_usize("threads", spec.threads)?;
+    // kernel mode is NOT bitwise-neutral; the override is allowed here so
+    // a resume can re-assert the snapshot's mode, and restore() refuses
+    // any mode that mismatches the one the snapshot recorded
+    if let Some(k) = args.flags.get("kernels") {
+        spec.kernels = k.parse()?;
+    }
     let (mut sess, train, eval) = SessionBuilder::from_spec(rt, spec).build_with_data()?;
     snapshot::restore(&mut sess, &snap)?;
     let trace_out = args.flags.get("trace-out").map(std::path::PathBuf::from);
@@ -211,7 +222,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     gwclip::serve::Daemon::bind(opts)?.run()
 }
 
-fn run_session(builder: SessionBuilder, args: &Args) -> Result<()> {
+fn run_session(mut builder: SessionBuilder, args: &Args) -> Result<()> {
+    // every run subcommand funnels through here, so one insertion point
+    // gives them all the --kernels override (spec < flag < GWCLIP_KERNELS;
+    // the builder applies the env half when it resolves the spec)
+    if let Some(k) = args.flags.get("kernels") {
+        builder = builder.kernels(k.parse()?);
+    }
     let (mut sess, train, eval) = builder.build_with_data()?;
     // span recording is observational only (no RNG, no feedback), so
     // enabling it cannot change what the run computes
@@ -347,6 +364,17 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
             None => println!("PHASE {name}: {:.4} ms (no prior)", 1e3 * new_s),
         }
     }
+    // per-kernel micro-bench rows (scalar vs detected-ISA variants) —
+    // informational for the same reason: per-ISA wall-clock is
+    // machine-dependent; the /step totals above are the gate
+    for (name, new_s, old_s) in &diff.kernels {
+        match old_s {
+            Some(o) => {
+                println!("KERNEL {name}: {:.4} ms (prior {:.4} ms)", 1e3 * new_s, 1e3 * o)
+            }
+            None => println!("KERNEL {name}: {:.4} ms (no prior)", 1e3 * new_s),
+        }
+    }
     for r in &diff.regressions {
         println!(
             "REGRESSION [{}] {}: {:.4} ms -> {:.4} ms ({:.2}x)",
@@ -388,6 +416,9 @@ fn apply_common_overrides(s: &mut RunSpec, args: &Args) -> Result<()> {
     s.data.n_data = args.get_usize("n-data", s.data.n_data)?;
     s.seed = args.get_u64("seed", s.seed)?;
     s.threads = args.get_usize("threads", s.threads)?;
+    if let Some(k) = args.flags.get("kernels") {
+        s.kernels = k.parse()?;
+    }
     Ok(())
 }
 

@@ -45,6 +45,7 @@ use crate::coordinator::noise::Rng;
 use crate::coordinator::optimizer::{Optimizer, OptimizerKind, Schedule};
 use crate::coordinator::sampler::{Batch, PoissonSampler};
 use crate::data::{Dataset, ModelBatch};
+use crate::kernels::Kernels;
 use crate::runtime::{checkpoint, Exec, HostValue, Runtime, Tensor};
 use crate::session::core::DpCore;
 use crate::session::grad::{Collected, GradUnit, Merged, StepTiming, UnitCollected};
@@ -209,6 +210,9 @@ pub struct PipelineEngine<'r> {
     sampler: Option<PoissonSampler>,
     /// round-robin minibatch cursor (sampling = round_robin)
     cursor: usize,
+    /// dispatched SIMD vtable (gradient accumulation; forwarded into the
+    /// per-stage optimizers)
+    kernels: Kernels,
 }
 
 impl<'r> PipelineEngine<'r> {
@@ -305,8 +309,18 @@ impl<'r> PipelineEngine<'r> {
             devices,
             sampler: None,
             cursor: 0,
+            kernels: Kernels::default(),
             opts,
         })
+    }
+
+    /// Install the session's dispatched kernel vtable on the engine and
+    /// every stage optimizer.
+    pub fn set_kernels(&mut self, kernels: Kernels) {
+        self.kernels = kernels;
+        for d in self.devices.iter_mut() {
+            d.optimizer.set_kernels(kernels);
+        }
     }
 
     /// Install the session's Poisson draw source (None keeps the legacy
@@ -742,9 +756,7 @@ impl<'r> PipelineEngine<'r> {
     fn accumulate(&mut self, stage: usize, grads: &[Tensor]) {
         let d = &mut self.devices[stage];
         for (a, g) in d.accum.iter_mut().zip(grads) {
-            for (av, gv) in a.data.iter_mut().zip(&g.data) {
-                *av += *gv;
-            }
+            self.kernels.add_assign(&mut a.data, &g.data);
         }
     }
 

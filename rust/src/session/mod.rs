@@ -52,11 +52,13 @@ use crate::federated::engine::FederatedWiring;
 use crate::federated::{CohortGrouping, FederatedEngine};
 use crate::hybrid::engine::HybridWiring;
 use crate::hybrid::{HybridEngine, PieceGrouping};
+use crate::kernels::Kernels;
 use crate::pipeline::{PipelineEngine, PipelineMode, PipelineOpts};
 use crate::runtime::{Runtime, Tensor};
 use crate::shard::engine::ShardWiring;
 use crate::shard::{ShardEngine, WorkerGrouping};
 
+pub use crate::kernels::KernelMode;
 pub use crate::shard::compress::CompressKind;
 
 pub use self::core::{CoreCfg, DpCore};
@@ -314,6 +316,17 @@ impl<'r> SessionBuilder<'r> {
         self
     }
 
+    /// Host-side kernel dispatch mode (default [`KernelMode::Scalar`],
+    /// the bit-reference). `auto` runs elementwise kernels on the fastest
+    /// detected ISA (bitwise identical to scalar) and switches the
+    /// reassociating kernels — squared norms, pair-folded tree reduction,
+    /// batched gaussian fill — to their blocked, mode-deterministic
+    /// variants. `GWCLIP_KERNELS` overrides this at run time.
+    pub fn kernels(mut self, mode: KernelMode) -> Self {
+        self.spec.kernels = mode;
+        self
+    }
+
     pub fn n_micro(mut self, j: usize) -> Self {
         self.spec.pipe.n_micro = j;
         self
@@ -368,6 +381,10 @@ impl<'r> SessionBuilder<'r> {
         // reporting-only: lets the step loop emit eps_spent per event
         // without re-deriving the schedule
         sess.steploop.planned_steps = sess.total_steps;
+        // one insertion point installs the resolved kernel mode on the
+        // step loop and every backend hot loop (spec < GWCLIP_KERNELS)
+        let mode = sess.spec.resolved_kernels();
+        sess.set_kernels(Kernels::for_mode(mode));
         Ok(sess)
     }
 
@@ -1177,6 +1194,26 @@ impl<'r> Session<'r> {
     /// serve daemon resolves it per session at submit time.
     pub fn set_threads(&mut self, n: usize) {
         self.steploop.threads = n.max(1);
+    }
+
+    /// Install a dispatched kernel vtable on the step loop and every
+    /// backend hot loop (optimizers, reduction trees, compressors). The
+    /// builder calls this with the spec's resolved mode; tests call it
+    /// directly to pin explicit mode x ISA combinations.
+    pub fn set_kernels(&mut self, kernels: Kernels) {
+        self.steploop.kernels = kernels;
+        match &mut self.backend {
+            Backend::Single(t) => t.set_kernels(kernels),
+            Backend::Pipeline(e) => e.set_kernels(kernels),
+            Backend::Sharded(e) => e.set_kernels(kernels),
+            Backend::Hybrid(e) => e.set_kernels(kernels),
+            Backend::Federated(e) => e.set_kernels(kernels),
+        }
+    }
+
+    /// The kernel vtable the step loop currently runs with.
+    pub fn kernels(&self) -> Kernels {
+        self.steploop.kernels
     }
 
     /// Enable per-phase span tracing ([`crate::obs::trace`]). Tracing is

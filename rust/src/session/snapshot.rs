@@ -186,6 +186,11 @@ pub fn capture(sess: &Session) -> Json {
     top.insert("format".to_string(), Json::Str(FORMAT.to_string()));
     top.insert("version".to_string(), Json::Num(VERSION as f64));
     top.insert("spec".to_string(), sess.spec.to_json());
+    // the RUNNING kernel mode (spec < GWCLIP_KERNELS as resolved at build
+    // time), not the spec field: `auto` reassociates the noise fill and
+    // the reduction trees, so the mode binds the bit trace and a resume
+    // must run under the same one
+    top.insert("kernels".to_string(), Json::Str(sess.kernels().mode().token().to_string()));
     top.insert("steps_done".to_string(), Json::Num(sess.steploop.steps_done as f64));
     top.insert("total_steps".to_string(), Json::Num(sess.total_steps as f64));
 
@@ -360,16 +365,36 @@ pub fn restore(sess: &mut Session, snap: &Json) -> Result<()> {
 
     // spec must match (thread count aside: it has no bitwise effect by
     // the PR 7 parity contract, so resuming under a different thread
-    // count is allowed and documented)
+    // count is allowed and documented; the spec's `kernels` field is
+    // likewise neutralized because the binding check is on the RESOLVED
+    // running mode below, which `GWCLIP_KERNELS` may override)
     let snap_spec = spec_of(snap)?;
     let mut a = snap_spec.clone();
     let mut b = sess.spec.clone();
     a.threads = 0;
     b.threads = 0;
+    a.kernels = Default::default();
+    b.kernels = Default::default();
     ensure!(
         a == b,
         "snapshot was taken under a different spec; rebuild the session from the snapshot's \
          embedded spec (gwclip resume) instead of restoring across specs"
+    );
+
+    // kernel-mode continuity: `scalar` and `auto` produce different (both
+    // deterministic) noise/reduction bit traces, so resuming under a
+    // different mode would splice two incompatible trajectories. Older
+    // snapshots without the field predate the knob and were scalar runs.
+    let snap_mode = match snap.opt("kernels") {
+        Some(v) => v.str()?.to_string(),
+        None => "scalar".to_string(),
+    };
+    let live_mode = sess.kernels().mode().token();
+    ensure!(
+        snap_mode == live_mode,
+        "snapshot was written by a `kernels = {snap_mode}` run but this session resolved \
+         `kernels = {live_mode}`; the two modes produce different bit traces — resume with \
+         the snapshot's mode (spec `kernels` field, --kernels, or GWCLIP_KERNELS)"
     );
 
     let kind = snap.get("backend")?.get("kind")?.str()?;

@@ -24,6 +24,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::noise::Allocation;
 use crate::coordinator::optimizer::OptimizerKind;
+use crate::kernels::KernelMode;
 use crate::coordinator::trainer::Method;
 use crate::pipeline::PipelineMode;
 use crate::shard::compress::CompressKind;
@@ -1176,6 +1177,15 @@ pub struct RunSpec {
     /// unit noises on its own seed-derived RNG stream — so this is purely
     /// a wall-clock knob. `GWCLIP_THREADS` overrides it at run time.
     pub threads: usize,
+    /// Host-side kernel dispatch mode. `scalar` (the default) keeps every
+    /// host loop on the bit-reference scalar kernels — byte-identical to
+    /// historical runs. `auto` picks the fastest detected ISA for the
+    /// elementwise kernels (bitwise identical to scalar by construction)
+    /// AND switches the reassociating kernels (squared norms, pair-folded
+    /// tree reduction, batched gaussian fill) to their blocked variants,
+    /// which produce different — but mode-deterministic, host-independent
+    /// — bits. `--kernels` / `GWCLIP_KERNELS` override it at run time.
+    pub kernels: KernelMode,
 }
 
 impl Default for RunSpec {
@@ -1195,6 +1205,7 @@ impl Default for RunSpec {
             federated: None,
             compress: None,
             threads: 1,
+            kernels: KernelMode::Scalar,
         }
     }
 }
@@ -1215,6 +1226,22 @@ pub fn resolve_threads(spec: usize, flag: Option<usize>, env: Option<&str>) -> u
         .max(1)
 }
 
+/// The one kernel-mode precedence rule, mirroring [`resolve_threads`]:
+/// spec < per-invocation override (the `--kernels` flag) < the
+/// `GWCLIP_KERNELS` environment of the process that runs the steps. An
+/// unparseable environment token falls through silently (same contract as
+/// `GWCLIP_THREADS`: the environment is advisory); bad spec/CLI tokens
+/// are rejected loudly at parse time instead, before reaching here.
+pub fn resolve_kernels(
+    spec: KernelMode,
+    flag: Option<KernelMode>,
+    env: Option<&str>,
+) -> KernelMode {
+    env.and_then(|v| v.trim().parse::<KernelMode>().ok())
+        .or(flag)
+        .unwrap_or(spec)
+}
+
 impl RunSpec {
     pub fn for_config(config: &str) -> Self {
         RunSpec { config: config.to_string(), ..Default::default() }
@@ -1228,6 +1255,15 @@ impl RunSpec {
     /// without entering the manifest.
     pub fn resolved_threads(&self) -> usize {
         resolve_threads(self.threads, None, std::env::var("GWCLIP_THREADS").ok().as_deref())
+    }
+
+    /// The kernel mode the session should actually run with: the
+    /// `GWCLIP_KERNELS` environment override when set and parseable,
+    /// otherwise the spec's `kernels` field. Like `resolved_threads`, the
+    /// override never touches the spec itself, so serialization
+    /// round-trips are unaffected.
+    pub fn resolved_kernels(&self) -> KernelMode {
+        resolve_kernels(self.kernels, None, std::env::var("GWCLIP_KERNELS").ok().as_deref())
     }
 
     /// Builder-time validation of every nonsensical-spec class (satellite
@@ -1446,6 +1482,7 @@ impl RunSpec {
         m.insert("expected_batch".into(), Json::Num(self.expected_batch as f64));
         m.insert("seed".into(), Json::Num(self.seed as f64));
         m.insert("threads".into(), Json::Num(self.threads as f64));
+        m.insert("kernels".into(), Json::Str(self.kernels.token().to_string()));
         m.insert("privacy".into(), self.privacy.to_json());
         m.insert("clip".into(), self.clip.to_json());
         m.insert("optim".into(), self.optim.to_json());
@@ -1473,6 +1510,7 @@ impl RunSpec {
             epochs: opt_f64(j, "epochs", d.epochs)?,
             expected_batch: opt_usize(j, "expected_batch", d.expected_batch)?,
             threads: opt_usize(j, "threads", d.threads)?,
+            kernels: opt_str(j, "kernels", d.kernels.token())?.parse()?,
             seed: match j.opt("seed") {
                 Some(v) => v.u64()?,
                 None => d.seed,

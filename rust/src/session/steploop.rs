@@ -58,6 +58,7 @@ use anyhow::Result;
 
 use crate::coordinator::noise::{add_noise, Rng};
 use crate::data::Dataset;
+use crate::kernels::{GaussFill, Kernels};
 use crate::obs::{PhaseSecs, Span, Tracer};
 
 use super::core::DpCore;
@@ -216,6 +217,12 @@ pub struct StepLoop {
     /// denominator of the per-step `eps_spent` release fraction. Set by
     /// the session builder; reporting-only
     pub planned_steps: u64,
+    /// dispatched SIMD kernel vtable for the loop's own hot loops (noise
+    /// fill + noise add, update rescale). `Kernels::scalar()` (the
+    /// default) keeps the legacy one-gaussian-at-a-time bit-reference;
+    /// the session builder installs the vtable the spec's `kernels` mode
+    /// resolves to (see [`crate::kernels`])
+    pub kernels: Kernels,
     /// durations of dealt-but-unconsumed draws (FIFO): the prefetching
     /// loader deals step t+1 during step t, so each deal's wall time is
     /// queued here and popped by the step that consumes the draw
@@ -236,6 +243,7 @@ impl StepLoop {
             threads: threads.max(1),
             trace: None,
             planned_steps: 0,
+            kernels: Kernels::default(),
             deal_secs: VecDeque::new(),
         }
     }
@@ -322,10 +330,33 @@ impl StepLoop {
                 })
                 .collect();
             let stds = &stds;
+            let kn = self.kernels;
             run_buckets(jobs, self.threads, move |(unit, mut rng)| {
                 debug_assert_eq!(unit.tensors.len(), unit.groups.len());
-                for (t, &g) in unit.tensors.iter_mut().zip(&unit.groups) {
-                    add_noise(&mut t.data, stds[g] * share, &mut rng);
+                if kn.reassociate() {
+                    // batched fill: four lanes split off the unit's child
+                    // stream generate gaussians in blocks, added through
+                    // the bit-exact add_noise_from kernel. The core RNG
+                    // still advances exactly one split per unit, so the
+                    // scalar-vs-auto difference is confined to the bits of
+                    // the noise itself (the documented `kernels` contract)
+                    let mut fill = GaussFill::new(&mut rng);
+                    let mut scratch: Vec<f64> = Vec::new();
+                    for (t, &g) in unit.tensors.iter_mut().zip(&unit.groups) {
+                        let std = stds[g] * share;
+                        if std == 0.0 {
+                            continue;
+                        }
+                        scratch.resize(t.data.len(), 0.0);
+                        fill.fill(&kn, &mut scratch);
+                        kn.add_noise_from(&mut t.data, &scratch, std);
+                    }
+                } else {
+                    // the sequential bit-reference: one Marsaglia draw at
+                    // a time on the unit's child stream
+                    for (t, &g) in unit.tensors.iter_mut().zip(&unit.groups) {
+                        add_noise(&mut t.data, stds[g] * share, &mut rng);
+                    }
                 }
             });
         }
@@ -340,9 +371,7 @@ impl StepLoop {
         let scale = backend.update_scale(col.live);
         if scale != 1.0 {
             for t in merged.tensors.iter_mut() {
-                for v in t.data.iter_mut() {
-                    *v *= scale;
-                }
+                self.kernels.scale(&mut t.data, scale);
             }
         }
 
@@ -708,6 +737,37 @@ mod tests {
             assert_eq!(seq.core.rng.stream_pos(), par.core.rng.stream_pos());
             assert_eq!(seq.draw_rng.stream_pos(), par.draw_rng.stream_pos());
         }
+    }
+
+    #[test]
+    fn steploop_auto_kernels_keep_stream_positions_but_change_noise_bits() {
+        // kernels = auto swaps the noise-fill algorithm (batched 4-lane
+        // polar) but the core RNG discipline is unchanged: one split per
+        // unit, quantile on the core stream. So thresholds and every
+        // stream position must match scalar bitwise, while the noise
+        // itself differs — exactly the documented `kernels` contract.
+        let (units, k, seed) = (2usize, 2usize, 7u64);
+        let mut a = StepLoop::new(core(k, seed));
+        let mut b = StepLoop::new(core(k, seed));
+        b.kernels = Kernels::for_mode(crate::kernels::KernelMode::Auto);
+        let mut ba = stub(units, k);
+        let mut bb = stub(units, k);
+        let data = NullData(64);
+        let mut noise_differs = false;
+        for step in 0..3 {
+            let e1 = a.step(&mut ba, &data).unwrap();
+            let e2 = b.step(&mut bb, &data).unwrap();
+            assert_eq!(e1.batch_size, e2.batch_size, "step {step}: same draw");
+            assert_eq!(a.core.thresholds(), b.core.thresholds(), "step {step}");
+            for (ta, tb) in ba.applied.iter().zip(&bb.applied) {
+                if ta.data != tb.data {
+                    noise_differs = true;
+                }
+            }
+        }
+        assert_eq!(a.core.rng.stream_pos(), b.core.rng.stream_pos());
+        assert_eq!(a.draw_rng.stream_pos(), b.draw_rng.stream_pos());
+        assert!(noise_differs, "auto mode must draw a different noise stream");
     }
 
     #[test]

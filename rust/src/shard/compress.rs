@@ -29,6 +29,7 @@ use std::str::FromStr;
 
 use anyhow::{bail, Result};
 
+use crate::kernels::Kernels;
 use crate::runtime::Tensor;
 use crate::util::rng::Xoshiro;
 
@@ -75,6 +76,8 @@ pub struct Compressor {
     residuals: Vec<Vec<Tensor>>,
     /// dedicated selection stream (random-k); NEVER the DpCore RNG
     rng: Xoshiro,
+    /// dispatched vtable for the error-feedback add (bit-exact kernel)
+    kernels: Kernels,
 }
 
 impl Compressor {
@@ -95,7 +98,14 @@ impl Compressor {
             error_feedback,
             residuals: vec![Vec::new(); units],
             rng: Xoshiro::seeded(seed ^ 0x9E37_79B9_7F4A_7C15),
+            kernels: Kernels::default(),
         }
+    }
+
+    /// Install the session's dispatched kernel vtable (the EF add is a
+    /// bit-exact elementwise kernel, so this never changes selection).
+    pub fn set_kernels(&mut self, kernels: Kernels) {
+        self.kernels = kernels;
     }
 
     pub fn kind(&self) -> CompressKind {
@@ -142,9 +152,7 @@ impl Compressor {
                 continue;
             }
             if self.error_feedback {
-                for (v, rv) in t.data.iter_mut().zip(&r.data) {
-                    *v += *rv;
-                }
+                self.kernels.add_assign(&mut t.data, &r.data);
             }
             let k = self.keep(n);
             let kept = match self.kind {

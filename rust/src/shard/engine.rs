@@ -33,6 +33,7 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::noise::Rng;
 use crate::coordinator::optimizer::{Optimizer, OptimizerKind};
 use crate::data::Dataset;
+use crate::kernels::Kernels;
 use crate::runtime::{ConfigManifest, Exec, HostValue, Runtime, Tensor};
 use crate::session::core::DpCore;
 use crate::session::grad::{fold_parts, Collected, GradUnit, Merged, StepTiming, UnitCollected};
@@ -40,7 +41,7 @@ use crate::session::spec::CompressSpec;
 use crate::session::steploop::{BackendStep, UnitTask};
 
 use super::compress::Compressor;
-use super::reduce::{tree_reduce, ReduceModel};
+use super::reduce::{tree_reduce_with, ReduceModel};
 use super::sampler::{ShardBatch, ShardSampler};
 
 /// How clipping-threshold groups map onto the worker topology (resolved
@@ -128,6 +129,9 @@ pub struct ShardEngine<'r> {
     /// timings would have produced without compression — the
     /// apples-to-apples baseline benches assert against
     last_dense_sims: Option<(f64, f64)>,
+    /// dispatched SIMD vtable for the engine's own hot loops (nonprivate
+    /// rescale, tree-reduce folds); forwarded into optimizers/compressor
+    kernels: Kernels,
 }
 
 impl<'r> ShardEngine<'r> {
@@ -209,8 +213,21 @@ impl<'r> ShardEngine<'r> {
             compressor,
             worker_lives: vec![0; w.workers],
             last_dense_sims: None,
+            kernels: Kernels::default(),
             cfg,
         })
+    }
+
+    /// Install the session's dispatched kernel vtable on the engine and
+    /// every replica optimizer / the compressor.
+    pub fn set_kernels(&mut self, kernels: Kernels) {
+        self.kernels = kernels;
+        for r in self.replicas.iter_mut() {
+            r.optimizer.set_kernels(kernels);
+        }
+        if let Some(c) = self.compressor.as_mut() {
+            c.set_kernels(kernels);
+        }
     }
 
     /// The (overlap, barrier) makespans the most recent step's timings
@@ -383,6 +400,7 @@ impl BackendStep for ShardEngine<'_> {
         let grouping = self.grouping;
         let private = self.private;
         let workers = self.workers;
+        let kn = self.kernels;
         let group_of_trainable: &'a [usize] = &self.group_of_trainable;
         self.replicas
             .iter()
@@ -445,9 +463,7 @@ impl BackendStep for ShardEngine<'_> {
                         // share of the merged update
                         let scale = live_w as f32;
                         for t in grads.iter_mut() {
-                            for v in t.data.iter_mut() {
-                                *v *= scale;
-                            }
+                            kn.scale(&mut t.data, scale);
                         }
                     }
                     // worker-major unit order with the per-tensor group
@@ -566,7 +582,7 @@ impl BackendStep for ShardEngine<'_> {
             _ => 1.0,
         };
 
-        let merged = tree_reduce(parts, self.fanout);
+        let merged = tree_reduce_with(self.kernels, parts, self.fanout);
 
         // -------- simulated N-worker latency (overlap vs barrier) --------
         // A real cluster runs the replicas concurrently, so the modeled

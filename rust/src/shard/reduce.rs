@@ -17,6 +17,7 @@
 //! **Barrier** reduction waits for the whole backward pass, then reduces
 //! every layer — the naive data-parallel baseline.
 
+use crate::kernels::Kernels;
 use crate::runtime::Tensor;
 
 /// Rounds a fanout-`f` reduction tree needs over `workers` participants.
@@ -45,7 +46,19 @@ pub fn quadrature_bound(thresholds: &[f64]) -> f64 {
 /// groups of `f` consecutive participants into the group's first slot.
 /// A single participant passes through untouched (bitwise), which the
 /// 1-worker parity test relies on.
-pub fn tree_reduce(mut parts: Vec<Vec<Tensor>>, fanout: usize) -> Vec<Tensor> {
+pub fn tree_reduce(parts: Vec<Vec<Tensor>>, fanout: usize) -> Vec<Tensor> {
+    tree_reduce_with(Kernels::scalar(), parts, fanout)
+}
+
+/// [`tree_reduce`] through a dispatched kernel vtable. In scalar mode the
+/// folds run one participant at a time through the bit-exact `add_assign`
+/// kernel — bitwise identical to the legacy loop on every ISA. In auto
+/// mode ([`Kernels::reassociate`]) participants within a group fold in
+/// PAIRS (`acc += a + b`), halving the passes over the accumulator at the
+/// cost of a reassociated summation order — which is exactly why the pair
+/// fold is gated behind the `kernels` knob (drift-bounded, see
+/// `tests/kernels.rs`).
+pub fn tree_reduce_with(k: Kernels, mut parts: Vec<Vec<Tensor>>, fanout: usize) -> Vec<Tensor> {
     assert!(!parts.is_empty());
     let f = fanout.max(2);
     while parts.len() > 1 {
@@ -53,11 +66,27 @@ pub fn tree_reduce(mut parts: Vec<Vec<Tensor>>, fanout: usize) -> Vec<Tensor> {
         let mut it = parts.into_iter();
         loop {
             let Some(mut acc) = it.next() else { break };
+            let mut group: Vec<Vec<Tensor>> = Vec::with_capacity(f - 1);
             for _ in 1..f {
                 let Some(other) = it.next() else { break };
-                for (a, o) in acc.iter_mut().zip(&other) {
-                    for (av, ov) in a.data.iter_mut().zip(&o.data) {
-                        *av += *ov;
+                group.push(other);
+            }
+            if k.reassociate() {
+                let mut gi = group.chunks_exact(2);
+                for pair in gi.by_ref() {
+                    for ((t, x), y) in acc.iter_mut().zip(&pair[0]).zip(&pair[1]) {
+                        k.add2_assign(&mut t.data, &x.data, &y.data);
+                    }
+                }
+                for other in gi.remainder() {
+                    for (a, o) in acc.iter_mut().zip(other) {
+                        k.add_assign(&mut a.data, &o.data);
+                    }
+                }
+            } else {
+                for other in &group {
+                    for (a, o) in acc.iter_mut().zip(other) {
+                        k.add_assign(&mut a.data, &o.data);
                     }
                 }
             }
@@ -218,6 +247,39 @@ mod tests {
         let t = Tensor::from_vec(&[3], vec![0.1, -0.2, 0.3]).unwrap();
         let merged = tree_reduce(vec![vec![t.clone()]], 2);
         assert_eq!(merged[0].data, t.data);
+        // the auto pair-fold degenerates to the same identity
+        let k = Kernels::for_mode(crate::kernels::KernelMode::Auto);
+        let merged = tree_reduce_with(k, vec![vec![t.clone()]], 2);
+        assert_eq!(merged[0].data, t.data);
+    }
+
+    #[test]
+    fn pair_fold_tree_stays_within_fp_drift_of_the_sequential_tree() {
+        let mk = |seed: u64, len: usize| {
+            let mut x = seed;
+            let data: Vec<f32> = (0..len)
+                .map(|_| {
+                    x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    ((x >> 33) as f32 / 2e9) - 1.0
+                })
+                .collect();
+            vec![Tensor::from_vec(&[len], data).unwrap()]
+        };
+        let auto = Kernels::for_mode(crate::kernels::KernelMode::Auto);
+        for workers in [2usize, 3, 5, 8, 13] {
+            for fanout in [2usize, 3, 4, 8] {
+                let parts = |s| (0..workers).map(|w| mk(w as u64 + s, 37)).collect::<Vec<_>>();
+                let seq = tree_reduce(parts(1), fanout);
+                let par = tree_reduce_with(auto, parts(1), fanout);
+                for (a, b) in seq[0].data.iter().zip(&par[0].data) {
+                    let tol = 1e-5 * a.abs().max(1.0);
+                    assert!(
+                        (a - b).abs() <= tol,
+                        "workers={workers} fanout={fanout}: {a} vs {b}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -198,6 +198,12 @@ pub struct BenchDiff {
     /// old_s)` — like `measured`, informational only: phase splits are
     /// machine-dependent wall-clock, the `/step` totals are the gate
     pub phases: Vec<(String, f64, Option<f64>)>,
+    /// per-kernel micro-bench rows (names containing `"/kernel-"`, e.g.
+    /// `hotpath/kernel-gauss-fill/avx2`) in the NEW trajectory as
+    /// `(suite/name, new_s, old_s)` — informational only: the kernel rows
+    /// exist so the scalar-vs-SIMD trajectory is visible per ISA, while
+    /// the `/step` totals remain the sole gate
+    pub kernels: Vec<(String, f64, Option<f64>)>,
 }
 
 /// List the `BENCH_<suite>.json` files in a directory (empty if absent).
@@ -243,6 +249,9 @@ pub fn diff_dirs(
             if name.contains("/phase-") {
                 diff.phases.push((format!("{suite}/{name}"), *mean, None));
             }
+            if name.contains("/kernel-") {
+                diff.kernels.push((format!("{suite}/{name}"), *mean, None));
+            }
         }
         diff.additions.push(if suite.is_empty() {
             fname.clone()
@@ -274,6 +283,10 @@ pub fn diff_dirs(
             if name.contains("/phase-") {
                 let prior = old_rows.iter().find(|(n, _)| n == name).map(|(_, m)| *m);
                 diff.phases.push((format!("{suite}/{name}"), *new_mean, prior));
+            }
+            if name.contains("/kernel-") {
+                let prior = old_rows.iter().find(|(n, _)| n == name).map(|(_, m)| *m);
+                diff.kernels.push((format!("{suite}/{name}"), *new_mean, prior));
             }
             let Some((_, old_mean)) = old_rows.iter().find(|(n, _)| n == name) else {
                 continue;
@@ -358,6 +371,9 @@ mod tests {
             // per-phase splits likewise surface without gating, even
             // when wildly slower than any prior
             BenchResult::scalar("x/step/phase-noise", 0.8),
+            // per-kernel rows surface the scalar-vs-SIMD trajectory,
+            // informational like the phase rows
+            BenchResult { name: "x/kernel-sq-norm/avx2".into(), iters: 3, mean_s: 0.7, std_s: 0.0, min_s: 0.7 },
         ];
         write_json_to(old.join("BENCH_shared.json"), "shared", &shared_old).unwrap();
         write_json_to(new.join("BENCH_shared.json"), "shared", &shared_new).unwrap();
@@ -402,6 +418,23 @@ mod tests {
         assert!(
             !d.additions.iter().any(|a| a.contains("/phase-")),
             "phase rows are not step-gate additions: {:?}",
+            d.additions
+        );
+        // kernel rows: surfaced per ISA with no prior, never gated, never
+        // counted as step-gate additions
+        assert!(
+            d.kernels.contains(&("shared/x/kernel-sq-norm/avx2".to_string(), 0.7, None)),
+            "{:?}",
+            d.kernels
+        );
+        assert!(
+            d.kernels.contains(&("federated/x/kernel-sq-norm/avx2".to_string(), 0.7, None)),
+            "{:?}",
+            d.kernels
+        );
+        assert!(
+            !d.additions.iter().any(|a| a.contains("/kernel-")),
+            "kernel rows are not step-gate additions: {:?}",
             d.additions
         );
         std::fs::remove_dir_all(&base).ok();

@@ -1482,6 +1482,197 @@ fn threaded_collect_is_bitwise_identical_to_sequential_on_every_backend() {
     );
 }
 
+// ---------------------------------------------- kernel-ISA parity
+
+/// ISSUE 10 acceptance: the elementwise kernel class is bit-exact across
+/// ISAs, so in scalar MODE the ISA a session's vtable dispatches to must
+/// be completely invisible — same per-step events (loss, draws, clip
+/// fractions, mean norms to the bit), same adaptive threshold trajectory,
+/// same final parameters, and the same post-run RNG stream positions. On
+/// a host without AVX2 the pair degenerates to scalar-vs-scalar and the
+/// pin is vacuous; CI's x86 runners carry the real check.
+fn assert_kernel_isa_parity(mk: &dyn Fn() -> Session<'static>, data: &dyn Dataset, label: &str) {
+    use gwclip::kernels::{KernelIsa, KernelMode, Kernels};
+    let mut ref_sess = mk();
+    let mut isa_sess = mk();
+    ref_sess.set_kernels(Kernels::with(KernelMode::Scalar, KernelIsa::Scalar));
+    isa_sess.set_kernels(Kernels::with(KernelMode::Scalar, KernelIsa::detect()));
+    let ea = ref_sess.run(data, 0).unwrap();
+    let eb = isa_sess.run(data, 0).unwrap();
+    assert_eq!(ea.len(), eb.len(), "{label}: step counts");
+    for (a, b) in ea.iter().zip(&eb) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{label} step {}: loss", a.step);
+        assert_eq!(a.batch_size, b.batch_size, "{label} step {}: draw", a.step);
+        for (x, y) in a.clip_frac.iter().zip(&b.clip_frac) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label} step {}: clip_frac", a.step);
+        }
+        for (x, y) in a.mean_norms.iter().zip(&b.mean_norms) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label} step {}: mean_norms", a.step);
+        }
+    }
+    assert_eq!(ref_sess.thresholds(), isa_sess.thresholds(), "{label}: threshold trajectories");
+    let pa = ref_sess.param_map();
+    let pb = isa_sess.param_map();
+    assert_eq!(pa.len(), pb.len(), "{label}");
+    for (name, ta) in &pa {
+        assert_eq!(ta.data, pb[name].data, "{label}: parameter {name} diverged");
+    }
+    assert_eq!(ref_sess.stream_pos(), isa_sess.stream_pos(), "{label}: RNG stream positions");
+}
+
+#[test]
+fn scalar_mode_kernel_isa_is_bitwise_invisible_on_every_backend() {
+    let mixture = tiny_mixture(256, 23);
+    let corpus = {
+        let cfg = rt().manifest.config("lm_tiny_pipe").unwrap().clone();
+        MarkovCorpus::new(64, cfg.hyper.seq, cfg.hyper.vocab, 4, 3)
+    };
+
+    // single-device: optimizer apply is the only kernel call site
+    assert_kernel_isa_parity(
+        &|| {
+            Session::builder(rt(), "resmlp_tiny")
+                .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+                .clip(ClipPolicy {
+                    clip_init: 0.5,
+                    ..ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive)
+                })
+                .optim(OptimSpec::adam(1e-3))
+                .epochs(0.25)
+                .seed(61)
+                .build(256)
+                .unwrap()
+        },
+        &mixture,
+        "single",
+    );
+
+    // sharded: clip apply, tree-reduce folds, worker-mean scale
+    assert_kernel_isa_parity(
+        &|| {
+            Session::builder(rt(), "resmlp_tiny")
+                .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+                .clip(ClipPolicy {
+                    clip_init: 0.5,
+                    target_q: 0.6,
+                    ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive)
+                })
+                .optim(OptimSpec::sgd(0.1))
+                .epochs(0.25)
+                .seed(62)
+                .shard(ShardSpec { workers: 3, fanout: 2, ..Default::default() })
+                .build(256)
+                .unwrap()
+        },
+        &mixture,
+        "sharded",
+    );
+
+    // pipeline: stage-gradient accumulation across micro-batches
+    assert_kernel_isa_parity(
+        &|| {
+            Session::builder(rt(), "lm_tiny_pipe")
+                .privacy(PrivacySpec { epsilon: 4.0, delta: 1e-5, quantile_r: 0.01 })
+                .clip(ClipPolicy {
+                    clip_init: 0.5,
+                    ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive)
+                })
+                .optim(OptimSpec::sgd(0.05))
+                .epochs(0.25)
+                .n_micro(2)
+                .seed(63)
+                .build(64)
+                .unwrap()
+        },
+        &corpus,
+        "pipeline",
+    );
+
+    // hybrid: replica merge through tree-reduce on top of the pipeline
+    assert_kernel_isa_parity(
+        &|| {
+            Session::builder(rt(), "lm_tiny_pipe")
+                .privacy(PrivacySpec { epsilon: 4.0, delta: 1e-5, quantile_r: 0.01 })
+                .clip(ClipPolicy {
+                    clip_init: 0.5,
+                    ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive)
+                })
+                .optim(OptimSpec::sgd(0.05))
+                .epochs(0.25)
+                .n_micro(2)
+                .seed(64)
+                .hybrid(HybridSpec { replicas: 2, fanout: 2, ..Default::default() })
+                .build(64)
+                .unwrap()
+        },
+        &corpus,
+        "hybrid",
+    );
+
+    // federated: per-user delta accumulation, sq-norm clipping, local SGD
+    assert_kernel_isa_parity(
+        &|| {
+            Session::builder(rt(), "resmlp_tiny")
+                .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+                .clip(ClipPolicy {
+                    clip_init: 0.5,
+                    target_q: 0.6,
+                    ..ClipPolicy::new(GroupBy::PerDevice, ClipMode::Adaptive)
+                })
+                .optim(OptimSpec::sgd(0.1))
+                .epochs(0.25)
+                .seed(65)
+                .federated(FederatedSpec {
+                    population: 256,
+                    user_rate: 12.0 / 256.0,
+                    ..Default::default()
+                })
+                .build(256)
+                .unwrap()
+        },
+        &mixture,
+        "federated",
+    );
+}
+
+#[test]
+fn spec_kernels_scalar_is_identical_to_the_default() {
+    // an explicit `kernels = "scalar"` and an omitted knob build the same
+    // run, bit for bit (both resolve through the same env, so the pin
+    // holds under any GWCLIP_KERNELS too)
+    use gwclip::session::KernelMode;
+    let data = tiny_mixture(256, 29);
+    let mk = |explicit: bool| {
+        let mut b = Session::builder(rt(), "resmlp_tiny")
+            .privacy(PrivacySpec { epsilon: 8.0, delta: 1e-5, quantile_r: 0.01 })
+            .clip(ClipPolicy {
+                clip_init: 0.5,
+                ..ClipPolicy::new(GroupBy::PerLayer, ClipMode::Adaptive)
+            })
+            .optim(OptimSpec::sgd(0.1))
+            .epochs(0.25)
+            .seed(71);
+        if explicit {
+            b = b.kernels(KernelMode::Scalar);
+        }
+        b.build(256).unwrap()
+    };
+    let mut a = mk(false);
+    let mut b = mk(true);
+    let ea = a.run(&data, 0).unwrap();
+    let eb = b.run(&data, 0).unwrap();
+    assert_eq!(ea.len(), eb.len());
+    for (x, y) in ea.iter().zip(&eb) {
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "step {}", x.step);
+    }
+    let pa = a.param_map();
+    let pb = b.param_map();
+    for (name, ta) in &pa {
+        assert_eq!(ta.data, pb[name].data, "parameter {name} diverged");
+    }
+    assert_eq!(a.stream_pos(), b.stream_pos());
+}
+
 // ---------------------------------------------- tracing-on/off parity
 
 /// ISSUE 9 acceptance: enabling span tracing must be invisible to the

@@ -733,6 +733,74 @@ fn federated_validation_rejects_each_nonsense_class() {
     assert!(s.validate().is_err(), "pipeline.steps x [federated]");
 }
 
+// ---------------------------------------------------------------- kernels
+
+#[test]
+fn kernels_knob_roundtrips_json_and_toml_and_defaults_to_scalar() {
+    use gwclip::session::KernelMode;
+
+    // omitted -> scalar (the bit-reference; auto must be opted into)
+    let plain = RunSpec::for_config("resmlp");
+    assert_eq!(plain.kernels, KernelMode::Scalar);
+    assert_eq!(roundtrip(&plain).kernels, KernelMode::Scalar);
+
+    // JSON: both tokens survive a round-trip
+    for mode in [KernelMode::Scalar, KernelMode::Auto] {
+        let mut spec = RunSpec::for_config("resmlp");
+        spec.kernels = mode;
+        assert_eq!(roundtrip(&spec), spec, "{mode:?}");
+    }
+
+    // TOML: the top-level key parses like `threads`
+    let toml = "config = \"resmlp\"\nepochs = 1.0\nkernels = \"auto\"\n";
+    let spec = RunSpec::parse(toml).unwrap();
+    assert_eq!(spec.kernels, KernelMode::Auto);
+    assert_eq!(RunSpec::parse(&spec.render_json()).unwrap(), spec);
+
+    // bad tokens are rejected loudly at parse time (the ISA is not a
+    // mode: auto picks the ISA, the spec picks the semantics)
+    for bad in ["avx2", "fast", "Scalar", ""] {
+        let doc = format!("config = \"resmlp\"\nepochs = 1.0\nkernels = \"{bad}\"\n");
+        assert!(RunSpec::parse(&doc).is_err(), "must reject kernels = {bad:?}");
+    }
+}
+
+#[test]
+fn kernels_precedence_is_spec_then_flag_then_env() {
+    use gwclip::session::spec::resolve_kernels;
+    use gwclip::session::KernelMode::{Auto, Scalar};
+
+    // spec alone
+    assert_eq!(resolve_kernels(Scalar, None, None), Scalar);
+    assert_eq!(resolve_kernels(Auto, None, None), Auto);
+    // flag beats spec
+    assert_eq!(resolve_kernels(Scalar, Some(Auto), None), Auto);
+    // env beats both, with whitespace trimmed
+    assert_eq!(resolve_kernels(Scalar, Some(Scalar), Some("auto")), Auto);
+    assert_eq!(resolve_kernels(Auto, None, Some(" scalar ")), Scalar);
+    // an unparseable env token falls through silently (advisory, same
+    // contract as GWCLIP_THREADS), landing on the flag then the spec
+    assert_eq!(resolve_kernels(Scalar, Some(Auto), Some("avx512")), Auto);
+    assert_eq!(resolve_kernels(Auto, None, Some("")), Auto);
+    assert_eq!(resolve_kernels(Scalar, None, Some("AUTO")), Scalar);
+
+    // exhaustive: env wins iff parseable, else flag, else spec
+    for spec in [Scalar, Auto] {
+        for flag in [None, Some(Scalar), Some(Auto)] {
+            for (env, parsed) in [
+                (None, None),
+                (Some("scalar"), Some(Scalar)),
+                (Some("auto"), Some(Auto)),
+                (Some("junk"), None),
+            ] {
+                let got = resolve_kernels(spec, flag, env);
+                let want = parsed.or(flag).unwrap_or(spec);
+                assert_eq!(got, want, "spec {spec:?} flag {flag:?} env {env:?}");
+            }
+        }
+    }
+}
+
 #[test]
 fn federated_user_partition_is_deterministic_and_well_formed() {
     // the builder-side partition: blocks are non-empty contiguous index
